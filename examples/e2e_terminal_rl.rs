@@ -1,0 +1,183 @@
+//! End-to-end driver: GRPO post-training of the PJRT transformer policy on
+//! terminal debugging tasks, with TVCACHE serving every tool call.
+//!
+//! This exercises all three layers on a real (small) RL workload:
+//!
+//! * **L1/L2** — the policy network (Pallas attention + RMSNorm inside the
+//!   JAX-lowered HLO) generates one action token per tool call and updates
+//!   via the GRPO train-step artifact, all through PJRT from Rust.
+//! * **L3** — every sampled action executes through the `ToolCallExecutor`
+//!   against the terminal sandbox, with the per-task TCG shared across the
+//!   parallel rollouts and across steps.
+//!
+//! Rewards follow Appendix C with shaping for the small policy: -1 for a
+//! malformed episode (no actions), partial credit for building, full credit
+//! for a passing test suite.
+//!
+//! Requires `make artifacts`.
+//! Run: `cargo run --release --example e2e_terminal_rl -- --steps 100`
+
+use std::sync::Arc;
+
+use tvcache::agent::action::{ActionSpace, BOS};
+use tvcache::cache::TaskCache;
+use tvcache::client::{ExecutorConfig, LocalBinding, ToolCallExecutor};
+use tvcache::metrics::CsvWriter;
+use tvcache::runtime::AgentRuntime;
+use tvcache::sandbox::{TerminalFactory, TerminalTask};
+use tvcache::train::{advantages, pack_batch};
+use tvcache::util::cli::Args;
+use tvcache::util::rng::Rng;
+
+const MAX_ACTIONS: usize = 10;
+
+struct TaskCtx {
+    seed: u64,
+    space: ActionSpace,
+    binding: Arc<LocalBinding>,
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let steps = args.usize_or("steps", 100);
+    let n_tasks = args.usize_or("tasks", 4);
+    let temperature = args.f64_or("temperature", 1.0) as f32;
+    let art_dir = args.str_or("artifacts", "artifacts");
+
+    let mut rt = AgentRuntime::load(&art_dir)?;
+    rt.init_params(args.u64_or("seed", 1) as i32)?;
+    let b = rt.meta.rollout_batch; // parallel rollouts per task
+    let bt = rt.meta.train_batch;
+    let seq = rt.meta.seq;
+    let tasks_per_step = bt / b;
+    println!(
+        "e2e GRPO: {} params, {} rollouts/task, {} tasks/step, {} steps",
+        rt.meta.param_count, b, tasks_per_step, steps
+    );
+
+    let factory = Arc::new(TerminalFactory { medium: false });
+    // Seeds chosen so `make` needs no package install (seed % 3 != 0):
+    // keeps the reward reachable by a randomly initialized policy.
+    let tasks: Vec<TaskCtx> = (0..n_tasks)
+        .map(|i| {
+            let seed = (3 * i + 1) as u64;
+            TaskCtx {
+                seed,
+                space: ActionSpace::terminal(&TerminalTask::generate(seed, false)),
+                binding: Arc::new(LocalBinding::new(Arc::new(TaskCache::with_defaults()))),
+            }
+        })
+        .collect();
+
+    let mut rng = Rng::new(0xE2E);
+    let mut csv = CsvWriter::new(&["step", "loss", "mean_reward", "hit_rate", "tool_time"]);
+    let t0 = std::time::Instant::now();
+
+    for step in 0..steps {
+        let mut all_tokens: Vec<Vec<i32>> = Vec::with_capacity(bt);
+        let mut all_rewards: Vec<f64> = Vec::with_capacity(bt);
+        let mut step_hits = 0u64;
+        let mut step_calls = 0u64;
+        let mut step_tool_time = 0.0;
+
+        for ti in 0..tasks_per_step {
+            let task = &tasks[(step * tasks_per_step + ti) % tasks.len()];
+            // B parallel rollouts in lockstep: one batched forward per turn.
+            let mut tokens: Vec<Vec<i32>> = vec![vec![BOS]; b];
+            let mut done = vec![false; b];
+            let mut execs: Vec<ToolCallExecutor> = (0..b)
+                .map(|_| {
+                    ToolCallExecutor::new(
+                        Arc::clone(&task.binding) as Arc<_>,
+                        Arc::clone(&factory) as Arc<_>,
+                        task.seed,
+                        ExecutorConfig::default(),
+                    )
+                })
+                .collect();
+            let valid = task.space.valid_tokens(rt.meta.vocab);
+
+            for _turn in 0..MAX_ACTIONS {
+                if done.iter().all(|&d| d) {
+                    break;
+                }
+                // Pack the batched forward inputs.
+                let mut toks = vec![0i32; b * seq];
+                let mut lens = vec![0i32; b];
+                for (r, t) in tokens.iter().enumerate() {
+                    let l = t.len().min(seq);
+                    toks[r * seq..r * seq + l].copy_from_slice(&t[..l]);
+                    lens[r] = l as i32;
+                }
+                let logits = rt.forward(&toks, &lens)?;
+                for r in 0..b {
+                    if done[r] || tokens[r].len() >= seq {
+                        done[r] = true;
+                        continue;
+                    }
+                    // Mask invalid tokens, sample with temperature.
+                    let masked: Vec<f32> = logits[r]
+                        .iter()
+                        .enumerate()
+                        .map(|(i, &l)| if valid.get(i).copied().unwrap_or(false) { l } else { -1e9 })
+                        .collect();
+                    let tok = rng.softmax_sample(&masked, temperature) as i32;
+                    tokens[r].push(tok);
+                    if ActionSpace::is_terminal(tok) {
+                        done[r] = true;
+                    } else if let Some(call) = task.space.decode(tok) {
+                        let o = execs[r].call(call.clone());
+                        step_tool_time += o.charged;
+                        step_hits += o.hit as u64;
+                        step_calls += 1;
+                    }
+                }
+            }
+
+            // Rewards (Appendix C + shaping for the small policy).
+            for r in 0..b {
+                let hist = execs[r].history();
+                let reward = if hist.is_empty() {
+                    -1.0 // malformed episode: stopped without acting
+                } else {
+                    let built = hist.iter().any(|(_, res)| res.output == "build OK");
+                    let passed = hist
+                        .iter()
+                        .any(|(_, res)| res.output.contains("12 passed"));
+                    let n_actions = tokens[r].len().saturating_sub(2) as f64;
+                    (if passed { 1.0 } else if built { 0.3 } else { 0.0 }) - 0.01 * n_actions
+                };
+                all_rewards.push(reward);
+                all_tokens.push(tokens[r].clone());
+                execs[r].finish();
+            }
+        }
+
+        // GRPO update: group-relative advantages per task group.
+        let mut advs = Vec::with_capacity(bt);
+        for g in all_rewards.chunks(b) {
+            advs.extend(advantages(g));
+        }
+        let batch = pack_batch(&all_tokens, &advs, bt, seq);
+        let loss = rt.train_step(&batch)?;
+
+        let mean_reward = all_rewards.iter().sum::<f64>() / all_rewards.len() as f64;
+        let hit_rate = if step_calls > 0 { step_hits as f64 / step_calls as f64 } else { 0.0 };
+        csv.rowf(&[&step, &loss, &mean_reward, &hit_rate, &step_tool_time]);
+        if step % 5 == 0 || step == steps - 1 {
+            println!(
+                "step {step:4}  loss {loss:7.4}  reward {mean_reward:6.3}  hit {:5.1}%  tool {:7.1}s(sim)",
+                hit_rate * 100.0,
+                step_tool_time
+            );
+        }
+    }
+
+    csv.write("results/e2e_terminal_rl.csv")?;
+    println!(
+        "\n{} steps in {:.1}s wall-clock; curves in results/e2e_terminal_rl.csv",
+        steps,
+        t0.elapsed().as_secs_f64()
+    );
+    Ok(())
+}

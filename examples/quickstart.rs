@@ -1,0 +1,104 @@
+//! Quickstart: the TVCACHE public API in one file.
+//!
+//! Builds a per-task cache, runs two "parallel rollouts" of a terminal
+//! debugging task through the `ToolCallExecutor`, and shows the second
+//! rollout hitting the first one's tool calls — including the stateful
+//! `cat → patch → cat` case a naive cache would corrupt.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use std::sync::Arc;
+
+use tvcache::cache::{TaskCache, ToolCall};
+use tvcache::client::{ExecutorConfig, LocalBinding, ToolCallExecutor};
+use tvcache::sandbox::TerminalFactory;
+
+fn bash(cmd: &str) -> ToolCall {
+    let stateless = cmd.starts_with("cat ") || cmd.starts_with("ls");
+    ToolCall { tool: "bash".into(), args: cmd.into(), mutates_state: !stateless }
+}
+
+fn main() {
+    // One cache per task (the server shards these by task id).
+    let cache = Arc::new(TaskCache::with_defaults());
+    let binding = Arc::new(LocalBinding::new(Arc::clone(&cache)));
+    let factory = Arc::new(TerminalFactory { medium: false });
+    let task_seed = 11;
+
+    let script = [
+        "cat README.md",
+        "cat src/module_4.py",
+        "make",
+        "make test",
+        "patch src/module_4.py s/return x - 3/return x + 3/",
+        "make",
+        "make test",
+    ];
+
+    println!("--- rollout 1 (cold cache) ---");
+    let mut r1 = ToolCallExecutor::new(
+        Arc::clone(&binding) as Arc<_>,
+        Arc::clone(&factory) as Arc<_>,
+        task_seed,
+        ExecutorConfig::default(),
+    );
+    for cmd in &script {
+        let o = r1.call(bash(cmd));
+        println!(
+            "  [{}] {:8.3}s  {}",
+            if o.hit { "HIT " } else { "MISS" },
+            o.charged,
+            cmd
+        );
+    }
+    let cold = r1.total_charged;
+
+    println!("--- rollout 2 (warm cache, same trajectory) ---");
+    let mut r2 = ToolCallExecutor::new(
+        Arc::clone(&binding) as Arc<_>,
+        Arc::clone(&factory) as Arc<_>,
+        task_seed,
+        ExecutorConfig::default(),
+    );
+    for cmd in &script {
+        let o = r2.call(bash(cmd));
+        println!(
+            "  [{}] {:8.3}s  {}",
+            if o.hit { "HIT " } else { "MISS" },
+            o.charged,
+            cmd
+        );
+    }
+    let warm = r2.total_charged;
+
+    println!("--- rollout 3 (diverges after the build: stateful correctness) ---");
+    let mut r3 = ToolCallExecutor::new(
+        binding as Arc<_>,
+        factory as Arc<_>,
+        task_seed,
+        ExecutorConfig::default(),
+    );
+    r3.call(bash("cat README.md"));
+    r3.call(bash("cat src/module_4.py"));
+    r3.call(bash("make"));
+    // Different patch than rollout 1 ⇒ the later `cat` must NOT be served
+    // from rollout 1's trajectory.
+    r3.call(bash("patch src/module_4.py s/return x - 3/return x * 99/"));
+    let o = r3.call(bash("cat src/module_4.py"));
+    assert!(o.result.output.contains("x * 99"), "stale result served!");
+    println!("  divergent cat returned the rollout's own patch ✓");
+
+    let stats = cache.stats();
+    println!(
+        "\ncache: {} lookups, {} hits ({:.0}% hit rate)",
+        stats.lookups,
+        stats.hits,
+        100.0 * stats.hit_rate()
+    );
+    println!(
+        "tool time: cold rollout {cold:.1}s -> warm rollout {warm:.3}s ({:.0}x)",
+        cold / warm.max(1e-9)
+    );
+    println!("TCG nodes: {}, snapshots: {}", cache.node_count(), cache.snapshot_count());
+    assert!(warm < cold / 10.0);
+}

@@ -1,0 +1,1 @@
+"""Build-time-only package: Layer-1 Pallas kernels + Layer-2 JAX model + AOT."""

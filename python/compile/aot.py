@@ -1,0 +1,128 @@
+"""AOT entry point: lower the Layer-2 graphs to HLO text artifacts.
+
+Run once at build time (``make artifacts``):
+
+    cd python && python -m compile.aot --out-dir ../artifacts
+
+Emits, for the configured model size:
+
+    agent_init.hlo.txt    (seed i32[1]) -> (params f32[P],)
+    agent_fwd.hlo.txt     (params, tokens i32[B,T], lens i32[B]) -> (logits f32[B,V],)
+    agent_train.hlo.txt   (params, m, v, step f32[1], tokens i32[BT,T],
+                           mask f32[BT,T], adv f32[BT])
+                          -> (params', m', v', loss f32[1])
+    meta.json             param_count + config, read by the Rust runtime
+
+HLO *text* is the interchange format: jax >= 0.5 emits HloModuleProto with
+64-bit instruction ids that the xla crate's xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .model import ModelConfig
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple for rust side)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_all(cfg: ModelConfig, rollout_batch: int, train_batch: int):
+    """Return {artifact_name: hlo_text} for the three graphs."""
+    p = model.param_count(cfg)
+    f32, i32 = jnp.float32, jnp.int32
+    spec = jax.ShapeDtypeStruct
+
+    init_fn = functools.partial(model.init_params, cfg)
+    init = jax.jit(lambda seed: (init_fn(seed),)).lower(spec((1,), i32))
+
+    fwd_fn = functools.partial(model.forward, cfg)
+    fwd = jax.jit(lambda fl, tok, ln: (fwd_fn(fl, tok, ln),)).lower(
+        spec((p,), f32),
+        spec((rollout_batch, cfg.seq), i32),
+        spec((rollout_batch,), i32),
+    )
+
+    train_fn = functools.partial(model.train_step, cfg)
+    train = jax.jit(train_fn).lower(
+        spec((p,), f32),
+        spec((p,), f32),
+        spec((p,), f32),
+        spec((1,), f32),
+        spec((train_batch, cfg.seq), i32),
+        spec((train_batch, cfg.seq), f32),
+        spec((train_batch,), f32),
+    )
+
+    return {
+        "agent_init": to_hlo_text(init),
+        "agent_fwd": to_hlo_text(fwd),
+        "agent_train": to_hlo_text(train),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--vocab", type=int, default=64)
+    ap.add_argument("--seq", type=int, default=48)
+    ap.add_argument("--d-model", type=int, default=128)
+    ap.add_argument("--n-layers", type=int, default=4)
+    ap.add_argument("--n-heads", type=int, default=4)
+    ap.add_argument("--d-ff", type=int, default=512)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--entropy-coef", type=float, default=0.01)
+    ap.add_argument("--rollout-batch", type=int, default=8,
+                    help="B for agent_fwd (= rollouts sampled in lockstep)")
+    ap.add_argument("--train-batch", type=int, default=32,
+                    help="B for agent_train (= rollouts per update)")
+    ap.add_argument("--no-pallas", action="store_true",
+                    help="lower with the pure-jnp reference kernels instead")
+    args = ap.parse_args()
+
+    cfg = ModelConfig(
+        vocab=args.vocab, seq=args.seq, d_model=args.d_model,
+        n_layers=args.n_layers, n_heads=args.n_heads, d_ff=args.d_ff,
+        lr=args.lr, entropy_coef=args.entropy_coef,
+        use_pallas=not args.no_pallas,
+    )
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    arts = lower_all(cfg, args.rollout_batch, args.train_batch)
+    for name, text in arts.items():
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text)} chars)")
+
+    meta = {
+        "param_count": model.param_count(cfg),
+        "vocab": cfg.vocab, "seq": cfg.seq, "d_model": cfg.d_model,
+        "n_layers": cfg.n_layers, "n_heads": cfg.n_heads, "d_ff": cfg.d_ff,
+        "lr": cfg.lr, "entropy_coef": cfg.entropy_coef,
+        "rollout_batch": args.rollout_batch, "train_batch": args.train_batch,
+        "use_pallas": cfg.use_pallas,
+    }
+    with open(os.path.join(args.out_dir, "meta.json"), "w") as f:
+        json.dump(meta, f, indent=2)
+    print(f"param_count = {meta['param_count']}")
+
+
+if __name__ == "__main__":
+    main()

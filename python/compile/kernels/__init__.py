@@ -1,0 +1,4 @@
+"""Layer-1 Pallas kernels + pure-jnp oracles."""
+from . import ref  # noqa: F401
+from .attention import causal_attention  # noqa: F401
+from .rmsnorm import rmsnorm  # noqa: F401

@@ -1,0 +1,158 @@
+"""Layer-1 Pallas kernel: fused causal attention.
+
+The paper's hot compute path during post-training is the agent policy's
+forward/backward; within it, attention dominates. This kernel fuses
+QKᵀ → causal mask → streaming softmax → ·V for one (batch, head) program
+instance, tiling the key/value sequence axis so only O(block) of K/V is
+resident at once.
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): the grid iterates over
+(batch·head, query-block); each program keeps a q-block of shape
+``[BLOCK_Q, D]`` resident in VMEM and streams k/v blocks of shape
+``[BLOCK_K, D]`` through VMEM, accumulating with the usual online-softmax
+(m, l, acc) recurrence — the Pallas analogue of what FlashAttention does
+with CUDA shared memory. Matmuls are shaped [BLOCK_Q, D] × [D, BLOCK_K]
+and [BLOCK_Q, BLOCK_K] × [BLOCK_K, D]: MXU-systolic-friendly.
+
+``interpret=True`` is mandatory on this CPU-PJRT toolchain — real TPU
+lowering emits a Mosaic custom-call the CPU plugin cannot execute.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import NEG_INF
+
+# Default tile sizes. For the small policy models in this repro the whole
+# sequence usually fits one tile; the streaming structure still exercises the
+# multi-block path in tests (see test_kernels.py with T > BLOCK).
+BLOCK_Q = 64
+BLOCK_K = 64
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, *, block_k: int, seq_len: int):
+    """One program instance: all query rows of one (b, h) q-block."""
+    q = q_ref[...]  # [bq, d]
+    bq, d = q.shape
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, jnp.float32))
+
+    q_block_idx = pl.program_id(1)
+    q_offset = q_block_idx * bq  # global row index of q row 0
+
+    n_kblocks = pl.cdiv(seq_len, block_k)
+
+    def body(kb, carry):
+        m_prev, l_prev, acc_prev = carry
+        k_blk = pl.load(k_ref, (pl.dslice(kb * block_k, block_k), slice(None)))
+        v_blk = pl.load(v_ref, (pl.dslice(kb * block_k, block_k), slice(None)))
+        # Rows past seq_len are out-of-bounds padding (NaN under interpret
+        # mode); zero them so `0 * pad` cannot poison the accumulator.
+        k_valid = kb * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, (block_k, 1), 0
+        ) < seq_len
+        k_blk = jnp.where(k_valid, k_blk, 0)
+        v_blk = jnp.where(k_valid, v_blk, 0)
+        s = jnp.dot(q.astype(jnp.float32), k_blk.astype(jnp.float32).T) * scale
+
+        # Causal + padding mask in global coordinates.
+        q_ids = q_offset + jax.lax.broadcasted_iota(jnp.int32, (bq, block_k), 0)
+        k_ids = kb * block_k + jax.lax.broadcasted_iota(jnp.int32, (bq, block_k), 1)
+        mask = (k_ids <= q_ids) & (k_ids < seq_len)
+        s = jnp.where(mask, s, NEG_INF)
+
+        # Online softmax recurrence.
+        m_cur = jnp.max(s, axis=-1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = l_prev * alpha + p.sum(axis=-1)
+        acc_new = acc_prev * alpha[:, None] + jnp.dot(p, v_blk.astype(jnp.float32))
+        return m_new, l_new, acc_new
+
+    m0 = jnp.full((bq,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((bq,), jnp.float32)
+    acc0 = jnp.zeros((bq, d), jnp.float32)
+    _, l, acc = jax.lax.fori_loop(0, n_kblocks, body, (m0, l0, acc0))
+
+    o_ref[...] = (acc / l[:, None]).astype(o_ref.dtype)
+
+
+def _attention_fwd_pallas(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    block_q: int = BLOCK_Q,
+    block_k: int = BLOCK_K,
+) -> jnp.ndarray:
+    """Fused causal attention forward, Pallas implementation.
+
+    Shapes as in :func:`compile.kernels.ref.causal_attention`:
+    ``q, k, v: [B, H, T, D] -> [B, H, T, D]``.
+    """
+    b, h, t, d = q.shape
+    bq = min(block_q, t)
+    bk = min(block_k, t)
+
+    qf = q.reshape(b * h, t, d)
+    kf = k.reshape(b * h, t, d)
+    vf = v.reshape(b * h, t, d)
+
+    grid = (b * h, pl.cdiv(t, bq))
+    kernel = functools.partial(_attn_kernel, block_k=bk, seq_len=t)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, bq, d), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((None, t, d), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((None, t, d), lambda i, j: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, bq, d), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, t, d), q.dtype),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(qf, kf, vf)
+    return out.reshape(b, h, t, d)
+
+
+# --------------------------------------------------------------------------
+# Autodiff: interpret-mode pallas_call has no VJP rule, so we attach the
+# analytic attention backward (standard FlashAttention-style math, computed
+# in plain jnp). The forward stays on the Pallas kernel, so the AOT train
+# graph still exercises the fused kernel.
+# --------------------------------------------------------------------------
+
+
+@jax.custom_vjp
+def causal_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
+    """Fused causal attention with analytic VJP. ``[B,H,T,D] -> [B,H,T,D]``."""
+    return _attention_fwd_pallas(q, k, v)
+
+
+def _attn_vjp_fwd(q, k, v):
+    return _attention_fwd_pallas(q, k, v), (q, k, v)
+
+
+def _attn_vjp_bwd(res, do):
+    q, k, v = res
+    d = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, jnp.float32))
+    s = jnp.einsum("bhtd,bhsd->bhts", q, k) * scale
+    t = q.shape[-2]
+    mask = jnp.tril(jnp.ones((t, t), dtype=bool))[None, None]
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    dv = jnp.einsum("bhts,bhtd->bhsd", p, do)
+    dp = jnp.einsum("bhtd,bhsd->bhts", do, v)
+    ds = p * (dp - jnp.sum(dp * p, axis=-1, keepdims=True))
+    dq = jnp.einsum("bhts,bhsd->bhtd", ds, k) * scale
+    dk = jnp.einsum("bhts,bhtd->bhsd", ds, q) * scale
+    return dq, dk, dv
+
+
+causal_attention.defvjp(_attn_vjp_fwd, _attn_vjp_bwd)

@@ -1,0 +1,40 @@
+"""Pure-jnp reference oracles for the Layer-1 Pallas kernels.
+
+These are the correctness ground truth: every Pallas kernel in this package
+must match its oracle here to float tolerance across the shape/dtype sweep in
+``python/tests/test_kernels.py`` (pytest + hypothesis). The oracles are also
+what the Layer-2 model uses when ``use_pallas=False``, so a single flag flips
+the whole AOT pipeline between kernel and reference numerics.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30  # finite "minus infinity" — keeps softmax NaN-free on fully
+# masked rows (padding positions) in both the oracle and the kernel.
+
+
+def causal_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
+    """Causal scaled-dot-product attention.
+
+    Shapes: q, k, v are ``[B, H, T, D]``; returns ``[B, H, T, D]``.
+    Row ``t`` attends to keys ``0..t`` (inclusive).
+    """
+    d = q.shape[-1]
+    scores = jnp.einsum("bhtd,bhsd->bhts", q, k) / jnp.sqrt(jnp.asarray(d, q.dtype))
+    t = q.shape[-2]
+    mask = jnp.tril(jnp.ones((t, t), dtype=bool))
+    scores = jnp.where(mask[None, None, :, :], scores, NEG_INF)
+    probs = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    probs = probs / probs.sum(axis=-1, keepdims=True)
+    return jnp.einsum("bhts,bhsd->bhtd", probs, v)
+
+
+def rmsnorm(x: jnp.ndarray, gamma: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    """RMSNorm over the last axis: ``x * gamma / rms(x)``.
+
+    ``x``: ``[..., D]``, ``gamma``: ``[D]``.
+    """
+    ms = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * (1.0 / jnp.sqrt(ms + eps)) * gamma

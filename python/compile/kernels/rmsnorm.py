@@ -1,0 +1,88 @@
+"""Layer-1 Pallas kernel: RMSNorm over the feature axis.
+
+One program instance normalizes a block of rows; the feature axis stays
+resident (policy-model widths are well under VMEM capacity). Accumulation is
+in f32 regardless of input dtype, matching the oracle in ``ref.py``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_ROWS = 128
+
+
+def _rmsnorm_kernel(x_ref, g_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)  # [rows, d]
+    g = g_ref[...].astype(jnp.float32)  # [d]
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    o_ref[...] = (x * jax.lax.rsqrt(ms + eps) * g[None, :]).astype(o_ref.dtype)
+
+
+def _rmsnorm_fwd_pallas(
+    x: jnp.ndarray,
+    gamma: jnp.ndarray,
+    eps: float = 1e-6,
+    *,
+    block_rows: int = BLOCK_ROWS,
+) -> jnp.ndarray:
+    """RMSNorm forward: ``x * gamma / rms(x)`` over the last axis.
+
+    ``x: [..., D]``, ``gamma: [D]``; leading axes are flattened into rows.
+    """
+    orig_shape = x.shape
+    d = orig_shape[-1]
+    rows = int(x.size // d)
+    xf = x.reshape(rows, d)
+    br = min(block_rows, rows)
+
+    out = pl.pallas_call(
+        functools.partial(_rmsnorm_kernel, eps=eps),
+        grid=(pl.cdiv(rows, br),),
+        in_specs=[
+            pl.BlockSpec((br, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((br, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, d), x.dtype),
+        interpret=True,
+    )(xf, gamma)
+    return out.reshape(orig_shape)
+
+
+# Analytic VJP (interpret-mode pallas_call has no autodiff rule); the
+# forward stays on the Pallas kernel inside the AOT train graph.
+#
+#   r = (mean(x^2) + eps)^-1/2 ;  y = x * g * r
+#   dx = g*r*dy - x * r^3 / D * sum_d(dy * g * x)
+#   dg = sum_rows(dy * x * r)
+
+_EPS = 1e-6
+
+
+@jax.custom_vjp
+def rmsnorm(x: jnp.ndarray, gamma: jnp.ndarray) -> jnp.ndarray:
+    """RMSNorm (eps fixed at 1e-6) with analytic VJP. ``x: [..., D]``."""
+    return _rmsnorm_fwd_pallas(x, gamma, _EPS)
+
+
+def _rms_vjp_fwd(x, gamma):
+    return _rmsnorm_fwd_pallas(x, gamma, _EPS), (x, gamma)
+
+
+def _rms_vjp_bwd(res, dy):
+    x, gamma = res
+    eps = _EPS
+    d = x.shape[-1]
+    r = jax.lax.rsqrt(jnp.mean(jnp.square(x), axis=-1, keepdims=True) + eps)
+    inner = jnp.sum(dy * gamma * x, axis=-1, keepdims=True)
+    dx = gamma * r * dy - x * (r**3) * inner / d
+    dg = jnp.sum((dy * x * r).reshape(-1, d), axis=0)
+    return dx, dg
+
+
+rmsnorm.defvjp(_rms_vjp_fwd, _rms_vjp_bwd)

@@ -1,0 +1,207 @@
+"""Layer-2: the agent policy network and its training step, in JAX.
+
+The policy is a small causal transformer over a *tool-action vocabulary*:
+each token is one tool invocation (tool id × argument bucket), so a rollout's
+tool-call trajectory is exactly a token sequence. The Rust Layer-3 samples
+actions from `forward` logits during rollouts and applies `train_step`
+(GRPO/REINFORCE with Adam) after each batch of rewarded rollouts.
+
+Interface contract with Rust (see rust/src/runtime/):
+
+* Parameters are a single flat ``f32[P]`` vector. Packing order is defined
+  by :func:`param_layout`; Rust never needs to know it — it only threads the
+  vector between ``init → forward → train_step``.
+* ``forward(params, tokens i32[B,T], lens i32[B]) -> logits f32[B,V]`` —
+  next-action logits at position ``lens-1`` (tokens beyond ``lens`` are
+  padding and are masked out of attention by causality + the gather).
+* ``train_step(params, m, v, step f32[1], tokens i32[B,T], mask f32[B,T],
+  adv f32[B]) -> (params', m', v', loss f32[1])`` — one Adam step on the
+  policy-gradient loss ``-Σ mask·adv·log p(token[t+1] | tokens[:t+1])``.
+  With ``adv = 1`` this is exactly the LM cross-entropy step, which is how
+  ``examples/pretrain_lm.rs`` reuses the same artifact family.
+
+All graphs are lowered once by ``aot.py``; Python never runs at post-training
+time.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import kernels
+from .kernels import ref as kref
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Static architecture + optimizer hyper-parameters (baked at AOT time)."""
+
+    vocab: int = 64
+    seq: int = 48
+    d_model: int = 128
+    n_layers: int = 4
+    n_heads: int = 4
+    d_ff: int = 512
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.999
+    adam_eps: float = 1e-8
+    entropy_coef: float = 0.01
+    use_pallas: bool = True
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+
+# --------------------------------------------------------------------------
+# Flat parameter packing
+# --------------------------------------------------------------------------
+
+def param_layout(cfg: ModelConfig) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Ordered (name, shape) list defining the flat-vector layout."""
+    layout: List[Tuple[str, Tuple[int, ...]]] = [
+        ("embed", (cfg.vocab, cfg.d_model)),
+        ("pos", (cfg.seq, cfg.d_model)),
+    ]
+    for i in range(cfg.n_layers):
+        layout += [
+            (f"l{i}.ln1", (cfg.d_model,)),
+            (f"l{i}.wq", (cfg.d_model, cfg.d_model)),
+            (f"l{i}.wk", (cfg.d_model, cfg.d_model)),
+            (f"l{i}.wv", (cfg.d_model, cfg.d_model)),
+            (f"l{i}.wo", (cfg.d_model, cfg.d_model)),
+            (f"l{i}.ln2", (cfg.d_model,)),
+            (f"l{i}.w1", (cfg.d_model, cfg.d_ff)),
+            (f"l{i}.w2", (cfg.d_ff, cfg.d_model)),
+        ]
+    layout += [
+        ("ln_f", (cfg.d_model,)),
+        ("head", (cfg.d_model, cfg.vocab)),
+    ]
+    return layout
+
+
+def param_count(cfg: ModelConfig) -> int:
+    return sum(int(jnp.prod(jnp.asarray(s))) for _, s in param_layout(cfg))
+
+
+def unpack(cfg: ModelConfig, flat: jnp.ndarray) -> Dict[str, jnp.ndarray]:
+    """Slice the flat vector into named tensors (traced, zero-copy views)."""
+    out: Dict[str, jnp.ndarray] = {}
+    off = 0
+    for name, shape in param_layout(cfg):
+        n = 1
+        for s in shape:
+            n *= s
+        out[name] = jax.lax.dynamic_slice(flat, (off,), (n,)).reshape(shape)
+        off += n
+    return out
+
+
+def pack(cfg: ModelConfig, params: Dict[str, jnp.ndarray]) -> jnp.ndarray:
+    return jnp.concatenate(
+        [params[name].reshape(-1) for name, _ in param_layout(cfg)]
+    )
+
+
+def init_params(cfg: ModelConfig, seed: jnp.ndarray) -> jnp.ndarray:
+    """Random init (scaled-normal weights, ones for norms) as a flat vector."""
+    key = jax.random.PRNGKey(seed[0].astype(jnp.uint32))
+    parts = []
+    for i, (name, shape) in enumerate(param_layout(cfg)):
+        k = jax.random.fold_in(key, i)
+        if name.endswith(("ln1", "ln2", "ln_f")):
+            p = jnp.ones(shape, jnp.float32)
+        elif name == "pos":
+            p = 0.01 * jax.random.normal(k, shape, jnp.float32)
+        else:
+            fan_in = shape[0] if len(shape) > 1 else shape[0]
+            p = jax.random.normal(k, shape, jnp.float32) / jnp.sqrt(
+                jnp.asarray(fan_in, jnp.float32)
+            )
+        parts.append(p.reshape(-1))
+    return jnp.concatenate(parts)
+
+
+# --------------------------------------------------------------------------
+# Forward pass
+# --------------------------------------------------------------------------
+
+def _attention(cfg: ModelConfig, x: jnp.ndarray, p: Dict[str, jnp.ndarray], i: int):
+    """Multi-head causal self-attention for layer ``i``. x: [B, T, D]."""
+    b, t, d = x.shape
+    h, dh = cfg.n_heads, cfg.d_head
+
+    def split(w):
+        return (x @ w).reshape(b, t, h, dh).transpose(0, 2, 1, 3)  # [B,H,T,dh]
+
+    q, k, v = split(p[f"l{i}.wq"]), split(p[f"l{i}.wk"]), split(p[f"l{i}.wv"])
+    attn = kernels.causal_attention if cfg.use_pallas else kref.causal_attention
+    o = attn(q, k, v)  # [B,H,T,dh]
+    o = o.transpose(0, 2, 1, 3).reshape(b, t, d)
+    return o @ p[f"l{i}.wo"]
+
+
+def _norm(cfg: ModelConfig, x: jnp.ndarray, gamma: jnp.ndarray) -> jnp.ndarray:
+    norm = kernels.rmsnorm if cfg.use_pallas else kref.rmsnorm
+    return norm(x, gamma)
+
+
+def logits_all(cfg: ModelConfig, flat: jnp.ndarray, tokens: jnp.ndarray):
+    """Full-sequence logits ``[B, T, V]`` (shared by forward + train)."""
+    p = unpack(cfg, flat)
+    b, t = tokens.shape
+    x = p["embed"][tokens] + p["pos"][None, :t, :]
+    for i in range(cfg.n_layers):
+        x = x + _attention(cfg, _norm(cfg, x, p[f"l{i}.ln1"]), p, i)
+        hdn = _norm(cfg, x, p[f"l{i}.ln2"])
+        x = x + jax.nn.gelu(hdn @ p[f"l{i}.w1"]) @ p[f"l{i}.w2"]
+    x = _norm(cfg, x, p["ln_f"])
+    return x @ p["head"]
+
+
+def forward(cfg: ModelConfig, flat: jnp.ndarray, tokens: jnp.ndarray, lens: jnp.ndarray):
+    """Next-action logits at position ``lens - 1``: ``[B, V]``."""
+    lg = logits_all(cfg, flat, tokens)  # [B, T, V]
+    idx = jnp.clip(lens - 1, 0, cfg.seq - 1)
+    return jnp.take_along_axis(lg, idx[:, None, None], axis=1)[:, 0, :]
+
+
+# --------------------------------------------------------------------------
+# Training step (GRPO / REINFORCE with Adam)
+# --------------------------------------------------------------------------
+
+def pg_loss(cfg, flat, tokens, mask, adv):
+    """Masked, advantage-weighted negative log-likelihood (+ entropy bonus).
+
+    ``tokens[b, t+1]`` is the action sampled after observing ``tokens[b, :t+1]``;
+    ``mask[b, t]`` gates whether position ``t``'s prediction participates.
+    """
+    lg = logits_all(cfg, flat, tokens)  # [B, T, V]
+    logp = jax.nn.log_softmax(lg[:, :-1, :], axis=-1)  # predicts tokens[:,1:]
+    tgt = tokens[:, 1:]
+    nll = -jnp.take_along_axis(logp, tgt[:, :, None], axis=-1)[:, :, 0]  # [B,T-1]
+    m = mask[:, : cfg.seq - 1]
+    denom = jnp.maximum(m.sum(), 1.0)
+    pg = (nll * m * adv[:, None]).sum() / denom
+    probs = jnp.exp(logp)
+    entropy = (-(probs * logp).sum(-1) * m).sum() / denom
+    return pg - cfg.entropy_coef * entropy
+
+
+def train_step(cfg, flat, m_state, v_state, step, tokens, mask, adv):
+    """One Adam step on :func:`pg_loss`. Returns (params', m', v', loss[1])."""
+    loss, grads = jax.value_and_grad(pg_loss, argnums=1)(cfg, flat, tokens, mask, adv)
+    t = step[0]
+    m_new = cfg.beta1 * m_state + (1 - cfg.beta1) * grads
+    v_new = cfg.beta2 * v_state + (1 - cfg.beta2) * jnp.square(grads)
+    m_hat = m_new / (1 - cfg.beta1 ** t)
+    v_hat = v_new / (1 - cfg.beta2 ** t)
+    flat_new = flat - cfg.lr * m_hat / (jnp.sqrt(v_hat) + cfg.adam_eps)
+    return flat_new, m_new, v_new, loss.reshape(1)

@@ -1,0 +1,155 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles (pytest + hypothesis)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import kernels
+from compile.kernels import ref
+
+ATOL = 2e-5
+RTOL = 2e-5
+
+
+def _rand(key, shape, dtype):
+    x = jax.random.normal(key, shape, jnp.float32)
+    return x.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Causal attention
+# ---------------------------------------------------------------------------
+
+SHAPES = [
+    (1, 1, 1, 8),     # degenerate single position
+    (1, 1, 8, 16),    # single block
+    (2, 3, 64, 32),   # exactly one block boundary
+    (2, 3, 65, 32),   # straddles the block boundary (padding path)
+    (1, 2, 128, 16),  # two full blocks
+    (1, 1, 130, 8),   # two blocks + remainder
+]
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+def test_attention_matches_ref(shape):
+    b, h, t, d = shape
+    key = jax.random.PRNGKey(hash(shape) % (2**31))
+    q, k, v = (_rand(jax.random.fold_in(key, i), shape, jnp.float32) for i in range(3))
+    got = kernels.causal_attention(q, k, v)
+    want = ref.causal_attention(q, k, v)
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+
+def test_attention_is_causal():
+    """Perturbing future keys/values must not change earlier outputs."""
+    key = jax.random.PRNGKey(7)
+    b, h, t, d = 1, 2, 32, 16
+    q, k, v = (_rand(jax.random.fold_in(key, i), (b, h, t, d), jnp.float32) for i in range(3))
+    base = kernels.causal_attention(q, k, v)
+    k2 = k.at[:, :, t // 2 :, :].set(99.0)
+    v2 = v.at[:, :, t // 2 :, :].set(-99.0)
+    pert = kernels.causal_attention(q, k2, v2)
+    np.testing.assert_allclose(base[:, :, : t // 2], pert[:, :, : t // 2], rtol=RTOL, atol=ATOL)
+    assert not np.allclose(base[:, :, t // 2 :], pert[:, :, t // 2 :], atol=1e-3)
+
+
+def test_attention_first_row_is_v0():
+    """Row 0 attends only to key 0, so output row 0 == v row 0."""
+    key = jax.random.PRNGKey(3)
+    q, k, v = (_rand(jax.random.fold_in(key, i), (1, 1, 16, 8), jnp.float32) for i in range(3))
+    out = kernels.causal_attention(q, k, v)
+    np.testing.assert_allclose(out[0, 0, 0], v[0, 0, 0], rtol=RTOL, atol=ATOL)
+
+
+def test_attention_grad_matches_ref():
+    """custom_vjp backward vs autodiff through the oracle."""
+    key = jax.random.PRNGKey(11)
+    shape = (2, 2, 24, 8)
+    q, k, v = (_rand(jax.random.fold_in(key, i), shape, jnp.float32) for i in range(3))
+
+    def loss_kernel(q, k, v):
+        return jnp.sum(jnp.sin(kernels.causal_attention(q, k, v)))
+
+    def loss_ref(q, k, v):
+        return jnp.sum(jnp.sin(ref.causal_attention(q, k, v)))
+
+    gk = jax.grad(loss_kernel, argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(loss_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(gk, gr):
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.integers(1, 3),
+    h=st.integers(1, 3),
+    t=st.integers(1, 96),
+    d=st.sampled_from([4, 8, 16, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_attention_hypothesis_sweep(b, h, t, d, seed):
+    key = jax.random.PRNGKey(seed)
+    q, k, v = (_rand(jax.random.fold_in(key, i), (b, h, t, d), jnp.float32) for i in range(3))
+    got = kernels.causal_attention(q, k, v)
+    want = ref.causal_attention(q, k, v)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize(
+    "shape", [(1, 8), (4, 33, 48), (2, 5, 7, 16), (129, 64)]
+)
+def test_rmsnorm_matches_ref(shape):
+    key = jax.random.PRNGKey(sum(shape))
+    x = _rand(key, shape, jnp.float32)
+    g = _rand(jax.random.fold_in(key, 1), shape[-1:], jnp.float32)
+    np.testing.assert_allclose(
+        kernels.rmsnorm(x, g), ref.rmsnorm(x, g), rtol=RTOL, atol=ATOL
+    )
+
+
+def test_rmsnorm_scale_invariance():
+    """rmsnorm(c*x) == rmsnorm(x) for c > 0 (up to eps)."""
+    key = jax.random.PRNGKey(5)
+    x = _rand(key, (8, 32), jnp.float32)
+    g = jnp.ones((32,))
+    np.testing.assert_allclose(
+        kernels.rmsnorm(3.7 * x, g), kernels.rmsnorm(x, g), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_rmsnorm_grad_matches_ref():
+    key = jax.random.PRNGKey(13)
+    x = _rand(key, (6, 24), jnp.float32)
+    g = _rand(jax.random.fold_in(key, 1), (24,), jnp.float32)
+
+    def lk(x, g):
+        return jnp.sum(jnp.cos(kernels.rmsnorm(x, g)))
+
+    def lr(x, g):
+        return jnp.sum(jnp.cos(ref.rmsnorm(x, g)))
+
+    gk = jax.grad(lk, argnums=(0, 1))(x, g)
+    gr = jax.grad(lr, argnums=(0, 1))(x, g)
+    for a, b in zip(gk, gr):
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    rows=st.integers(1, 200),
+    d=st.sampled_from([4, 16, 48, 128]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_rmsnorm_hypothesis_sweep(rows, d, seed):
+    key = jax.random.PRNGKey(seed)
+    x = _rand(key, (rows, d), jnp.float32)
+    g = _rand(jax.random.fold_in(key, 1), (d,), jnp.float32)
+    np.testing.assert_allclose(
+        kernels.rmsnorm(x, g), ref.rmsnorm(x, g), rtol=1e-4, atol=1e-4
+    )

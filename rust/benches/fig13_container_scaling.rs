@@ -1,0 +1,44 @@
+//! Figure 13 (Appendix E): container creation rate as a function of total
+//! concurrent forks, under the four manager configurations.
+//!
+//! Paper shape to hold: baseline < + precreated networks < + selective
+//! allocation ≤ tvcache (rate-limited), with the baseline degrading and the
+//! rate-limited config sustaining throughput out to ~640 forks.
+
+use tvcache::bench::print_table;
+use tvcache::metrics::CsvWriter;
+use tvcache::sandbox::{ContainerManager, ContainerParams, ManagerConfig};
+
+fn main() {
+    let configs = [
+        ("terminal-bench (baseline)", ManagerConfig::Baseline),
+        ("+ precreate networks", ManagerConfig::PrecreateNetworks),
+        ("+ selective allocation", ManagerConfig::SelectiveNetworks),
+        ("tvcache (rate-limited)", ManagerConfig::RateLimited),
+    ];
+    let fork_counts = [16usize, 32, 64, 128, 256, 512, 640];
+
+    let mut csv = CsvWriter::new(&["config", "forks", "rate_per_s", "failed"]);
+    let mut rows = Vec::new();
+    for (name, cfg) in configs {
+        let mut cells = vec![name.to_string()];
+        for &n in &fork_counts {
+            let mut mgr = ContainerManager::new(cfg, ContainerParams::default(), 42);
+            let r = mgr.fork_batch(n);
+            cells.push(format!("{:.1}{}", r.rate, if r.failed > 0 { "!" } else { "" }));
+            csv.rowf(&[&name, &n, &format!("{:.2}", r.rate), &r.failed]);
+        }
+        rows.push(cells);
+    }
+
+    let mut header = vec!["config"];
+    let labels: Vec<String> = fork_counts.iter().map(|n| format!("{n} forks")).collect();
+    header.extend(labels.iter().map(|s| s.as_str()));
+    print_table(
+        "Figure 13: container creation rate (creations/s; '!' = failures observed)",
+        &header,
+        &rows,
+    );
+    csv.write("results/fig13_container_scaling.csv").unwrap();
+    println!("\nseries -> results/fig13_container_scaling.csv");
+}

@@ -1,0 +1,66 @@
+//! Figure 14 (Appendix F): distribution of per-rollout total tool-call
+//! times for the four terminal configurations, with and without TVCACHE
+//! (tail-trimmed at p99 like the paper).
+//!
+//! Paper shape: the TVCACHE distribution shifts left; most of the gain
+//! comes from proactive forking removing container start/stop overheads.
+
+use tvcache::bench::print_table;
+use tvcache::metrics::CsvWriter;
+use tvcache::train::{run_workload, SimOptions};
+use tvcache::util::hist::Samples;
+use tvcache::workloads::{Workload, WorkloadConfig};
+
+fn main() {
+    let mut rows = Vec::new();
+    let mut csv = CsvWriter::new(&["config", "variant", "p25", "p50", "p75", "p95"]);
+
+    for cfg in WorkloadConfig::table1().into_iter().take(4) {
+        let label = format!(
+            "{}/{}",
+            cfg.agent_name.replace("-Instruct", "").replace("-2507", ""),
+            match cfg.workload {
+                Workload::TerminalEasy => "easy",
+                _ => "med",
+            }
+        );
+        let mut opts = SimOptions::from_config(&cfg, 6, true);
+        opts.epochs = 5;
+        let cached = run_workload(&cfg, &opts);
+        let uncached = run_workload(&cfg, &SimOptions { cached: false, ..opts });
+
+        for (variant, m) in [("tvcache", &cached), ("no-cache", &uncached)] {
+            let mut s = Samples::new();
+            let p99 = {
+                let mut all = Samples::new();
+                for r in &m.rollouts {
+                    all.add(r.tool_time);
+                }
+                all.percentile(99.0)
+            };
+            for r in &m.rollouts {
+                if r.tool_time <= p99 {
+                    s.add(r.tool_time); // trim the last 1% like the paper
+                }
+            }
+            let cells: Vec<String> = [25.0, 50.0, 75.0, 95.0]
+                .iter()
+                .map(|&p| format!("{:.1}", s.percentile(p)))
+                .collect();
+            csv.rowf(&[&label, &variant, &cells[0], &cells[1], &cells[2], &cells[3]]);
+            rows.push({
+                let mut r = vec![label.clone(), variant.to_string()];
+                r.extend(cells);
+                r
+            });
+        }
+    }
+
+    print_table(
+        "Figure 14: per-rollout tool-time distribution (s), p99-trimmed (paper: tvcache shifts left)",
+        &["config", "variant", "p25", "p50", "p75", "p95"],
+        &rows,
+    );
+    csv.write("results/fig14_tool_time_dist.csv").unwrap();
+    println!("\nseries -> results/fig14_tool_time_dist.csv");
+}

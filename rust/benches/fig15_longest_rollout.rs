@@ -1,0 +1,54 @@
+//! Figure 15 (Appendix F): longest rollout time per training step, with and
+//! without TVCACHE, for the terminal configurations.
+//!
+//! Paper shape: TVCACHE reduces the longest rollout per step; gains are
+//! larger on easy tasks than medium ones.
+
+use tvcache::bench::print_table;
+use tvcache::metrics::CsvWriter;
+use tvcache::train::{run_workload, SimOptions};
+use tvcache::workloads::{Workload, WorkloadConfig};
+
+fn main() {
+    let mut rows = Vec::new();
+    let mut csv = CsvWriter::new(&["config", "step", "longest_tvcache", "longest_no_cache"]);
+
+    for (label, wl) in [
+        ("4B/easy", Workload::TerminalEasy),
+        ("4B/med", Workload::TerminalMedium),
+    ] {
+        let cfg = WorkloadConfig::config_for(wl);
+        let mut opts = SimOptions::from_config(&cfg, 6, true);
+        opts.epochs = 8;
+        let cached = run_workload(&cfg, &opts);
+        let uncached = run_workload(&cfg, &SimOptions { cached: false, ..opts });
+
+        // "Step" = (epoch, task); longest rollout within it.
+        let mut savings = Vec::new();
+        for (i, (c, u)) in cached.batches.iter().zip(&uncached.batches).enumerate() {
+            csv.rowf(&[
+                &label,
+                &i,
+                &format!("{:.1}", c.longest_rollout),
+                &format!("{:.1}", u.longest_rollout),
+            ]);
+            savings.push(1.0 - c.longest_rollout / u.longest_rollout.max(1e-9));
+        }
+        let mean_saving = savings.iter().sum::<f64>() / savings.len() as f64;
+        let frac_improved =
+            savings.iter().filter(|&&s| s > 0.0).count() as f64 / savings.len() as f64;
+        rows.push(vec![
+            label.to_string(),
+            format!("{:.1}%", 100.0 * mean_saving),
+            format!("{:.0}%", 100.0 * frac_improved),
+        ]);
+    }
+
+    print_table(
+        "Figure 15: longest rollout per step (paper: tvcache lower; easy gains > medium)",
+        &["config", "mean longest-rollout saving", "steps improved"],
+        &rows,
+    );
+    csv.write("results/fig15_longest_rollout.csv").unwrap();
+    println!("\nseries -> results/fig15_longest_rollout.csv");
+}

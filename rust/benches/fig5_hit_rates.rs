@@ -1,0 +1,55 @@
+//! Figure 5: cache hit rate by post-training epoch for the three workloads
+//! (and both terminal model sizes).
+//!
+//! Paper shape: hit rates *increase over epochs* as the TCG grows;
+//! terminal 15–32%, SkyRL-SQL 27.0–57.2%, EgoSchema 34–73.9%; larger
+//! models (higher competence) hit more.
+
+use tvcache::bench::print_table;
+use tvcache::metrics::CsvWriter;
+use tvcache::train::{run_workload, SimOptions};
+use tvcache::workloads::{Workload, WorkloadConfig};
+
+fn main() {
+    let mut csv = CsvWriter::new(&["config", "epoch", "hit_rate"]);
+    let mut rows = Vec::new();
+
+    let configs: Vec<(String, WorkloadConfig, usize)> = WorkloadConfig::table1()
+        .into_iter()
+        .map(|c| {
+            let label = format!("{:?}/{}", c.workload, c.agent_name);
+            let tasks = match c.workload {
+                Workload::SkyRlSql => 16,
+                _ => 8,
+            };
+            (label, c, tasks)
+        })
+        .collect();
+
+    for (label, cfg, tasks) in configs {
+        let opts = SimOptions::from_config(&cfg, tasks, true);
+        let m = run_workload(&cfg, &opts);
+        let first = m.epoch_hit_rates.first().unwrap().1;
+        let last = m.epoch_hit_rates.last().unwrap().1;
+        let avg: f64 = m.epoch_hit_rates.iter().map(|(_, h)| h).sum::<f64>()
+            / m.epoch_hit_rates.len() as f64;
+        for (e, h) in &m.epoch_hit_rates {
+            csv.rowf(&[&label, e, &format!("{h:.4}")]);
+        }
+        rows.push(vec![
+            label,
+            format!("{:.1}%", 100.0 * first),
+            format!("{:.1}%", 100.0 * last),
+            format!("{:.1}%", 100.0 * avg),
+            format!("{}", if last > first { "rising ✓" } else { "FLAT ✗" }),
+        ]);
+    }
+
+    print_table(
+        "Figure 5: hit rate by epoch (paper: terminal 15-32% | SQL 27-57% | Ego 34-74%, all rising)",
+        &["config", "epoch0", "final", "avg", "trend"],
+        &rows,
+    );
+    csv.write("results/fig5_hit_rates.csv").unwrap();
+    println!("\nseries -> results/fig5_hit_rates.csv");
+}

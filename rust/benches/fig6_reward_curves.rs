@@ -1,0 +1,51 @@
+//! Figure 6: reward curves with and without TVCACHE must closely match
+//! (exact caching ⇒ no post-training degradation).
+//!
+//! Two levels of evidence:
+//! 1. Simulated workloads (identical seeds): per-epoch mean rewards must be
+//!    *identical* with and without the cache, across all three workloads.
+//! 2. The real GRPO loop (`examples/e2e_terminal_rl.rs`) provides the
+//!    learning-curve version; its CSV is referenced in EXPERIMENTS.md.
+
+use tvcache::bench::print_table;
+use tvcache::metrics::CsvWriter;
+use tvcache::train::{run_workload, SimOptions};
+use tvcache::workloads::{Workload, WorkloadConfig};
+
+fn main() {
+    let mut csv = CsvWriter::new(&["workload", "epoch", "reward_cached", "reward_uncached"]);
+    let mut rows = Vec::new();
+
+    for (name, wl, tasks) in [
+        ("terminal-bench", Workload::TerminalEasy, 8),
+        ("SkyRL-SQL", Workload::SkyRlSql, 12),
+        ("EgoSchema", Workload::EgoSchema, 8),
+    ] {
+        let cfg = WorkloadConfig::config_for(wl);
+        let opts = SimOptions::from_config(&cfg, tasks, true);
+        let cached = run_workload(&cfg, &opts);
+        let uncached = run_workload(&cfg, &SimOptions { cached: false, ..opts });
+
+        let mut max_dev = 0.0f64;
+        for ((e, rc), (_, ru)) in cached.epoch_rewards.iter().zip(&uncached.epoch_rewards) {
+            max_dev = max_dev.max((rc - ru).abs());
+            csv.rowf(&[&name, e, &format!("{rc:.4}"), &format!("{ru:.4}")]);
+        }
+        rows.push(vec![
+            name.to_string(),
+            format!("{:.3}", cached.epoch_rewards.last().unwrap().1),
+            format!("{:.3}", uncached.epoch_rewards.last().unwrap().1),
+            format!("{max_dev:.2e}"),
+            (if max_dev < 1e-12 { "identical ✓" } else { "DIVERGED ✗" }).to_string(),
+        ]);
+    }
+
+    print_table(
+        "Figure 6: reward curves cached vs uncached (paper: curves closely match)",
+        &["workload", "final_reward(tvcache)", "final_reward(no-cache)", "max_dev", "verdict"],
+        &rows,
+    );
+    csv.write("results/fig6_reward_curves.csv").unwrap();
+    println!("\nseries -> results/fig6_reward_curves.csv");
+    println!("learning-curve variant: results/e2e_terminal_rl.csv (examples/e2e_terminal_rl.rs)");
+}

@@ -1,0 +1,74 @@
+//! Figure 7: total time of each rollout (a) and batch (b) with and without
+//! TVCACHE on the EgoSchema workload, sorted by cached-run time.
+//!
+//! Paper shape: TVCACHE consistently below the baseline for rollouts; batch
+//! savings smaller than rollout savings (batch time = slowest rollout).
+
+use tvcache::bench::print_table;
+use tvcache::metrics::CsvWriter;
+use tvcache::train::{run_workload, SimOptions};
+use tvcache::workloads::{Workload, WorkloadConfig};
+
+fn main() {
+    let cfg = WorkloadConfig::config_for(Workload::EgoSchema);
+    let opts = SimOptions::from_config(&cfg, 10, true);
+    let cached = run_workload(&cfg, &opts);
+    let uncached = run_workload(&cfg, &SimOptions { cached: false, ..opts });
+
+    // Rollouts are generated with identical seeds, so pair them 1:1.
+    let mut pairs: Vec<(f64, f64)> = cached
+        .rollouts
+        .iter()
+        .zip(&uncached.rollouts)
+        .map(|(c, u)| (c.total(), u.total()))
+        .collect();
+    pairs.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    let mut csv = CsvWriter::new(&["rank", "rollout_tvcache", "rollout_no_cache"]);
+    for (i, (c, u)) in pairs.iter().enumerate() {
+        csv.rowf(&[&i, &format!("{c:.2}"), &format!("{u:.2}")]);
+    }
+    csv.write("results/fig7a_rollout_times.csv").unwrap();
+
+    let mut bpairs: Vec<(f64, f64)> = cached
+        .batches
+        .iter()
+        .zip(&uncached.batches)
+        .map(|(c, u)| (c.batch_time, u.batch_time))
+        .collect();
+    bpairs.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    let mut bcsv = CsvWriter::new(&["rank", "batch_tvcache", "batch_no_cache"]);
+    for (i, (c, u)) in bpairs.iter().enumerate() {
+        bcsv.rowf(&[&i, &format!("{c:.2}"), &format!("{u:.2}")]);
+    }
+    bcsv.write("results/fig7b_batch_times.csv").unwrap();
+
+    let frac_faster =
+        pairs.iter().filter(|(c, u)| c <= u).count() as f64 / pairs.len() as f64;
+    let mean = |xs: &[(f64, f64)], i: usize| -> f64 {
+        xs.iter().map(|p| if i == 0 { p.0 } else { p.1 }).sum::<f64>() / xs.len() as f64
+    };
+    let rollout_saving = 1.0 - mean(&pairs, 0) / mean(&pairs, 1);
+    let batch_saving = 1.0 - mean(&bpairs, 0) / mean(&bpairs, 1);
+
+    print_table(
+        "Figure 7: rollout & batch times, EgoSchema (paper: consistent reduction; batch < rollout savings)",
+        &["metric", "tvcache_mean", "no_cache_mean", "saving"],
+        &[
+            vec![
+                "rollout total (s)".into(),
+                format!("{:.1}", mean(&pairs, 0)),
+                format!("{:.1}", mean(&pairs, 1)),
+                format!("{:.1}%", 100.0 * rollout_saving),
+            ],
+            vec![
+                "batch total (s)".into(),
+                format!("{:.1}", mean(&bpairs, 0)),
+                format!("{:.1}", mean(&bpairs, 1)),
+                format!("{:.1}%", 100.0 * batch_saving),
+            ],
+        ],
+    );
+    println!("\nrollouts faster-or-equal with cache: {:.0}%", frac_faster * 100.0);
+    println!("series -> results/fig7a_rollout_times.csv, results/fig7b_batch_times.csv");
+    assert!(batch_saving <= rollout_saving + 0.05, "paper shape: batch savings <= rollout savings");
+}

@@ -1,0 +1,52 @@
+//! §4.2 numbers: SkyRL-SQL hit rate (paper avg 33.11%), per-hit speedup
+//! (56.6 ms → 6.5 ms ≈ 8.7×), and the derived expected tool-call speedup
+//! (≈2.9×).
+
+use tvcache::bench::print_table;
+use tvcache::metrics::CsvWriter;
+use tvcache::train::{run_workload, SimOptions};
+use tvcache::util::hist::Samples;
+use tvcache::workloads::{Workload, WorkloadConfig};
+
+fn main() {
+    let cfg = WorkloadConfig::config_for(Workload::SkyRlSql);
+    let opts = SimOptions::from_config(&cfg, 32, true);
+    let m = run_workload(&cfg, &opts);
+
+    let mut hit_ms = Samples::new();
+    let mut miss_ms = Samples::new();
+    for c in &m.calls {
+        if c.hit {
+            hit_ms.add(c.charged * 1e3);
+        } else {
+            miss_ms.add(c.charged * 1e3);
+        }
+    }
+    let hr = m.overall_hit_rate();
+    let per_hit = miss_ms.mean() / hit_ms.mean().max(1e-9);
+    let expected = 1.0 / (1.0 - hr + hr * hit_ms.mean() / miss_ms.mean().max(1e-9));
+
+    print_table(
+        "§4.2: SkyRL-SQL summary",
+        &["metric", "measured", "paper"],
+        &[
+            vec!["avg hit rate".into(), format!("{:.2}%", 100.0 * hr), "33.11%".into()],
+            vec!["tool exec (miss)".into(), format!("{:.1} ms", miss_ms.mean()), "56.6 ms".into()],
+            vec!["tool exec (hit)".into(), format!("{:.1} ms", hit_ms.mean()), "6.5 ms".into()],
+            vec!["per-hit speedup".into(), format!("{per_hit:.1}x"), "8.7x".into()],
+            vec!["expected call speedup".into(), format!("{expected:.1}x"), "2.9x".into()],
+        ],
+    );
+
+    let mut csv = CsvWriter::new(&["metric", "value"]);
+    csv.rowf(&[&"hit_rate", &format!("{hr:.4}")]);
+    csv.rowf(&[&"miss_ms", &format!("{:.2}", miss_ms.mean())]);
+    csv.rowf(&[&"hit_ms", &format!("{:.2}", hit_ms.mean())]);
+    csv.rowf(&[&"per_hit_speedup", &format!("{per_hit:.2}")]);
+    csv.rowf(&[&"expected_speedup", &format!("{expected:.2}")]);
+    csv.write("results/sql_hit_rate.csv").unwrap();
+    println!("\nrows -> results/sql_hit_rate.csv");
+
+    assert!(hr > 0.15 && hr < 0.75, "hit rate out of plausible band: {hr}");
+    assert!(per_hit > 3.0, "hits must be much cheaper than misses");
+}

@@ -1,0 +1,140 @@
+//! Tool-action vocabulary: the token space of the PJRT transformer policy.
+//!
+//! The Layer-2 model emits one token per step; each token is either a
+//! control token (BOS / STOP / ANSWER_k) or one tool invocation from a
+//! per-workload action set. This flattening keeps generation one forward
+//! pass per tool call, which is what makes on-CPU RL post-training feasible
+//! (DESIGN.md §Hardware-Adaptation) while preserving the structure the
+//! paper cares about: the policy's token sequence *is* the tool trajectory.
+
+use crate::cache::ToolCall;
+use crate::sandbox::TerminalTask;
+
+/// Token ids: 0 = BOS, 1 = STOP/submit, 2..=6 = ANSWER_0..4, 7.. = actions.
+pub const BOS: i32 = 0;
+pub const STOP: i32 = 1;
+pub const ANSWER_BASE: i32 = 2;
+pub const N_ANSWERS: i32 = 5;
+pub const ACTION_BASE: i32 = ANSWER_BASE + N_ANSWERS;
+
+/// A per-task action space mapping token ids to tool calls.
+pub struct ActionSpace {
+    actions: Vec<ToolCall>,
+    pub vocab: usize,
+}
+
+impl ActionSpace {
+    /// The terminal-task action space: the commands a debugging agent needs
+    /// (explore, install, build, test, patch variants).
+    pub fn terminal(task: &TerminalTask) -> ActionSpace {
+        let b = |cmd: String, mutates: bool| ToolCall {
+            tool: "bash".into(),
+            args: cmd,
+            mutates_state: mutates,
+        };
+        let buggy = &task.buggy_file;
+        let mut actions = vec![
+            b("cat README.md".into(), false),
+            b(format!("cat {buggy}"), false),
+            b("ls".into(), false),
+            b("cat Makefile".into(), false),
+            b("make".into(), true),
+            b("make test".into(), true),
+            b(format!("patch {buggy} s/{}/{}/", task.bug_pattern, task.fix_pattern), true),
+            b(format!("patch {buggy} s/{}/return x * 3/", task.bug_pattern), true),
+            b("echo done > status.txt".into(), true),
+        ];
+        if let Some(dep) = &task.required_package {
+            actions.push(b(format!("pip install {dep}"), true));
+        }
+        let vocab = ACTION_BASE as usize + actions.len();
+        ActionSpace { actions, vocab }
+    }
+
+    /// Number of valid actions.
+    pub fn len(&self) -> usize {
+        self.actions.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.actions.is_empty()
+    }
+
+    /// Decode a token into a tool call (None for control tokens).
+    pub fn decode(&self, token: i32) -> Option<&ToolCall> {
+        if token < ACTION_BASE {
+            return None;
+        }
+        self.actions.get((token - ACTION_BASE) as usize)
+    }
+
+    /// Encode an action index to a token.
+    pub fn token_of(&self, action_idx: usize) -> i32 {
+        ACTION_BASE + action_idx as i32
+    }
+
+    /// Is `token` a terminal token (STOP or an answer)?
+    pub fn is_terminal(token: i32) -> bool {
+        token == STOP || (ANSWER_BASE..ANSWER_BASE + N_ANSWERS).contains(&token)
+    }
+
+    /// Mask of valid next tokens (logits outside are forced to -inf by the
+    /// sampler): the model may answer/stop or take any action, never BOS.
+    pub fn valid_tokens(&self, model_vocab: usize) -> Vec<bool> {
+        let mut mask = vec![false; model_vocab];
+        for t in 1..(ACTION_BASE as usize + self.actions.len()).min(model_vocab) {
+            mask[t] = true;
+        }
+        mask
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decode_control_tokens_is_none() {
+        let space = ActionSpace::terminal(&TerminalTask::generate(1, false));
+        assert!(space.decode(BOS).is_none());
+        assert!(space.decode(STOP).is_none());
+        assert!(space.decode(ANSWER_BASE).is_none());
+    }
+
+    #[test]
+    fn decode_roundtrip() {
+        let space = ActionSpace::terminal(&TerminalTask::generate(1, false));
+        for i in 0..space.len() {
+            let tok = space.token_of(i);
+            let call = space.decode(tok).unwrap();
+            assert_eq!(call, &space.actions[i]);
+        }
+        assert!(space.decode(space.token_of(space.len())).is_none());
+    }
+
+    #[test]
+    fn vocab_fits_actions() {
+        let space = ActionSpace::terminal(&TerminalTask::generate(3, true)); // medium: has dep
+        assert_eq!(space.vocab, ACTION_BASE as usize + space.len());
+        assert!(space.actions.iter().any(|a| a.args.starts_with("pip install")));
+    }
+
+    #[test]
+    fn valid_token_mask_shape() {
+        let space = ActionSpace::terminal(&TerminalTask::generate(1, false));
+        let mask = space.valid_tokens(64);
+        assert_eq!(mask.len(), 64);
+        assert!(!mask[BOS as usize]);
+        assert!(mask[STOP as usize]);
+        assert!(mask[space.token_of(0) as usize]);
+        assert!(!mask[space.token_of(space.len()) as usize]);
+    }
+
+    #[test]
+    fn terminal_tokens_detected() {
+        assert!(ActionSpace::is_terminal(STOP));
+        assert!(ActionSpace::is_terminal(ANSWER_BASE + 2));
+        assert!(!ActionSpace::is_terminal(BOS));
+        assert!(!ActionSpace::is_terminal(ACTION_BASE));
+    }
+}

@@ -1,0 +1,13 @@
+//! Agents: scripted stochastic policies (workload simulation) and the
+//! tool-action vocabulary used by the PJRT transformer policy.
+//!
+//! The scripted agents are calibrated to reproduce each workload's
+//! *cross-rollout redundancy statistics* — which is what cache hit rates
+//! depend on (DESIGN.md §3): rollouts for a task mostly follow a canonical
+//! tool script and diverge stochastically at branch points.
+
+pub mod action;
+pub mod scripted;
+
+pub use action::ActionSpace;
+pub use scripted::{Agent, Script, ScriptedAgent};

@@ -1,0 +1,358 @@
+//! Scripted stochastic agents for the three workloads.
+
+use crate::cache::ToolCall;
+use crate::util::rng::Rng;
+
+/// Minimal agent interface: given the trajectory so far (and its outputs),
+/// emit the next tool call, or `None` to stop and answer.
+pub trait Agent: Send {
+    fn next_call(&mut self, history: &[(ToolCall, String)]) -> Option<ToolCall>;
+    /// The agent's final answer (graded by the reward function).
+    fn final_answer(&self) -> String;
+}
+
+/// Which workload script to follow.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Script {
+    Terminal { medium: bool },
+    Sql,
+    Ego,
+}
+
+/// A stochastic, script-following agent.
+///
+/// * `competence` — probability of taking the canonical (correct) action at
+///   each branch point; rollouts of a better/larger model use a higher
+///   value (the paper observes larger models repeat tool calls more,
+///   yielding higher hit rates — §4.1).
+/// * Exploration draws come from a *small pool* of alternatives per
+///   position, so parallel rollouts overlap heavily — the redundancy
+///   TVCACHE exploits.
+pub struct ScriptedAgent {
+    script: Script,
+    task_seed: u64,
+    rng: Rng,
+    competence: f64,
+    step: usize,
+    /// Plan: materialized call sequence for this rollout.
+    plan: Vec<ToolCall>,
+    answer: String,
+}
+
+impl ScriptedAgent {
+    pub fn new(script: Script, task_seed: u64, rollout_seed: u64, competence: f64) -> Self {
+        let mut rng = Rng::new(task_seed.rotate_left(17) ^ rollout_seed.wrapping_mul(0x2545F491));
+        let (plan, answer) = match script {
+            Script::Terminal { medium } => plan_terminal(task_seed, medium, &mut rng, competence),
+            Script::Sql => plan_sql(task_seed, &mut rng, competence),
+            Script::Ego => plan_ego(task_seed, &mut rng, competence),
+        };
+        ScriptedAgent { script, task_seed, rng, competence, step: 0, plan, answer }
+    }
+
+    pub fn plan_len(&self) -> usize {
+        self.plan.len()
+    }
+}
+
+impl Agent for ScriptedAgent {
+    fn next_call(&mut self, _history: &[(ToolCall, String)]) -> Option<ToolCall> {
+        let call = self.plan.get(self.step).cloned();
+        self.step += 1;
+        call
+    }
+
+    fn final_answer(&self) -> String {
+        self.answer.clone()
+    }
+}
+
+fn bash(cmd: impl Into<String>) -> ToolCall {
+    let cmd = cmd.into();
+    let stateless = cmd.starts_with("cat ")
+        || cmd.starts_with("ls")
+        || cmd.starts_with("grep ")
+        || cmd.starts_with("pwd");
+    ToolCall { tool: "bash".into(), args: cmd, mutates_state: !stateless }
+}
+
+/// Canonical terminal-bench debugging script with stochastic branches.
+fn plan_terminal(
+    task_seed: u64,
+    medium: bool,
+    rng: &mut Rng,
+    competence: f64,
+) -> (Vec<ToolCall>, String) {
+    let task = crate::sandbox::TerminalTask::generate(task_seed, medium);
+    let buggy = &task.buggy_file;
+    let mut plan = Vec::new();
+
+    // Exploration phase: canonical is README then the buggy file; the small
+    // alternative pool keeps cross-rollout overlap high.
+    plan.push(bash("cat README.md"));
+    if rng.chance(competence) {
+        plan.push(bash(format!("cat {buggy}")));
+    } else {
+        let alts = ["ls", "cat Makefile", "cat tests/test_module.py"];
+        plan.push(bash(alts[rng.below(alts.len() as u64) as usize]));
+        plan.push(bash(format!("cat {buggy}")));
+    }
+
+    // Real LLM agents emit idiosyncratic free-text commands (scratch notes,
+    // varied greps) that rarely repeat across rollouts; each one forks the
+    // TCG and makes the rollout's subsequent mutating calls misses. Where
+    // the divergence lands decides how much of the expensive
+    // install/build/test prefix stays cacheable — mixing positions keeps
+    // hit rates in the paper's 15–32% terminal band (Appendix F).
+    let uniq = rng.below(100_000);
+    let probe_early = rng.chance(0.45);
+    if probe_early {
+        // A mutating scratch-note: forks the TCG before the expensive
+        // build/test prefix, so this rollout re-executes it (miss).
+        plan.push(bash(format!("echo probe-{uniq} >> debug.log")));
+    }
+
+    // Dependency install (medium tasks always need it).
+    if let Some(dep) = &task.required_package {
+        if rng.chance(competence) {
+            plan.push(bash(format!("pip install {dep}")));
+        } else {
+            // Build first, see the error, then install: one extra miss.
+            plan.push(bash("make"));
+            plan.push(bash(format!("pip install {dep}")));
+        }
+    }
+    plan.push(bash("make"));
+    plan.push(bash("make test"));
+
+    if !probe_early {
+        // A unique *read* while diagnosing: a miss when first executed, but
+        // stateless — it doesn't fork the TCG (Appendix B), so later
+        // expensive calls can still hit.
+        plan.push(bash(format!("grep probe{uniq} {buggy}")));
+    }
+    if rng.chance(0.5) {
+        let words = ["return", "def", "assert", "import", "compute", "TODO"];
+        plan.push(bash(format!(
+            "grep {} {buggy}",
+            words[rng.below(words.len() as u64) as usize]
+        )));
+    }
+
+    // Patch phase: the canonical fix or a wrong guess first.
+    let correct = rng.chance(competence);
+    if !correct {
+        let wrong = format!("patch {buggy} s/{}/return x * 3/", task.bug_pattern);
+        plan.push(bash(wrong));
+        plan.push(bash("make"));
+        plan.push(bash("make test"));
+        // Revert and apply the right one (only sometimes succeeds).
+        plan.push(bash(format!("patch {buggy} s/return x * 3/{}/", task.fix_pattern)));
+    } else {
+        plan.push(bash(format!("patch {buggy} s/{}/{}/", task.bug_pattern, task.fix_pattern)));
+    }
+    plan.push(bash("make"));
+    plan.push(bash("make test"));
+
+    // Medium tasks do extra verification steps.
+    if medium {
+        plan.push(bash("python ./run --verify"));
+        if rng.chance(0.5) {
+            plan.push(bash(format!("grep return {buggy}")));
+        }
+    }
+    let answer = if correct || rng.chance(0.4) { "fixed" } else { "gave-up" };
+    (plan, answer.to_string())
+}
+
+/// SQL exploration + solve script.
+fn plan_sql(task_seed: u64, rng: &mut Rng, competence: f64) -> (Vec<ToolCall>, String) {
+    let sql = |q: &str| ToolCall::stateless("sql", q);
+    // A small per-task pool of exploration queries (schema peeks).
+    let pool = [
+        "SELECT * FROM animals LIMIT 5",
+        "SELECT COUNT(*) FROM animals",
+        "SELECT * FROM customers LIMIT 5",
+        "SELECT COUNT(*) FROM orders",
+        "SELECT * FROM orders LIMIT 5",
+        "SELECT COUNT(*) FROM customers",
+    ];
+    let golden = golden_sql(task_seed);
+    let mut plan = Vec::new();
+    let n_explore = 1 + rng.below(3) as usize;
+    for _ in 0..n_explore {
+        if rng.chance(0.3) {
+            plan.push(sql(pool[rng.below(pool.len() as u64) as usize]));
+        } else {
+            // Free-form exploration with rollout-specific constants — the
+            // long tail of distinct queries that keeps the paper's SQL hit
+            // rate in the 27–57% band rather than saturating.
+            let tables = ["animals", "orders", "customers"];
+            let t = tables[rng.below(3) as usize];
+            let limit = 3 + rng.below(200);
+            plan.push(sql(&format!("SELECT * FROM {t} LIMIT {limit}")));
+        }
+    }
+    let correct = rng.chance(competence);
+    if !correct {
+        // A near-miss query first (small pool ⇒ often repeated).
+        let wrong = [
+            "SELECT COUNT(*) FROM animals WHERE species = 'cow'",
+            "SELECT COUNT(*) FROM orders WHERE status = 'open'",
+            "SELECT AVG(age) FROM customers",
+        ];
+        plan.push(sql(wrong[rng.below(3) as usize]));
+    }
+    plan.push(sql(&golden));
+    (plan, if correct { golden } else { "wrong".into() })
+}
+
+/// The golden query for a SQL task (reward compares against its output).
+pub fn golden_sql(task_seed: u64) -> String {
+    let golden_pool = [
+        "SELECT COUNT(*) FROM animals WHERE species = 'pig'",
+        "SELECT COUNT(*) FROM orders WHERE status = 'shipped'",
+        "SELECT COUNT(*) FROM customers WHERE region = 'north'",
+        "SELECT AVG(amount) FROM orders",
+        "SELECT COUNT(*) FROM customers WHERE age > 40",
+    ];
+    golden_pool[(task_seed % golden_pool.len() as u64) as usize].to_string()
+}
+
+/// EgoSchema video-QA script (Appendix D tool mix).
+fn plan_ego(task_seed: u64, rng: &mut Rng, competence: f64) -> (Vec<ToolCall>, String) {
+    let mut plan = Vec::new();
+    // The prompt mandates load → preprocess first; models learn this in the
+    // first few rollouts (Appendix D) — competence gates it here.
+    plan.push(ToolCall::new("load_video", format!("video_{task_seed}.mp4")));
+    plan.push(ToolCall::new("preprocess", ""));
+
+    let n_queries = 2 + rng.below(4) as usize;
+    for _ in 0..n_queries {
+        let r = rng.f64();
+        if r < 0.35 {
+            // caption_retrieval: integer args from a small pool ⇒ high reuse
+            // (Figure 12: the highest hit rate among query tools).
+            let starts = [0usize, 10, 20, 30, 40, 60];
+            let a = starts[rng.below(6) as usize];
+            plan.push(ToolCall::stateless("caption_retrieval", format!("({}, {})", a, a + 10)));
+        } else if r < 0.6 {
+            // segment_localization: small description pool.
+            let descs = ["person cutting", "washing hands", "using phone", "cooking"];
+            plan.push(ToolCall::stateless(
+                "segment_localization",
+                descs[rng.below(4) as usize],
+            ));
+        } else if r < 0.85 {
+            // visual_qna: free-form string args ⇒ low hit rate (Fig 12).
+            let seg = rng.below(90);
+            plan.push(ToolCall::stateless(
+                "visual_question_answering",
+                format!("('what is the person doing at moment {}?', {seg})", rng.below(1000)),
+            ));
+        } else {
+            // object_memory_querying: free-form, rarely repeated, slowest.
+            plan.push(ToolCall::stateless(
+                "object_memory_querying",
+                format!("how many people appear near object {}?", rng.below(500)),
+            ));
+        }
+    }
+    // Ground truth answer is seed-derived; competence decides correctness.
+    let truth = (task_seed % 5).to_string();
+    let answer = if rng.chance(competence) {
+        truth
+    } else {
+        ((task_seed + 1 + rng.below(4)) % 5).to_string()
+    };
+    (plan, answer)
+}
+
+/// Ground-truth EgoSchema answer for a task.
+pub fn ego_truth(task_seed: u64) -> String {
+    (task_seed % 5).to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn plan_of(script: Script, task: u64, rollout: u64, comp: f64) -> Vec<ToolCall> {
+        let mut a = ScriptedAgent::new(script, task, rollout, comp);
+        let mut out = Vec::new();
+        while let Some(c) = a.next_call(&[]) {
+            out.push(c);
+        }
+        out
+    }
+
+    #[test]
+    fn plans_are_deterministic_per_seeds() {
+        let a = plan_of(Script::Terminal { medium: false }, 3, 7, 0.6);
+        let b = plan_of(Script::Terminal { medium: false }, 3, 7, 0.6);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn rollouts_share_prefixes_but_diverge() {
+        let plans: Vec<_> =
+            (0..8).map(|r| plan_of(Script::Terminal { medium: false }, 3, r, 0.6)).collect();
+        // All rollouts start with the canonical first call.
+        for p in &plans {
+            assert_eq!(p[0].args, "cat README.md");
+        }
+        // But at least two distinct full plans exist.
+        let distinct: std::collections::HashSet<_> =
+            plans.iter().map(|p| format!("{p:?}")).collect();
+        assert!(distinct.len() >= 2, "all 8 rollouts identical");
+    }
+
+    #[test]
+    fn higher_competence_increases_overlap() {
+        let overlap = |comp: f64| {
+            let plans: Vec<_> =
+                (0..16).map(|r| plan_of(Script::Terminal { medium: false }, 5, r, comp)).collect();
+            let distinct: std::collections::HashSet<_> =
+                plans.iter().map(|p| format!("{p:?}")).collect();
+            16 - distinct.len() // more duplicates = more overlap
+        };
+        assert!(overlap(0.95) >= overlap(0.3), "competence should concentrate plans");
+    }
+
+    #[test]
+    fn ego_plans_start_with_load_preprocess() {
+        for r in 0..5 {
+            let p = plan_of(Script::Ego, 9, r, 0.7);
+            assert_eq!(p[0].tool, "load_video");
+            assert_eq!(p[1].tool, "preprocess");
+            assert!(p[0].mutates_state && p[1].mutates_state);
+            for c in &p[2..] {
+                assert!(!c.mutates_state, "{c:?} should be stateless");
+            }
+        }
+    }
+
+    #[test]
+    fn sql_plans_are_all_stateless_and_end_with_answer() {
+        let mut a = ScriptedAgent::new(Script::Sql, 4, 2, 1.0);
+        let mut calls = Vec::new();
+        while let Some(c) = a.next_call(&[]) {
+            assert!(!c.mutates_state);
+            assert_eq!(c.tool, "sql");
+            calls.push(c);
+        }
+        assert_eq!(calls.last().unwrap().args, golden_sql(4));
+        assert_eq!(a.final_answer(), golden_sql(4));
+    }
+
+    #[test]
+    fn terminal_competent_agent_fixes_bug() {
+        // A fully-competent agent's plan must include the correct patch.
+        let task = crate::sandbox::TerminalTask::generate(11, false);
+        let p = plan_of(Script::Terminal { medium: false }, 11, 0, 1.0);
+        assert!(
+            p.iter().any(|c| c.args.contains(&task.fix_pattern)),
+            "plan lacks the fix: {p:?}"
+        );
+    }
+}

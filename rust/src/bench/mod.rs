@@ -1,0 +1,83 @@
+//! Bench harness: a tiny criterion-analogue (the offline toolchain has no
+//! criterion) providing warmup + timed iterations with percentile reporting,
+//! plus the table printer every paper-figure bench uses.
+
+use std::time::Instant;
+
+use crate::util::hist::Samples;
+
+/// Time `f` for `iters` iterations after `warmup` warmup calls.
+pub fn time_it<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Samples {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut s = Samples::new();
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        s.add(t0.elapsed().as_secs_f64());
+    }
+    s
+}
+
+/// Print a formatted table with a title (paper-style rows).
+pub fn print_table(title: &str, header: &[&str], rows: &[Vec<String>]) {
+    println!("\n=== {title} ===");
+    let widths: Vec<usize> = header
+        .iter()
+        .enumerate()
+        .map(|(i, h)| {
+            rows.iter()
+                .map(|r| r.get(i).map(|c| c.len()).unwrap_or(0))
+                .chain(std::iter::once(h.len()))
+                .max()
+                .unwrap_or(0)
+        })
+        .collect();
+    let fmt_row = |cells: &[String]| {
+        cells
+            .iter()
+            .zip(&widths)
+            .map(|(c, w)| format!("{c:>w$}"))
+            .collect::<Vec<_>>()
+            .join("  ")
+    };
+    let head: Vec<String> = header.iter().map(|s| s.to_string()).collect();
+    println!("{}", fmt_row(&head));
+    println!("{}", "-".repeat(widths.iter().sum::<usize>() + 2 * widths.len()));
+    for r in rows {
+        println!("{}", fmt_row(r));
+    }
+}
+
+/// Format seconds with adaptive units.
+pub fn fmt_secs(s: f64) -> String {
+    if s < 1e-3 {
+        format!("{:.1}µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{s:.2}s")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_it_collects_iters() {
+        let s = time_it(2, 10, || {
+            std::hint::black_box((0..100).sum::<u64>());
+        });
+        assert_eq!(s.len(), 10);
+        assert!(s.min() >= 0.0);
+    }
+
+    #[test]
+    fn fmt_secs_units() {
+        assert!(fmt_secs(0.0000005).ends_with("µs"));
+        assert!(fmt_secs(0.005).ends_with("ms"));
+        assert!(fmt_secs(2.5).ends_with('s'));
+    }
+}

@@ -1,0 +1,200 @@
+//! Sandbox-budget enforcement (§3.3 "Bounding number of cached sandboxes").
+//!
+//! Each task has a budget of stored sandboxes. When exceeded, TVCACHE prunes
+//! the least useful snapshots: eviction scores favour keeping nodes that are
+//! shallow (common prefixes), well-branched (shared by many trajectories),
+//! and frequently hit; refcount-pinned sandboxes are never evicted
+//! (§3.4 "Concurrency Control").
+
+use super::tcg::{NodeId, SnapshotRef, Tcg, ROOT};
+
+/// Tunable eviction weights.
+#[derive(Debug, Clone, Copy)]
+pub struct EvictionPolicy {
+    /// Sandbox budget: max snapshots stored per task.
+    pub max_snapshots: usize,
+    /// Weight of hit count in the keep-score.
+    pub hit_weight: f64,
+    /// Weight of child count (branching ⇒ common prefix worth keeping).
+    pub child_weight: f64,
+    /// Depth penalty (deeper ⇒ more specialized ⇒ likelier to evict).
+    pub depth_weight: f64,
+}
+
+impl Default for EvictionPolicy {
+    fn default() -> Self {
+        EvictionPolicy {
+            max_snapshots: 64,
+            hit_weight: 1.0,
+            child_weight: 2.0,
+            depth_weight: 0.5,
+        }
+    }
+}
+
+impl EvictionPolicy {
+    /// Higher = more worth keeping.
+    pub fn keep_score(&self, tcg: &Tcg, id: NodeId) -> f64 {
+        let Some(n) = tcg.node(id) else { return f64::NEG_INFINITY };
+        self.hit_weight * (n.hits as f64 + 1.0).ln()
+            + self.child_weight * n.children.len() as f64
+            - self.depth_weight * n.depth as f64
+    }
+}
+
+/// Evict snapshots until the budget holds. Returns the freed snapshot refs
+/// (the sandbox manager destroys the corresponding sandboxes). Pinned
+/// (refcount > 0) sandboxes are skipped; leaf nodes whose subtree carries no
+/// other snapshot are removed from the TCG entirely ("evicting subtrees").
+pub fn enforce_budget(tcg: &mut Tcg, policy: &EvictionPolicy) -> Vec<SnapshotRef> {
+    let mut freed = Vec::new();
+    loop {
+        let count = tcg.snapshot_count();
+        if count <= policy.max_snapshots {
+            break;
+        }
+        // Candidates: snapshot-bearing, unpinned nodes, worst score first.
+        let mut candidates: Vec<(f64, NodeId)> = tcg
+            .live_nodes()
+            .into_iter()
+            .filter(|&id| {
+                tcg.node(id)
+                    .map(|n| n.snapshot.is_some() && n.refcount == 0)
+                    .unwrap_or(false)
+            })
+            .map(|id| (policy.keep_score(tcg, id), id))
+            .collect();
+        if candidates.is_empty() {
+            break; // everything pinned: cannot enforce further
+        }
+        candidates.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        let (_, victim) = candidates[0];
+
+        let victim_node = tcg.node(victim).unwrap();
+        let is_leaf = victim_node.children.is_empty();
+        if is_leaf && !tcg.subtree_pinned(victim) && victim != ROOT {
+            // Drop the whole leaf subtree (node + snapshot).
+            freed.extend(tcg.remove_subtree(victim));
+        } else {
+            // Interior node: keep the prefix structure, drop the sandbox.
+            if let Some(n) = tcg.node_mut(victim) {
+                if let Some(s) = n.snapshot.take() {
+                    freed.push(s);
+                }
+            }
+        }
+    }
+    freed
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cache::key::{ToolCall, ToolResult};
+
+    fn snap(id: u64) -> SnapshotRef {
+        SnapshotRef { id, bytes: 100, restore_cost: 0.1 }
+    }
+
+    fn grow_chain(g: &mut Tcg, n: usize) -> Vec<NodeId> {
+        let mut ids = Vec::new();
+        let mut cur = ROOT;
+        for i in 0..n {
+            cur = g.insert_child(
+                cur,
+                ToolCall::new("t", format!("c{i}")),
+                ToolResult::new("", 1.0),
+            );
+            ids.push(cur);
+        }
+        ids
+    }
+
+    #[test]
+    fn within_budget_is_noop() {
+        let mut g = Tcg::new();
+        let ids = grow_chain(&mut g, 3);
+        for (i, &id) in ids.iter().enumerate() {
+            g.set_snapshot(id, snap(i as u64));
+        }
+        let policy = EvictionPolicy { max_snapshots: 3, ..Default::default() };
+        assert!(enforce_budget(&mut g, &policy).is_empty());
+        assert_eq!(g.snapshot_count(), 3);
+    }
+
+    #[test]
+    fn evicts_deepest_low_hit_first() {
+        let mut g = Tcg::new();
+        let ids = grow_chain(&mut g, 5);
+        for (i, &id) in ids.iter().enumerate() {
+            g.set_snapshot(id, snap(i as u64));
+        }
+        // Hits concentrated near the root.
+        g.node_mut(ids[0]).unwrap().hits = 50;
+        g.node_mut(ids[1]).unwrap().hits = 20;
+        let policy = EvictionPolicy { max_snapshots: 2, ..Default::default() };
+        let freed = enforce_budget(&mut g, &policy);
+        assert_eq!(freed.len(), 3);
+        assert_eq!(g.snapshot_count(), 2);
+        // The shallow, hot nodes keep their snapshots.
+        assert!(g.node(ids[0]).unwrap().snapshot.is_some());
+        assert!(g.node(ids[1]).unwrap().snapshot.is_some());
+    }
+
+    #[test]
+    fn pinned_sandboxes_survive() {
+        let mut g = Tcg::new();
+        let ids = grow_chain(&mut g, 3);
+        for (i, &id) in ids.iter().enumerate() {
+            g.set_snapshot(id, snap(i as u64));
+        }
+        g.node_mut(ids[2]).unwrap().refcount = 1; // deepest but pinned
+        let policy = EvictionPolicy { max_snapshots: 1, ..Default::default() };
+        enforce_budget(&mut g, &policy);
+        assert!(g.node(ids[2]).unwrap().snapshot.is_some());
+    }
+
+    #[test]
+    fn all_pinned_cannot_enforce() {
+        let mut g = Tcg::new();
+        let ids = grow_chain(&mut g, 3);
+        for (i, &id) in ids.iter().enumerate() {
+            g.set_snapshot(id, snap(i as u64));
+            g.node_mut(id).unwrap().refcount = 1;
+        }
+        let policy = EvictionPolicy { max_snapshots: 1, ..Default::default() };
+        assert!(enforce_budget(&mut g, &policy).is_empty());
+        assert_eq!(g.snapshot_count(), 3);
+    }
+
+    #[test]
+    fn leaf_eviction_removes_subtree_interior_keeps_structure() {
+        let mut g = Tcg::new();
+        let ids = grow_chain(&mut g, 3); // c0 -> c1 -> c2 (leaf)
+        g.set_snapshot(ids[0], snap(0));
+        g.set_snapshot(ids[2], snap(2));
+        g.node_mut(ids[0]).unwrap().hits = 100; // keep the prefix
+        let policy = EvictionPolicy { max_snapshots: 1, ..Default::default() };
+        enforce_budget(&mut g, &policy);
+        // Leaf node c2 should be gone entirely; interior c0, c1 remain.
+        assert!(g.node(ids[2]).is_none());
+        assert!(g.node(ids[1]).is_some());
+        assert!(g.node(ids[0]).unwrap().snapshot.is_some());
+    }
+
+    #[test]
+    fn branching_nodes_preferred_over_leaves() {
+        let mut g = Tcg::new();
+        // hub has 3 children; lone is an isolated same-depth chain.
+        let hub = g.insert_child(ROOT, ToolCall::new("t", "hub"), ToolResult::new("", 1.0));
+        for i in 0..3 {
+            g.insert_child(hub, ToolCall::new("t", format!("x{i}")), ToolResult::new("", 1.0));
+        }
+        let lone = g.insert_child(ROOT, ToolCall::new("t", "lone"), ToolResult::new("", 1.0));
+        g.set_snapshot(hub, snap(1));
+        g.set_snapshot(lone, snap(2));
+        let policy = EvictionPolicy { max_snapshots: 1, ..Default::default() };
+        enforce_budget(&mut g, &policy);
+        assert!(g.node(hub).unwrap().snapshot.is_some(), "hub must survive");
+    }
+}

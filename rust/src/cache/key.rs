@@ -1,0 +1,147 @@
+//! Tool-call descriptors and results — the cache's key and value types.
+//!
+//! A [`ToolCall`] is the paper's *tool descriptor* `t`: tool name plus
+//! serialized arguments. A trajectory is a `Vec<ToolCall>`; TVCACHE keys the
+//! cache on trajectories, never on individual calls (§3.1). The
+//! `mutates_state` annotation is the `will_mutate_state()` hook from
+//! Appendix B: `false` lets the LPM skip the call when matching prefixes.
+
+use crate::util::json::Json;
+use crate::util::rng::fnv1a;
+
+/// One tool invocation: the cache key component.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct ToolCall {
+    /// Tool name, e.g. `"bash"`, `"sql"`, `"caption_retrieval"`.
+    pub tool: String,
+    /// Serialized arguments, e.g. the shell command or the SQL text.
+    pub args: String,
+    /// `will_mutate_state()` — `true` is the safe default (Appendix B).
+    pub mutates_state: bool,
+}
+
+impl ToolCall {
+    pub fn new(tool: impl Into<String>, args: impl Into<String>) -> ToolCall {
+        ToolCall { tool: tool.into(), args: args.into(), mutates_state: true }
+    }
+
+    pub fn stateless(tool: impl Into<String>, args: impl Into<String>) -> ToolCall {
+        ToolCall { tool: tool.into(), args: args.into(), mutates_state: false }
+    }
+
+    /// Canonical descriptor string (what the paper's client serializes).
+    pub fn descriptor(&self) -> String {
+        format!("{}({})", self.tool, self.args)
+    }
+
+    /// 64-bit key used for child indexing in the TCG.
+    pub fn key(&self) -> u64 {
+        // Tool and args hashed separately to avoid "ab"+"c" vs "a"+"bc".
+        fnv1a(self.tool.as_bytes()) ^ fnv1a(self.args.as_bytes()).rotate_left(17)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("tool", Json::str(self.tool.clone())),
+            ("args", Json::str(self.args.clone())),
+            ("mutates", Json::Bool(self.mutates_state)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Option<ToolCall> {
+        Some(ToolCall {
+            tool: v.get("tool")?.as_str()?.to_string(),
+            args: v.get("args")?.as_str()?.to_string(),
+            mutates_state: v.get("mutates").and_then(|m| m.as_bool()).unwrap_or(true),
+        })
+    }
+}
+
+/// The cached value: tool output plus execution metadata.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ToolResult {
+    /// Tool output as observed by the agent (stdout, query rows, captions…).
+    pub output: String,
+    /// Wall-clock seconds the original execution took (drives the selective
+    /// snapshotting policy, §3.3).
+    pub exec_time: f64,
+    /// Simulated external-API tokens consumed (EgoSchema caption tool;
+    /// backs the "3× token saving" claim in §4.3).
+    pub api_tokens: u64,
+}
+
+impl ToolResult {
+    pub fn new(output: impl Into<String>, exec_time: f64) -> ToolResult {
+        ToolResult { output: output.into(), exec_time, api_tokens: 0 }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("output", Json::str(self.output.clone())),
+            ("exec_time", Json::num(self.exec_time)),
+            ("api_tokens", Json::num(self.api_tokens as f64)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Option<ToolResult> {
+        Some(ToolResult {
+            output: v.get("output")?.as_str()?.to_string(),
+            exec_time: v.get("exec_time")?.as_f64()?,
+            api_tokens: v.get("api_tokens").and_then(|t| t.as_u64()).unwrap_or(0),
+        })
+    }
+}
+
+/// Serialize a trajectory for the wire protocol.
+pub fn trajectory_to_json(calls: &[ToolCall]) -> Json {
+    Json::Arr(calls.iter().map(|c| c.to_json()).collect())
+}
+
+pub fn trajectory_from_json(v: &Json) -> Option<Vec<ToolCall>> {
+    v.as_arr()?.iter().map(ToolCall::from_json).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn descriptor_format() {
+        let c = ToolCall::new("bash", "cat foo.py");
+        assert_eq!(c.descriptor(), "bash(cat foo.py)");
+    }
+
+    #[test]
+    fn key_distinguishes_tool_and_args_split() {
+        let a = ToolCall::new("ab", "c");
+        let b = ToolCall::new("a", "bc");
+        assert_ne!(a.key(), b.key());
+    }
+
+    #[test]
+    fn key_stable_and_arg_sensitive() {
+        let a = ToolCall::new("bash", "ls");
+        let b = ToolCall::new("bash", "ls");
+        let c = ToolCall::new("bash", "ls -la");
+        assert_eq!(a.key(), b.key());
+        assert_ne!(a.key(), c.key());
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let calls = vec![
+            ToolCall::new("bash", "make && ./run \"x\""),
+            ToolCall::stateless("caption_retrieval", "(0, 10)"),
+        ];
+        let j = trajectory_to_json(&calls);
+        let parsed = crate::util::json::parse(&j.to_string()).unwrap();
+        assert_eq!(trajectory_from_json(&parsed).unwrap(), calls);
+    }
+
+    #[test]
+    fn result_json_roundtrip() {
+        let r = ToolResult { output: "12 rows\nline2".into(), exec_time: 0.0566, api_tokens: 42 };
+        let parsed = crate::util::json::parse(&r.to_json().to_string()).unwrap();
+        assert_eq!(ToolResult::from_json(&parsed).unwrap(), r);
+    }
+}

@@ -1,0 +1,356 @@
+//! Longest-prefix matching (§3.2) with optional stateful-prefix filtering
+//! (Appendix B).
+//!
+//! Given a rollout's full tool history `q = [t_1 … t_j]` (the *last* element
+//! is the call being looked up), the matcher walks the TCG from the root:
+//!
+//! * **Hit** — the entire (filtered) trajectory matches a cached path:
+//!   return the cached result for `t_j`. The paper's correctness argument:
+//!   an identical stateful history guarantees an identical sandbox state.
+//! * **Miss** — return the deepest matched node. Per the paper's §3.2
+//!   semantics, the client resumes from the final matched node's snapshot if
+//!   it has one, otherwise replays the full sequence in a fresh sandbox. An
+//!   optional extension (`ancestor_resume`, ablated in
+//!   `benches/appendix_b_stateless_skip.rs`) walks up to the nearest
+//!   snapshotted ancestor instead of falling all the way back to a fresh
+//!   sandbox.
+//!
+//! With stateful filtering on, calls whose `will_mutate_state()` is false
+//! are skipped while walking (they cannot change the sandbox state —
+//! Appendix B proves the equivalence) and are looked up in the side index of
+//! the last state-mutating node.
+
+use super::key::{ToolCall, ToolResult};
+use super::tcg::{NodeId, SnapshotRef, Tcg, ROOT};
+
+/// Matcher configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct LpmConfig {
+    /// Skip `mutates_state == false` calls when matching (Appendix B).
+    pub stateful_filtering: bool,
+    /// On a miss, resume from the nearest snapshotted *ancestor* of the
+    /// deepest match instead of requiring the snapshot exactly at the match.
+    pub ancestor_resume: bool,
+}
+
+impl Default for LpmConfig {
+    fn default() -> Self {
+        LpmConfig { stateful_filtering: true, ancestor_resume: true }
+    }
+}
+
+/// Result of a cache lookup.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Lookup {
+    /// Exact trajectory match: the cached result of the final call.
+    Hit { node: NodeId, result: ToolResult },
+    /// Partial match: client must execute the suffix.
+    Miss(Miss),
+}
+
+/// Everything the client needs to handle a miss.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Miss {
+    /// Deepest TCG node whose path matches a prefix of the query.
+    pub matched_node: NodeId,
+    /// How many *leading calls of the original query* are covered by the
+    /// match (informational; drives partial-hit statistics).
+    pub matched_calls: usize,
+    /// Sandbox to fork, if any: `(node, snapshot, replay_from)` where
+    /// `replay_from` is the resume node's *TCG depth* (number of matched
+    /// graph edges). With stateful filtering on, that is the count of
+    /// state-mutating calls covered; the executor maps it back to a query
+    /// index (`client::executor::stateful_depth_to_index`).
+    /// `None` ⇒ fresh sandbox, replay from index 0.
+    pub resume: Option<(NodeId, SnapshotRef, usize)>,
+}
+
+impl Lookup {
+    pub fn is_hit(&self) -> bool {
+        matches!(self, Lookup::Hit { .. })
+    }
+}
+
+/// Walk the TCG along `q` and classify hit/miss.
+pub fn lookup(tcg: &Tcg, q: &[ToolCall], cfg: LpmConfig) -> Lookup {
+    assert!(!q.is_empty(), "lookup requires at least the current call");
+    let (prefix, current) = q.split_at(q.len() - 1);
+    let current = &current[0];
+
+    // Walk the (filtered) prefix from the root.
+    let mut node = ROOT;
+    let mut matched_calls = 0; // index into the original q
+    let mut diverged = false;
+    for (i, call) in prefix.iter().enumerate() {
+        if cfg.stateful_filtering && !call.mutates_state {
+            // Stateless prefix calls don't constrain the walk…
+            if !diverged {
+                matched_calls = i + 1;
+            }
+            continue;
+        }
+        if diverged {
+            continue;
+        }
+        match tcg.child(node, call) {
+            Some(next) => {
+                node = next;
+                matched_calls = i + 1;
+            }
+            None => {
+                diverged = true;
+            }
+        }
+    }
+
+    if !diverged {
+        // The whole prefix matched — the current call decides hit vs miss.
+        if cfg.stateful_filtering && !current.mutates_state {
+            if let Some(result) = tcg.stateless_result(node, current) {
+                return Lookup::Hit { node, result: result.clone() };
+            }
+        } else if let Some(hit) = tcg.child(node, current) {
+            let result = tcg.node(hit).unwrap().result.clone();
+            return Lookup::Hit { node: hit, result };
+        }
+        // Prefix matched but the current call is new.
+        if q.len() > 1 {
+            matched_calls = q.len() - 1;
+        } else {
+            matched_calls = 0;
+        }
+    }
+
+    // Miss: find the sandbox to resume from.
+    let resume = resume_point(tcg, node, matched_calls, cfg);
+    Lookup::Miss(Miss { matched_node: node, matched_calls, resume })
+}
+
+fn resume_point(
+    tcg: &Tcg,
+    matched_node: NodeId,
+    _matched_calls: usize,
+    cfg: LpmConfig,
+) -> Option<(NodeId, SnapshotRef, usize)> {
+    if matched_node == ROOT {
+        return None;
+    }
+    let node = tcg.node(matched_node)?;
+    if let Some(snap) = node.snapshot {
+        // Paper semantics: the final matched node has a snapshot.
+        return Some((matched_node, snap, node.depth as usize));
+    }
+    if !cfg.ancestor_resume {
+        return None;
+    }
+    // Extension: nearest snapshotted ancestor. Replay restarts from the call
+    // after that ancestor; its TCG depth identifies the point.
+    let (anc, snap) = tcg.nearest_snapshot(matched_node)?;
+    if anc == ROOT {
+        return None;
+    }
+    let depth = tcg.node(anc)?.depth as usize;
+    Some((anc, snap, depth))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cache::key::{ToolCall, ToolResult};
+    use crate::cache::tcg::Tcg;
+
+    fn sf(s: &str) -> ToolCall {
+        ToolCall::new("t", s)
+    }
+
+    fn sl(s: &str) -> ToolCall {
+        ToolCall::stateless("s", s)
+    }
+
+    fn res(s: &str) -> ToolResult {
+        ToolResult::new(s, 1.0)
+    }
+
+    fn build_chain(g: &mut Tcg, calls: &[&str]) -> Vec<NodeId> {
+        let mut ids = Vec::new();
+        let mut cur = ROOT;
+        for c in calls {
+            cur = g.insert_child(cur, sf(c), res(&format!("out-{c}")));
+            ids.push(cur);
+        }
+        ids
+    }
+
+    #[test]
+    fn exact_hit_returns_cached_result() {
+        let mut g = Tcg::new();
+        build_chain(&mut g, &["a", "b", "c"]);
+        let q = vec![sf("a"), sf("b"), sf("c")];
+        match lookup(&g, &q, LpmConfig::default()) {
+            Lookup::Hit { result, .. } => assert_eq!(result.output, "out-c"),
+            m => panic!("expected hit, got {m:?}"),
+        }
+    }
+
+    #[test]
+    fn first_call_hit() {
+        let mut g = Tcg::new();
+        build_chain(&mut g, &["a"]);
+        match lookup(&g, &[sf("a")], LpmConfig::default()) {
+            Lookup::Hit { result, .. } => assert_eq!(result.output, "out-a"),
+            m => panic!("{m:?}"),
+        }
+    }
+
+    #[test]
+    fn miss_on_empty_graph_full_replay() {
+        let g = Tcg::new();
+        match lookup(&g, &[sf("a"), sf("b")], LpmConfig::default()) {
+            Lookup::Miss(m) => {
+                assert_eq!(m.matched_calls, 0);
+                assert_eq!(m.matched_node, ROOT);
+                assert!(m.resume.is_none());
+            }
+            h => panic!("{h:?}"),
+        }
+    }
+
+    #[test]
+    fn partial_match_reports_depth() {
+        let mut g = Tcg::new();
+        build_chain(&mut g, &["a", "b"]);
+        let q = vec![sf("a"), sf("b"), sf("x"), sf("y")];
+        match lookup(&g, &q, LpmConfig::default()) {
+            Lookup::Miss(m) => {
+                assert_eq!(m.matched_calls, 2);
+                assert!(m.resume.is_none()); // no snapshots anywhere
+            }
+            h => panic!("{h:?}"),
+        }
+    }
+
+    #[test]
+    fn paper_semantics_snapshot_at_match() {
+        let mut g = Tcg::new();
+        let ids = build_chain(&mut g, &["a", "b"]);
+        g.set_snapshot(ids[1], SnapshotRef { id: 5, bytes: 10, restore_cost: 0.1 });
+        let q = vec![sf("a"), sf("b"), sf("x")];
+        let cfg = LpmConfig { stateful_filtering: true, ancestor_resume: false };
+        match lookup(&g, &q, cfg) {
+            Lookup::Miss(m) => {
+                let (node, snap, replay_from) = m.resume.unwrap();
+                assert_eq!(node, ids[1]);
+                assert_eq!(snap.id, 5);
+                assert_eq!(replay_from, 2);
+            }
+            h => panic!("{h:?}"),
+        }
+    }
+
+    #[test]
+    fn paper_semantics_no_snapshot_means_fresh_sandbox() {
+        let mut g = Tcg::new();
+        let ids = build_chain(&mut g, &["a", "b"]);
+        // Snapshot only at `a`, but the match reaches `b`.
+        g.set_snapshot(ids[0], SnapshotRef { id: 1, bytes: 1, restore_cost: 0.1 });
+        let cfg = LpmConfig { stateful_filtering: true, ancestor_resume: false };
+        let q = vec![sf("a"), sf("b"), sf("x")];
+        match lookup(&g, &q, cfg) {
+            Lookup::Miss(m) => assert!(m.resume.is_none()),
+            h => panic!("{h:?}"),
+        }
+    }
+
+    #[test]
+    fn ancestor_resume_walks_up() {
+        let mut g = Tcg::new();
+        let ids = build_chain(&mut g, &["a", "b", "c"]);
+        g.set_snapshot(ids[0], SnapshotRef { id: 1, bytes: 1, restore_cost: 0.1 });
+        let cfg = LpmConfig { stateful_filtering: true, ancestor_resume: true };
+        let q = vec![sf("a"), sf("b"), sf("c"), sf("x")];
+        match lookup(&g, &q, cfg) {
+            Lookup::Miss(m) => {
+                let (node, snap, replay_from) = m.resume.unwrap();
+                assert_eq!(node, ids[0]);
+                assert_eq!(snap.id, 1);
+                assert_eq!(replay_from, 1); // ancestor depth: replay b, c, x
+            }
+            h => panic!("{h:?}"),
+        }
+    }
+
+    #[test]
+    fn divergence_midway_stops_matching() {
+        let mut g = Tcg::new();
+        build_chain(&mut g, &["a", "b", "c"]);
+        // Diverges at the 2nd call; later coincidental matches don't count.
+        let q = vec![sf("a"), sf("Z"), sf("c"), sf("d")];
+        match lookup(&g, &q, LpmConfig::default()) {
+            Lookup::Miss(m) => assert_eq!(m.matched_calls, 1),
+            h => panic!("{h:?}"),
+        }
+    }
+
+    // ---- Appendix B: stateful prefix matching ----
+
+    #[test]
+    fn stateless_calls_skipped_in_prefix() {
+        // Rollout 1 cached: F1, S1, F2. Query: F1, F2 — must match F1→F2.
+        let mut g = Tcg::new();
+        let f1 = g.insert_child(ROOT, sf("F1"), res("f1"));
+        g.insert_stateless(f1, sl("S1"), res("s1"));
+        let _f2 = g.insert_child(f1, sf("F2"), res("f2"));
+        let q = vec![sf("F1"), sl("S1"), sf("F2")];
+        assert!(lookup(&g, &q, LpmConfig::default()).is_hit());
+        // And without the stateless call at all:
+        let q2 = vec![sf("F1"), sf("F2")];
+        assert!(lookup(&g, &q2, LpmConfig::default()).is_hit());
+    }
+
+    #[test]
+    fn stateless_reordering_still_hits() {
+        // Figure 10: rollout 1 ran (t1, t2, t3, t4); rollout 2 asks
+        // (t1, t2, t4, t3) where t3, t4 are stateless.
+        let mut g = Tcg::new();
+        let t1 = g.insert_child(ROOT, sf("t1"), res(""));
+        let t2 = g.insert_child(t1, sf("t2"), res(""));
+        g.insert_stateless(t2, sl("t3"), res("r3"));
+        g.insert_stateless(t2, sl("t4"), res("r4"));
+        let q = vec![sf("t1"), sf("t2"), sl("t4"), sl("t3")];
+        match lookup(&g, &q, LpmConfig::default()) {
+            Lookup::Hit { result, .. } => assert_eq!(result.output, "r3"),
+            m => panic!("{m:?}"),
+        }
+    }
+
+    #[test]
+    fn without_filtering_reordering_misses() {
+        let mut g = Tcg::new();
+        // Without filtering, stateless calls become regular nodes.
+        let t1 = g.insert_child(ROOT, sf("t1"), res(""));
+        let t3 = g.insert_child(t1, sl("t3"), res("r3"));
+        g.insert_child(t3, sl("t4"), res("r4"));
+        let cfg = LpmConfig { stateful_filtering: false, ancestor_resume: false };
+        let q = vec![sf("t1"), sl("t4"), sl("t3")];
+        assert!(!lookup(&g, &q, cfg).is_hit());
+        // The same order does hit.
+        let q2 = vec![sf("t1"), sl("t3"), sl("t4")];
+        assert!(lookup(&g, &q2, cfg).is_hit());
+    }
+
+    #[test]
+    fn stateless_current_call_miss_when_not_cached() {
+        let mut g = Tcg::new();
+        let t1 = g.insert_child(ROOT, sf("t1"), res(""));
+        g.set_snapshot(t1, SnapshotRef { id: 3, bytes: 1, restore_cost: 0.1 });
+        let q = vec![sf("t1"), sl("s-new")];
+        match lookup(&g, &q, LpmConfig::default()) {
+            Lookup::Miss(m) => {
+                assert_eq!(m.matched_calls, 1);
+                let (node, _, _) = m.resume.unwrap();
+                assert_eq!(node, t1);
+            }
+            h => panic!("{h:?}"),
+        }
+    }
+}

@@ -1,0 +1,18 @@
+//! The TVCACHE core (§3): tool call graph, longest-prefix matching,
+//! selective snapshotting, refcount-guarded eviction, and task sharding.
+
+pub mod eviction;
+pub mod key;
+pub mod lpm;
+pub mod shard;
+pub mod snapshot;
+pub mod store;
+pub mod tcg;
+
+pub use eviction::EvictionPolicy;
+pub use key::{ToolCall, ToolResult};
+pub use lpm::{Lookup, LpmConfig, Miss};
+pub use shard::{Shard, ShardRouter};
+pub use snapshot::{SnapshotCosts, SnapshotPolicy};
+pub use store::{CacheStats, TaskCache};
+pub use tcg::{NodeId, SnapshotRef, Tcg, ROOT};

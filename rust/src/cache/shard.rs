@@ -1,0 +1,107 @@
+//! Task-id sharding (§4.5): each task's TCG is independent, so the cache
+//! shards by `hash(task_id)` for near-linear throughput scaling (Figure 8a).
+
+use std::collections::HashMap;
+use std::sync::RwLock;
+
+use super::store::TaskCache;
+use crate::util::rng::fnv1a;
+
+/// Routes task ids to shard indices.
+#[derive(Debug, Clone, Copy)]
+pub struct ShardRouter {
+    pub shards: usize,
+}
+
+impl ShardRouter {
+    pub fn new(shards: usize) -> Self {
+        ShardRouter { shards: shards.max(1) }
+    }
+
+    pub fn route(&self, task_id: &str) -> usize {
+        (fnv1a(task_id.as_bytes()) % self.shards as u64) as usize
+    }
+}
+
+/// One shard: a map of task id → per-task cache. The server holds one of
+/// these per shard process (or all of them, in single-process mode).
+pub struct Shard {
+    tasks: RwLock<HashMap<String, std::sync::Arc<TaskCache>>>,
+    factory: fn() -> TaskCache,
+}
+
+impl Shard {
+    pub fn new(factory: fn() -> TaskCache) -> Self {
+        Shard { tasks: RwLock::new(HashMap::new()), factory }
+    }
+
+    /// Get or create the cache for `task_id`.
+    pub fn task(&self, task_id: &str) -> std::sync::Arc<TaskCache> {
+        if let Some(c) = self.tasks.read().unwrap().get(task_id) {
+            return std::sync::Arc::clone(c);
+        }
+        let mut w = self.tasks.write().unwrap();
+        std::sync::Arc::clone(
+            w.entry(task_id.to_string())
+                .or_insert_with(|| std::sync::Arc::new((self.factory)())),
+        )
+    }
+
+    pub fn task_ids(&self) -> Vec<String> {
+        self.tasks.read().unwrap().keys().cloned().collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.tasks.read().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn routing_is_stable_and_in_range() {
+        let r = ShardRouter::new(16);
+        for i in 0..100 {
+            let id = format!("task-{i}");
+            let s = r.route(&id);
+            assert!(s < 16);
+            assert_eq!(s, r.route(&id));
+        }
+    }
+
+    #[test]
+    fn routing_spreads_tasks() {
+        let r = ShardRouter::new(8);
+        let mut counts = [0usize; 8];
+        for i in 0..800 {
+            counts[r.route(&format!("task-{i}"))] += 1;
+        }
+        // Every shard should get a reasonable share (expected 100 each).
+        for (i, c) in counts.iter().enumerate() {
+            assert!(*c > 50, "shard {i} got only {c}");
+        }
+    }
+
+    #[test]
+    fn one_shard_routes_everything_to_zero() {
+        let r = ShardRouter::new(1);
+        assert_eq!(r.route("anything"), 0);
+    }
+
+    #[test]
+    fn shard_task_caches_are_distinct_and_reused() {
+        let shard = Shard::new(TaskCache::with_defaults);
+        let a1 = shard.task("a");
+        let a2 = shard.task("a");
+        let b = shard.task("b");
+        assert!(std::sync::Arc::ptr_eq(&a1, &a2));
+        assert!(!std::sync::Arc::ptr_eq(&a1, &b));
+        assert_eq!(shard.len(), 2);
+    }
+}

@@ -1,0 +1,104 @@
+//! Selective sandbox snapshotting policy (§3.3).
+//!
+//! TVCACHE snapshots the sandbox after a tool call only when re-executing
+//! the call would cost more than serializing + later restoring a snapshot.
+//! In practice this snapshots after long builds and test-suite runs but not
+//! after `cat foo.py`.
+
+/// Cost model inputs for one snapshot decision.
+#[derive(Debug, Clone, Copy)]
+pub struct SnapshotCosts {
+    /// Seconds the tool call took to execute.
+    pub exec_time: f64,
+    /// Estimated seconds to serialize the sandbox now.
+    pub serialize_cost: f64,
+    /// Estimated seconds to restore (fork) the snapshot later.
+    pub restore_cost: f64,
+}
+
+/// Policy deciding whether to store a snapshot at a TCG node.
+#[derive(Debug, Clone, Copy)]
+pub struct SnapshotPolicy {
+    /// Multiplier on (serialize + restore) that exec_time must exceed.
+    /// 1.0 reproduces the paper's rule exactly.
+    pub cost_factor: f64,
+    /// Never snapshot calls faster than this (filters noise).
+    pub min_exec_time: f64,
+    /// `true` disables snapshotting entirely (e.g. the SkyRL-SQL workload,
+    /// whose tools are all read-only — §4.2).
+    pub disabled: bool,
+}
+
+impl Default for SnapshotPolicy {
+    fn default() -> Self {
+        SnapshotPolicy { cost_factor: 1.0, min_exec_time: 0.01, disabled: false }
+    }
+}
+
+impl SnapshotPolicy {
+    pub fn never() -> Self {
+        SnapshotPolicy { disabled: true, ..Default::default() }
+    }
+
+    /// Snapshot everything (the naive baseline ablated in the benches).
+    pub fn always() -> Self {
+        SnapshotPolicy { cost_factor: 0.0, min_exec_time: 0.0, disabled: false }
+    }
+
+    /// The §3.3 decision: snapshot iff re-execution is the greater evil.
+    pub fn should_snapshot(&self, c: SnapshotCosts) -> bool {
+        if self.disabled {
+            return false;
+        }
+        if c.exec_time < self.min_exec_time {
+            return false;
+        }
+        c.exec_time > self.cost_factor * (c.serialize_cost + c.restore_cost)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn costs(exec: f64) -> SnapshotCosts {
+        SnapshotCosts { exec_time: exec, serialize_cost: 0.4, restore_cost: 0.6 }
+    }
+
+    #[test]
+    fn snapshots_expensive_calls_only() {
+        let p = SnapshotPolicy::default();
+        assert!(p.should_snapshot(costs(30.0))); // test-suite run
+        assert!(!p.should_snapshot(costs(0.005))); // cat foo.py
+        assert!(!p.should_snapshot(costs(0.9))); // cheaper than 1.0s overhead
+        assert!(p.should_snapshot(costs(1.1)));
+    }
+
+    #[test]
+    fn threshold_is_serialize_plus_restore() {
+        let p = SnapshotPolicy::default();
+        let c = SnapshotCosts { exec_time: 2.0, serialize_cost: 1.5, restore_cost: 1.0 };
+        assert!(!p.should_snapshot(c)); // 2.0 < 2.5
+        let c2 = SnapshotCosts { exec_time: 3.0, ..c };
+        assert!(p.should_snapshot(c2));
+    }
+
+    #[test]
+    fn disabled_never_snapshots() {
+        let p = SnapshotPolicy::never();
+        assert!(!p.should_snapshot(costs(1e9)));
+    }
+
+    #[test]
+    fn always_snapshots_anything_nonzero() {
+        let p = SnapshotPolicy::always();
+        assert!(p.should_snapshot(costs(0.001)));
+    }
+
+    #[test]
+    fn cost_factor_scales_threshold() {
+        let p = SnapshotPolicy { cost_factor: 3.0, ..Default::default() };
+        assert!(!p.should_snapshot(costs(2.5))); // needs > 3.0
+        assert!(p.should_snapshot(costs(3.5)));
+    }
+}

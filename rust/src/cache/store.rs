@@ -1,0 +1,434 @@
+//! Per-task cache facade: thread-safe TCG + LPM + policies + statistics.
+//!
+//! This is the object the TVCACHE server holds per task (§3.4): every
+//! endpoint manipulates the graph through this API, which wraps the TCG in
+//! a `RwLock` and wires the selective-snapshot and eviction policies in.
+
+use std::sync::RwLock;
+
+use super::eviction::{enforce_budget, EvictionPolicy};
+use super::key::{ToolCall, ToolResult};
+use super::lpm::{lookup, Lookup, LpmConfig};
+use super::snapshot::{SnapshotCosts, SnapshotPolicy};
+use super::tcg::{NodeId, SnapshotRef, Tcg, ROOT};
+use crate::util::json::Json;
+
+/// Aggregate cache statistics (served by `/stats`; drives Figures 5/12).
+#[derive(Debug, Clone, Default)]
+pub struct CacheStats {
+    pub lookups: u64,
+    pub hits: u64,
+    /// Misses that still matched a non-empty prefix (LPM partial hits).
+    pub partial_hits: u64,
+    /// Misses resumed from a forked snapshot rather than a fresh sandbox.
+    pub snapshot_resumes: u64,
+    pub inserts: u64,
+    pub snapshots_stored: u64,
+    pub snapshots_evicted: u64,
+    /// External-API tokens saved by hits (EgoSchema §4.3 accounting).
+    pub api_tokens_saved: u64,
+}
+
+impl CacheStats {
+    pub fn hit_rate(&self) -> f64 {
+        if self.lookups == 0 {
+            0.0
+        } else {
+            self.hits as f64 / self.lookups as f64
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("lookups", Json::num(self.lookups as f64)),
+            ("hits", Json::num(self.hits as f64)),
+            ("partial_hits", Json::num(self.partial_hits as f64)),
+            ("snapshot_resumes", Json::num(self.snapshot_resumes as f64)),
+            ("inserts", Json::num(self.inserts as f64)),
+            ("snapshots_stored", Json::num(self.snapshots_stored as f64)),
+            ("snapshots_evicted", Json::num(self.snapshots_evicted as f64)),
+            ("api_tokens_saved", Json::num(self.api_tokens_saved as f64)),
+            ("hit_rate", Json::num(self.hit_rate())),
+        ])
+    }
+}
+
+/// The per-task cache.
+pub struct TaskCache {
+    inner: RwLock<Inner>,
+    pub lpm: LpmConfig,
+    pub snapshot_policy: SnapshotPolicy,
+    pub eviction: EvictionPolicy,
+}
+
+struct Inner {
+    tcg: Tcg,
+    stats: CacheStats,
+}
+
+impl TaskCache {
+    pub fn new(lpm: LpmConfig, snapshot_policy: SnapshotPolicy, eviction: EvictionPolicy) -> Self {
+        TaskCache {
+            inner: RwLock::new(Inner { tcg: Tcg::new(), stats: CacheStats::default() }),
+            lpm,
+            snapshot_policy,
+            eviction,
+        }
+    }
+
+    pub fn with_defaults() -> Self {
+        Self::new(LpmConfig::default(), SnapshotPolicy::default(), EvictionPolicy::default())
+    }
+
+    /// §3.2 cache lookup. On a hit, bumps hit counters (and the token-saved
+    /// accounting). On a miss with a snapshot resume, *increments the
+    /// refcount* of the resume node — the caller must `release` it after
+    /// forking (§3.4 Concurrency Control).
+    pub fn lookup(&self, q: &[ToolCall]) -> Lookup {
+        let mut inner = self.inner.write().unwrap();
+        inner.stats.lookups += 1;
+        let result = lookup(&inner.tcg, q, self.lpm);
+        match &result {
+            Lookup::Hit { node, result } => {
+                inner.stats.hits += 1;
+                inner.stats.api_tokens_saved += result.api_tokens;
+                let node = *node;
+                if let Some(n) = inner.tcg.node_mut(node) {
+                    n.hits += 1;
+                }
+            }
+            Lookup::Miss(m) => {
+                if m.matched_calls > 0 {
+                    inner.stats.partial_hits += 1;
+                }
+                if let Some((node, _, _)) = m.resume {
+                    inner.stats.snapshot_resumes += 1;
+                    if let Some(n) = inner.tcg.node_mut(node) {
+                        n.refcount += 1;
+                    }
+                }
+            }
+        }
+        result
+    }
+
+    /// Decrement a node's sandbox refcount (client done forking).
+    pub fn release(&self, node: NodeId) {
+        let mut inner = self.inner.write().unwrap();
+        if let Some(n) = inner.tcg.node_mut(node) {
+            n.refcount = n.refcount.saturating_sub(1);
+        }
+    }
+
+    /// Upsert an executed trajectory (`/put`). Walks the root→leaf path,
+    /// creating state-mutating nodes and indexing stateless results on their
+    /// parent node (Appendix B "Addition to TCG"). Returns the id of the
+    /// final state-mutating node on the path.
+    pub fn record_trajectory(&self, traj: &[(ToolCall, ToolResult)]) -> NodeId {
+        let mut inner = self.inner.write().unwrap();
+        let mut cur = ROOT;
+        let mut inserted = 0u64;
+        for (call, result) in traj {
+            if self.lpm.stateful_filtering && !call.mutates_state {
+                if inner.tcg.stateless_result(cur, call).is_none() {
+                    inner.tcg.insert_stateless(cur, call.clone(), result.clone());
+                    inserted += 1;
+                }
+            } else {
+                let before = inner.tcg.len();
+                cur = inner.tcg.insert_child(cur, call.clone(), result.clone());
+                if inner.tcg.len() > before {
+                    inserted += 1;
+                }
+            }
+        }
+        inner.stats.inserts += inserted;
+        cur
+    }
+
+    /// §3.3 selective snapshotting decision for the node at the end of
+    /// `traj`'s state-mutating chain. If the policy approves, the caller
+    /// serializes the sandbox and calls [`TaskCache::attach_snapshot`].
+    pub fn should_snapshot(&self, costs: SnapshotCosts) -> bool {
+        self.snapshot_policy.should_snapshot(costs)
+    }
+
+    /// Attach a snapshot to a node, then enforce the sandbox budget.
+    /// Returns snapshots freed by eviction (caller destroys the sandboxes).
+    pub fn attach_snapshot(&self, node: NodeId, snap: SnapshotRef) -> Vec<SnapshotRef> {
+        let mut inner = self.inner.write().unwrap();
+        inner.tcg.set_snapshot(node, snap);
+        inner.stats.snapshots_stored += 1;
+        let freed = enforce_budget(&mut inner.tcg, &self.eviction);
+        inner.stats.snapshots_evicted += freed.len() as u64;
+        freed
+    }
+
+    /// Mark that a background fork for `node` is warm (§3.3 proactive fork).
+    pub fn set_warm_fork(&self, node: NodeId, warm: bool) {
+        let mut inner = self.inner.write().unwrap();
+        if let Some(n) = inner.tcg.node_mut(node) {
+            n.warm_fork = warm;
+        }
+    }
+
+    pub fn has_warm_fork(&self, node: NodeId) -> bool {
+        let inner = self.inner.read().unwrap();
+        inner.tcg.node(node).map(|n| n.warm_fork).unwrap_or(false)
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        self.inner.read().unwrap().stats.clone()
+    }
+
+    pub fn node_count(&self) -> usize {
+        self.inner.read().unwrap().tcg.len()
+    }
+
+    pub fn snapshot_count(&self) -> usize {
+        self.inner.read().unwrap().tcg.snapshot_count()
+    }
+
+    pub fn snapshot_bytes(&self) -> u64 {
+        self.inner.read().unwrap().tcg.snapshot_bytes()
+    }
+
+    /// Nodes carrying snapshots (candidates for proactive forking).
+    pub fn snapshotted_nodes(&self) -> Vec<(NodeId, SnapshotRef)> {
+        let inner = self.inner.read().unwrap();
+        inner
+            .tcg
+            .live_nodes()
+            .into_iter()
+            .filter_map(|id| inner.tcg.node(id).and_then(|n| n.snapshot.map(|s| (id, s))))
+            .collect()
+    }
+
+    /// `/viz` rendering of the graph (Figure 9).
+    pub fn viz_json(&self) -> Json {
+        self.inner.read().unwrap().tcg.to_json()
+    }
+
+    /// Serialize the full graph (persistence, §3.4 "persists TCG snapshots
+    /// periodically to disk").
+    pub fn to_persistent_json(&self) -> Json {
+        let inner = self.inner.read().unwrap();
+        let mut nodes = Vec::new();
+        for id in inner.tcg.live_nodes() {
+            let n = inner.tcg.node(id).unwrap();
+            let mut entry = vec![
+                ("id", Json::num(id as f64)),
+                ("parent", Json::num(n.parent as f64)),
+                ("call", n.call.to_json()),
+                ("result", n.result.to_json()),
+                ("hits", Json::num(n.hits as f64)),
+            ];
+            let stateless: Vec<Json> = n
+                .stateless
+                .values()
+                .map(|(c, r)| {
+                    Json::obj(vec![("call", c.to_json()), ("result", r.to_json())])
+                })
+                .collect();
+            if !stateless.is_empty() {
+                entry.push(("stateless", Json::Arr(stateless)));
+            }
+            nodes.push(Json::obj(entry));
+        }
+        Json::obj(vec![("nodes", Json::Arr(nodes))])
+    }
+
+    /// Rebuild a cache from [`TaskCache::to_persistent_json`] output.
+    /// Snapshots are *not* restored (sandboxes died with the server); the
+    /// trajectory/result structure is.
+    pub fn from_persistent_json(v: &Json, lpm: LpmConfig) -> Option<TaskCache> {
+        let cache = TaskCache::new(lpm, SnapshotPolicy::default(), EvictionPolicy::default());
+        {
+            let mut inner = cache.inner.write().unwrap();
+            let nodes = v.get("nodes")?.as_arr()?;
+            // Persistent ids -> rebuilt ids. Entries are serialized in id
+            // order, so parents always precede children.
+            let mut id_map = std::collections::HashMap::new();
+            id_map.insert(ROOT as u64, ROOT);
+            for entry in nodes {
+                let old_id = entry.get("id")?.as_u64()?;
+                let old_parent = entry.get("parent")?.as_u64()?;
+                let call = ToolCall::from_json(entry.get("call")?)?;
+                let result = ToolResult::from_json(entry.get("result")?)?;
+                let parent = *id_map.get(&old_parent)?;
+                let new_id = inner.tcg.insert_child(parent, call, result);
+                if let Some(hits) = entry.get("hits").and_then(|h| h.as_u64()) {
+                    if let Some(n) = inner.tcg.node_mut(new_id) {
+                        n.hits = hits;
+                    }
+                }
+                if let Some(stateless) = entry.get("stateless").and_then(|s| s.as_arr()) {
+                    for s in stateless {
+                        let c = ToolCall::from_json(s.get("call")?)?;
+                        let r = ToolResult::from_json(s.get("result")?)?;
+                        inner.tcg.insert_stateless(new_id, c, r);
+                    }
+                }
+                id_map.insert(old_id, new_id);
+            }
+        }
+        Some(cache)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sf(s: &str) -> ToolCall {
+        ToolCall::new("t", s)
+    }
+
+    fn traj(calls: &[&str]) -> Vec<(ToolCall, ToolResult)> {
+        calls
+            .iter()
+            .map(|c| (sf(c), ToolResult::new(format!("out-{c}"), 1.0)))
+            .collect()
+    }
+
+    #[test]
+    fn miss_then_record_then_hit() {
+        let cache = TaskCache::with_defaults();
+        let q = vec![sf("a"), sf("b")];
+        assert!(!cache.lookup(&q).is_hit());
+        cache.record_trajectory(&traj(&["a", "b"]));
+        match cache.lookup(&q) {
+            Lookup::Hit { result, .. } => assert_eq!(result.output, "out-b"),
+            m => panic!("{m:?}"),
+        }
+        let s = cache.stats();
+        assert_eq!(s.lookups, 2);
+        assert_eq!(s.hits, 1);
+        assert!((s.hit_rate() - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn lookup_miss_pins_resume_node_until_release() {
+        let cache = TaskCache::with_defaults();
+        let leaf = cache.record_trajectory(&traj(&["a", "b"]));
+        cache.attach_snapshot(leaf, SnapshotRef { id: 7, bytes: 64, restore_cost: 0.2 });
+        let q = vec![sf("a"), sf("b"), sf("x")];
+        let Lookup::Miss(m) = cache.lookup(&q) else { panic!("expected miss") };
+        let (node, _, _) = m.resume.unwrap();
+        assert_eq!(node, leaf);
+        // Pinned: eviction with budget 0 cannot free it.
+        {
+            let mut inner = cache.inner.write().unwrap();
+            let policy = EvictionPolicy { max_snapshots: 0, ..Default::default() };
+            assert!(enforce_budget(&mut inner.tcg, &policy).is_empty());
+        }
+        cache.release(node);
+        {
+            let mut inner = cache.inner.write().unwrap();
+            let policy = EvictionPolicy { max_snapshots: 0, ..Default::default() };
+            assert_eq!(enforce_budget(&mut inner.tcg, &policy).len(), 1);
+        }
+    }
+
+    #[test]
+    fn attach_snapshot_enforces_budget() {
+        let cache = TaskCache::new(
+            LpmConfig::default(),
+            SnapshotPolicy::default(),
+            EvictionPolicy { max_snapshots: 2, ..Default::default() },
+        );
+        let mut freed_total = 0;
+        for i in 0..5 {
+            let leaf =
+                cache.record_trajectory(&traj(&["p", &format!("leaf{i}")]));
+            let freed = cache.attach_snapshot(
+                leaf,
+                SnapshotRef { id: i, bytes: 10, restore_cost: 0.1 },
+            );
+            freed_total += freed.len();
+        }
+        assert!(cache.snapshot_count() <= 2);
+        assert_eq!(freed_total, 3);
+        assert_eq!(cache.stats().snapshots_evicted, 3);
+    }
+
+    #[test]
+    fn record_trajectory_idempotent_counts() {
+        let cache = TaskCache::with_defaults();
+        cache.record_trajectory(&traj(&["a", "b", "c"]));
+        cache.record_trajectory(&traj(&["a", "b", "c"]));
+        assert_eq!(cache.node_count(), 3);
+        assert_eq!(cache.stats().inserts, 3);
+    }
+
+    #[test]
+    fn stateless_results_recorded_on_parent() {
+        let cache = TaskCache::with_defaults();
+        let mut t = traj(&["load", "preprocess"]);
+        t.push((
+            ToolCall::stateless("caption", "(0,10)"),
+            ToolResult { output: "caps".into(), exec_time: 2.0, api_tokens: 500 },
+        ));
+        cache.record_trajectory(&t);
+        // Hit regardless of a second stateless call in between.
+        let q = vec![
+            sf("load"),
+            sf("preprocess"),
+            ToolCall::stateless("other", "x"),
+            ToolCall::stateless("caption", "(0,10)"),
+        ];
+        // Note: "other" isn't cached but it's not the current call.
+        match cache.lookup(&q) {
+            Lookup::Hit { result, .. } => assert_eq!(result.output, "caps"),
+            m => panic!("{m:?}"),
+        }
+        assert_eq!(cache.stats().api_tokens_saved, 500);
+    }
+
+    #[test]
+    fn persistence_roundtrip() {
+        let cache = TaskCache::with_defaults();
+        cache.record_trajectory(&traj(&["a", "b"]));
+        cache.record_trajectory(&traj(&["a", "c"]));
+        let mut t = traj(&["a"]);
+        t.push((ToolCall::stateless("s", "1"), ToolResult::new("sr", 0.1)));
+        cache.record_trajectory(&t);
+
+        let json_text = cache.to_persistent_json().to_string();
+        let parsed = crate::util::json::parse(&json_text).unwrap();
+        let restored =
+            TaskCache::from_persistent_json(&parsed, LpmConfig::default()).unwrap();
+        assert_eq!(restored.node_count(), cache.node_count());
+        assert!(restored.lookup(&[sf("a"), sf("b")]).is_hit());
+        assert!(restored.lookup(&[sf("a"), sf("c")]).is_hit());
+        assert!(restored
+            .lookup(&[sf("a"), ToolCall::stateless("s", "1")])
+            .is_hit());
+        assert!(!restored.lookup(&[sf("a"), sf("zzz")]).is_hit());
+    }
+
+    #[test]
+    fn concurrent_lookups_and_records() {
+        use std::sync::Arc;
+        let cache = Arc::new(TaskCache::with_defaults());
+        let handles: Vec<_> = (0..8)
+            .map(|t| {
+                let c = Arc::clone(&cache);
+                std::thread::spawn(move || {
+                    for i in 0..50 {
+                        let calls = traj(&["shared", &format!("t{}-{}", t % 4, i % 10)]);
+                        c.record_trajectory(&calls);
+                        let q: Vec<ToolCall> =
+                            calls.iter().map(|(c, _)| c.clone()).collect();
+                        assert!(c.lookup(&q).is_hit());
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        // 1 shared node + 4 t-branches × 10 leaves
+        assert_eq!(cache.node_count(), 1 + 4 * 10);
+    }
+}

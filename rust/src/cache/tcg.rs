@@ -1,0 +1,395 @@
+//! The Tool Call Graph (§3.1): an arena-allocated tree whose root-to-node
+//! paths are observed tool-call trajectories.
+//!
+//! Each node stores the tuple `(t, r, s)` — tool descriptor, result, and an
+//! *optional* sandbox snapshot handle (selective snapshotting, §3.3) — plus
+//! the bookkeeping the eviction and concurrency-control machinery needs:
+//! hit counts, a sandbox refcount (§3.4 "Concurrency Control"), and child
+//! indices. Stateless tool results (Appendix B) are indexed in a side map on
+//! their parent state-mutating node, so reorderings of stateless calls
+//! still hit.
+
+use std::collections::HashMap;
+
+use super::key::{ToolCall, ToolResult};
+use crate::util::json::Json;
+
+pub type NodeId = usize;
+
+/// Snapshot handle: an id into the sandbox manager's snapshot store plus the
+/// serialized size (for the Figure 8b memory accounting).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SnapshotRef {
+    pub id: u64,
+    pub bytes: u64,
+    /// Estimated restore (fork) cost in seconds, recorded at snapshot time.
+    pub restore_cost: f64,
+}
+
+/// One TCG node.
+#[derive(Debug, Clone)]
+pub struct Node {
+    pub call: ToolCall,
+    pub result: ToolResult,
+    pub snapshot: Option<SnapshotRef>,
+    pub parent: NodeId,
+    pub depth: u32,
+    /// Children keyed by `ToolCall::key()` of the child's call.
+    pub children: HashMap<u64, NodeId>,
+    /// Stateless tool results indexed at this (state-mutating) node:
+    /// key -> (call, result). See Appendix B "Addition to TCG".
+    pub stateless: HashMap<u64, (ToolCall, ToolResult)>,
+    /// Cache hits served from this node (drives eviction scoring).
+    pub hits: u64,
+    /// Live references to this node's sandbox (LPM returns increment;
+    /// clients decrement after forking). Non-zero pins the snapshot.
+    pub refcount: u32,
+    /// True once a background fork of this node's sandbox is warm (§3.3).
+    pub warm_fork: bool,
+}
+
+/// The per-task tool call graph.
+#[derive(Debug)]
+pub struct Tcg {
+    nodes: Vec<Option<Node>>,
+    /// Count of live (non-tombstoned) nodes, excluding the root.
+    live: usize,
+}
+
+pub const ROOT: NodeId = 0;
+
+impl Tcg {
+    pub fn new() -> Tcg {
+        let root = Node {
+            call: ToolCall::new("<root>", ""),
+            result: ToolResult::new("", 0.0),
+            snapshot: None,
+            parent: ROOT,
+            depth: 0,
+            children: HashMap::new(),
+            stateless: HashMap::new(),
+            hits: 0,
+            refcount: 0,
+            warm_fork: false,
+        };
+        Tcg { nodes: vec![Some(root)], live: 0 }
+    }
+
+    pub fn node(&self, id: NodeId) -> Option<&Node> {
+        self.nodes.get(id).and_then(|n| n.as_ref())
+    }
+
+    pub fn node_mut(&mut self, id: NodeId) -> Option<&mut Node> {
+        self.nodes.get_mut(id).and_then(|n| n.as_mut())
+    }
+
+    /// Number of non-root live nodes.
+    pub fn len(&self) -> usize {
+        self.live
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.live == 0
+    }
+
+    /// Follow `call` from `from`; `None` if no such edge.
+    pub fn child(&self, from: NodeId, call: &ToolCall) -> Option<NodeId> {
+        let node = self.node(from)?;
+        let id = *node.children.get(&call.key())?;
+        // Hash-collision guard: verify the descriptor actually matches.
+        let child = self.node(id)?;
+        if child.call.tool == call.tool && child.call.args == call.args {
+            Some(id)
+        } else {
+            None
+        }
+    }
+
+    /// Append a new child under `parent` (or return the existing one).
+    pub fn insert_child(
+        &mut self,
+        parent: NodeId,
+        call: ToolCall,
+        result: ToolResult,
+    ) -> NodeId {
+        if let Some(existing) = self.child(parent, &call) {
+            return existing;
+        }
+        let depth = self.node(parent).map(|n| n.depth + 1).unwrap_or(1);
+        let id = self.nodes.len();
+        self.nodes.push(Some(Node {
+            call: call.clone(),
+            result,
+            snapshot: None,
+            parent,
+            depth,
+            children: HashMap::new(),
+            stateless: HashMap::new(),
+            hits: 0,
+            refcount: 0,
+            warm_fork: false,
+        }));
+        if let Some(p) = self.node_mut(parent) {
+            p.children.insert(call.key(), id);
+        }
+        self.live += 1;
+        id
+    }
+
+    /// Record a stateless tool result under a state-mutating node.
+    pub fn insert_stateless(
+        &mut self,
+        at: NodeId,
+        call: ToolCall,
+        result: ToolResult,
+    ) {
+        debug_assert!(!call.mutates_state);
+        if let Some(n) = self.node_mut(at) {
+            n.stateless.insert(call.key(), (call, result));
+        }
+    }
+
+    /// Look up a stateless result at `at` (descriptor-verified).
+    pub fn stateless_result(&self, at: NodeId, call: &ToolCall) -> Option<&ToolResult> {
+        let n = self.node(at)?;
+        let (stored, result) = n.stateless.get(&call.key())?;
+        if stored.tool == call.tool && stored.args == call.args {
+            Some(result)
+        } else {
+            None
+        }
+    }
+
+    pub fn set_snapshot(&mut self, id: NodeId, snap: SnapshotRef) {
+        if let Some(n) = self.node_mut(id) {
+            n.snapshot = Some(snap);
+        }
+    }
+
+    /// Walk up from `id` to the nearest ancestor (inclusive) that has a
+    /// snapshot. Returns `(node, snapshot)`.
+    pub fn nearest_snapshot(&self, mut id: NodeId) -> Option<(NodeId, SnapshotRef)> {
+        loop {
+            let n = self.node(id)?;
+            if let Some(s) = n.snapshot {
+                return Some((id, s));
+            }
+            if id == ROOT {
+                return None;
+            }
+            id = n.parent;
+        }
+    }
+
+    /// Path of node ids from the root (exclusive) down to `id` (inclusive).
+    pub fn path_from_root(&self, id: NodeId) -> Vec<NodeId> {
+        let mut path = Vec::new();
+        let mut cur = id;
+        while cur != ROOT {
+            path.push(cur);
+            cur = match self.node(cur) {
+                Some(n) => n.parent,
+                None => break,
+            };
+        }
+        path.reverse();
+        path
+    }
+
+    /// All live node ids (excluding the root).
+    pub fn live_nodes(&self) -> Vec<NodeId> {
+        (1..self.nodes.len())
+            .filter(|&i| self.nodes[i].is_some())
+            .collect()
+    }
+
+    /// Total bytes of stored snapshots (Figure 8b accounting).
+    pub fn snapshot_bytes(&self) -> u64 {
+        self.live_nodes()
+            .iter()
+            .filter_map(|&i| self.node(i).and_then(|n| n.snapshot))
+            .map(|s| s.bytes)
+            .sum()
+    }
+
+    /// Number of nodes currently holding snapshots ("cached sandboxes").
+    pub fn snapshot_count(&self) -> usize {
+        self.live_nodes()
+            .iter()
+            .filter(|&&i| self.node(i).map(|n| n.snapshot.is_some()).unwrap_or(false))
+            .count()
+    }
+
+    /// True if any node in the subtree rooted at `id` is refcount-pinned.
+    pub fn subtree_pinned(&self, id: NodeId) -> bool {
+        let Some(n) = self.node(id) else { return false };
+        if n.refcount > 0 {
+            return true;
+        }
+        n.children
+            .values()
+            .any(|&c| self.subtree_pinned(c))
+    }
+
+    /// Remove the subtree rooted at `id` (must not be the root). Returns the
+    /// snapshot refs freed, so the sandbox manager can drop the sandboxes.
+    pub fn remove_subtree(&mut self, id: NodeId) -> Vec<SnapshotRef> {
+        assert_ne!(id, ROOT, "cannot evict the TCG root");
+        let Some(node) = self.node(id) else { return Vec::new() };
+        let parent = node.parent;
+        let key = node.call.key();
+        if let Some(p) = self.node_mut(parent) {
+            p.children.remove(&key);
+        }
+        let mut freed = Vec::new();
+        let mut stack = vec![id];
+        while let Some(cur) = stack.pop() {
+            if let Some(n) = self.nodes.get_mut(cur).and_then(|n| n.take()) {
+                if let Some(s) = n.snapshot {
+                    freed.push(s);
+                }
+                stack.extend(n.children.values().copied());
+                self.live -= 1;
+            }
+        }
+        freed
+    }
+
+    /// Render the graph as JSON (the `/viz` endpoint; Figure 9).
+    pub fn to_json(&self) -> Json {
+        let mut nodes = Vec::new();
+        for id in std::iter::once(ROOT).chain(self.live_nodes()) {
+            let n = self.node(id).unwrap();
+            nodes.push(Json::obj(vec![
+                ("id", Json::num(id as f64)),
+                ("parent", Json::num(n.parent as f64)),
+                ("tool", Json::str(n.call.descriptor())),
+                ("depth", Json::num(n.depth as f64)),
+                ("hits", Json::num(n.hits as f64)),
+                ("has_snapshot", Json::Bool(n.snapshot.is_some())),
+                ("stateless_entries", Json::num(n.stateless.len() as f64)),
+            ]));
+        }
+        Json::obj(vec![("nodes", Json::Arr(nodes))])
+    }
+}
+
+impl Default for Tcg {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn call(s: &str) -> ToolCall {
+        ToolCall::new("bash", s)
+    }
+
+    fn res(s: &str) -> ToolResult {
+        ToolResult::new(s, 1.0)
+    }
+
+    #[test]
+    fn insert_and_follow_path() {
+        let mut g = Tcg::new();
+        let a = g.insert_child(ROOT, call("git clone"), res("ok"));
+        let b = g.insert_child(a, call("make"), res("built"));
+        assert_eq!(g.child(ROOT, &call("git clone")), Some(a));
+        assert_eq!(g.child(a, &call("make")), Some(b));
+        assert_eq!(g.child(a, &call("make test")), None);
+        assert_eq!(g.node(b).unwrap().depth, 2);
+        assert_eq!(g.len(), 2);
+    }
+
+    #[test]
+    fn insert_is_idempotent() {
+        let mut g = Tcg::new();
+        let a = g.insert_child(ROOT, call("ls"), res("x"));
+        let a2 = g.insert_child(ROOT, call("ls"), res("y"));
+        assert_eq!(a, a2);
+        assert_eq!(g.len(), 1);
+        // first result wins (same trajectory ⇒ same state ⇒ same output)
+        assert_eq!(g.node(a).unwrap().result.output, "x");
+    }
+
+    #[test]
+    fn branching_from_shared_prefix() {
+        // Figure 3: rollouts share t1 then diverge.
+        let mut g = Tcg::new();
+        let t1 = g.insert_child(ROOT, call("t1"), res(""));
+        let t2 = g.insert_child(t1, call("t2"), res(""));
+        let t4 = g.insert_child(t1, call("t4"), res(""));
+        assert_ne!(t2, t4);
+        assert_eq!(g.node(t1).unwrap().children.len(), 2);
+        assert_eq!(g.path_from_root(t4), vec![t1, t4]);
+    }
+
+    #[test]
+    fn nearest_snapshot_walks_up() {
+        let mut g = Tcg::new();
+        let a = g.insert_child(ROOT, call("a"), res(""));
+        let b = g.insert_child(a, call("b"), res(""));
+        let c = g.insert_child(b, call("c"), res(""));
+        assert_eq!(g.nearest_snapshot(c), None);
+        g.set_snapshot(a, SnapshotRef { id: 9, bytes: 100, restore_cost: 0.5 });
+        let (nid, s) = g.nearest_snapshot(c).unwrap();
+        assert_eq!(nid, a);
+        assert_eq!(s.id, 9);
+        // a node with its own snapshot returns itself
+        g.set_snapshot(c, SnapshotRef { id: 10, bytes: 1, restore_cost: 0.1 });
+        assert_eq!(g.nearest_snapshot(c).unwrap().0, c);
+    }
+
+    #[test]
+    fn remove_subtree_frees_snapshots_and_detaches() {
+        let mut g = Tcg::new();
+        let a = g.insert_child(ROOT, call("a"), res(""));
+        let b = g.insert_child(a, call("b"), res(""));
+        let c = g.insert_child(b, call("c"), res(""));
+        g.set_snapshot(b, SnapshotRef { id: 1, bytes: 10, restore_cost: 0.1 });
+        g.set_snapshot(c, SnapshotRef { id: 2, bytes: 20, restore_cost: 0.1 });
+        let freed = g.remove_subtree(b);
+        let mut ids: Vec<u64> = freed.iter().map(|s| s.id).collect();
+        ids.sort();
+        assert_eq!(ids, vec![1, 2]);
+        assert_eq!(g.child(a, &call("b")), None);
+        assert!(g.node(b).is_none());
+        assert!(g.node(c).is_none());
+        assert_eq!(g.len(), 1); // only `a` left
+        assert_eq!(g.snapshot_bytes(), 0);
+    }
+
+    #[test]
+    fn pinning_detected_in_subtree() {
+        let mut g = Tcg::new();
+        let a = g.insert_child(ROOT, call("a"), res(""));
+        let b = g.insert_child(a, call("b"), res(""));
+        assert!(!g.subtree_pinned(a));
+        g.node_mut(b).unwrap().refcount = 1;
+        assert!(g.subtree_pinned(a));
+        assert!(g.subtree_pinned(b));
+    }
+
+    #[test]
+    fn stateless_results_indexed_on_parent() {
+        let mut g = Tcg::new();
+        let a = g.insert_child(ROOT, call("preprocess"), res(""));
+        let s1 = ToolCall::stateless("caption_retrieval", "(0,10)");
+        g.insert_stateless(a, s1.clone(), res("caps"));
+        assert_eq!(g.stateless_result(a, &s1).unwrap().output, "caps");
+        let other = ToolCall::stateless("caption_retrieval", "(5,15)");
+        assert!(g.stateless_result(a, &other).is_none());
+    }
+
+    #[test]
+    fn viz_json_contains_all_nodes() {
+        let mut g = Tcg::new();
+        let a = g.insert_child(ROOT, call("a"), res(""));
+        g.insert_child(a, call("b"), res(""));
+        let j = g.to_json();
+        assert_eq!(j.get("nodes").unwrap().as_arr().unwrap().len(), 3); // root+2
+    }
+}

@@ -1,0 +1,225 @@
+//! Cache bindings: how the `ToolCallExecutor` talks to TVCACHE.
+//!
+//! `LocalBinding` embeds the cache in-process (simulation experiments, where
+//! cache latency is *charged* rather than measured). `RemoteBinding` speaks
+//! the HTTP wire protocol to a real TVCACHE server (Figure 8 benchmarks,
+//! integration tests).
+
+use std::sync::{Arc, Mutex};
+
+use crate::cache::{Lookup, SnapshotCosts, SnapshotRef, TaskCache, ToolCall, ToolResult};
+use crate::cache::key::trajectory_to_json;
+use crate::sandbox::SandboxSnapshot;
+use crate::server::{hex_decode, hex_encode, SnapshotStore};
+use crate::util::http::HttpClient;
+use crate::util::json::{self, Json};
+
+/// The executor's view of the cache.
+pub trait CacheBinding: Send {
+    fn lookup(&self, q: &[ToolCall]) -> Lookup;
+    fn record(&self, traj: &[(ToolCall, ToolResult)]) -> usize;
+    fn release(&self, node: usize);
+    fn should_snapshot(&self, costs: SnapshotCosts) -> bool;
+    /// Store `snap` for `node`; returns the snapshot id.
+    fn attach_snapshot(&self, node: usize, snap: SandboxSnapshot) -> u64;
+    fn fetch_snapshot(&self, id: u64) -> Option<SandboxSnapshot>;
+    fn set_warm_fork(&self, node: usize, warm: bool);
+    fn has_warm_fork(&self, node: usize) -> bool;
+}
+
+/// In-process binding: `TaskCache` + `SnapshotStore`.
+pub struct LocalBinding {
+    pub cache: Arc<TaskCache>,
+    pub snapshots: Arc<SnapshotStore>,
+}
+
+impl LocalBinding {
+    pub fn new(cache: Arc<TaskCache>) -> LocalBinding {
+        LocalBinding { cache, snapshots: Arc::new(SnapshotStore::default()) }
+    }
+
+    pub fn shared(cache: Arc<TaskCache>, snapshots: Arc<SnapshotStore>) -> LocalBinding {
+        LocalBinding { cache, snapshots }
+    }
+}
+
+impl CacheBinding for LocalBinding {
+    fn lookup(&self, q: &[ToolCall]) -> Lookup {
+        self.cache.lookup(q)
+    }
+
+    fn record(&self, traj: &[(ToolCall, ToolResult)]) -> usize {
+        self.cache.record_trajectory(traj)
+    }
+
+    fn release(&self, node: usize) {
+        self.cache.release(node);
+    }
+
+    fn should_snapshot(&self, costs: SnapshotCosts) -> bool {
+        self.cache.should_snapshot(costs)
+    }
+
+    fn attach_snapshot(&self, node: usize, snap: SandboxSnapshot) -> u64 {
+        let size = snap.size();
+        let restore_cost = snap.restore_cost;
+        let id = self.snapshots.insert(snap);
+        let freed = self
+            .cache
+            .attach_snapshot(node, SnapshotRef { id, bytes: size, restore_cost });
+        for f in freed {
+            self.snapshots.remove(f.id);
+        }
+        id
+    }
+
+    fn fetch_snapshot(&self, id: u64) -> Option<SandboxSnapshot> {
+        self.snapshots.get(id)
+    }
+
+    fn set_warm_fork(&self, node: usize, warm: bool) {
+        self.cache.set_warm_fork(node, warm);
+    }
+
+    fn has_warm_fork(&self, node: usize) -> bool {
+        self.cache.has_warm_fork(node)
+    }
+}
+
+/// HTTP binding to a TVCACHE server (the `tvclient` analogue).
+pub struct RemoteBinding {
+    task: String,
+    client: Mutex<HttpClient>,
+}
+
+impl RemoteBinding {
+    pub fn connect(addr: std::net::SocketAddr, task: impl Into<String>) -> RemoteBinding {
+        RemoteBinding { task: task.into(), client: Mutex::new(HttpClient::connect(addr)) }
+    }
+
+    fn post(&self, path: &str, body: String) -> Option<Json> {
+        let mut c = self.client.lock().unwrap();
+        let (status, resp) = c.post(path, body.as_bytes()).ok()?;
+        if status != 200 {
+            return None;
+        }
+        json::parse(std::str::from_utf8(&resp).ok()?).ok()
+    }
+}
+
+impl CacheBinding for RemoteBinding {
+    fn lookup(&self, q: &[ToolCall]) -> Lookup {
+        let body = Json::obj(vec![
+            ("task", Json::str(self.task.clone())),
+            ("trajectory", trajectory_to_json(q)),
+        ])
+        .to_string();
+        let Some(v) = self.post("/prefix_match", body) else {
+            // Network failure degrades to a full miss — caching is an
+            // optimization, never a correctness dependency.
+            return Lookup::Miss(crate::cache::Miss {
+                matched_node: 0,
+                matched_calls: 0,
+                resume: None,
+            });
+        };
+        if v.get("hit").and_then(|h| h.as_bool()) == Some(true) {
+            let node = v.get("node").and_then(|n| n.as_u64()).unwrap_or(0) as usize;
+            let result = v
+                .get("result")
+                .and_then(ToolResult::from_json)
+                .unwrap_or_else(|| ToolResult::new("", 0.0));
+            Lookup::Hit { node, result }
+        } else {
+            let resume = v.get("resume").map(|r| {
+                let node = r.get("node").and_then(|n| n.as_u64()).unwrap_or(0) as usize;
+                let snap_id = r.get("snap_id").and_then(|s| s.as_u64()).unwrap_or(0);
+                let restore = r.get("restore_cost").and_then(|c| c.as_f64()).unwrap_or(0.0);
+                let replay = r.get("replay_from").and_then(|x| x.as_u64()).unwrap_or(0) as usize;
+                (
+                    node,
+                    SnapshotRef { id: snap_id, bytes: 0, restore_cost: restore },
+                    replay,
+                )
+            });
+            Lookup::Miss(crate::cache::Miss {
+                matched_node: v.get("matched_node").and_then(|n| n.as_u64()).unwrap_or(0)
+                    as usize,
+                matched_calls: v.get("matched_calls").and_then(|n| n.as_u64()).unwrap_or(0)
+                    as usize,
+                resume,
+            })
+        }
+    }
+
+    fn record(&self, traj: &[(ToolCall, ToolResult)]) -> usize {
+        let entries: Vec<Json> = traj
+            .iter()
+            .map(|(c, r)| Json::obj(vec![("call", c.to_json()), ("result", r.to_json())]))
+            .collect();
+        let body = Json::obj(vec![
+            ("task", Json::str(self.task.clone())),
+            ("trajectory", Json::Arr(entries)),
+        ])
+        .to_string();
+        self.post("/put", body)
+            .and_then(|v| v.get("node").and_then(|n| n.as_u64()))
+            .unwrap_or(0) as usize
+    }
+
+    fn release(&self, node: usize) {
+        let body = Json::obj(vec![
+            ("task", Json::str(self.task.clone())),
+            ("node", Json::num(node as f64)),
+        ])
+        .to_string();
+        self.post("/release", body);
+    }
+
+    fn should_snapshot(&self, costs: SnapshotCosts) -> bool {
+        // Policy evaluated client-side (the server applies budget on attach).
+        crate::cache::SnapshotPolicy::default().should_snapshot(costs)
+    }
+
+    fn attach_snapshot(&self, node: usize, snap: SandboxSnapshot) -> u64 {
+        let body = Json::obj(vec![
+            ("task", Json::str(self.task.clone())),
+            ("node", Json::num(node as f64)),
+            ("bytes_hex", Json::str(hex_encode(&snap.bytes))),
+            ("serialize_cost", Json::num(snap.serialize_cost)),
+            ("restore_cost", Json::num(snap.restore_cost)),
+        ])
+        .to_string();
+        self.post("/snapshot", body)
+            .and_then(|v| v.get("id").and_then(|i| i.as_u64()))
+            .unwrap_or(0)
+    }
+
+    fn fetch_snapshot(&self, id: u64) -> Option<SandboxSnapshot> {
+        let mut c = self.client.lock().unwrap();
+        let (status, resp) = c.get(&format!("/snapshot?id={id}")).ok()?;
+        if status != 200 {
+            return None;
+        }
+        let v = json::parse(std::str::from_utf8(&resp).ok()?).ok()?;
+        Some(SandboxSnapshot {
+            bytes: hex_decode(v.get("bytes_hex")?.as_str()?)?,
+            serialize_cost: v.get("serialize_cost")?.as_f64()?,
+            restore_cost: v.get("restore_cost")?.as_f64()?,
+        })
+    }
+
+    fn set_warm_fork(&self, node: usize, warm: bool) {
+        let body = Json::obj(vec![
+            ("task", Json::str(self.task.clone())),
+            ("node", Json::num(node as f64)),
+            ("warm", Json::Bool(warm)),
+        ])
+        .to_string();
+        self.post("/warm", body);
+    }
+
+    fn has_warm_fork(&self, _node: usize) -> bool {
+        false // remote warm-state is advisory; executor re-checks via resume
+    }
+}

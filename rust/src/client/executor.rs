@@ -1,0 +1,500 @@
+//! The `ToolCallExecutor` (Figure 4): the client-side loop the RL framework
+//! integrates with.
+//!
+//! One executor serves one rollout. Before each tool call it serializes the
+//! rollout's full tool history, queries the cache, and on a hit returns the
+//! cached value at cache-get latency. On a miss it reconstructs the needed
+//! sandbox state — preferring, in order: the live sandbox it already owns
+//! (when up-to-date), a forked snapshot from the LPM resume point, catch-up
+//! replay in its live sandbox, and finally a fresh root sandbox with full
+//! replay (the paper's §3.2 fallback) — then executes the call, records the
+//! extended trajectory, and applies the §3.3 selective-snapshot rule.
+//!
+//! The returned [`CallOutcome::charged`] is the latency the rollout *waits*,
+//! which the virtual-clock experiments charge to simulated time: cache-get
+//! latency on hits; fork/replay/execute/serialize costs on misses.
+
+use std::sync::Arc;
+
+use super::binding::CacheBinding;
+use crate::cache::{Lookup, SnapshotCosts, ToolCall, ToolResult};
+use crate::sandbox::{SandboxFactory, ToolExecutionEnvironment};
+
+/// Executor tunables (defaults match the paper's measured constants).
+#[derive(Debug, Clone, Copy)]
+pub struct ExecutorConfig {
+    /// Master switch: `false` = the cacheless baseline.
+    pub enabled: bool,
+    /// Cache lookup round-trip (paper: P95 3.3 ms at 256 RPS).
+    pub cache_get_latency: f64,
+    /// Attaching a pre-forked (warm) sandbox (§3.3 proactive forking).
+    pub warm_fork_attach: f64,
+    /// Warm root-sandbox pool: hides container start-up at rollout begin.
+    pub proactive_roots: bool,
+    /// Mark snapshots warm via background instantiation (§3.3).
+    pub background_forks: bool,
+    /// Must mirror the server's `LpmConfig::stateful_filtering`: decides how
+    /// a resume node's TCG depth maps back to a query index.
+    pub stateful_filtering: bool,
+    /// Contention multiplier on cold sandbox start/stop (cacheless runs
+    /// create B·R containers concurrently at step start; Figure 13 shows
+    /// the baseline manager's throughput collapse under that load).
+    pub cold_start_factor: f64,
+}
+
+impl Default for ExecutorConfig {
+    fn default() -> Self {
+        ExecutorConfig {
+            enabled: true,
+            cache_get_latency: 0.0033,
+            warm_fork_attach: 0.05,
+            proactive_roots: true,
+            background_forks: true,
+            stateful_filtering: true,
+            cold_start_factor: 1.0,
+        }
+    }
+}
+
+impl ExecutorConfig {
+    pub fn cacheless() -> Self {
+        ExecutorConfig { enabled: false, ..Default::default() }
+    }
+}
+
+/// Outcome of one tool call through the executor.
+#[derive(Debug, Clone)]
+pub struct CallOutcome {
+    pub result: ToolResult,
+    /// Seconds the rollout waited for this call (what Figures 2/7/14 plot).
+    pub charged: f64,
+    pub hit: bool,
+}
+
+/// Per-rollout executor.
+pub struct ToolCallExecutor {
+    binding: Arc<dyn CacheBinding>,
+    factory: Arc<dyn SandboxFactory>,
+    task_seed: u64,
+    cfg: ExecutorConfig,
+    history: Vec<(ToolCall, ToolResult)>,
+    sandbox: Option<Box<dyn ToolExecutionEnvironment>>,
+    /// `history[..valid_upto]` is reflected in the live sandbox's state.
+    valid_upto: usize,
+    /// Total charged seconds (incl. start/stop overheads).
+    pub total_charged: f64,
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl ToolCallExecutor {
+    pub fn new(
+        binding: Arc<dyn CacheBinding>,
+        factory: Arc<dyn SandboxFactory>,
+        task_seed: u64,
+        cfg: ExecutorConfig,
+    ) -> ToolCallExecutor {
+        ToolCallExecutor {
+            binding,
+            factory,
+            task_seed,
+            cfg,
+            history: Vec::new(),
+            sandbox: None,
+            valid_upto: 0,
+            total_charged: 0.0,
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    pub fn history(&self) -> &[(ToolCall, ToolResult)] {
+        &self.history
+    }
+
+    /// Execute one tool call (the RL loop's integration point).
+    pub fn call(&mut self, call: ToolCall) -> CallOutcome {
+        let outcome = if self.cfg.enabled {
+            self.call_cached(call)
+        } else {
+            self.call_direct(call)
+        };
+        self.total_charged += outcome.charged;
+        outcome
+    }
+
+    /// Rollout finished: tear down the live sandbox (charged; the paper's
+    /// Appendix F attributes much of the baseline's cost to start/stop).
+    pub fn finish(&mut self) -> f64 {
+        let mut charged = 0.0;
+        if let Some(mut sb) = self.sandbox.take() {
+            // With proactive management the stop happens off the rollout's
+            // critical path (background cleanup).
+            let stop = sb.stop();
+            if !self.cfg.enabled || !self.cfg.proactive_roots {
+                charged += stop * self.cfg.cold_start_factor;
+            }
+        }
+        self.total_charged += charged;
+        charged
+    }
+
+    // -- cacheless baseline ------------------------------------------------
+
+    fn call_direct(&mut self, call: ToolCall) -> CallOutcome {
+        self.misses += 1; // every cacheless call executes for real
+        let mut charged = 0.0;
+        if self.sandbox.is_none() {
+            let mut sb = self.factory.create(self.task_seed);
+            // Cold container start on the critical path, amplified by the
+            // concurrent-creation contention of a full batch (Appendix E).
+            charged += sb.start() * self.cfg.cold_start_factor;
+            self.sandbox = Some(sb);
+        }
+        let result = self.sandbox.as_mut().unwrap().execute(&call);
+        charged += result.exec_time;
+        self.history.push((call, result.clone()));
+        self.valid_upto = self.history.len();
+        CallOutcome { result, charged, hit: false }
+    }
+
+    // -- cached path ---------------------------------------------------------
+
+    fn call_cached(&mut self, call: ToolCall) -> CallOutcome {
+        let mut q: Vec<ToolCall> = self.history.iter().map(|(c, _)| c.clone()).collect();
+        q.push(call.clone());
+
+        let mut charged = self.cfg.cache_get_latency;
+        match self.binding.lookup(&q) {
+            Lookup::Hit { node: _, result } => {
+                self.hits += 1;
+                self.history.push((call, result.clone()));
+                // Live sandbox (if any) now lags history; `valid_upto`
+                // already reflects that.
+                CallOutcome { result, charged, hit: true }
+            }
+            Lookup::Miss(miss) => {
+                self.misses += 1;
+                charged += self.ensure_state(&q, &miss);
+                let sb = self.sandbox.as_mut().expect("ensure_state built a sandbox");
+                let result = sb.execute(&call);
+                charged += result.exec_time;
+                self.history.push((call.clone(), result.clone()));
+                self.valid_upto = self.history.len();
+
+                // Record the extended trajectory (the /put of Figure 4).
+                let node = self.binding.record(&self.history);
+
+                // §3.3 selective snapshotting, on the critical path; the
+                // fork instantiation happens in the background.
+                if call.mutates_state {
+                    let sb = self.sandbox.as_ref().unwrap();
+                    let snap = sb.snapshot();
+                    let costs = SnapshotCosts {
+                        exec_time: result.exec_time,
+                        serialize_cost: snap.serialize_cost,
+                        restore_cost: snap.restore_cost,
+                    };
+                    if self.binding.should_snapshot(costs) {
+                        charged += snap.serialize_cost;
+                        self.binding.attach_snapshot(node, snap);
+                        if self.cfg.background_forks {
+                            self.binding.set_warm_fork(node, true);
+                        }
+                    }
+                }
+                CallOutcome { result, charged, hit: false }
+            }
+        }
+    }
+
+    /// Bring `self.sandbox` to the state implied by `q[..q.len()-1]`.
+    /// Returns the charged reconstruction latency.
+    fn ensure_state(&mut self, q: &[ToolCall], miss: &crate::cache::Miss) -> f64 {
+        let prefix_len = q.len() - 1;
+
+        // Fast path: the live sandbox is already up to date.
+        if self.sandbox.is_some() && self.valid_upto == prefix_len {
+            return 0.0;
+        }
+
+        // Option A: fork the snapshot the LPM offered.
+        // `replay_from` is the resume node's stateful depth; map it to an
+        // index in q.
+        let snapshot_plan = miss.resume.and_then(|(node, snap, depth)| {
+            let idx = if self.cfg.stateful_filtering {
+                stateful_depth_to_index(q, depth)
+            } else {
+                depth.min(prefix_len)
+            };
+            self.binding.fetch_snapshot(snap.id).map(|s| (node, s, idx))
+        });
+
+        // Option B: catch-up replay in the live sandbox from valid_upto.
+        // Option C: fresh sandbox, full replay.
+        // Choose the plan with the least estimated replay work.
+        let live_start = if self.sandbox.is_some() { Some(self.valid_upto) } else { None };
+
+        let mut charged = 0.0;
+        let replay_start = match (snapshot_plan, live_start) {
+            (Some((node, snap, idx)), Some(live)) if idx >= live => {
+                // Snapshot gets us at least as far as the live sandbox.
+                charged += self.adopt_snapshot(node, snap);
+                idx
+            }
+            (Some((node, snap, idx)), None) => {
+                charged += self.adopt_snapshot(node, snap);
+                idx
+            }
+            (_, Some(live)) => live, // keep the live sandbox, replay delta
+            (None, None) => {
+                let mut sb = self.factory.create(self.task_seed);
+                let start = sb.start();
+                if !self.cfg.proactive_roots {
+                    charged += start; // warm root pool hides this otherwise
+                }
+                self.sandbox = Some(sb);
+                0
+            }
+        };
+
+        // Replay the state-mutating calls in q[replay_start..prefix_len].
+        let sb = self.sandbox.as_mut().unwrap();
+        for call in &q[replay_start..prefix_len] {
+            if call.mutates_state {
+                let r = sb.execute(call);
+                charged += r.exec_time;
+            }
+        }
+        self.valid_upto = prefix_len;
+        charged
+    }
+
+    fn adopt_snapshot(
+        &mut self,
+        node: usize,
+        snap: crate::sandbox::SandboxSnapshot,
+    ) -> f64 {
+        let charged = if self.binding.has_warm_fork(node) {
+            // §3.3 reactive forking found a background-instantiated copy.
+            self.binding.set_warm_fork(node, false);
+            self.cfg.warm_fork_attach
+        } else {
+            snap.restore_cost
+        };
+        self.sandbox = Some(self.factory.restore(&snap));
+        self.binding.release(node);
+        charged
+    }
+}
+
+/// Index in `q` just *after* the `depth`-th state-mutating call.
+pub fn stateful_depth_to_index(q: &[ToolCall], depth: usize) -> usize {
+    if depth == 0 {
+        return 0;
+    }
+    let mut seen = 0;
+    for (i, c) in q.iter().enumerate() {
+        if c.mutates_state {
+            seen += 1;
+            if seen == depth {
+                return i + 1;
+            }
+        }
+    }
+    q.len()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cache::TaskCache;
+    use crate::client::binding::LocalBinding;
+    use crate::sandbox::TerminalFactory;
+
+    fn shared_binding(cache: Arc<TaskCache>) -> Arc<LocalBinding> {
+        Arc::new(LocalBinding::new(cache))
+    }
+
+    fn make(
+        cache: Arc<TaskCache>,
+        cfg: ExecutorConfig,
+        seed: u64,
+    ) -> ToolCallExecutor {
+        make_with(shared_binding(cache), cfg, seed)
+    }
+
+    fn make_with(
+        binding: Arc<LocalBinding>,
+        cfg: ExecutorConfig,
+        seed: u64,
+    ) -> ToolCallExecutor {
+        let factory = Arc::new(TerminalFactory { medium: false });
+        ToolCallExecutor::new(binding, factory, seed, cfg)
+    }
+
+    fn bash(cmd: &str) -> ToolCall {
+        let mutates = !(cmd.starts_with("cat") || cmd.starts_with("ls") || cmd.starts_with("grep"));
+        ToolCall { tool: "bash".into(), args: cmd.into(), mutates_state: mutates }
+    }
+
+    #[test]
+    fn second_rollout_hits_first_rollouts_calls() {
+        let cache = Arc::new(TaskCache::with_defaults());
+        let cmds = ["pip install libdep1", "make", "make test"];
+
+        let mut r1 = make(Arc::clone(&cache), ExecutorConfig::default(), 1);
+        for c in cmds {
+            let o = r1.call(bash(c));
+            assert!(!o.hit);
+        }
+        let mut r2 = make(Arc::clone(&cache), ExecutorConfig::default(), 1);
+        for c in cmds {
+            let o = r2.call(bash(c));
+            assert!(o.hit, "expected hit for {c}");
+            assert!(o.charged < 0.01, "hit should cost ~get latency");
+        }
+        assert_eq!(r2.hits, 3);
+    }
+
+    #[test]
+    fn hit_returns_identical_output_to_uncached_execution() {
+        // The paper's correctness claim, end-to-end: cached rollout output
+        // must equal a fresh cacheless execution of the same trajectory.
+        let cmds = [
+            "echo v1 > cfg.txt",
+            "cat cfg.txt",
+            "patch src/module_1.py s/return x - 2/return x + 2/",
+            "make",
+            "cat cfg.txt",
+        ];
+        let cache = Arc::new(TaskCache::with_defaults());
+        let mut warm = make(Arc::clone(&cache), ExecutorConfig::default(), 1);
+        let warm_out: Vec<String> =
+            cmds.iter().map(|c| warm.call(bash(c)).result.output).collect();
+
+        let mut cached = make(Arc::clone(&cache), ExecutorConfig::default(), 1);
+        let cached_out: Vec<String> =
+            cmds.iter().map(|c| cached.call(bash(c)).result.output).collect();
+
+        let mut baseline = make(
+            Arc::new(TaskCache::with_defaults()),
+            ExecutorConfig::cacheless(),
+            1,
+        );
+        let base_out: Vec<String> =
+            cmds.iter().map(|c| baseline.call(bash(c)).result.output).collect();
+
+        assert_eq!(cached_out, base_out);
+        assert_eq!(warm_out, base_out);
+    }
+
+    #[test]
+    fn stateful_divergence_never_serves_stale_value() {
+        // §1 example: rollout B patches differently, then cats — must see
+        // its own patch, not rollout A's cached cat.
+        let cache = Arc::new(TaskCache::with_defaults());
+        let f = "src/module_1.py";
+        let mut a = make(Arc::clone(&cache), ExecutorConfig::default(), 1);
+        a.call(bash(&format!("patch {f} s/return x - 2/return x + 2/")));
+        let a_cat = a.call(bash(&format!("cat {f}"))).result.output;
+
+        let mut b = make(Arc::clone(&cache), ExecutorConfig::default(), 1);
+        b.call(bash(&format!("patch {f} s/return x - 2/return x * 9/")));
+        let b_cat = b.call(bash(&format!("cat {f}"))).result.output;
+
+        assert_ne!(a_cat, b_cat);
+        assert!(b_cat.contains("x * 9"), "{b_cat}");
+    }
+
+    #[test]
+    fn miss_after_hits_reconstructs_state_correctly() {
+        let cache = Arc::new(TaskCache::with_defaults());
+        let mut a = make(Arc::clone(&cache), ExecutorConfig::default(), 2);
+        for c in ["echo alpha > f1", "echo beta > f2", "make"] {
+            a.call(bash(c));
+        }
+        // Rollout B hits on all three, then diverges with a read of f1.
+        let mut b = make(Arc::clone(&cache), ExecutorConfig::default(), 2);
+        for c in ["echo alpha > f1", "echo beta > f2", "make"] {
+            assert!(b.call(bash(c)).hit);
+        }
+        let out = b.call(bash("cat f1")).result.output;
+        assert_eq!(out, "alpha");
+    }
+
+    #[test]
+    fn cacheless_never_hits_and_charges_start() {
+        let cache = Arc::new(TaskCache::with_defaults());
+        let mut x = make(cache, ExecutorConfig::cacheless(), 3);
+        let o = x.call(bash("cat README.md"));
+        assert!(!o.hit);
+        // Charged includes the 4 s container start.
+        assert!(o.charged > 3.9, "charged {}", o.charged);
+        let o2 = x.call(bash("ls"));
+        assert!(o2.charged < 1.0, "second call reuses the container");
+        let stop = x.finish();
+        assert!(stop > 0.0);
+    }
+
+    #[test]
+    fn snapshot_resume_cheaper_than_full_replay() {
+        // Build an expensive prefix (make test ⇒ snapshotted), then a new
+        // rollout diverges after it: resume must avoid re-running the build.
+        let cache = Arc::new(TaskCache::with_defaults());
+        let binding = shared_binding(Arc::clone(&cache));
+        let mut a = make_with(Arc::clone(&binding), ExecutorConfig::default(), 1);
+        a.call(bash("pip install libdep1"));
+        a.call(bash("make"));
+        a.call(bash("make test")); // expensive ⇒ snapshot stored
+        assert!(cache.snapshot_count() > 0, "expensive calls must snapshot");
+
+        let mut b = make_with(binding, ExecutorConfig::default(), 1);
+        for c in ["pip install libdep1", "make", "make test"] {
+            assert!(b.call(bash(c)).hit);
+        }
+        // Divergent cheap call: state comes from the snapshot fork, so the
+        // charge must be far below re-running install+make+test (~20 s).
+        let o = b.call(bash("echo done > status.txt"));
+        assert!(!o.hit);
+        assert!(o.charged < 5.0, "resume too expensive: {}", o.charged);
+    }
+
+    #[test]
+    fn executor_trajectories_equal_across_hit_and_miss_paths() {
+        // Property: for any trajectory, state fingerprint after cached
+        // replays equals the baseline fingerprint (tested via outputs of a
+        // trailing `cat`+`make test`).
+        let cmds = [
+            "pip install libdep1",
+            "make",
+            "patch src/module_1.py s/return x - 2/return x + 2/",
+            "make",
+            "make test",
+        ];
+        let cache = Arc::new(TaskCache::with_defaults());
+        for seed_rollout in 0..3 {
+            let mut e = make(Arc::clone(&cache), ExecutorConfig::default(), 1);
+            let outs: Vec<String> =
+                cmds.iter().map(|c| e.call(bash(c)).result.output).collect();
+            assert!(
+                outs.last().unwrap().contains("12 passed"),
+                "rollout {seed_rollout}: {outs:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn stateful_depth_mapping() {
+        let q = vec![
+            bash("make"),          // mutating (depth 1)
+            bash("cat a"),         // stateless
+            bash("echo x > f"),    // mutating (depth 2)
+            bash("ls"),            // stateless
+        ];
+        assert_eq!(stateful_depth_to_index(&q, 0), 0);
+        assert_eq!(stateful_depth_to_index(&q, 1), 1);
+        assert_eq!(stateful_depth_to_index(&q, 2), 3);
+        assert_eq!(stateful_depth_to_index(&q, 5), 4);
+    }
+}

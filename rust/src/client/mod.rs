@@ -1,0 +1,8 @@
+//! Client library (the paper's `tvclient`): cache bindings and the
+//! `ToolCallExecutor` the RL training loop integrates with (Figure 4).
+
+pub mod binding;
+pub mod executor;
+
+pub use binding::{CacheBinding, LocalBinding, RemoteBinding};
+pub use executor::{CallOutcome, ExecutorConfig, ToolCallExecutor};

@@ -1,0 +1,31 @@
+//! TVCACHE — a stateful tool-value cache for RL post-training of LLM agents.
+//!
+//! Reproduction of "TVCACHE: A Stateful Tool-Value Cache for Post-Training
+//! LLM Agents" (CS.LG 2026) as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **Layer 3 (this crate)** — the paper's coordination contribution: the
+//!   tool-call-graph cache, longest-prefix matching, selective sandbox
+//!   snapshotting, fork orchestration, the HTTP cache server/client, and the
+//!   RL post-training driver.
+//! * **Layer 2 (python/compile/model.py)** — the agent policy network (a
+//!   small causal transformer) and its GRPO/REINFORCE training step, written
+//!   in JAX and AOT-lowered to HLO text at build time.
+//! * **Layer 1 (python/compile/kernels/)** — Pallas kernels (fused causal
+//!   attention, RMSNorm) called from the Layer-2 graphs.
+//!
+//! Python never runs on the post-training hot path: `make artifacts` lowers
+//! the JAX graphs once, and [`runtime`] loads and executes them through the
+//! PJRT C API (`xla` crate).
+
+pub mod util;
+pub mod sim;
+pub mod cache;
+pub mod sandbox;
+pub mod server;
+pub mod client;
+pub mod agent;
+pub mod workloads;
+pub mod train;
+pub mod runtime;
+pub mod metrics;
+pub mod bench;

@@ -1,0 +1,67 @@
+//! TVCACHE launcher.
+//!
+//! ```text
+//! tvcache serve    --addr 127.0.0.1:8117 --workers 8
+//! tvcache workload --name terminal-easy|terminal-medium|sql|ego
+//!                  [--tasks N] [--epochs N] [--no-cache]
+//! ```
+
+use tvcache::bench::print_table;
+use tvcache::server::serve;
+use tvcache::train::{run_workload, SimOptions};
+use tvcache::util::cli::Args;
+use tvcache::workloads::{Workload, WorkloadConfig};
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    match args.positional.first().map(|s| s.as_str()) {
+        Some("serve") => {
+            let addr = args.str_or("addr", "127.0.0.1:8117");
+            let workers = args.usize_or("workers", 8);
+            let (server, _svc) = serve(&addr, workers)?;
+            println!("tvcache server listening on {}", server.addr());
+            println!("endpoints: /get /prefix_match /put /release /snapshot /stats /viz /ping");
+            loop {
+                std::thread::sleep(std::time::Duration::from_secs(3600));
+            }
+        }
+        Some("workload") => {
+            let name = args.str_or("name", "terminal-easy");
+            let workload = match name.as_str() {
+                "terminal-easy" => Workload::TerminalEasy,
+                "terminal-medium" => Workload::TerminalMedium,
+                "sql" => Workload::SkyRlSql,
+                "ego" => Workload::EgoSchema,
+                other => anyhow::bail!("unknown workload {other}"),
+            };
+            let cfg = WorkloadConfig::config_for(workload);
+            let mut opts =
+                SimOptions::from_config(&cfg, args.usize_or("tasks", 8), !args.bool("no-cache"));
+            opts.epochs = args.usize_or("epochs", cfg.epochs);
+            let m = run_workload(&cfg, &opts);
+            let rows: Vec<Vec<String>> = m
+                .epoch_hit_rates
+                .iter()
+                .zip(&m.epoch_rewards)
+                .map(|((e, hr), (_, rw))| {
+                    vec![format!("{e}"), format!("{:.1}%", hr * 100.0), format!("{rw:.3}")]
+                })
+                .collect();
+            print_table(
+                &format!("{name} ({} tasks, cache={})", opts.n_tasks, opts.cached),
+                &["epoch", "hit_rate", "mean_reward"],
+                &rows,
+            );
+            println!(
+                "\noverall hit rate {:.1}%, median tool call {:.3}s",
+                100.0 * m.overall_hit_rate(),
+                m.median_call_time()
+            );
+            Ok(())
+        }
+        _ => {
+            println!("usage: tvcache <serve|workload> [flags]   (see README)");
+            Ok(())
+        }
+    }
+}

@@ -1,0 +1,100 @@
+//! Experiment metrics: CSV series writers used by every bench to emit the
+//! figure data alongside the printed tables.
+
+use std::fs::{self, File};
+use std::io::Write;
+use std::path::Path;
+
+/// A named CSV table accumulated in memory and flushed to `results/`.
+pub struct CsvWriter {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl CsvWriter {
+    pub fn new(columns: &[&str]) -> CsvWriter {
+        CsvWriter {
+            header: columns.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.header.len(), "column count mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    /// Convenience: format heterogeneous cells.
+    pub fn rowf(&mut self, cells: &[&dyn std::fmt::Display]) {
+        let cells: Vec<String> = cells.iter().map(|c| c.to_string()).collect();
+        self.row(&cells);
+    }
+
+    pub fn write(&self, path: impl AsRef<Path>) -> std::io::Result<()> {
+        let path = path.as_ref();
+        if let Some(dir) = path.parent() {
+            fs::create_dir_all(dir)?;
+        }
+        let mut f = File::create(path)?;
+        writeln!(f, "{}", self.header.join(","))?;
+        for r in &self.rows {
+            writeln!(f, "{}", r.join(","))?;
+        }
+        Ok(())
+    }
+
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+}
+
+/// Resident-set size of this process in bytes (Figure 8b memory tracking).
+pub fn rss_bytes() -> u64 {
+    if let Ok(status) = fs::read_to_string("/proc/self/status") {
+        for line in status.lines() {
+            if let Some(rest) = line.strip_prefix("VmRSS:") {
+                let kb: u64 = rest
+                    .trim()
+                    .trim_end_matches("kB")
+                    .trim()
+                    .parse()
+                    .unwrap_or(0);
+                return kb * 1024;
+            }
+        }
+    }
+    0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csv_roundtrip() {
+        let mut w = CsvWriter::new(&["epoch", "hit_rate"]);
+        w.rowf(&[&1, &0.25]);
+        w.rowf(&[&2, &0.31]);
+        let path = std::env::temp_dir().join("tvcache_test_metrics.csv");
+        w.write(&path).unwrap();
+        let text = fs::read_to_string(&path).unwrap();
+        assert_eq!(text, "epoch,hit_rate\n1,0.25\n2,0.31\n");
+        fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    #[should_panic(expected = "column count mismatch")]
+    fn row_width_checked() {
+        let mut w = CsvWriter::new(&["a", "b"]);
+        w.row(&["only-one".to_string()]);
+    }
+
+    #[test]
+    fn rss_positive_on_linux() {
+        assert!(rss_bytes() > 0);
+    }
+}

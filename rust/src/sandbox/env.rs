@@ -1,0 +1,74 @@
+//! The `ToolExecutionEnvironment` abstraction (§3.4 "Sandbox lifecycle").
+//!
+//! Each workload implements this trait by defining `start`, `stop`, `fork`,
+//! and `execute`, exactly as the paper's client library specifies, plus
+//! `snapshot`/`restore` (Docker-commit analogue) and `will_mutate_state`
+//! (Appendix B annotation hook).
+//!
+//! Execution is *simulated-latency, real-state*: `execute` really mutates an
+//! in-memory model of the sandbox (filesystem, database, media store) and
+//! returns the output a real tool would produce, while the reported
+//! `exec_time` is drawn from a paper-calibrated latency model. Under a
+//! virtual clock the experiment charges that latency to simulated time; the
+//! state machine itself — what the correctness guarantee is about — is real.
+
+use crate::cache::{ToolCall, ToolResult};
+
+/// Serialized sandbox state (Docker `commit` analogue).
+#[derive(Debug, Clone)]
+pub struct SandboxSnapshot {
+    /// Opaque serialized state.
+    pub bytes: Vec<u8>,
+    /// Seconds the serialization took (charged to the critical path, §3.3).
+    pub serialize_cost: f64,
+    /// Seconds restoring this snapshot takes (charged at fork time).
+    pub restore_cost: f64,
+}
+
+impl SandboxSnapshot {
+    pub fn size(&self) -> u64 {
+        self.bytes.len() as u64
+    }
+}
+
+/// The sandbox interface every workload implements.
+pub trait ToolExecutionEnvironment: Send {
+    /// Bring the sandbox up. Returns start-up latency in seconds (container
+    /// creation — the overhead proactive forking hides, Appendix F).
+    fn start(&mut self) -> f64;
+
+    /// Tear the sandbox down. Returns the stop latency in seconds.
+    fn stop(&mut self) -> f64;
+
+    /// Execute one tool call, mutating sandbox state; the returned
+    /// [`ToolResult::exec_time`] is the simulated execution latency.
+    fn execute(&mut self, call: &ToolCall) -> ToolResult;
+
+    /// Deep-copy this sandbox (Docker fork: commit + run). The returned
+    /// environment is already started.
+    fn fork(&self) -> Box<dyn ToolExecutionEnvironment>;
+
+    /// Serialize current state.
+    fn snapshot(&self) -> SandboxSnapshot;
+
+    /// `will_mutate_state()` (Appendix B): whether this call can modify the
+    /// sandbox. Conservative default: everything mutates.
+    fn will_mutate_state(&self, _call: &ToolCall) -> bool {
+        true
+    }
+
+    /// A fingerprint of the full mutable state — used by the correctness
+    /// property tests (identical trajectories ⇒ identical fingerprints).
+    fn state_fingerprint(&self) -> u64;
+}
+
+/// Factory for creating fresh sandboxes and restoring snapshots; one per
+/// workload (terminal / sql / video). Object-safe so the executor can hold
+/// `Box<dyn SandboxFactory>`.
+pub trait SandboxFactory: Send + Sync {
+    /// A clean root sandbox for `task_seed` (already started).
+    fn create(&self, task_seed: u64) -> Box<dyn ToolExecutionEnvironment>;
+
+    /// Rehydrate a snapshot into a running sandbox.
+    fn restore(&self, snap: &SandboxSnapshot) -> Box<dyn ToolExecutionEnvironment>;
+}

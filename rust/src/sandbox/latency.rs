@@ -1,0 +1,187 @@
+//! Paper-calibrated tool-latency models.
+//!
+//! Figure 2 / Table 2 / Figure 11 give per-workload latency scales: terminal
+//! tool calls have a ~8.7 s (easy) / ~18.7 s (medium) median with heavy
+//! tails (p99 > 90% of rollout time); SQL reads take ~56.6 ms round-trip;
+//! EgoSchema tools range from milliseconds (load/preprocess hit path) to
+//! tens of seconds (object-memory agent loops). Latencies are sampled
+//! deterministically from the call descriptor + a stream seed, so repeated
+//! executions of the same call in the same state report identical costs —
+//! which the selective-snapshot policy and the benches rely on.
+
+use crate::util::rng::{fnv1a, Rng};
+
+/// A lognormal latency distribution with a floor.
+#[derive(Debug, Clone, Copy)]
+pub struct LatencyDist {
+    /// Underlying lognormal mu (of seconds).
+    pub mu: f64,
+    /// Underlying lognormal sigma.
+    pub sigma: f64,
+    /// Added constant (network RTT, dispatch overhead).
+    pub floor: f64,
+}
+
+impl LatencyDist {
+    pub const fn new(mu: f64, sigma: f64, floor: f64) -> Self {
+        LatencyDist { mu, sigma, floor }
+    }
+
+    /// Deterministic sample for a given key (call descriptor hash).
+    pub fn sample(&self, seed: u64, key: &str) -> f64 {
+        let mut rng = Rng::new(seed ^ fnv1a(key.as_bytes()));
+        self.floor + rng.lognormal(self.mu, self.sigma)
+    }
+
+    /// Median of the distribution (floor + e^mu).
+    pub fn median(&self) -> f64 {
+        self.floor + self.mu.exp()
+    }
+}
+
+/// Latency model for the terminal workload, calibrated to Table 2.
+/// `scale` distinguishes easy (1.0) from medium (~2.2) tasks.
+#[derive(Debug, Clone, Copy)]
+pub struct TerminalLatency {
+    pub scale: f64,
+}
+
+impl TerminalLatency {
+    /// Classify a shell command into a latency class.
+    pub fn classify(cmd: &str) -> LatencyDist {
+        let c = cmd.trim();
+        // Heavy operations first: compilation, test suites, installs.
+        if c.starts_with("make test") || c.starts_with("pytest") || c.contains("run_tests") {
+            LatencyDist::new(2.6, 0.8, 0.5) // ~14 s median, heavy tail
+        } else if c.starts_with("make") || c.contains("gcc") || c.contains("cargo build") {
+            LatencyDist::new(2.2, 0.7, 0.5) // ~9.5 s median
+        } else if c.starts_with("pip install") || c.starts_with("apt-get") {
+            LatencyDist::new(1.9, 0.6, 0.5) // ~7 s median
+        } else if c.starts_with("git clone") {
+            LatencyDist::new(1.6, 0.5, 0.3)
+        } else if c.starts_with("python") || c.starts_with("./") {
+            LatencyDist::new(0.8, 0.9, 0.1) // script runs: wide spread
+        } else {
+            // cheap file ops: cat/ls/echo/grep/cd/export/mkdir/rm/cp/patch
+            LatencyDist::new(-2.5, 0.5, 0.02) // ~100 ms
+        }
+    }
+
+    pub fn sample(&self, seed: u64, cmd: &str) -> f64 {
+        TerminalLatency::classify(cmd).sample(seed, cmd) * self.scale
+    }
+}
+
+/// Container lifecycle costs (Docker analogue; Appendix E/F).
+#[derive(Debug, Clone, Copy)]
+pub struct ContainerCosts {
+    pub start: f64,
+    pub stop: f64,
+    pub commit_per_kb: f64,
+    pub commit_base: f64,
+    pub restore_base: f64,
+}
+
+impl Default for ContainerCosts {
+    fn default() -> Self {
+        // Calibrated so that cold start+stop ≈ 7 s/rollout — the overhead
+        // Appendix F attributes most of TVCACHE's win to.
+        ContainerCosts {
+            start: 4.0,
+            stop: 1.5,
+            commit_per_kb: 0.002,
+            commit_base: 0.8,
+            restore_base: 1.2,
+        }
+    }
+}
+
+/// SQL workload: 55.8 ms median RTT (§4.2) + per-row scan cost.
+#[derive(Debug, Clone, Copy)]
+pub struct SqlLatency {
+    pub rtt: f64,
+    pub per_row_scanned: f64,
+}
+
+impl Default for SqlLatency {
+    fn default() -> Self {
+        SqlLatency { rtt: 0.0558, per_row_scanned: 2e-6 }
+    }
+}
+
+impl SqlLatency {
+    /// Total query latency given rows scanned. A cache hit skips all of it
+    /// and costs only the cache get (~6.5 ms, §4.2).
+    pub fn query(&self, seed: u64, sql: &str, rows_scanned: usize) -> f64 {
+        let mut rng = Rng::new(seed ^ fnv1a(sql.as_bytes()));
+        // RTT jitter: lognormal around the median.
+        let rtt = self.rtt * rng.lognormal(0.0, 0.15);
+        rtt + rows_scanned as f64 * self.per_row_scanned
+    }
+}
+
+/// EgoSchema tool latencies (Figure 11 distributions).
+pub fn ego_tool_latency(tool: &str) -> LatencyDist {
+    match tool {
+        // Fast filesystem copies (preprocessed data reuse — Appendix D).
+        "load_video" => LatencyDist::new(-2.0, 0.3, 0.05),
+        "preprocess" => LatencyDist::new(-1.6, 0.4, 0.05),
+        // Retrieval over precomputed embeddings.
+        "segment_localization" => LatencyDist::new(0.3, 0.4, 0.2),
+        "caption_retrieval" => LatencyDist::new(0.9, 0.5, 0.3), // OpenAI API
+        "visual_question_answering" => LatencyDist::new(1.3, 0.5, 0.4),
+        // Internal agent loop with an OpenAI model: the slowest (Fig 11).
+        "object_memory_querying" => LatencyDist::new(2.3, 0.6, 1.0),
+        _ => LatencyDist::new(0.0, 0.5, 0.1),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_sampling() {
+        let d = LatencyDist::new(1.0, 0.5, 0.1);
+        assert_eq!(d.sample(42, "make"), d.sample(42, "make"));
+        assert_ne!(d.sample(42, "make"), d.sample(43, "make"));
+        assert_ne!(d.sample(42, "make"), d.sample(42, "make test"));
+    }
+
+    #[test]
+    fn terminal_classes_ordered_by_cost() {
+        let cat = TerminalLatency::classify("cat foo.py").median();
+        let install = TerminalLatency::classify("pip install numpy").median();
+        let build = TerminalLatency::classify("make all").median();
+        let test = TerminalLatency::classify("make test").median();
+        assert!(cat < install && install < build && build < test);
+        assert!(cat < 0.5, "cat median {cat}");
+        assert!(test > 10.0, "test median {test}");
+    }
+
+    #[test]
+    fn medium_scale_slower_than_easy() {
+        let easy = TerminalLatency { scale: 1.0 };
+        let med = TerminalLatency { scale: 2.2 };
+        assert!(med.sample(1, "make") > easy.sample(1, "make"));
+    }
+
+    #[test]
+    fn sql_latency_near_paper_median() {
+        let l = SqlLatency::default();
+        let mut total = 0.0;
+        for i in 0..200 {
+            total += l.query(i, &format!("SELECT {i}"), 100);
+        }
+        let mean = total / 200.0;
+        assert!((mean - 0.0566).abs() < 0.01, "mean {mean}");
+    }
+
+    #[test]
+    fn ego_object_memory_is_slowest() {
+        let omq = ego_tool_latency("object_memory_querying").median();
+        for t in ["load_video", "preprocess", "segment_localization", "caption_retrieval"] {
+            assert!(ego_tool_latency(t).median() < omq, "{t}");
+        }
+    }
+}

@@ -1,0 +1,16 @@
+//! Sandbox substrates: the `ToolExecutionEnvironment` abstraction plus the
+//! three workload sandboxes (terminal / SQL / video) and the container
+//! manager simulator. See DESIGN.md §3 for the paper→simulation mapping.
+
+pub mod container;
+pub mod env;
+pub mod latency;
+pub mod sql;
+pub mod terminal;
+pub mod video;
+
+pub use container::{ContainerManager, ContainerParams, ForkBatchResult, ManagerConfig};
+pub use env::{SandboxFactory, SandboxSnapshot, ToolExecutionEnvironment};
+pub use sql::{SqlFactory, SqlSandbox};
+pub use terminal::{TerminalFactory, TerminalSandbox, TerminalTask};
+pub use video::{VideoFactory, VideoSandbox};

@@ -1,0 +1,878 @@
+//! SQL sandbox: a from-scratch mini SQL engine over in-memory tables.
+//!
+//! Substitution for SkyRL-SQL's cloud-hosted SQLite (DESIGN.md §3). The
+//! engine supports the read-only query surface the workload exercises:
+//!
+//! ```sql
+//! SELECT col, ... | COUNT(*) | SUM(col) | AVG(col)
+//! FROM table [JOIN table2 ON t1.col = t2.col]
+//! [WHERE col <op> value [AND ...]]
+//! [GROUP BY col] [ORDER BY col [DESC]] [LIMIT n]
+//! ```
+//!
+//! All tools are read-only ⇒ stateless (`will_mutate_state` = false), which
+//! is exactly the paper's §4.2 configuration (snapshotting disabled, prefix
+//! matching over an effectively flat graph). Latency charges the simulated
+//! 55.8 ms network RTT plus a per-row scan cost.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+use super::env::{SandboxFactory, SandboxSnapshot, ToolExecutionEnvironment};
+use super::latency::SqlLatency;
+use crate::cache::{ToolCall, ToolResult};
+use crate::util::rng::{fnv1a, Rng};
+
+/// A database value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Int(i64),
+    Float(f64),
+    Str(String),
+    Null,
+}
+
+impl Value {
+    fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Int(i) => Some(*i as f64),
+            Value::Float(f) => Some(*f),
+            _ => None,
+        }
+    }
+
+    fn cmp_key(&self) -> (u8, f64, &str) {
+        match self {
+            Value::Null => (0, 0.0, ""),
+            Value::Int(i) => (1, *i as f64, ""),
+            Value::Float(f) => (1, *f, ""),
+            Value::Str(s) => (2, 0.0, s),
+        }
+    }
+}
+
+impl fmt::Display for Value {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Value::Int(i) => write!(f, "{i}"),
+            Value::Float(x) => write!(f, "{x}"),
+            Value::Str(s) => write!(f, "{s}"),
+            Value::Null => write!(f, "NULL"),
+        }
+    }
+}
+
+/// A table: column names + rows.
+#[derive(Debug, Clone)]
+pub struct Table {
+    pub name: String,
+    pub columns: Vec<String>,
+    pub rows: Vec<Vec<Value>>,
+}
+
+impl Table {
+    pub fn col_index(&self, name: &str) -> Option<usize> {
+        // Accept both `col` and `table.col`.
+        let bare = name.rsplit('.').next().unwrap_or(name);
+        self.columns.iter().position(|c| c == bare || c == name)
+    }
+}
+
+/// An in-memory database.
+#[derive(Debug, Clone, Default)]
+pub struct Database {
+    pub tables: BTreeMap<String, Table>,
+}
+
+impl Database {
+    /// Synthesize a deterministic database for a task seed: a star schema
+    /// in the spirit of SkyRL-SQL's data-processing tasks.
+    pub fn synthesize(seed: u64) -> Database {
+        let mut rng = Rng::new(seed.wrapping_mul(0x9E37_79B9));
+        let mut db = Database::default();
+        let n_customers = 40 + rng.below(60) as usize;
+        let n_orders = 200 + rng.below(400) as usize;
+        let regions = ["north", "south", "east", "west"];
+        let species = ["pig", "cow", "hen", "goat", "sheep"];
+
+        let customers = Table {
+            name: "customers".into(),
+            columns: vec!["id".into(), "name".into(), "region".into(), "age".into()],
+            rows: (0..n_customers)
+                .map(|i| {
+                    vec![
+                        Value::Int(i as i64),
+                        Value::Str(format!("cust_{i}")),
+                        Value::Str(regions[rng.below(4) as usize].into()),
+                        Value::Int(18 + rng.below(60) as i64),
+                    ]
+                })
+                .collect(),
+        };
+        let orders = Table {
+            name: "orders".into(),
+            columns: vec![
+                "id".into(),
+                "customer_id".into(),
+                "amount".into(),
+                "status".into(),
+            ],
+            rows: (0..n_orders)
+                .map(|i| {
+                    vec![
+                        Value::Int(i as i64),
+                        Value::Int(rng.below(n_customers as u64) as i64),
+                        Value::Float((rng.below(10_000) as f64) / 100.0),
+                        Value::Str(
+                            ["open", "shipped", "returned"][rng.below(3) as usize].into(),
+                        ),
+                    ]
+                })
+                .collect(),
+        };
+        // The paper's running example table.
+        let animals = Table {
+            name: "animals".into(),
+            columns: vec!["id".into(), "species".into(), "age".into(), "name".into()],
+            rows: (0..(30 + rng.below(40)))
+                .map(|i| {
+                    vec![
+                        Value::Int(i as i64),
+                        Value::Str(species[rng.below(5) as usize].into()),
+                        Value::Int(1 + rng.below(15) as i64),
+                        Value::Str(format!("animal_{i}")),
+                    ]
+                })
+                .collect(),
+        };
+        db.tables.insert("customers".into(), customers);
+        db.tables.insert("orders".into(), orders);
+        db.tables.insert("animals".into(), animals);
+        db
+    }
+
+    /// Total rows scanned estimate for latency accounting.
+    fn scan_size(&self, table: &str) -> usize {
+        self.tables.get(table).map(|t| t.rows.len()).unwrap_or(0)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Query AST + parser
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone, PartialEq)]
+enum Selector {
+    Columns(Vec<String>),
+    CountStar,
+    Sum(String),
+    Avg(String),
+}
+
+#[derive(Debug, Clone, PartialEq)]
+enum CmpOp {
+    Eq,
+    Ne,
+    Lt,
+    Le,
+    Gt,
+    Ge,
+    Like,
+}
+
+#[derive(Debug, Clone)]
+struct Condition {
+    column: String,
+    op: CmpOp,
+    value: Value,
+}
+
+#[derive(Debug, Clone)]
+struct Query {
+    select: Selector,
+    from: String,
+    join: Option<(String, String, String)>, // (table2, left_col, right_col)
+    conditions: Vec<Condition>,
+    group_by: Option<String>,
+    order_by: Option<(String, bool)>, // (col, desc)
+    limit: Option<usize>,
+}
+
+/// SQL errors surface as tool output (the agent sees them, like a real DB).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SqlError(pub String);
+
+impl fmt::Display for SqlError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "SQL error: {}", self.0)
+    }
+}
+
+fn tokenize(sql: &str) -> Vec<String> {
+    let mut tokens = Vec::new();
+    let mut cur = String::new();
+    let mut chars = sql.chars().peekable();
+    while let Some(c) = chars.next() {
+        match c {
+            '\'' | '"' => {
+                // String literal (keep quotes to mark type).
+                let mut lit = String::from("'");
+                for c2 in chars.by_ref() {
+                    if c2 == c {
+                        break;
+                    }
+                    lit.push(c2);
+                }
+                lit.push('\'');
+                tokens.push(lit);
+            }
+            ' ' | '\t' | '\n' | ',' | ';' => {
+                if !cur.is_empty() {
+                    tokens.push(std::mem::take(&mut cur));
+                }
+                if c == ',' {
+                    tokens.push(",".into());
+                }
+            }
+            '(' | ')' => {
+                if !cur.is_empty() {
+                    tokens.push(std::mem::take(&mut cur));
+                }
+                tokens.push(c.to_string());
+            }
+            '<' | '>' | '=' | '!' => {
+                if !cur.is_empty() {
+                    tokens.push(std::mem::take(&mut cur));
+                }
+                let mut op = c.to_string();
+                if chars.peek() == Some(&'=') {
+                    op.push('=');
+                    chars.next();
+                }
+                tokens.push(op);
+            }
+            _ => cur.push(c),
+        }
+    }
+    if !cur.is_empty() {
+        tokens.push(cur);
+    }
+    tokens
+}
+
+fn parse_query(sql: &str) -> Result<Query, SqlError> {
+    let tokens = tokenize(sql);
+    let mut pos = 0;
+    let kw = |t: &str, want: &str| t.eq_ignore_ascii_case(want);
+    let next = |pos: &mut usize| -> Option<String> {
+        let t = tokens.get(*pos).cloned();
+        if t.is_some() {
+            *pos += 1;
+        }
+        t
+    };
+
+    let t = next(&mut pos).ok_or_else(|| SqlError("empty query".into()))?;
+    if !kw(&t, "SELECT") {
+        return Err(SqlError("only SELECT is supported".into()));
+    }
+
+    // Selector
+    let select = {
+        let first = next(&mut pos).ok_or_else(|| SqlError("missing selector".into()))?;
+        if kw(&first, "COUNT") {
+            expect(&tokens, &mut pos, "(")?;
+            expect(&tokens, &mut pos, "*")?;
+            expect(&tokens, &mut pos, ")")?;
+            Selector::CountStar
+        } else if kw(&first, "SUM") || kw(&first, "AVG") {
+            expect(&tokens, &mut pos, "(")?;
+            let col = next(&mut pos).ok_or_else(|| SqlError("missing agg column".into()))?;
+            expect(&tokens, &mut pos, ")")?;
+            if kw(&first, "SUM") {
+                Selector::Sum(col)
+            } else {
+                Selector::Avg(col)
+            }
+        } else if first == "*" {
+            Selector::Columns(vec!["*".into()])
+        } else {
+            let mut cols = vec![first];
+            while tokens.get(pos).map(|t| t == ",").unwrap_or(false) {
+                pos += 1;
+                cols.push(next(&mut pos).ok_or_else(|| SqlError("bad column list".into()))?);
+            }
+            Selector::Columns(cols)
+        }
+    };
+
+    let t = next(&mut pos).ok_or_else(|| SqlError("missing FROM".into()))?;
+    if !kw(&t, "FROM") {
+        return Err(SqlError(format!("expected FROM, got {t}")));
+    }
+    let from = next(&mut pos).ok_or_else(|| SqlError("missing table".into()))?;
+
+    let mut query = Query {
+        select,
+        from,
+        join: None,
+        conditions: Vec::new(),
+        group_by: None,
+        order_by: None,
+        limit: None,
+    };
+
+    while let Some(t) = next(&mut pos) {
+        if kw(&t, "JOIN") {
+            let table2 = next(&mut pos).ok_or_else(|| SqlError("missing join table".into()))?;
+            let on = next(&mut pos).ok_or_else(|| SqlError("missing ON".into()))?;
+            if !kw(&on, "ON") {
+                return Err(SqlError("expected ON".into()));
+            }
+            let left = next(&mut pos).ok_or_else(|| SqlError("missing join col".into()))?;
+            expect(&tokens, &mut pos, "=")?;
+            let right = next(&mut pos).ok_or_else(|| SqlError("missing join col".into()))?;
+            query.join = Some((table2, left, right));
+        } else if kw(&t, "WHERE") || kw(&t, "AND") {
+            let column = next(&mut pos).ok_or_else(|| SqlError("missing condition col".into()))?;
+            let op_t = next(&mut pos).ok_or_else(|| SqlError("missing operator".into()))?;
+            let op = match op_t.to_ascii_uppercase().as_str() {
+                "=" | "==" => CmpOp::Eq,
+                "!=" | "<>" => CmpOp::Ne,
+                "<" => CmpOp::Lt,
+                "<=" => CmpOp::Le,
+                ">" => CmpOp::Gt,
+                ">=" => CmpOp::Ge,
+                "LIKE" => CmpOp::Like,
+                o => return Err(SqlError(format!("bad operator {o}"))),
+            };
+            let raw = next(&mut pos).ok_or_else(|| SqlError("missing value".into()))?;
+            let value = parse_value(&raw);
+            query.conditions.push(Condition { column, op, value });
+        } else if kw(&t, "GROUP") {
+            let by = next(&mut pos).ok_or_else(|| SqlError("missing BY".into()))?;
+            if !kw(&by, "BY") {
+                return Err(SqlError("expected BY".into()));
+            }
+            query.group_by = Some(next(&mut pos).ok_or_else(|| SqlError("missing group col".into()))?);
+        } else if kw(&t, "ORDER") {
+            let by = next(&mut pos).ok_or_else(|| SqlError("missing BY".into()))?;
+            if !kw(&by, "BY") {
+                return Err(SqlError("expected BY".into()));
+            }
+            let col = next(&mut pos).ok_or_else(|| SqlError("missing order col".into()))?;
+            let desc = tokens
+                .get(pos)
+                .map(|t| kw(t, "DESC"))
+                .unwrap_or(false);
+            if desc {
+                pos += 1;
+            } else if tokens.get(pos).map(|t| kw(t, "ASC")).unwrap_or(false) {
+                pos += 1;
+            }
+            query.order_by = Some((col, desc));
+        } else if kw(&t, "LIMIT") {
+            let n = next(&mut pos).ok_or_else(|| SqlError("missing limit".into()))?;
+            query.limit =
+                Some(n.parse().map_err(|_| SqlError(format!("bad limit {n}")))?);
+        } else {
+            return Err(SqlError(format!("unexpected token {t}")));
+        }
+    }
+    Ok(query)
+}
+
+fn expect(tokens: &[String], pos: &mut usize, want: &str) -> Result<(), SqlError> {
+    match tokens.get(*pos) {
+        Some(t) if t == want || t.eq_ignore_ascii_case(want) => {
+            *pos += 1;
+            Ok(())
+        }
+        other => Err(SqlError(format!("expected {want}, got {other:?}"))),
+    }
+}
+
+fn parse_value(raw: &str) -> Value {
+    if let Some(s) = raw.strip_prefix('\'') {
+        return Value::Str(s.trim_end_matches('\'').to_string());
+    }
+    if let Ok(i) = raw.parse::<i64>() {
+        return Value::Int(i);
+    }
+    if let Ok(f) = raw.parse::<f64>() {
+        return Value::Float(f);
+    }
+    if raw.eq_ignore_ascii_case("NULL") {
+        return Value::Null;
+    }
+    Value::Str(raw.to_string())
+}
+
+// ---------------------------------------------------------------------------
+// Executor
+// ---------------------------------------------------------------------------
+
+/// Execute a query; returns (formatted dataframe output, rows scanned).
+pub fn execute_query(db: &Database, sql: &str) -> Result<(String, usize), SqlError> {
+    let q = parse_query(sql)?;
+    let base = db
+        .tables
+        .get(&q.from)
+        .ok_or_else(|| SqlError(format!("no such table: {}", q.from)))?;
+    let mut scanned = base.rows.len();
+
+    // Materialize the working relation (base or join product).
+    let (columns, mut rows): (Vec<String>, Vec<Vec<Value>>) = match &q.join {
+        None => (base.columns.clone(), base.rows.clone()),
+        Some((t2_name, left, right)) => {
+            let t2 = db
+                .tables
+                .get(t2_name)
+                .ok_or_else(|| SqlError(format!("no such table: {t2_name}")))?;
+            scanned += t2.rows.len();
+            let li = base
+                .col_index(left)
+                .or_else(|| t2.col_index(left).map(|_| usize::MAX))
+                .ok_or_else(|| SqlError(format!("no such column: {left}")))?;
+            // Normalize: left col belongs to base, right col to t2.
+            let (li, ri) = if li != usize::MAX {
+                (
+                    li,
+                    t2.col_index(right)
+                        .ok_or_else(|| SqlError(format!("no such column: {right}")))?,
+                )
+            } else {
+                (
+                    base.col_index(right)
+                        .ok_or_else(|| SqlError(format!("no such column: {right}")))?,
+                    t2.col_index(left)
+                        .ok_or_else(|| SqlError(format!("no such column: {left}")))?,
+                )
+            };
+            let mut cols = base.columns.clone();
+            cols.extend(t2.columns.iter().map(|c| format!("{t2_name}.{c}")));
+            let mut out = Vec::new();
+            for r1 in &base.rows {
+                for r2 in &t2.rows {
+                    if r1[li] == r2[ri] {
+                        let mut row = r1.clone();
+                        row.extend(r2.iter().cloned());
+                        out.push(row);
+                    }
+                }
+            }
+            (cols, out)
+        }
+    };
+
+    let col_index = |name: &str| -> Result<usize, SqlError> {
+        let bare = name.rsplit('.').next().unwrap_or(name);
+        columns
+            .iter()
+            .position(|c| c == name || c == bare || c.rsplit('.').next() == Some(bare))
+            .ok_or_else(|| SqlError(format!("no such column: {name}")))
+    };
+
+    // WHERE
+    for cond in &q.conditions {
+        let ci = col_index(&cond.column)?;
+        rows.retain(|r| matches_cond(&r[ci], &cond.op, &cond.value));
+    }
+
+    // GROUP BY (only meaningful with aggregates or a single group column).
+    if let Some(gcol) = &q.group_by {
+        let gi = col_index(gcol)?;
+        let mut groups: BTreeMap<String, Vec<Vec<Value>>> = BTreeMap::new();
+        for r in rows {
+            groups.entry(r[gi].to_string()).or_default().push(r);
+        }
+        let mut out_rows = Vec::new();
+        for (key, members) in groups {
+            let agg = aggregate(&q.select, &members, &col_index)?;
+            out_rows.push(vec![Value::Str(key), agg]);
+        }
+        let header = vec![gcol.clone(), selector_name(&q.select)];
+        return Ok((format_table(&header, &out_rows, q.limit), scanned));
+    }
+
+    // Aggregates without grouping.
+    match &q.select {
+        Selector::CountStar | Selector::Sum(_) | Selector::Avg(_) => {
+            let agg = aggregate(&q.select, &rows, &col_index)?;
+            let header = vec![selector_name(&q.select)];
+            return Ok((format_table(&header, &[vec![agg]], None), scanned));
+        }
+        Selector::Columns(_) => {}
+    }
+
+    // ORDER BY
+    if let Some((ocol, desc)) = &q.order_by {
+        let oi = col_index(ocol)?;
+        rows.sort_by(|a, b| {
+            let ka = a[oi].cmp_key();
+            let kb = b[oi].cmp_key();
+            ka.partial_cmp(&kb).unwrap_or(std::cmp::Ordering::Equal)
+        });
+        if *desc {
+            rows.reverse();
+        }
+    }
+
+    // Projection
+    let Selector::Columns(cols) = &q.select else { unreachable!() };
+    let (header, projected): (Vec<String>, Vec<Vec<Value>>) = if cols == &["*".to_string()] {
+        (columns.clone(), rows)
+    } else {
+        let idxs: Vec<usize> =
+            cols.iter().map(|c| col_index(c)).collect::<Result<_, _>>()?;
+        (
+            cols.clone(),
+            rows.into_iter()
+                .map(|r| idxs.iter().map(|&i| r[i].clone()).collect())
+                .collect(),
+        )
+    };
+    Ok((format_table(&header, &projected, q.limit), scanned))
+}
+
+fn matches_cond(v: &Value, op: &CmpOp, target: &Value) -> bool {
+    match op {
+        CmpOp::Eq => values_eq(v, target),
+        CmpOp::Ne => !values_eq(v, target),
+        CmpOp::Like => match (v, target) {
+            (Value::Str(s), Value::Str(pat)) => {
+                let pat = pat.trim_matches('%');
+                s.contains(pat)
+            }
+            _ => false,
+        },
+        _ => {
+            let (a, b) = match (v.as_f64(), target.as_f64()) {
+                (Some(a), Some(b)) => (a, b),
+                _ => return false,
+            };
+            match op {
+                CmpOp::Lt => a < b,
+                CmpOp::Le => a <= b,
+                CmpOp::Gt => a > b,
+                CmpOp::Ge => a >= b,
+                _ => unreachable!(),
+            }
+        }
+    }
+}
+
+fn values_eq(a: &Value, b: &Value) -> bool {
+    match (a.as_f64(), b.as_f64()) {
+        (Some(x), Some(y)) => x == y,
+        _ => a == b,
+    }
+}
+
+fn aggregate(
+    sel: &Selector,
+    rows: &[Vec<Value>],
+    col_index: &dyn Fn(&str) -> Result<usize, SqlError>,
+) -> Result<Value, SqlError> {
+    match sel {
+        Selector::CountStar | Selector::Columns(_) => Ok(Value::Int(rows.len() as i64)),
+        Selector::Sum(c) => {
+            let i = col_index(c)?;
+            Ok(Value::Float(rows.iter().filter_map(|r| r[i].as_f64()).sum()))
+        }
+        Selector::Avg(c) => {
+            let i = col_index(c)?;
+            let vals: Vec<f64> = rows.iter().filter_map(|r| r[i].as_f64()).collect();
+            if vals.is_empty() {
+                Ok(Value::Null)
+            } else {
+                Ok(Value::Float(vals.iter().sum::<f64>() / vals.len() as f64))
+            }
+        }
+    }
+}
+
+fn selector_name(sel: &Selector) -> String {
+    match sel {
+        Selector::CountStar => "COUNT(*)".into(),
+        Selector::Sum(c) => format!("SUM({c})"),
+        Selector::Avg(c) => format!("AVG({c})"),
+        Selector::Columns(_) => "rows".into(),
+    }
+}
+
+/// Render rows as the dataframe-style text the agent observes (truncated at
+/// 50 rows like the SkyRL-SQL prompt specifies).
+fn format_table(header: &[String], rows: &[Vec<Value>], limit: Option<usize>) -> String {
+    let cap = limit.unwrap_or(usize::MAX).min(50);
+    let mut out = String::new();
+    out.push_str(&header.join(" | "));
+    out.push('\n');
+    for (i, r) in rows.iter().enumerate() {
+        if i >= cap {
+            out.push_str(&format!("... ({} more rows truncated)\n", rows.len() - cap));
+            break;
+        }
+        let cells: Vec<String> = r.iter().map(|v| v.to_string()).collect();
+        out.push_str(&cells.join(" | "));
+        out.push('\n');
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Sandbox wrapper
+// ---------------------------------------------------------------------------
+
+/// SQL sandbox: a database instance + the simulated network.
+pub struct SqlSandbox {
+    seed: u64,
+    db: Database,
+    latency: SqlLatency,
+    running: bool,
+}
+
+impl SqlSandbox {
+    pub fn new(seed: u64) -> SqlSandbox {
+        SqlSandbox {
+            seed,
+            db: Database::synthesize(seed),
+            latency: SqlLatency::default(),
+            running: false,
+        }
+    }
+
+    pub fn database(&self) -> &Database {
+        &self.db
+    }
+}
+
+impl ToolExecutionEnvironment for SqlSandbox {
+    fn start(&mut self) -> f64 {
+        self.running = true;
+        0.05 // connection setup
+    }
+
+    fn stop(&mut self) -> f64 {
+        self.running = false;
+        0.01
+    }
+
+    fn execute(&mut self, call: &ToolCall) -> ToolResult {
+        let (output, scanned) = match execute_query(&self.db, &call.args) {
+            Ok((o, s)) => (o, s),
+            Err(e) => (e.to_string(), self.db.scan_size("customers")),
+        };
+        let exec_time = self.latency.query(self.seed, &call.args, scanned);
+        ToolResult { output, exec_time, api_tokens: 0 }
+    }
+
+    fn fork(&self) -> Box<dyn ToolExecutionEnvironment> {
+        Box::new(SqlSandbox {
+            seed: self.seed,
+            db: self.db.clone(),
+            latency: self.latency,
+            running: true,
+        })
+    }
+
+    fn snapshot(&self) -> SandboxSnapshot {
+        // Read-only workload: a snapshot is just the seed (the DB is
+        // reconstructible); costs are negligible, and the workload disables
+        // snapshotting anyway (§4.2).
+        SandboxSnapshot {
+            bytes: self.seed.to_le_bytes().to_vec(),
+            serialize_cost: 0.001,
+            restore_cost: 0.001,
+        }
+    }
+
+    fn will_mutate_state(&self, _call: &ToolCall) -> bool {
+        false // the workload is all SELECTs (§4.2)
+    }
+
+    fn state_fingerprint(&self) -> u64 {
+        // DB is immutable: fingerprint is the seed.
+        fnv1a(&self.seed.to_le_bytes())
+    }
+}
+
+/// Factory for SQL sandboxes.
+pub struct SqlFactory;
+
+impl SandboxFactory for SqlFactory {
+    fn create(&self, task_seed: u64) -> Box<dyn ToolExecutionEnvironment> {
+        let mut sb = SqlSandbox::new(task_seed);
+        sb.start();
+        Box::new(sb)
+    }
+
+    fn restore(&self, snap: &SandboxSnapshot) -> Box<dyn ToolExecutionEnvironment> {
+        let mut bytes = [0u8; 8];
+        bytes.copy_from_slice(&snap.bytes[..8]);
+        let mut sb = SqlSandbox::new(u64::from_le_bytes(bytes));
+        sb.start();
+        Box::new(sb)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn db() -> Database {
+        let mut db = Database::default();
+        db.tables.insert(
+            "animals".into(),
+            Table {
+                name: "animals".into(),
+                columns: vec!["id".into(), "species".into(), "age".into()],
+                rows: vec![
+                    vec![Value::Int(0), Value::Str("pig".into()), Value::Int(3)],
+                    vec![Value::Int(1), Value::Str("pig".into()), Value::Int(5)],
+                    vec![Value::Int(2), Value::Str("cow".into()), Value::Int(7)],
+                    vec![Value::Int(3), Value::Str("hen".into()), Value::Int(1)],
+                ],
+            },
+        );
+        db.tables.insert(
+            "farms".into(),
+            Table {
+                name: "farms".into(),
+                columns: vec!["animal_id".into(), "farm".into()],
+                rows: vec![
+                    vec![Value::Int(0), Value::Str("green".into())],
+                    vec![Value::Int(1), Value::Str("blue".into())],
+                    vec![Value::Int(2), Value::Str("green".into())],
+                ],
+            },
+        );
+        db
+    }
+
+    fn run(sql: &str) -> String {
+        execute_query(&db(), sql).unwrap().0
+    }
+
+    #[test]
+    fn count_star_with_where() {
+        // The paper's worked example: how many pigs are in the farm?
+        let out = run("SELECT COUNT(*) FROM animals WHERE species = 'pig'");
+        assert!(out.contains("COUNT(*)"));
+        assert!(out.lines().nth(1).unwrap().contains('2'), "{out}");
+    }
+
+    #[test]
+    fn select_star() {
+        let out = run("SELECT * FROM animals");
+        assert_eq!(out.lines().count(), 5); // header + 4 rows
+    }
+
+    #[test]
+    fn projection_and_order() {
+        let out = run("SELECT species FROM animals ORDER BY age DESC");
+        let rows: Vec<&str> = out.lines().skip(1).collect();
+        assert_eq!(rows, vec!["cow", "pig", "pig", "hen"]);
+    }
+
+    #[test]
+    fn numeric_comparisons() {
+        assert!(run("SELECT COUNT(*) FROM animals WHERE age > 3").contains('2'));
+        assert!(run("SELECT COUNT(*) FROM animals WHERE age >= 3").contains('3'));
+        assert!(run("SELECT COUNT(*) FROM animals WHERE age != 3").contains('3'));
+    }
+
+    #[test]
+    fn and_conditions() {
+        let out = run("SELECT COUNT(*) FROM animals WHERE species = 'pig' AND age > 4");
+        assert!(out.lines().nth(1).unwrap().contains('1'), "{out}");
+    }
+
+    #[test]
+    fn sum_and_avg() {
+        let out = run("SELECT SUM(age) FROM animals");
+        assert!(out.contains("16"), "{out}");
+        let out = run("SELECT AVG(age) FROM animals WHERE species = 'pig'");
+        assert!(out.contains('4'), "{out}");
+    }
+
+    #[test]
+    fn group_by_counts() {
+        let out = run("SELECT COUNT(*) FROM animals GROUP BY species");
+        // cow 1, hen 1, pig 2 — BTreeMap order is alphabetical.
+        let rows: Vec<&str> = out.lines().skip(1).collect();
+        assert_eq!(rows.len(), 3);
+        assert!(rows[2].starts_with("pig") && rows[2].contains('2'), "{out}");
+    }
+
+    #[test]
+    fn join_on_foreign_key() {
+        // animals 0 (pig) and 2 (cow) are on the green farm.
+        let out = run(
+            "SELECT species FROM animals JOIN farms ON id = animal_id WHERE farm = 'green'",
+        );
+        assert!(out.contains("pig") && out.contains("cow"), "{out}");
+        let count =
+            run("SELECT COUNT(*) FROM animals JOIN farms ON id = animal_id WHERE farm = 'green'");
+        assert!(count.lines().nth(1).unwrap().contains('2'), "{count}");
+    }
+
+    #[test]
+    fn limit_truncates() {
+        let out = run("SELECT * FROM animals LIMIT 2");
+        assert!(out.contains("2 more rows truncated"), "{out}");
+    }
+
+    #[test]
+    fn like_operator() {
+        let out = run("SELECT COUNT(*) FROM animals WHERE species LIKE '%ig%'");
+        assert!(out.lines().nth(1).unwrap().contains('2'), "{out}");
+    }
+
+    #[test]
+    fn errors_are_reported_not_panicked() {
+        let e = execute_query(&db(), "SELECT * FROM nope").unwrap_err();
+        assert!(e.0.contains("no such table"));
+        let e = execute_query(&db(), "DROP TABLE animals").unwrap_err();
+        assert!(e.0.contains("only SELECT"));
+        let e = execute_query(&db(), "SELECT zzz FROM animals").unwrap_err();
+        assert!(e.0.contains("no such column"));
+    }
+
+    #[test]
+    fn sandbox_is_stateless_and_deterministic() {
+        let mut a = SqlSandbox::new(7);
+        let mut b = SqlSandbox::new(7);
+        a.start();
+        b.start();
+        let call = ToolCall::stateless("sql", "SELECT COUNT(*) FROM customers");
+        let ra = a.execute(&call);
+        let rb = b.execute(&call);
+        assert_eq!(ra.output, rb.output);
+        assert_eq!(ra.exec_time, rb.exec_time);
+        assert!(!a.will_mutate_state(&call));
+        assert_eq!(a.state_fingerprint(), b.state_fingerprint());
+        // Executing queries doesn't change the fingerprint.
+        let fp = a.state_fingerprint();
+        a.execute(&ToolCall::stateless("sql", "SELECT * FROM orders"));
+        assert_eq!(a.state_fingerprint(), fp);
+    }
+
+    #[test]
+    fn synthesized_dbs_differ_by_seed() {
+        let a = Database::synthesize(1);
+        let b = Database::synthesize(2);
+        assert_ne!(
+            a.tables["orders"].rows.len(),
+            b.tables["orders"].rows.len()
+        );
+    }
+
+    #[test]
+    fn latency_is_msec_scale() {
+        let mut sb = SqlSandbox::new(3);
+        sb.start();
+        let r = sb.execute(&ToolCall::stateless("sql", "SELECT COUNT(*) FROM orders"));
+        assert!(r.exec_time > 0.03 && r.exec_time < 0.3, "{}", r.exec_time);
+    }
+}

@@ -1,0 +1,578 @@
+//! Terminal sandbox: an in-memory filesystem + shell-command interpreter.
+//!
+//! Substitution for terminal-bench's Docker containers (DESIGN.md §3): a
+//! stateful machine whose tool calls are shell commands. The interpreter
+//! covers the command families the paper's agents actually issue — file
+//! reads/writes, patching, package installs, builds, test runs — with
+//! realistic state-dependence: `cat foo.py` after `patch foo.py` returns
+//! the patched content (the paper's §1 staleness example), `make test`
+//! passes iff the task's bug has been fixed, builds fail before `pip
+//! install` of a required package, and so on.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use super::env::{SandboxFactory, SandboxSnapshot, ToolExecutionEnvironment};
+use super::latency::{ContainerCosts, TerminalLatency};
+use crate::cache::{ToolCall, ToolResult};
+use crate::util::json::{self, Json};
+use crate::util::rng::fnv1a;
+
+/// Task definition: initial files, the bug, and what fixes it.
+#[derive(Debug, Clone)]
+pub struct TerminalTask {
+    pub seed: u64,
+    /// Initial filesystem contents.
+    pub files: BTreeMap<String, String>,
+    /// File containing the bug.
+    pub buggy_file: String,
+    /// Broken line that must be replaced…
+    pub bug_pattern: String,
+    /// …with this fix for `make test` to pass.
+    pub fix_pattern: String,
+    /// Package that must be installed before `make` succeeds.
+    pub required_package: Option<String>,
+    /// Latency scale (easy = 1.0, medium ≈ 2.2).
+    pub latency_scale: f64,
+}
+
+impl TerminalTask {
+    /// Generate a synthetic debugging task from a seed (workloads module
+    /// builds the per-difficulty distributions on top of this).
+    pub fn generate(seed: u64, medium: bool) -> TerminalTask {
+        let mut files = BTreeMap::new();
+        let buggy_file = format!("src/module_{}.py", seed % 7);
+        files.insert(
+            "README.md".to_string(),
+            format!("# task-{seed}\nFix the failing test suite."),
+        );
+        files.insert(
+            "Makefile".to_string(),
+            "all: build\ntest: build\n\trun_tests".to_string(),
+        );
+        let bug_pattern = format!("return x - {}", seed % 9 + 1);
+        let fix_pattern = format!("return x + {}", seed % 9 + 1);
+        files.insert(
+            buggy_file.clone(),
+            format!("def compute(x):\n    {bug_pattern}\n"),
+        );
+        files.insert(
+            "tests/test_module.py".to_string(),
+            format!("from module import compute\nassert compute(1) == 1 + {}\n", seed % 9 + 1),
+        );
+        let required_package =
+            if medium || seed % 3 == 0 { Some(format!("libdep{}", seed % 5)) } else { None };
+        TerminalTask {
+            seed,
+            files,
+            buggy_file,
+            bug_pattern,
+            fix_pattern,
+            required_package,
+            latency_scale: if medium { 2.2 } else { 1.0 },
+        }
+    }
+}
+
+/// The mutable sandbox state (what snapshots serialize).
+#[derive(Debug, Clone, PartialEq)]
+struct State {
+    files: BTreeMap<String, String>,
+    env_vars: BTreeMap<String, String>,
+    cwd: String,
+    packages: BTreeSet<String>,
+    built: bool,
+    running: bool,
+}
+
+/// A terminal sandbox for one task.
+pub struct TerminalSandbox {
+    task: TerminalTask,
+    state: State,
+    latency: TerminalLatency,
+    costs: ContainerCosts,
+}
+
+impl TerminalSandbox {
+    pub fn new(task: TerminalTask) -> TerminalSandbox {
+        let state = State {
+            files: task.files.clone(),
+            env_vars: BTreeMap::new(),
+            cwd: "/app".to_string(),
+            packages: BTreeSet::new(),
+            built: false,
+            running: false,
+        };
+        let latency = TerminalLatency { scale: task.latency_scale };
+        TerminalSandbox { task, state, latency, costs: ContainerCosts::default() }
+    }
+
+    fn resolve(&self, path: &str) -> String {
+        if path.starts_with('/') {
+            path.trim_start_matches('/').to_string()
+        } else {
+            path.to_string()
+        }
+    }
+
+    /// Whether the bug has been fixed (drives `make test` and the reward).
+    pub fn tests_pass(&self) -> bool {
+        self.state
+            .files
+            .get(&self.task.buggy_file)
+            .map(|c| c.contains(&self.task.fix_pattern))
+            .unwrap_or(false)
+    }
+
+    pub fn is_built(&self) -> bool {
+        self.state.built
+    }
+
+    /// Interpret one shell command; returns (output, state_mutated).
+    fn interpret(&mut self, cmd: &str) -> (String, bool) {
+        let cmd = cmd.trim();
+        let (head, rest) = cmd.split_once(' ').unwrap_or((cmd, ""));
+        match head {
+            "ls" => {
+                let mut names: Vec<&str> =
+                    self.state.files.keys().map(|s| s.as_str()).collect();
+                names.sort();
+                (names.join("\n"), false)
+            }
+            "cat" => {
+                let path = self.resolve(rest.trim());
+                match self.state.files.get(&path) {
+                    Some(c) => (c.clone(), false),
+                    None => (format!("cat: {path}: No such file or directory"), false),
+                }
+            }
+            "grep" => {
+                let mut parts = rest.split_whitespace();
+                let pat = parts.next().unwrap_or("").trim_matches('"');
+                let path = self.resolve(parts.next().unwrap_or(""));
+                match self.state.files.get(&path) {
+                    Some(c) => (
+                        c.lines().filter(|l| l.contains(pat)).collect::<Vec<_>>().join("\n"),
+                        false,
+                    ),
+                    None => (format!("grep: {path}: No such file"), false),
+                }
+            }
+            "echo" => {
+                // echo text > file | echo text >> file | echo text
+                if let Some((text, path)) = rest.split_once(">>") {
+                    let path = self.resolve(path.trim());
+                    let text = text.trim().trim_matches('"').to_string();
+                    self.state
+                        .files
+                        .entry(path)
+                        .and_modify(|c| {
+                            c.push('\n');
+                            c.push_str(&text);
+                        })
+                        .or_insert(text);
+                    (String::new(), true)
+                } else if let Some((text, path)) = rest.split_once('>') {
+                    let path = self.resolve(path.trim());
+                    self.state
+                        .files
+                        .insert(path, text.trim().trim_matches('"').to_string());
+                    (String::new(), true)
+                } else {
+                    (rest.trim_matches('"').to_string(), false)
+                }
+            }
+            "rm" => {
+                let path = self.resolve(rest.trim().trim_start_matches("-f "));
+                let existed = self.state.files.remove(&path).is_some();
+                (
+                    if existed { String::new() } else { format!("rm: {path}: No such file") },
+                    existed,
+                )
+            }
+            "cp" => {
+                let mut parts = rest.split_whitespace();
+                let from = self.resolve(parts.next().unwrap_or(""));
+                let to = self.resolve(parts.next().unwrap_or(""));
+                match self.state.files.get(&from).cloned() {
+                    Some(c) => {
+                        self.state.files.insert(to, c);
+                        (String::new(), true)
+                    }
+                    None => (format!("cp: {from}: No such file"), false),
+                }
+            }
+            "cd" => {
+                self.state.cwd = rest.trim().to_string();
+                (String::new(), true)
+            }
+            "export" => {
+                if let Some((k, v)) = rest.split_once('=') {
+                    self.state.env_vars.insert(k.trim().to_string(), v.trim().to_string());
+                    (String::new(), true)
+                } else {
+                    ("export: bad assignment".to_string(), false)
+                }
+            }
+            "pwd" => (self.state.cwd.clone(), false),
+            "env" => (
+                self.state
+                    .env_vars
+                    .iter()
+                    .map(|(k, v)| format!("{k}={v}"))
+                    .collect::<Vec<_>>()
+                    .join("\n"),
+                false,
+            ),
+            // `patch <file> s/<old>/<new>/` — the agent's repair primitive.
+            "patch" => {
+                let mut parts = rest.splitn(2, ' ');
+                let path = self.resolve(parts.next().unwrap_or(""));
+                let spec = parts.next().unwrap_or("");
+                let Some(body) = spec.strip_prefix("s/") else {
+                    return ("patch: bad substitution spec".to_string(), false);
+                };
+                let mut halves = body.splitn(2, '/');
+                let old = halves.next().unwrap_or("");
+                let new = halves.next().unwrap_or("").trim_end_matches('/');
+                match self.state.files.get_mut(&path) {
+                    Some(content) if content.contains(old) => {
+                        *content = content.replace(old, new);
+                        self.state.built = false; // source changed
+                        (format!("patched {path}"), true)
+                    }
+                    Some(_) => (format!("patch: pattern not found in {path}"), false),
+                    None => (format!("patch: {path}: No such file"), false),
+                }
+            }
+            "pip" | "apt-get" => {
+                // pip install <pkg>
+                let pkg = rest.trim_start_matches("install").trim().to_string();
+                if pkg.is_empty() {
+                    ("usage: install <package>".to_string(), false)
+                } else {
+                    let new = self.state.packages.insert(pkg.clone());
+                    (format!("Successfully installed {pkg}"), new)
+                }
+            }
+            "make" => {
+                let target = rest.trim();
+                if target == "test" {
+                    if !self.state.built {
+                        return ("make: *** build first (run `make`)".to_string(), false);
+                    }
+                    if self.tests_pass() {
+                        ("ran 12 tests: 12 passed".to_string(), false)
+                    } else {
+                        (
+                            format!(
+                                "ran 12 tests: 11 passed, 1 FAILED\nAssertionError in {}",
+                                self.task.buggy_file
+                            ),
+                            false,
+                        )
+                    }
+                } else {
+                    // plain build; may require a package
+                    if let Some(dep) = &self.task.required_package {
+                        if !self.state.packages.contains(dep) {
+                            return (
+                                format!("make: *** missing dependency: {dep}"),
+                                false,
+                            );
+                        }
+                    }
+                    self.state.built = true;
+                    ("build OK".to_string(), true)
+                }
+            }
+            "python" | "sh" | "./run" => {
+                let out = if self.state.built {
+                    format!("exit 0 ({})", fnv1a(rest.as_bytes()) % 100)
+                } else {
+                    "ModuleNotFoundError: build artifacts missing".to_string()
+                };
+                (out, false)
+            }
+            "mkdir" | "touch" => {
+                let path = self.resolve(rest.trim().trim_start_matches("-p "));
+                self.state.files.entry(path).or_default();
+                (String::new(), true)
+            }
+            other => (format!("{other}: command not found"), false),
+        }
+    }
+
+    fn serialize_state(&self) -> Vec<u8> {
+        let files: Vec<Json> = self
+            .state
+            .files
+            .iter()
+            .map(|(k, v)| Json::obj(vec![("p", Json::str(k.clone())), ("c", Json::str(v.clone()))]))
+            .collect();
+        let envs: Vec<Json> = self
+            .state
+            .env_vars
+            .iter()
+            .map(|(k, v)| Json::obj(vec![("k", Json::str(k.clone())), ("v", Json::str(v.clone()))]))
+            .collect();
+        let pkgs: Vec<Json> =
+            self.state.packages.iter().map(|p| Json::str(p.clone())).collect();
+        Json::obj(vec![
+            ("seed", Json::num(self.task.seed as f64)),
+            ("medium", Json::Bool(self.task.latency_scale > 1.5)),
+            ("files", Json::Arr(files)),
+            ("env", Json::Arr(envs)),
+            ("pkgs", Json::Arr(pkgs)),
+            ("cwd", Json::str(self.state.cwd.clone())),
+            ("built", Json::Bool(self.state.built)),
+        ])
+        .to_string()
+        .into_bytes()
+    }
+
+    fn deserialize_state(bytes: &[u8]) -> Option<TerminalSandbox> {
+        let text = std::str::from_utf8(bytes).ok()?;
+        let v = json::parse(text).ok()?;
+        let seed = v.get("seed")?.as_u64()?;
+        let medium = v.get("medium")?.as_bool()?;
+        let task = TerminalTask::generate(seed, medium);
+        let mut sb = TerminalSandbox::new(task);
+        sb.state.files = v
+            .get("files")?
+            .as_arr()?
+            .iter()
+            .filter_map(|f| {
+                Some((f.get("p")?.as_str()?.to_string(), f.get("c")?.as_str()?.to_string()))
+            })
+            .collect();
+        sb.state.env_vars = v
+            .get("env")?
+            .as_arr()?
+            .iter()
+            .filter_map(|f| {
+                Some((f.get("k")?.as_str()?.to_string(), f.get("v")?.as_str()?.to_string()))
+            })
+            .collect();
+        sb.state.packages = v
+            .get("pkgs")?
+            .as_arr()?
+            .iter()
+            .filter_map(|p| p.as_str().map(String::from))
+            .collect();
+        sb.state.cwd = v.get("cwd")?.as_str()?.to_string();
+        sb.state.built = v.get("built")?.as_bool()?;
+        sb.state.running = true;
+        Some(sb)
+    }
+}
+
+impl ToolExecutionEnvironment for TerminalSandbox {
+    fn start(&mut self) -> f64 {
+        self.state.running = true;
+        self.costs.start
+    }
+
+    fn stop(&mut self) -> f64 {
+        self.state.running = false;
+        self.costs.stop
+    }
+
+    fn execute(&mut self, call: &ToolCall) -> ToolResult {
+        let (output, _mutated) = self.interpret(&call.args);
+        let exec_time = self.latency.sample(self.task.seed, &call.args);
+        ToolResult { output, exec_time, api_tokens: 0 }
+    }
+
+    fn fork(&self) -> Box<dyn ToolExecutionEnvironment> {
+        let mut forked = TerminalSandbox {
+            task: self.task.clone(),
+            state: self.state.clone(),
+            latency: self.latency,
+            costs: self.costs,
+        };
+        forked.state.running = true;
+        Box::new(forked)
+    }
+
+    fn snapshot(&self) -> SandboxSnapshot {
+        let bytes = self.serialize_state();
+        let kb = bytes.len() as f64 / 1024.0;
+        SandboxSnapshot {
+            serialize_cost: self.costs.commit_base + self.costs.commit_per_kb * kb,
+            restore_cost: self.costs.restore_base + self.costs.commit_per_kb * kb,
+            bytes,
+        }
+    }
+
+    fn will_mutate_state(&self, call: &ToolCall) -> bool {
+        // Conservative default for bash (Appendix B): everything mutates
+        // except a small allowlist of obvious reads.
+        let c = call.args.trim();
+        !(c.starts_with("ls") || c.starts_with("cat ") || c.starts_with("grep ")
+            || c.starts_with("pwd") || c.starts_with("env"))
+    }
+
+    fn state_fingerprint(&self) -> u64 {
+        let mut h = fnv1a(self.state.cwd.as_bytes());
+        for (k, v) in &self.state.files {
+            h ^= fnv1a(k.as_bytes()).rotate_left(1) ^ fnv1a(v.as_bytes());
+        }
+        for (k, v) in &self.state.env_vars {
+            h ^= fnv1a(k.as_bytes()).rotate_left(7) ^ fnv1a(v.as_bytes()).rotate_left(3);
+        }
+        for p in &self.state.packages {
+            h ^= fnv1a(p.as_bytes()).rotate_left(13);
+        }
+        h ^ (self.state.built as u64)
+    }
+}
+
+/// Factory for terminal sandboxes.
+pub struct TerminalFactory {
+    pub medium: bool,
+}
+
+impl SandboxFactory for TerminalFactory {
+    fn create(&self, task_seed: u64) -> Box<dyn ToolExecutionEnvironment> {
+        let mut sb = TerminalSandbox::new(TerminalTask::generate(task_seed, self.medium));
+        sb.start();
+        Box::new(sb)
+    }
+
+    fn restore(&self, snap: &SandboxSnapshot) -> Box<dyn ToolExecutionEnvironment> {
+        Box::new(
+            TerminalSandbox::deserialize_state(&snap.bytes)
+                .expect("corrupt terminal snapshot"),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sandbox() -> TerminalSandbox {
+        let mut sb = TerminalSandbox::new(TerminalTask::generate(1, false));
+        sb.start();
+        sb
+    }
+
+    fn run(sb: &mut TerminalSandbox, cmd: &str) -> String {
+        sb.execute(&ToolCall::new("bash", cmd)).output
+    }
+
+    #[test]
+    fn cat_reflects_patch_staleness_example() {
+        // The paper's §1 motivating example: cat → patch → cat must differ.
+        let mut sb = sandbox();
+        let f = sb.task.buggy_file.clone();
+        let before = run(&mut sb, &format!("cat {f}"));
+        let old = sb.task.bug_pattern.clone();
+        let new = sb.task.fix_pattern.clone();
+        run(&mut sb, &format!("patch {f} s/{old}/{new}/"));
+        let after = run(&mut sb, &format!("cat {f}"));
+        assert_ne!(before, after);
+        assert!(after.contains(&new));
+    }
+
+    #[test]
+    fn make_test_fails_until_fixed() {
+        let mut sb = sandbox();
+        // Install dep if needed, build, test: should fail.
+        if let Some(dep) = sb.task.required_package.clone() {
+            run(&mut sb, &format!("pip install {dep}"));
+        }
+        run(&mut sb, "make");
+        let out = run(&mut sb, "make test");
+        assert!(out.contains("FAILED"), "{out}");
+        // Apply the fix, rebuild, re-test: should pass.
+        let f = sb.task.buggy_file.clone();
+        let (old, new) = (sb.task.bug_pattern.clone(), sb.task.fix_pattern.clone());
+        run(&mut sb, &format!("patch {f} s/{old}/{new}/"));
+        run(&mut sb, "make");
+        let out = run(&mut sb, "make test");
+        assert!(out.contains("12 passed"), "{out}");
+        assert!(sb.tests_pass());
+    }
+
+    #[test]
+    fn build_requires_package() {
+        let mut sb = TerminalSandbox::new(TerminalTask::generate(3, true)); // medium ⇒ dep
+        sb.start();
+        let out = run(&mut sb, "make");
+        assert!(out.contains("missing dependency"), "{out}");
+        let dep = sb.task.required_package.clone().unwrap();
+        run(&mut sb, &format!("pip install {dep}"));
+        assert_eq!(run(&mut sb, "make"), "build OK");
+    }
+
+    #[test]
+    fn fork_is_deep_copy() {
+        let mut sb = sandbox();
+        run(&mut sb, "echo hello > note.txt");
+        let mut fork = sb.fork();
+        let fp_before = sb.state_fingerprint();
+        // Mutate the fork: original must be unaffected.
+        fork.execute(&ToolCall::new("bash", "echo bye > note.txt"));
+        assert_eq!(sb.state_fingerprint(), fp_before);
+        assert_ne!(fork.state_fingerprint(), fp_before);
+        assert_eq!(run(&mut sb, "cat note.txt"), "hello");
+    }
+
+    #[test]
+    fn snapshot_restore_roundtrip() {
+        let mut sb = sandbox();
+        run(&mut sb, "echo data > f.txt");
+        run(&mut sb, "export MODE=fast");
+        run(&mut sb, "pip install numpy");
+        let snap = sb.snapshot();
+        assert!(snap.serialize_cost > 0.0 && snap.restore_cost > 0.0);
+        let factory = TerminalFactory { medium: false };
+        let mut restored = factory.restore(&snap);
+        assert_eq!(restored.state_fingerprint(), sb.state_fingerprint());
+        assert_eq!(
+            restored.execute(&ToolCall::new("bash", "cat f.txt")).output,
+            "data"
+        );
+    }
+
+    #[test]
+    fn same_trajectory_same_fingerprint() {
+        let cmds = ["echo a > x", "pip install numpy", "make", "cat x"];
+        let mut a = sandbox();
+        let mut b = sandbox();
+        for c in cmds {
+            run(&mut a, c);
+            run(&mut b, c);
+        }
+        assert_eq!(a.state_fingerprint(), b.state_fingerprint());
+    }
+
+    #[test]
+    fn latency_deterministic_and_classed() {
+        let mut sb = sandbox();
+        let t1 = sb.execute(&ToolCall::new("bash", "make test")).exec_time;
+        let t2 = sb.execute(&ToolCall::new("bash", "make test")).exec_time;
+        assert_eq!(t1, t2);
+        let cheap = sb.execute(&ToolCall::new("bash", "cat README.md")).exec_time;
+        assert!(cheap < t1);
+    }
+
+    #[test]
+    fn will_mutate_state_annotations() {
+        let sb = sandbox();
+        assert!(!sb.will_mutate_state(&ToolCall::new("bash", "cat x")));
+        assert!(!sb.will_mutate_state(&ToolCall::new("bash", "ls")));
+        assert!(sb.will_mutate_state(&ToolCall::new("bash", "echo a > x")));
+        assert!(sb.will_mutate_state(&ToolCall::new("bash", "make")));
+    }
+
+    #[test]
+    fn unknown_command_reports_error_without_mutation() {
+        let mut sb = sandbox();
+        let fp = sb.state_fingerprint();
+        let out = run(&mut sb, "frobnicate --all");
+        assert!(out.contains("command not found"));
+        assert_eq!(sb.state_fingerprint(), fp);
+    }
+}

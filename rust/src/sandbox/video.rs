@@ -1,0 +1,325 @@
+//! Video sandbox: the EgoSchema / VideoAgent tool suite over a simulated
+//! media store.
+//!
+//! Substitution for the paper's L40S tool server + OpenAI API (DESIGN.md
+//! §3). Each task is a 3-minute video sliced into 2-second segments; the
+//! sandbox is "a folder on the server" (§4.3): `load_video` and
+//! `preprocess` mutate it (copy video + build memories), everything else is
+//! read-only and annotated stateless — exactly the Appendix B/D setup.
+//! Captions, localizations, and QA answers are generated deterministically
+//! from (task seed, arguments); the caption tool charges simulated OpenAI
+//! tokens, backing the §4.3 "3× token saving" accounting.
+
+use super::env::{SandboxFactory, SandboxSnapshot, ToolExecutionEnvironment};
+use super::latency::ego_tool_latency;
+use crate::cache::{ToolCall, ToolResult};
+use crate::util::rng::{fnv1a, Rng};
+
+/// Number of 2-second segments in a 3-minute video.
+pub const SEGMENTS: usize = 90;
+
+/// The EgoSchema tool names.
+pub const TOOLS: [&str; 6] = [
+    "load_video",
+    "preprocess",
+    "object_memory_querying",
+    "segment_localization",
+    "caption_retrieval",
+    "visual_question_answering",
+];
+
+/// Which tools mutate sandbox state (Appendix D).
+pub fn tool_mutates(tool: &str) -> bool {
+    matches!(tool, "load_video" | "preprocess")
+}
+
+/// The sandbox: per-task folder state.
+pub struct VideoSandbox {
+    seed: u64,
+    video_loaded: bool,
+    preprocessed: bool,
+    running: bool,
+}
+
+impl VideoSandbox {
+    pub fn new(seed: u64) -> VideoSandbox {
+        VideoSandbox { seed, video_loaded: false, preprocessed: false, running: false }
+    }
+
+    fn caption(&self, segment: usize) -> String {
+        let mut rng = Rng::new(self.seed ^ (segment as u64).wrapping_mul(0x517c_c1b7));
+        let actors = ["#C camera wearer", "#O person in red", "#O person at table"];
+        let verbs = ["picks up", "examines", "places", "cuts", "stirs", "washes"];
+        let objects = ["a knife", "a bowl", "vegetables", "a phone", "a cloth", "a pan"];
+        format!(
+            "seg{segment}: {} {} {}",
+            actors[rng.below(3) as usize],
+            verbs[rng.below(6) as usize],
+            objects[rng.below(6) as usize]
+        )
+    }
+
+    fn require_ready(&self) -> Option<String> {
+        if !self.video_loaded {
+            return Some("error: no video loaded — call load_video first".into());
+        }
+        if !self.preprocessed {
+            return Some("error: video not preprocessed — call preprocess first".into());
+        }
+        None
+    }
+
+    fn run_tool(&mut self, tool: &str, args: &str) -> (String, u64) {
+        match tool {
+            "load_video" => {
+                self.video_loaded = true;
+                (format!("loaded video '{args}' into sandbox"), 0)
+            }
+            "preprocess" => {
+                if !self.video_loaded {
+                    return ("error: no video loaded — call load_video first".into(), 0);
+                }
+                self.preprocessed = true;
+                (
+                    format!(
+                        "preprocessed: {SEGMENTS} segments captioned, object memory built"
+                    ),
+                    0,
+                )
+            }
+            "caption_retrieval" => {
+                if let Some(e) = self.require_ready() {
+                    return (e, 0);
+                }
+                // args: "(start, end)"
+                let nums: Vec<usize> = args
+                    .trim_matches(|c| c == '(' || c == ')')
+                    .split(',')
+                    .filter_map(|s| s.trim().parse().ok())
+                    .collect();
+                let (a, b) = match nums.as_slice() {
+                    [a, b] => (*a, (*b).min(a + 15).min(SEGMENTS)),
+                    _ => return ("error: caption_retrieval expects (start, end)".into(), 0),
+                };
+                let caps: Vec<String> = (a..b).map(|s| self.caption(s)).collect();
+                // OpenAI-generated captions: tokens ∝ caption count.
+                let tokens = 40 * caps.len() as u64 + 120;
+                (caps.join("\n"), tokens)
+            }
+            "segment_localization" => {
+                if let Some(e) = self.require_ready() {
+                    return (e, 0);
+                }
+                let mut rng = Rng::new(self.seed ^ fnv1a(args.as_bytes()));
+                let mut segs: Vec<usize> =
+                    (0..5).map(|_| rng.below(SEGMENTS as u64) as usize).collect();
+                segs.sort();
+                (format!("top-5 segments for '{args}': {segs:?}"), 0)
+            }
+            "visual_question_answering" => {
+                if let Some(e) = self.require_ready() {
+                    return (e, 0);
+                }
+                let mut rng = Rng::new(self.seed ^ fnv1a(args.as_bytes()).rotate_left(9));
+                let answers = ["yes", "no", "unclear", "partially"];
+                let seg: usize = args
+                    .rsplit(',')
+                    .next()
+                    .and_then(|s| s.trim().trim_end_matches(')').parse().ok())
+                    .unwrap_or(0);
+                (
+                    format!(
+                        "segment {seg}: {} | answer: {}",
+                        self.caption(seg.min(SEGMENTS - 1)),
+                        answers[rng.below(4) as usize]
+                    ),
+                    90,
+                )
+            }
+            "object_memory_querying" => {
+                if let Some(e) = self.require_ready() {
+                    return (e, 0);
+                }
+                let mut rng = Rng::new(self.seed ^ fnv1a(args.as_bytes()).rotate_left(21));
+                let n = 1 + rng.below(4);
+                let segs: Vec<usize> =
+                    (0..n).map(|_| rng.below(SEGMENTS as u64) as usize).collect();
+                // Internal agent loop with an OpenAI model: expensive.
+                (format!("object memory: '{args}' → appears in segments {segs:?}"), 600)
+            }
+            other => (format!("error: unknown tool {other}"), 0),
+        }
+    }
+}
+
+impl ToolExecutionEnvironment for VideoSandbox {
+    fn start(&mut self) -> f64 {
+        self.running = true;
+        0.02 // folder creation
+    }
+
+    fn stop(&mut self) -> f64 {
+        self.running = false;
+        0.01
+    }
+
+    fn execute(&mut self, call: &ToolCall) -> ToolResult {
+        let (output, api_tokens) = self.run_tool(&call.tool, &call.args);
+        let exec_time = ego_tool_latency(&call.tool)
+            .sample(self.seed, &format!("{}({})", call.tool, call.args));
+        ToolResult { output, exec_time, api_tokens }
+    }
+
+    fn fork(&self) -> Box<dyn ToolExecutionEnvironment> {
+        // "To fork a sandbox state, we make a copy of the task's folder."
+        Box::new(VideoSandbox {
+            seed: self.seed,
+            video_loaded: self.video_loaded,
+            preprocessed: self.preprocessed,
+            running: true,
+        })
+    }
+
+    fn snapshot(&self) -> SandboxSnapshot {
+        let mut bytes = self.seed.to_le_bytes().to_vec();
+        bytes.push(self.video_loaded as u8);
+        bytes.push(self.preprocessed as u8);
+        // Folder copies are fast filesystem operations (Appendix D).
+        SandboxSnapshot { bytes, serialize_cost: 0.05, restore_cost: 0.08 }
+    }
+
+    fn will_mutate_state(&self, call: &ToolCall) -> bool {
+        tool_mutates(&call.tool)
+    }
+
+    fn state_fingerprint(&self) -> u64 {
+        fnv1a(&self.seed.to_le_bytes())
+            ^ ((self.video_loaded as u64) << 1)
+            ^ ((self.preprocessed as u64) << 2)
+    }
+}
+
+/// Factory for video sandboxes.
+pub struct VideoFactory;
+
+impl SandboxFactory for VideoFactory {
+    fn create(&self, task_seed: u64) -> Box<dyn ToolExecutionEnvironment> {
+        let mut sb = VideoSandbox::new(task_seed);
+        sb.start();
+        Box::new(sb)
+    }
+
+    fn restore(&self, snap: &SandboxSnapshot) -> Box<dyn ToolExecutionEnvironment> {
+        let mut seed_bytes = [0u8; 8];
+        seed_bytes.copy_from_slice(&snap.bytes[..8]);
+        let mut sb = VideoSandbox::new(u64::from_le_bytes(seed_bytes));
+        sb.video_loaded = snap.bytes[8] != 0;
+        sb.preprocessed = snap.bytes[9] != 0;
+        sb.running = true;
+        Box::new(sb)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ready(seed: u64) -> VideoSandbox {
+        let mut sb = VideoSandbox::new(seed);
+        sb.start();
+        sb.execute(&ToolCall::new("load_video", "video_7.mp4"));
+        sb.execute(&ToolCall::new("preprocess", ""));
+        sb
+    }
+
+    #[test]
+    fn tools_require_load_and_preprocess() {
+        let mut sb = VideoSandbox::new(1);
+        sb.start();
+        let out = sb
+            .execute(&ToolCall::stateless("caption_retrieval", "(0, 10)"))
+            .output;
+        assert!(out.contains("load_video first"), "{out}");
+        sb.execute(&ToolCall::new("load_video", "v.mp4"));
+        let out = sb
+            .execute(&ToolCall::stateless("caption_retrieval", "(0, 10)"))
+            .output;
+        assert!(out.contains("preprocess first"), "{out}");
+    }
+
+    #[test]
+    fn captions_deterministic_per_seed() {
+        let mut a = ready(5);
+        let mut b = ready(5);
+        let call = ToolCall::stateless("caption_retrieval", "(0, 10)");
+        assert_eq!(a.execute(&call).output, b.execute(&call).output);
+        let mut c = ready(6);
+        assert_ne!(a.execute(&call).output, c.execute(&call).output);
+    }
+
+    #[test]
+    fn caption_retrieval_respects_15_cap() {
+        let mut sb = ready(2);
+        let out = sb
+            .execute(&ToolCall::stateless("caption_retrieval", "(0, 40)"))
+            .output;
+        assert_eq!(out.lines().count(), 15);
+    }
+
+    #[test]
+    fn caption_tool_charges_api_tokens() {
+        let mut sb = ready(3);
+        let r = sb.execute(&ToolCall::stateless("caption_retrieval", "(0, 10)"));
+        assert!(r.api_tokens > 0);
+        let r2 = sb.execute(&ToolCall::stateless("segment_localization", "cutting"));
+        assert_eq!(r2.api_tokens, 0);
+    }
+
+    #[test]
+    fn statefulness_annotations_match_appendix_d() {
+        let sb = VideoSandbox::new(1);
+        assert!(sb.will_mutate_state(&ToolCall::new("load_video", "v")));
+        assert!(sb.will_mutate_state(&ToolCall::new("preprocess", "")));
+        for t in [
+            "object_memory_querying",
+            "segment_localization",
+            "caption_retrieval",
+            "visual_question_answering",
+        ] {
+            assert!(!sb.will_mutate_state(&ToolCall::new(t, "x")), "{t}");
+        }
+    }
+
+    #[test]
+    fn object_memory_is_slowest_tool() {
+        let mut sb = ready(4);
+        let omq = sb
+            .execute(&ToolCall::stateless("object_memory_querying", "how many people"))
+            .exec_time;
+        let cap = sb
+            .execute(&ToolCall::stateless("caption_retrieval", "(0, 5)"))
+            .exec_time;
+        let load = sb.execute(&ToolCall::new("load_video", "v")).exec_time;
+        assert!(omq > cap, "omq {omq} cap {cap}");
+        assert!(load < cap, "load {load} cap {cap}");
+    }
+
+    #[test]
+    fn snapshot_restore_preserves_phase() {
+        let sb = ready(9);
+        let snap = sb.snapshot();
+        let restored = VideoFactory.restore(&snap);
+        assert_eq!(restored.state_fingerprint(), sb.state_fingerprint());
+    }
+
+    #[test]
+    fn fork_independent() {
+        let sb = ready(11);
+        let mut f = sb.fork();
+        assert_eq!(f.state_fingerprint(), sb.state_fingerprint());
+        // Forks answer queries identically (same folder copy).
+        let call = ToolCall::stateless("visual_question_answering", "('holding?', 5)");
+        let out = f.execute(&call).output;
+        assert!(out.contains("segment 5"), "{out}");
+    }
+}

@@ -1,0 +1,494 @@
+//! The TVCACHE server (§3.4, Figure 4): an HTTP service managing per-task
+//! TCGs and sandbox snapshots.
+//!
+//! Endpoints (mirroring the paper's API):
+//!
+//! * `POST /get`           — exact-match lookup (hit or plain miss)
+//! * `POST /prefix_match`  — full LPM lookup (hit, or miss + resume info)
+//! * `POST /put`           — insert an executed trajectory
+//! * `POST /release`       — decrement a node's sandbox refcount
+//! * `POST /snapshot`      — store a serialized sandbox for a node
+//! * `GET  /snapshot`      — fetch snapshot bytes (`?task=&id=`)
+//! * `GET  /stats`         — per-task cache statistics
+//! * `GET  /viz`           — TCG structure as JSON (Figure 9)
+//! * `GET  /ping`          — liveness
+//!
+//! State is sharded by task id (§4.5); a single process can host all shards
+//! (the Figure 8a experiment runs one process per shard).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::cache::{
+    EvictionPolicy, Lookup, LpmConfig, Shard, SnapshotPolicy, SnapshotRef, TaskCache, ToolResult,
+};
+use crate::cache::key::{trajectory_from_json, trajectory_to_json, ToolCall};
+use crate::sandbox::SandboxSnapshot;
+use crate::util::http::{Handler, Request, Response, Server};
+use crate::util::json::{self, Json};
+
+/// Server-side store of serialized sandboxes.
+#[derive(Default)]
+pub struct SnapshotStore {
+    next_id: AtomicU64,
+    snaps: Mutex<HashMap<u64, SandboxSnapshot>>,
+}
+
+impl SnapshotStore {
+    pub fn insert(&self, snap: SandboxSnapshot) -> u64 {
+        let id = self.next_id.fetch_add(1, Ordering::SeqCst) + 1;
+        self.snaps.lock().unwrap().insert(id, snap);
+        id
+    }
+
+    pub fn get(&self, id: u64) -> Option<SandboxSnapshot> {
+        self.snaps.lock().unwrap().get(&id).cloned()
+    }
+
+    pub fn remove(&self, id: u64) {
+        self.snaps.lock().unwrap().remove(&id);
+    }
+
+    pub fn len(&self) -> usize {
+        self.snaps.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.snaps.lock().unwrap().values().map(|s| s.size()).sum()
+    }
+}
+
+/// Shared server state.
+pub struct CacheService {
+    shard: Shard,
+    pub snapshots: Arc<SnapshotStore>,
+}
+
+impl CacheService {
+    pub fn new() -> Arc<CacheService> {
+        Arc::new(CacheService {
+            shard: Shard::new(TaskCache::with_defaults),
+            snapshots: Arc::new(SnapshotStore::default()),
+        })
+    }
+
+    pub fn with_factory(factory: fn() -> TaskCache) -> Arc<CacheService> {
+        Arc::new(CacheService {
+            shard: Shard::new(factory),
+            snapshots: Arc::new(SnapshotStore::default()),
+        })
+    }
+
+    pub fn task(&self, id: &str) -> Arc<TaskCache> {
+        self.shard.task(id)
+    }
+
+    fn handle(&self, req: &Request) -> Response {
+        match (req.method.as_str(), req.path.as_str()) {
+            ("GET", "/ping") => Response::text(200, "pong"),
+            ("POST", "/get") | ("POST", "/prefix_match") => self.lookup(req),
+            ("POST", "/put") => self.put(req),
+            ("POST", "/release") => self.release(req),
+            ("POST", "/snapshot") => self.store_snapshot(req),
+            ("GET", "/snapshot") => self.fetch_snapshot(req),
+            ("POST", "/warm") => self.set_warm(req),
+            ("GET", "/stats") => self.stats(req),
+            ("GET", "/viz") => self.viz(req),
+            _ => Response::not_found(),
+        }
+    }
+
+    fn parse_body(req: &Request) -> Result<Json, Response> {
+        json::parse(req.body_str())
+            .map_err(|e| Response::bad_request(format!("bad json: {e}")))
+    }
+
+    fn task_of(body: &Json) -> Result<&str, Response> {
+        body.get("task")
+            .and_then(|t| t.as_str())
+            .ok_or_else(|| Response::bad_request("missing task"))
+    }
+
+    fn lookup(&self, req: &Request) -> Response {
+        let body = match Self::parse_body(req) {
+            Ok(b) => b,
+            Err(r) => return r,
+        };
+        let task = match Self::task_of(&body) {
+            Ok(t) => t,
+            Err(r) => return r,
+        };
+        let Some(traj) = body.get("trajectory").and_then(trajectory_from_json) else {
+            return Response::bad_request("missing trajectory");
+        };
+        if traj.is_empty() {
+            return Response::bad_request("empty trajectory");
+        }
+        let cache = self.task(task);
+        let out = match cache.lookup(&traj) {
+            Lookup::Hit { node, result } => Json::obj(vec![
+                ("hit", Json::Bool(true)),
+                ("node", Json::num(node as f64)),
+                ("result", result.to_json()),
+            ]),
+            Lookup::Miss(m) => {
+                let mut fields = vec![
+                    ("hit", Json::Bool(false)),
+                    ("matched_node", Json::num(m.matched_node as f64)),
+                    ("matched_calls", Json::num(m.matched_calls as f64)),
+                ];
+                if let Some((node, snap, replay_from)) = m.resume {
+                    fields.push((
+                        "resume",
+                        Json::obj(vec![
+                            ("node", Json::num(node as f64)),
+                            ("snap_id", Json::num(snap.id as f64)),
+                            ("restore_cost", Json::num(snap.restore_cost)),
+                            ("replay_from", Json::num(replay_from as f64)),
+                        ]),
+                    ));
+                }
+                Json::Obj(fields.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+            }
+        };
+        Response::json(out.to_string())
+    }
+
+    fn put(&self, req: &Request) -> Response {
+        let body = match Self::parse_body(req) {
+            Ok(b) => b,
+            Err(r) => return r,
+        };
+        let task = match Self::task_of(&body) {
+            Ok(t) => t,
+            Err(r) => return r,
+        };
+        let Some(entries) = body.get("trajectory").and_then(|t| t.as_arr()) else {
+            return Response::bad_request("missing trajectory");
+        };
+        let mut traj = Vec::with_capacity(entries.len());
+        for e in entries {
+            let (Some(call), Some(result)) = (
+                e.get("call").and_then(ToolCall::from_json),
+                e.get("result").and_then(ToolResult::from_json),
+            ) else {
+                return Response::bad_request("bad trajectory entry");
+            };
+            traj.push((call, result));
+        }
+        let node = self.task(task).record_trajectory(&traj);
+        Response::json(Json::obj(vec![("node", Json::num(node as f64))]).to_string())
+    }
+
+    fn release(&self, req: &Request) -> Response {
+        let body = match Self::parse_body(req) {
+            Ok(b) => b,
+            Err(r) => return r,
+        };
+        let task = match Self::task_of(&body) {
+            Ok(t) => t,
+            Err(r) => return r,
+        };
+        let Some(node) = body.get("node").and_then(|n| n.as_u64()) else {
+            return Response::bad_request("missing node");
+        };
+        self.task(task).release(node as usize);
+        Response::json("{}".to_string())
+    }
+
+    fn store_snapshot(&self, req: &Request) -> Response {
+        let body = match Self::parse_body(req) {
+            Ok(b) => b,
+            Err(r) => return r,
+        };
+        let task = match Self::task_of(&body) {
+            Ok(t) => t,
+            Err(r) => return r,
+        };
+        let (Some(node), Some(hex), Some(ser), Some(rest)) = (
+            body.get("node").and_then(|n| n.as_u64()),
+            body.get("bytes_hex").and_then(|b| b.as_str()),
+            body.get("serialize_cost").and_then(|c| c.as_f64()),
+            body.get("restore_cost").and_then(|c| c.as_f64()),
+        ) else {
+            return Response::bad_request("missing snapshot fields");
+        };
+        let Some(bytes) = hex_decode(hex) else {
+            return Response::bad_request("bad hex");
+        };
+        let snap = SandboxSnapshot { bytes, serialize_cost: ser, restore_cost: rest };
+        let size = snap.size();
+        let id = self.snapshots.insert(snap);
+        let freed = self.task(task).attach_snapshot(
+            node as usize,
+            SnapshotRef { id, bytes: size, restore_cost: rest },
+        );
+        for f in freed {
+            self.snapshots.remove(f.id);
+        }
+        Response::json(Json::obj(vec![("id", Json::num(id as f64))]).to_string())
+    }
+
+    fn fetch_snapshot(&self, req: &Request) -> Response {
+        let Some(id) = req.query.get("id").and_then(|s| s.parse::<u64>().ok()) else {
+            return Response::bad_request("missing id");
+        };
+        match self.snapshots.get(id) {
+            Some(s) => Response::json(
+                Json::obj(vec![
+                    ("bytes_hex", Json::str(hex_encode(&s.bytes))),
+                    ("serialize_cost", Json::num(s.serialize_cost)),
+                    ("restore_cost", Json::num(s.restore_cost)),
+                ])
+                .to_string(),
+            ),
+            None => Response::not_found(),
+        }
+    }
+
+    fn set_warm(&self, req: &Request) -> Response {
+        let body = match Self::parse_body(req) {
+            Ok(b) => b,
+            Err(r) => return r,
+        };
+        let task = match Self::task_of(&body) {
+            Ok(t) => t,
+            Err(r) => return r,
+        };
+        let (Some(node), Some(warm)) = (
+            body.get("node").and_then(|n| n.as_u64()),
+            body.get("warm").and_then(|w| w.as_bool()),
+        ) else {
+            return Response::bad_request("missing node/warm");
+        };
+        self.task(task).set_warm_fork(node as usize, warm);
+        Response::json("{}".to_string())
+    }
+
+    fn stats(&self, req: &Request) -> Response {
+        match req.query.get("task") {
+            Some(task) => Response::json(self.task(task).stats().to_json().to_string()),
+            None => {
+                // Aggregate across tasks.
+                let mut lookups = 0u64;
+                let mut hits = 0u64;
+                for id in self.shard.task_ids() {
+                    let s = self.task(&id).stats();
+                    lookups += s.lookups;
+                    hits += s.hits;
+                }
+                Response::json(
+                    Json::obj(vec![
+                        ("tasks", Json::num(self.shard.len() as f64)),
+                        ("lookups", Json::num(lookups as f64)),
+                        ("hits", Json::num(hits as f64)),
+                        ("snapshot_bytes", Json::num(self.snapshots.total_bytes() as f64)),
+                    ])
+                    .to_string(),
+                )
+            }
+        }
+    }
+
+    fn viz(&self, req: &Request) -> Response {
+        match req.query.get("task") {
+            Some(task) => Response::json(self.task(task).viz_json().to_string()),
+            None => Response::bad_request("missing task"),
+        }
+    }
+}
+
+/// Build a `TaskCache` factory with custom policies (used by benches).
+pub fn cache_factory_default() -> TaskCache {
+    TaskCache::new(LpmConfig::default(), SnapshotPolicy::default(), EvictionPolicy::default())
+}
+
+/// Start a TVCACHE server on `addr`; returns the HTTP server handle and the
+/// shared service (for white-box assertions in tests).
+pub fn serve(addr: &str, workers: usize) -> std::io::Result<(Server, Arc<CacheService>)> {
+    let service = CacheService::new();
+    let svc = Arc::clone(&service);
+    let handler: Handler = Arc::new(move |req: &Request| svc.handle(req));
+    let server = Server::bind(addr, workers, handler)?;
+    Ok((server, service))
+}
+
+pub fn hex_encode(bytes: &[u8]) -> String {
+    let mut s = String::with_capacity(bytes.len() * 2);
+    for b in bytes {
+        s.push_str(&format!("{b:02x}"));
+    }
+    s
+}
+
+pub fn hex_decode(s: &str) -> Option<Vec<u8>> {
+    if s.len() % 2 != 0 {
+        return None;
+    }
+    (0..s.len())
+        .step_by(2)
+        .map(|i| u8::from_str_radix(&s[i..i + 2], 16).ok())
+        .collect()
+}
+
+/// Serialize a lookup request body (shared with the client).
+pub fn lookup_body(task: &str, traj: &[ToolCall]) -> String {
+    Json::obj(vec![
+        ("task", Json::str(task)),
+        ("trajectory", trajectory_to_json(traj)),
+    ])
+    .to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::http::HttpClient;
+
+    fn call(s: &str) -> ToolCall {
+        ToolCall::new("bash", s)
+    }
+
+    fn put_body(task: &str, traj: &[(&str, &str)]) -> String {
+        let entries: Vec<Json> = traj
+            .iter()
+            .map(|(c, r)| {
+                Json::obj(vec![
+                    ("call", call(c).to_json()),
+                    ("result", ToolResult::new(*r, 1.0).to_json()),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("task", Json::str(task)),
+            ("trajectory", Json::Arr(entries)),
+        ])
+        .to_string()
+    }
+
+    #[test]
+    fn http_roundtrip_put_then_hit() {
+        let (server, _svc) = serve("127.0.0.1:0", 2).unwrap();
+        let mut c = HttpClient::connect(server.addr());
+
+        let (status, body) = c
+            .post("/prefix_match", lookup_body("t1", &[call("a")]).as_bytes())
+            .unwrap();
+        assert_eq!(status, 200);
+        let v = json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+        assert_eq!(v.get("hit").unwrap().as_bool(), Some(false));
+
+        let (status, _) = c
+            .post("/put", put_body("t1", &[("a", "ra"), ("b", "rb")]).as_bytes())
+            .unwrap();
+        assert_eq!(status, 200);
+
+        let (_, body) = c
+            .post("/get", lookup_body("t1", &[call("a"), call("b")]).as_bytes())
+            .unwrap();
+        let v = json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+        assert_eq!(v.get("hit").unwrap().as_bool(), Some(true));
+        assert_eq!(
+            v.get("result").unwrap().get("output").unwrap().as_str(),
+            Some("rb")
+        );
+    }
+
+    #[test]
+    fn tasks_are_isolated() {
+        let (server, _svc) = serve("127.0.0.1:0", 2).unwrap();
+        let mut c = HttpClient::connect(server.addr());
+        c.post("/put", put_body("taskA", &[("x", "rx")]).as_bytes()).unwrap();
+        let (_, body) = c
+            .post("/get", lookup_body("taskB", &[call("x")]).as_bytes())
+            .unwrap();
+        let v = json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+        assert_eq!(v.get("hit").unwrap().as_bool(), Some(false));
+    }
+
+    #[test]
+    fn snapshot_store_and_fetch_over_http() {
+        let (server, svc) = serve("127.0.0.1:0", 2).unwrap();
+        let mut c = HttpClient::connect(server.addr());
+        c.post("/put", put_body("t", &[("a", "ra")]).as_bytes()).unwrap();
+        // Node 1 is "a" (first insert).
+        let snap_body = Json::obj(vec![
+            ("task", Json::str("t")),
+            ("node", Json::num(1.0)),
+            ("bytes_hex", Json::str(hex_encode(b"state-bytes"))),
+            ("serialize_cost", Json::num(0.5)),
+            ("restore_cost", Json::num(0.7)),
+        ])
+        .to_string();
+        let (status, body) = c.post("/snapshot", snap_body.as_bytes()).unwrap();
+        assert_eq!(status, 200);
+        let id = json::parse(std::str::from_utf8(&body).unwrap())
+            .unwrap()
+            .get("id")
+            .unwrap()
+            .as_u64()
+            .unwrap();
+        assert_eq!(svc.snapshots.len(), 1);
+
+        let (status, body) = c.get(&format!("/snapshot?id={id}")).unwrap();
+        assert_eq!(status, 200);
+        let v = json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+        assert_eq!(
+            hex_decode(v.get("bytes_hex").unwrap().as_str().unwrap()).unwrap(),
+            b"state-bytes"
+        );
+
+        // A subsequent prefix_match miss on a longer trajectory must offer
+        // the snapshot as the resume point.
+        let (_, body) = c
+            .post(
+                "/prefix_match",
+                lookup_body("t", &[call("a"), call("new")]).as_bytes(),
+            )
+            .unwrap();
+        let v = json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+        assert_eq!(v.get("hit").unwrap().as_bool(), Some(false));
+        let resume = v.get("resume").expect("resume offered");
+        assert_eq!(resume.get("snap_id").unwrap().as_u64(), Some(id));
+        assert_eq!(resume.get("replay_from").unwrap().as_u64(), Some(1));
+    }
+
+    #[test]
+    fn stats_and_viz_endpoints() {
+        let (server, _svc) = serve("127.0.0.1:0", 2).unwrap();
+        let mut c = HttpClient::connect(server.addr());
+        c.post("/put", put_body("t", &[("a", "ra")]).as_bytes()).unwrap();
+        c.post("/get", lookup_body("t", &[call("a")]).as_bytes()).unwrap();
+        let (_, body) = c.get("/stats?task=t").unwrap();
+        let v = json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+        assert_eq!(v.get("hits").unwrap().as_u64(), Some(1));
+        let (_, body) = c.get("/viz?task=t").unwrap();
+        let v = json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+        assert_eq!(v.get("nodes").unwrap().as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn malformed_requests_rejected() {
+        let (server, _svc) = serve("127.0.0.1:0", 2).unwrap();
+        let mut c = HttpClient::connect(server.addr());
+        let (status, _) = c.post("/get", b"not json").unwrap();
+        assert_eq!(status, 400);
+        let (status, _) = c.post("/get", b"{}").unwrap();
+        assert_eq!(status, 400);
+        let (status, _) = c.get("/nope").unwrap();
+        assert_eq!(status, 404);
+    }
+
+    #[test]
+    fn hex_roundtrip() {
+        let data: Vec<u8> = (0..=255).collect();
+        assert_eq!(hex_decode(&hex_encode(&data)).unwrap(), data);
+        assert!(hex_decode("abc").is_none());
+        assert!(hex_decode("zz").is_none());
+    }
+}

@@ -1,0 +1,115 @@
+//! Virtual/real time behind one trait.
+//!
+//! All latency-sensitive code paths take a `&dyn Clock`; experiments choose
+//! [`SimClock`] (time advances only via `advance`) while the server
+//! microbenchmarks (Figure 8) use [`RealClock`].
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+/// Seconds since an arbitrary epoch.
+pub trait Clock: Send + Sync {
+    fn now(&self) -> f64;
+    /// Advance time by `dt` seconds (sleeps on a real clock).
+    fn advance(&self, dt: f64);
+    /// True if advancing is free (virtual time).
+    fn is_virtual(&self) -> bool;
+}
+
+/// Wall-clock time; `advance` sleeps.
+pub struct RealClock {
+    start: Instant,
+}
+
+impl RealClock {
+    pub fn new() -> Self {
+        RealClock { start: Instant::now() }
+    }
+}
+
+impl Default for RealClock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Clock for RealClock {
+    fn now(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    fn advance(&self, dt: f64) {
+        if dt > 0.0 {
+            std::thread::sleep(std::time::Duration::from_secs_f64(dt));
+        }
+    }
+
+    fn is_virtual(&self) -> bool {
+        false
+    }
+}
+
+/// Virtual time stored as integer nanoseconds for atomic, monotonic updates.
+pub struct SimClock {
+    nanos: AtomicU64,
+}
+
+impl SimClock {
+    pub fn new() -> Self {
+        SimClock { nanos: AtomicU64::new(0) }
+    }
+
+    /// Set absolute time (used by the DES loop when dequeuing events).
+    pub fn set(&self, t: f64) {
+        let n = (t.max(0.0) * 1e9) as u64;
+        // Monotonic: never move backwards.
+        self.nanos.fetch_max(n, Ordering::SeqCst);
+    }
+}
+
+impl Default for SimClock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Clock for SimClock {
+    fn now(&self) -> f64 {
+        self.nanos.load(Ordering::SeqCst) as f64 * 1e-9
+    }
+
+    fn advance(&self, dt: f64) {
+        let n = (dt.max(0.0) * 1e9) as u64;
+        self.nanos.fetch_add(n, Ordering::SeqCst);
+    }
+
+    fn is_virtual(&self) -> bool {
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sim_clock_advances() {
+        let c = SimClock::new();
+        assert_eq!(c.now(), 0.0);
+        c.advance(1.5);
+        assert!((c.now() - 1.5).abs() < 1e-9);
+        c.set(10.0);
+        assert!((c.now() - 10.0).abs() < 1e-9);
+        c.set(5.0); // monotonic: no-op
+        assert!((c.now() - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn real_clock_monotonic() {
+        let c = RealClock::new();
+        let a = c.now();
+        c.advance(0.01);
+        let b = c.now();
+        assert!(b >= a + 0.009);
+    }
+}

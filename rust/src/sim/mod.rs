@@ -1,0 +1,15 @@
+//! Simulation substrate: virtual time + a discrete-event scheduler.
+//!
+//! The paper's workload experiments run hundreds of rollouts whose tool
+//! calls take seconds to minutes on 128-core servers. On this testbed we
+//! replay those experiments under a virtual clock: tool latencies are drawn
+//! from paper-calibrated distributions and *advance simulated time* instead
+//! of sleeping, so a full post-training run regenerates in milliseconds while
+//! preserving the interleaving-dependent cache dynamics (who populates the
+//! TCG first, which parallel rollout hits, when eviction fires).
+
+pub mod clock;
+pub mod des;
+
+pub use clock::{Clock, RealClock, SimClock};
+pub use des::{EventQueue, ProcessOutcome};

@@ -1,0 +1,105 @@
+//! GRPO: group-relative advantage computation and trajectory packing for
+//! the PJRT train-step artifact (Layer 2's `agent_train.hlo.txt`).
+//!
+//! GRPO (Shao et al., 2024) normalizes rewards within the group of rollouts
+//! generated for the same prompt: `A_i = (r_i - mean(r)) / (std(r) + ε)`.
+//! One policy-gradient step per batch makes the importance ratio 1, so the
+//! REINFORCE-style loss in `python/compile/model.py::pg_loss` is exact.
+
+/// Group-relative advantages.
+pub fn advantages(rewards: &[f64]) -> Vec<f64> {
+    let n = rewards.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let mean = rewards.iter().sum::<f64>() / n as f64;
+    let var = rewards.iter().map(|r| (r - mean) * (r - mean)).sum::<f64>() / n as f64;
+    let std = var.sqrt();
+    rewards.iter().map(|r| (r - mean) / (std + 1e-6)).collect()
+}
+
+/// A token batch ready for the train-step artifact.
+#[derive(Debug, Clone)]
+pub struct PackedBatch {
+    /// `[batch * seq]` row-major token ids (BOS + actions, padded with 0).
+    pub tokens: Vec<i32>,
+    /// `[batch * seq]` loss mask: position `t` gates prediction of `t+1`.
+    pub mask: Vec<f32>,
+    /// `[batch]` per-rollout advantages.
+    pub adv: Vec<f32>,
+    pub batch: usize,
+    pub seq: usize,
+}
+
+/// Pack rollout token sequences (each starting with BOS) into fixed-shape
+/// tensors. Sequences longer than `seq` are truncated; the mask covers
+/// positions `0..len-1` (each predicts the next emitted token).
+pub fn pack_batch(rollouts: &[Vec<i32>], advantages_: &[f64], batch: usize, seq: usize) -> PackedBatch {
+    assert_eq!(rollouts.len(), advantages_.len());
+    let mut tokens = vec![0i32; batch * seq];
+    let mut mask = vec![0f32; batch * seq];
+    let mut adv = vec![0f32; batch];
+    for (b, (toks, a)) in rollouts.iter().zip(advantages_).enumerate().take(batch) {
+        let len = toks.len().min(seq);
+        tokens[b * seq..b * seq + len].copy_from_slice(&toks[..len]);
+        // Position t predicts token t+1 ⇒ mask positions 0..len-1.
+        for t in 0..len.saturating_sub(1) {
+            mask[b * seq + t] = 1.0;
+        }
+        adv[b] = *a as f32;
+    }
+    PackedBatch { tokens, mask, adv, batch, seq }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn advantages_zero_mean() {
+        let a = advantages(&[1.0, 0.0, 0.0, 1.0]);
+        let sum: f64 = a.iter().sum();
+        assert!(sum.abs() < 1e-9);
+        assert!(a[0] > 0.0 && a[1] < 0.0);
+        assert_eq!(a[0], a[3]);
+    }
+
+    #[test]
+    fn advantages_uniform_rewards_are_zero() {
+        // All-same rewards give zero signal (the GRPO degenerate case).
+        let a = advantages(&[1.0, 1.0, 1.0]);
+        assert!(a.iter().all(|x| x.abs() < 1e-3), "{a:?}");
+    }
+
+    #[test]
+    fn advantages_unit_scale() {
+        let a = advantages(&[2.0, 0.0]);
+        assert!((a[0] - 1.0).abs() < 1e-3, "{a:?}");
+        assert!((a[1] + 1.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn pack_shapes_and_padding() {
+        let rollouts = vec![vec![0, 7, 8, 1], vec![0, 9, 1]];
+        let adv = advantages(&[1.0, 0.0]);
+        let p = pack_batch(&rollouts, &adv, 4, 6);
+        assert_eq!(p.tokens.len(), 24);
+        assert_eq!(p.mask.len(), 24);
+        assert_eq!(p.adv.len(), 4);
+        // Rollout 0: tokens 0,7,8,1 then padding.
+        assert_eq!(&p.tokens[0..6], &[0, 7, 8, 1, 0, 0]);
+        // Mask covers positions 0..3 (predicting 7, 8, 1).
+        assert_eq!(&p.mask[0..6], &[1.0, 1.0, 1.0, 0.0, 0.0, 0.0]);
+        // Unused batch rows fully masked out.
+        assert!(p.mask[12..].iter().all(|&m| m == 0.0));
+        assert_eq!(p.adv[2], 0.0);
+    }
+
+    #[test]
+    fn pack_truncates_long_sequences() {
+        let rollouts = vec![vec![0; 100]];
+        let p = pack_batch(&rollouts, &[1.0], 1, 8);
+        assert_eq!(p.tokens.len(), 8);
+        assert_eq!(p.mask.iter().filter(|&&m| m > 0.0).count(), 7);
+    }
+}

@@ -1,0 +1,16 @@
+//! Post-training drivers.
+//!
+//! * [`sim_loop`] — the discrete-event simulated RL post-training loop used
+//!   by the paper-figure benches: scripted agents, paper-calibrated
+//!   latencies, virtual time.
+//! * [`grpo`] — group-relative advantage computation (GRPO, Appendix C) and
+//!   the trajectory→tensor packing consumed by the PJRT train-step artifact
+//!   (the real policy-learning loop in `examples/e2e_terminal_rl.rs`).
+
+pub mod grpo;
+pub mod sim_loop;
+
+pub use grpo::{advantages, pack_batch, PackedBatch};
+pub use sim_loop::{
+    run_workload, BatchMetrics, CallSample, RolloutMetrics, RunMetrics, SimOptions,
+};

@@ -1,0 +1,371 @@
+//! The simulated RL post-training loop (virtual clock + DES).
+//!
+//! Reproduces the paper's measurement setup: per task, `R` parallel rollouts
+//! interleave reasoning-token generation (charged at the model's tok/s) with
+//! tool calls through the `ToolCallExecutor`. The discrete-event scheduler
+//! interleaves rollouts in virtual time, so cache population order — and
+//! therefore who hits and who misses — emerges from the same dynamics as on
+//! real hardware. Caches persist across epochs (§3.1: the TCG is "reused
+//! across post-training iterations"), which produces the rising hit-rate
+//! curves of Figure 5.
+
+use std::sync::Arc;
+
+use crate::cache::{EvictionPolicy, LpmConfig, TaskCache};
+use crate::client::{ExecutorConfig, LocalBinding, ToolCallExecutor};
+use crate::agent::scripted::Agent;
+use crate::sim::EventQueue;
+use crate::util::rng::Rng;
+use crate::workloads::WorkloadConfig;
+
+/// One observed tool call (drives Figures 2/11/12/14).
+#[derive(Debug, Clone)]
+pub struct CallSample {
+    pub tool: String,
+    pub args: String,
+    /// Seconds the rollout waited.
+    pub charged: f64,
+    pub hit: bool,
+    pub epoch: usize,
+}
+
+/// Per-rollout accounting (Figures 2/7).
+#[derive(Debug, Clone)]
+pub struct RolloutMetrics {
+    pub task: usize,
+    pub rollout: usize,
+    pub epoch: usize,
+    pub gen_time: f64,
+    pub tool_time: f64,
+    pub reward: f64,
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl RolloutMetrics {
+    pub fn total(&self) -> f64 {
+        self.gen_time + self.tool_time
+    }
+}
+
+/// Per-(task, epoch) batch accounting (Figures 7b/15).
+#[derive(Debug, Clone)]
+pub struct BatchMetrics {
+    pub task: usize,
+    pub epoch: usize,
+    /// Virtual seconds until the slowest rollout finished.
+    pub batch_time: f64,
+    pub longest_rollout: f64,
+}
+
+/// Aggregated run output.
+#[derive(Debug, Clone, Default)]
+pub struct RunMetrics {
+    pub rollouts: Vec<RolloutMetrics>,
+    pub batches: Vec<BatchMetrics>,
+    pub calls: Vec<CallSample>,
+    /// (epoch, hit_rate) series — Figure 5.
+    pub epoch_hit_rates: Vec<(usize, f64)>,
+    /// (epoch, mean_reward) series — Figure 6.
+    pub epoch_rewards: Vec<(usize, f64)>,
+    /// API tokens consumed by executed calls (EgoSchema §4.3).
+    pub api_tokens_spent: u64,
+    /// API tokens that cache hits avoided re-spending.
+    pub api_tokens_saved: u64,
+}
+
+impl RunMetrics {
+    pub fn overall_hit_rate(&self) -> f64 {
+        let (h, m) = self
+            .rollouts
+            .iter()
+            .fold((0u64, 0u64), |(h, m), r| (h + r.hits, m + r.misses));
+        if h + m == 0 {
+            0.0
+        } else {
+            h as f64 / (h + m) as f64
+        }
+    }
+
+    pub fn median_call_time(&self) -> f64 {
+        let mut s = crate::util::hist::Samples::new();
+        for c in &self.calls {
+            s.add(c.charged);
+        }
+        s.median()
+    }
+}
+
+/// Simulation options.
+#[derive(Debug, Clone)]
+pub struct SimOptions {
+    /// TVCACHE on or off (the paper's with/without comparison).
+    pub cached: bool,
+    /// Override the number of tasks (Table 1 defaults are large; benches
+    /// subsample for wall-clock reasons and note it in EXPERIMENTS.md).
+    pub n_tasks: usize,
+    pub epochs: usize,
+    pub rollouts: usize,
+    pub seed: u64,
+    pub lpm: LpmConfig,
+    /// Sandbox budget per task (Figure 8b sensitivity).
+    pub max_snapshots: usize,
+}
+
+impl SimOptions {
+    pub fn from_config(cfg: &WorkloadConfig, n_tasks: usize, cached: bool) -> SimOptions {
+        SimOptions {
+            cached,
+            n_tasks: n_tasks.min(cfg.n_tasks),
+            epochs: cfg.epochs,
+            rollouts: cfg.rollouts,
+            seed: 0x7CAC4E,
+            lpm: LpmConfig::default(),
+            max_snapshots: 64,
+        }
+    }
+}
+
+/// Rollout process state inside the DES.
+struct RolloutProc {
+    agent: crate::agent::ScriptedAgent,
+    executor: ToolCallExecutor,
+    trajectory: Vec<(crate::cache::ToolCall, String)>,
+    gen_time: f64,
+    tool_time: f64,
+    rng: Rng,
+    tokens_per_sec: f64,
+    tokens_per_step: f64,
+    done: bool,
+}
+
+/// Run one workload end-to-end under the simulator.
+pub fn run_workload(cfg: &WorkloadConfig, opts: &SimOptions) -> RunMetrics {
+    let mut metrics = RunMetrics::default();
+    let factory = cfg.factory();
+
+    // Per-task persistent cache (+ snapshot store): lives across epochs.
+    let bindings: Vec<Arc<LocalBinding>> = (0..opts.n_tasks)
+        .map(|_| {
+            let cache = Arc::new(TaskCache::new(
+                opts.lpm,
+                cfg.snapshot_policy(),
+                EvictionPolicy { max_snapshots: opts.max_snapshots, ..Default::default() },
+            ));
+            Arc::new(LocalBinding::new(cache))
+        })
+        .collect();
+
+    for epoch in 0..opts.epochs {
+        let mut epoch_hits = 0u64;
+        let mut epoch_misses = 0u64;
+        let mut epoch_reward = 0.0;
+        let mut epoch_rollouts = 0usize;
+
+        for task in 0..opts.n_tasks {
+            let task_seed = opts.seed ^ (task as u64).wrapping_mul(0x9E37_79B9);
+            let binding = Arc::clone(&bindings[task]);
+
+            // Build the R parallel rollout processes.
+            let mut procs: Vec<RolloutProc> = (0..opts.rollouts)
+                .map(|r| {
+                    let rollout_seed = (epoch * opts.rollouts + r) as u64;
+                    let exec_cfg = if opts.cached {
+                        ExecutorConfig {
+                            stateful_filtering: opts.lpm.stateful_filtering,
+                            ..ExecutorConfig::default()
+                        }
+                    } else {
+                        ExecutorConfig {
+                            // B·R containers created concurrently at step
+                            // start contend in the baseline manager
+                            // (Figure 13): scale the cold start/stop cost.
+                            cold_start_factor: (opts.rollouts as f64 / 2.0).max(1.0),
+                            ..ExecutorConfig::cacheless()
+                        }
+                    };
+                    RolloutProc {
+                        agent: cfg.agent(task_seed, rollout_seed),
+                        executor: ToolCallExecutor::new(
+                            Arc::clone(&binding) as Arc<dyn crate::client::CacheBinding>,
+                            Arc::clone(&factory),
+                            task_seed,
+                            exec_cfg,
+                        ),
+                        trajectory: Vec::new(),
+                        gen_time: 0.0,
+                        tool_time: 0.0,
+                        rng: Rng::new(task_seed ^ rollout_seed.rotate_left(32) ^ 0xABCD),
+                        tokens_per_sec: cfg.tokens_per_sec,
+                        tokens_per_step: cfg.tokens_per_step,
+                        done: false,
+                    }
+                })
+                .collect();
+
+            // Drive them through the DES.
+            let mut queue: EventQueue<usize> = EventQueue::new();
+            let mut finish_times = vec![0.0f64; opts.rollouts];
+            for r in 0..opts.rollouts {
+                // Stagger starts slightly: rollouts never begin in perfect
+                // lockstep on real infrastructure.
+                queue.schedule(procs[r].rng.range_f64(0.0, 0.25), r);
+            }
+            while let Some(r) = queue.pop() {
+                let now = queue.now();
+                let p = &mut procs[r];
+                if p.done {
+                    continue;
+                }
+                match p.agent.next_call(&p.trajectory) {
+                    Some(call) => {
+                        // Reasoning-token generation preceding the call.
+                        let tokens = p.tokens_per_step * p.rng.lognormal(0.0, 0.35);
+                        let gen = tokens / p.tokens_per_sec;
+                        p.gen_time += gen;
+                        let outcome = p.executor.call(call.clone());
+                        p.tool_time += outcome.charged;
+                        p.trajectory.push((call.clone(), outcome.result.output.clone()));
+                        if opts.cached && outcome.hit {
+                            metrics.api_tokens_saved += outcome.result.api_tokens;
+                        } else {
+                            metrics.api_tokens_spent += outcome.result.api_tokens;
+                        }
+                        metrics.calls.push(CallSample {
+                            tool: call.tool,
+                            args: call.args,
+                            charged: outcome.charged,
+                            hit: outcome.hit,
+                            epoch,
+                        });
+                        queue.schedule(gen + outcome.charged, r);
+                    }
+                    None => {
+                        p.tool_time += p.executor.finish();
+                        p.done = true;
+                        finish_times[r] = now;
+                    }
+                }
+            }
+
+            // Collect metrics for this (task, epoch).
+            let mut longest = 0.0f64;
+            for (r, p) in procs.into_iter().enumerate() {
+                let reward =
+                    cfg.reward(task_seed, &p.trajectory, &p.agent.final_answer());
+                epoch_hits += p.executor.hits;
+                epoch_misses += p.executor.misses;
+                epoch_reward += reward;
+                epoch_rollouts += 1;
+                longest = longest.max(p.gen_time + p.tool_time);
+                metrics.rollouts.push(RolloutMetrics {
+                    task,
+                    rollout: r,
+                    epoch,
+                    gen_time: p.gen_time,
+                    tool_time: p.tool_time,
+                    reward,
+                    hits: p.executor.hits,
+                    misses: p.executor.misses,
+                });
+            }
+            metrics.batches.push(BatchMetrics {
+                task,
+                epoch,
+                batch_time: finish_times.iter().cloned().fold(0.0, f64::max),
+                longest_rollout: longest,
+            });
+        }
+
+        let hit_rate = if epoch_hits + epoch_misses == 0 {
+            0.0
+        } else {
+            epoch_hits as f64 / (epoch_hits + epoch_misses) as f64
+        };
+        metrics.epoch_hit_rates.push((epoch, hit_rate));
+        metrics
+            .epoch_rewards
+            .push((epoch, epoch_reward / epoch_rollouts.max(1) as f64));
+    }
+    metrics
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::{Workload, WorkloadConfig};
+
+    fn quick_opts(cfg: &WorkloadConfig, cached: bool) -> SimOptions {
+        let mut o = SimOptions::from_config(cfg, 4, cached);
+        o.epochs = 4;
+        o
+    }
+
+    #[test]
+    fn cached_run_hits_and_uncached_never_does() {
+        let cfg = WorkloadConfig::config_for(Workload::TerminalEasy);
+        let cached = run_workload(&cfg, &quick_opts(&cfg, true));
+        let uncached = run_workload(&cfg, &quick_opts(&cfg, false));
+        assert!(cached.overall_hit_rate() > 0.05, "{}", cached.overall_hit_rate());
+        assert_eq!(uncached.overall_hit_rate(), 0.0);
+    }
+
+    #[test]
+    fn hit_rate_rises_over_epochs() {
+        let cfg = WorkloadConfig::config_for(Workload::SkyRlSql);
+        let m = run_workload(&cfg, &quick_opts(&cfg, true));
+        let first = m.epoch_hit_rates[0].1;
+        let last = m.epoch_hit_rates.last().unwrap().1;
+        assert!(last > first, "hit rate should rise: {first} -> {last}");
+    }
+
+    #[test]
+    fn rewards_match_with_and_without_cache() {
+        // Figure 6's claim: exact caching must not change reward statistics.
+        // Identical seeds ⇒ identical agent plans ⇒ identical rewards.
+        let cfg = WorkloadConfig::config_for(Workload::TerminalEasy);
+        let a = run_workload(&cfg, &quick_opts(&cfg, true));
+        let b = run_workload(&cfg, &quick_opts(&cfg, false));
+        let ra: Vec<f64> = a.rollouts.iter().map(|r| r.reward).collect();
+        let rb: Vec<f64> = b.rollouts.iter().map(|r| r.reward).collect();
+        assert_eq!(ra, rb, "caching changed rewards");
+    }
+
+    #[test]
+    fn cache_reduces_tool_time() {
+        let cfg = WorkloadConfig::config_for(Workload::TerminalEasy);
+        let cached = run_workload(&cfg, &quick_opts(&cfg, true));
+        let uncached = run_workload(&cfg, &quick_opts(&cfg, false));
+        let t_cached: f64 = cached.rollouts.iter().map(|r| r.tool_time).sum();
+        let t_uncached: f64 = uncached.rollouts.iter().map(|r| r.tool_time).sum();
+        assert!(
+            t_cached < t_uncached * 0.8,
+            "cached {t_cached:.1}s vs uncached {t_uncached:.1}s"
+        );
+    }
+
+    #[test]
+    fn gen_time_positive_and_batches_recorded() {
+        let cfg = WorkloadConfig::config_for(Workload::EgoSchema);
+        let m = run_workload(&cfg, &quick_opts(&cfg, true));
+        assert!(m.rollouts.iter().all(|r| r.gen_time > 0.0));
+        assert_eq!(m.batches.len(), 4 * 4); // tasks × epochs
+        assert!(m.batches.iter().all(|b| b.batch_time > 0.0));
+    }
+
+    #[test]
+    fn ego_run_saves_api_tokens() {
+        let cfg = WorkloadConfig::config_for(Workload::EgoSchema);
+        let m = run_workload(&cfg, &quick_opts(&cfg, true));
+        assert!(m.api_tokens_saved > 0, "hits should save API tokens");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let cfg = WorkloadConfig::config_for(Workload::TerminalEasy);
+        let a = run_workload(&cfg, &quick_opts(&cfg, true));
+        let b = run_workload(&cfg, &quick_opts(&cfg, true));
+        assert_eq!(a.overall_hit_rate(), b.overall_hit_rate());
+        assert_eq!(a.median_call_time(), b.median_call_time());
+    }
+}

@@ -1,0 +1,115 @@
+//! Tiny CLI flag parser (`--key value` / `--flag` / positional args).
+//!
+//! The offline toolchain has no `clap`; the launcher and every bench binary
+//! share this parser.
+
+use std::collections::HashMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: HashMap<String, String>,
+}
+
+impl Args {
+    /// Parse from `std::env::args()` (skipping argv[0]).
+    pub fn from_env() -> Args {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn parse<I: IntoIterator<Item = String>>(iter: I) -> Args {
+        let mut args = Args::default();
+        let mut it = iter.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                if let Some((k, v)) = key.split_once('=') {
+                    args.flags.insert(k.to_string(), v.to_string());
+                } else {
+                    // `--key value` unless the next token is another flag.
+                    match it.peek() {
+                        Some(next) if !next.starts_with("--") => {
+                            let v = it.next().unwrap();
+                            args.flags.insert(key.to_string(), v);
+                        }
+                        _ => {
+                            args.flags.insert(key.to_string(), "true".to_string());
+                        }
+                    }
+                }
+            } else {
+                args.positional.push(a);
+            }
+        }
+        args
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> u64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn bool(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn key_value_pairs() {
+        let a = parse("train --epochs 10 --lr 0.003 --cache");
+        assert_eq!(a.positional, vec!["train"]);
+        assert_eq!(a.u64_or("epochs", 0), 10);
+        assert_eq!(a.f64_or("lr", 0.0), 0.003);
+        assert!(a.bool("cache"));
+        assert!(!a.bool("missing"));
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = parse("--out=results/x.csv --n=5");
+        assert_eq!(a.str_or("out", ""), "results/x.csv");
+        assert_eq!(a.usize_or("n", 0), 5);
+    }
+
+    #[test]
+    fn trailing_flag_is_boolean() {
+        let a = parse("--verbose");
+        assert!(a.bool("verbose"));
+    }
+
+    #[test]
+    fn flag_before_flag_is_boolean() {
+        let a = parse("--fast --steps 3");
+        assert!(a.bool("fast"));
+        assert_eq!(a.u64_or("steps", 0), 3);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse("");
+        assert_eq!(a.str_or("x", "d"), "d");
+        assert_eq!(a.u64_or("y", 7), 7);
+    }
+}

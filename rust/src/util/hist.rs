@@ -1,0 +1,221 @@
+//! Streaming histograms and summary statistics.
+//!
+//! Every paper figure is a distribution or a percentile series; this module
+//! provides the exact-percentile (sorted-sample) summaries used by the bench
+//! harness and the log-bucketed histogram used online by the cache server's
+//! latency stats.
+
+/// Exact-sample summary: keeps all observations, computes percentiles by
+/// sorting on demand. Fine for bench-scale sample counts.
+#[derive(Debug, Clone, Default)]
+pub struct Samples {
+    xs: Vec<f64>,
+    sorted: bool,
+}
+
+impl Samples {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&mut self, x: f64) {
+        self.xs.push(x);
+        self.sorted = false;
+    }
+
+    pub fn extend(&mut self, other: &Samples) {
+        self.xs.extend_from_slice(&other.xs);
+        self.sorted = false;
+    }
+
+    pub fn len(&self) -> usize {
+        self.xs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.xs.is_empty()
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.xs.iter().sum()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.xs.is_empty() {
+            0.0
+        } else {
+            self.sum() / self.xs.len() as f64
+        }
+    }
+
+    fn ensure_sorted(&mut self) {
+        if !self.sorted {
+            self.xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            self.sorted = true;
+        }
+    }
+
+    /// Percentile in `[0, 100]` by nearest-rank on the sorted sample.
+    pub fn percentile(&mut self, p: f64) -> f64 {
+        if self.xs.is_empty() {
+            return 0.0;
+        }
+        self.ensure_sorted();
+        let n = self.xs.len();
+        let rank = ((p / 100.0) * (n as f64 - 1.0)).round() as usize;
+        self.xs[rank.min(n - 1)]
+    }
+
+    pub fn median(&mut self) -> f64 {
+        self.percentile(50.0)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    pub fn min(&self) -> f64 {
+        self.xs.iter().cloned().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn values(&self) -> &[f64] {
+        &self.xs
+    }
+}
+
+/// Log-bucketed histogram: O(1) insert, ~4% relative error on percentiles.
+/// Used on the server hot path where keeping every sample would allocate.
+#[derive(Debug, Clone)]
+pub struct LogHistogram {
+    /// buckets[i] counts values in [base * 1.04^i, base * 1.04^(i+1))
+    buckets: Vec<u64>,
+    base: f64,
+    growth: f64,
+    count: u64,
+    sum: f64,
+    overflow: u64,
+}
+
+impl LogHistogram {
+    /// `base` = smallest resolvable value (e.g. 1e-6 seconds).
+    pub fn new(base: f64) -> Self {
+        LogHistogram {
+            buckets: vec![0; 1024],
+            base,
+            growth: 1.04f64.ln(),
+            count: 0,
+            sum: 0.0,
+            overflow: 0,
+        }
+    }
+
+    pub fn add(&mut self, x: f64) {
+        self.count += 1;
+        self.sum += x;
+        if x < self.base {
+            self.buckets[0] += 1;
+            return;
+        }
+        let idx = ((x / self.base).ln() / self.growth) as usize;
+        if idx >= self.buckets.len() {
+            self.overflow += 1;
+        } else {
+            self.buckets[idx] += 1;
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    /// Approximate percentile (upper bucket bound).
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = ((p / 100.0) * self.count as f64).ceil() as u64;
+        let mut acc = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                return self.base * ((i as f64 + 1.0) * self.growth).exp();
+            }
+        }
+        f64::INFINITY // answered by the overflow bucket
+    }
+
+    pub fn merge(&mut self, other: &LogHistogram) {
+        assert_eq!(self.buckets.len(), other.buckets.len());
+        for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        self.overflow += other.overflow;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn samples_percentiles() {
+        let mut s = Samples::new();
+        for i in 1..=100 {
+            s.add(i as f64);
+        }
+        assert!((s.median() - 50.5).abs() <= 0.5); // nearest-rank: 50 or 51
+        assert_eq!(s.percentile(0.0), 1.0);
+        assert_eq!(s.percentile(100.0), 100.0);
+        assert!((s.percentile(95.0) - 95.0).abs() <= 1.0);
+        assert_eq!(s.mean(), 50.5);
+    }
+
+    #[test]
+    fn samples_empty_is_zero() {
+        let mut s = Samples::new();
+        assert_eq!(s.median(), 0.0);
+        assert_eq!(s.mean(), 0.0);
+    }
+
+    #[test]
+    fn log_histogram_accuracy() {
+        let mut h = LogHistogram::new(1e-6);
+        let mut s = Samples::new();
+        let mut rng = crate::util::rng::Rng::new(3);
+        for _ in 0..20_000 {
+            let x = rng.lognormal(-4.0, 1.5);
+            h.add(x);
+            s.add(x);
+        }
+        for p in [50.0, 90.0, 95.0, 99.0] {
+            let exact = s.percentile(p);
+            let approx = h.percentile(p);
+            let rel = (approx - exact).abs() / exact;
+            assert!(rel < 0.08, "p{p}: exact {exact} approx {approx}");
+        }
+    }
+
+    #[test]
+    fn log_histogram_merge() {
+        let mut a = LogHistogram::new(1e-6);
+        let mut b = LogHistogram::new(1e-6);
+        for i in 1..=100 {
+            a.add(i as f64 * 1e-3);
+            b.add(i as f64 * 1e-3);
+        }
+        let solo_p50 = a.percentile(50.0);
+        a.merge(&b);
+        assert_eq!(a.count(), 200);
+        assert!((a.percentile(50.0) - solo_p50).abs() / solo_p50 < 0.05);
+    }
+}

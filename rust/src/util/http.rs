@@ -1,0 +1,463 @@
+//! Minimal HTTP/1.1 server and blocking client over `std::net`.
+//!
+//! Backs the TVCACHE server (Figure 4): a thread-pooled listener dispatching
+//! to a route handler, plus a keep-alive client used by `client::remote` and
+//! the Figure 8 load generator. Supports exactly what the wire protocol
+//! needs: methods, paths + query strings, `Content-Length` bodies,
+//! keep-alive, and nothing more.
+
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use super::threadpool::ThreadPool;
+
+/// A parsed HTTP request.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub method: String,
+    pub path: String,
+    pub query: HashMap<String, String>,
+    pub headers: HashMap<String, String>,
+    pub body: Vec<u8>,
+}
+
+impl Request {
+    pub fn body_str(&self) -> &str {
+        std::str::from_utf8(&self.body).unwrap_or("")
+    }
+}
+
+/// An HTTP response under construction.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub status: u16,
+    pub content_type: &'static str,
+    pub body: Vec<u8>,
+}
+
+impl Response {
+    pub fn json(body: String) -> Response {
+        Response { status: 200, content_type: "application/json", body: body.into_bytes() }
+    }
+
+    pub fn text(status: u16, body: impl Into<String>) -> Response {
+        Response { status, content_type: "text/plain", body: body.into().into_bytes() }
+    }
+
+    pub fn not_found() -> Response {
+        Response::text(404, "not found")
+    }
+
+    pub fn bad_request(msg: impl Into<String>) -> Response {
+        Response::text(400, msg)
+    }
+
+    fn status_line(&self) -> &'static str {
+        match self.status {
+            200 => "200 OK",
+            400 => "400 Bad Request",
+            404 => "404 Not Found",
+            409 => "409 Conflict",
+            500 => "500 Internal Server Error",
+            _ => "200 OK",
+        }
+    }
+}
+
+pub type Handler = Arc<dyn Fn(&Request) -> Response + Send + Sync + 'static>;
+
+/// A running HTTP server; dropping it stops the listener.
+pub struct Server {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Bind to `addr` (use port 0 for an ephemeral port) and serve `handler`
+    /// on a pool of `workers` threads.
+    pub fn bind(addr: &str, workers: usize, handler: Handler) -> std::io::Result<Server> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let accept_thread = std::thread::Builder::new()
+            .name("tvcache-accept".into())
+            .spawn(move || {
+                let pool = ThreadPool::new(workers);
+                loop {
+                    if stop2.load(Ordering::Relaxed) {
+                        break;
+                    }
+                    match listener.accept() {
+                        Ok((stream, _)) => {
+                            let h = Arc::clone(&handler);
+                            pool.execute(move || serve_connection(stream, h));
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(Duration::from_micros(200));
+                        }
+                        Err(_) => break,
+                    }
+                }
+            })?;
+        Ok(Server { addr: local, stop, accept_thread: Some(accept_thread) })
+    }
+
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn stop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+fn serve_connection(stream: TcpStream, handler: Handler) {
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(Duration::from_secs(30)));
+    let mut reader = BufReader::new(match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    });
+    let mut writer = stream;
+    // Keep-alive loop: serve requests until the peer closes or errs.
+    loop {
+        let req = match read_request(&mut reader) {
+            Ok(Some(r)) => r,
+            _ => return,
+        };
+        let keep_alive = req
+            .headers
+            .get("connection")
+            .map(|v| !v.eq_ignore_ascii_case("close"))
+            .unwrap_or(true);
+        let resp = handler(&req);
+        if write_response(&mut writer, &resp, keep_alive).is_err() || !keep_alive {
+            return;
+        }
+    }
+}
+
+fn read_request<R: BufRead>(reader: &mut R) -> std::io::Result<Option<Request>> {
+    let mut line = String::new();
+    if reader.read_line(&mut line)? == 0 {
+        return Ok(None); // peer closed
+    }
+    let mut parts = line.split_whitespace();
+    let method = parts.next().unwrap_or("").to_string();
+    let target = parts.next().unwrap_or("").to_string();
+    if method.is_empty() || target.is_empty() {
+        return Ok(None);
+    }
+    let (path, query) = split_target(&target);
+
+    let mut headers = HashMap::new();
+    loop {
+        let mut h = String::new();
+        if reader.read_line(&mut h)? == 0 {
+            return Ok(None);
+        }
+        let h = h.trim_end();
+        if h.is_empty() {
+            break;
+        }
+        if let Some((k, v)) = h.split_once(':') {
+            headers.insert(k.trim().to_ascii_lowercase(), v.trim().to_string());
+        }
+    }
+
+    let len: usize = headers
+        .get("content-length")
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0);
+    let mut body = vec![0u8; len];
+    if len > 0 {
+        reader.read_exact(&mut body)?;
+    }
+    Ok(Some(Request { method, path, query, headers, body }))
+}
+
+fn split_target(target: &str) -> (String, HashMap<String, String>) {
+    match target.split_once('?') {
+        None => (target.to_string(), HashMap::new()),
+        Some((p, q)) => {
+            let mut map = HashMap::new();
+            for pair in q.split('&') {
+                if let Some((k, v)) = pair.split_once('=') {
+                    map.insert(url_decode(k), url_decode(v));
+                } else if !pair.is_empty() {
+                    map.insert(url_decode(pair), String::new());
+                }
+            }
+            (p.to_string(), map)
+        }
+    }
+}
+
+/// Percent-decoding (plus `+` as space).
+pub fn url_decode(s: &str) -> String {
+    let bytes = s.as_bytes();
+    let mut out = Vec::with_capacity(bytes.len());
+    let mut i = 0;
+    while i < bytes.len() {
+        match bytes[i] {
+            b'+' => {
+                out.push(b' ');
+                i += 1;
+            }
+            b'%' if i + 2 < bytes.len() + 1 && i + 2 < bytes.len() + 1 => {
+                if i + 2 < bytes.len() {
+                    if let Ok(v) =
+                        u8::from_str_radix(std::str::from_utf8(&bytes[i + 1..i + 3]).unwrap_or(""), 16)
+                    {
+                        out.push(v);
+                        i += 3;
+                        continue;
+                    }
+                }
+                out.push(b'%');
+                i += 1;
+            }
+            b => {
+                out.push(b);
+                i += 1;
+            }
+        }
+    }
+    String::from_utf8_lossy(&out).into_owned()
+}
+
+/// Percent-encoding for query values.
+pub fn url_encode(s: &str) -> String {
+    let mut out = String::new();
+    for b in s.bytes() {
+        match b {
+            b'A'..=b'Z' | b'a'..=b'z' | b'0'..=b'9' | b'-' | b'_' | b'.' | b'~' => {
+                out.push(b as char)
+            }
+            _ => out.push_str(&format!("%{b:02X}")),
+        }
+    }
+    out
+}
+
+fn write_response(w: &mut TcpStream, resp: &Response, keep_alive: bool) -> std::io::Result<()> {
+    let conn = if keep_alive { "keep-alive" } else { "close" };
+    let head = format!(
+        "HTTP/1.1 {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: {}\r\n\r\n",
+        resp.status_line(),
+        resp.content_type,
+        resp.body.len(),
+        conn
+    );
+    w.write_all(head.as_bytes())?;
+    w.write_all(&resp.body)?;
+    w.flush()
+}
+
+/// A blocking HTTP client with a persistent (keep-alive) connection.
+pub struct HttpClient {
+    addr: SocketAddr,
+    conn: Option<BufReader<TcpStream>>,
+}
+
+impl HttpClient {
+    pub fn connect(addr: SocketAddr) -> HttpClient {
+        HttpClient { addr, conn: None }
+    }
+
+    fn ensure(&mut self) -> std::io::Result<&mut BufReader<TcpStream>> {
+        if self.conn.is_none() {
+            let stream = TcpStream::connect(self.addr)?;
+            stream.set_nodelay(true)?;
+            stream.set_read_timeout(Some(Duration::from_secs(30)))?;
+            self.conn = Some(BufReader::new(stream));
+        }
+        Ok(self.conn.as_mut().unwrap())
+    }
+
+    /// Issue a request; retries once on a stale keep-alive connection.
+    pub fn request(
+        &mut self,
+        method: &str,
+        path_and_query: &str,
+        body: &[u8],
+    ) -> std::io::Result<(u16, Vec<u8>)> {
+        for attempt in 0..2 {
+            match self.try_request(method, path_and_query, body) {
+                Ok(r) => return Ok(r),
+                Err(e) if attempt == 0 => {
+                    self.conn = None; // reconnect and retry once
+                    let _ = e;
+                }
+                Err(e) => return Err(e),
+            }
+        }
+        unreachable!()
+    }
+
+    fn try_request(
+        &mut self,
+        method: &str,
+        path_and_query: &str,
+        body: &[u8],
+    ) -> std::io::Result<(u16, Vec<u8>)> {
+        let reader = self.ensure()?;
+        let head = format!(
+            "{method} {path_and_query} HTTP/1.1\r\nHost: tvcache\r\nContent-Length: {}\r\nConnection: keep-alive\r\n\r\n",
+            body.len()
+        );
+        {
+            let stream = reader.get_mut();
+            stream.write_all(head.as_bytes())?;
+            stream.write_all(body)?;
+            stream.flush()?;
+        }
+        // Status line
+        let mut line = String::new();
+        if reader.read_line(&mut line)? == 0 {
+            return Err(std::io::Error::new(std::io::ErrorKind::UnexpectedEof, "closed"));
+        }
+        let status: u16 = line
+            .split_whitespace()
+            .nth(1)
+            .and_then(|s| s.parse().ok())
+            .ok_or_else(|| std::io::Error::new(std::io::ErrorKind::InvalidData, "bad status"))?;
+        // Headers
+        let mut len = 0usize;
+        let mut close = false;
+        loop {
+            let mut h = String::new();
+            reader.read_line(&mut h)?;
+            let h = h.trim_end();
+            if h.is_empty() {
+                break;
+            }
+            let lower = h.to_ascii_lowercase();
+            if let Some(v) = lower.strip_prefix("content-length:") {
+                len = v.trim().parse().unwrap_or(0);
+            }
+            if lower.starts_with("connection:") && lower.contains("close") {
+                close = true;
+            }
+        }
+        let mut body = vec![0u8; len];
+        reader.read_exact(&mut body)?;
+        if close {
+            self.conn = None;
+        }
+        Ok((status, body))
+    }
+
+    pub fn get(&mut self, path_and_query: &str) -> std::io::Result<(u16, Vec<u8>)> {
+        self.request("GET", path_and_query, b"")
+    }
+
+    pub fn post(&mut self, path: &str, body: &[u8]) -> std::io::Result<(u16, Vec<u8>)> {
+        self.request("POST", path, body)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn echo_server() -> Server {
+        let handler: Handler = Arc::new(|req: &Request| {
+            match (req.method.as_str(), req.path.as_str()) {
+                ("GET", "/ping") => Response::text(200, "pong"),
+                ("GET", "/q") => {
+                    let v = req.query.get("k").cloned().unwrap_or_default();
+                    Response::text(200, format!("k={v}"))
+                }
+                ("POST", "/echo") => Response {
+                    status: 200,
+                    content_type: "application/octet-stream",
+                    body: req.body.clone(),
+                },
+                _ => Response::not_found(),
+            }
+        });
+        Server::bind("127.0.0.1:0", 2, handler).unwrap()
+    }
+
+    #[test]
+    fn get_roundtrip() {
+        let server = echo_server();
+        let mut c = HttpClient::connect(server.addr());
+        let (status, body) = c.get("/ping").unwrap();
+        assert_eq!(status, 200);
+        assert_eq!(body, b"pong");
+    }
+
+    #[test]
+    fn query_params_decoded() {
+        let server = echo_server();
+        let mut c = HttpClient::connect(server.addr());
+        let (_, body) = c.get(&format!("/q?k={}", url_encode("a b/c"))).unwrap();
+        assert_eq!(body, b"k=a b/c");
+    }
+
+    #[test]
+    fn post_body_roundtrip_and_keepalive() {
+        let server = echo_server();
+        let mut c = HttpClient::connect(server.addr());
+        for i in 0..10 {
+            let payload = format!("payload-{i}-{}", "x".repeat(i * 100));
+            let (status, body) = c.post("/echo", payload.as_bytes()).unwrap();
+            assert_eq!(status, 200);
+            assert_eq!(body, payload.as_bytes());
+        }
+    }
+
+    #[test]
+    fn unknown_path_404() {
+        let server = echo_server();
+        let mut c = HttpClient::connect(server.addr());
+        let (status, _) = c.get("/nope").unwrap();
+        assert_eq!(status, 404);
+    }
+
+    #[test]
+    fn concurrent_clients() {
+        let server = echo_server();
+        let addr = server.addr();
+        let handles: Vec<_> = (0..8)
+            .map(|i| {
+                std::thread::spawn(move || {
+                    let mut c = HttpClient::connect(addr);
+                    for _ in 0..20 {
+                        let (s, b) = c.post("/echo", format!("t{i}").as_bytes()).unwrap();
+                        assert_eq!(s, 200);
+                        assert_eq!(b, format!("t{i}").as_bytes());
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn url_codec_roundtrip() {
+        for s in ["hello", "a b+c", "tool:cat /foo.py", "ünïcødé 😀", "%%%"] {
+            assert_eq!(url_decode(&url_encode(s)), s);
+        }
+    }
+}

@@ -1,0 +1,10 @@
+//! From-scratch utility substrates: PRNG, JSON, HTTP, thread pool, CLI,
+//! histograms. The offline toolchain ships no equivalents (no serde / tokio /
+//! clap / rand / criterion), so TVCACHE builds its own — see DESIGN.md §4.
+
+pub mod cli;
+pub mod hist;
+pub mod http;
+pub mod json;
+pub mod rng;
+pub mod threadpool;

@@ -1,0 +1,206 @@
+//! Integration tests: HTTP server ⇄ remote executor round trips, the
+//! paper's correctness property end-to-end, persistence recovery, and a
+//! from-scratch property-test sweep over random trajectories.
+
+use std::sync::Arc;
+
+use tvcache::cache::{LpmConfig, TaskCache, ToolCall};
+use tvcache::client::{ExecutorConfig, LocalBinding, RemoteBinding, ToolCallExecutor};
+use tvcache::sandbox::{SandboxFactory, TerminalFactory, ToolExecutionEnvironment};
+use tvcache::server::serve;
+use tvcache::util::rng::Rng;
+
+fn bash(cmd: &str) -> ToolCall {
+    let stateless =
+        cmd.starts_with("cat ") || cmd.starts_with("ls") || cmd.starts_with("grep ");
+    ToolCall { tool: "bash".into(), args: cmd.into(), mutates_state: !stateless }
+}
+
+/// Remote executor over a real HTTP server: second rollout hits, divergent
+/// stateful reads stay correct.
+#[test]
+fn remote_executor_end_to_end() {
+    let (server, _svc) = serve("127.0.0.1:0", 4).unwrap();
+    let binding = Arc::new(RemoteBinding::connect(server.addr(), "task-42"));
+    let factory = Arc::new(TerminalFactory { medium: false });
+
+    let script = ["cat README.md", "make", "make test"];
+    let mut r1 = ToolCallExecutor::new(
+        Arc::clone(&binding) as Arc<_>,
+        Arc::clone(&factory) as Arc<_>,
+        7,
+        ExecutorConfig::default(),
+    );
+    for c in script {
+        assert!(!r1.call(bash(c)).hit, "cold cache must miss: {c}");
+    }
+
+    let mut r2 = ToolCallExecutor::new(
+        Arc::clone(&binding) as Arc<_>,
+        Arc::clone(&factory) as Arc<_>,
+        7,
+        ExecutorConfig::default(),
+    );
+    let outputs_r1: Vec<String> =
+        r1.history().iter().map(|(_, r)| r.output.clone()).collect();
+    for (i, c) in script.iter().enumerate() {
+        let o = r2.call(bash(c));
+        assert!(o.hit, "warm cache must hit: {c}");
+        assert_eq!(o.result.output, outputs_r1[i], "cached output mismatch");
+    }
+
+    // Diverge statefully: must execute, not serve stale.
+    let o = r2.call(bash("patch src/module_0.py s/return x - 8/return x + 8/"));
+    assert!(!o.hit);
+}
+
+/// The paper's correctness theorem, tested as a property over random
+/// trajectories: for any interleaving of rollouts over a shared cache, the
+/// output of every call equals a fresh cacheless execution of the same
+/// prefix on a clean sandbox.
+#[test]
+fn property_cached_equals_uncached_replay() {
+    let commands = [
+        "cat README.md",
+        "cat Makefile",
+        "pip install libdep1",
+        "make",
+        "make test",
+        "patch src/module_1.py s/return x - 2/return x + 2/",
+        "echo note > scratch.txt",
+        "cat scratch.txt",
+        "grep return src/module_1.py",
+        "cp README.md copy.md",
+    ];
+    let mut rng = Rng::new(0xC0FFEE);
+    let task_seed = 1;
+
+    for trial in 0..20 {
+        let cache = Arc::new(TaskCache::with_defaults());
+        let binding = Arc::new(LocalBinding::new(cache));
+        let factory = Arc::new(TerminalFactory { medium: false });
+
+        // 3 rollouts with random trajectories sharing one cache.
+        for _rollout in 0..3 {
+            let mut exec = ToolCallExecutor::new(
+                Arc::clone(&binding) as Arc<_>,
+                Arc::clone(&factory) as Arc<_>,
+                task_seed,
+                ExecutorConfig::default(),
+            );
+            let n = 2 + rng.below(7) as usize;
+            let calls: Vec<&str> = (0..n)
+                .map(|_| commands[rng.below(commands.len() as u64) as usize])
+                .collect();
+
+            // Reference: replay the same prefix on a fresh sandbox.
+            let mut reference = factory.create(task_seed);
+            for c in &calls {
+                let got = exec.call(bash(c)).result.output;
+                let want = reference.execute(&bash(c)).output;
+                assert_eq!(got, want, "trial {trial}: divergence at {c} in {calls:?}");
+            }
+        }
+    }
+}
+
+/// Sandbox state fingerprints agree between cached reconstruction paths and
+/// direct execution (the stronger internal invariant).
+#[test]
+fn property_fingerprints_match_direct_execution() {
+    let factory = TerminalFactory { medium: false };
+    let mut rng = Rng::new(99);
+    let pool = [
+        "echo a > f1",
+        "echo b >> f1",
+        "pip install libdep1",
+        "make",
+        "cp f1 f2",
+        "rm f2",
+    ];
+    for _ in 0..30 {
+        let n = 1 + rng.below(6) as usize;
+        let calls: Vec<&str> =
+            (0..n).map(|_| pool[rng.below(pool.len() as u64) as usize]).collect();
+        let mut a = factory.create(5);
+        let mut b = factory.create(5);
+        for c in &calls {
+            a.execute(&bash(c));
+        }
+        // b executes via snapshot/restore mid-way.
+        let mid = calls.len() / 2;
+        for c in &calls[..mid] {
+            b.execute(&bash(c));
+        }
+        let snap = b.snapshot();
+        let mut b2 = factory.restore(&snap);
+        for c in &calls[mid..] {
+            b2.execute(&bash(c));
+        }
+        assert_eq!(
+            a.state_fingerprint(),
+            b2.state_fingerprint(),
+            "snapshot round-trip diverged on {calls:?}"
+        );
+    }
+}
+
+/// Server persistence: a cache serialized to JSON and rebuilt serves the
+/// same hits (sandboxes are gone, results remain — §3.4).
+#[test]
+fn persistence_recovery_after_crash() {
+    let cache = TaskCache::with_defaults();
+    let traj: Vec<(ToolCall, tvcache::cache::ToolResult)> = [
+        ("git clone repo", "ok"),
+        ("make", "build OK"),
+        ("make test", "12 passed"),
+    ]
+    .iter()
+    .map(|(c, r)| (bash(c), tvcache::cache::ToolResult::new(*r, 5.0)))
+    .collect();
+    cache.record_trajectory(&traj);
+
+    let dump = cache.to_persistent_json().to_string();
+    // "Crash": rebuild from disk bytes.
+    let parsed = tvcache::util::json::parse(&dump).unwrap();
+    let rebuilt = TaskCache::from_persistent_json(&parsed, LpmConfig::default()).unwrap();
+    let q: Vec<ToolCall> = traj.iter().map(|(c, _)| c.clone()).collect();
+    match rebuilt.lookup(&q) {
+        tvcache::cache::Lookup::Hit { result, .. } => {
+            assert_eq!(result.output, "12 passed")
+        }
+        m => panic!("expected hit after recovery, got {m:?}"),
+    }
+}
+
+/// Concurrent rollouts over one HTTP server: no lost updates, consistent
+/// hit accounting.
+#[test]
+fn concurrent_remote_rollouts() {
+    let (server, svc) = serve("127.0.0.1:0", 4).unwrap();
+    let addr = server.addr();
+    let handles: Vec<_> = (0..4)
+        .map(|t| {
+            std::thread::spawn(move || {
+                let binding = Arc::new(RemoteBinding::connect(addr, "shared-task"));
+                let factory = Arc::new(TerminalFactory { medium: false });
+                let mut exec = ToolCallExecutor::new(
+                    binding as Arc<_>,
+                    factory as Arc<_>,
+                    3,
+                    ExecutorConfig::default(),
+                );
+                for c in ["cat README.md", "make", &format!("echo t{t} > own.txt")] {
+                    exec.call(bash(c));
+                }
+                exec.hits
+            })
+        })
+        .collect();
+    let total_hits: u64 = handles.into_iter().map(|h| h.join().unwrap()).sum();
+    let stats = svc.task("shared-task").stats();
+    assert_eq!(stats.hits, total_hits);
+    assert!(stats.lookups >= 12);
+    // The shared prefix exists once; the divergent writes branch.
+    assert!(svc.task("shared-task").node_count() >= 4);
+}
