@@ -6,7 +6,7 @@
 
 use tvcache::bench::print_table;
 use tvcache::metrics::CsvWriter;
-use tvcache::train::{run_workload, SimOptions};
+use tvcache::train::{run_concurrent, run_workload, ConcurrentOptions, SimOptions};
 use tvcache::workloads::{Workload, WorkloadConfig};
 
 fn main() {
@@ -71,4 +71,21 @@ fn main() {
     println!("\nrollouts faster-or-equal with cache: {:.0}%", frac_faster * 100.0);
     println!("series -> results/fig7a_rollout_times.csv, results/fig7b_batch_times.csv");
     assert!(batch_saving <= rollout_saving + 0.05, "paper shape: batch savings <= rollout savings");
+
+    // B·R rollouts on real threads against the sharded backend: the same
+    // workload the DES simulates, but measuring wall-clock service
+    // throughput (the §4.5 concurrency regime the batch numbers assume).
+    let mut copts = ConcurrentOptions::from_config(&cfg, 10);
+    copts.epochs = 3;
+    let report = run_concurrent(&cfg, &copts);
+    println!(
+        "\nconcurrent driver: {} rollouts ({} threads, {} shards) in {:.2}s wall — \
+         {:.0} calls/s, hit rate {:.1}%",
+        report.rollouts_run,
+        copts.threads,
+        copts.shards,
+        report.wall_secs,
+        report.calls_per_sec(),
+        100.0 * report.overall_hit_rate()
+    );
 }

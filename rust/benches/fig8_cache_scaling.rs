@@ -1,36 +1,104 @@
-//! Figure 8a: P95 cache-get latency vs offered load, 1 vs N shards — this
-//! one runs against *real* TVCACHE HTTP servers with real wall-clock time.
-//! Figure 8b: memory footprint of proactive forking over training steps.
+//! Figure 8a: cache throughput/latency scaling with shard count (§4.5).
 //!
-//! Paper shape: a single server holds P95 in the low milliseconds at 256
-//! RPS but saturates by 512 RPS (P95 > 1 s); sharding sustains ~16× the
-//! load at single-digit-ms P95. Memory stays ~1–2 GB (here: scaled-down
-//! snapshot store bytes + RSS), with per-step spikes.
+//! Two measurements, both against the *same* `ShardedCacheService` that the
+//! server and the training loops use (via the `CacheBackend` trait):
+//!
+//! 1. **In-process throughput** — 8 closed-loop worker threads hammer the
+//!    backend with a ~90/10 lookup/insert mix for shards ∈ {1, 2, 4, 8};
+//!    reported as ops/sec per shard count (the paper's near-linear scaling
+//!    claim, minus the HTTP stack).
+//! 2. **HTTP P95 latency vs offered load** — one server process whose
+//!    internal shard count varies; the paper shape: a single shard
+//!    saturates first, shards sustain the load at low P95.
+//!
+//! Figure 8b: memory footprint of proactive forking over training steps.
 
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use tvcache::bench::print_table;
-use tvcache::cache::{ToolCall, ShardRouter};
+use tvcache::cache::{CacheBackend, ShardedCacheService, ToolCall, ToolResult};
 use tvcache::metrics::{rss_bytes, CsvWriter};
-use tvcache::server::{lookup_body, serve};
+use tvcache::server::{lookup_body, serve_with};
 use tvcache::util::hist::Samples;
 use tvcache::util::http::HttpClient;
 
-/// Closed-loop load generation at a target RPS for `dur`; returns get
-/// latencies. `shards` servers, clients routed by task id.
-fn drive(addrs: &[std::net::SocketAddr], rps: f64, dur: Duration, n_keys: usize) -> Samples {
-    let router = ShardRouter::new(addrs.len());
+const N_TASKS: usize = 256;
+const N_CMDS: usize = 7;
+const DRIVE_THREADS: usize = 8;
+
+fn call(k: usize) -> ToolCall {
+    ToolCall::new("bash", format!("cmd-{k}"))
+}
+
+fn populate(backend: &dyn CacheBackend) {
+    for task in 0..N_TASKS {
+        for k in 0..N_CMDS {
+            backend.insert(
+                &format!("task-{task}"),
+                &[(call(k), ToolResult::new("r", 1.0))],
+            );
+        }
+    }
+}
+
+/// Closed-loop in-process drive: `DRIVE_THREADS` threads, ~90% lookups /
+/// ~10% inserts for `dur`. Returns total ops completed.
+fn drive_inprocess(backend: Arc<ShardedCacheService>, dur: Duration) -> u64 {
+    let stop = Arc::new(AtomicBool::new(false));
+    let ops = Arc::new(AtomicU64::new(0));
+    let handles: Vec<_> = (0..DRIVE_THREADS)
+        .map(|t| {
+            let backend = Arc::clone(&backend);
+            let stop = Arc::clone(&stop);
+            let ops = Arc::clone(&ops);
+            std::thread::spawn(move || {
+                let mut i = t;
+                let mut local = 0u64;
+                while !stop.load(Ordering::Relaxed) {
+                    let task = format!("task-{}", i % N_TASKS);
+                    // Modulus coprime with the thread stride (8), so every
+                    // worker sees the same ~89/11 get/put mix.
+                    if i % 9 == 0 {
+                        backend.insert(
+                            &task,
+                            &[
+                                (call(i % N_CMDS), ToolResult::new("r", 1.0)),
+                                (
+                                    ToolCall::new("bash", format!("suffix-{}", i % 5)),
+                                    ToolResult::new("r2", 1.0),
+                                ),
+                            ],
+                        );
+                    } else {
+                        let _ = backend.lookup(&task, &[call(i % N_CMDS)]);
+                    }
+                    local += 1;
+                    i += DRIVE_THREADS;
+                }
+                ops.fetch_add(local, Ordering::Relaxed);
+            })
+        })
+        .collect();
+    std::thread::sleep(dur);
+    stop.store(true, Ordering::Relaxed);
+    for h in handles {
+        h.join().unwrap();
+    }
+    ops.load(Ordering::Relaxed)
+}
+
+/// Closed-loop HTTP load at a target RPS for `dur`; returns get latencies.
+fn drive_http(addr: std::net::SocketAddr, rps: f64, dur: Duration) -> Samples {
     let n_threads = 8.min(((rps / 64.0).ceil() as usize).max(2));
     let per_thread_rps = rps / n_threads as f64;
     let lat = Arc::new(std::sync::Mutex::new(Samples::new()));
     let mut handles = Vec::new();
     for t in 0..n_threads {
-        let addrs = addrs.to_vec();
         let lat = Arc::clone(&lat);
         handles.push(std::thread::spawn(move || {
-            let mut clients: Vec<HttpClient> =
-                addrs.iter().map(|a| HttpClient::connect(*a)).collect();
+            let mut client = HttpClient::connect(addr);
             let interval = Duration::from_secs_f64(1.0 / per_thread_rps);
             let start = Instant::now();
             let mut next = start;
@@ -42,12 +110,10 @@ fn drive(addrs: &[std::net::SocketAddr], rps: f64, dur: Duration, n_keys: usize)
                     std::thread::sleep(next - now);
                 }
                 next += interval;
-                let task = format!("task-{}", i % n_keys);
-                let shard = router.route(&task);
-                let q = vec![ToolCall::new("bash", format!("cmd-{}", i % 7))];
-                let body = lookup_body(&task, &q);
+                let task = format!("task-{}", i % N_TASKS);
+                let body = lookup_body(&task, &[call(i % N_CMDS)]);
                 let t0 = Instant::now();
-                let _ = clients[shard].post("/get", body.as_bytes());
+                let _ = client.post("/get", body.as_bytes());
                 local.add(t0.elapsed().as_secs_f64());
                 i += n_threads;
             }
@@ -61,33 +127,57 @@ fn drive(addrs: &[std::net::SocketAddr], rps: f64, dur: Duration, n_keys: usize)
 }
 
 fn main() {
-    // ---- Figure 8a ----
+    // ---- Figure 8a (i): in-process throughput vs shard count ----
+    let mut rows = Vec::new();
+    let mut csv = CsvWriter::new(&["shards", "ops_per_sec", "speedup_vs_1"]);
+    let mut base = 0.0f64;
+    for shards in [1usize, 2, 4, 8] {
+        let backend = Arc::new(ShardedCacheService::new(shards));
+        populate(backend.as_ref());
+        // Warmup then measure.
+        drive_inprocess(Arc::clone(&backend), Duration::from_millis(100));
+        let dur = Duration::from_millis(600);
+        let ops = drive_inprocess(Arc::clone(&backend), dur);
+        let rate = ops as f64 / dur.as_secs_f64();
+        if shards == 1 {
+            base = rate;
+        }
+        rows.push(vec![
+            format!("{shards}"),
+            format!("{rate:.0}"),
+            format!("{:.2}x", rate / base.max(1.0)),
+        ]);
+        csv.rowf(&[&shards, &format!("{rate:.0}"), &format!("{:.3}", rate / base.max(1.0))]);
+    }
+    print_table(
+        "Figure 8a(i): in-process ShardedCacheService throughput (8 driver threads, ~90/10 get/put)",
+        &["shards", "ops/sec", "speedup"],
+        &rows,
+    );
+    csv.write("results/fig8a_shard_throughput.csv").unwrap();
+
+    // ---- Figure 8a (ii): HTTP latency vs offered load, 1 vs 4 shards ----
     let mut rows = Vec::new();
     let mut csv = CsvWriter::new(&["shards", "rps", "p50_ms", "p95_ms"]);
-    // This testbed has 1 core (the paper used 128); load points are scaled
-    // ~32× down, preserving the saturation *shape*.
-    let load_points = [8.0, 16.0, 32.0, 64.0, 128.0];
+    // This testbed has few cores (the paper used 128); load points are
+    // scaled down, preserving the saturation *shape*.
+    let load_points = [16.0, 64.0, 128.0];
     for shards in [1usize, 4] {
-        let servers: Vec<_> = (0..shards)
-            .map(|_| serve("127.0.0.1:0", 2).unwrap())
-            .collect();
-        let addrs: Vec<_> = servers.iter().map(|(s, _)| s.addr()).collect();
-        // Pre-populate 8K distinct keys spread over tasks.
+        let (server, svc) = serve_with("127.0.0.1:0", 4, shards).unwrap();
         {
-            let router = ShardRouter::new(shards);
-            let mut clients: Vec<HttpClient> =
-                addrs.iter().map(|a| HttpClient::connect(*a)).collect();
+            let mut client = HttpClient::connect(server.addr());
             for k in 0..1024 {
-                let task = format!("task-{}", k % 256);
+                let task = format!("task-{}", k % N_TASKS);
                 let body = format!(
                     r#"{{"task":"{task}","trajectory":[{{"call":{{"tool":"bash","args":"cmd-{}","mutates":true}},"result":{{"output":"r","exec_time":1,"api_tokens":0}}}}]}}"#,
-                    k % 7
+                    k % N_CMDS
                 );
-                let _ = clients[router.route(&task)].post("/put", body.as_bytes());
+                let _ = client.post("/put", body.as_bytes());
             }
         }
+        assert_eq!(svc.shard_count(), shards);
         for &rps in &load_points {
-            let mut lat = drive(&addrs, rps, Duration::from_millis(900), 256);
+            let mut lat = drive_http(server.addr(), rps, Duration::from_millis(700));
             let p50 = lat.percentile(50.0) * 1e3;
             let p95 = lat.percentile(95.0) * 1e3;
             rows.push(vec![
@@ -100,7 +190,7 @@ fn main() {
         }
     }
     print_table(
-        "Figure 8a: real cache-get latency vs load (shape: single saturates, shards sustain)",
+        "Figure 8a(ii): HTTP cache-get latency vs load (single server, internal shards)",
         &["shards", "offered RPS", "p50 (ms)", "p95 (ms)"],
         &rows,
     );
@@ -123,5 +213,5 @@ fn main() {
         100.0 * m.overall_hit_rate()
     );
     println!("  (paper: ~1 GB steady, 2 GB peak, 36 sandboxes cached; our snapshots are\n   in-memory state dumps, so absolute bytes are smaller by design)");
-    println!("\nseries -> results/fig8a_latency.csv");
+    println!("\nseries -> results/fig8a_shard_throughput.csv, results/fig8a_latency.csv");
 }

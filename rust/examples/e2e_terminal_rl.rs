@@ -20,8 +20,8 @@
 use std::sync::Arc;
 
 use tvcache::agent::action::{ActionSpace, BOS};
-use tvcache::cache::TaskCache;
-use tvcache::client::{ExecutorConfig, LocalBinding, ToolCallExecutor};
+use tvcache::cache::ShardedCacheService;
+use tvcache::client::{ExecutorConfig, ToolCallExecutor};
 use tvcache::metrics::CsvWriter;
 use tvcache::runtime::AgentRuntime;
 use tvcache::sandbox::{TerminalFactory, TerminalTask};
@@ -33,11 +33,11 @@ const MAX_ACTIONS: usize = 10;
 
 struct TaskCtx {
     seed: u64,
+    name: String,
     space: ActionSpace,
-    binding: Arc<LocalBinding>,
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     let args = Args::from_env();
     let steps = args.usize_or("steps", 100);
     let n_tasks = args.usize_or("tasks", 4);
@@ -56,6 +56,8 @@ fn main() -> anyhow::Result<()> {
     );
 
     let factory = Arc::new(TerminalFactory { medium: false });
+    // One sharded cache service for the whole run; tasks hash across shards.
+    let service = Arc::new(ShardedCacheService::new(4));
     // Seeds chosen so `make` needs no package install (seed % 3 != 0):
     // keeps the reward reachable by a randomly initialized policy.
     let tasks: Vec<TaskCtx> = (0..n_tasks)
@@ -63,8 +65,8 @@ fn main() -> anyhow::Result<()> {
             let seed = (3 * i + 1) as u64;
             TaskCtx {
                 seed,
+                name: format!("terminal-task-{i}"),
                 space: ActionSpace::terminal(&TerminalTask::generate(seed, false)),
-                binding: Arc::new(LocalBinding::new(Arc::new(TaskCache::with_defaults()))),
             }
         })
         .collect();
@@ -88,7 +90,8 @@ fn main() -> anyhow::Result<()> {
             let mut execs: Vec<ToolCallExecutor> = (0..b)
                 .map(|_| {
                     ToolCallExecutor::new(
-                        Arc::clone(&task.binding) as Arc<_>,
+                        Arc::clone(&service) as Arc<_>,
+                        task.name.clone(),
                         Arc::clone(&factory) as Arc<_>,
                         task.seed,
                         ExecutorConfig::default(),

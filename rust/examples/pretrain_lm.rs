@@ -34,7 +34,7 @@ fn sample_sequence(rng: &mut Rng, vocab: usize, len: usize) -> Vec<i32> {
     seq
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     let args = Args::from_env();
     let steps = args.usize_or("steps", 120);
     let art_dir = args.str_or("artifacts", "artifacts");
@@ -81,6 +81,8 @@ fn main() -> anyhow::Result<()> {
         elapsed / steps as f64
     );
     println!("loss curve written to results/pretrain_lm_loss.csv");
-    anyhow::ensure!(last < first, "loss did not decrease");
+    if last >= first {
+        return Err(format!("loss did not decrease: {first} -> {last}").into());
+    }
     Ok(())
 }

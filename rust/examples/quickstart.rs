@@ -9,8 +9,8 @@
 
 use std::sync::Arc;
 
-use tvcache::cache::{TaskCache, ToolCall};
-use tvcache::client::{ExecutorConfig, LocalBinding, ToolCallExecutor};
+use tvcache::cache::{CacheBackend, ShardedCacheService, ToolCall};
+use tvcache::client::{ExecutorConfig, ToolCallExecutor};
 use tvcache::sandbox::TerminalFactory;
 
 fn bash(cmd: &str) -> ToolCall {
@@ -19,10 +19,10 @@ fn bash(cmd: &str) -> ToolCall {
 }
 
 fn main() {
-    // One cache per task (the server shards these by task id).
-    let cache = Arc::new(TaskCache::with_defaults());
-    let binding = Arc::new(LocalBinding::new(Arc::clone(&cache)));
+    // The sharded cache service: per-task caches, routed by task id.
+    let service = Arc::new(ShardedCacheService::new(4));
     let factory = Arc::new(TerminalFactory { medium: false });
+    let task = "demo-task";
     let task_seed = 11;
 
     let script = [
@@ -37,7 +37,8 @@ fn main() {
 
     println!("--- rollout 1 (cold cache) ---");
     let mut r1 = ToolCallExecutor::new(
-        Arc::clone(&binding) as Arc<_>,
+        Arc::clone(&service) as Arc<_>,
+        task,
         Arc::clone(&factory) as Arc<_>,
         task_seed,
         ExecutorConfig::default(),
@@ -55,7 +56,8 @@ fn main() {
 
     println!("--- rollout 2 (warm cache, same trajectory) ---");
     let mut r2 = ToolCallExecutor::new(
-        Arc::clone(&binding) as Arc<_>,
+        Arc::clone(&service) as Arc<_>,
+        task,
         Arc::clone(&factory) as Arc<_>,
         task_seed,
         ExecutorConfig::default(),
@@ -73,7 +75,8 @@ fn main() {
 
     println!("--- rollout 3 (diverges after the build: stateful correctness) ---");
     let mut r3 = ToolCallExecutor::new(
-        binding as Arc<_>,
+        Arc::clone(&service) as Arc<_>,
+        task,
         factory as Arc<_>,
         task_seed,
         ExecutorConfig::default(),
@@ -88,7 +91,7 @@ fn main() {
     assert!(o.result.output.contains("x * 99"), "stale result served!");
     println!("  divergent cat returned the rollout's own patch ✓");
 
-    let stats = cache.stats();
+    let stats = service.stats(task);
     println!(
         "\ncache: {} lookups, {} hits ({:.0}% hit rate)",
         stats.lookups,
@@ -99,6 +102,7 @@ fn main() {
         "tool time: cold rollout {cold:.1}s -> warm rollout {warm:.3}s ({:.0}x)",
         cold / warm.max(1e-9)
     );
+    let cache = service.task(task);
     println!("TCG nodes: {}, snapshots: {}", cache.node_count(), cache.snapshot_count());
     assert!(warm < cold / 10.0);
 }

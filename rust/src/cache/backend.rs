@@ -1,0 +1,102 @@
+//! The `CacheBackend` trait: the single access surface for TVCACHE.
+//!
+//! Everything that talks to the cache — the `ToolCallExecutor`, the HTTP
+//! server handlers, the simulated and concurrent training loops, and the
+//! figure benches — programs against this trait. Two implementations ship:
+//!
+//! * [`super::ShardedCacheService`] — in-process, task-id-sharded (§4.5):
+//!   N independent shards, each owning its own task map *and* its own
+//!   snapshot store, so no lock is global.
+//! * [`crate::client::RemoteBinding`] — the HTTP wire binding to a TVCACHE
+//!   server (which itself fronts a `ShardedCacheService`).
+//!
+//! Every method takes the task id: per §3.1 each task has an independent
+//! TCG, and the task id is what the shard router hashes (Figure 8a).
+
+use super::key::{ToolCall, ToolResult};
+use super::lpm::Lookup;
+use super::snapshot::SnapshotCosts;
+use super::store::CacheStats;
+use super::tcg::NodeId;
+use crate::sandbox::SandboxSnapshot;
+use crate::util::json::Json;
+
+/// Service-wide aggregate statistics (all tasks, all shards).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct BackendStats {
+    pub shards: usize,
+    pub tasks: usize,
+    pub lookups: u64,
+    pub hits: u64,
+    pub snapshots: usize,
+    pub snapshot_bytes: u64,
+}
+
+impl BackendStats {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("shards", Json::num(self.shards as f64)),
+            ("tasks", Json::num(self.tasks as f64)),
+            ("lookups", Json::num(self.lookups as f64)),
+            ("hits", Json::num(self.hits as f64)),
+            ("snapshots", Json::num(self.snapshots as f64)),
+            ("snapshot_bytes", Json::num(self.snapshot_bytes as f64)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Option<BackendStats> {
+        // Sentinel key: an arbitrary 200 JSON body must not parse as an
+        // all-zero (idle-looking) stats object.
+        v.get("shards")?;
+        let g = |k: &str| v.get(k).and_then(Json::as_u64).unwrap_or(0);
+        Some(BackendStats {
+            shards: g("shards") as usize,
+            tasks: g("tasks") as usize,
+            lookups: g("lookups"),
+            hits: g("hits"),
+            snapshots: g("snapshots") as usize,
+            snapshot_bytes: g("snapshot_bytes"),
+        })
+    }
+}
+
+/// The cache access surface (Figure 4's client↔service API as one trait).
+pub trait CacheBackend: Send + Sync {
+    /// §3.2 LPM lookup of `q` (last element = the call being looked up).
+    /// A miss with a resume offer may pin the resume node (§3.4); the
+    /// caller must [`CacheBackend::release`] it once it is done with the
+    /// offer (after forking, or on abandoning it). The in-process service
+    /// pins until release; the HTTP binding's offers are unpinned
+    /// server-side (a wire refcount could leak on a lost response), so
+    /// there `release` is a saturating no-op and a fetch that loses an
+    /// eviction race degrades to replay.
+    fn lookup(&self, task: &str, q: &[ToolCall]) -> Lookup;
+
+    /// Upsert an executed trajectory (`/put`); returns the id of the final
+    /// state-mutating node on the path.
+    fn insert(&self, task: &str, traj: &[(ToolCall, ToolResult)]) -> NodeId;
+
+    /// Decrement `node`'s sandbox refcount (client done forking).
+    fn release(&self, task: &str, node: NodeId);
+
+    /// §3.3 selective-snapshot decision for the given cost estimates.
+    fn should_snapshot(&self, task: &str, costs: SnapshotCosts) -> bool;
+
+    /// Store serialized sandbox state for `node`; returns the snapshot id
+    /// (0 = the store refused / transport failed).
+    fn store_snapshot(&self, task: &str, node: NodeId, snap: SandboxSnapshot) -> u64;
+
+    /// Fetch snapshot bytes previously stored for this task.
+    fn fetch_snapshot(&self, task: &str, id: u64) -> Option<SandboxSnapshot>;
+
+    /// Mark a background fork of `node`'s sandbox warm / consumed (§3.3).
+    fn set_warm_fork(&self, task: &str, node: NodeId, warm: bool);
+
+    fn has_warm_fork(&self, task: &str, node: NodeId) -> bool;
+
+    /// Per-task statistics (the `/stats?task=` payload).
+    fn stats(&self, task: &str) -> CacheStats;
+
+    /// Aggregate statistics across every task and shard.
+    fn service_stats(&self) -> BackendStats;
+}

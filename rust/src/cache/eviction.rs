@@ -36,7 +36,7 @@ impl EvictionPolicy {
     /// Higher = more worth keeping.
     pub fn keep_score(&self, tcg: &Tcg, id: NodeId) -> f64 {
         let Some(n) = tcg.node(id) else { return f64::NEG_INFINITY };
-        self.hit_weight * (n.hits as f64 + 1.0).ln()
+        self.hit_weight * (n.hit_count() as f64 + 1.0).ln()
             + self.child_weight * n.children.len() as f64
             - self.depth_weight * n.depth as f64
     }
@@ -59,7 +59,7 @@ pub fn enforce_budget(tcg: &mut Tcg, policy: &EvictionPolicy) -> Vec<SnapshotRef
             .into_iter()
             .filter(|&id| {
                 tcg.node(id)
-                    .map(|n| n.snapshot.is_some() && n.refcount == 0)
+                    .map(|n| n.snapshot.is_some() && !n.is_pinned())
                     .unwrap_or(false)
             })
             .map(|id| (policy.keep_score(tcg, id), id))
@@ -91,6 +91,7 @@ pub fn enforce_budget(tcg: &mut Tcg, policy: &EvictionPolicy) -> Vec<SnapshotRef
 mod tests {
     use super::*;
     use crate::cache::key::{ToolCall, ToolResult};
+    use std::sync::atomic::Ordering;
 
     fn snap(id: u64) -> SnapshotRef {
         SnapshotRef { id, bytes: 100, restore_cost: 0.1 }
@@ -130,8 +131,8 @@ mod tests {
             g.set_snapshot(id, snap(i as u64));
         }
         // Hits concentrated near the root.
-        g.node_mut(ids[0]).unwrap().hits = 50;
-        g.node_mut(ids[1]).unwrap().hits = 20;
+        g.node_mut(ids[0]).unwrap().hits.store(50, Ordering::Relaxed);
+        g.node_mut(ids[1]).unwrap().hits.store(20, Ordering::Relaxed);
         let policy = EvictionPolicy { max_snapshots: 2, ..Default::default() };
         let freed = enforce_budget(&mut g, &policy);
         assert_eq!(freed.len(), 3);
@@ -148,7 +149,7 @@ mod tests {
         for (i, &id) in ids.iter().enumerate() {
             g.set_snapshot(id, snap(i as u64));
         }
-        g.node_mut(ids[2]).unwrap().refcount = 1; // deepest but pinned
+        g.node_mut(ids[2]).unwrap().refcount.store(1, Ordering::Release); // deepest but pinned
         let policy = EvictionPolicy { max_snapshots: 1, ..Default::default() };
         enforce_budget(&mut g, &policy);
         assert!(g.node(ids[2]).unwrap().snapshot.is_some());
@@ -160,7 +161,7 @@ mod tests {
         let ids = grow_chain(&mut g, 3);
         for (i, &id) in ids.iter().enumerate() {
             g.set_snapshot(id, snap(i as u64));
-            g.node_mut(id).unwrap().refcount = 1;
+            g.node_mut(id).unwrap().refcount.store(1, Ordering::Release);
         }
         let policy = EvictionPolicy { max_snapshots: 1, ..Default::default() };
         assert!(enforce_budget(&mut g, &policy).is_empty());
@@ -173,7 +174,7 @@ mod tests {
         let ids = grow_chain(&mut g, 3); // c0 -> c1 -> c2 (leaf)
         g.set_snapshot(ids[0], snap(0));
         g.set_snapshot(ids[2], snap(2));
-        g.node_mut(ids[0]).unwrap().hits = 100; // keep the prefix
+        g.node_mut(ids[0]).unwrap().hits.store(100, Ordering::Relaxed); // keep the prefix
         let policy = EvictionPolicy { max_snapshots: 1, ..Default::default() };
         enforce_budget(&mut g, &policy);
         // Leaf node c2 should be gone entirely; interior c0, c1 remain.

@@ -338,6 +338,132 @@ mod tests {
         assert!(lookup(&g, &q2, cfg).is_hit());
     }
 
+    // ---- property-style invariants over random graphs ----
+
+    /// Random call from a small alphabet; ~1/3 stateless (Appendix B).
+    fn random_call(rng: &mut crate::util::rng::Rng) -> ToolCall {
+        let idx = rng.below(9);
+        if idx < 3 {
+            sl(&format!("s{idx}"))
+        } else {
+            sf(&format!("f{idx}"))
+        }
+    }
+
+    /// Insert `traj` the way `TaskCache::record_trajectory` does under
+    /// stateful filtering: mutating calls chain, stateless calls index on
+    /// the last mutating node. Returns the final mutating node.
+    fn record(g: &mut Tcg, traj: &[ToolCall]) -> NodeId {
+        let mut cur = ROOT;
+        for c in traj {
+            if c.mutates_state {
+                cur = g.insert_child(cur, c.clone(), res(&format!("r-{}", c.args)));
+            } else if g.stateless_result(cur, c).is_none() {
+                g.insert_stateless(cur, c.clone(), res(&format!("r-{}", c.args)));
+            }
+        }
+        cur
+    }
+
+    #[test]
+    fn prop_inserted_trajectory_prefixes_always_hit() {
+        let mut rng = crate::util::rng::Rng::new(0x11F0);
+        for _trial in 0..50 {
+            let mut g = Tcg::new();
+            let mut trajs = Vec::new();
+            for _ in 0..4 {
+                let n = 1 + rng.below(8) as usize;
+                let t: Vec<ToolCall> = (0..n).map(|_| random_call(&mut rng)).collect();
+                record(&mut g, &t);
+                trajs.push(t);
+            }
+            for t in &trajs {
+                for k in 1..=t.len() {
+                    assert!(
+                        lookup(&g, &t[..k], LpmConfig::default()).is_hit(),
+                        "prefix of length {k} of an inserted trajectory missed: {t:?}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn prop_resume_never_deeper_than_query() {
+        let mut rng = crate::util::rng::Rng::new(0xBEEF);
+        for _trial in 0..100 {
+            let mut g = Tcg::new();
+            for _ in 0..3 {
+                let n = 1 + rng.below(6) as usize;
+                let t: Vec<ToolCall> = (0..n).map(|_| random_call(&mut rng)).collect();
+                let leaf = record(&mut g, &t);
+                if leaf != ROOT && rng.chance(0.7) {
+                    g.set_snapshot(
+                        leaf,
+                        SnapshotRef { id: leaf as u64, bytes: 1, restore_cost: 0.1 },
+                    );
+                }
+            }
+            let n = 1 + rng.below(7) as usize;
+            let q: Vec<ToolCall> = (0..n).map(|_| random_call(&mut rng)).collect();
+            if let Lookup::Miss(m) = lookup(&g, &q, LpmConfig::default()) {
+                assert!(m.matched_calls < q.len(), "a miss cannot cover the whole query");
+                if let Some((node, _, replay_from)) = m.resume {
+                    // The resume node's stateful depth can never exceed the
+                    // number of state-mutating calls in the query prefix —
+                    // resuming deeper would replay state the rollout never
+                    // executed.
+                    let prefix_mutating =
+                        q[..q.len() - 1].iter().filter(|c| c.mutates_state).count();
+                    assert!(
+                        replay_from <= prefix_mutating,
+                        "resume depth {replay_from} exceeds query stateful depth \
+                         {prefix_mutating} (q = {q:?})"
+                    );
+                    assert_eq!(
+                        g.node(node).unwrap().depth as usize,
+                        replay_from,
+                        "replay_from must equal the resume node's TCG depth"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn prop_partial_hit_depth_monotone_in_prefix_length() {
+        let mut rng = crate::util::rng::Rng::new(0x50F7);
+        for _trial in 0..50 {
+            let mut g = Tcg::new();
+            let n = 2 + rng.below(8) as usize;
+            // Mutating-only trajectory keeps "depth" unambiguous.
+            let t: Vec<ToolCall> =
+                (0..n).map(|i| sf(&format!("m{}-{}", i, rng.below(3)))).collect();
+            record(&mut g, &t);
+            let probe = sf("divergent-probe");
+            let mut prev = 0usize;
+            for k in 0..=t.len() {
+                let mut q: Vec<ToolCall> = t[..k].to_vec();
+                q.push(probe.clone());
+                match lookup(&g, &q, LpmConfig::default()) {
+                    Lookup::Miss(m) => {
+                        assert!(
+                            m.matched_calls >= prev,
+                            "matched_calls regressed from {prev} to {} at k={k}",
+                            m.matched_calls
+                        );
+                        assert_eq!(
+                            m.matched_calls, k,
+                            "a fully-cached prefix of length {k} must match entirely"
+                        );
+                        prev = m.matched_calls;
+                    }
+                    h => panic!("divergent probe can never hit: {h:?}"),
+                }
+            }
+        }
+    }
+
     #[test]
     fn stateless_current_call_miss_when_not_cached() {
         let mut g = Tcg::new();

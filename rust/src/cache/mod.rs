@@ -1,18 +1,24 @@
 //! The TVCACHE core (§3): tool call graph, longest-prefix matching,
-//! selective snapshotting, refcount-guarded eviction, and task sharding.
+//! selective snapshotting, refcount-guarded eviction, and task sharding —
+//! unified behind the [`CacheBackend`] trait, whose in-process
+//! implementation is the [`ShardedCacheService`].
 
+pub mod backend;
 pub mod eviction;
 pub mod key;
 pub mod lpm;
+pub mod service;
 pub mod shard;
 pub mod snapshot;
 pub mod store;
 pub mod tcg;
 
+pub use backend::{BackendStats, CacheBackend};
 pub use eviction::EvictionPolicy;
 pub use key::{ToolCall, ToolResult};
 pub use lpm::{Lookup, LpmConfig, Miss};
-pub use shard::{Shard, ShardRouter};
-pub use snapshot::{SnapshotCosts, SnapshotPolicy};
+pub use service::ShardedCacheService;
+pub use shard::{CacheFactory, Shard, ShardRouter};
+pub use snapshot::{SnapshotCosts, SnapshotPolicy, SnapshotStore};
 pub use store::{CacheStats, TaskCache};
 pub use tcg::{NodeId, SnapshotRef, Tcg, ROOT};

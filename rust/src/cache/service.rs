@@ -1,0 +1,302 @@
+//! The in-process sharded cache service (§4.5, Figure 8a).
+//!
+//! N independent shards, routed by `hash(task_id)`. Each shard owns its own
+//! task map **and** its own snapshot store, so there is no global lock
+//! anywhere on the lookup *or* the snapshot path: two tasks on different
+//! shards never contend, and two tasks on the same shard only share the
+//! shard's task-map lock (a read lock in the steady state) and that shard's
+//! snapshot-store mutex.
+//!
+//! Per-shard snapshot stores use a strided id space (shard `i` of `N` hands
+//! out ids `i+1, i+1+N, …`), so snapshot ids stay globally unique and
+//! `fetch_snapshot` can verify routing.
+
+use std::sync::Arc;
+
+use super::backend::{BackendStats, CacheBackend};
+use super::key::{ToolCall, ToolResult};
+use super::lpm::Lookup;
+use super::shard::{CacheFactory, Shard, ShardRouter};
+use super::snapshot::{SnapshotCosts, SnapshotStore};
+use super::store::{CacheStats, TaskCache};
+use super::tcg::{NodeId, SnapshotRef};
+use crate::sandbox::SandboxSnapshot;
+
+/// One shard's state: task map + snapshot byte store.
+struct ShardSlot {
+    tasks: Shard,
+    snapshots: SnapshotStore,
+}
+
+/// Task-id-sharded cache service; implements [`CacheBackend`] in-process.
+pub struct ShardedCacheService {
+    router: ShardRouter,
+    shards: Vec<ShardSlot>,
+}
+
+impl ShardedCacheService {
+    /// `n_shards` shards of default-policy task caches.
+    pub fn new(n_shards: usize) -> ShardedCacheService {
+        Self::with_factory(n_shards, Arc::new(TaskCache::with_defaults))
+    }
+
+    /// `n_shards` shards whose task caches come from `factory`.
+    pub fn with_factory(n_shards: usize, factory: CacheFactory) -> ShardedCacheService {
+        let n = n_shards.max(1);
+        let shards = (0..n)
+            .map(|i| ShardSlot {
+                tasks: Shard::from_factory(Arc::clone(&factory)),
+                snapshots: SnapshotStore::new(i as u64 + 1, n as u64),
+            })
+            .collect();
+        ShardedCacheService { router: ShardRouter::new(n), shards }
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    fn slot(&self, task: &str) -> &ShardSlot {
+        &self.shards[self.router.route(task)]
+    }
+
+    /// The per-task cache (white-box access for tests and the server).
+    pub fn task(&self, task: &str) -> Arc<TaskCache> {
+        self.slot(task).tasks.task(task)
+    }
+
+    /// All task ids across all shards.
+    pub fn task_ids(&self) -> Vec<String> {
+        let mut ids = Vec::new();
+        for s in &self.shards {
+            ids.extend(s.tasks.task_ids());
+        }
+        ids
+    }
+
+    pub fn task_count(&self) -> usize {
+        self.shards.iter().map(|s| s.tasks.len()).sum()
+    }
+
+    /// Stored snapshots across all shards.
+    pub fn snapshot_count(&self) -> usize {
+        self.shards.iter().map(|s| s.snapshots.len()).sum()
+    }
+
+    pub fn snapshot_bytes(&self) -> u64 {
+        self.shards.iter().map(|s| s.snapshots.total_bytes()).sum()
+    }
+
+    /// Fetch a snapshot by id alone (legacy `/snapshot?id=` fetches that
+    /// carry no task). The strided id space makes the owning shard
+    /// computable, so this is still a single-store probe.
+    pub fn fetch_snapshot_any(&self, id: u64) -> Option<SandboxSnapshot> {
+        if id == 0 {
+            return None;
+        }
+        let shard = ((id - 1) % self.shards.len() as u64) as usize;
+        self.shards[shard].snapshots.get(id)
+    }
+}
+
+impl CacheBackend for ShardedCacheService {
+    fn lookup(&self, task: &str, q: &[ToolCall]) -> Lookup {
+        self.task(task).lookup(q)
+    }
+
+    fn insert(&self, task: &str, traj: &[(ToolCall, ToolResult)]) -> NodeId {
+        self.task(task).record_trajectory(traj)
+    }
+
+    fn release(&self, task: &str, node: NodeId) {
+        self.task(task).release(node);
+    }
+
+    fn should_snapshot(&self, task: &str, costs: SnapshotCosts) -> bool {
+        self.task(task).should_snapshot(costs)
+    }
+
+    fn store_snapshot(&self, task: &str, node: NodeId, snap: SandboxSnapshot) -> u64 {
+        let slot = self.slot(task);
+        let bytes = snap.size();
+        let restore_cost = snap.restore_cost;
+        let id = slot.snapshots.insert(snap);
+        let freed = slot
+            .tasks
+            .task(task)
+            .attach_snapshot(node, SnapshotRef { id, bytes, restore_cost });
+        // Eviction decisions and byte reclamation stay within this shard.
+        // If the attach itself was rejected (node evicted concurrently) or
+        // the budget immediately pruned the new snapshot, its ref is in
+        // `freed`: drop the bytes and report failure with id 0.
+        let mut attached = true;
+        for f in freed {
+            if f.id == id {
+                attached = false;
+            }
+            slot.snapshots.remove(f.id);
+        }
+        if attached {
+            id
+        } else {
+            0
+        }
+    }
+
+    fn fetch_snapshot(&self, task: &str, id: u64) -> Option<SandboxSnapshot> {
+        self.slot(task).snapshots.get(id)
+    }
+
+    fn set_warm_fork(&self, task: &str, node: NodeId, warm: bool) {
+        self.task(task).set_warm_fork(node, warm);
+    }
+
+    fn has_warm_fork(&self, task: &str, node: NodeId) -> bool {
+        self.task(task).has_warm_fork(node)
+    }
+
+    fn stats(&self, task: &str) -> CacheStats {
+        self.task(task).stats()
+    }
+
+    fn service_stats(&self) -> BackendStats {
+        let mut agg = BackendStats {
+            shards: self.shards.len(),
+            snapshots: self.snapshot_count(),
+            snapshot_bytes: self.snapshot_bytes(),
+            ..Default::default()
+        };
+        for s in &self.shards {
+            for id in s.tasks.task_ids() {
+                let st = s.tasks.task(&id).stats();
+                agg.tasks += 1;
+                agg.lookups += st.lookups;
+                agg.hits += st.hits;
+            }
+        }
+        agg
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sf(s: &str) -> ToolCall {
+        ToolCall::new("t", s)
+    }
+
+    fn traj(calls: &[&str]) -> Vec<(ToolCall, ToolResult)> {
+        calls
+            .iter()
+            .map(|c| (sf(c), ToolResult::new(format!("out-{c}"), 1.0)))
+            .collect()
+    }
+
+    fn snap(n: usize) -> SandboxSnapshot {
+        SandboxSnapshot { bytes: vec![7u8; n], serialize_cost: 0.1, restore_cost: 0.2 }
+    }
+
+    #[test]
+    fn routes_tasks_and_isolates_them() {
+        let svc = ShardedCacheService::new(4);
+        svc.insert("task-a", &traj(&["x", "y"]));
+        assert!(svc.lookup("task-a", &[sf("x"), sf("y")]).is_hit());
+        assert!(!svc.lookup("task-b", &[sf("x"), sf("y")]).is_hit());
+        assert_eq!(svc.task_count(), 2);
+        assert_eq!(svc.stats("task-a").hits, 1);
+        assert_eq!(svc.stats("task-b").hits, 0);
+    }
+
+    #[test]
+    fn same_task_maps_to_same_cache() {
+        let svc = ShardedCacheService::new(8);
+        let a1 = svc.task("t");
+        let a2 = svc.task("t");
+        assert!(Arc::ptr_eq(&a1, &a2));
+    }
+
+    #[test]
+    fn snapshot_store_fetch_and_global_id_uniqueness() {
+        let svc = ShardedCacheService::new(4);
+        let mut ids = std::collections::HashSet::new();
+        for i in 0..32 {
+            let task = format!("task-{i}");
+            let node = svc.insert(&task, &traj(&["a"]));
+            let id = svc.store_snapshot(&task, node, snap(10 + i));
+            assert!(id >= 1);
+            assert!(ids.insert(id), "snapshot id {id} reused across shards");
+            let got = svc.fetch_snapshot(&task, id).unwrap();
+            assert_eq!(got.size() as usize, 10 + i);
+            assert_eq!(svc.fetch_snapshot_any(id).unwrap().size() as usize, 10 + i);
+        }
+        assert_eq!(svc.snapshot_count(), 32);
+        assert!(svc.snapshot_bytes() > 0);
+    }
+
+    #[test]
+    fn eviction_reclaims_shard_store_bytes() {
+        let factory: CacheFactory = Arc::new(|| {
+            TaskCache::new(
+                crate::cache::LpmConfig::default(),
+                crate::cache::SnapshotPolicy::default(),
+                crate::cache::EvictionPolicy { max_snapshots: 2, ..Default::default() },
+            )
+        });
+        let svc = ShardedCacheService::with_factory(1, factory);
+        for i in 0..5 {
+            let node = svc.insert("t", &traj(&["p", &format!("leaf{i}")]));
+            svc.store_snapshot("t", node, snap(100));
+        }
+        // Budget 2 ⇒ 3 evicted; evicted bytes must leave the shard store.
+        assert_eq!(svc.snapshot_count(), 2);
+        assert_eq!(svc.snapshot_bytes(), 200);
+    }
+
+    #[test]
+    fn store_snapshot_to_missing_node_returns_zero_and_leaks_nothing() {
+        let svc = ShardedCacheService::new(2);
+        svc.insert("t", &traj(&["a"]));
+        let id = svc.store_snapshot("t", 999, snap(16));
+        assert_eq!(id, 0, "attach to a vanished node must report failure");
+        assert_eq!(svc.snapshot_count(), 0, "orphaned bytes must be dropped");
+    }
+
+    #[test]
+    fn resume_offer_pins_until_release() {
+        let svc = ShardedCacheService::new(2);
+        let node = svc.insert("t", &traj(&["a", "b"]));
+        svc.store_snapshot("t", node, snap(8));
+        let Lookup::Miss(m) = svc.lookup("t", &[sf("a"), sf("b"), sf("z")]) else {
+            panic!("expected miss")
+        };
+        let (resume, _, _) = m.resume.unwrap();
+        assert_eq!(resume, node);
+        svc.release("t", resume);
+        assert_eq!(svc.stats("t").snapshot_resumes, 1);
+    }
+
+    #[test]
+    fn warm_fork_roundtrip() {
+        let svc = ShardedCacheService::new(3);
+        let node = svc.insert("t", &traj(&["a"]));
+        assert!(!svc.has_warm_fork("t", node));
+        svc.set_warm_fork("t", node, true);
+        assert!(svc.has_warm_fork("t", node));
+    }
+
+    #[test]
+    fn service_stats_aggregate_across_shards() {
+        let svc = ShardedCacheService::new(4);
+        for i in 0..10 {
+            let task = format!("task-{i}");
+            svc.insert(&task, &traj(&["a"]));
+            assert!(svc.lookup(&task, &[sf("a")]).is_hit());
+        }
+        let agg = svc.service_stats();
+        assert_eq!(agg.shards, 4);
+        assert_eq!(agg.tasks, 10);
+        assert_eq!(agg.lookups, 10);
+        assert_eq!(agg.hits, 10);
+    }
+}

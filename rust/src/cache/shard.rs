@@ -2,10 +2,13 @@
 //! shards by `hash(task_id)` for near-linear throughput scaling (Figure 8a).
 
 use std::collections::HashMap;
-use std::sync::RwLock;
+use std::sync::{Arc, RwLock};
 
 use super::store::TaskCache;
 use crate::util::rng::fnv1a;
+
+/// Shared constructor for per-task caches (captures the policies).
+pub type CacheFactory = Arc<dyn Fn() -> TaskCache + Send + Sync>;
 
 /// Routes task ids to shard indices.
 #[derive(Debug, Clone, Copy)]
@@ -23,27 +26,35 @@ impl ShardRouter {
     }
 }
 
-/// One shard: a map of task id → per-task cache. The server holds one of
-/// these per shard process (or all of them, in single-process mode).
+/// One shard: a map of task id → per-task cache. The sharded cache service
+/// holds N of these, each fully independent (own task map, own lock).
 pub struct Shard {
-    tasks: RwLock<HashMap<String, std::sync::Arc<TaskCache>>>,
-    factory: fn() -> TaskCache,
+    tasks: RwLock<HashMap<String, Arc<TaskCache>>>,
+    factory: CacheFactory,
 }
 
 impl Shard {
-    pub fn new(factory: fn() -> TaskCache) -> Self {
+    pub fn new<F>(factory: F) -> Self
+    where
+        F: Fn() -> TaskCache + Send + Sync + 'static,
+    {
+        Self::from_factory(Arc::new(factory))
+    }
+
+    /// Build from an already-shared factory (one factory, many shards).
+    pub fn from_factory(factory: CacheFactory) -> Self {
         Shard { tasks: RwLock::new(HashMap::new()), factory }
     }
 
     /// Get or create the cache for `task_id`.
-    pub fn task(&self, task_id: &str) -> std::sync::Arc<TaskCache> {
+    pub fn task(&self, task_id: &str) -> Arc<TaskCache> {
         if let Some(c) = self.tasks.read().unwrap().get(task_id) {
-            return std::sync::Arc::clone(c);
+            return Arc::clone(c);
         }
         let mut w = self.tasks.write().unwrap();
-        std::sync::Arc::clone(
+        Arc::clone(
             w.entry(task_id.to_string())
-                .or_insert_with(|| std::sync::Arc::new((self.factory)())),
+                .or_insert_with(|| Arc::new((self.factory)())),
         )
     }
 

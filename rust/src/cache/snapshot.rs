@@ -1,9 +1,19 @@
-//! Selective sandbox snapshotting policy (§3.3).
+//! Selective sandbox snapshotting policy (§3.3) and the snapshot byte store.
 //!
 //! TVCACHE snapshots the sandbox after a tool call only when re-executing
 //! the call would cost more than serializing + later restoring a snapshot.
 //! In practice this snapshots after long builds and test-suite runs but not
 //! after `cat foo.py`.
+//!
+//! [`SnapshotStore`] holds the serialized sandbox bytes. Each shard of the
+//! sharded cache service owns its *own* store (strided id space), so the
+//! snapshot path never funnels through a global lock.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::sandbox::SandboxSnapshot;
 
 /// Cost model inputs for one snapshot decision.
 #[derive(Debug, Clone, Copy)]
@@ -57,6 +67,70 @@ impl SnapshotPolicy {
     }
 }
 
+/// Store of serialized sandboxes, keyed by snapshot id.
+///
+/// The id returned by [`SnapshotStore::insert`] **is** the stored key — the
+/// same value later passed to `get`/`remove` and embedded in
+/// [`super::tcg::SnapshotRef::id`]. Ids start at `first_id` (≥ 1: id 0 is
+/// the wire sentinel for "no snapshot") and advance by `stride`, so N
+/// per-shard stores constructed as `SnapshotStore::new(shard + 1, N)` hand
+/// out globally disjoint ids without any shared state.
+#[derive(Debug)]
+pub struct SnapshotStore {
+    next_id: AtomicU64,
+    stride: u64,
+    snaps: Mutex<HashMap<u64, SandboxSnapshot>>,
+}
+
+impl Default for SnapshotStore {
+    fn default() -> Self {
+        SnapshotStore::new(1, 1)
+    }
+}
+
+impl SnapshotStore {
+    pub fn new(first_id: u64, stride: u64) -> SnapshotStore {
+        assert!(first_id >= 1, "snapshot id 0 is reserved for 'no snapshot'");
+        assert!(stride >= 1);
+        SnapshotStore {
+            next_id: AtomicU64::new(first_id),
+            stride,
+            snaps: Mutex::new(HashMap::new()),
+        }
+    }
+
+    /// Store `snap`; the returned id is exactly the key it is stored under.
+    pub fn insert(&self, snap: SandboxSnapshot) -> u64 {
+        let id = self.next_id.fetch_add(self.stride, Ordering::SeqCst);
+        self.snaps.lock().unwrap().insert(id, snap);
+        id
+    }
+
+    pub fn get(&self, id: u64) -> Option<SandboxSnapshot> {
+        self.snaps.lock().unwrap().get(&id).cloned()
+    }
+
+    pub fn contains(&self, id: u64) -> bool {
+        self.snaps.lock().unwrap().contains_key(&id)
+    }
+
+    pub fn remove(&self, id: u64) {
+        self.snaps.lock().unwrap().remove(&id);
+    }
+
+    pub fn len(&self) -> usize {
+        self.snaps.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.snaps.lock().unwrap().values().map(|s| s.size()).sum()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -100,5 +174,64 @@ mod tests {
         let p = SnapshotPolicy { cost_factor: 3.0, ..Default::default() };
         assert!(!p.should_snapshot(costs(2.5))); // needs > 3.0
         assert!(p.should_snapshot(costs(3.5)));
+    }
+
+    fn snap(n: usize) -> SandboxSnapshot {
+        SandboxSnapshot { bytes: vec![0u8; n], serialize_cost: 0.1, restore_cost: 0.2 }
+    }
+
+    #[test]
+    fn store_id_is_the_stored_key() {
+        let store = SnapshotStore::default();
+        let a = store.insert(snap(10));
+        let b = store.insert(snap(20));
+        assert_eq!(a, 1, "ids start at 1 (0 = wire sentinel)");
+        assert_eq!(b, 2);
+        // The returned id addresses exactly what was inserted.
+        assert_eq!(store.get(a).unwrap().size(), 10);
+        assert_eq!(store.get(b).unwrap().size(), 20);
+        assert_eq!(store.total_bytes(), 30);
+        store.remove(a);
+        assert!(store.get(a).is_none());
+        assert!(!store.contains(a));
+        assert_eq!(store.total_bytes(), 20);
+        assert_eq!(store.len(), 1);
+    }
+
+    #[test]
+    fn strided_stores_hand_out_disjoint_ids() {
+        let n = 4u64;
+        let stores: Vec<SnapshotStore> =
+            (0..n).map(|i| SnapshotStore::new(i + 1, n)).collect();
+        let mut seen = std::collections::HashSet::new();
+        for store in &stores {
+            for _ in 0..16 {
+                let id = store.insert(snap(1));
+                assert!(id >= 1);
+                assert!(seen.insert(id), "id {id} handed out twice");
+                assert!(store.contains(id));
+            }
+        }
+    }
+
+    #[test]
+    fn concurrent_inserts_yield_unique_live_ids() {
+        use std::sync::Arc;
+        let store = Arc::new(SnapshotStore::default());
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let s = Arc::clone(&store);
+                std::thread::spawn(move || {
+                    (0..50).map(|_| s.insert(snap(1))).collect::<Vec<u64>>()
+                })
+            })
+            .collect();
+        let mut all = Vec::new();
+        for h in handles {
+            all.extend(h.join().unwrap());
+        }
+        let unique: std::collections::HashSet<u64> = all.iter().copied().collect();
+        assert_eq!(unique.len(), 200, "every insert got a distinct key");
+        assert_eq!(store.len(), 200);
     }
 }

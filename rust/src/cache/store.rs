@@ -1,9 +1,14 @@
 //! Per-task cache facade: thread-safe TCG + LPM + policies + statistics.
 //!
-//! This is the object the TVCACHE server holds per task (§3.4): every
-//! endpoint manipulates the graph through this API, which wraps the TCG in
-//! a `RwLock` and wires the selective-snapshot and eviction policies in.
+//! This is the object the TVCACHE service holds per task (§3.4): every
+//! endpoint manipulates the graph through this API. The hot read path
+//! (`/get`, `/prefix_match`, `/release`, `/warm`) takes only a *read* lock
+//! on the TCG: statistics live in atomics and the per-node counters
+//! (`hits`, `refcount`, `warm_fork`) are atomic too, so concurrent lookups
+//! never serialize on the graph. Only structural mutation — recording
+//! trajectories, attaching snapshots, eviction — takes the write lock.
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::RwLock;
 
 use super::eviction::{enforce_budget, EvictionPolicy};
@@ -14,7 +19,7 @@ use super::tcg::{NodeId, SnapshotRef, Tcg, ROOT};
 use crate::util::json::Json;
 
 /// Aggregate cache statistics (served by `/stats`; drives Figures 5/12).
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct CacheStats {
     pub lookups: u64,
     pub hits: u64,
@@ -51,25 +56,66 @@ impl CacheStats {
             ("hit_rate", Json::num(self.hit_rate())),
         ])
     }
+
+    /// Parse the `/stats?task=` wire format (the inverse of `to_json`).
+    pub fn from_json(v: &Json) -> Option<CacheStats> {
+        let g = |k: &str| v.get(k).and_then(Json::as_u64).unwrap_or(0);
+        v.get("lookups")?;
+        Some(CacheStats {
+            lookups: g("lookups"),
+            hits: g("hits"),
+            partial_hits: g("partial_hits"),
+            snapshot_resumes: g("snapshot_resumes"),
+            inserts: g("inserts"),
+            snapshots_stored: g("snapshots_stored"),
+            snapshots_evicted: g("snapshots_evicted"),
+            api_tokens_saved: g("api_tokens_saved"),
+        })
+    }
+}
+
+/// Lock-free statistic counters (read path bumps these under a read lock).
+#[derive(Debug, Default)]
+struct StatCounters {
+    lookups: AtomicU64,
+    hits: AtomicU64,
+    partial_hits: AtomicU64,
+    snapshot_resumes: AtomicU64,
+    inserts: AtomicU64,
+    snapshots_stored: AtomicU64,
+    snapshots_evicted: AtomicU64,
+    api_tokens_saved: AtomicU64,
+}
+
+impl StatCounters {
+    fn snapshot(&self) -> CacheStats {
+        CacheStats {
+            lookups: self.lookups.load(Ordering::Relaxed),
+            hits: self.hits.load(Ordering::Relaxed),
+            partial_hits: self.partial_hits.load(Ordering::Relaxed),
+            snapshot_resumes: self.snapshot_resumes.load(Ordering::Relaxed),
+            inserts: self.inserts.load(Ordering::Relaxed),
+            snapshots_stored: self.snapshots_stored.load(Ordering::Relaxed),
+            snapshots_evicted: self.snapshots_evicted.load(Ordering::Relaxed),
+            api_tokens_saved: self.api_tokens_saved.load(Ordering::Relaxed),
+        }
+    }
 }
 
 /// The per-task cache.
 pub struct TaskCache {
-    inner: RwLock<Inner>,
+    tcg: RwLock<Tcg>,
+    stats: StatCounters,
     pub lpm: LpmConfig,
     pub snapshot_policy: SnapshotPolicy,
     pub eviction: EvictionPolicy,
 }
 
-struct Inner {
-    tcg: Tcg,
-    stats: CacheStats,
-}
-
 impl TaskCache {
     pub fn new(lpm: LpmConfig, snapshot_policy: SnapshotPolicy, eviction: EvictionPolicy) -> Self {
         TaskCache {
-            inner: RwLock::new(Inner { tcg: Tcg::new(), stats: CacheStats::default() }),
+            tcg: RwLock::new(Tcg::new()),
+            stats: StatCounters::default(),
             lpm,
             snapshot_policy,
             eviction,
@@ -84,27 +130,30 @@ impl TaskCache {
     /// accounting). On a miss with a snapshot resume, *increments the
     /// refcount* of the resume node — the caller must `release` it after
     /// forking (§3.4 Concurrency Control).
+    ///
+    /// Takes only a read lock: the refcount increment happens under the same
+    /// guard that produced the resume offer, so eviction (which needs the
+    /// write lock) can never interleave between the offer and the pin.
     pub fn lookup(&self, q: &[ToolCall]) -> Lookup {
-        let mut inner = self.inner.write().unwrap();
-        inner.stats.lookups += 1;
-        let result = lookup(&inner.tcg, q, self.lpm);
+        let tcg = self.tcg.read().unwrap();
+        self.stats.lookups.fetch_add(1, Ordering::Relaxed);
+        let result = lookup(&tcg, q, self.lpm);
         match &result {
             Lookup::Hit { node, result } => {
-                inner.stats.hits += 1;
-                inner.stats.api_tokens_saved += result.api_tokens;
-                let node = *node;
-                if let Some(n) = inner.tcg.node_mut(node) {
-                    n.hits += 1;
+                self.stats.hits.fetch_add(1, Ordering::Relaxed);
+                self.stats.api_tokens_saved.fetch_add(result.api_tokens, Ordering::Relaxed);
+                if let Some(n) = tcg.node(*node) {
+                    n.hits.fetch_add(1, Ordering::Relaxed);
                 }
             }
             Lookup::Miss(m) => {
                 if m.matched_calls > 0 {
-                    inner.stats.partial_hits += 1;
+                    self.stats.partial_hits.fetch_add(1, Ordering::Relaxed);
                 }
                 if let Some((node, _, _)) = m.resume {
-                    inner.stats.snapshot_resumes += 1;
-                    if let Some(n) = inner.tcg.node_mut(node) {
-                        n.refcount += 1;
+                    self.stats.snapshot_resumes.fetch_add(1, Ordering::Relaxed);
+                    if let Some(n) = tcg.node(node) {
+                        n.refcount.fetch_add(1, Ordering::AcqRel);
                     }
                 }
             }
@@ -114,9 +163,12 @@ impl TaskCache {
 
     /// Decrement a node's sandbox refcount (client done forking).
     pub fn release(&self, node: NodeId) {
-        let mut inner = self.inner.write().unwrap();
-        if let Some(n) = inner.tcg.node_mut(node) {
-            n.refcount = n.refcount.saturating_sub(1);
+        let tcg = self.tcg.read().unwrap();
+        if let Some(n) = tcg.node(node) {
+            // Saturating decrement: a stray double-release never underflows.
+            let _ = n.refcount.fetch_update(Ordering::AcqRel, Ordering::Acquire, |c| {
+                c.checked_sub(1)
+            });
         }
     }
 
@@ -125,24 +177,24 @@ impl TaskCache {
     /// parent node (Appendix B "Addition to TCG"). Returns the id of the
     /// final state-mutating node on the path.
     pub fn record_trajectory(&self, traj: &[(ToolCall, ToolResult)]) -> NodeId {
-        let mut inner = self.inner.write().unwrap();
+        let mut tcg = self.tcg.write().unwrap();
         let mut cur = ROOT;
         let mut inserted = 0u64;
         for (call, result) in traj {
             if self.lpm.stateful_filtering && !call.mutates_state {
-                if inner.tcg.stateless_result(cur, call).is_none() {
-                    inner.tcg.insert_stateless(cur, call.clone(), result.clone());
+                if tcg.stateless_result(cur, call).is_none() {
+                    tcg.insert_stateless(cur, call.clone(), result.clone());
                     inserted += 1;
                 }
             } else {
-                let before = inner.tcg.len();
-                cur = inner.tcg.insert_child(cur, call.clone(), result.clone());
-                if inner.tcg.len() > before {
+                let before = tcg.len();
+                cur = tcg.insert_child(cur, call.clone(), result.clone());
+                if tcg.len() > before {
                     inserted += 1;
                 }
             }
         }
-        inner.stats.inserts += inserted;
+        self.stats.inserts.fetch_add(inserted, Ordering::Relaxed);
         cur
     }
 
@@ -154,74 +206,130 @@ impl TaskCache {
     }
 
     /// Attach a snapshot to a node, then enforce the sandbox budget.
-    /// Returns snapshots freed by eviction (caller destroys the sandboxes).
+    /// Returns the snapshots freed — any ref this attach *replaced* on the
+    /// node plus everything eviction pruned — so the caller can drop the
+    /// corresponding sandboxes/bytes and the snapshot store never leaks.
+    ///
+    /// Two attaches are rejected (the *new* ref comes back in the freed
+    /// list, for the caller to drop): the node no longer exists (evicted
+    /// between the caller's store insert and this attach), or the node is
+    /// refcount-pinned while already carrying a snapshot — a resume-offer
+    /// holder may be about to fetch that exact id, and since identical
+    /// trajectories produce identical states the incumbent snapshot is
+    /// just as good as the replacement (§3.4 Concurrency Control).
     pub fn attach_snapshot(&self, node: NodeId, snap: SnapshotRef) -> Vec<SnapshotRef> {
-        let mut inner = self.inner.write().unwrap();
-        inner.tcg.set_snapshot(node, snap);
-        inner.stats.snapshots_stored += 1;
-        let freed = enforce_budget(&mut inner.tcg, &self.eviction);
-        inner.stats.snapshots_evicted += freed.len() as u64;
+        let mut tcg = self.tcg.write().unwrap();
+        let mut freed = Vec::new();
+        if node == ROOT {
+            // ROOT is the empty-state sentinel (and the wire-protocol
+            // failure value): a snapshot of executed state attached at
+            // depth 0 would hand later rollouts a sandbox containing
+            // mutations they never made.
+            freed.push(snap);
+            return freed;
+        }
+        match tcg.node(node) {
+            None => {
+                freed.push(snap);
+                return freed;
+            }
+            Some(n) => {
+                if let Some(old) = n.snapshot {
+                    if old.id == snap.id {
+                        // Re-attach of the same id: nothing changes.
+                        return freed;
+                    } else if n.is_pinned() {
+                        freed.push(snap);
+                        return freed;
+                    } else {
+                        freed.push(old);
+                    }
+                }
+            }
+        }
+        tcg.set_snapshot(node, snap);
+        let evicted = enforce_budget(&mut tcg, &self.eviction);
+        // Accounting matches what actually happened: a newcomer the budget
+        // pruned immediately was never stored (and its removal is not an
+        // eviction of previously stored state).
+        if evicted.iter().any(|e| e.id == snap.id) {
+            self.stats
+                .snapshots_evicted
+                .fetch_add((evicted.len() - 1) as u64, Ordering::Relaxed);
+        } else {
+            self.stats.snapshots_stored.fetch_add(1, Ordering::Relaxed);
+            self.stats.snapshots_evicted.fetch_add(evicted.len() as u64, Ordering::Relaxed);
+        }
+        freed.extend(evicted);
         freed
     }
 
     /// Mark that a background fork for `node` is warm (§3.3 proactive fork).
     pub fn set_warm_fork(&self, node: NodeId, warm: bool) {
-        let mut inner = self.inner.write().unwrap();
-        if let Some(n) = inner.tcg.node_mut(node) {
-            n.warm_fork = warm;
+        let tcg = self.tcg.read().unwrap();
+        if let Some(n) = tcg.node(node) {
+            n.warm_fork.store(warm, Ordering::Release);
         }
     }
 
     pub fn has_warm_fork(&self, node: NodeId) -> bool {
-        let inner = self.inner.read().unwrap();
-        inner.tcg.node(node).map(|n| n.warm_fork).unwrap_or(false)
+        let tcg = self.tcg.read().unwrap();
+        tcg.node(node).map(|n| n.warm_fork.load(Ordering::Acquire)).unwrap_or(false)
     }
 
     pub fn stats(&self) -> CacheStats {
-        self.inner.read().unwrap().stats.clone()
+        self.stats.snapshot()
     }
 
     pub fn node_count(&self) -> usize {
-        self.inner.read().unwrap().tcg.len()
+        self.tcg.read().unwrap().len()
     }
 
     pub fn snapshot_count(&self) -> usize {
-        self.inner.read().unwrap().tcg.snapshot_count()
+        self.tcg.read().unwrap().snapshot_count()
     }
 
     pub fn snapshot_bytes(&self) -> u64 {
-        self.inner.read().unwrap().tcg.snapshot_bytes()
+        self.tcg.read().unwrap().snapshot_bytes()
+    }
+
+    /// Nodes whose sandbox refcount is non-zero (diagnostics: a steady
+    /// non-zero count after all rollouts finished means leaked pins).
+    pub fn pinned_node_count(&self) -> usize {
+        let tcg = self.tcg.read().unwrap();
+        tcg.live_nodes()
+            .into_iter()
+            .filter(|&id| tcg.node(id).map(|n| n.is_pinned()).unwrap_or(false))
+            .count()
     }
 
     /// Nodes carrying snapshots (candidates for proactive forking).
     pub fn snapshotted_nodes(&self) -> Vec<(NodeId, SnapshotRef)> {
-        let inner = self.inner.read().unwrap();
-        inner
-            .tcg
-            .live_nodes()
+        let tcg = self.tcg.read().unwrap();
+        tcg.live_nodes()
             .into_iter()
-            .filter_map(|id| inner.tcg.node(id).and_then(|n| n.snapshot.map(|s| (id, s))))
+            .filter_map(|id| tcg.node(id).and_then(|n| n.snapshot.map(|s| (id, s))))
             .collect()
     }
 
     /// `/viz` rendering of the graph (Figure 9).
     pub fn viz_json(&self) -> Json {
-        self.inner.read().unwrap().tcg.to_json()
+        self.tcg.read().unwrap().to_json()
     }
 
     /// Serialize the full graph (persistence, §3.4 "persists TCG snapshots
     /// periodically to disk").
     pub fn to_persistent_json(&self) -> Json {
-        let inner = self.inner.read().unwrap();
+        let tcg = self.tcg.read().unwrap();
         let mut nodes = Vec::new();
-        for id in inner.tcg.live_nodes() {
-            let n = inner.tcg.node(id).unwrap();
+        for id in tcg.live_nodes() {
+            let n = tcg.node(id).unwrap();
             let mut entry = vec![
                 ("id", Json::num(id as f64)),
                 ("parent", Json::num(n.parent as f64)),
                 ("call", n.call.to_json()),
                 ("result", n.result.to_json()),
-                ("hits", Json::num(n.hits as f64)),
+                ("hits", Json::num(n.hit_count() as f64)),
             ];
             let stateless: Vec<Json> = n
                 .stateless
@@ -244,7 +352,7 @@ impl TaskCache {
     pub fn from_persistent_json(v: &Json, lpm: LpmConfig) -> Option<TaskCache> {
         let cache = TaskCache::new(lpm, SnapshotPolicy::default(), EvictionPolicy::default());
         {
-            let mut inner = cache.inner.write().unwrap();
+            let mut tcg = cache.tcg.write().unwrap();
             let nodes = v.get("nodes")?.as_arr()?;
             // Persistent ids -> rebuilt ids. Entries are serialized in id
             // order, so parents always precede children.
@@ -256,17 +364,17 @@ impl TaskCache {
                 let call = ToolCall::from_json(entry.get("call")?)?;
                 let result = ToolResult::from_json(entry.get("result")?)?;
                 let parent = *id_map.get(&old_parent)?;
-                let new_id = inner.tcg.insert_child(parent, call, result);
+                let new_id = tcg.insert_child(parent, call, result);
                 if let Some(hits) = entry.get("hits").and_then(|h| h.as_u64()) {
-                    if let Some(n) = inner.tcg.node_mut(new_id) {
-                        n.hits = hits;
+                    if let Some(n) = tcg.node(new_id) {
+                        n.hits.store(hits, Ordering::Relaxed);
                     }
                 }
                 if let Some(stateless) = entry.get("stateless").and_then(|s| s.as_arr()) {
                     for s in stateless {
                         let c = ToolCall::from_json(s.get("call")?)?;
                         let r = ToolResult::from_json(s.get("result")?)?;
-                        inner.tcg.insert_stateless(new_id, c, r);
+                        tcg.insert_stateless(new_id, c, r);
                     }
                 }
                 id_map.insert(old_id, new_id);
@@ -318,16 +426,28 @@ mod tests {
         assert_eq!(node, leaf);
         // Pinned: eviction with budget 0 cannot free it.
         {
-            let mut inner = cache.inner.write().unwrap();
+            let mut tcg = cache.tcg.write().unwrap();
             let policy = EvictionPolicy { max_snapshots: 0, ..Default::default() };
-            assert!(enforce_budget(&mut inner.tcg, &policy).is_empty());
+            assert!(enforce_budget(&mut tcg, &policy).is_empty());
         }
         cache.release(node);
         {
-            let mut inner = cache.inner.write().unwrap();
+            let mut tcg = cache.tcg.write().unwrap();
             let policy = EvictionPolicy { max_snapshots: 0, ..Default::default() };
-            assert_eq!(enforce_budget(&mut inner.tcg, &policy).len(), 1);
+            assert_eq!(enforce_budget(&mut tcg, &policy).len(), 1);
         }
+    }
+
+    #[test]
+    fn release_never_underflows() {
+        let cache = TaskCache::with_defaults();
+        let leaf = cache.record_trajectory(&traj(&["a"]));
+        cache.release(leaf); // never pinned: must stay at zero
+        cache.attach_snapshot(leaf, SnapshotRef { id: 1, bytes: 8, restore_cost: 0.1 });
+        // Still evictable — a double release must not have wrapped to u32::MAX.
+        let mut tcg = cache.tcg.write().unwrap();
+        let policy = EvictionPolicy { max_snapshots: 0, ..Default::default() };
+        assert_eq!(enforce_budget(&mut tcg, &policy).len(), 1);
     }
 
     #[test]
@@ -350,6 +470,63 @@ mod tests {
         assert!(cache.snapshot_count() <= 2);
         assert_eq!(freed_total, 3);
         assert_eq!(cache.stats().snapshots_evicted, 3);
+    }
+
+    #[test]
+    fn reattach_returns_replaced_snapshot_for_cleanup() {
+        let cache = TaskCache::with_defaults();
+        let leaf = cache.record_trajectory(&traj(&["a"]));
+        let first = SnapshotRef { id: 1, bytes: 10, restore_cost: 0.1 };
+        assert!(cache.attach_snapshot(leaf, first).is_empty());
+        let freed = cache
+            .attach_snapshot(leaf, SnapshotRef { id: 2, bytes: 20, restore_cost: 0.1 });
+        assert_eq!(freed, vec![first], "the replaced ref must be handed back");
+        assert_eq!(cache.snapshot_count(), 1);
+        // Re-attaching the same id is a no-op for cleanup purposes.
+        assert!(cache
+            .attach_snapshot(leaf, SnapshotRef { id: 2, bytes: 20, restore_cost: 0.1 })
+            .is_empty());
+    }
+
+    #[test]
+    fn pinned_snapshot_survives_replacement_attempt() {
+        let cache = TaskCache::with_defaults();
+        let leaf = cache.record_trajectory(&traj(&["a", "b"]));
+        let first = SnapshotRef { id: 1, bytes: 10, restore_cost: 0.1 };
+        cache.attach_snapshot(leaf, first);
+        // A miss with a resume offer pins the node: the holder may be about
+        // to fetch snapshot id 1.
+        let Lookup::Miss(m) = cache.lookup(&[sf("a"), sf("b"), sf("x")]) else {
+            panic!("expected miss")
+        };
+        let (node, sref, _) = m.resume.unwrap();
+        assert_eq!(sref.id, 1);
+        // A concurrent attach must not drop the pinned holder's bytes: the
+        // *new* ref is rejected instead.
+        let second = SnapshotRef { id: 2, bytes: 20, restore_cost: 0.1 };
+        assert_eq!(cache.attach_snapshot(leaf, second), vec![second]);
+        assert_eq!(cache.snapshot_bytes(), 10, "incumbent snapshot kept");
+        // After release, replacement proceeds and frees the incumbent.
+        cache.release(node);
+        assert_eq!(cache.attach_snapshot(leaf, second), vec![first]);
+        assert_eq!(cache.snapshot_bytes(), 20);
+    }
+
+    #[test]
+    fn attach_to_missing_node_hands_back_the_new_ref() {
+        let cache = TaskCache::with_defaults();
+        let snap = SnapshotRef { id: 9, bytes: 10, restore_cost: 0.1 };
+        // Node 999 never existed (or was evicted concurrently): the caller
+        // gets the ref back so it can drop the stored bytes.
+        let freed = cache.attach_snapshot(999, snap);
+        assert_eq!(freed, vec![snap]);
+        assert_eq!(cache.snapshot_count(), 0);
+        // ROOT (the wire failure sentinel) is rejected the same way: deep
+        // state must never be attached at depth 0.
+        cache.record_trajectory(&traj(&["a"]));
+        let freed = cache.attach_snapshot(ROOT, snap);
+        assert_eq!(freed, vec![snap]);
+        assert_eq!(cache.snapshot_count(), 0);
     }
 
     #[test]
@@ -383,6 +560,18 @@ mod tests {
             m => panic!("{m:?}"),
         }
         assert_eq!(cache.stats().api_tokens_saved, 500);
+    }
+
+    #[test]
+    fn stats_json_roundtrip() {
+        let cache = TaskCache::with_defaults();
+        cache.record_trajectory(&traj(&["a", "b"]));
+        assert!(cache.lookup(&[sf("a"), sf("b")]).is_hit());
+        assert!(!cache.lookup(&[sf("a"), sf("z")]).is_hit());
+        let stats = cache.stats();
+        let text = stats.to_json().to_string();
+        let parsed = crate::util::json::parse(&text).unwrap();
+        assert_eq!(CacheStats::from_json(&parsed).unwrap(), stats);
     }
 
     #[test]
@@ -430,5 +619,20 @@ mod tests {
         }
         // 1 shared node + 4 t-branches × 10 leaves
         assert_eq!(cache.node_count(), 1 + 4 * 10);
+    }
+
+    #[test]
+    fn read_path_lookups_proceed_in_parallel() {
+        // The read path must take a *shared* lock: a lookup on another
+        // thread completes while this thread holds a read guard. (If
+        // `lookup` took the write lock, the join below would hang.)
+        use std::sync::Arc;
+        let cache = Arc::new(TaskCache::with_defaults());
+        cache.record_trajectory(&traj(&["a"]));
+        let guard = cache.tcg.read().unwrap();
+        let c = Arc::clone(&cache);
+        let h = std::thread::spawn(move || c.lookup(&[sf("a")]).is_hit());
+        assert!(h.join().unwrap());
+        drop(guard);
     }
 }

@@ -10,6 +10,7 @@
 //! still hit.
 
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
 
 use super::key::{ToolCall, ToolResult};
 use crate::util::json::Json;
@@ -27,7 +28,12 @@ pub struct SnapshotRef {
 }
 
 /// One TCG node.
-#[derive(Debug, Clone)]
+///
+/// `hits`, `refcount`, and `warm_fork` are atomics so the read path
+/// (`/get`, `/prefix_match`, `/release`, `/warm`) can update them while
+/// holding only a *read* lock on the graph — the structural fields still
+/// require the write lock.
+#[derive(Debug)]
 pub struct Node {
     pub call: ToolCall,
     pub result: ToolResult,
@@ -40,12 +46,22 @@ pub struct Node {
     /// key -> (call, result). See Appendix B "Addition to TCG".
     pub stateless: HashMap<u64, (ToolCall, ToolResult)>,
     /// Cache hits served from this node (drives eviction scoring).
-    pub hits: u64,
+    pub hits: AtomicU64,
     /// Live references to this node's sandbox (LPM returns increment;
     /// clients decrement after forking). Non-zero pins the snapshot.
-    pub refcount: u32,
+    pub refcount: AtomicU32,
     /// True once a background fork of this node's sandbox is warm (§3.3).
-    pub warm_fork: bool,
+    pub warm_fork: AtomicBool,
+}
+
+impl Node {
+    pub fn hit_count(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    pub fn is_pinned(&self) -> bool {
+        self.refcount.load(Ordering::Acquire) > 0
+    }
 }
 
 /// The per-task tool call graph.
@@ -68,9 +84,9 @@ impl Tcg {
             depth: 0,
             children: HashMap::new(),
             stateless: HashMap::new(),
-            hits: 0,
-            refcount: 0,
-            warm_fork: false,
+            hits: AtomicU64::new(0),
+            refcount: AtomicU32::new(0),
+            warm_fork: AtomicBool::new(false),
         };
         Tcg { nodes: vec![Some(root)], live: 0 }
     }
@@ -125,9 +141,9 @@ impl Tcg {
             depth,
             children: HashMap::new(),
             stateless: HashMap::new(),
-            hits: 0,
-            refcount: 0,
-            warm_fork: false,
+            hits: AtomicU64::new(0),
+            refcount: AtomicU32::new(0),
+            warm_fork: AtomicBool::new(false),
         }));
         if let Some(p) = self.node_mut(parent) {
             p.children.insert(call.key(), id);
@@ -223,7 +239,7 @@ impl Tcg {
     /// True if any node in the subtree rooted at `id` is refcount-pinned.
     pub fn subtree_pinned(&self, id: NodeId) -> bool {
         let Some(n) = self.node(id) else { return false };
-        if n.refcount > 0 {
+        if n.is_pinned() {
             return true;
         }
         n.children
@@ -265,7 +281,7 @@ impl Tcg {
                 ("parent", Json::num(n.parent as f64)),
                 ("tool", Json::str(n.call.descriptor())),
                 ("depth", Json::num(n.depth as f64)),
-                ("hits", Json::num(n.hits as f64)),
+                ("hits", Json::num(n.hit_count() as f64)),
                 ("has_snapshot", Json::Bool(n.snapshot.is_some())),
                 ("stateless_entries", Json::num(n.stateless.len() as f64)),
             ]));
@@ -368,7 +384,7 @@ mod tests {
         let a = g.insert_child(ROOT, call("a"), res(""));
         let b = g.insert_child(a, call("b"), res(""));
         assert!(!g.subtree_pinned(a));
-        g.node_mut(b).unwrap().refcount = 1;
+        g.node_mut(b).unwrap().refcount.store(1, Ordering::Release);
         assert!(g.subtree_pinned(a));
         assert!(g.subtree_pinned(b));
     }

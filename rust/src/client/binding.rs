@@ -1,105 +1,90 @@
-//! Cache bindings: how the `ToolCallExecutor` talks to TVCACHE.
+//! The HTTP cache binding: [`CacheBackend`] over the TVCACHE wire protocol.
 //!
-//! `LocalBinding` embeds the cache in-process (simulation experiments, where
-//! cache latency is *charged* rather than measured). `RemoteBinding` speaks
-//! the HTTP wire protocol to a real TVCACHE server (Figure 8 benchmarks,
-//! integration tests).
+//! [`RemoteBinding`] speaks HTTP/1.1 (keep-alive) to a TVCACHE server — the
+//! paper's `tvclient`. It implements the same [`CacheBackend`] trait as the
+//! in-process [`crate::cache::ShardedCacheService`], so executors and
+//! training loops are agnostic to whether the cache is embedded or remote.
+//!
+//! Network failures degrade to cache misses / no-ops: caching is an
+//! optimization, never a correctness dependency.
 
-use std::sync::{Arc, Mutex};
+use std::sync::Mutex;
 
-use crate::cache::{Lookup, SnapshotCosts, SnapshotRef, TaskCache, ToolCall, ToolResult};
+use crate::cache::{
+    BackendStats, CacheBackend, CacheStats, Lookup, Miss, NodeId, SnapshotCosts,
+    SnapshotPolicy, SnapshotRef, ToolCall, ToolResult,
+};
 use crate::cache::key::trajectory_to_json;
 use crate::sandbox::SandboxSnapshot;
-use crate::server::{hex_decode, hex_encode, SnapshotStore};
-use crate::util::http::HttpClient;
+use crate::server::{hex_decode, hex_encode};
+use crate::util::http::{url_encode, HttpClient};
 use crate::util::json::{self, Json};
 
-/// The executor's view of the cache.
-pub trait CacheBinding: Send {
-    fn lookup(&self, q: &[ToolCall]) -> Lookup;
-    fn record(&self, traj: &[(ToolCall, ToolResult)]) -> usize;
-    fn release(&self, node: usize);
-    fn should_snapshot(&self, costs: SnapshotCosts) -> bool;
-    /// Store `snap` for `node`; returns the snapshot id.
-    fn attach_snapshot(&self, node: usize, snap: SandboxSnapshot) -> u64;
-    fn fetch_snapshot(&self, id: u64) -> Option<SandboxSnapshot>;
-    fn set_warm_fork(&self, node: usize, warm: bool);
-    fn has_warm_fork(&self, node: usize) -> bool;
-}
+/// Idle keep-alive connections retained per binding. One `RemoteBinding` is
+/// shared by all concurrent rollouts of a process, so requests must not
+/// serialize on a single connection: each request checks a connection out
+/// of the pool (or dials a new one) and only the pop/push holds the lock.
+/// Kept below the server's default worker count so idle pooled connections
+/// cannot camp every server thread.
+const MAX_IDLE_CONNECTIONS: usize = 6;
 
-/// In-process binding: `TaskCache` + `SnapshotStore`.
-pub struct LocalBinding {
-    pub cache: Arc<TaskCache>,
-    pub snapshots: Arc<SnapshotStore>,
-}
+/// The server closes keep-alive connections after its 30 s idle read
+/// timeout; a pooled connection older than this is presumed dead and is
+/// redialed rather than reused (avoids a wasted round trip per request
+/// after an idle gap).
+const MAX_IDLE_AGE: std::time::Duration = std::time::Duration::from_secs(10);
 
-impl LocalBinding {
-    pub fn new(cache: Arc<TaskCache>) -> LocalBinding {
-        LocalBinding { cache, snapshots: Arc::new(SnapshotStore::default()) }
-    }
-
-    pub fn shared(cache: Arc<TaskCache>, snapshots: Arc<SnapshotStore>) -> LocalBinding {
-        LocalBinding { cache, snapshots }
-    }
-}
-
-impl CacheBinding for LocalBinding {
-    fn lookup(&self, q: &[ToolCall]) -> Lookup {
-        self.cache.lookup(q)
-    }
-
-    fn record(&self, traj: &[(ToolCall, ToolResult)]) -> usize {
-        self.cache.record_trajectory(traj)
-    }
-
-    fn release(&self, node: usize) {
-        self.cache.release(node);
-    }
-
-    fn should_snapshot(&self, costs: SnapshotCosts) -> bool {
-        self.cache.should_snapshot(costs)
-    }
-
-    fn attach_snapshot(&self, node: usize, snap: SandboxSnapshot) -> u64 {
-        let size = snap.size();
-        let restore_cost = snap.restore_cost;
-        let id = self.snapshots.insert(snap);
-        let freed = self
-            .cache
-            .attach_snapshot(node, SnapshotRef { id, bytes: size, restore_cost });
-        for f in freed {
-            self.snapshots.remove(f.id);
-        }
-        id
-    }
-
-    fn fetch_snapshot(&self, id: u64) -> Option<SandboxSnapshot> {
-        self.snapshots.get(id)
-    }
-
-    fn set_warm_fork(&self, node: usize, warm: bool) {
-        self.cache.set_warm_fork(node, warm);
-    }
-
-    fn has_warm_fork(&self, node: usize) -> bool {
-        self.cache.has_warm_fork(node)
-    }
-}
-
-/// HTTP binding to a TVCACHE server (the `tvclient` analogue).
+/// HTTP binding to a TVCACHE server.
 pub struct RemoteBinding {
-    task: String,
-    client: Mutex<HttpClient>,
+    addr: std::net::SocketAddr,
+    pool: Mutex<Vec<(HttpClient, std::time::Instant)>>,
 }
 
 impl RemoteBinding {
-    pub fn connect(addr: std::net::SocketAddr, task: impl Into<String>) -> RemoteBinding {
-        RemoteBinding { task: task.into(), client: Mutex::new(HttpClient::connect(addr)) }
+    pub fn connect(addr: std::net::SocketAddr) -> RemoteBinding {
+        RemoteBinding { addr, pool: Mutex::new(Vec::new()) }
+    }
+
+    /// Run `f` with a pooled connection; I/O happens outside the pool lock.
+    /// The connection returns to the pool only on success — after an error
+    /// the stream may be desynchronized (a late response still in flight
+    /// could be read as the answer to an unrelated later request), so it
+    /// is dropped and the next request redials.
+    fn with_client(
+        &self,
+        f: impl FnOnce(&mut HttpClient) -> std::io::Result<(u16, Vec<u8>)>,
+    ) -> std::io::Result<(u16, Vec<u8>)> {
+        let pooled = {
+            let mut pool = self.pool.lock().unwrap();
+            loop {
+                match pool.pop() {
+                    Some((c, last)) if last.elapsed() < MAX_IDLE_AGE => break Some(c),
+                    Some(_) => continue, // presumed dead: drop, try the next
+                    None => break None,
+                }
+            }
+        };
+        let mut client = pooled.unwrap_or_else(|| HttpClient::connect(self.addr));
+        let out = f(&mut client);
+        if out.is_ok() {
+            let mut pool = self.pool.lock().unwrap();
+            if pool.len() < MAX_IDLE_CONNECTIONS {
+                pool.push((client, std::time::Instant::now()));
+            }
+        }
+        out
     }
 
     fn post(&self, path: &str, body: String) -> Option<Json> {
-        let mut c = self.client.lock().unwrap();
-        let (status, resp) = c.post(path, body.as_bytes()).ok()?;
+        let (status, resp) = self.with_client(|c| c.post(path, body.as_bytes())).ok()?;
+        if status != 200 {
+            return None;
+        }
+        json::parse(std::str::from_utf8(&resp).ok()?).ok()
+    }
+
+    fn get(&self, path_and_query: &str) -> Option<Json> {
+        let (status, resp) = self.with_client(|c| c.get(path_and_query)).ok()?;
         if status != 200 {
             return None;
         }
@@ -107,21 +92,18 @@ impl RemoteBinding {
     }
 }
 
-impl CacheBinding for RemoteBinding {
-    fn lookup(&self, q: &[ToolCall]) -> Lookup {
+impl CacheBackend for RemoteBinding {
+    fn lookup(&self, task: &str, q: &[ToolCall]) -> Lookup {
         let body = Json::obj(vec![
-            ("task", Json::str(self.task.clone())),
+            ("task", Json::str(task)),
             ("trajectory", trajectory_to_json(q)),
         ])
         .to_string();
+        // Safe to retry transparently: resume offers over HTTP are unpinned
+        // server-side, so a replayed lookup has no pin side effect.
         let Some(v) = self.post("/prefix_match", body) else {
-            // Network failure degrades to a full miss — caching is an
-            // optimization, never a correctness dependency.
-            return Lookup::Miss(crate::cache::Miss {
-                matched_node: 0,
-                matched_calls: 0,
-                resume: None,
-            });
+            // Network failure degrades to a full miss.
+            return Lookup::Miss(Miss { matched_node: 0, matched_calls: 0, resume: None });
         };
         if v.get("hit").and_then(|h| h.as_bool()) == Some(true) {
             let node = v.get("node").and_then(|n| n.as_u64()).unwrap_or(0) as usize;
@@ -142,7 +124,7 @@ impl CacheBinding for RemoteBinding {
                     replay,
                 )
             });
-            Lookup::Miss(crate::cache::Miss {
+            Lookup::Miss(Miss {
                 matched_node: v.get("matched_node").and_then(|n| n.as_u64()).unwrap_or(0)
                     as usize,
                 matched_calls: v.get("matched_calls").and_then(|n| n.as_u64()).unwrap_or(0)
@@ -152,13 +134,13 @@ impl CacheBinding for RemoteBinding {
         }
     }
 
-    fn record(&self, traj: &[(ToolCall, ToolResult)]) -> usize {
+    fn insert(&self, task: &str, traj: &[(ToolCall, ToolResult)]) -> NodeId {
         let entries: Vec<Json> = traj
             .iter()
             .map(|(c, r)| Json::obj(vec![("call", c.to_json()), ("result", r.to_json())]))
             .collect();
         let body = Json::obj(vec![
-            ("task", Json::str(self.task.clone())),
+            ("task", Json::str(task)),
             ("trajectory", Json::Arr(entries)),
         ])
         .to_string();
@@ -167,23 +149,23 @@ impl CacheBinding for RemoteBinding {
             .unwrap_or(0) as usize
     }
 
-    fn release(&self, node: usize) {
+    fn release(&self, task: &str, node: NodeId) {
         let body = Json::obj(vec![
-            ("task", Json::str(self.task.clone())),
+            ("task", Json::str(task)),
             ("node", Json::num(node as f64)),
         ])
         .to_string();
         self.post("/release", body);
     }
 
-    fn should_snapshot(&self, costs: SnapshotCosts) -> bool {
+    fn should_snapshot(&self, _task: &str, costs: SnapshotCosts) -> bool {
         // Policy evaluated client-side (the server applies budget on attach).
-        crate::cache::SnapshotPolicy::default().should_snapshot(costs)
+        SnapshotPolicy::default().should_snapshot(costs)
     }
 
-    fn attach_snapshot(&self, node: usize, snap: SandboxSnapshot) -> u64 {
+    fn store_snapshot(&self, task: &str, node: NodeId, snap: SandboxSnapshot) -> u64 {
         let body = Json::obj(vec![
-            ("task", Json::str(self.task.clone())),
+            ("task", Json::str(task)),
             ("node", Json::num(node as f64)),
             ("bytes_hex", Json::str(hex_encode(&snap.bytes))),
             ("serialize_cost", Json::num(snap.serialize_cost)),
@@ -195,13 +177,8 @@ impl CacheBinding for RemoteBinding {
             .unwrap_or(0)
     }
 
-    fn fetch_snapshot(&self, id: u64) -> Option<SandboxSnapshot> {
-        let mut c = self.client.lock().unwrap();
-        let (status, resp) = c.get(&format!("/snapshot?id={id}")).ok()?;
-        if status != 200 {
-            return None;
-        }
-        let v = json::parse(std::str::from_utf8(&resp).ok()?).ok()?;
+    fn fetch_snapshot(&self, task: &str, id: u64) -> Option<SandboxSnapshot> {
+        let v = self.get(&format!("/snapshot?task={}&id={id}", url_encode(task)))?;
         Some(SandboxSnapshot {
             bytes: hex_decode(v.get("bytes_hex")?.as_str()?)?,
             serialize_cost: v.get("serialize_cost")?.as_f64()?,
@@ -209,9 +186,9 @@ impl CacheBinding for RemoteBinding {
         })
     }
 
-    fn set_warm_fork(&self, node: usize, warm: bool) {
+    fn set_warm_fork(&self, task: &str, node: NodeId, warm: bool) {
         let body = Json::obj(vec![
-            ("task", Json::str(self.task.clone())),
+            ("task", Json::str(task)),
             ("node", Json::num(node as f64)),
             ("warm", Json::Bool(warm)),
         ])
@@ -219,7 +196,21 @@ impl CacheBinding for RemoteBinding {
         self.post("/warm", body);
     }
 
-    fn has_warm_fork(&self, _node: usize) -> bool {
-        false // remote warm-state is advisory; executor re-checks via resume
+    fn has_warm_fork(&self, task: &str, node: NodeId) -> bool {
+        self.get(&format!("/warm?task={}&node={node}", url_encode(task)))
+            .and_then(|v| v.get("warm").and_then(|w| w.as_bool()))
+            .unwrap_or(false)
+    }
+
+    fn stats(&self, task: &str) -> CacheStats {
+        self.get(&format!("/stats?task={}", url_encode(task)))
+            .and_then(|v| CacheStats::from_json(&v))
+            .unwrap_or_default()
+    }
+
+    fn service_stats(&self) -> BackendStats {
+        self.get("/stats")
+            .and_then(|v| BackendStats::from_json(&v))
+            .unwrap_or_default()
     }
 }

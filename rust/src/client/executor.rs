@@ -16,8 +16,7 @@
 
 use std::sync::Arc;
 
-use super::binding::CacheBinding;
-use crate::cache::{Lookup, SnapshotCosts, ToolCall, ToolResult};
+use crate::cache::{CacheBackend, Lookup, SnapshotCosts, ToolCall, ToolResult};
 use crate::sandbox::{SandboxFactory, ToolExecutionEnvironment};
 
 /// Executor tunables (defaults match the paper's measured constants).
@@ -71,9 +70,13 @@ pub struct CallOutcome {
     pub hit: bool,
 }
 
-/// Per-rollout executor.
+/// Per-rollout executor. One executor serves one rollout of one task; the
+/// backend (in-process sharded service or HTTP binding) is shared across
+/// every concurrent rollout.
 pub struct ToolCallExecutor {
-    binding: Arc<dyn CacheBinding>,
+    backend: Arc<dyn CacheBackend>,
+    /// Task id the backend routes on (§4.5 task-id sharding).
+    task: String,
     factory: Arc<dyn SandboxFactory>,
     task_seed: u64,
     cfg: ExecutorConfig,
@@ -89,13 +92,15 @@ pub struct ToolCallExecutor {
 
 impl ToolCallExecutor {
     pub fn new(
-        binding: Arc<dyn CacheBinding>,
+        backend: Arc<dyn CacheBackend>,
+        task: impl Into<String>,
         factory: Arc<dyn SandboxFactory>,
         task_seed: u64,
         cfg: ExecutorConfig,
     ) -> ToolCallExecutor {
         ToolCallExecutor {
-            binding,
+            backend,
+            task: task.into(),
             factory,
             task_seed,
             cfg,
@@ -165,7 +170,7 @@ impl ToolCallExecutor {
         q.push(call.clone());
 
         let mut charged = self.cfg.cache_get_latency;
-        match self.binding.lookup(&q) {
+        match self.backend.lookup(&self.task, &q) {
             Lookup::Hit { node: _, result } => {
                 self.hits += 1;
                 self.history.push((call, result.clone()));
@@ -183,11 +188,14 @@ impl ToolCallExecutor {
                 self.valid_upto = self.history.len();
 
                 // Record the extended trajectory (the /put of Figure 4).
-                let node = self.binding.record(&self.history);
+                let node = self.backend.insert(&self.task, &self.history);
 
                 // §3.3 selective snapshotting, on the critical path; the
-                // fork instantiation happens in the background.
-                if call.mutates_state {
+                // fork instantiation happens in the background. node 0 is
+                // the ROOT/failure sentinel (a remote insert that lost the
+                // network degrades to 0): attaching this sandbox's deep
+                // state there would let later rollouts resume wrong state.
+                if call.mutates_state && node != 0 {
                     let sb = self.sandbox.as_ref().unwrap();
                     let snap = sb.snapshot();
                     let costs = SnapshotCosts {
@@ -195,11 +203,14 @@ impl ToolCallExecutor {
                         serialize_cost: snap.serialize_cost,
                         restore_cost: snap.restore_cost,
                     };
-                    if self.binding.should_snapshot(costs) {
+                    if self.backend.should_snapshot(&self.task, costs) {
                         charged += snap.serialize_cost;
-                        self.binding.attach_snapshot(node, snap);
-                        if self.cfg.background_forks {
-                            self.binding.set_warm_fork(node, true);
+                        // id 0 = the store rejected the attach (node pinned
+                        // or evicted concurrently): no snapshot was kept,
+                        // so there is nothing to background-fork.
+                        let id = self.backend.store_snapshot(&self.task, node, snap);
+                        if id != 0 && self.cfg.background_forks {
+                            self.backend.set_warm_fork(&self.task, node, true);
                         }
                     }
                 }
@@ -210,43 +221,64 @@ impl ToolCallExecutor {
 
     /// Bring `self.sandbox` to the state implied by `q[..q.len()-1]`.
     /// Returns the charged reconstruction latency.
+    ///
+    /// A miss with a resume offer arrives with the resume node *pinned*
+    /// (§3.4 Concurrency Control): every path below either adopts the
+    /// snapshot (adopt_snapshot releases after forking) or explicitly hands
+    /// the pin back — a leaked pin would block eviction of that snapshot
+    /// forever.
     fn ensure_state(&mut self, q: &[ToolCall], miss: &crate::cache::Miss) -> f64 {
         let prefix_len = q.len() - 1;
 
-        // Fast path: the live sandbox is already up to date.
+        // Fast path: the live sandbox is already up to date. The lookup
+        // still pinned the resume node; return the pin unused.
         if self.sandbox.is_some() && self.valid_upto == prefix_len {
+            if let Some((node, _, _)) = miss.resume {
+                self.backend.release(&self.task, node);
+            }
             return 0.0;
         }
 
-        // Option A: fork the snapshot the LPM offered.
-        // `replay_from` is the resume node's stateful depth; map it to an
-        // index in q.
+        // Option B's starting point: catch-up replay in the live sandbox.
+        let live_start = if self.sandbox.is_some() { Some(self.valid_upto) } else { None };
+
+        // Option A: fork the snapshot the LPM offered. `replay_from` is the
+        // resume node's stateful depth; map it to an index in q. The plan
+        // is decided *before* fetching, so a live sandbox that is already
+        // ahead of the snapshot never pays the (potentially large) payload
+        // transfer.
         let snapshot_plan = miss.resume.and_then(|(node, snap, depth)| {
             let idx = if self.cfg.stateful_filtering {
                 stateful_depth_to_index(q, depth)
             } else {
                 depth.min(prefix_len)
             };
-            self.binding.fetch_snapshot(snap.id).map(|s| (node, s, idx))
+            if live_start.is_some_and(|live| live > idx) {
+                // Live sandbox is ahead of the snapshot: keep it, return
+                // the pin unused.
+                self.backend.release(&self.task, node);
+                return None;
+            }
+            match self.backend.fetch_snapshot(&self.task, snap.id) {
+                Some(s) => Some((node, s, idx)),
+                None => {
+                    // Snapshot gone (evicted / transport failure): the pin
+                    // from the lookup must still be returned.
+                    self.backend.release(&self.task, node);
+                    None
+                }
+            }
         });
 
-        // Option B: catch-up replay in the live sandbox from valid_upto.
         // Option C: fresh sandbox, full replay.
-        // Choose the plan with the least estimated replay work.
-        let live_start = if self.sandbox.is_some() { Some(self.valid_upto) } else { None };
-
         let mut charged = 0.0;
         let replay_start = match (snapshot_plan, live_start) {
-            (Some((node, snap, idx)), Some(live)) if idx >= live => {
-                // Snapshot gets us at least as far as the live sandbox.
+            (Some((node, snap, idx)), _) => {
+                // Snapshot gets us at least as far as any live sandbox.
                 charged += self.adopt_snapshot(node, snap);
                 idx
             }
-            (Some((node, snap, idx)), None) => {
-                charged += self.adopt_snapshot(node, snap);
-                idx
-            }
-            (_, Some(live)) => live, // keep the live sandbox, replay delta
+            (None, Some(live)) => live, // keep the live sandbox, replay delta
             (None, None) => {
                 let mut sb = self.factory.create(self.task_seed);
                 let start = sb.start();
@@ -275,15 +307,15 @@ impl ToolCallExecutor {
         node: usize,
         snap: crate::sandbox::SandboxSnapshot,
     ) -> f64 {
-        let charged = if self.binding.has_warm_fork(node) {
+        let charged = if self.backend.has_warm_fork(&self.task, node) {
             // §3.3 reactive forking found a background-instantiated copy.
-            self.binding.set_warm_fork(node, false);
+            self.backend.set_warm_fork(&self.task, node, false);
             self.cfg.warm_fork_attach
         } else {
             snap.restore_cost
         };
         self.sandbox = Some(self.factory.restore(&snap));
-        self.binding.release(node);
+        self.backend.release(&self.task, node);
         charged
     }
 }
@@ -308,29 +340,22 @@ pub fn stateful_depth_to_index(q: &[ToolCall], depth: usize) -> usize {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::cache::TaskCache;
-    use crate::client::binding::LocalBinding;
+    use crate::cache::ShardedCacheService;
     use crate::sandbox::TerminalFactory;
 
-    fn shared_binding(cache: Arc<TaskCache>) -> Arc<LocalBinding> {
-        Arc::new(LocalBinding::new(cache))
+    const TASK: &str = "task-under-test";
+
+    fn svc() -> Arc<ShardedCacheService> {
+        Arc::new(ShardedCacheService::new(2))
     }
 
     fn make(
-        cache: Arc<TaskCache>,
-        cfg: ExecutorConfig,
-        seed: u64,
-    ) -> ToolCallExecutor {
-        make_with(shared_binding(cache), cfg, seed)
-    }
-
-    fn make_with(
-        binding: Arc<LocalBinding>,
+        backend: Arc<ShardedCacheService>,
         cfg: ExecutorConfig,
         seed: u64,
     ) -> ToolCallExecutor {
         let factory = Arc::new(TerminalFactory { medium: false });
-        ToolCallExecutor::new(binding, factory, seed, cfg)
+        ToolCallExecutor::new(backend, TASK, factory, seed, cfg)
     }
 
     fn bash(cmd: &str) -> ToolCall {
@@ -340,7 +365,7 @@ mod tests {
 
     #[test]
     fn second_rollout_hits_first_rollouts_calls() {
-        let cache = Arc::new(TaskCache::with_defaults());
+        let cache = svc();
         let cmds = ["pip install libdep1", "make", "make test"];
 
         let mut r1 = make(Arc::clone(&cache), ExecutorConfig::default(), 1);
@@ -368,7 +393,7 @@ mod tests {
             "make",
             "cat cfg.txt",
         ];
-        let cache = Arc::new(TaskCache::with_defaults());
+        let cache = svc();
         let mut warm = make(Arc::clone(&cache), ExecutorConfig::default(), 1);
         let warm_out: Vec<String> =
             cmds.iter().map(|c| warm.call(bash(c)).result.output).collect();
@@ -377,11 +402,7 @@ mod tests {
         let cached_out: Vec<String> =
             cmds.iter().map(|c| cached.call(bash(c)).result.output).collect();
 
-        let mut baseline = make(
-            Arc::new(TaskCache::with_defaults()),
-            ExecutorConfig::cacheless(),
-            1,
-        );
+        let mut baseline = make(svc(), ExecutorConfig::cacheless(), 1);
         let base_out: Vec<String> =
             cmds.iter().map(|c| baseline.call(bash(c)).result.output).collect();
 
@@ -393,7 +414,7 @@ mod tests {
     fn stateful_divergence_never_serves_stale_value() {
         // §1 example: rollout B patches differently, then cats — must see
         // its own patch, not rollout A's cached cat.
-        let cache = Arc::new(TaskCache::with_defaults());
+        let cache = svc();
         let f = "src/module_1.py";
         let mut a = make(Arc::clone(&cache), ExecutorConfig::default(), 1);
         a.call(bash(&format!("patch {f} s/return x - 2/return x + 2/")));
@@ -409,7 +430,7 @@ mod tests {
 
     #[test]
     fn miss_after_hits_reconstructs_state_correctly() {
-        let cache = Arc::new(TaskCache::with_defaults());
+        let cache = svc();
         let mut a = make(Arc::clone(&cache), ExecutorConfig::default(), 2);
         for c in ["echo alpha > f1", "echo beta > f2", "make"] {
             a.call(bash(c));
@@ -425,8 +446,7 @@ mod tests {
 
     #[test]
     fn cacheless_never_hits_and_charges_start() {
-        let cache = Arc::new(TaskCache::with_defaults());
-        let mut x = make(cache, ExecutorConfig::cacheless(), 3);
+        let mut x = make(svc(), ExecutorConfig::cacheless(), 3);
         let o = x.call(bash("cat README.md"));
         assert!(!o.hit);
         // Charged includes the 4 s container start.
@@ -441,15 +461,14 @@ mod tests {
     fn snapshot_resume_cheaper_than_full_replay() {
         // Build an expensive prefix (make test ⇒ snapshotted), then a new
         // rollout diverges after it: resume must avoid re-running the build.
-        let cache = Arc::new(TaskCache::with_defaults());
-        let binding = shared_binding(Arc::clone(&cache));
-        let mut a = make_with(Arc::clone(&binding), ExecutorConfig::default(), 1);
+        let cache = svc();
+        let mut a = make(Arc::clone(&cache), ExecutorConfig::default(), 1);
         a.call(bash("pip install libdep1"));
         a.call(bash("make"));
         a.call(bash("make test")); // expensive ⇒ snapshot stored
-        assert!(cache.snapshot_count() > 0, "expensive calls must snapshot");
+        assert!(cache.task(TASK).snapshot_count() > 0, "expensive calls must snapshot");
 
-        let mut b = make_with(binding, ExecutorConfig::default(), 1);
+        let mut b = make(cache, ExecutorConfig::default(), 1);
         for c in ["pip install libdep1", "make", "make test"] {
             assert!(b.call(bash(c)).hit);
         }
@@ -458,6 +477,32 @@ mod tests {
         let o = b.call(bash("echo done > status.txt"));
         assert!(!o.hit);
         assert!(o.charged < 5.0, "resume too expensive: {}", o.charged);
+    }
+
+    #[test]
+    fn miss_paths_release_resume_pins() {
+        // Every miss path must hand the lookup's resume pin back — a
+        // leaked pin blocks snapshot eviction forever (§3.4).
+        let cache = svc();
+        let mut a = make(Arc::clone(&cache), ExecutorConfig::default(), 1);
+        a.call(bash("pip install libdep1"));
+        a.call(bash("make"));
+        a.call(bash("make test")); // expensive ⇒ snapshot stored
+        assert!(cache.task(TASK).snapshot_count() > 0);
+        // Same rollout continues: its live sandbox is up to date, so these
+        // divergent misses take the fast path — pins must still come back.
+        a.call(bash("echo more >> log.txt"));
+        a.call(bash("echo again >> log.txt"));
+        assert_eq!(cache.task(TASK).pinned_node_count(), 0, "fast path leaked a pin");
+
+        // Fresh rollout: hits the prefix, then diverges via the snapshot
+        // fork (adopt path releases after forking).
+        let mut b = make(Arc::clone(&cache), ExecutorConfig::default(), 1);
+        for c in ["pip install libdep1", "make", "make test"] {
+            assert!(b.call(bash(c)).hit);
+        }
+        b.call(bash("echo done > status.txt"));
+        assert_eq!(cache.task(TASK).pinned_node_count(), 0, "adopt path leaked a pin");
     }
 
     #[test]
@@ -472,7 +517,7 @@ mod tests {
             "make",
             "make test",
         ];
-        let cache = Arc::new(TaskCache::with_defaults());
+        let cache = svc();
         for seed_rollout in 0..3 {
             let mut e = make(Arc::clone(&cache), ExecutorConfig::default(), 1);
             let outs: Vec<String> =

@@ -1,8 +1,11 @@
-//! Client library (the paper's `tvclient`): cache bindings and the
-//! `ToolCallExecutor` the RL training loop integrates with (Figure 4).
+//! Client library (the paper's `tvclient`): the HTTP `CacheBackend`
+//! binding and the `ToolCallExecutor` the RL training loop integrates with
+//! (Figure 4). Both the remote binding here and the in-process
+//! [`crate::cache::ShardedCacheService`] implement the same
+//! [`crate::cache::CacheBackend`] trait.
 
 pub mod binding;
 pub mod executor;
 
-pub use binding::{CacheBinding, LocalBinding, RemoteBinding};
+pub use binding::RemoteBinding;
 pub use executor::{CallOutcome, ExecutorConfig, ToolCallExecutor};

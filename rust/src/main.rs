@@ -1,26 +1,33 @@
 //! TVCACHE launcher.
 //!
 //! ```text
-//! tvcache serve    --addr 127.0.0.1:8117 --workers 8
+//! tvcache serve    --addr 127.0.0.1:8117 --workers 8 --shards 8
 //! tvcache workload --name terminal-easy|terminal-medium|sql|ego
-//!                  [--tasks N] [--epochs N] [--no-cache]
+//!                  [--tasks N] [--epochs N] [--shards N] [--no-cache]
 //! ```
 
 use tvcache::bench::print_table;
-use tvcache::server::serve;
+use tvcache::server::{serve_with, DEFAULT_SHARDS};
 use tvcache::train::{run_workload, SimOptions};
 use tvcache::util::cli::Args;
 use tvcache::workloads::{Workload, WorkloadConfig};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     let args = Args::from_env();
     match args.positional.first().map(|s| s.as_str()) {
         Some("serve") => {
             let addr = args.str_or("addr", "127.0.0.1:8117");
             let workers = args.usize_or("workers", 8);
-            let (server, _svc) = serve(&addr, workers)?;
-            println!("tvcache server listening on {}", server.addr());
-            println!("endpoints: /get /prefix_match /put /release /snapshot /stats /viz /ping");
+            let shards = args.usize_or("shards", DEFAULT_SHARDS);
+            let (server, svc) = serve_with(&addr, workers, shards)?;
+            println!(
+                "tvcache server listening on {} ({} shards)",
+                server.addr(),
+                svc.shard_count()
+            );
+            println!(
+                "endpoints: /get /prefix_match /put /release /snapshot /warm /stats /viz /ping"
+            );
             loop {
                 std::thread::sleep(std::time::Duration::from_secs(3600));
             }
@@ -32,12 +39,13 @@ fn main() -> anyhow::Result<()> {
                 "terminal-medium" => Workload::TerminalMedium,
                 "sql" => Workload::SkyRlSql,
                 "ego" => Workload::EgoSchema,
-                other => anyhow::bail!("unknown workload {other}"),
+                other => return Err(format!("unknown workload {other}").into()),
             };
             let cfg = WorkloadConfig::config_for(workload);
             let mut opts =
                 SimOptions::from_config(&cfg, args.usize_or("tasks", 8), !args.bool("no-cache"));
             opts.epochs = args.usize_or("epochs", cfg.epochs);
+            opts.shards = args.usize_or("shards", opts.shards);
             let m = run_workload(&cfg, &opts);
             let rows: Vec<Vec<String>> = m
                 .epoch_hit_rates

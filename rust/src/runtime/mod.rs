@@ -1,17 +1,39 @@
 //! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt`) and
 //! executes them on the CPU PJRT client.
 //!
-//! This is the only module that touches the `xla` crate. Python never runs
-//! at post-training time: `make artifacts` lowered the Layer-2 JAX graphs
-//! (which call the Layer-1 Pallas kernels) to HLO text once; here we
-//! compile them (`HloModuleProto::from_text_file` → `client.compile`) and
-//! thread the flat parameter vector through init → forward → train_step.
+//! The PJRT-backed implementation lives in [`pjrt`] behind the `pjrt` cargo
+//! feature: it is the only code in the crate that needs the external `xla`
+//! crate, which the offline toolchain does not ship. Without the feature a
+//! stub `AgentRuntime` with the identical API compiles in; every call
+//! returns a [`RuntimeError`] telling the operator to rebuild with
+//! `--features pjrt` (after vendoring the `xla` crate).
+//!
+//! Python never runs at post-training time either way: `make artifacts`
+//! lowers the Layer-2 JAX graphs (which call the Layer-1 Pallas kernels) to
+//! HLO text once; the PJRT build compiles them and threads the flat
+//! parameter vector through init → forward → train_step.
 
-use std::path::{Path, PathBuf};
-
-use anyhow::{anyhow, Context, Result};
+use std::path::Path;
 
 use crate::util::json::{self, Json};
+
+/// Runtime-layer error (artifact loading, shape checks, PJRT failures).
+#[derive(Debug, Clone)]
+pub struct RuntimeError(pub String);
+
+impl std::fmt::Display for RuntimeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "runtime: {}", self.0)
+    }
+}
+
+impl std::error::Error for RuntimeError {}
+
+pub type Result<T> = std::result::Result<T, RuntimeError>;
+
+pub(crate) fn rerr(msg: impl Into<String>) -> RuntimeError {
+    RuntimeError(msg.into())
+}
 
 /// Model metadata written by `python/compile/aot.py`.
 #[derive(Debug, Clone)]
@@ -28,11 +50,15 @@ pub struct ModelMeta {
 
 impl ModelMeta {
     pub fn load(dir: &Path) -> Result<ModelMeta> {
-        let text = std::fs::read_to_string(dir.join("meta.json"))
-            .with_context(|| format!("reading {}/meta.json — run `make artifacts`", dir.display()))?;
-        let v = json::parse(&text).map_err(|e| anyhow!("meta.json: {e}"))?;
+        let path = dir.join("meta.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            rerr(format!("reading {} — run `make artifacts` ({e})", path.display()))
+        })?;
+        let v = json::parse(&text).map_err(|e| rerr(format!("meta.json: {e}")))?;
         let get = |k: &str| -> Result<f64> {
-            v.get(k).and_then(Json::as_f64).ok_or_else(|| anyhow!("meta.json missing {k}"))
+            v.get(k)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| rerr(format!("meta.json missing {k}")))
         };
         Ok(ModelMeta {
             param_count: get("param_count")? as usize,
@@ -47,114 +73,66 @@ impl ModelMeta {
     }
 }
 
-/// The agent runtime: compiled executables + parameter/optimizer state.
-pub struct AgentRuntime {
-    client: xla::PjRtClient,
-    init: xla::PjRtLoadedExecutable,
-    fwd: xla::PjRtLoadedExecutable,
-    train: xla::PjRtLoadedExecutable,
-    pub meta: ModelMeta,
-    pub params: Vec<f32>,
-    m_state: Vec<f32>,
-    v_state: Vec<f32>,
-    step: f32,
+#[cfg(feature = "pjrt")]
+mod pjrt;
+#[cfg(feature = "pjrt")]
+pub use pjrt::AgentRuntime;
+
+#[cfg(not(feature = "pjrt"))]
+mod stub {
+    use super::{rerr, ModelMeta, Result};
+    use std::path::Path;
+
+    const MSG: &str =
+        "built without the `pjrt` feature — vendor the `xla` crate and rebuild \
+         with `cargo build --features pjrt` to run the PJRT artifacts";
+
+    /// API-compatible stand-in for the PJRT-backed runtime.
+    pub struct AgentRuntime {
+        pub meta: ModelMeta,
+        pub params: Vec<f32>,
+    }
+
+    impl AgentRuntime {
+        pub fn load(_dir: impl AsRef<Path>) -> Result<AgentRuntime> {
+            Err(rerr(MSG))
+        }
+
+        pub fn platform(&self) -> String {
+            "stub".to_string()
+        }
+
+        pub fn init_params(&mut self, _seed: i32) -> Result<()> {
+            Err(rerr(MSG))
+        }
+
+        pub fn forward(&self, _tokens: &[i32], _lens: &[i32]) -> Result<Vec<Vec<f32>>> {
+            Err(rerr(MSG))
+        }
+
+        pub fn train_step(&mut self, _batch: &crate::train::PackedBatch) -> Result<f32> {
+            Err(rerr(MSG))
+        }
+    }
 }
 
-impl AgentRuntime {
-    /// Load and compile all three artifacts from `dir` (e.g. `artifacts/`).
-    pub fn load(dir: impl AsRef<Path>) -> Result<AgentRuntime> {
-        let dir = dir.as_ref();
-        let meta = ModelMeta::load(dir)?;
-        let client = xla::PjRtClient::cpu()?;
-        let compile = |name: &str| -> Result<xla::PjRtLoadedExecutable> {
-            let path: PathBuf = dir.join(format!("{name}.hlo.txt"));
-            let proto = xla::HloModuleProto::from_text_file(
-                path.to_str().ok_or_else(|| anyhow!("bad path"))?,
-            )?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            Ok(client.compile(&comp)?)
-        };
-        let init = compile("agent_init")?;
-        let fwd = compile("agent_fwd")?;
-        let train = compile("agent_train")?;
-        let p = meta.param_count;
-        Ok(AgentRuntime {
-            client,
-            init,
-            fwd,
-            train,
-            meta,
-            params: vec![0.0; p],
-            m_state: vec![0.0; p],
-            v_state: vec![0.0; p],
-            step: 0.0,
-        })
+#[cfg(not(feature = "pjrt"))]
+pub use stub::AgentRuntime;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn model_meta_load_reports_missing_dir() {
+        let err = ModelMeta::load(Path::new("/nonexistent/artifacts")).unwrap_err();
+        assert!(err.to_string().contains("make artifacts"), "{err}");
     }
 
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Initialize parameters from a seed (runs `agent_init.hlo.txt`).
-    pub fn init_params(&mut self, seed: i32) -> Result<()> {
-        let seed_lit = xla::Literal::vec1(&[seed]);
-        let out = self.init.execute::<xla::Literal>(&[seed_lit])?[0][0].to_literal_sync()?;
-        let tuple = out.to_tuple1()?;
-        self.params = tuple.to_vec::<f32>()?;
-        anyhow::ensure!(
-            self.params.len() == self.meta.param_count,
-            "param count mismatch: {} vs meta {}",
-            self.params.len(),
-            self.meta.param_count
-        );
-        self.m_state = vec![0.0; self.params.len()];
-        self.v_state = vec![0.0; self.params.len()];
-        self.step = 0.0;
-        Ok(())
-    }
-
-    /// Next-token logits for a batch of token prefixes.
-    /// `tokens`: `[rollout_batch][seq]` (padded), `lens`: per-row lengths.
-    /// Returns `[rollout_batch][vocab]` logits.
-    pub fn forward(&self, tokens: &[i32], lens: &[i32]) -> Result<Vec<Vec<f32>>> {
-        let b = self.meta.rollout_batch;
-        let t = self.meta.seq;
-        anyhow::ensure!(tokens.len() == b * t, "tokens shape");
-        anyhow::ensure!(lens.len() == b, "lens shape");
-        let params = xla::Literal::vec1(&self.params);
-        let tok = xla::Literal::vec1(tokens).reshape(&[b as i64, t as i64])?;
-        let lens_l = xla::Literal::vec1(lens);
-        let out = self.fwd.execute::<xla::Literal>(&[params, tok, lens_l])?[0][0]
-            .to_literal_sync()?;
-        let logits = out.to_tuple1()?.to_vec::<f32>()?;
-        let v = self.meta.vocab;
-        anyhow::ensure!(logits.len() == b * v, "logits shape");
-        Ok(logits.chunks(v).map(|c| c.to_vec()).collect())
-    }
-
-    /// One GRPO/Adam step (runs `agent_train.hlo.txt`); returns the loss.
-    pub fn train_step(&mut self, batch: &crate::train::PackedBatch) -> Result<f32> {
-        let bt = self.meta.train_batch;
-        let t = self.meta.seq;
-        anyhow::ensure!(batch.batch == bt && batch.seq == t, "batch shape mismatch");
-        self.step += 1.0;
-        let params = xla::Literal::vec1(&self.params);
-        let m = xla::Literal::vec1(&self.m_state);
-        let v = xla::Literal::vec1(&self.v_state);
-        let step = xla::Literal::vec1(&[self.step]);
-        let tok = xla::Literal::vec1(&batch.tokens).reshape(&[bt as i64, t as i64])?;
-        let mask = xla::Literal::vec1(&batch.mask).reshape(&[bt as i64, t as i64])?;
-        let adv = xla::Literal::vec1(&batch.adv);
-        let out = self
-            .train
-            .execute::<xla::Literal>(&[params, m, v, step, tok, mask, adv])?[0][0]
-            .to_literal_sync()?;
-        let parts = out.to_tuple()?;
-        anyhow::ensure!(parts.len() == 4, "train_step returns 4 outputs");
-        self.params = parts[0].to_vec::<f32>()?;
-        self.m_state = parts[1].to_vec::<f32>()?;
-        self.v_state = parts[2].to_vec::<f32>()?;
-        let loss = parts[3].to_vec::<f32>()?;
-        Ok(loss[0])
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn stub_runtime_fails_with_guidance() {
+        let err = AgentRuntime::load("artifacts").unwrap_err();
+        assert!(err.to_string().contains("pjrt"), "{err}");
     }
 }

@@ -1,0 +1,133 @@
+//! PJRT-backed `AgentRuntime` (requires the `pjrt` feature + `xla` crate).
+
+use std::path::PathBuf;
+
+use super::{rerr, ModelMeta, Result};
+
+fn xe<T, E: std::fmt::Debug>(r: std::result::Result<T, E>) -> Result<T> {
+    r.map_err(|e| rerr(format!("{e:?}")))
+}
+
+/// The agent runtime: compiled executables + parameter/optimizer state.
+pub struct AgentRuntime {
+    client: xla::PjRtClient,
+    init: xla::PjRtLoadedExecutable,
+    fwd: xla::PjRtLoadedExecutable,
+    train: xla::PjRtLoadedExecutable,
+    pub meta: ModelMeta,
+    pub params: Vec<f32>,
+    m_state: Vec<f32>,
+    v_state: Vec<f32>,
+    step: f32,
+}
+
+impl AgentRuntime {
+    /// Load and compile all three artifacts from `dir` (e.g. `artifacts/`).
+    pub fn load(dir: impl AsRef<std::path::Path>) -> Result<AgentRuntime> {
+        let dir = dir.as_ref();
+        let meta = ModelMeta::load(dir)?;
+        let client = xe(xla::PjRtClient::cpu())?;
+        let compile = |name: &str| -> Result<xla::PjRtLoadedExecutable> {
+            let path: PathBuf = dir.join(format!("{name}.hlo.txt"));
+            let proto = xe(xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| rerr("bad path"))?,
+            ))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            xe(client.compile(&comp))
+        };
+        let init = compile("agent_init")?;
+        let fwd = compile("agent_fwd")?;
+        let train = compile("agent_train")?;
+        let p = meta.param_count;
+        Ok(AgentRuntime {
+            client,
+            init,
+            fwd,
+            train,
+            meta,
+            params: vec![0.0; p],
+            m_state: vec![0.0; p],
+            v_state: vec![0.0; p],
+            step: 0.0,
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Initialize parameters from a seed (runs `agent_init.hlo.txt`).
+    pub fn init_params(&mut self, seed: i32) -> Result<()> {
+        let seed_lit = xla::Literal::vec1(&[seed]);
+        let out = xe(xe(self.init.execute::<xla::Literal>(&[seed_lit]))?[0][0]
+            .to_literal_sync())?;
+        let tuple = xe(out.to_tuple1())?;
+        self.params = xe(tuple.to_vec::<f32>())?;
+        if self.params.len() != self.meta.param_count {
+            return Err(rerr(format!(
+                "param count mismatch: {} vs meta {}",
+                self.params.len(),
+                self.meta.param_count
+            )));
+        }
+        self.m_state = vec![0.0; self.params.len()];
+        self.v_state = vec![0.0; self.params.len()];
+        self.step = 0.0;
+        Ok(())
+    }
+
+    /// Next-token logits for a batch of token prefixes.
+    /// `tokens`: `[rollout_batch][seq]` (padded), `lens`: per-row lengths.
+    /// Returns `[rollout_batch][vocab]` logits.
+    pub fn forward(&self, tokens: &[i32], lens: &[i32]) -> Result<Vec<Vec<f32>>> {
+        let b = self.meta.rollout_batch;
+        let t = self.meta.seq;
+        if tokens.len() != b * t {
+            return Err(rerr("tokens shape"));
+        }
+        if lens.len() != b {
+            return Err(rerr("lens shape"));
+        }
+        let params = xla::Literal::vec1(&self.params);
+        let tok = xe(xla::Literal::vec1(tokens).reshape(&[b as i64, t as i64]))?;
+        let lens_l = xla::Literal::vec1(lens);
+        let out = xe(xe(self.fwd.execute::<xla::Literal>(&[params, tok, lens_l]))?[0][0]
+            .to_literal_sync())?;
+        let logits = xe(xe(out.to_tuple1())?.to_vec::<f32>())?;
+        let v = self.meta.vocab;
+        if logits.len() != b * v {
+            return Err(rerr("logits shape"));
+        }
+        Ok(logits.chunks(v).map(|c| c.to_vec()).collect())
+    }
+
+    /// One GRPO/Adam step (runs `agent_train.hlo.txt`); returns the loss.
+    pub fn train_step(&mut self, batch: &crate::train::PackedBatch) -> Result<f32> {
+        let bt = self.meta.train_batch;
+        let t = self.meta.seq;
+        if batch.batch != bt || batch.seq != t {
+            return Err(rerr("batch shape mismatch"));
+        }
+        self.step += 1.0;
+        let params = xla::Literal::vec1(&self.params);
+        let m = xla::Literal::vec1(&self.m_state);
+        let v = xla::Literal::vec1(&self.v_state);
+        let step = xla::Literal::vec1(&[self.step]);
+        let tok = xe(xla::Literal::vec1(&batch.tokens).reshape(&[bt as i64, t as i64]))?;
+        let mask = xe(xla::Literal::vec1(&batch.mask).reshape(&[bt as i64, t as i64]))?;
+        let adv = xla::Literal::vec1(&batch.adv);
+        let out = xe(xe(self
+            .train
+            .execute::<xla::Literal>(&[params, m, v, step, tok, mask, adv]))?[0][0]
+            .to_literal_sync())?;
+        let parts = xe(out.to_tuple())?;
+        if parts.len() != 4 {
+            return Err(rerr("train_step returns 4 outputs"));
+        }
+        self.params = xe(parts[0].to_vec::<f32>())?;
+        self.m_state = xe(parts[1].to_vec::<f32>())?;
+        self.v_state = xe(parts[2].to_vec::<f32>())?;
+        let loss = xe(parts[3].to_vec::<f32>())?;
+        Ok(loss[0])
+    }
+}

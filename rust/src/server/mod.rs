@@ -1,5 +1,7 @@
-//! The TVCACHE server (§3.4, Figure 4): an HTTP service managing per-task
-//! TCGs and sandbox snapshots.
+//! The TVCACHE server (§3.4, Figure 4): an HTTP service fronting the
+//! in-process [`ShardedCacheService`] — per-task TCGs and sandbox snapshots
+//! sharded by `hash(task_id)` (§4.5), each shard with its own task map and
+//! snapshot store, so no request path holds a global lock.
 //!
 //! Endpoints (mirroring the paper's API):
 //!
@@ -9,83 +11,66 @@
 //! * `POST /release`       — decrement a node's sandbox refcount
 //! * `POST /snapshot`      — store a serialized sandbox for a node
 //! * `GET  /snapshot`      — fetch snapshot bytes (`?task=&id=`)
-//! * `GET  /stats`         — per-task cache statistics
+//! * `POST /warm`          — mark a node's background fork warm
+//! * `GET  /warm`          — query a node's warm-fork flag (`?task=&node=`)
+//! * `GET  /stats`         — per-task (`?task=`) or service-wide statistics
 //! * `GET  /viz`           — TCG structure as JSON (Figure 9)
 //! * `GET  /ping`          — liveness
 //!
-//! State is sharded by task id (§4.5); a single process can host all shards
-//! (the Figure 8a experiment runs one process per shard).
+//! Every handler programs against the [`CacheBackend`] trait — the same
+//! surface the executor and the training loops use in-process.
 
-use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 
-use crate::cache::{
-    EvictionPolicy, Lookup, LpmConfig, Shard, SnapshotPolicy, SnapshotRef, TaskCache, ToolResult,
-};
 use crate::cache::key::{trajectory_from_json, trajectory_to_json, ToolCall};
+use crate::cache::{
+    CacheBackend, CacheFactory, Lookup, ShardedCacheService, TaskCache, ToolResult,
+};
 use crate::sandbox::SandboxSnapshot;
 use crate::util::http::{Handler, Request, Response, Server};
 use crate::util::json::{self, Json};
 
-/// Server-side store of serialized sandboxes.
-#[derive(Default)]
-pub struct SnapshotStore {
-    next_id: AtomicU64,
-    snaps: Mutex<HashMap<u64, SandboxSnapshot>>,
-}
+/// Default shard count for a served cache (Figure 8a's scaling knob).
+pub const DEFAULT_SHARDS: usize = 8;
 
-impl SnapshotStore {
-    pub fn insert(&self, snap: SandboxSnapshot) -> u64 {
-        let id = self.next_id.fetch_add(1, Ordering::SeqCst) + 1;
-        self.snaps.lock().unwrap().insert(id, snap);
-        id
-    }
-
-    pub fn get(&self, id: u64) -> Option<SandboxSnapshot> {
-        self.snaps.lock().unwrap().get(&id).cloned()
-    }
-
-    pub fn remove(&self, id: u64) {
-        self.snaps.lock().unwrap().remove(&id);
-    }
-
-    pub fn len(&self) -> usize {
-        self.snaps.lock().unwrap().len()
-    }
-
-    pub fn is_empty(&self) -> bool {
-        self.len() == 0
-    }
-
-    pub fn total_bytes(&self) -> u64 {
-        self.snaps.lock().unwrap().values().map(|s| s.size()).sum()
-    }
-}
-
-/// Shared server state.
+/// Shared server state: the sharded cache service plus HTTP plumbing.
 pub struct CacheService {
-    shard: Shard,
-    pub snapshots: Arc<SnapshotStore>,
+    sharded: ShardedCacheService,
 }
 
 impl CacheService {
     pub fn new() -> Arc<CacheService> {
+        Self::with_shards(DEFAULT_SHARDS)
+    }
+
+    pub fn with_shards(shards: usize) -> Arc<CacheService> {
+        Arc::new(CacheService { sharded: ShardedCacheService::new(shards) })
+    }
+
+    /// Custom per-task cache policies (used by benches).
+    pub fn with_factory(shards: usize, factory: CacheFactory) -> Arc<CacheService> {
         Arc::new(CacheService {
-            shard: Shard::new(TaskCache::with_defaults),
-            snapshots: Arc::new(SnapshotStore::default()),
+            sharded: ShardedCacheService::with_factory(shards, factory),
         })
     }
 
-    pub fn with_factory(factory: fn() -> TaskCache) -> Arc<CacheService> {
-        Arc::new(CacheService {
-            shard: Shard::new(factory),
-            snapshots: Arc::new(SnapshotStore::default()),
-        })
+    /// The trait surface every handler dispatches through.
+    pub fn backend(&self) -> &dyn CacheBackend {
+        &self.sharded
     }
 
+    /// White-box access to a per-task cache (tests, persistence jobs).
     pub fn task(&self, id: &str) -> Arc<TaskCache> {
-        self.shard.task(id)
+        self.sharded.task(id)
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.sharded.shard_count()
+    }
+
+    /// Stored snapshots across all shards.
+    pub fn snapshot_count(&self) -> usize {
+        self.sharded.snapshot_count()
     }
 
     fn handle(&self, req: &Request) -> Response {
@@ -97,6 +82,7 @@ impl CacheService {
             ("POST", "/snapshot") => self.store_snapshot(req),
             ("GET", "/snapshot") => self.fetch_snapshot(req),
             ("POST", "/warm") => self.set_warm(req),
+            ("GET", "/warm") => self.get_warm(req),
             ("GET", "/stats") => self.stats(req),
             ("GET", "/viz") => self.viz(req),
             _ => Response::not_found(),
@@ -129,8 +115,7 @@ impl CacheService {
         if traj.is_empty() {
             return Response::bad_request("empty trajectory");
         }
-        let cache = self.task(task);
-        let out = match cache.lookup(&traj) {
+        let out = match self.backend().lookup(task, &traj) {
             Lookup::Hit { node, result } => Json::obj(vec![
                 ("hit", Json::Bool(true)),
                 ("node", Json::num(node as f64)),
@@ -143,6 +128,16 @@ impl CacheService {
                     ("matched_calls", Json::num(m.matched_calls as f64)),
                 ];
                 if let Some((node, snap, replay_from)) = m.resume {
+                    // The wire protocol cannot carry a reliable distributed
+                    // refcount: a response lost after the lookup pinned the
+                    // node would leak the pin — and block that snapshot's
+                    // eviction — forever. Resume offers over HTTP are
+                    // therefore unpinned (the lookup's pin is returned
+                    // before replying); a client whose later fetch loses
+                    // the eviction race degrades gracefully to replay
+                    // (`fetch_snapshot` → None), and its `/release` is a
+                    // saturating no-op.
+                    self.backend().release(task, node);
                     fields.push((
                         "resume",
                         Json::obj(vec![
@@ -181,7 +176,7 @@ impl CacheService {
             };
             traj.push((call, result));
         }
-        let node = self.task(task).record_trajectory(&traj);
+        let node = self.backend().insert(task, &traj);
         Response::json(Json::obj(vec![("node", Json::num(node as f64))]).to_string())
     }
 
@@ -197,7 +192,7 @@ impl CacheService {
         let Some(node) = body.get("node").and_then(|n| n.as_u64()) else {
             return Response::bad_request("missing node");
         };
-        self.task(task).release(node as usize);
+        self.backend().release(task, node as usize);
         Response::json("{}".to_string())
     }
 
@@ -222,15 +217,7 @@ impl CacheService {
             return Response::bad_request("bad hex");
         };
         let snap = SandboxSnapshot { bytes, serialize_cost: ser, restore_cost: rest };
-        let size = snap.size();
-        let id = self.snapshots.insert(snap);
-        let freed = self.task(task).attach_snapshot(
-            node as usize,
-            SnapshotRef { id, bytes: size, restore_cost: rest },
-        );
-        for f in freed {
-            self.snapshots.remove(f.id);
-        }
+        let id = self.backend().store_snapshot(task, node as usize, snap);
         Response::json(Json::obj(vec![("id", Json::num(id as f64))]).to_string())
     }
 
@@ -238,7 +225,13 @@ impl CacheService {
         let Some(id) = req.query.get("id").and_then(|s| s.parse::<u64>().ok()) else {
             return Response::bad_request("missing id");
         };
-        match self.snapshots.get(id) {
+        let snap = match req.query.get("task") {
+            Some(task) => self.backend().fetch_snapshot(task, id),
+            // Legacy fetches carry no task; the strided id space still
+            // identifies the owning shard.
+            None => self.sharded.fetch_snapshot_any(id),
+        };
+        match snap {
             Some(s) => Response::json(
                 Json::obj(vec![
                     ("bytes_hex", Json::str(hex_encode(&s.bytes))),
@@ -266,32 +259,25 @@ impl CacheService {
         ) else {
             return Response::bad_request("missing node/warm");
         };
-        self.task(task).set_warm_fork(node as usize, warm);
+        self.backend().set_warm_fork(task, node as usize, warm);
         Response::json("{}".to_string())
+    }
+
+    fn get_warm(&self, req: &Request) -> Response {
+        let (Some(task), Some(node)) = (
+            req.query.get("task"),
+            req.query.get("node").and_then(|s| s.parse::<u64>().ok()),
+        ) else {
+            return Response::bad_request("missing task/node");
+        };
+        let warm = self.backend().has_warm_fork(task, node as usize);
+        Response::json(Json::obj(vec![("warm", Json::Bool(warm))]).to_string())
     }
 
     fn stats(&self, req: &Request) -> Response {
         match req.query.get("task") {
-            Some(task) => Response::json(self.task(task).stats().to_json().to_string()),
-            None => {
-                // Aggregate across tasks.
-                let mut lookups = 0u64;
-                let mut hits = 0u64;
-                for id in self.shard.task_ids() {
-                    let s = self.task(&id).stats();
-                    lookups += s.lookups;
-                    hits += s.hits;
-                }
-                Response::json(
-                    Json::obj(vec![
-                        ("tasks", Json::num(self.shard.len() as f64)),
-                        ("lookups", Json::num(lookups as f64)),
-                        ("hits", Json::num(hits as f64)),
-                        ("snapshot_bytes", Json::num(self.snapshots.total_bytes() as f64)),
-                    ])
-                    .to_string(),
-                )
-            }
+            Some(task) => Response::json(self.backend().stats(task).to_json().to_string()),
+            None => Response::json(self.backend().service_stats().to_json().to_string()),
         }
     }
 
@@ -303,15 +289,19 @@ impl CacheService {
     }
 }
 
-/// Build a `TaskCache` factory with custom policies (used by benches).
-pub fn cache_factory_default() -> TaskCache {
-    TaskCache::new(LpmConfig::default(), SnapshotPolicy::default(), EvictionPolicy::default())
+/// Start a TVCACHE server on `addr` with the default shard count; returns
+/// the HTTP server handle and the shared service (for white-box assertions).
+pub fn serve(addr: &str, workers: usize) -> std::io::Result<(Server, Arc<CacheService>)> {
+    serve_with(addr, workers, DEFAULT_SHARDS)
 }
 
-/// Start a TVCACHE server on `addr`; returns the HTTP server handle and the
-/// shared service (for white-box assertions in tests).
-pub fn serve(addr: &str, workers: usize) -> std::io::Result<(Server, Arc<CacheService>)> {
-    let service = CacheService::new();
+/// Start a TVCACHE server with an explicit shard count.
+pub fn serve_with(
+    addr: &str,
+    workers: usize,
+    shards: usize,
+) -> std::io::Result<(Server, Arc<CacheService>)> {
+    let service = CacheService::with_shards(shards);
     let svc = Arc::clone(&service);
     let handler: Handler = Arc::new(move |req: &Request| svc.handle(req));
     let server = Server::bind(addr, workers, handler)?;
@@ -400,8 +390,8 @@ mod tests {
     }
 
     #[test]
-    fn tasks_are_isolated() {
-        let (server, _svc) = serve("127.0.0.1:0", 2).unwrap();
+    fn tasks_are_isolated_across_shards() {
+        let (server, _svc) = serve_with("127.0.0.1:0", 2, 4).unwrap();
         let mut c = HttpClient::connect(server.addr());
         c.post("/put", put_body("taskA", &[("x", "rx")]).as_bytes()).unwrap();
         let (_, body) = c
@@ -433,15 +423,18 @@ mod tests {
             .unwrap()
             .as_u64()
             .unwrap();
-        assert_eq!(svc.snapshots.len(), 1);
+        assert_eq!(svc.snapshot_count(), 1);
 
-        let (status, body) = c.get(&format!("/snapshot?id={id}")).unwrap();
-        assert_eq!(status, 200);
-        let v = json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
-        assert_eq!(
-            hex_decode(v.get("bytes_hex").unwrap().as_str().unwrap()).unwrap(),
-            b"state-bytes"
-        );
+        // Fetch with and without the task routing hint.
+        for path in [format!("/snapshot?task=t&id={id}"), format!("/snapshot?id={id}")] {
+            let (status, body) = c.get(&path).unwrap();
+            assert_eq!(status, 200);
+            let v = json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+            assert_eq!(
+                hex_decode(v.get("bytes_hex").unwrap().as_str().unwrap()).unwrap(),
+                b"state-bytes"
+            );
+        }
 
         // A subsequent prefix_match miss on a longer trajectory must offer
         // the snapshot as the resume point.
@@ -467,9 +460,34 @@ mod tests {
         let (_, body) = c.get("/stats?task=t").unwrap();
         let v = json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
         assert_eq!(v.get("hits").unwrap().as_u64(), Some(1));
+        // Service-wide aggregate includes the shard count.
+        let (_, body) = c.get("/stats").unwrap();
+        let v = json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+        assert_eq!(v.get("shards").unwrap().as_u64(), Some(DEFAULT_SHARDS as u64));
+        assert_eq!(v.get("lookups").unwrap().as_u64(), Some(1));
         let (_, body) = c.get("/viz?task=t").unwrap();
         let v = json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
         assert_eq!(v.get("nodes").unwrap().as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn warm_fork_roundtrip_over_http() {
+        let (server, _svc) = serve("127.0.0.1:0", 2).unwrap();
+        let mut c = HttpClient::connect(server.addr());
+        c.post("/put", put_body("t", &[("a", "ra")]).as_bytes()).unwrap();
+        let (_, body) = c.get("/warm?task=t&node=1").unwrap();
+        let v = json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+        assert_eq!(v.get("warm").unwrap().as_bool(), Some(false));
+        let warm_body = Json::obj(vec![
+            ("task", Json::str("t")),
+            ("node", Json::num(1.0)),
+            ("warm", Json::Bool(true)),
+        ])
+        .to_string();
+        c.post("/warm", warm_body.as_bytes()).unwrap();
+        let (_, body) = c.get("/warm?task=t&node=1").unwrap();
+        let v = json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+        assert_eq!(v.get("warm").unwrap().as_bool(), Some(true));
     }
 
     #[test]

@@ -12,5 +12,6 @@ pub mod sim_loop;
 
 pub use grpo::{advantages, pack_batch, PackedBatch};
 pub use sim_loop::{
-    run_workload, BatchMetrics, CallSample, RolloutMetrics, RunMetrics, SimOptions,
+    run_concurrent, run_workload, BatchMetrics, CallSample, ConcurrentOptions,
+    ConcurrentReport, RolloutMetrics, RunMetrics, SimOptions,
 };

@@ -1,21 +1,32 @@
-//! The simulated RL post-training loop (virtual clock + DES).
+//! RL post-training drivers over the sharded cache backend.
 //!
-//! Reproduces the paper's measurement setup: per task, `R` parallel rollouts
-//! interleave reasoning-token generation (charged at the model's tok/s) with
-//! tool calls through the `ToolCallExecutor`. The discrete-event scheduler
-//! interleaves rollouts in virtual time, so cache population order — and
-//! therefore who hits and who misses — emerges from the same dynamics as on
-//! real hardware. Caches persist across epochs (§3.1: the TCG is "reused
-//! across post-training iterations"), which produces the rising hit-rate
-//! curves of Figure 5.
+//! Two drivers share the [`CacheBackend`] surface:
+//!
+//! * [`run_workload`] — the virtual-clock DES loop reproducing the paper's
+//!   measurement setup: per task, `R` parallel rollouts interleave
+//!   reasoning-token generation (charged at the model's tok/s) with tool
+//!   calls through the `ToolCallExecutor`. The discrete-event scheduler
+//!   interleaves rollouts in virtual time, so cache population order — and
+//!   therefore who hits and who misses — emerges from the same dynamics as
+//!   on real hardware. Caches persist across epochs (§3.1: the TCG is
+//!   "reused across post-training iterations"), producing the rising
+//!   hit-rate curves of Figure 5.
+//! * [`run_concurrent`] — a real-thread driver: all B·R rollouts of an
+//!   epoch execute concurrently on a [`ThreadPool`] against the same
+//!   [`ShardedCacheService`], measuring wall-clock throughput rather than
+//!   simulated latency (the §4.5 service-concurrency regime).
 
+use std::sync::mpsc;
 use std::sync::Arc;
 
-use crate::cache::{EvictionPolicy, LpmConfig, TaskCache};
-use crate::client::{ExecutorConfig, LocalBinding, ToolCallExecutor};
 use crate::agent::scripted::Agent;
+use crate::cache::{
+    CacheBackend, CacheFactory, EvictionPolicy, LpmConfig, ShardedCacheService, TaskCache,
+};
+use crate::client::{ExecutorConfig, ToolCallExecutor};
 use crate::sim::EventQueue;
 use crate::util::rng::Rng;
+use crate::util::threadpool::ThreadPool;
 use crate::workloads::WorkloadConfig;
 
 /// One observed tool call (drives Figures 2/11/12/14).
@@ -110,6 +121,8 @@ pub struct SimOptions {
     pub lpm: LpmConfig,
     /// Sandbox budget per task (Figure 8b sensitivity).
     pub max_snapshots: usize,
+    /// Cache-service shard count (§4.5; tasks hash across shards).
+    pub shards: usize,
 }
 
 impl SimOptions {
@@ -122,8 +135,28 @@ impl SimOptions {
             seed: 0x7CAC4E,
             lpm: LpmConfig::default(),
             max_snapshots: 64,
+            shards: 4,
         }
     }
+}
+
+/// Build the sharded backend whose per-task caches carry the workload's
+/// policies; both drivers go through this.
+fn sharded_backend(
+    cfg: &WorkloadConfig,
+    lpm: LpmConfig,
+    max_snapshots: usize,
+    shards: usize,
+) -> Arc<ShardedCacheService> {
+    let snapshot_policy = cfg.snapshot_policy();
+    let factory: CacheFactory = Arc::new(move || {
+        TaskCache::new(
+            lpm,
+            snapshot_policy,
+            EvictionPolicy { max_snapshots, ..Default::default() },
+        )
+    });
+    Arc::new(ShardedCacheService::with_factory(shards, factory))
 }
 
 /// Rollout process state inside the DES.
@@ -144,17 +177,9 @@ pub fn run_workload(cfg: &WorkloadConfig, opts: &SimOptions) -> RunMetrics {
     let mut metrics = RunMetrics::default();
     let factory = cfg.factory();
 
-    // Per-task persistent cache (+ snapshot store): lives across epochs.
-    let bindings: Vec<Arc<LocalBinding>> = (0..opts.n_tasks)
-        .map(|_| {
-            let cache = Arc::new(TaskCache::new(
-                opts.lpm,
-                cfg.snapshot_policy(),
-                EvictionPolicy { max_snapshots: opts.max_snapshots, ..Default::default() },
-            ));
-            Arc::new(LocalBinding::new(cache))
-        })
-        .collect();
+    // One sharded cache service for the whole run; per-task caches are
+    // created on first touch and persist across epochs.
+    let backend = sharded_backend(cfg, opts.lpm, opts.max_snapshots, opts.shards);
 
     for epoch in 0..opts.epochs {
         let mut epoch_hits = 0u64;
@@ -164,7 +189,7 @@ pub fn run_workload(cfg: &WorkloadConfig, opts: &SimOptions) -> RunMetrics {
 
         for task in 0..opts.n_tasks {
             let task_seed = opts.seed ^ (task as u64).wrapping_mul(0x9E37_79B9);
-            let binding = Arc::clone(&bindings[task]);
+            let task_name = format!("task-{task}");
 
             // Build the R parallel rollout processes.
             let mut procs: Vec<RolloutProc> = (0..opts.rollouts)
@@ -187,7 +212,8 @@ pub fn run_workload(cfg: &WorkloadConfig, opts: &SimOptions) -> RunMetrics {
                     RolloutProc {
                         agent: cfg.agent(task_seed, rollout_seed),
                         executor: ToolCallExecutor::new(
-                            Arc::clone(&binding) as Arc<dyn crate::client::CacheBinding>,
+                            Arc::clone(&backend) as Arc<dyn CacheBackend>,
+                            task_name.clone(),
                             Arc::clone(&factory),
                             task_seed,
                             exec_cfg,
@@ -290,6 +316,140 @@ pub fn run_workload(cfg: &WorkloadConfig, opts: &SimOptions) -> RunMetrics {
     metrics
 }
 
+/// Options for the real-thread concurrent driver.
+#[derive(Debug, Clone)]
+pub struct ConcurrentOptions {
+    pub n_tasks: usize,
+    pub rollouts: usize,
+    pub epochs: usize,
+    /// Worker threads driving rollouts (the B·R concurrency of §4.5).
+    pub threads: usize,
+    /// Cache-service shard count.
+    pub shards: usize,
+    pub seed: u64,
+    pub lpm: LpmConfig,
+    pub max_snapshots: usize,
+}
+
+impl ConcurrentOptions {
+    pub fn from_config(cfg: &WorkloadConfig, n_tasks: usize) -> ConcurrentOptions {
+        ConcurrentOptions {
+            n_tasks: n_tasks.min(cfg.n_tasks),
+            rollouts: cfg.rollouts,
+            epochs: cfg.epochs,
+            threads: 8,
+            shards: 4,
+            seed: 0x7CAC4E,
+            lpm: LpmConfig::default(),
+            max_snapshots: 64,
+        }
+    }
+}
+
+/// What the concurrent driver measured.
+#[derive(Debug, Clone, Default)]
+pub struct ConcurrentReport {
+    pub rollouts_run: usize,
+    pub hits: u64,
+    pub misses: u64,
+    /// Summed simulated tool-wait seconds (comparable to `RunMetrics`).
+    pub tool_time: f64,
+    /// Real wall-clock seconds for the whole run.
+    pub wall_secs: f64,
+    /// (epoch, hit_rate) series, as in Figure 5.
+    pub epoch_hit_rates: Vec<(usize, f64)>,
+}
+
+impl ConcurrentReport {
+    pub fn overall_hit_rate(&self) -> f64 {
+        if self.hits + self.misses == 0 {
+            0.0
+        } else {
+            self.hits as f64 / (self.hits + self.misses) as f64
+        }
+    }
+
+    pub fn calls_per_sec(&self) -> f64 {
+        if self.wall_secs <= 0.0 {
+            0.0
+        } else {
+            (self.hits + self.misses) as f64 / self.wall_secs
+        }
+    }
+}
+
+/// Drive all B·R rollouts of each epoch *concurrently* (real threads, real
+/// contention) against one [`ShardedCacheService`]. Epochs are barriers —
+/// epoch `e+1` starts only when every rollout of epoch `e` finished — so
+/// the cross-epoch hit-rate dynamics match the DES driver; within an epoch,
+/// rollout interleaving is whatever the scheduler does, exactly as on real
+/// training infrastructure.
+pub fn run_concurrent(cfg: &WorkloadConfig, opts: &ConcurrentOptions) -> ConcurrentReport {
+    let factory = cfg.factory();
+    let backend = sharded_backend(cfg, opts.lpm, opts.max_snapshots, opts.shards);
+    let pool = ThreadPool::new(opts.threads);
+    let mut report = ConcurrentReport::default();
+    let t0 = std::time::Instant::now();
+
+    for epoch in 0..opts.epochs {
+        let (tx, rx) = mpsc::channel::<(u64, u64, f64)>();
+        let mut scheduled = 0usize;
+        for task in 0..opts.n_tasks {
+            let task_seed = opts.seed ^ (task as u64).wrapping_mul(0x9E37_79B9);
+            for r in 0..opts.rollouts {
+                let rollout_seed = (epoch * opts.rollouts + r) as u64;
+                let mut agent = cfg.agent(task_seed, rollout_seed);
+                let backend = Arc::clone(&backend) as Arc<dyn CacheBackend>;
+                let factory = Arc::clone(&factory);
+                let task_name = format!("task-{task}");
+                let exec_cfg = ExecutorConfig {
+                    stateful_filtering: opts.lpm.stateful_filtering,
+                    ..ExecutorConfig::default()
+                };
+                let tx = tx.clone();
+                scheduled += 1;
+                pool.execute(move || {
+                    let mut exec = ToolCallExecutor::new(
+                        backend, task_name, factory, task_seed, exec_cfg,
+                    );
+                    let mut trajectory = Vec::new();
+                    let mut tool_time = 0.0;
+                    while let Some(call) = agent.next_call(&trajectory) {
+                        let outcome = exec.call(call.clone());
+                        tool_time += outcome.charged;
+                        trajectory.push((call, outcome.result.output));
+                    }
+                    tool_time += exec.finish();
+                    let _ = tx.send((exec.hits, exec.misses, tool_time));
+                });
+            }
+        }
+        drop(tx);
+        // Epoch barrier: wait for every rollout before the next epoch.
+        let mut epoch_hits = 0u64;
+        let mut epoch_misses = 0u64;
+        for (hits, misses, tool_time) in rx.iter() {
+            epoch_hits += hits;
+            epoch_misses += misses;
+            report.tool_time += tool_time;
+            report.rollouts_run += 1;
+        }
+        assert_eq!(
+            report.rollouts_run,
+            (epoch + 1) * scheduled,
+            "a rollout thread died without reporting"
+        );
+        report.hits += epoch_hits;
+        report.misses += epoch_misses;
+        let denom = (epoch_hits + epoch_misses).max(1);
+        report
+            .epoch_hit_rates
+            .push((epoch, epoch_hits as f64 / denom as f64));
+    }
+    report.wall_secs = t0.elapsed().as_secs_f64();
+    report
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -358,6 +518,44 @@ mod tests {
         let cfg = WorkloadConfig::config_for(Workload::EgoSchema);
         let m = run_workload(&cfg, &quick_opts(&cfg, true));
         assert!(m.api_tokens_saved > 0, "hits should save API tokens");
+    }
+
+    #[test]
+    fn concurrent_driver_hits_and_converges() {
+        let cfg = WorkloadConfig::config_for(Workload::TerminalEasy);
+        let mut opts = ConcurrentOptions::from_config(&cfg, 4);
+        opts.epochs = 3;
+        opts.threads = 8;
+        opts.shards = 4;
+        let report = run_concurrent(&cfg, &opts);
+        assert_eq!(report.rollouts_run, 4 * opts.rollouts * 3);
+        assert!(report.hits > 0, "warm epochs must hit");
+        let first = report.epoch_hit_rates[0].1;
+        let last = report.epoch_hit_rates.last().unwrap().1;
+        assert!(
+            last >= first,
+            "hit rate should not degrade across epochs: {first} -> {last}"
+        );
+        assert!(report.wall_secs > 0.0);
+        assert!(report.calls_per_sec() > 0.0);
+    }
+
+    #[test]
+    fn concurrent_driver_matches_des_hit_band() {
+        // Real-thread interleaving changes *which* rollout populates the
+        // cache first, but the overall hit rate must land in the same band
+        // as the virtual-clock driver (same agents, same cache semantics).
+        let cfg = WorkloadConfig::config_for(Workload::SkyRlSql);
+        let des = run_workload(&cfg, &quick_opts(&cfg, true));
+        let mut copts = ConcurrentOptions::from_config(&cfg, 4);
+        copts.epochs = 4;
+        let conc = run_concurrent(&cfg, &copts);
+        let a = des.overall_hit_rate();
+        let b = conc.overall_hit_rate();
+        assert!(
+            (a - b).abs() < 0.25,
+            "drivers diverged: DES {a:.2} vs concurrent {b:.2}"
+        );
     }
 
     #[test]

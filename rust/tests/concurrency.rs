@@ -1,0 +1,175 @@
+//! Concurrency stress tests for the sharded cache service: 8 threads ×
+//! 1000 mixed lookup/insert/release operations, verifying that statistics
+//! balance exactly, that the snapshot path never loses bytes, and — by
+//! virtue of finishing — that no lock ordering deadlocks.
+
+use std::sync::Arc;
+
+use tvcache::cache::{
+    CacheBackend, Lookup, ShardedCacheService, ToolCall, ToolResult,
+};
+use tvcache::sandbox::SandboxSnapshot;
+
+const THREADS: usize = 8;
+const OPS_PER_THREAD: usize = 1000;
+const TASKS: usize = 16;
+
+fn call(s: String) -> ToolCall {
+    ToolCall::new("bash", s)
+}
+
+fn traj(calls: &[String]) -> Vec<(ToolCall, ToolResult)> {
+    calls
+        .iter()
+        .map(|c| (call(c.clone()), ToolResult::new(format!("out-{c}"), 1.0)))
+        .collect()
+}
+
+#[test]
+fn sharded_service_stress_8x1000_mixed_ops() {
+    let svc = Arc::new(ShardedCacheService::new(4));
+
+    // Per-thread tallies returned at join; compared against service stats.
+    struct Tally {
+        lookups: u64,
+        hits: u64,
+        snapshots_stored: u64,
+    }
+
+    let handles: Vec<_> = (0..THREADS)
+        .map(|t| {
+            let svc = Arc::clone(&svc);
+            std::thread::spawn(move || {
+                let mut tally = Tally { lookups: 0, hits: 0, snapshots_stored: 0 };
+                for i in 0..OPS_PER_THREAD {
+                    // Tasks are shared across threads so shard task maps,
+                    // TCG locks, and snapshot stores all see contention.
+                    let task = format!("task-{}", (t + i) % TASKS);
+                    // Depth decoupled from the op selector so inserts and
+                    // lookups cover the same trajectory family.
+                    let depth = 1 + ((i / 3) % 3);
+                    let calls: Vec<String> =
+                        (0..depth).map(|d| format!("step-{d}-{}", i % 7)).collect();
+                    match i % 3 {
+                        0 => {
+                            // Insert a trajectory, occasionally snapshot it.
+                            let node = svc.insert(&task, &traj(&calls));
+                            if i % 9 == 0 {
+                                let snap = SandboxSnapshot {
+                                    bytes: vec![t as u8; 32],
+                                    serialize_cost: 0.1,
+                                    restore_cost: 0.2,
+                                };
+                                // id 0 = attach rejected (node briefly
+                                // pinned by a racing lookup): legitimate.
+                                let id = svc.store_snapshot(&task, node, snap);
+                                if id > 0 {
+                                    tally.snapshots_stored += 1;
+                                }
+                            }
+                        }
+                        1 => {
+                            // Lookup the same family of trajectories.
+                            let q: Vec<ToolCall> =
+                                calls.iter().map(|c| call(c.clone())).collect();
+                            tally.lookups += 1;
+                            match svc.lookup(&task, &q) {
+                                Lookup::Hit { .. } => tally.hits += 1,
+                                Lookup::Miss(m) => {
+                                    // Release any resume pin immediately.
+                                    if let Some((node, _, _)) = m.resume {
+                                        svc.release(&task, node);
+                                    }
+                                }
+                            }
+                        }
+                        _ => {
+                            // Divergent lookup: exercises partial hits.
+                            let mut q: Vec<ToolCall> =
+                                calls.iter().map(|c| call(c.clone())).collect();
+                            q.push(call(format!("divergent-{t}-{i}")));
+                            tally.lookups += 1;
+                            if let Lookup::Miss(m) = svc.lookup(&task, &q) {
+                                if let Some((node, _, _)) = m.resume {
+                                    svc.release(&task, node);
+                                }
+                            } else {
+                                panic!("divergent call can never hit");
+                            }
+                        }
+                    }
+                }
+                tally
+            })
+        })
+        .collect();
+
+    let mut issued_lookups = 0u64;
+    let mut observed_hits = 0u64;
+    let mut stored = 0u64;
+    for h in handles {
+        let t = h.join().expect("stress thread panicked (deadlock or poison)");
+        issued_lookups += t.lookups;
+        observed_hits += t.hits;
+        stored += t.snapshots_stored;
+    }
+
+    // Stats balance exactly: every issued lookup was counted once, no more.
+    let mut stat_lookups = 0u64;
+    let mut stat_hits = 0u64;
+    let mut stat_stored = 0u64;
+    for i in 0..TASKS {
+        let s = svc.stats(&format!("task-{i}"));
+        assert!(s.hits <= s.lookups, "task-{i}: more hits than lookups");
+        stat_lookups += s.lookups;
+        stat_hits += s.hits;
+        stat_stored += s.snapshots_stored;
+    }
+    assert_eq!(stat_lookups, issued_lookups, "lost or duplicated lookups");
+    assert_eq!(stat_hits, observed_hits, "hit accounting diverged");
+    assert_eq!(stat_stored, stored, "snapshot-store accounting diverged");
+    assert!(observed_hits > 0, "the shared trajectory family must hit");
+
+    // The aggregate view must agree with the per-task sums.
+    let agg = svc.service_stats();
+    assert_eq!(agg.lookups, stat_lookups);
+    assert_eq!(agg.hits, stat_hits);
+    assert_eq!(agg.tasks, TASKS);
+
+    // All resume pins were released: every stored snapshot is evictable,
+    // so the shard stores and the TCGs agree on what is left.
+    let tcg_snapshots: usize =
+        (0..TASKS).map(|i| svc.task(&format!("task-{i}")).snapshot_count()).sum();
+    assert_eq!(svc.snapshot_count(), tcg_snapshots, "shard stores leaked snapshots");
+}
+
+/// Lookups against disjoint shards never serialize on a shared lock; this
+/// is the "no global lock" smoke check — N threads hammer N different
+/// tasks with zero shared state beyond the service object itself.
+#[test]
+fn disjoint_tasks_scale_without_interference() {
+    let svc = Arc::new(ShardedCacheService::new(8));
+    for t in 0..8 {
+        let task = format!("solo-{t}");
+        svc.insert(&task, &traj(&["a".to_string(), "b".to_string()]));
+    }
+    let handles: Vec<_> = (0..8)
+        .map(|t| {
+            let svc = Arc::clone(&svc);
+            std::thread::spawn(move || {
+                let task = format!("solo-{t}");
+                let q =
+                    vec![call("a".to_string()), call("b".to_string())];
+                for _ in 0..2000 {
+                    assert!(svc.lookup(&task, &q).is_hit());
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    let agg = svc.service_stats();
+    assert_eq!(agg.lookups, 8 * 2000);
+    assert_eq!(agg.hits, 8 * 2000);
+}

@@ -1,12 +1,16 @@
 //! Integration tests: HTTP server ⇄ remote executor round trips, the
-//! paper's correctness property end-to-end, persistence recovery, and a
-//! from-scratch property-test sweep over random trajectories.
+//! paper's correctness property end-to-end, backend parity (the same
+//! `CacheBackend` contract over the in-process sharded service and the HTTP
+//! binding), persistence recovery, and a property-test sweep over random
+//! trajectories.
 
 use std::sync::Arc;
 
-use tvcache::cache::{LpmConfig, TaskCache, ToolCall};
-use tvcache::client::{ExecutorConfig, LocalBinding, RemoteBinding, ToolCallExecutor};
-use tvcache::sandbox::{SandboxFactory, TerminalFactory, ToolExecutionEnvironment};
+use tvcache::cache::{
+    CacheBackend, Lookup, LpmConfig, ShardedCacheService, TaskCache, ToolCall, ToolResult,
+};
+use tvcache::client::{ExecutorConfig, RemoteBinding, ToolCallExecutor};
+use tvcache::sandbox::{SandboxFactory, SandboxSnapshot, TerminalFactory, ToolExecutionEnvironment};
 use tvcache::server::serve;
 use tvcache::util::rng::Rng;
 
@@ -21,12 +25,13 @@ fn bash(cmd: &str) -> ToolCall {
 #[test]
 fn remote_executor_end_to_end() {
     let (server, _svc) = serve("127.0.0.1:0", 4).unwrap();
-    let binding = Arc::new(RemoteBinding::connect(server.addr(), "task-42"));
+    let binding = Arc::new(RemoteBinding::connect(server.addr()));
     let factory = Arc::new(TerminalFactory { medium: false });
 
     let script = ["cat README.md", "make", "make test"];
     let mut r1 = ToolCallExecutor::new(
         Arc::clone(&binding) as Arc<_>,
+        "task-42",
         Arc::clone(&factory) as Arc<_>,
         7,
         ExecutorConfig::default(),
@@ -37,6 +42,7 @@ fn remote_executor_end_to_end() {
 
     let mut r2 = ToolCallExecutor::new(
         Arc::clone(&binding) as Arc<_>,
+        "task-42",
         Arc::clone(&factory) as Arc<_>,
         7,
         ExecutorConfig::default(),
@@ -52,6 +58,81 @@ fn remote_executor_end_to_end() {
     // Diverge statefully: must execute, not serve stale.
     let o = r2.call(bash("patch src/module_0.py s/return x - 8/return x + 8/"));
     assert!(!o.hit);
+}
+
+/// The acceptance contract: the in-process sharded service and the HTTP
+/// binding implement the *same* `CacheBackend` behaviour — one test body,
+/// both backends.
+fn exercise_backend(backend: &dyn CacheBackend, task: &str) {
+    let traj: Vec<(ToolCall, ToolResult)> = [("git clone repo", "ok"), ("make", "build OK")]
+        .iter()
+        .map(|(c, r)| (bash(c), ToolResult::new(*r, 5.0)))
+        .collect();
+    let q: Vec<ToolCall> = traj.iter().map(|(c, _)| c.clone()).collect();
+
+    // Cold miss, insert, warm hit.
+    assert!(!backend.lookup(task, &q).is_hit());
+    let node = backend.insert(task, &traj);
+    assert!(node > 0);
+    match backend.lookup(task, &q) {
+        Lookup::Hit { result, .. } => assert_eq!(result.output, "build OK"),
+        m => panic!("expected hit, got {m:?}"),
+    }
+
+    // Snapshot store/fetch round trip.
+    let snap = SandboxSnapshot {
+        bytes: b"sandbox-state".to_vec(),
+        serialize_cost: 0.4,
+        restore_cost: 0.6,
+    };
+    let id = backend.store_snapshot(task, node, snap);
+    assert!(id > 0, "store must return the real id");
+    let fetched = backend.fetch_snapshot(task, id).expect("snapshot fetchable");
+    assert_eq!(fetched.bytes, b"sandbox-state");
+    assert!((fetched.restore_cost - 0.6).abs() < 1e-9);
+
+    // A longer trajectory misses but offers the snapshot as resume; the
+    // resume pin is released afterwards.
+    let mut longer = q.clone();
+    longer.push(bash("make test"));
+    match backend.lookup(task, &longer) {
+        Lookup::Miss(m) => {
+            let (rnode, sref, replay_from) = m.resume.expect("resume offered");
+            assert_eq!(rnode, node);
+            assert_eq!(sref.id, id);
+            assert_eq!(replay_from, 2);
+            backend.release(task, rnode);
+        }
+        h => panic!("expected miss, got {h:?}"),
+    }
+
+    // Warm-fork flag round trip.
+    assert!(!backend.has_warm_fork(task, node));
+    backend.set_warm_fork(task, node, true);
+    assert!(backend.has_warm_fork(task, node));
+    backend.set_warm_fork(task, node, false);
+    assert!(!backend.has_warm_fork(task, node));
+
+    // Statistics flow through the same surface.
+    let stats = backend.stats(task);
+    assert_eq!(stats.lookups, 3);
+    assert_eq!(stats.hits, 1);
+    assert_eq!(stats.snapshot_resumes, 1);
+    assert!(stats.inserts >= 2);
+    let agg = backend.service_stats();
+    assert!(agg.lookups >= 3);
+    assert!(agg.tasks >= 1);
+    assert!(agg.snapshots >= 1);
+}
+
+#[test]
+fn backend_parity_inprocess_and_http() {
+    let sharded = ShardedCacheService::new(4);
+    exercise_backend(&sharded, "parity-task");
+
+    let (server, _svc) = serve("127.0.0.1:0", 4).unwrap();
+    let remote = RemoteBinding::connect(server.addr());
+    exercise_backend(&remote, "parity-task");
 }
 
 /// The paper's correctness theorem, tested as a property over random
@@ -76,14 +157,14 @@ fn property_cached_equals_uncached_replay() {
     let task_seed = 1;
 
     for trial in 0..20 {
-        let cache = Arc::new(TaskCache::with_defaults());
-        let binding = Arc::new(LocalBinding::new(cache));
+        let backend = Arc::new(ShardedCacheService::new(2));
         let factory = Arc::new(TerminalFactory { medium: false });
 
         // 3 rollouts with random trajectories sharing one cache.
         for _rollout in 0..3 {
             let mut exec = ToolCallExecutor::new(
-                Arc::clone(&binding) as Arc<_>,
+                Arc::clone(&backend) as Arc<_>,
+                "prop-task",
                 Arc::clone(&factory) as Arc<_>,
                 task_seed,
                 ExecutorConfig::default(),
@@ -182,10 +263,11 @@ fn concurrent_remote_rollouts() {
     let handles: Vec<_> = (0..4)
         .map(|t| {
             std::thread::spawn(move || {
-                let binding = Arc::new(RemoteBinding::connect(addr, "shared-task"));
+                let binding = Arc::new(RemoteBinding::connect(addr));
                 let factory = Arc::new(TerminalFactory { medium: false });
                 let mut exec = ToolCallExecutor::new(
                     binding as Arc<_>,
+                    "shared-task",
                     factory as Arc<_>,
                     3,
                     ExecutorConfig::default(),
