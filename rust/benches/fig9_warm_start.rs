@@ -1,0 +1,75 @@
+//! Figure 9 (extension): warm-start persistence across training runs.
+//!
+//! The TCG is "reused across post-training iterations" (§3.1) — but only
+//! within one process lifetime unless the cache persists. This bench runs
+//! the concurrent driver cold (persisting TCGs + snapshot payloads on
+//! exit), then launches a *fresh* run that warm-starts from the persisted
+//! directory. The acceptance shape: the warm run's epoch-0 hit rate is at
+//! least the cold run's final-epoch hit rate — the new run skips the
+//! cold-start miss penalty entirely, compounding the cache's savings
+//! across training phases (CacheRL, arXiv 2606.14179).
+
+use tvcache::bench::print_table;
+use tvcache::metrics::CsvWriter;
+use tvcache::train::{run_concurrent, ConcurrentOptions};
+use tvcache::workloads::{Workload, WorkloadConfig};
+
+const N_TASKS: usize = 6;
+const COLD_EPOCHS: usize = 4;
+const WARM_EPOCHS: usize = 2;
+
+fn main() {
+    let cfg = WorkloadConfig::config_for(Workload::TerminalEasy);
+    let dir = std::env::temp_dir()
+        .join(format!("tvcache-fig9-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let dir_s = dir.to_string_lossy().into_owned();
+
+    // Cold run: empty cache, spill tier + byte budget active, persist at
+    // the end.
+    let mut cold = ConcurrentOptions::from_config(&cfg, N_TASKS);
+    cold.epochs = COLD_EPOCHS;
+    cold.shard_byte_budget = Some(64 * 1024);
+    cold.spill_dir = Some(dir_s.clone());
+    cold.persist_to = Some(dir_s.clone());
+    let cold_report = run_concurrent(&cfg, &cold);
+
+    // Warm run: a fresh service (fresh process in production) reloads the
+    // persisted TCGs + spilled snapshots before epoch 0.
+    let mut warm = ConcurrentOptions::from_config(&cfg, N_TASKS);
+    warm.epochs = WARM_EPOCHS;
+    warm.warm_start_from = Some(dir_s);
+    let warm_report = run_concurrent(&cfg, &warm);
+
+    let mut rows = Vec::new();
+    let mut csv = CsvWriter::new(&["run", "epoch", "hit_rate"]);
+    for (epoch, rate) in &cold_report.epoch_hit_rates {
+        rows.push(vec!["cold".into(), format!("{epoch}"), format!("{:.3}", rate)]);
+        csv.rowf(&[&"cold", epoch, &format!("{rate:.4}")]);
+    }
+    for (epoch, rate) in &warm_report.epoch_hit_rates {
+        rows.push(vec!["warm".into(), format!("{epoch}"), format!("{:.3}", rate)]);
+        csv.rowf(&[&"warm", epoch, &format!("{rate:.4}")]);
+    }
+    print_table(
+        "Figure 9 (ext): warm-start — epoch hit rates, cold run vs warm-started run",
+        &["run", "epoch", "hit rate"],
+        &rows,
+    );
+    csv.write("results/fig9_warm_start.csv").unwrap();
+
+    let cold_final = cold_report.epoch_hit_rates.last().unwrap().1;
+    let warm_first = warm_report.epoch_hit_rates[0].1;
+    println!(
+        "\ncold final-epoch hit rate : {:.3}\nwarm epoch-0 hit rate     : {:.3}",
+        cold_final, warm_first
+    );
+    assert!(
+        warm_first >= cold_final,
+        "warm-start failed: epoch-0 {warm_first:.3} < cold final {cold_final:.3}"
+    );
+    println!("warm-start OK: a new run opens at (or above) the cold run's converged rate");
+    println!("series -> results/fig9_warm_start.csv");
+
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -21,15 +21,28 @@ use super::tcg::NodeId;
 use crate::sandbox::SandboxSnapshot;
 use crate::util::json::Json;
 
-/// Service-wide aggregate statistics (all tasks, all shards).
+/// Service-wide aggregate statistics (all tasks, all shards), including the
+/// snapshot-lifecycle counters: spill-tier occupancy, disk fault-ins, and
+/// background evictions.
 #[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct BackendStats {
     pub shards: usize,
     pub tasks: usize,
     pub lookups: u64,
     pub hits: u64,
+    /// Stored snapshots across both tiers (resident + spilled).
     pub snapshots: usize,
+    /// Bytes across both tiers.
     pub snapshot_bytes: u64,
+    /// Snapshots currently demoted to the disk spill tier.
+    pub spilled_snapshots: usize,
+    pub spilled_bytes: u64,
+    /// Lifetime demotions to disk.
+    pub spills: u64,
+    /// Lifetime fault-ins from disk.
+    pub spill_faults: u64,
+    /// Snapshots the background worker destroyed (no spill tier).
+    pub bg_evictions: u64,
 }
 
 impl BackendStats {
@@ -41,6 +54,11 @@ impl BackendStats {
             ("hits", Json::num(self.hits as f64)),
             ("snapshots", Json::num(self.snapshots as f64)),
             ("snapshot_bytes", Json::num(self.snapshot_bytes as f64)),
+            ("spilled_snapshots", Json::num(self.spilled_snapshots as f64)),
+            ("spilled_bytes", Json::num(self.spilled_bytes as f64)),
+            ("spills", Json::num(self.spills as f64)),
+            ("spill_faults", Json::num(self.spill_faults as f64)),
+            ("bg_evictions", Json::num(self.bg_evictions as f64)),
         ])
     }
 
@@ -56,6 +74,11 @@ impl BackendStats {
             hits: g("hits"),
             snapshots: g("snapshots") as usize,
             snapshot_bytes: g("snapshot_bytes"),
+            spilled_snapshots: g("spilled_snapshots") as usize,
+            spilled_bytes: g("spilled_bytes"),
+            spills: g("spills"),
+            spill_faults: g("spill_faults"),
+            bg_evictions: g("bg_evictions"),
         })
     }
 }
@@ -99,4 +122,15 @@ pub trait CacheBackend: Send + Sync {
 
     /// Aggregate statistics across every task and shard.
     fn service_stats(&self) -> BackendStats;
+
+    /// Persist every task's TCG and snapshot payloads under `dir` (a
+    /// server-local path for the HTTP binding) so a later run can
+    /// [`CacheBackend::warm_start`] from it. Returns `true` on success.
+    fn persist(&self, dir: &str) -> bool;
+
+    /// Warm-start: merge a previously persisted cache state from `dir`
+    /// into this backend — trajectories, hit counts, and snapshot refs
+    /// (payloads stay on disk until a resume faults them in) — so epoch 0
+    /// of a new run starts warm. Returns `true` on success.
+    fn warm_start(&self, dir: &str) -> bool;
 }

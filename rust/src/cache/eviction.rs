@@ -1,10 +1,13 @@
 //! Sandbox-budget enforcement (§3.3 "Bounding number of cached sandboxes").
 //!
-//! Each task has a budget of stored sandboxes. When exceeded, TVCACHE prunes
-//! the least useful snapshots: eviction scores favour keeping nodes that are
-//! shallow (common prefixes), well-branched (shared by many trajectories),
-//! and frequently hit; refcount-pinned sandboxes are never evicted
-//! (§3.4 "Concurrency Control").
+//! Each task has a budget of stored sandboxes — a count *and* a byte budget.
+//! When exceeded, TVCACHE prunes the least useful snapshots: eviction scores
+//! favour keeping nodes that are shallow (common prefixes), well-branched
+//! (shared by many trajectories), frequently hit, small, and expensive to
+//! re-derive by replay (the recorded `exec_time` latencies of the calls a
+//! snapshot lets a rollout skip); refcount-pinned sandboxes are never
+//! evicted (§3.4 "Concurrency Control"). The same score orders the sharded
+//! service's background spill worker (`cache/spill.rs`).
 
 use super::tcg::{NodeId, SnapshotRef, Tcg, ROOT};
 
@@ -13,44 +16,86 @@ use super::tcg::{NodeId, SnapshotRef, Tcg, ROOT};
 pub struct EvictionPolicy {
     /// Sandbox budget: max snapshots stored per task.
     pub max_snapshots: usize,
+    /// Byte budget for this task's snapshots (`u64::MAX` = unbounded).
+    pub max_snapshot_bytes: u64,
     /// Weight of hit count in the keep-score.
     pub hit_weight: f64,
     /// Weight of child count (branching ⇒ common prefix worth keeping).
     pub child_weight: f64,
     /// Depth penalty (deeper ⇒ more specialized ⇒ likelier to evict).
     pub depth_weight: f64,
+    /// Size penalty, per MiB of snapshot payload (bigger ⇒ evict sooner).
+    pub byte_weight: f64,
+    /// Weight of the recreation cost: seconds of recorded replay latency
+    /// needed to re-derive the node's state if its snapshot were dropped.
+    pub recreate_weight: f64,
 }
 
 impl Default for EvictionPolicy {
     fn default() -> Self {
         EvictionPolicy {
             max_snapshots: 64,
+            max_snapshot_bytes: u64::MAX,
             hit_weight: 1.0,
             child_weight: 2.0,
             depth_weight: 0.5,
+            byte_weight: 1.0,
+            recreate_weight: 0.05,
         }
     }
+}
+
+/// Seconds of replay needed to rebuild `id`'s sandbox state without its
+/// snapshot: the recorded `exec_time` of every call on the path from the
+/// nearest snapshotted *ancestor* (exclusive) down to `id` (inclusive).
+/// These latencies were sampled by the sandbox latency models
+/// (`sandbox/latency.rs`) when the calls first executed.
+pub fn recreation_cost(tcg: &Tcg, id: NodeId) -> f64 {
+    let mut cost = 0.0;
+    let mut cur = id;
+    while cur != ROOT {
+        let Some(n) = tcg.node(cur) else { break };
+        cost += n.result.exec_time;
+        let parent = n.parent;
+        if parent == ROOT
+            || tcg.node(parent).map(|p| p.snapshot.is_some()).unwrap_or(true)
+        {
+            break;
+        }
+        cur = parent;
+    }
+    cost
 }
 
 impl EvictionPolicy {
     /// Higher = more worth keeping.
     pub fn keep_score(&self, tcg: &Tcg, id: NodeId) -> f64 {
         let Some(n) = tcg.node(id) else { return f64::NEG_INFINITY };
+        let bytes = n.snapshot.map(|s| s.bytes).unwrap_or(0) as f64;
         self.hit_weight * (n.hit_count() as f64 + 1.0).ln()
             + self.child_weight * n.children.len() as f64
             - self.depth_weight * n.depth as f64
+            - self.byte_weight * bytes / (1u64 << 20) as f64
+            + self.recreate_weight * recreation_cost(tcg, id)
+    }
+
+    /// True when `tcg` violates either the count or the byte budget.
+    pub fn over_budget(&self, tcg: &Tcg) -> bool {
+        tcg.snapshot_count() > self.max_snapshots
+            || tcg.snapshot_bytes() > self.max_snapshot_bytes
     }
 }
 
-/// Evict snapshots until the budget holds. Returns the freed snapshot refs
-/// (the sandbox manager destroys the corresponding sandboxes). Pinned
-/// (refcount > 0) sandboxes are skipped; leaf nodes whose subtree carries no
-/// other snapshot are removed from the TCG entirely ("evicting subtrees").
+/// Evict snapshots until both the count and the byte budget hold. Returns
+/// the freed snapshot refs (the sandbox manager destroys the corresponding
+/// sandboxes). Pinned (refcount > 0) sandboxes are skipped; leaf nodes
+/// whose subtree carries no other snapshot are removed from the TCG
+/// entirely ("evicting subtrees"). Victim order is deterministic: worst
+/// keep-score first, node id breaking ties.
 pub fn enforce_budget(tcg: &mut Tcg, policy: &EvictionPolicy) -> Vec<SnapshotRef> {
     let mut freed = Vec::new();
     loop {
-        let count = tcg.snapshot_count();
-        if count <= policy.max_snapshots {
+        if !policy.over_budget(tcg) {
             break;
         }
         // Candidates: snapshot-bearing, unpinned nodes, worst score first.
@@ -67,7 +112,7 @@ pub fn enforce_budget(tcg: &mut Tcg, policy: &EvictionPolicy) -> Vec<SnapshotRef
         if candidates.is_empty() {
             break; // everything pinned: cannot enforce further
         }
-        candidates.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        candidates.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
         let (_, victim) = candidates[0];
 
         let victim_node = tcg.node(victim).unwrap();
@@ -181,6 +226,53 @@ mod tests {
         assert!(g.node(ids[2]).is_none());
         assert!(g.node(ids[1]).is_some());
         assert!(g.node(ids[0]).unwrap().snapshot.is_some());
+    }
+
+    #[test]
+    fn byte_budget_enforced_independently_of_count() {
+        let mut g = Tcg::new();
+        let ids = grow_chain(&mut g, 4);
+        for (i, &id) in ids.iter().enumerate() {
+            g.set_snapshot(id, snap(i as u64)); // 100 bytes each
+        }
+        // Count budget satisfied (4 ≤ 64) but 400 bytes > 250.
+        let policy = EvictionPolicy { max_snapshot_bytes: 250, ..Default::default() };
+        let freed = enforce_budget(&mut g, &policy);
+        assert_eq!(freed.len(), 2);
+        assert_eq!(g.snapshot_count(), 2);
+        assert!(g.snapshot_bytes() <= 250);
+    }
+
+    #[test]
+    fn recreation_cost_spans_to_nearest_snapshotted_ancestor() {
+        let mut g = Tcg::new();
+        let ids = grow_chain(&mut g, 4); // exec_time 1.0 each
+        // Snapshot at depth 1; cost of depth-4 node = replay of depths 2..4.
+        g.set_snapshot(ids[0], snap(1));
+        assert!((recreation_cost(&g, ids[3]) - 3.0).abs() < 1e-9);
+        // The snapshotted node itself replays from the root's fresh state.
+        assert!((recreation_cost(&g, ids[0]) - 1.0).abs() < 1e-9);
+        // No snapshots above: full replay from the root.
+        assert!((recreation_cost(&g, ids[2]) - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn eviction_order_is_deterministic() {
+        let build = || {
+            let mut g = Tcg::new();
+            let ids = grow_chain(&mut g, 6);
+            for (i, &id) in ids.iter().enumerate() {
+                g.set_snapshot(id, snap(i as u64));
+            }
+            g
+        };
+        let policy = EvictionPolicy { max_snapshots: 1, ..Default::default() };
+        let mut a = build();
+        let mut b = build();
+        let fa: Vec<u64> = enforce_budget(&mut a, &policy).iter().map(|s| s.id).collect();
+        let fb: Vec<u64> = enforce_budget(&mut b, &policy).iter().map(|s| s.id).collect();
+        assert_eq!(fa, fb, "identical graphs must evict in identical order");
+        assert_eq!(fa.len(), 5);
     }
 
     #[test]

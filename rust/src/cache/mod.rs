@@ -1,7 +1,8 @@
 //! The TVCACHE core (§3): tool call graph, longest-prefix matching,
-//! selective snapshotting, refcount-guarded eviction, and task sharding —
-//! unified behind the [`CacheBackend`] trait, whose in-process
-//! implementation is the [`ShardedCacheService`].
+//! selective snapshotting, refcount-guarded byte-budgeted eviction with a
+//! spill-to-disk tier, and task sharding — unified behind the
+//! [`CacheBackend`] trait, whose in-process implementation is the
+//! [`ShardedCacheService`].
 
 pub mod backend;
 pub mod eviction;
@@ -10,15 +11,17 @@ pub mod lpm;
 pub mod service;
 pub mod shard;
 pub mod snapshot;
+pub mod spill;
 pub mod store;
 pub mod tcg;
 
 pub use backend::{BackendStats, CacheBackend};
-pub use eviction::EvictionPolicy;
+pub use eviction::{enforce_budget, recreation_cost, EvictionPolicy};
 pub use key::{ToolCall, ToolResult};
 pub use lpm::{Lookup, LpmConfig, Miss};
-pub use service::ShardedCacheService;
+pub use service::{ServiceConfig, ShardedCacheService};
 pub use shard::{CacheFactory, Shard, ShardRouter};
 pub use snapshot::{SnapshotCosts, SnapshotPolicy, SnapshotStore};
+pub use spill::{SpillSlot, SpillStore, SPILL_FAULT_PENALTY};
 pub use store::{CacheStats, TaskCache};
 pub use tcg::{NodeId, SnapshotRef, Tcg, ROOT};

@@ -7,12 +7,16 @@
 //!
 //! [`SnapshotStore`] holds the serialized sandbox bytes. Each shard of the
 //! sharded cache service owns its *own* store (strided id space), so the
-//! snapshot path never funnels through a global lock.
+//! snapshot path never funnels through a global lock. A store may carry a
+//! spill tier (`cache/spill.rs`): over-budget payloads are demoted to disk
+//! (`spill`) and faulted back in transparently on `get`, with a small read
+//! penalty folded into the returned `restore_cost`.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
+use super::spill::{SpillSlot, SpillStore, SPILL_FAULT_PENALTY};
 use crate::sandbox::SandboxSnapshot;
 
 /// Cost model inputs for one snapshot decision.
@@ -67,6 +71,13 @@ impl SnapshotPolicy {
     }
 }
 
+/// One stored snapshot: payload in memory, or demoted to the disk tier.
+#[derive(Debug)]
+enum Slot {
+    Resident(SandboxSnapshot),
+    Spilled(SpillSlot),
+}
+
 /// Store of serialized sandboxes, keyed by snapshot id.
 ///
 /// The id returned by [`SnapshotStore::insert`] **is** the stored key — the
@@ -79,7 +90,14 @@ impl SnapshotPolicy {
 pub struct SnapshotStore {
     next_id: AtomicU64,
     stride: u64,
-    snaps: Mutex<HashMap<u64, SandboxSnapshot>>,
+    snaps: Mutex<HashMap<u64, Slot>>,
+    /// Spill tier; `None` = over-budget payloads are destroyed, not demoted.
+    spill: Option<Arc<SpillStore>>,
+    resident_bytes: AtomicU64,
+    spilled_bytes: AtomicU64,
+    /// Payloads demoted to disk / faulted back in (service-stats counters).
+    spills: AtomicU64,
+    faults: AtomicU64,
 }
 
 impl Default for SnapshotStore {
@@ -90,32 +108,151 @@ impl Default for SnapshotStore {
 
 impl SnapshotStore {
     pub fn new(first_id: u64, stride: u64) -> SnapshotStore {
+        Self::build(first_id, stride, None)
+    }
+
+    /// A store whose over-budget payloads spill to `spill` instead of dying.
+    pub fn with_spill(first_id: u64, stride: u64, spill: Arc<SpillStore>) -> SnapshotStore {
+        Self::build(first_id, stride, Some(spill))
+    }
+
+    fn build(first_id: u64, stride: u64, spill: Option<Arc<SpillStore>>) -> SnapshotStore {
         assert!(first_id >= 1, "snapshot id 0 is reserved for 'no snapshot'");
         assert!(stride >= 1);
         SnapshotStore {
             next_id: AtomicU64::new(first_id),
             stride,
             snaps: Mutex::new(HashMap::new()),
+            spill,
+            resident_bytes: AtomicU64::new(0),
+            spilled_bytes: AtomicU64::new(0),
+            spills: AtomicU64::new(0),
+            faults: AtomicU64::new(0),
         }
     }
 
     /// Store `snap`; the returned id is exactly the key it is stored under.
     pub fn insert(&self, snap: SandboxSnapshot) -> u64 {
         let id = self.next_id.fetch_add(self.stride, Ordering::SeqCst);
-        self.snaps.lock().unwrap().insert(id, snap);
+        self.resident_bytes.fetch_add(snap.size(), Ordering::Relaxed);
+        self.snaps.lock().unwrap().insert(id, Slot::Resident(snap));
         id
     }
 
+    /// Fetch by id. A spilled payload is faulted in from disk; the returned
+    /// `restore_cost` then carries the [`SPILL_FAULT_PENALTY`] read charge.
+    /// `None` = never stored, removed, or the spill file is unreadable —
+    /// the caller degrades to replay.
     pub fn get(&self, id: u64) -> Option<SandboxSnapshot> {
-        self.snaps.lock().unwrap().get(&id).cloned()
+        let slot = {
+            let snaps = self.snaps.lock().unwrap();
+            match snaps.get(&id) {
+                Some(Slot::Resident(s)) => return Some(s.clone()),
+                Some(Slot::Spilled(s)) => s.clone(),
+                None => return None,
+            }
+        };
+        // Disk read happens outside the store lock.
+        let mut snap = slot.fault()?;
+        snap.restore_cost += SPILL_FAULT_PENALTY;
+        self.faults.fetch_add(1, Ordering::Relaxed);
+        Some(snap)
+    }
+
+    /// Demote `id`'s payload to the spill tier. Returns `true` if the bytes
+    /// now live on disk (also when they already did). `false` when the
+    /// store has no spill tier, the id is gone, or the write failed.
+    /// `restore_cost` to record comes from the caller (the TCG ref), so
+    /// fault penalties never compound across repeated spills.
+    pub fn spill(&self, task: &str, id: u64, restore_cost: f64) -> bool {
+        let Some(spill) = &self.spill else { return false };
+        let payload = {
+            let snaps = self.snaps.lock().unwrap();
+            match snaps.get(&id) {
+                Some(Slot::Resident(s)) => s.clone(),
+                Some(Slot::Spilled(_)) => return true,
+                None => return false,
+            }
+        };
+        // File + manifest I/O outside the lock; swap the slot after.
+        let Ok(slot) = spill.write(task, id, &payload, restore_cost) else {
+            return false;
+        };
+        let mut snaps = self.snaps.lock().unwrap();
+        match snaps.get_mut(&id) {
+            Some(s @ Slot::Resident(_)) => {
+                *s = Slot::Spilled(slot);
+                self.resident_bytes.fetch_sub(payload.size(), Ordering::Relaxed);
+                self.spilled_bytes.fetch_add(payload.size(), Ordering::Relaxed);
+                self.spills.fetch_add(1, Ordering::Relaxed);
+                true
+            }
+            Some(Slot::Spilled(_)) => true,
+            None => {
+                // Removed while we wrote: retract the orphaned payload.
+                spill.drop_payload(id);
+                false
+            }
+        }
+    }
+
+    /// Register a payload that already lives on disk (warm-start reload).
+    pub fn adopt_spilled(&self, id: u64, slot: SpillSlot) {
+        let mut snaps = self.snaps.lock().unwrap();
+        if snaps.contains_key(&id) {
+            return;
+        }
+        self.spilled_bytes.fetch_add(slot.bytes, Ordering::Relaxed);
+        snaps.insert(id, Slot::Spilled(slot));
+    }
+
+    /// Advance the id allocator past `max_id` (same stride), so ids handed
+    /// out after a warm-start never collide with reloaded ones.
+    pub fn reserve_through(&self, max_id: u64) {
+        while self.next_id.load(Ordering::SeqCst) <= max_id {
+            self.next_id.fetch_add(self.stride, Ordering::SeqCst);
+        }
     }
 
     pub fn contains(&self, id: u64) -> bool {
         self.snaps.lock().unwrap().contains_key(&id)
     }
 
+    /// True when `id` is stored with its payload in memory.
+    pub fn is_resident(&self, id: u64) -> bool {
+        matches!(self.snaps.lock().unwrap().get(&id), Some(Slot::Resident(_)))
+    }
+
+    /// The on-disk location of `id` if it is currently spilled (persist
+    /// fast-path: an already-spilled payload need not be re-read/re-written).
+    pub fn spilled_slot(&self, id: u64) -> Option<SpillSlot> {
+        match self.snaps.lock().unwrap().get(&id) {
+            Some(Slot::Spilled(s)) => Some(s.clone()),
+            _ => None,
+        }
+    }
+
     pub fn remove(&self, id: u64) {
-        self.snaps.lock().unwrap().remove(&id);
+        let removed = self.snaps.lock().unwrap().remove(&id);
+        match removed {
+            Some(Slot::Resident(s)) => {
+                self.resident_bytes.fetch_sub(s.size(), Ordering::Relaxed);
+            }
+            Some(Slot::Spilled(s)) => {
+                self.spilled_bytes.fetch_sub(s.bytes, Ordering::Relaxed);
+                match &self.spill {
+                    Some(spill) => spill.drop_payload(id),
+                    // Adopted at warm-start (no manifest handle): deleting
+                    // the payload file suffices — manifest reload discards
+                    // records whose file is gone, so a destroyed snapshot
+                    // can never be resurrected by a later warm-start.
+                    None => {
+                        let _ = std::fs::remove_file(&s.path);
+                    }
+                }
+            }
+            None => {}
+        }
     }
 
     pub fn len(&self) -> usize {
@@ -126,8 +263,34 @@ impl SnapshotStore {
         self.len() == 0
     }
 
+    /// Bytes stored across both tiers (memory + disk).
     pub fn total_bytes(&self) -> u64 {
-        self.snaps.lock().unwrap().values().map(|s| s.size()).sum()
+        self.resident_bytes() + self.spilled_bytes()
+    }
+
+    pub fn resident_bytes(&self) -> u64 {
+        self.resident_bytes.load(Ordering::Relaxed)
+    }
+
+    pub fn spilled_bytes(&self) -> u64 {
+        self.spilled_bytes.load(Ordering::Relaxed)
+    }
+
+    pub fn spilled_count(&self) -> usize {
+        self.snaps
+            .lock()
+            .unwrap()
+            .values()
+            .filter(|s| matches!(s, Slot::Spilled(_)))
+            .count()
+    }
+
+    pub fn spill_count(&self) -> u64 {
+        self.spills.load(Ordering::Relaxed)
+    }
+
+    pub fn fault_count(&self) -> u64 {
+        self.faults.load(Ordering::Relaxed)
     }
 }
 
@@ -212,6 +375,59 @@ mod tests {
                 assert!(store.contains(id));
             }
         }
+    }
+
+    #[test]
+    fn spill_demotes_and_get_faults_back_in() {
+        let dir = std::env::temp_dir()
+            .join(format!("tvcache-store-spill-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let spill = Arc::new(SpillStore::open(&dir).unwrap());
+        let store = SnapshotStore::with_spill(1, 1, spill);
+        let id = store.insert(snap(64));
+        assert!(store.is_resident(id));
+        assert_eq!(store.resident_bytes(), 64);
+
+        assert!(store.spill("t", id, 0.2));
+        assert!(!store.is_resident(id));
+        assert!(store.contains(id));
+        assert_eq!(store.resident_bytes(), 0);
+        assert_eq!(store.spilled_bytes(), 64);
+        assert_eq!(store.total_bytes(), 64, "spilled bytes still count as stored");
+        assert_eq!(store.spilled_count(), 1);
+        assert_eq!(store.spill_count(), 1);
+
+        // Fault-in: same payload, restore cost carries the disk penalty.
+        let back = store.get(id).unwrap();
+        assert_eq!(back.size(), 64);
+        assert!((back.restore_cost - (0.2 + SPILL_FAULT_PENALTY)).abs() < 1e-12);
+        assert_eq!(store.fault_count(), 1);
+
+        // Re-spilling an already-spilled id is a no-op success.
+        assert!(store.spill("t", id, 0.2));
+        assert_eq!(store.spill_count(), 1);
+
+        // Remove retracts the disk payload too.
+        store.remove(id);
+        assert!(store.get(id).is_none());
+        assert_eq!(store.total_bytes(), 0);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn spill_without_tier_refuses() {
+        let store = SnapshotStore::default();
+        let id = store.insert(snap(8));
+        assert!(!store.spill("t", id, 0.1));
+        assert!(store.is_resident(id));
+    }
+
+    #[test]
+    fn reserve_through_skips_reloaded_ids() {
+        let store = SnapshotStore::new(2, 4); // ids 2, 6, 10, …
+        store.reserve_through(9);
+        let id = store.insert(snap(1));
+        assert_eq!(id, 10);
     }
 
     #[test]

@@ -1,0 +1,338 @@
+//! The spill-to-disk snapshot tier (§3.3 extension).
+//!
+//! Byte-budgeted eviction would normally *destroy* sandbox snapshots; the
+//! spill tier demotes them instead: the payload moves from the in-memory
+//! [`super::SnapshotStore`] to a file in a spill directory, the TCG keeps
+//! its `SnapshotRef`, and a later LPM resume against the spilled node
+//! faults the bytes back in from disk (charged a small read penalty via
+//! `restore_cost`). The same directory format doubles as the warm-start
+//! persistence layer: a run persists every task's TCG plus the snapshot
+//! payloads, and a fresh run reloads them so epoch 0 starts warm.
+//!
+//! On-disk layout (`<dir>/`):
+//!
+//! * `snap-<id>.bin`    — one file per snapshot, the raw payload bytes.
+//! * `manifest.jsonl`   — append-only log, one JSON record per line:
+//!   `{"op":"spill","task":…,"id":…,"bytes":…,"serialize_cost":…,
+//!   "restore_cost":…}` when a payload lands on disk, `{"op":"drop",
+//!   "id":…}` when it is deleted.
+//! * `tcgs.json`        — written atomically (tmp + rename) by
+//!   `ShardedCacheService::persist_to_dir`: every task's persistent TCG.
+//!
+//! Crash safety: the payload file is written (tmp + rename) *before* its
+//! manifest line, so a record present in the manifest implies a complete
+//! payload file. [`load_manifest`] skips torn or corrupt trailing lines and
+//! re-verifies every surviving record against the file's actual length —
+//! a run killed mid-spill recovers to a consistent store with no dangling
+//! references.
+
+use std::collections::HashMap;
+use std::fs;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use crate::sandbox::SandboxSnapshot;
+use crate::util::json::{self, Json};
+
+/// Seconds charged on top of a spilled snapshot's `restore_cost` when it is
+/// faulted back in from disk (models the payload read; NVMe-scale).
+pub const SPILL_FAULT_PENALTY: f64 = 0.02;
+
+/// A snapshot whose payload lives on disk rather than in memory.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SpillSlot {
+    pub path: PathBuf,
+    pub bytes: u64,
+    pub serialize_cost: f64,
+    pub restore_cost: f64,
+}
+
+impl SpillSlot {
+    /// Read the payload back (the fault-in path). `None` if the file is
+    /// gone or shorter than recorded — callers degrade to replay.
+    pub fn fault(&self) -> Option<SandboxSnapshot> {
+        let bytes = fs::read(&self.path).ok()?;
+        if bytes.len() as u64 != self.bytes {
+            return None;
+        }
+        Some(SandboxSnapshot {
+            bytes,
+            serialize_cost: self.serialize_cost,
+            restore_cost: self.restore_cost,
+        })
+    }
+}
+
+/// One valid manifest record after replaying the log.
+#[derive(Debug, Clone)]
+pub struct ManifestRecord {
+    pub task: String,
+    pub id: u64,
+    pub bytes: u64,
+    pub serialize_cost: f64,
+    pub restore_cost: f64,
+}
+
+impl ManifestRecord {
+    pub fn slot(&self, dir: &Path) -> SpillSlot {
+        SpillSlot {
+            path: payload_path(dir, self.id),
+            bytes: self.bytes,
+            serialize_cost: self.serialize_cost,
+            restore_cost: self.restore_cost,
+        }
+    }
+}
+
+pub fn payload_path(dir: &Path, id: u64) -> PathBuf {
+    dir.join(format!("snap-{id}.bin"))
+}
+
+fn manifest_path(dir: &Path) -> PathBuf {
+    dir.join("manifest.jsonl")
+}
+
+/// Writer side of the spill directory: payload files + append-only manifest.
+#[derive(Debug)]
+pub struct SpillStore {
+    dir: PathBuf,
+    manifest: Mutex<fs::File>,
+}
+
+impl SpillStore {
+    /// Create/open the spill directory, appending to an existing manifest.
+    pub fn open(dir: impl Into<PathBuf>) -> std::io::Result<SpillStore> {
+        let dir = dir.into();
+        fs::create_dir_all(&dir)?;
+        let manifest = fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(manifest_path(&dir))?;
+        Ok(SpillStore { dir, manifest: Mutex::new(manifest) })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Write `snap`'s payload for `id` and record it in the manifest.
+    /// `restore_cost` is taken from the caller (the TCG ref's value), not
+    /// the payload, so fault penalties never compound across re-spills.
+    pub fn write(
+        &self,
+        task: &str,
+        id: u64,
+        snap: &SandboxSnapshot,
+        restore_cost: f64,
+    ) -> std::io::Result<SpillSlot> {
+        let path = payload_path(&self.dir, id);
+        let tmp = self.dir.join(format!("snap-{id}.tmp"));
+        fs::write(&tmp, &snap.bytes)?;
+        fs::rename(&tmp, &path)?;
+        let record = Json::obj(vec![
+            ("op", Json::str("spill")),
+            ("task", Json::str(task)),
+            ("id", Json::num(id as f64)),
+            ("bytes", Json::num(snap.bytes.len() as f64)),
+            ("serialize_cost", Json::num(snap.serialize_cost)),
+            ("restore_cost", Json::num(restore_cost)),
+        ]);
+        self.append_line(&record.to_string())?;
+        Ok(SpillSlot {
+            path,
+            bytes: snap.bytes.len() as u64,
+            serialize_cost: snap.serialize_cost,
+            restore_cost,
+        })
+    }
+
+    /// Append a manifest record for a payload whose file is already in
+    /// place at `slot.path` (persisting an already-spilled snapshot: no
+    /// byte rewrite needed).
+    pub fn record(
+        &self,
+        task: &str,
+        id: u64,
+        slot: &SpillSlot,
+        restore_cost: f64,
+    ) -> std::io::Result<()> {
+        let record = Json::obj(vec![
+            ("op", Json::str("spill")),
+            ("task", Json::str(task)),
+            ("id", Json::num(id as f64)),
+            ("bytes", Json::num(slot.bytes as f64)),
+            ("serialize_cost", Json::num(slot.serialize_cost)),
+            ("restore_cost", Json::num(restore_cost)),
+        ]);
+        self.append_line(&record.to_string())
+    }
+
+    /// Record that `id`'s payload is gone and best-effort delete the file.
+    pub fn drop_payload(&self, id: u64) {
+        let record =
+            Json::obj(vec![("op", Json::str("drop")), ("id", Json::num(id as f64))]);
+        let _ = self.append_line(&record.to_string());
+        let _ = fs::remove_file(payload_path(&self.dir, id));
+    }
+
+    fn append_line(&self, line: &str) -> std::io::Result<()> {
+        let mut f = self.manifest.lock().unwrap();
+        f.write_all(line.as_bytes())?;
+        f.write_all(b"\n")?;
+        f.flush()
+    }
+}
+
+/// Replay `<dir>/manifest.jsonl` into the set of currently valid records.
+///
+/// Later records for an id supersede earlier ones; `drop` records retract.
+/// Torn/corrupt lines (a crash mid-append) and records whose payload file
+/// is missing or has the wrong length are skipped, so the result is always
+/// self-consistent. An absent manifest is an empty store, not an error.
+pub fn load_manifest(dir: &Path) -> HashMap<u64, ManifestRecord> {
+    let mut records: HashMap<u64, ManifestRecord> = HashMap::new();
+    let Ok(text) = fs::read_to_string(manifest_path(dir)) else {
+        return records;
+    };
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let Ok(v) = json::parse(line) else {
+            continue; // torn or corrupt line: skip
+        };
+        match v.get("op").and_then(Json::as_str) {
+            Some("spill") => {
+                let (Some(id), Some(bytes), Some(ser), Some(rest)) = (
+                    v.get("id").and_then(Json::as_u64),
+                    v.get("bytes").and_then(Json::as_u64),
+                    v.get("serialize_cost").and_then(Json::as_f64),
+                    v.get("restore_cost").and_then(Json::as_f64),
+                ) else {
+                    continue;
+                };
+                let task = v
+                    .get("task")
+                    .and_then(Json::as_str)
+                    .unwrap_or("")
+                    .to_string();
+                records.insert(
+                    id,
+                    ManifestRecord {
+                        task,
+                        id,
+                        bytes,
+                        serialize_cost: ser,
+                        restore_cost: rest,
+                    },
+                );
+            }
+            Some("drop") => {
+                if let Some(id) = v.get("id").and_then(Json::as_u64) {
+                    records.remove(&id);
+                }
+            }
+            _ => {}
+        }
+    }
+    // Re-verify against the payload files: a record is only as good as the
+    // bytes behind it.
+    records.retain(|id, r| {
+        fs::metadata(payload_path(dir, *id))
+            .map(|m| m.len() == r.bytes)
+            .unwrap_or(false)
+    });
+    records
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("tvcache-spill-{tag}-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&d);
+        d
+    }
+
+    fn snap(fill: u8, n: usize) -> SandboxSnapshot {
+        SandboxSnapshot {
+            bytes: vec![fill; n],
+            serialize_cost: 0.3,
+            restore_cost: 0.7,
+        }
+    }
+
+    #[test]
+    fn spill_and_fault_roundtrip() {
+        let dir = tmpdir("roundtrip");
+        let store = SpillStore::open(&dir).unwrap();
+        let slot = store.write("t", 5, &snap(9, 64), 0.7).unwrap();
+        assert_eq!(slot.bytes, 64);
+        let back = slot.fault().unwrap();
+        assert_eq!(back.bytes, vec![9u8; 64]);
+        assert!((back.restore_cost - 0.7).abs() < 1e-12);
+
+        let records = load_manifest(&dir);
+        assert_eq!(records.len(), 1);
+        assert_eq!(records[&5].bytes, 64);
+        assert_eq!(records[&5].task, "t");
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn drop_retracts_record_and_file() {
+        let dir = tmpdir("drop");
+        let store = SpillStore::open(&dir).unwrap();
+        store.write("t", 1, &snap(1, 8), 0.5).unwrap();
+        store.write("t", 2, &snap(2, 8), 0.5).unwrap();
+        store.drop_payload(1);
+        let records = load_manifest(&dir);
+        assert!(!records.contains_key(&1));
+        assert!(records.contains_key(&2));
+        assert!(!payload_path(&dir, 1).exists());
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn truncated_manifest_recovers_to_valid_prefix() {
+        let dir = tmpdir("trunc");
+        let store = SpillStore::open(&dir).unwrap();
+        for id in 1..=4u64 {
+            store.write("t", id, &snap(id as u8, 32), 0.5).unwrap();
+        }
+        drop(store);
+        let full = fs::read(manifest_path(&dir)).unwrap();
+        // Truncate at every offset: recovery must never panic, and every
+        // surviving record must be backed by an intact payload file.
+        for cut in 0..=full.len() {
+            fs::write(manifest_path(&dir), &full[..cut]).unwrap();
+            let records = load_manifest(&dir);
+            for (id, r) in &records {
+                let slot = r.slot(&dir);
+                assert!(slot.fault().is_some(), "cut {cut}: dangling record {id}");
+            }
+            assert!(records.len() <= 4);
+        }
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn record_with_missing_payload_is_discarded() {
+        let dir = tmpdir("missing");
+        let store = SpillStore::open(&dir).unwrap();
+        store.write("t", 7, &snap(7, 16), 0.5).unwrap();
+        fs::remove_file(payload_path(&dir, 7)).unwrap();
+        assert!(load_manifest(&dir).is_empty());
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn missing_dir_is_empty_not_error() {
+        let dir = tmpdir("absent");
+        assert!(load_manifest(&dir).is_empty());
+    }
+}

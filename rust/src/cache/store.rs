@@ -312,13 +312,48 @@ impl TaskCache {
             .collect()
     }
 
+    /// Snapshot-bearing, *unpinned* nodes with their keep-scores — the
+    /// shard eviction/spill worker's candidate list (read lock only).
+    /// Pinned nodes are excluded here, so they are never spilled either.
+    pub fn eviction_candidates(&self) -> Vec<(f64, NodeId, SnapshotRef)> {
+        let tcg = self.tcg.read().unwrap();
+        tcg.live_nodes()
+            .into_iter()
+            .filter_map(|id| {
+                let n = tcg.node(id)?;
+                let snap = n.snapshot?;
+                if n.is_pinned() {
+                    return None;
+                }
+                Some((self.eviction.keep_score(&tcg, id), id, snap))
+            })
+            .collect()
+    }
+
+    /// Background-eviction entry point: detach `node`'s snapshot unless the
+    /// node is refcount-pinned (a resume-offer holder may be about to fetch
+    /// it). The graph structure is kept; the caller owns dropping the store
+    /// bytes of the returned ref.
+    pub fn detach_snapshot_if_unpinned(&self, node: NodeId) -> Option<SnapshotRef> {
+        let mut tcg = self.tcg.write().unwrap();
+        if tcg.node(node).map(|n| n.is_pinned()).unwrap_or(true) {
+            return None;
+        }
+        let taken = tcg.node_mut(node).and_then(|n| n.snapshot.take());
+        if taken.is_some() {
+            self.stats.snapshots_evicted.fetch_add(1, Ordering::Relaxed);
+        }
+        taken
+    }
+
     /// `/viz` rendering of the graph (Figure 9).
     pub fn viz_json(&self) -> Json {
         self.tcg.read().unwrap().to_json()
     }
 
     /// Serialize the full graph (persistence, §3.4 "persists TCG snapshots
-    /// periodically to disk").
+    /// periodically to disk"), including each node's snapshot ref so a
+    /// warm-started run can re-bind spilled payloads.
     pub fn to_persistent_json(&self) -> Json {
         let tcg = self.tcg.read().unwrap();
         let mut nodes = Vec::new();
@@ -331,6 +366,16 @@ impl TaskCache {
                 ("result", n.result.to_json()),
                 ("hits", Json::num(n.hit_count() as f64)),
             ];
+            if let Some(s) = n.snapshot {
+                entry.push((
+                    "snapshot",
+                    Json::obj(vec![
+                        ("id", Json::num(s.id as f64)),
+                        ("bytes", Json::num(s.bytes as f64)),
+                        ("restore_cost", Json::num(s.restore_cost)),
+                    ]),
+                ));
+            }
             let stateless: Vec<Json> = n
                 .stateless
                 .values()
@@ -351,36 +396,82 @@ impl TaskCache {
     /// trajectory/result structure is.
     pub fn from_persistent_json(v: &Json, lpm: LpmConfig) -> Option<TaskCache> {
         let cache = TaskCache::new(lpm, SnapshotPolicy::default(), EvictionPolicy::default());
-        {
-            let mut tcg = cache.tcg.write().unwrap();
-            let nodes = v.get("nodes")?.as_arr()?;
-            // Persistent ids -> rebuilt ids. Entries are serialized in id
-            // order, so parents always precede children.
-            let mut id_map = std::collections::HashMap::new();
-            id_map.insert(ROOT as u64, ROOT);
-            for entry in nodes {
-                let old_id = entry.get("id")?.as_u64()?;
-                let old_parent = entry.get("parent")?.as_u64()?;
-                let call = ToolCall::from_json(entry.get("call")?)?;
-                let result = ToolResult::from_json(entry.get("result")?)?;
-                let parent = *id_map.get(&old_parent)?;
-                let new_id = tcg.insert_child(parent, call, result);
-                if let Some(hits) = entry.get("hits").and_then(|h| h.as_u64()) {
-                    if let Some(n) = tcg.node(new_id) {
-                        n.hits.store(hits, Ordering::Relaxed);
-                    }
-                }
-                if let Some(stateless) = entry.get("stateless").and_then(|s| s.as_arr()) {
-                    for s in stateless {
-                        let c = ToolCall::from_json(s.get("call")?)?;
-                        let r = ToolResult::from_json(s.get("result")?)?;
-                        tcg.insert_stateless(new_id, c, r);
-                    }
-                }
-                id_map.insert(old_id, new_id);
-            }
+        let (_, ok) = cache.load_persistent_json(v, &|_| false);
+        if !ok {
+            return None;
         }
         Some(cache)
+    }
+
+    /// Load [`TaskCache::to_persistent_json`] output into *this* cache
+    /// (warm-start, §3.4): trajectories, hit counts, and stateless indices
+    /// are merged in; a node's snapshot ref is re-attached only when
+    /// `keep_snapshot(id)` confirms its payload survived (the spill
+    /// manifest), so a truncated manifest can never leave dangling refs.
+    /// Returns the re-attached `(node, ref)` pairs plus a completeness
+    /// flag: `false` means the input was malformed part-way — whatever
+    /// loaded (including the returned attach list, which the caller must
+    /// still register in its store) stays loaded.
+    pub fn load_persistent_json(
+        &self,
+        v: &Json,
+        keep_snapshot: &dyn Fn(u64) -> bool,
+    ) -> (Vec<(NodeId, SnapshotRef)>, bool) {
+        let mut attached = Vec::new();
+        let ok = self.load_persistent_inner(v, keep_snapshot, &mut attached).is_some();
+        (attached, ok)
+    }
+
+    fn load_persistent_inner(
+        &self,
+        v: &Json,
+        keep_snapshot: &dyn Fn(u64) -> bool,
+        attached: &mut Vec<(NodeId, SnapshotRef)>,
+    ) -> Option<()> {
+        let mut tcg = self.tcg.write().unwrap();
+        let nodes = v.get("nodes")?.as_arr()?;
+        // Persistent ids -> rebuilt ids. Entries are serialized in id
+        // order, so parents always precede children.
+        let mut id_map = std::collections::HashMap::new();
+        id_map.insert(ROOT as u64, ROOT);
+        for entry in nodes {
+            let old_id = entry.get("id")?.as_u64()?;
+            let old_parent = entry.get("parent")?.as_u64()?;
+            let call = ToolCall::from_json(entry.get("call")?)?;
+            let result = ToolResult::from_json(entry.get("result")?)?;
+            let parent = *id_map.get(&old_parent)?;
+            let new_id = tcg.insert_child(parent, call, result);
+            if let Some(hits) = entry.get("hits").and_then(|h| h.as_u64()) {
+                if let Some(n) = tcg.node(new_id) {
+                    n.hits.store(hits, Ordering::Relaxed);
+                }
+            }
+            if let Some(s) = entry.get("snapshot") {
+                let (Some(sid), Some(bytes), Some(restore_cost)) = (
+                    s.get("id").and_then(|x| x.as_u64()),
+                    s.get("bytes").and_then(|x| x.as_u64()),
+                    s.get("restore_cost").and_then(|x| x.as_f64()),
+                ) else {
+                    return None;
+                };
+                if keep_snapshot(sid)
+                    && tcg.node(new_id).map(|n| n.snapshot.is_none()).unwrap_or(false)
+                {
+                    let sref = SnapshotRef { id: sid, bytes, restore_cost };
+                    tcg.set_snapshot(new_id, sref);
+                    attached.push((new_id, sref));
+                }
+            }
+            if let Some(stateless) = entry.get("stateless").and_then(|s| s.as_arr()) {
+                for s in stateless {
+                    let c = ToolCall::from_json(s.get("call")?)?;
+                    let r = ToolResult::from_json(s.get("result")?)?;
+                    tcg.insert_stateless(new_id, c, r);
+                }
+            }
+            id_map.insert(old_id, new_id);
+        }
+        Some(())
     }
 }
 

@@ -213,4 +213,19 @@ impl CacheBackend for RemoteBinding {
             .and_then(|v| BackendStats::from_json(&v))
             .unwrap_or_default()
     }
+
+    fn persist(&self, dir: &str) -> bool {
+        // `dir` names a path on the *server's* filesystem.
+        let body = Json::obj(vec![("dir", Json::str(dir))]).to_string();
+        self.post("/persist", body)
+            .and_then(|v| v.get("ok").and_then(|o| o.as_bool()))
+            .unwrap_or(false)
+    }
+
+    fn warm_start(&self, dir: &str) -> bool {
+        let body = Json::obj(vec![("dir", Json::str(dir))]).to_string();
+        self.post("/warm_start", body)
+            .and_then(|v| v.get("ok").and_then(|o| o.as_bool()))
+            .unwrap_or(false)
+    }
 }

@@ -245,17 +245,39 @@ impl ToolCallExecutor {
         // Option A: fork the snapshot the LPM offered. `replay_from` is the
         // resume node's stateful depth; map it to an index in q. The plan
         // is decided *before* fetching, so a live sandbox that is already
-        // ahead of the snapshot never pays the (potentially large) payload
-        // transfer.
+        // at/ahead of the snapshot — or a snapshot whose restore (possibly
+        // a disk fault-in from the spill tier) costs more than the replay
+        // it skips — never pays the payload transfer.
         let snapshot_plan = miss.resume.and_then(|(node, snap, depth)| {
             let idx = if self.cfg.stateful_filtering {
-                stateful_depth_to_index(q, depth)
+                // Clamp: a malformed remote offer must never index past the
+                // prefix the rollout actually executed.
+                stateful_depth_to_index(q, depth).min(prefix_len)
             } else {
                 depth.min(prefix_len)
             };
-            if live_start.is_some_and(|live| live > idx) {
-                // Live sandbox is ahead of the snapshot: keep it, return
-                // the pin unused.
+            let replay_start = live_start.unwrap_or(0);
+            if replay_start >= idx {
+                // The snapshot cannot skip any replay work: keep what we
+                // have, return the pin unused.
+                self.backend.release(&self.task, node);
+                return None;
+            }
+            // Seconds of replay the snapshot saves: the recorded latencies
+            // of the state-mutating calls it covers. Adopt only when the
+            // restore beats that — unless a warm background fork makes the
+            // attach nearly free (§3.3). The estimate uses the ref's
+            // recorded restore cost; a spilled payload pays a small extra
+            // disk fault-in at fetch time that the plan ignores (the offer
+            // does not reveal spilled-ness, and the penalty is ~ms-scale
+            // against multi-second replay savings).
+            let saved: f64 = self.history[replay_start..idx]
+                .iter()
+                .filter(|(c, _)| c.mutates_state)
+                .map(|(_, r)| r.exec_time)
+                .sum();
+            if snap.restore_cost >= saved && !self.backend.has_warm_fork(&self.task, node)
+            {
                 self.backend.release(&self.task, node);
                 return None;
             }
@@ -527,6 +549,35 @@ mod tests {
                 "rollout {seed_rollout}: {outs:?}"
             );
         }
+    }
+
+    #[test]
+    fn expensive_restore_rejected_in_favour_of_replay() {
+        // Cost-aware resume planning: a snapshot whose restore (e.g. a
+        // deep-spilled payload) costs more than the replay it skips is not
+        // adopted — the executor replays and still returns the pin.
+        let cache = svc();
+        let node = cache.insert(
+            TASK,
+            &[(bash("make"), ToolResult { output: "built".into(), exec_time: 9.0, api_tokens: 0 })],
+        );
+        let huge = crate::sandbox::SandboxSnapshot {
+            bytes: vec![0u8; 8],
+            serialize_cost: 0.1,
+            restore_cost: 1e6,
+        };
+        assert!(cache.store_snapshot(TASK, node, huge) > 0);
+
+        let mut e = make(Arc::clone(&cache), ExecutorConfig::default(), 1);
+        assert!(e.call(bash("make")).hit);
+        let o = e.call(bash("echo done > status.txt"));
+        assert!(!o.hit);
+        assert!(
+            o.charged < 1000.0,
+            "restore (1e6 s) must have been rejected for replay: {}",
+            o.charged
+        );
+        assert_eq!(cache.task(TASK).pinned_node_count(), 0, "rejection leaked the pin");
     }
 
     #[test]

@@ -73,19 +73,24 @@ impl ModelMeta {
     }
 }
 
-#[cfg(feature = "pjrt")]
+// The real backend needs BOTH features: `pjrt` selects the runtime and
+// `xla` (which requires vendoring the external `xla` crate into
+// Cargo.toml) pulls in the C-API bindings. `--features pjrt` alone keeps
+// the stub, so CI can compile-check the pjrt feature surface without the
+// vendored crate.
+#[cfg(all(feature = "pjrt", feature = "xla"))]
 mod pjrt;
-#[cfg(feature = "pjrt")]
+#[cfg(all(feature = "pjrt", feature = "xla"))]
 pub use pjrt::AgentRuntime;
 
-#[cfg(not(feature = "pjrt"))]
+#[cfg(not(all(feature = "pjrt", feature = "xla")))]
 mod stub {
     use super::{rerr, ModelMeta, Result};
     use std::path::Path;
 
     const MSG: &str =
-        "built without the `pjrt` feature — vendor the `xla` crate and rebuild \
-         with `cargo build --features pjrt` to run the PJRT artifacts";
+        "built without the `pjrt`+`xla` features — vendor the `xla` crate and \
+         rebuild with `cargo build --features pjrt,xla` to run the PJRT artifacts";
 
     /// API-compatible stand-in for the PJRT-backed runtime.
     pub struct AgentRuntime {
@@ -116,7 +121,7 @@ mod stub {
     }
 }
 
-#[cfg(not(feature = "pjrt"))]
+#[cfg(not(all(feature = "pjrt", feature = "xla")))]
 pub use stub::AgentRuntime;
 
 #[cfg(test)]
@@ -129,7 +134,7 @@ mod tests {
         assert!(err.to_string().contains("make artifacts"), "{err}");
     }
 
-    #[cfg(not(feature = "pjrt"))]
+    #[cfg(not(all(feature = "pjrt", feature = "xla")))]
     #[test]
     fn stub_runtime_fails_with_guidance() {
         let err = AgentRuntime::load("artifacts").unwrap_err();

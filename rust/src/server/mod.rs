@@ -13,7 +13,10 @@
 //! * `GET  /snapshot`      — fetch snapshot bytes (`?task=&id=`)
 //! * `POST /warm`          — mark a node's background fork warm
 //! * `GET  /warm`          — query a node's warm-fork flag (`?task=&node=`)
+//! * `POST /persist`       — persist all TCGs + snapshot payloads (`{dir}`)
+//! * `POST /warm_start`    — warm-start from a persisted dir (`{dir}`)
 //! * `GET  /stats`         — per-task (`?task=`) or service-wide statistics
+//!   (service-wide includes spill-tier occupancy / fault / eviction counters)
 //! * `GET  /viz`           — TCG structure as JSON (Figure 9)
 //! * `GET  /ping`          — liveness
 //!
@@ -54,6 +57,11 @@ impl CacheService {
         })
     }
 
+    /// Front an already-built sharded service (spill/budget-configured).
+    pub fn with_service(sharded: ShardedCacheService) -> Arc<CacheService> {
+        Arc::new(CacheService { sharded })
+    }
+
     /// The trait surface every handler dispatches through.
     pub fn backend(&self) -> &dyn CacheBackend {
         &self.sharded
@@ -73,6 +81,12 @@ impl CacheService {
         self.sharded.snapshot_count()
     }
 
+    /// White-box eviction of one node's snapshot (tests of the unpinned
+    /// resume-offer race — see the comment in `lookup`).
+    pub fn evict_snapshot(&self, task: &str, node: usize) -> bool {
+        self.sharded.evict_snapshot(task, node)
+    }
+
     fn handle(&self, req: &Request) -> Response {
         match (req.method.as_str(), req.path.as_str()) {
             ("GET", "/ping") => Response::text(200, "pong"),
@@ -83,6 +97,8 @@ impl CacheService {
             ("GET", "/snapshot") => self.fetch_snapshot(req),
             ("POST", "/warm") => self.set_warm(req),
             ("GET", "/warm") => self.get_warm(req),
+            ("POST", "/persist") => self.persist(req),
+            ("POST", "/warm_start") => self.warm_start(req),
             ("GET", "/stats") => self.stats(req),
             ("GET", "/viz") => self.viz(req),
             _ => Response::not_found(),
@@ -274,6 +290,37 @@ impl CacheService {
         Response::json(Json::obj(vec![("warm", Json::Bool(warm))]).to_string())
     }
 
+    /// `{dir}` body → persist / warm-start the whole service state. The
+    /// directory is a *server-local* path (the snapshot lifecycle's
+    /// warm-start tier, not a client upload). Like the rest of the wire
+    /// protocol this is unauthenticated — a client that can reach the
+    /// port can direct writes/reads at any path the server process can
+    /// touch, so bind trusted interfaces only (the paper's deployment
+    /// model: the cache server lives inside the training cluster).
+    fn lifecycle(&self, req: &Request, warm: bool) -> Response {
+        let body = match Self::parse_body(req) {
+            Ok(b) => b,
+            Err(r) => return r,
+        };
+        let Some(dir) = body.get("dir").and_then(|d| d.as_str()) else {
+            return Response::bad_request("missing dir");
+        };
+        let ok = if warm {
+            self.backend().warm_start(dir)
+        } else {
+            self.backend().persist(dir)
+        };
+        Response::json(Json::obj(vec![("ok", Json::Bool(ok))]).to_string())
+    }
+
+    fn persist(&self, req: &Request) -> Response {
+        self.lifecycle(req, false)
+    }
+
+    fn warm_start(&self, req: &Request) -> Response {
+        self.lifecycle(req, true)
+    }
+
     fn stats(&self, req: &Request) -> Response {
         match req.query.get("task") {
             Some(task) => Response::json(self.backend().stats(task).to_json().to_string()),
@@ -301,7 +348,17 @@ pub fn serve_with(
     workers: usize,
     shards: usize,
 ) -> std::io::Result<(Server, Arc<CacheService>)> {
-    let service = CacheService::with_shards(shards);
+    serve_service(addr, workers, ShardedCacheService::new(shards))
+}
+
+/// Start a TVCACHE server fronting an already-built sharded service (the
+/// way to serve a byte-budgeted / spill-tiered configuration).
+pub fn serve_service(
+    addr: &str,
+    workers: usize,
+    sharded: ShardedCacheService,
+) -> std::io::Result<(Server, Arc<CacheService>)> {
+    let service = CacheService::with_service(sharded);
     let svc = Arc::clone(&service);
     let handler: Handler = Arc::new(move |req: &Request| svc.handle(req));
     let server = Server::bind(addr, workers, handler)?;

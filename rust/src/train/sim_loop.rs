@@ -21,7 +21,8 @@ use std::sync::Arc;
 
 use crate::agent::scripted::Agent;
 use crate::cache::{
-    CacheBackend, CacheFactory, EvictionPolicy, LpmConfig, ShardedCacheService, TaskCache,
+    CacheBackend, CacheFactory, EvictionPolicy, LpmConfig, ServiceConfig,
+    ShardedCacheService, TaskCache,
 };
 use crate::client::{ExecutorConfig, ToolCallExecutor};
 use crate::sim::EventQueue;
@@ -148,6 +149,22 @@ fn sharded_backend(
     max_snapshots: usize,
     shards: usize,
 ) -> Arc<ShardedCacheService> {
+    sharded_backend_with(
+        cfg,
+        lpm,
+        max_snapshots,
+        ServiceConfig { shards, ..Default::default() },
+    )
+}
+
+/// As [`sharded_backend`] but with the full snapshot-lifecycle
+/// [`ServiceConfig`] (byte budgets, spill tier, background workers).
+fn sharded_backend_with(
+    cfg: &WorkloadConfig,
+    lpm: LpmConfig,
+    max_snapshots: usize,
+    svc_cfg: ServiceConfig,
+) -> Arc<ShardedCacheService> {
     let snapshot_policy = cfg.snapshot_policy();
     let factory: CacheFactory = Arc::new(move || {
         TaskCache::new(
@@ -156,7 +173,10 @@ fn sharded_backend(
             EvictionPolicy { max_snapshots, ..Default::default() },
         )
     });
-    Arc::new(ShardedCacheService::with_factory(shards, factory))
+    Arc::new(
+        ShardedCacheService::with_config(svc_cfg, factory)
+            .expect("spill directory must be creatable"),
+    )
 }
 
 /// Rollout process state inside the DES.
@@ -329,6 +349,18 @@ pub struct ConcurrentOptions {
     pub seed: u64,
     pub lpm: LpmConfig,
     pub max_snapshots: usize,
+    /// Resident-byte budget per shard store, enforced by the background
+    /// eviction workers (`None` = unbounded).
+    pub shard_byte_budget: Option<u64>,
+    /// Spill directory: over-budget snapshots demote to disk instead of
+    /// being destroyed.
+    pub spill_dir: Option<String>,
+    /// Warm-start: load a persisted cache state before epoch 0, so the
+    /// run starts with the previous run's TCGs + spilled snapshots.
+    pub warm_start_from: Option<String>,
+    /// Persist the cache state after the final epoch (warm-start source
+    /// for the next run).
+    pub persist_to: Option<String>,
 }
 
 impl ConcurrentOptions {
@@ -342,6 +374,10 @@ impl ConcurrentOptions {
             seed: 0x7CAC4E,
             lpm: LpmConfig::default(),
             max_snapshots: 64,
+            shard_byte_budget: None,
+            spill_dir: None,
+            warm_start_from: None,
+            persist_to: None,
         }
     }
 }
@@ -386,7 +422,24 @@ impl ConcurrentReport {
 /// training infrastructure.
 pub fn run_concurrent(cfg: &WorkloadConfig, opts: &ConcurrentOptions) -> ConcurrentReport {
     let factory = cfg.factory();
-    let backend = sharded_backend(cfg, opts.lpm, opts.max_snapshots, opts.shards);
+    let backend = sharded_backend_with(
+        cfg,
+        opts.lpm,
+        opts.max_snapshots,
+        ServiceConfig {
+            shards: opts.shards,
+            shard_byte_budget: opts.shard_byte_budget,
+            global_byte_budget: None,
+            spill_dir: opts.spill_dir.clone().map(std::path::PathBuf::from),
+            background: opts.shard_byte_budget.is_some(),
+        },
+    );
+    if let Some(dir) = &opts.warm_start_from {
+        assert!(
+            backend.warm_start(dir),
+            "warm-start requested but {dir} did not load"
+        );
+    }
     let pool = ThreadPool::new(opts.threads);
     let mut report = ConcurrentReport::default();
     let t0 = std::time::Instant::now();
@@ -447,6 +500,12 @@ pub fn run_concurrent(cfg: &WorkloadConfig, opts: &ConcurrentOptions) -> Concurr
             .push((epoch, epoch_hits as f64 / denom as f64));
     }
     report.wall_secs = t0.elapsed().as_secs_f64();
+    if let Some(dir) = &opts.persist_to {
+        // Let the background eviction workers finish any in-flight spill
+        // before persisting, so the manifest has a single writer.
+        backend.quiesce();
+        assert!(backend.persist(dir), "persist requested but {dir} was not writable");
+    }
     report
 }
 
@@ -556,6 +615,36 @@ mod tests {
             (a - b).abs() < 0.25,
             "drivers diverged: DES {a:.2} vs concurrent {b:.2}"
         );
+    }
+
+    #[test]
+    fn concurrent_warm_start_resumes_hit_rates() {
+        // The warm-start acceptance shape: a new run loading the previous
+        // run's persisted cache opens at (at least) the hit rate the cold
+        // run only reached by its final epoch.
+        let cfg = WorkloadConfig::config_for(Workload::TerminalEasy);
+        let dir = std::env::temp_dir()
+            .join(format!("tvcache-simloop-warm-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let dir_s = dir.to_string_lossy().into_owned();
+
+        let mut cold = ConcurrentOptions::from_config(&cfg, 3);
+        cold.epochs = 3;
+        cold.persist_to = Some(dir_s.clone());
+        let cold_rep = run_concurrent(&cfg, &cold);
+
+        let mut warm = ConcurrentOptions::from_config(&cfg, 3);
+        warm.epochs = 1;
+        warm.warm_start_from = Some(dir_s);
+        let warm_rep = run_concurrent(&cfg, &warm);
+
+        let cold_final = cold_rep.epoch_hit_rates.last().unwrap().1;
+        let warm_first = warm_rep.epoch_hit_rates[0].1;
+        assert!(
+            warm_first >= cold_final,
+            "warm epoch 0 ({warm_first:.2}) below cold final epoch ({cold_final:.2})"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -1,0 +1,372 @@
+//! Property tests for the snapshot lifecycle: seeded randomized TCGs
+//! asserting the eviction/spill invariants the paper's §3.3–§3.4 machinery
+//! must uphold —
+//!
+//! * pinned (refcount > 0) snapshots are never evicted or spilled,
+//! * the count *and* byte budgets hold after every enforce (unless only
+//!   pinned snapshots remain),
+//! * eviction order is deterministic for a fixed seed,
+//! * spill → fault-in round-trips preserve LPM results node-for-node,
+//! * a run killed mid-spill (manifest truncated at arbitrary offsets)
+//!   recovers to a consistent TCG with no dangling `SnapshotRef`s,
+//! * an 8-thread stress run with background eviction enabled never frees
+//!   a pinned snapshot out from under its resume-offer holder.
+
+use std::collections::HashSet;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+use tvcache::cache::{
+    enforce_budget, CacheBackend, EvictionPolicy, Lookup, ServiceConfig,
+    ShardedCacheService, SnapshotRef, TaskCache, Tcg, ToolCall, ToolResult, ROOT,
+};
+use tvcache::sandbox::SandboxSnapshot;
+use tvcache::util::rng::Rng;
+
+fn call(s: String) -> ToolCall {
+    ToolCall::new("t", s)
+}
+
+fn snap_bytes(n: usize) -> SandboxSnapshot {
+    SandboxSnapshot { bytes: vec![3u8; n], serialize_cost: 0.1, restore_cost: 0.2 }
+}
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir()
+        .join(format!("tvcache-props-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+/// Grow a random TCG; returns all non-root node ids. Node `exec_time`s are
+/// randomized so recreation costs differ across nodes.
+fn random_tcg(rng: &mut Rng, n: usize) -> (Tcg, Vec<usize>) {
+    let mut g = Tcg::new();
+    let mut nodes = vec![ROOT];
+    for i in 0..n {
+        let parent = nodes[rng.below(nodes.len() as u64) as usize];
+        let id = g.insert_child(
+            parent,
+            call(format!("c{i}")),
+            ToolResult::new("r", 0.1 + rng.range_f64(0.0, 5.0)),
+        );
+        nodes.push(id);
+    }
+    (g, nodes[1..].to_vec())
+}
+
+#[test]
+fn prop_pinned_never_evicted_and_budgets_hold() {
+    for trial in 0..40u64 {
+        let mut rng = Rng::new(0xE51C ^ trial.wrapping_mul(0x9E37_79B9));
+        let (mut g, ids) = random_tcg(&mut rng, 5 + rng.below(20) as usize);
+        let mut pinned: HashSet<u64> = HashSet::new();
+        for &id in &ids {
+            if rng.chance(0.6) {
+                g.set_snapshot(
+                    id,
+                    SnapshotRef {
+                        id: id as u64,
+                        bytes: 50 + rng.below(400),
+                        restore_cost: 0.2,
+                    },
+                );
+                if rng.chance(0.3) {
+                    g.node_mut(id).unwrap().refcount.store(1, Ordering::Release);
+                    pinned.insert(id as u64);
+                }
+            }
+        }
+        let policy = EvictionPolicy {
+            max_snapshots: rng.below(4) as usize,
+            max_snapshot_bytes: 100 + rng.below(900),
+            ..Default::default()
+        };
+        let freed = enforce_budget(&mut g, &policy);
+        for s in &freed {
+            assert!(!pinned.contains(&s.id), "trial {trial}: pinned snapshot {} freed", s.id);
+        }
+        // Every pinned snapshot is still attached to its (live) node.
+        for &sid in &pinned {
+            let node = sid as usize;
+            let n = g.node(node).unwrap_or_else(|| {
+                panic!("trial {trial}: pinned node {node} removed from the TCG")
+            });
+            assert_eq!(n.snapshot.map(|s| s.id), Some(sid));
+        }
+        // The budget holds — or everything still snapshotted is pinned.
+        let all_remaining_pinned = (1..=ids.len()).all(|id| {
+            g.node(id)
+                .map(|n| n.snapshot.is_none() || n.is_pinned())
+                .unwrap_or(true)
+        });
+        assert!(
+            !policy.over_budget(&g) || all_remaining_pinned,
+            "trial {trial}: budget violated with evictable snapshots left \
+             (count {}, bytes {})",
+            g.snapshot_count(),
+            g.snapshot_bytes()
+        );
+    }
+}
+
+#[test]
+fn prop_eviction_order_deterministic_for_fixed_seed() {
+    for seed in 0..20u64 {
+        let build = |seed: u64| {
+            let mut rng = Rng::new(seed);
+            let (mut g, ids) = random_tcg(&mut rng, 4 + rng.below(16) as usize);
+            for &id in &ids {
+                if rng.chance(0.7) {
+                    g.set_snapshot(
+                        id,
+                        SnapshotRef {
+                            id: id as u64,
+                            bytes: 20 + rng.below(200),
+                            restore_cost: 0.1,
+                        },
+                    );
+                }
+            }
+            g
+        };
+        let policy = EvictionPolicy {
+            max_snapshots: 1,
+            max_snapshot_bytes: 64,
+            ..Default::default()
+        };
+        let mut a = build(seed);
+        let mut b = build(seed);
+        let fa: Vec<u64> = enforce_budget(&mut a, &policy).iter().map(|s| s.id).collect();
+        let fb: Vec<u64> = enforce_budget(&mut b, &policy).iter().map(|s| s.id).collect();
+        assert_eq!(fa, fb, "seed {seed}: eviction order diverged");
+    }
+}
+
+/// Build a spill-tiered service, populate it with seeded random
+/// trajectories + snapshots, and return the (task, query) list.
+fn populated_spill_service(
+    dir: &Path,
+    seed: u64,
+) -> (ShardedCacheService, Vec<(String, Vec<ToolCall>)>) {
+    let cfg = ServiceConfig {
+        shards: 2,
+        // Below a single payload's size: the drain must spill everything,
+        // so the round-trip property covers every snapshot.
+        shard_byte_budget: Some(50),
+        spill_dir: Some(dir.to_path_buf()),
+        background: false, // drained deterministically by the test
+        ..Default::default()
+    };
+    let svc =
+        ShardedCacheService::with_config(cfg, Arc::new(TaskCache::with_defaults)).unwrap();
+    let mut rng = Rng::new(seed);
+    let mut queries = Vec::new();
+    for t in 0..4 {
+        let task = format!("task-{t}");
+        for _ in 0..4 {
+            let n = 1 + rng.below(5) as usize;
+            let traj: Vec<(ToolCall, ToolResult)> = (0..n)
+                .map(|_| {
+                    (
+                        call(format!("c{}", rng.below(6))),
+                        ToolResult::new("out", 0.5 + rng.range_f64(0.0, 3.0)),
+                    )
+                })
+                .collect();
+            let node = svc.insert(&task, &traj);
+            if node != ROOT && rng.chance(0.8) {
+                svc.store_snapshot(&task, node, snap_bytes(100));
+            }
+            let q: Vec<ToolCall> = traj.iter().map(|(c, _)| c.clone()).collect();
+            let mut probe = q.clone();
+            probe.push(call("divergent-probe".to_string()));
+            queries.push((task.clone(), q));
+            queries.push((task.clone(), probe));
+        }
+    }
+    (svc, queries)
+}
+
+/// Look everything up, releasing resume pins immediately so the lookups
+/// themselves never block eviction.
+fn lookup_all(
+    svc: &ShardedCacheService,
+    queries: &[(String, Vec<ToolCall>)],
+) -> Vec<Lookup> {
+    queries
+        .iter()
+        .map(|(task, q)| {
+            let out = svc.lookup(task, q);
+            if let Lookup::Miss(m) = &out {
+                if let Some((node, _, _)) = m.resume {
+                    svc.release(task, node);
+                }
+            }
+            out
+        })
+        .collect()
+}
+
+#[test]
+fn prop_spill_fault_roundtrip_preserves_lpm_node_for_node() {
+    let dir = tmpdir("lpm-roundtrip");
+    let (svc, queries) = populated_spill_service(&dir, 0x5F17 ^ 0xA11CE);
+    let before = lookup_all(&svc, &queries);
+    svc.drain_over_budget();
+    assert!(svc.spilled_count() > 0, "the budget must actually force spills");
+    let after = lookup_all(&svc, &queries);
+    // Hits return the same node + result; misses offer the same resume
+    // (node, snapshot id, replay depth) — spilling must be invisible to LPM.
+    assert_eq!(before, after, "spill changed LPM results");
+    // And every offered snapshot faults in from disk.
+    for l in &after {
+        if let Lookup::Miss(m) = l {
+            if let Some((_, sref, _)) = m.resume {
+                for (task, _) in &queries {
+                    if svc.task(task).snapshotted_nodes().iter().any(|(_, s)| s.id == sref.id)
+                    {
+                        assert!(
+                            svc.fetch_snapshot(task, sref.id).is_some(),
+                            "snapshot {} unfetchable after spill",
+                            sref.id
+                        );
+                    }
+                }
+            }
+        }
+    }
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+fn copy_dir(src: &Path, dst: &Path) {
+    std::fs::create_dir_all(dst).unwrap();
+    for entry in std::fs::read_dir(src).unwrap() {
+        let entry = entry.unwrap();
+        std::fs::copy(entry.path(), dst.join(entry.file_name())).unwrap();
+    }
+}
+
+#[test]
+fn crash_mid_spill_recovers_to_consistent_tcg() {
+    let dir = tmpdir("crash");
+    let (svc, queries) = populated_spill_service(&dir, 0xDEAD_BEEF);
+    svc.drain_over_budget();
+    svc.persist_to_dir(&dir).unwrap();
+    drop(svc);
+
+    let manifest = dir.join("manifest.jsonl");
+    let full = std::fs::read(&manifest).unwrap();
+    // "Kill the run mid-spill": truncate the manifest at arbitrary offsets
+    // (including mid-record) and reload.
+    let cuts: Vec<usize> = (0..=8)
+        .map(|i| i * full.len() / 8)
+        .chain([1, full.len().saturating_sub(1)])
+        .collect();
+    for cut in cuts {
+        let work = tmpdir("crash-work");
+        copy_dir(&dir, &work);
+        std::fs::write(work.join("manifest.jsonl"), &full[..cut]).unwrap();
+
+        let fresh = ShardedCacheService::new(2);
+        fresh.warm_start_from_dir(&work).unwrap();
+        // No dangling refs: every snapshot a TCG still references resolves.
+        for task in fresh.task_ids() {
+            for (_, sref) in fresh.task(&task).snapshotted_nodes() {
+                assert!(
+                    fresh.fetch_snapshot(&task, sref.id).is_some(),
+                    "cut {cut}: dangling SnapshotRef {} in {task}",
+                    sref.id
+                );
+            }
+        }
+        // Trajectory structure survived in full: cached prefixes still hit.
+        for (task, q) in &queries {
+            if q.last().map(|c| c.args.as_str()) == Some("divergent-probe") {
+                continue;
+            }
+            assert!(
+                fresh.lookup(task, q).is_hit(),
+                "cut {cut}: recovered TCG lost a recorded trajectory"
+            );
+        }
+        std::fs::remove_dir_all(&work).unwrap();
+    }
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// 8 threads × mixed ops against a *destroy-mode* (no spill dir) background
+/// eviction service with a tiny byte budget: a resume offer's pin must keep
+/// its snapshot fetchable until released, no matter how hard the worker
+/// churns. (Acceptance: "no pinned snapshot ever freed".)
+#[test]
+fn stress_background_eviction_never_frees_pinned() {
+    let cfg = ServiceConfig {
+        shards: 4,
+        shard_byte_budget: Some(400), // ~4 × 100-byte snapshots per shard
+        background: true,
+        ..Default::default()
+    };
+    let svc = Arc::new(
+        ShardedCacheService::with_config(cfg, Arc::new(TaskCache::with_defaults)).unwrap(),
+    );
+    let handles: Vec<_> = (0..8)
+        .map(|t| {
+            let svc = Arc::clone(&svc);
+            std::thread::spawn(move || {
+                for i in 0..400usize {
+                    let task = format!("task-{}", (t + i) % 8);
+                    let depth = 1 + (i % 3);
+                    let calls: Vec<String> =
+                        (0..depth).map(|d| format!("step-{d}-{}", i % 5)).collect();
+                    let traj: Vec<(ToolCall, ToolResult)> = calls
+                        .iter()
+                        .map(|c| (call(c.clone()), ToolResult::new("r", 2.0)))
+                        .collect();
+                    let node = svc.insert(&task, &traj);
+                    if i % 2 == 0 {
+                        svc.store_snapshot(&task, node, snap_bytes(100));
+                    }
+                    // Divergent lookup: may return a resume offer, which
+                    // pins the node. While pinned, the snapshot must stay
+                    // fetchable despite the background destroyer.
+                    let mut q: Vec<ToolCall> =
+                        calls.iter().map(|c| call(c.clone())).collect();
+                    q.push(call(format!("divergent-{t}-{i}")));
+                    if let Lookup::Miss(m) = svc.lookup(&task, &q) {
+                        if let Some((rnode, sref, _)) = m.resume {
+                            for _ in 0..3 {
+                                assert!(
+                                    svc.fetch_snapshot(&task, sref.id).is_some(),
+                                    "pinned snapshot {} was freed", sref.id
+                                );
+                                std::thread::yield_now();
+                            }
+                            svc.release(&task, rnode);
+                        }
+                    }
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().expect("stress thread panicked");
+    }
+    // Wait for the workers to go idle: only then are TCGs and shard stores
+    // guaranteed mutually consistent for white-box inspection.
+    svc.quiesce();
+    // All pins released; the TCGs and shard stores agree on what is left.
+    let mut tcg_snapshots = 0usize;
+    for task in svc.task_ids() {
+        assert_eq!(svc.task(&task).pinned_node_count(), 0, "{task} leaked a pin");
+        for (_, sref) in svc.task(&task).snapshotted_nodes() {
+            tcg_snapshots += 1;
+            assert!(
+                svc.fetch_snapshot(&task, sref.id).is_some(),
+                "TCG references snapshot {} the store no longer has", sref.id
+            );
+        }
+    }
+    assert_eq!(svc.snapshot_count(), tcg_snapshots, "store/TCG disagreement");
+}

@@ -1,13 +1,15 @@
 //! Integration tests: HTTP server ⇄ remote executor round trips, the
 //! paper's correctness property end-to-end, backend parity (the same
 //! `CacheBackend` contract over the in-process sharded service and the HTTP
-//! binding), persistence recovery, and a property-test sweep over random
+//! binding — including spill/warm-start stats), persistence recovery, the
+//! resume-offer eviction race, and a property-test sweep over random
 //! trajectories.
 
 use std::sync::Arc;
 
 use tvcache::cache::{
-    CacheBackend, Lookup, LpmConfig, ShardedCacheService, TaskCache, ToolCall, ToolResult,
+    BackendStats, CacheBackend, CacheStats, Lookup, LpmConfig, NodeId,
+    ShardedCacheService, SnapshotCosts, TaskCache, ToolCall, ToolResult,
 };
 use tvcache::client::{ExecutorConfig, RemoteBinding, ToolCallExecutor};
 use tvcache::sandbox::{SandboxFactory, SandboxSnapshot, TerminalFactory, ToolExecutionEnvironment};
@@ -133,6 +135,211 @@ fn backend_parity_inprocess_and_http() {
     let (server, _svc) = serve("127.0.0.1:0", 4).unwrap();
     let remote = RemoteBinding::connect(server.addr());
     exercise_backend(&remote, "parity-task");
+}
+
+/// Persist from one backend, warm-start another, and report what the
+/// warm-started side observes — shared by both backend kinds below.
+fn exercise_warm_start(
+    src: &dyn CacheBackend,
+    dst: &dyn CacheBackend,
+    dir: &str,
+) -> BackendStats {
+    let traj: Vec<(ToolCall, ToolResult)> = [("git clone repo", "ok"), ("make", "built")]
+        .iter()
+        .map(|(c, r)| (bash(c), ToolResult::new(*r, 5.0)))
+        .collect();
+    let q: Vec<ToolCall> = traj.iter().map(|(c, _)| c.clone()).collect();
+    let node = src.insert("ws-task", &traj);
+    let snap = SandboxSnapshot {
+        bytes: vec![5u8; 96],
+        serialize_cost: 0.2,
+        restore_cost: 0.4,
+    };
+    let id = src.store_snapshot("ws-task", node, snap);
+    assert!(id > 0);
+    assert!(src.persist(dir), "persist must succeed");
+
+    assert!(dst.warm_start(dir), "warm-start must succeed");
+    assert!(dst.lookup("ws-task", &q).is_hit(), "warm-started TCG must hit");
+    // The snapshot ref survived as a spilled payload and faults in with
+    // its content intact and the disk penalty on the restore cost.
+    let fetched = dst.fetch_snapshot("ws-task", id).expect("payload faults in");
+    assert_eq!(fetched.bytes, vec![5u8; 96]);
+    assert!(
+        fetched.restore_cost >= 0.4,
+        "restore cost lost in the spill manifest: {}",
+        fetched.restore_cost
+    );
+    dst.service_stats()
+}
+
+/// The eviction/spill statistics and warm-start behaviour are identical
+/// between the in-process service and the HTTP binding.
+#[test]
+fn backend_parity_warm_start_and_spill_stats() {
+    let dir_a = std::env::temp_dir()
+        .join(format!("tvcache-parity-a-{}", std::process::id()));
+    let dir_b = std::env::temp_dir()
+        .join(format!("tvcache-parity-b-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir_a);
+    let _ = std::fs::remove_dir_all(&dir_b);
+
+    let src = ShardedCacheService::new(4);
+    let dst = ShardedCacheService::new(4);
+    let stats_inproc = exercise_warm_start(&src, &dst, dir_a.to_str().unwrap());
+
+    let (server_src, _s1) = tvcache::server::serve_with("127.0.0.1:0", 2, 4).unwrap();
+    let (server_dst, _s2) = tvcache::server::serve_with("127.0.0.1:0", 2, 4).unwrap();
+    let remote_src = RemoteBinding::connect(server_src.addr());
+    let remote_dst = RemoteBinding::connect(server_dst.addr());
+    let stats_http = exercise_warm_start(&remote_src, &remote_dst, dir_b.to_str().unwrap());
+
+    assert_eq!(
+        stats_inproc, stats_http,
+        "spill/warm-start statistics diverged between backends"
+    );
+    assert_eq!(stats_inproc.spilled_snapshots, 1);
+    assert_eq!(stats_inproc.spilled_bytes, 96);
+    assert_eq!(stats_inproc.spill_faults, 1);
+    assert_eq!(stats_inproc.snapshots, 1);
+
+    let _ = std::fs::remove_dir_all(&dir_a);
+    let _ = std::fs::remove_dir_all(&dir_b);
+}
+
+/// A `CacheBackend` decorator that evicts the offered resume node right
+/// after every lookup returns — the narrowest possible reproduction of the
+/// resume-offer eviction race the server comment warns about (offers over
+/// HTTP are unpinned): the offer is outstanding while the snapshot dies.
+struct EvictAfterLookup {
+    inner: RemoteBinding,
+    svc: Arc<tvcache::server::CacheService>,
+}
+
+impl CacheBackend for EvictAfterLookup {
+    fn lookup(&self, task: &str, q: &[ToolCall]) -> Lookup {
+        let out = self.inner.lookup(task, q);
+        if let Lookup::Miss(m) = &out {
+            if let Some((node, _, _)) = m.resume {
+                // Server-side eviction lands between the offer and the
+                // client's fetch.
+                self.svc.evict_snapshot(task, node);
+            }
+        }
+        out
+    }
+
+    fn insert(&self, task: &str, traj: &[(ToolCall, ToolResult)]) -> NodeId {
+        self.inner.insert(task, traj)
+    }
+
+    fn release(&self, task: &str, node: NodeId) {
+        self.inner.release(task, node);
+    }
+
+    fn should_snapshot(&self, task: &str, costs: SnapshotCosts) -> bool {
+        self.inner.should_snapshot(task, costs)
+    }
+
+    fn store_snapshot(&self, task: &str, node: NodeId, snap: SandboxSnapshot) -> u64 {
+        self.inner.store_snapshot(task, node, snap)
+    }
+
+    fn fetch_snapshot(&self, task: &str, id: u64) -> Option<SandboxSnapshot> {
+        self.inner.fetch_snapshot(task, id)
+    }
+
+    fn set_warm_fork(&self, task: &str, node: NodeId, warm: bool) {
+        self.inner.set_warm_fork(task, node, warm);
+    }
+
+    fn has_warm_fork(&self, task: &str, node: NodeId) -> bool {
+        self.inner.has_warm_fork(task, node)
+    }
+
+    fn stats(&self, task: &str) -> CacheStats {
+        self.inner.stats(task)
+    }
+
+    fn service_stats(&self) -> BackendStats {
+        self.inner.service_stats()
+    }
+
+    fn persist(&self, dir: &str) -> bool {
+        self.inner.persist(dir)
+    }
+
+    fn warm_start(&self, dir: &str) -> bool {
+        self.inner.warm_start(dir)
+    }
+}
+
+/// Regression for the race noted in `rust/src/server/mod.rs` (`lookup`):
+/// an outstanding resume offer whose node is evicted before the fetch must
+/// degrade to replay — correct output, no panic, no leaked pin.
+#[test]
+fn resume_offer_eviction_race_degrades_to_replay() {
+    let (server, svc) = serve("127.0.0.1:0", 2).unwrap();
+    let binding = RemoteBinding::connect(server.addr());
+
+    // Wire-level shape first: offer → evict → fetch misses → release no-ops.
+    let traj: Vec<(ToolCall, ToolResult)> =
+        vec![(bash("make"), ToolResult::new("built", 9.0))];
+    let node = binding.insert("race-task", &traj);
+    let id = binding.store_snapshot(
+        "race-task",
+        node,
+        SandboxSnapshot { bytes: b"payload".to_vec(), serialize_cost: 0.2, restore_cost: 0.4 },
+    );
+    assert!(id > 0);
+    let q = vec![bash("make"), bash("echo x > f")];
+    let Lookup::Miss(m) = binding.lookup("race-task", &q) else { panic!("expected miss") };
+    let (rnode, sref, _) = m.resume.expect("resume offered");
+    assert!(svc.evict_snapshot("race-task", rnode), "white-box eviction failed");
+    assert!(binding.fetch_snapshot("race-task", sref.id).is_none());
+    binding.release("race-task", rnode); // saturating no-op, must not panic
+    assert_eq!(svc.task("race-task").pinned_node_count(), 0);
+
+    // Full executor drive across the same race: every miss's offer is
+    // evicted before the executor can fetch; outputs must still match a
+    // clean cacheless execution.
+    let factory = Arc::new(TerminalFactory { medium: false });
+    let racing = Arc::new(EvictAfterLookup {
+        inner: RemoteBinding::connect(server.addr()),
+        svc: Arc::clone(&svc),
+    });
+    let script = ["pip install libdep1", "make", "make test", "echo done > s.txt", "cat s.txt"];
+
+    let mut warm = ToolCallExecutor::new(
+        Arc::clone(&racing) as Arc<_>,
+        "race-exec",
+        Arc::clone(&factory) as Arc<_>,
+        11,
+        ExecutorConfig::default(),
+    );
+    for c in script {
+        warm.call(bash(c));
+    }
+    let mut second = ToolCallExecutor::new(
+        racing as Arc<_>,
+        "race-exec",
+        Arc::clone(&factory) as Arc<_>,
+        11,
+        ExecutorConfig::default(),
+    );
+    let outputs: Vec<String> =
+        script.iter().map(|c| second.call(bash(c)).result.output).collect();
+
+    let mut reference = factory.create(11);
+    for (c, got) in script.iter().zip(&outputs) {
+        let want = reference.execute(&bash(c)).output;
+        assert_eq!(got, &want, "race degraded incorrectly at {c}");
+    }
+    assert_eq!(
+        svc.task("race-exec").pinned_node_count(),
+        0,
+        "the race leaked a resume pin"
+    );
 }
 
 /// The paper's correctness theorem, tested as a property over random
