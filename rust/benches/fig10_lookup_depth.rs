@@ -1,0 +1,235 @@
+//! Figure 10 (extension): per-call lookup cost vs trajectory depth.
+//!
+//! The cache keys every lookup on the rollout's *full* tool history
+//! (§3.1). Paid literally — a root-to-leaf TCG walk per call, a
+//! JSON-serialized full prefix per request — that makes the per-call cost
+//! O(L) and the per-rollout wire traffic O(L²). Stateful lookup cursors
+//! (`CacheBackend::cursor_open/step/record`) pin the rollout's TCG
+//! position server-side so each call ships only the delta: O(1) work and
+//! bytes per call regardless of depth.
+//!
+//! This bench measures both claims on the in-process service:
+//!
+//! 1. **Latency**: per-call lookup latency of a depth-L all-hit replay,
+//!    cursor path vs legacy full-prefix path, for L = 1 … 128. The cursor
+//!    path must stay flat; the legacy path grows linearly.
+//! 2. **Wire bytes**: exact request-frame bytes for a depth-32 all-miss
+//!    rollout (the worst case: every call pays a lookup *and* a record),
+//!    binary cursor protocol vs the JSON full-prefix protocol. Cursor
+//!    bytes are O(L); JSON bytes are O(L²) — the bench asserts ≥5× fewer.
+//!
+//! `TVCACHE_BENCH_SMOKE=1` shrinks iteration counts and relaxes the
+//! timing assertions for CI smoke runs (the byte accounting is exact and
+//! stays asserted). Results are appended as one JSON line to `BENCH_3.json`
+//! (override the path with `TVCACHE_BENCH_OUT`) so successive PRs build a
+//! machine-readable perf trajectory.
+
+use std::io::Write as _;
+use std::sync::Arc;
+use std::time::Instant;
+
+use tvcache::bench::print_table;
+use tvcache::cache::{CacheBackend, ShardedCacheService, ToolCall, ToolResult};
+use tvcache::metrics::CsvWriter;
+use tvcache::server::lookup_body;
+use tvcache::wire;
+
+const TASK: &str = "fig10-task";
+const MAX_DEPTH: usize = 128;
+const DEPTHS: [usize; 8] = [1, 2, 4, 8, 16, 32, 64, 128];
+const BYTES_DEPTH: usize = 32;
+
+fn call_at(d: usize) -> ToolCall {
+    ToolCall::new("bash", format!("step-{d} --with --some --realistic args"))
+}
+
+fn result_at(d: usize) -> ToolResult {
+    ToolResult::new(format!("output of step {d}\nline two"), 1.0)
+}
+
+/// Mean seconds per lookup over `walks` cursor walks of depth `depth`
+/// (seek back to the root between walks, outside the timed region).
+fn cursor_ns_per_call(
+    svc: &ShardedCacheService,
+    chain: &[ToolCall],
+    depth: usize,
+    walks: usize,
+) -> f64 {
+    let cur = svc.cursor_open(TASK);
+    assert!(cur != 0);
+    let mut total = 0.0f64;
+    for _ in 0..walks {
+        assert!(svc.cursor_seek(TASK, cur, 0, 0), "seek to ROOT");
+        let t0 = Instant::now();
+        for c in &chain[..depth] {
+            let step = svc.cursor_step(TASK, cur, c);
+            assert!(step.is_hit(), "warm chain must hit");
+        }
+        total += t0.elapsed().as_secs_f64();
+    }
+    svc.cursor_close(TASK, cur);
+    total / (walks * depth) as f64 * 1e9
+}
+
+/// Mean seconds per legacy full-prefix lookup at exactly `depth`.
+fn legacy_ns_per_call(
+    svc: &ShardedCacheService,
+    chain: &[ToolCall],
+    depth: usize,
+    iters: usize,
+) -> f64 {
+    let q = &chain[..depth];
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        assert!(svc.lookup(TASK, q).is_hit(), "warm chain must hit");
+    }
+    t0.elapsed().as_secs_f64() / iters as f64 * 1e9
+}
+
+/// Exact request bytes for a depth-L all-miss rollout under each protocol.
+fn wire_bytes(depth: usize) -> (usize, usize) {
+    let mut json_bytes = 0usize;
+    let mut bin_bytes = 0usize;
+    let mut buf = Vec::new();
+
+    // Binary cursor protocol: one open + per call one step + one record.
+    buf.clear();
+    wire::enc_cursor_open(&mut buf, TASK);
+    bin_bytes += buf.len();
+
+    let mut history: Vec<(ToolCall, ToolResult)> = Vec::new();
+    for d in 0..depth {
+        let call = call_at(d);
+        let result = result_at(d);
+
+        buf.clear();
+        wire::enc_cursor_step(&mut buf, TASK, 1, &call);
+        bin_bytes += buf.len();
+        buf.clear();
+        wire::enc_cursor_record(&mut buf, TASK, 1, &call, &result);
+        bin_bytes += buf.len();
+
+        // Legacy JSON protocol: the full prefix per lookup + the full
+        // trajectory per insert.
+        history.push((call, result));
+        let q: Vec<ToolCall> = history.iter().map(|(c, _)| c.clone()).collect();
+        json_bytes += lookup_body(TASK, &q).len();
+        json_bytes += json_put_body(&history).len();
+    }
+    (json_bytes, bin_bytes)
+}
+
+/// The legacy `/put` JSON body (what `RemoteBinding::insert` used to send).
+fn json_put_body(traj: &[(ToolCall, ToolResult)]) -> String {
+    use tvcache::util::json::Json;
+    let entries: Vec<Json> = traj
+        .iter()
+        .map(|(c, r)| Json::obj(vec![("call", c.to_json()), ("result", r.to_json())]))
+        .collect();
+    Json::obj(vec![("task", Json::str(TASK)), ("trajectory", Json::Arr(entries))])
+        .to_string()
+}
+
+fn main() {
+    let smoke = std::env::var("TVCACHE_BENCH_SMOKE").is_ok();
+    let (walk_budget, repeats) = if smoke { (2_000usize, 2usize) } else { (40_000, 5) };
+
+    // One task, one warm chain of MAX_DEPTH mutating calls.
+    let svc = ShardedCacheService::new(4);
+    let chain: Vec<ToolCall> = (0..MAX_DEPTH).map(call_at).collect();
+    let traj: Vec<(ToolCall, ToolResult)> =
+        (0..MAX_DEPTH).map(|d| (call_at(d), result_at(d))).collect();
+    svc.insert(TASK, &traj);
+
+    // Latency sweep: median-of-repeats per depth, both paths.
+    let mut cursor_ns = Vec::new();
+    let mut legacy_ns = Vec::new();
+    for &depth in &DEPTHS {
+        let walks = (walk_budget / depth).max(8);
+        let mut c_samples: Vec<f64> = (0..repeats)
+            .map(|_| cursor_ns_per_call(&svc, &chain, depth, walks))
+            .collect();
+        let mut l_samples: Vec<f64> = (0..repeats)
+            .map(|_| legacy_ns_per_call(&svc, &chain, depth, walks))
+            .collect();
+        c_samples.sort_by(f64::total_cmp);
+        l_samples.sort_by(f64::total_cmp);
+        cursor_ns.push(c_samples[repeats / 2]);
+        legacy_ns.push(l_samples[repeats / 2]);
+    }
+
+    let (json_bytes, bin_bytes) = wire_bytes(BYTES_DEPTH);
+    let byte_ratio = json_bytes as f64 / bin_bytes as f64;
+
+    let mut rows = Vec::new();
+    let mut csv = CsvWriter::new(&["depth", "cursor_ns_per_call", "legacy_ns_per_call"]);
+    for (i, &depth) in DEPTHS.iter().enumerate() {
+        rows.push(vec![
+            format!("{depth}"),
+            format!("{:.0}", cursor_ns[i]),
+            format!("{:.0}", legacy_ns[i]),
+        ]);
+        csv.rowf(&[&depth, &format!("{:.1}", cursor_ns[i]), &format!("{:.1}", legacy_ns[i])]);
+    }
+    print_table(
+        "Figure 10 (ext): per-call lookup latency vs trajectory depth (ns/call)",
+        &["depth", "cursor", "legacy full-prefix"],
+        &rows,
+    );
+    println!(
+        "\nwire bytes, depth-{BYTES_DEPTH} all-miss rollout: JSON {json_bytes} B vs binary \
+         cursor {bin_bytes} B  ({byte_ratio:.1}x fewer)"
+    );
+    csv.write("results/fig10_lookup_depth.csv").unwrap();
+    println!("series -> results/fig10_lookup_depth.csv");
+
+    // Machine-readable perf trajectory for future PRs.
+    let out = std::env::var("TVCACHE_BENCH_OUT").unwrap_or_else(|_| "../BENCH_3.json".into());
+    let line = format!(
+        "{{\"bench\":\"fig10_lookup_depth\",\"mode\":\"{}\",\
+         \"cursor_ns_d1\":{:.1},\"cursor_ns_d128\":{:.1},\
+         \"legacy_ns_d1\":{:.1},\"legacy_ns_d128\":{:.1},\
+         \"json_bytes_d32\":{json_bytes},\"bin_bytes_d32\":{bin_bytes},\
+         \"byte_ratio\":{byte_ratio:.2}}}",
+        if smoke { "smoke" } else { "full" },
+        cursor_ns[0],
+        cursor_ns[DEPTHS.len() - 1],
+        legacy_ns[0],
+        legacy_ns[DEPTHS.len() - 1],
+    );
+    match std::fs::OpenOptions::new().create(true).append(true).open(&out) {
+        Ok(mut f) => {
+            let _ = writeln!(f, "{line}");
+            println!("appended -> {out}");
+        }
+        Err(e) => println!("could not append to {out}: {e}"),
+    }
+
+    // Acceptance: wire bytes are exact and always asserted.
+    assert!(
+        byte_ratio >= 5.0,
+        "binary cursor protocol must cut depth-{BYTES_DEPTH} rollout bytes ≥5x \
+         (got {byte_ratio:.2}x)"
+    );
+
+    // Latency shape. The cursor path does identical O(1) work per step at
+    // every depth; the legacy path re-walks the prefix. Timing asserts are
+    // relaxed under smoke mode (tiny iteration counts on shared CI boxes).
+    let cursor_growth = cursor_ns[DEPTHS.len() - 1] / cursor_ns[0];
+    let legacy_growth = legacy_ns[DEPTHS.len() - 1] / legacy_ns[0];
+    println!(
+        "cursor per-call growth 1->128: {cursor_growth:.2}x   \
+         legacy per-call growth 1->128: {legacy_growth:.2}x"
+    );
+    let (flat_bound, growth_floor) = if smoke { (3.0, 2.0) } else { (1.2, 8.0) };
+    assert!(
+        cursor_growth <= flat_bound,
+        "cursor per-call latency must be flat in depth: {cursor_growth:.2}x > {flat_bound}x"
+    );
+    assert!(
+        legacy_growth >= growth_floor,
+        "legacy per-call latency should grow with depth (sanity of the baseline): \
+         {legacy_growth:.2}x < {growth_floor}x"
+    );
+    println!("fig10 OK: cursor lookups are O(1) per call; wire bytes O(L) per rollout");
+}

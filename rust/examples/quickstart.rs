@@ -15,7 +15,7 @@ use tvcache::sandbox::TerminalFactory;
 
 fn bash(cmd: &str) -> ToolCall {
     let stateless = cmd.starts_with("cat ") || cmd.starts_with("ls");
-    ToolCall { tool: "bash".into(), args: cmd.into(), mutates_state: !stateless }
+    ToolCall::with_flag("bash", cmd, !stateless)
 }
 
 fn main() {

@@ -27,11 +27,7 @@ impl ActionSpace {
     /// The terminal-task action space: the commands a debugging agent needs
     /// (explore, install, build, test, patch variants).
     pub fn terminal(task: &TerminalTask) -> ActionSpace {
-        let b = |cmd: String, mutates: bool| ToolCall {
-            tool: "bash".into(),
-            args: cmd,
-            mutates_state: mutates,
-        };
+        let b = |cmd: String, mutates: bool| ToolCall::with_flag("bash", cmd, mutates);
         let buggy = &task.buggy_file;
         let mut actions = vec![
             b("cat README.md".into(), false),

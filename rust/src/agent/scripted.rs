@@ -73,7 +73,7 @@ fn bash(cmd: impl Into<String>) -> ToolCall {
         || cmd.starts_with("ls")
         || cmd.starts_with("grep ")
         || cmd.starts_with("pwd");
-    ToolCall { tool: "bash".into(), args: cmd, mutates_state: !stateless }
+    ToolCall::with_flag("bash", cmd, !stateless)
 }
 
 /// Canonical terminal-bench debugging script with stochastic branches.

@@ -14,7 +14,7 @@
 //! TCG, and the task id is what the shard router hashes (Figure 8a).
 
 use super::key::{ToolCall, ToolResult};
-use super::lpm::Lookup;
+use super::lpm::{CursorStep, Lookup};
 use super::snapshot::SnapshotCosts;
 use super::store::CacheStats;
 use super::tcg::NodeId;
@@ -98,6 +98,60 @@ pub trait CacheBackend: Send + Sync {
     /// Upsert an executed trajectory (`/put`); returns the id of the final
     /// state-mutating node on the path.
     fn insert(&self, task: &str, traj: &[(ToolCall, ToolResult)]) -> NodeId;
+
+    // ---- stateful lookup cursors (the O(1)-per-call hot path) ----
+    //
+    // A rollout opens one cursor, then sends only the *delta* — the single
+    // new `ToolCall` — per lookup instead of its full history: the backend
+    // pins the rollout's TCG position, so a step is one child-index probe
+    // and the wire carries O(1) bytes per call rather than O(L). Eviction
+    // of a cursor's node invalidates it safely: the next step reports
+    // `CursorStep::Invalid` and the caller falls back to the full-prefix
+    // `lookup`/`insert` pair, then re-seeks. The default implementations
+    // make cursors an *optional capability*: a backend (or decorator) that
+    // does not override them reports "unsupported" (`cursor_open` → 0) and
+    // callers transparently stay on the full-prefix path.
+
+    /// Open a cursor at the TCG root for a new rollout of `task`.
+    /// Returns 0 when the backend does not support cursors (or the
+    /// transport failed) — the caller must then use full-prefix lookups.
+    fn cursor_open(&self, _task: &str) -> u64 {
+        0
+    }
+
+    /// Incremental lookup of the single delta `call` at the cursor's
+    /// position. Hit/miss payloads (including the §3.4 resume-offer pin
+    /// contract) are identical to [`CacheBackend::lookup`] of the full
+    /// prefix; `Invalid` means the cursor lost its node and the caller
+    /// must fall back (and may [`CacheBackend::cursor_seek`] afterwards).
+    fn cursor_step(&self, _task: &str, _cursor: u64, _call: &ToolCall) -> CursorStep {
+        CursorStep::Invalid
+    }
+
+    /// Record the single executed delta at the cursor's position and
+    /// advance it — the incremental counterpart of
+    /// [`CacheBackend::insert`]. Returns the final state-mutating node id
+    /// (the new cursor position), or 0 when the cursor is invalid / the
+    /// transport failed (fall back to a full insert + seek).
+    fn cursor_record(
+        &self,
+        _task: &str,
+        _cursor: u64,
+        _call: &ToolCall,
+        _result: &ToolResult,
+    ) -> NodeId {
+        0
+    }
+
+    /// Re-seat a cursor on `node` with `steps` calls consumed — used after
+    /// a fallback full-prefix lookup/insert re-established the position.
+    /// Returns `false` when the node is gone or the cursor is unknown.
+    fn cursor_seek(&self, _task: &str, _cursor: u64, _node: NodeId, _steps: usize) -> bool {
+        false
+    }
+
+    /// Close a cursor (rollout finished). Unknown ids are a no-op.
+    fn cursor_close(&self, _task: &str, _cursor: u64) {}
 
     /// Decrement `node`'s sandbox refcount (client done forking).
     fn release(&self, task: &str, node: NodeId);

@@ -5,11 +5,23 @@
 //! cache on trajectories, never on individual calls (§3.1). The
 //! `mutates_state` annotation is the `will_mutate_state()` hook from
 //! Appendix B: `false` lets the LPM skip the call when matching prefixes.
+//!
+//! The 64-bit FNV fingerprint used for TCG child indexing is computed once
+//! at construction and cached in the struct, so the hot probe path
+//! (`Tcg::child`, cursor steps, stateless side-index lookups) never
+//! re-hashes the tool/args strings. The binary wire protocol carries the
+//! fingerprint alongside the descriptor, so a server deserializing a call
+//! reuses the client's hash instead of recomputing it
+//! ([`ToolCall::from_wire`]).
 
-use crate::util::json::Json;
+use crate::util::json::{escape_str, write_num, Json};
 use crate::util::rng::fnv1a;
 
 /// One tool invocation: the cache key component.
+///
+/// Construct through [`ToolCall::new`] / [`ToolCall::stateless`] /
+/// [`ToolCall::with_flag`] — the constructors compute the cached child-index
+/// fingerprint exactly once.
 #[derive(Debug, Clone, PartialEq, Eq, Hash)]
 pub struct ToolCall {
     /// Tool name, e.g. `"bash"`, `"sql"`, `"caption_retrieval"`.
@@ -18,15 +30,50 @@ pub struct ToolCall {
     pub args: String,
     /// `will_mutate_state()` — `true` is the safe default (Appendix B).
     pub mutates_state: bool,
+    /// Cached [`ToolCall::key`] fingerprint. Private so every construction
+    /// path goes through a constructor that fills it; a deterministic
+    /// function of `tool`/`args`, so the derived `Eq`/`Hash` stay
+    /// consistent.
+    key: u64,
+}
+
+/// The child-index fingerprint of a `(tool, args)` descriptor. Tool and
+/// args are hashed separately to avoid `"ab"+"c"` vs `"a"+"bc"` collisions.
+fn fingerprint(tool: &str, args: &str) -> u64 {
+    fnv1a(tool.as_bytes()) ^ fnv1a(args.as_bytes()).rotate_left(17)
 }
 
 impl ToolCall {
     pub fn new(tool: impl Into<String>, args: impl Into<String>) -> ToolCall {
-        ToolCall { tool: tool.into(), args: args.into(), mutates_state: true }
+        Self::with_flag(tool, args, true)
     }
 
     pub fn stateless(tool: impl Into<String>, args: impl Into<String>) -> ToolCall {
-        ToolCall { tool: tool.into(), args: args.into(), mutates_state: false }
+        Self::with_flag(tool, args, false)
+    }
+
+    /// Construct with an explicit `will_mutate_state()` flag.
+    pub fn with_flag(
+        tool: impl Into<String>,
+        args: impl Into<String>,
+        mutates_state: bool,
+    ) -> ToolCall {
+        let tool = tool.into();
+        let args = args.into();
+        let key = fingerprint(&tool, &args);
+        ToolCall { tool, args, mutates_state, key }
+    }
+
+    /// Rebuild a call from the binary wire protocol, adopting the sender's
+    /// precomputed fingerprint instead of re-hashing. A corrupted key can
+    /// only cause cache *misses*, never wrong results: every child-index
+    /// probe verifies the full descriptor after the hash match
+    /// (`Tcg::child`), so the fingerprint is purely an index accelerator.
+    /// Deliberately no assert here — this runs on untrusted network input,
+    /// and the wire decoder's contract is "malformed input degrades, never
+    /// panics" in every build profile.
+    pub fn from_wire(tool: &str, args: &str, mutates_state: bool, key: u64) -> ToolCall {
+        ToolCall { tool: tool.to_string(), args: args.to_string(), mutates_state, key }
     }
 
     /// Canonical descriptor string (what the paper's client serializes).
@@ -34,26 +81,39 @@ impl ToolCall {
         format!("{}({})", self.tool, self.args)
     }
 
-    /// 64-bit key used for child indexing in the TCG.
+    /// 64-bit key used for child indexing in the TCG (cached at
+    /// construction — this is a field read, not a hash).
     pub fn key(&self) -> u64 {
-        // Tool and args hashed separately to avoid "ab"+"c" vs "a"+"bc".
-        fnv1a(self.tool.as_bytes()) ^ fnv1a(self.args.as_bytes()).rotate_left(17)
+        self.key
     }
 
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
-            ("tool", Json::str(self.tool.clone())),
-            ("args", Json::str(self.args.clone())),
+            ("tool", Json::str(self.tool.as_str())),
+            ("args", Json::str(self.args.as_str())),
             ("mutates", Json::Bool(self.mutates_state)),
         ])
     }
 
+    /// Serialize directly into `out` without building a `Json` tree or
+    /// cloning `tool`/`args`. Key order matches [`ToolCall::to_json`]
+    /// (alphabetical, as `Json::Obj`'s `BTreeMap` serializes).
+    pub fn json_into(&self, out: &mut String) {
+        out.push_str("{\"args\":");
+        escape_str(&self.args, out);
+        out.push_str(",\"mutates\":");
+        out.push_str(if self.mutates_state { "true" } else { "false" });
+        out.push_str(",\"tool\":");
+        escape_str(&self.tool, out);
+        out.push('}');
+    }
+
     pub fn from_json(v: &Json) -> Option<ToolCall> {
-        Some(ToolCall {
-            tool: v.get("tool")?.as_str()?.to_string(),
-            args: v.get("args")?.as_str()?.to_string(),
-            mutates_state: v.get("mutates").and_then(|m| m.as_bool()).unwrap_or(true),
-        })
+        Some(ToolCall::with_flag(
+            v.get("tool")?.as_str()?,
+            v.get("args")?.as_str()?,
+            v.get("mutates").and_then(|m| m.as_bool()).unwrap_or(true),
+        ))
     }
 }
 
@@ -77,10 +137,22 @@ impl ToolResult {
 
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
-            ("output", Json::str(self.output.clone())),
+            ("output", Json::str(self.output.as_str())),
             ("exec_time", Json::num(self.exec_time)),
             ("api_tokens", Json::num(self.api_tokens as f64)),
         ])
+    }
+
+    /// Serialize directly into `out` without cloning `output`. Key order
+    /// matches [`ToolResult::to_json`].
+    pub fn json_into(&self, out: &mut String) {
+        out.push_str("{\"api_tokens\":");
+        write_num(self.api_tokens as f64, out);
+        out.push_str(",\"exec_time\":");
+        write_num(self.exec_time, out);
+        out.push_str(",\"output\":");
+        escape_str(&self.output, out);
+        out.push('}');
     }
 
     pub fn from_json(v: &Json) -> Option<ToolResult> {
@@ -92,9 +164,21 @@ impl ToolResult {
     }
 }
 
-/// Serialize a trajectory for the wire protocol.
+/// Serialize a trajectory for the (legacy JSON) wire protocol.
 pub fn trajectory_to_json(calls: &[ToolCall]) -> Json {
     Json::Arr(calls.iter().map(|c| c.to_json()).collect())
+}
+
+/// Serialize a trajectory directly into `out` (no `Json` tree, no clones).
+pub fn trajectory_json_into(calls: &[ToolCall], out: &mut String) {
+    out.push('[');
+    for (i, c) in calls.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        c.json_into(out);
+    }
+    out.push(']');
 }
 
 pub fn trajectory_from_json(v: &Json) -> Option<Vec<ToolCall>> {
@@ -128,6 +212,18 @@ mod tests {
     }
 
     #[test]
+    fn cached_key_matches_fresh_fingerprint_across_constructors() {
+        let a = ToolCall::new("bash", "make");
+        let b = ToolCall::stateless("bash", "make");
+        let c = ToolCall::with_flag("bash", "make", true);
+        let d = ToolCall::from_wire("bash", "make", true, a.key());
+        assert_eq!(a.key(), fingerprint("bash", "make"));
+        assert_eq!(a.key(), b.key());
+        assert_eq!(a.key(), c.key());
+        assert_eq!(a.key(), d.key());
+    }
+
+    #[test]
     fn json_roundtrip() {
         let calls = vec![
             ToolCall::new("bash", "make && ./run \"x\""),
@@ -136,6 +232,22 @@ mod tests {
         let j = trajectory_to_json(&calls);
         let parsed = crate::util::json::parse(&j.to_string()).unwrap();
         assert_eq!(trajectory_from_json(&parsed).unwrap(), calls);
+    }
+
+    #[test]
+    fn json_into_matches_tree_serialization() {
+        let calls = vec![
+            ToolCall::new("bash", "echo \"q\" > f\nnl"),
+            ToolCall::stateless("sql", "SELECT * FROM t;"),
+        ];
+        let mut direct = String::new();
+        trajectory_json_into(&calls, &mut direct);
+        assert_eq!(direct, trajectory_to_json(&calls).to_string());
+
+        let r = ToolResult { output: "a\"b\\c".into(), exec_time: 0.25, api_tokens: 7 };
+        let mut direct = String::new();
+        r.json_into(&mut direct);
+        assert_eq!(direct, r.to_json().to_string());
     }
 
     #[test]

@@ -71,6 +71,68 @@ impl Lookup {
     }
 }
 
+/// Result of one incremental cursor step (the O(1) hot-path lookup).
+///
+/// A cursor regime maintains the invariant that every call the rollout has
+/// issued so far was either a [`CursorStep::Hit`] or was executed and then
+/// recorded at the cursor position — so the cursor's node always *is* the
+/// full-prefix LPM match, and a step needs exactly one child-index probe
+/// instead of a root-to-leaf walk.
+#[derive(Debug, Clone, PartialEq)]
+pub enum CursorStep {
+    /// The delta call is cached: same payload as [`Lookup::Hit`].
+    Hit { node: NodeId, result: ToolResult },
+    /// The delta call is new: same payload as [`Lookup::Miss`] — the
+    /// cursor's node is the `matched_node`, so resume offers are identical
+    /// to the full-prefix walk's.
+    Miss(Miss),
+    /// The cursor's pinned node was evicted out from under it: the caller
+    /// must fall back to a full-prefix [`lookup`] (and re-seek the cursor).
+    Invalid,
+}
+
+impl CursorStep {
+    pub fn is_hit(&self) -> bool {
+        matches!(self, CursorStep::Hit { .. })
+    }
+}
+
+/// One incremental LPM step: classify the single delta call `call` given a
+/// cursor pinned at `pos` with `steps` calls already consumed. Returns the
+/// step outcome plus the cursor's next position, or `None` when `pos` is no
+/// longer live (the caller reports [`CursorStep::Invalid`]).
+///
+/// Equivalence with [`lookup`]: when the cursor invariant holds (every
+/// consumed call hit or was recorded at the then-current position), the
+/// outcome — hit node/result, miss `matched_node`/`matched_calls`, and the
+/// resume offer — is identical to `lookup(tcg, prefix + [call], cfg)`.
+/// `prop_cursor_walk_equals_full_lookup` below checks this over random
+/// graphs.
+pub fn cursor_step(
+    tcg: &Tcg,
+    pos: NodeId,
+    steps: usize,
+    call: &ToolCall,
+    cfg: LpmConfig,
+) -> Option<(CursorStep, NodeId)> {
+    tcg.node(pos)?;
+    if cfg.stateful_filtering && !call.mutates_state {
+        // Stateless delta: probe the side index of the current (state-
+        // mutating) position; the position never advances.
+        if let Some(result) = tcg.stateless_result(pos, call) {
+            return Some((CursorStep::Hit { node: pos, result: result.clone() }, pos));
+        }
+    } else if let Some(next) = tcg.child(pos, call) {
+        let result = tcg.node(next).unwrap().result.clone();
+        return Some((CursorStep::Hit { node: next, result }, next));
+    }
+    let resume = resume_point(tcg, pos, steps, cfg);
+    Some((
+        CursorStep::Miss(Miss { matched_node: pos, matched_calls: steps, resume }),
+        pos,
+    ))
+}
+
 /// Walk the TCG along `q` and classify hit/miss.
 pub fn lookup(tcg: &Tcg, q: &[ToolCall], cfg: LpmConfig) -> Lookup {
     assert!(!q.is_empty(), "lookup requires at least the current call");
@@ -462,6 +524,89 @@ mod tests {
                 }
             }
         }
+    }
+
+    // ---- incremental cursor steps (the O(1) hot path) ----
+
+    /// Walk `q` with cursor steps, recording misses the way an executor
+    /// would; every step outcome must equal the full-prefix lookup of the
+    /// same prefix at that moment.
+    fn walk_and_compare(g: &mut Tcg, q: &[ToolCall], cfg: LpmConfig) {
+        let mut pos = ROOT;
+        for (i, c) in q.iter().enumerate() {
+            let full = lookup(g, &q[..=i], cfg);
+            let (step, next) =
+                cursor_step(g, pos, i, c, cfg).expect("live cursor position");
+            match (&step, &full) {
+                (CursorStep::Hit { node: a, result: ra }, Lookup::Hit { node: b, result: rb }) => {
+                    assert_eq!((a, ra), (b, rb), "hit mismatch at step {i} of {q:?}");
+                }
+                (CursorStep::Miss(ma), Lookup::Miss(mb)) => {
+                    assert_eq!(ma, mb, "miss mismatch at step {i} of {q:?}");
+                }
+                _ => panic!("outcome kind diverged at step {i} of {q:?}: {step:?} vs {full:?}"),
+            }
+            pos = next;
+            if let CursorStep::Miss(_) = step {
+                // Executor behaviour: execute + record the delta, then the
+                // cursor advances onto the recorded node.
+                if cfg.stateful_filtering && !c.mutates_state {
+                    if g.stateless_result(pos, c).is_none() {
+                        g.insert_stateless(pos, c.clone(), res(&format!("r-{}", c.args)));
+                    }
+                } else {
+                    pos = g.insert_child(pos, c.clone(), res(&format!("r-{}", c.args)));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn prop_cursor_walk_equals_full_lookup() {
+        for filtering in [true, false] {
+            let cfg = LpmConfig { stateful_filtering: filtering, ancestor_resume: true };
+            let mut rng = crate::util::rng::Rng::new(0xC0D5E ^ filtering as u64);
+            for _trial in 0..60 {
+                let mut g = Tcg::new();
+                for _ in 0..3 {
+                    let n = 1 + rng.below(7) as usize;
+                    let t: Vec<ToolCall> = (0..n).map(|_| random_call(&mut rng)).collect();
+                    let leaf = record(&mut g, &t);
+                    if leaf != ROOT && rng.chance(0.5) {
+                        g.set_snapshot(
+                            leaf,
+                            SnapshotRef { id: leaf as u64, bytes: 1, restore_cost: 0.1 },
+                        );
+                    }
+                }
+                let n = 1 + rng.below(8) as usize;
+                let q: Vec<ToolCall> = (0..n).map(|_| random_call(&mut rng)).collect();
+                walk_and_compare(&mut g, &q, cfg);
+            }
+        }
+    }
+
+    #[test]
+    fn cursor_step_on_dead_node_reports_invalid() {
+        let mut g = Tcg::new();
+        let ids = build_chain(&mut g, &["a", "b"]);
+        g.remove_subtree(ids[1]);
+        assert!(cursor_step(&g, ids[1], 2, &sf("c"), LpmConfig::default()).is_none());
+        // The surviving parent still steps fine.
+        let (step, _) = cursor_step(&g, ids[0], 1, &sf("z"), LpmConfig::default()).unwrap();
+        assert!(matches!(step, CursorStep::Miss(_)));
+    }
+
+    #[test]
+    fn cursor_miss_offers_same_resume_as_full_walk() {
+        let mut g = Tcg::new();
+        let ids = build_chain(&mut g, &["a", "b"]);
+        g.set_snapshot(ids[1], SnapshotRef { id: 5, bytes: 10, restore_cost: 0.1 });
+        let (step, _) =
+            cursor_step(&g, ids[1], 2, &sf("x"), LpmConfig::default()).unwrap();
+        let CursorStep::Miss(m) = step else { panic!("{step:?}") };
+        let (node, snap, replay_from) = m.resume.unwrap();
+        assert_eq!((node, snap.id, replay_from), (ids[1], 5, 2));
     }
 
     #[test]

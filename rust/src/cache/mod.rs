@@ -18,7 +18,7 @@ pub mod tcg;
 pub use backend::{BackendStats, CacheBackend};
 pub use eviction::{enforce_budget, recreation_cost, EvictionPolicy};
 pub use key::{ToolCall, ToolResult};
-pub use lpm::{Lookup, LpmConfig, Miss};
+pub use lpm::{CursorStep, Lookup, LpmConfig, Miss};
 pub use service::{ServiceConfig, ShardedCacheService};
 pub use shard::{CacheFactory, Shard, ShardRouter};
 pub use snapshot::{SnapshotCosts, SnapshotPolicy, SnapshotStore};

@@ -23,14 +23,14 @@
 //! `persist_to_dir`/`warm_start_from_dir` reuse the spill format so a new
 //! run reloads the previous run's TCGs + payloads and starts epoch 0 warm.
 
-use std::collections::HashSet;
+use std::collections::{HashMap, HashSet};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 
 use super::backend::{BackendStats, CacheBackend};
 use super::key::{ToolCall, ToolResult};
-use super::lpm::Lookup;
+use super::lpm::{CursorStep, Lookup};
 use super::shard::{CacheFactory, Shard, ShardRouter};
 use super::snapshot::{SnapshotCosts, SnapshotStore};
 use super::spill::{self, SpillStore};
@@ -54,7 +54,19 @@ pub struct ServiceConfig {
     /// caller drives enforcement with [`ShardedCacheService::drain_over_budget`]
     /// (deterministic; what the property tests use).
     pub background: bool,
+    /// Upper bound on live lookup cursors per shard. A `cursor_open` that
+    /// finds the table full first sweeps entries idle longer than
+    /// [`CURSOR_IDLE_TTL`] (remote rollouts that died without closing),
+    /// then refuses (returns 0) if still full — the client transparently
+    /// falls back to full-prefix lookups, so this is a memory bound, not
+    /// a correctness gate.
+    pub max_cursors_per_shard: usize,
 }
+
+/// A cursor untouched for this long is presumed abandoned (its rollout
+/// died without `/cursor_close`) and may be swept when a shard's cursor
+/// table hits [`ServiceConfig::max_cursors_per_shard`].
+pub const CURSOR_IDLE_TTL: std::time::Duration = std::time::Duration::from_secs(900);
 
 impl Default for ServiceConfig {
     fn default() -> Self {
@@ -64,6 +76,7 @@ impl Default for ServiceConfig {
             global_byte_budget: None,
             spill_dir: None,
             background: false,
+            max_cursors_per_shard: 8192,
         }
     }
 }
@@ -104,10 +117,29 @@ impl WorkerSignal {
     }
 }
 
-/// One shard's state: task map + snapshot byte store + worker bookkeeping.
+/// One live lookup cursor: the rollout's pinned TCG position (§3.2 made
+/// stateful). `gen` is the task TCG's eviction generation at which `node`
+/// was last verified live — eviction of the node flips the next step to
+/// `CursorStep::Invalid` instead of ever serving a stale position.
+struct CursorEntry {
+    cache: Arc<TaskCache>,
+    node: NodeId,
+    /// Calls consumed so far (= `matched_calls` for the next step's miss).
+    steps: usize,
+    gen: u64,
+    /// Refreshed on every op; drives the abandoned-cursor sweep.
+    last_used: std::time::Instant,
+}
+
+/// One shard's state: task map + snapshot byte store + cursor table +
+/// worker bookkeeping.
 struct ShardSlot {
     tasks: Shard,
     snapshots: SnapshotStore,
+    /// Live lookup cursors for this shard's tasks. A plain mutex: cursor
+    /// ops are O(1) probes and each rollout owns exactly one cursor, so
+    /// the hold time is a hash probe plus one TCG child lookup.
+    cursors: Mutex<HashMap<u64, CursorEntry>>,
     /// Snapshots the background worker destroyed (detached + dropped).
     bg_evicted: AtomicU64,
     signal: WorkerSignal,
@@ -119,6 +151,8 @@ pub struct ShardedCacheService {
     shards: Vec<Arc<ShardSlot>>,
     cfg: ServiceConfig,
     workers: Vec<std::thread::JoinHandle<()>>,
+    /// Cursor id allocator (0 is the "unsupported/failed" sentinel).
+    next_cursor: AtomicU64,
 }
 
 impl ShardedCacheService {
@@ -156,6 +190,7 @@ impl ShardedCacheService {
                 Arc::new(ShardSlot {
                     tasks: Shard::from_factory(Arc::clone(&factory)),
                     snapshots,
+                    cursors: Mutex::new(HashMap::new()),
                     bg_evicted: AtomicU64::new(0),
                     signal: WorkerSignal::new(),
                 })
@@ -166,6 +201,7 @@ impl ShardedCacheService {
             shards,
             cfg,
             workers: Vec::new(),
+            next_cursor: AtomicU64::new(1),
         };
         if svc.cfg.background && svc.cfg.bounded() {
             svc.spawn_workers();
@@ -299,6 +335,29 @@ impl ShardedCacheService {
             }
             None => false,
         }
+    }
+
+    /// White-box removal of a node's whole subtree (tests of cursor
+    /// invalidation): drops the nodes *and* their snapshot bytes, so any
+    /// cursor pinned inside the subtree reports `Invalid` on its next step.
+    /// Refuses when the subtree is refcount-pinned.
+    pub fn evict_node(&self, task: &str, node: NodeId) -> bool {
+        let slot = self.slot(task);
+        match slot.tasks.task(task).remove_subtree_if_unpinned(node) {
+            Some(freed) => {
+                for sref in freed {
+                    slot.snapshots.remove(sref.id);
+                }
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Live cursors across all shards (diagnostics; a steady non-zero
+    /// count after every rollout finished means leaked cursors).
+    pub fn cursor_count(&self) -> usize {
+        self.shards.iter().map(|s| s.cursors.lock().unwrap().len()).sum()
     }
 
     fn kick_if_over_budget(&self, shard: usize) {
@@ -493,6 +552,128 @@ impl CacheBackend for ShardedCacheService {
 
     fn insert(&self, task: &str, traj: &[(ToolCall, ToolResult)]) -> NodeId {
         self.task(task).record_trajectory(traj)
+    }
+
+    fn cursor_open(&self, task: &str) -> u64 {
+        let slot = self.slot(task);
+        let cache = slot.tasks.task(task);
+        let gen = cache.eviction_generation();
+        let mut cursors = slot.cursors.lock().unwrap();
+        if cursors.len() >= self.cfg.max_cursors_per_shard {
+            // Sweep cursors whose rollouts died without closing; if the
+            // table is still full, refuse — the client falls back to
+            // full-prefix lookups for this rollout.
+            cursors.retain(|_, e| e.last_used.elapsed() < CURSOR_IDLE_TTL);
+            if cursors.len() >= self.cfg.max_cursors_per_shard {
+                return 0;
+            }
+        }
+        let id = self.next_cursor.fetch_add(1, Ordering::Relaxed);
+        cursors.insert(
+            id,
+            CursorEntry {
+                cache,
+                node: super::tcg::ROOT,
+                steps: 0,
+                gen,
+                last_used: std::time::Instant::now(),
+            },
+        );
+        id
+    }
+
+    // The cursor ops snapshot the entry under the table mutex, run the TCG
+    // operation with the mutex *released* (a task's TCG write-lock stall
+    // must not block other tasks' cursors on the same shard), then re-lock
+    // briefly to write the advanced position back. A cursor has exactly
+    // one owning rollout, so the unlocked window admits no lost update —
+    // and an eviction landing in that window is caught by the next step's
+    // generation/liveness check, exactly as it would be after the op.
+
+    fn cursor_step(&self, task: &str, cursor: u64, call: &ToolCall) -> CursorStep {
+        let slot = self.slot(task);
+        let snapshot = {
+            let cursors = slot.cursors.lock().unwrap();
+            cursors
+                .get(&cursor)
+                .map(|e| (Arc::clone(&e.cache), e.node, e.steps, e.gen))
+        };
+        let Some((cache, node, steps, gen)) = snapshot else {
+            return CursorStep::Invalid;
+        };
+        let (step, new_node, new_gen) = cache.cursor_step_at(node, steps, gen, call);
+        if !matches!(step, CursorStep::Invalid) {
+            // Hit or miss: the call is consumed either way (a miss is
+            // executed and then `cursor_record`ed by the caller).
+            let mut cursors = slot.cursors.lock().unwrap();
+            if let Some(e) = cursors.get_mut(&cursor) {
+                e.node = new_node;
+                e.gen = new_gen;
+                e.steps = steps + 1;
+                e.last_used = std::time::Instant::now();
+            }
+        }
+        step
+    }
+
+    fn cursor_record(
+        &self,
+        task: &str,
+        cursor: u64,
+        call: &ToolCall,
+        result: &ToolResult,
+    ) -> NodeId {
+        let slot = self.slot(task);
+        let snapshot = {
+            let cursors = slot.cursors.lock().unwrap();
+            cursors.get(&cursor).map(|e| (Arc::clone(&e.cache), e.node))
+        };
+        let Some((cache, node)) = snapshot else {
+            return 0;
+        };
+        match cache.cursor_record_at(node, call, result) {
+            Some((new_node, gen)) => {
+                let mut cursors = slot.cursors.lock().unwrap();
+                if let Some(e) = cursors.get_mut(&cursor) {
+                    e.node = new_node;
+                    e.gen = gen;
+                    e.last_used = std::time::Instant::now();
+                }
+                new_node
+            }
+            None => 0,
+        }
+    }
+
+    fn cursor_seek(&self, task: &str, cursor: u64, node: NodeId, steps: usize) -> bool {
+        let slot = self.slot(task);
+        let snapshot = {
+            let cursors = slot.cursors.lock().unwrap();
+            cursors.get(&cursor).map(|e| Arc::clone(&e.cache))
+        };
+        let Some(cache) = snapshot else {
+            return false;
+        };
+        match cache.cursor_seek_check(node) {
+            Some(gen) => {
+                let mut cursors = slot.cursors.lock().unwrap();
+                match cursors.get_mut(&cursor) {
+                    Some(e) => {
+                        e.node = node;
+                        e.steps = steps;
+                        e.gen = gen;
+                        e.last_used = std::time::Instant::now();
+                        true
+                    }
+                    None => false, // closed concurrently
+                }
+            }
+            None => false,
+        }
+    }
+
+    fn cursor_close(&self, task: &str, cursor: u64) {
+        self.slot(task).cursors.lock().unwrap().remove(&cursor);
     }
 
     fn release(&self, task: &str, node: NodeId) {
@@ -856,5 +1037,125 @@ mod tests {
     fn warm_start_missing_dir_fails_cleanly() {
         let svc = ShardedCacheService::new(2);
         assert!(!CacheBackend::warm_start(&svc, "/nonexistent/tvcache-warmstart"));
+    }
+
+    // ---- stateful lookup cursors ----
+
+    #[test]
+    fn cursor_walk_hits_recorded_chain_and_stats_match_legacy() {
+        let svc = ShardedCacheService::new(4);
+        svc.insert("t", &traj(&["a", "b", "c"]));
+        let cur = svc.cursor_open("t");
+        assert!(cur != 0);
+        for (i, c) in ["a", "b", "c"].iter().enumerate() {
+            match svc.cursor_step("t", cur, &sf(c)) {
+                crate::cache::CursorStep::Hit { result, .. } => {
+                    assert_eq!(result.output, format!("out-{c}"), "step {i}");
+                }
+                s => panic!("step {i}: {s:?}"),
+            }
+        }
+        svc.cursor_close("t", cur);
+        assert_eq!(svc.cursor_count(), 0, "close must drop the table entry");
+        let stats = svc.stats("t");
+        assert_eq!(stats.lookups, 3);
+        assert_eq!(stats.hits, 3);
+    }
+
+    #[test]
+    fn cursor_miss_record_extends_graph_like_full_insert() {
+        let svc = ShardedCacheService::new(2);
+        let cur = svc.cursor_open("t");
+        let mut node = 0;
+        for c in ["x", "y", "z"] {
+            let call = sf(c);
+            match svc.cursor_step("t", cur, &call) {
+                crate::cache::CursorStep::Miss(_) => {}
+                s => panic!("cold cache must miss: {s:?}"),
+            }
+            node = svc.cursor_record("t", cur, &call, &ToolResult::new(format!("out-{c}"), 1.0));
+            assert!(node != 0, "record at a live cursor must succeed");
+        }
+        // The incrementally recorded chain equals a full insert.
+        assert_eq!(svc.insert("t", &traj(&["x", "y", "z"])), node);
+        assert!(svc.lookup("t", &[sf("x"), sf("y"), sf("z")]).is_hit());
+        assert_eq!(svc.stats("t").inserts, 3);
+    }
+
+    #[test]
+    fn cursor_miss_pins_resume_until_release() {
+        let svc = ShardedCacheService::new(2);
+        let node = svc.insert("t", &traj(&["a", "b"]));
+        svc.store_snapshot("t", node, snap(8));
+        let cur = svc.cursor_open("t");
+        assert!(svc.cursor_step("t", cur, &sf("a")).is_hit());
+        assert!(svc.cursor_step("t", cur, &sf("b")).is_hit());
+        let crate::cache::CursorStep::Miss(m) = svc.cursor_step("t", cur, &sf("zz")) else {
+            panic!("divergent step must miss")
+        };
+        let (rnode, _, replay_from) = m.resume.expect("snapshot offered");
+        assert_eq!((rnode, replay_from), (node, 2));
+        assert_eq!(m.matched_calls, 2);
+        assert_eq!(svc.task("t").pinned_node_count(), 1, "offer must pin");
+        svc.release("t", rnode);
+        assert_eq!(svc.task("t").pinned_node_count(), 0);
+    }
+
+    #[test]
+    fn evicted_cursor_node_invalidates_then_seek_recovers() {
+        let svc = ShardedCacheService::new(2);
+        svc.insert("t", &traj(&["a", "b"]));
+        let cur = svc.cursor_open("t");
+        assert!(svc.cursor_step("t", cur, &sf("a")).is_hit());
+        assert!(svc.cursor_step("t", cur, &sf("b")).is_hit());
+        // Evict the subtree the cursor sits in (node of "b" = depth 2).
+        let b = match svc.lookup("t", &[sf("a"), sf("b")]) {
+            Lookup::Hit { node, .. } => node,
+            m => panic!("{m:?}"),
+        };
+        assert!(svc.evict_node("t", b));
+        assert_eq!(
+            svc.cursor_step("t", cur, &sf("c")),
+            crate::cache::CursorStep::Invalid,
+            "a step at an evicted node must invalidate, never serve stale state"
+        );
+        // Seek to a live ancestor re-arms the cursor.
+        let a = match svc.lookup("t", &[sf("a")]) {
+            Lookup::Hit { node, .. } => node,
+            m => panic!("{m:?}"),
+        };
+        assert!(svc.cursor_seek("t", cur, a, 1));
+        assert!(matches!(
+            svc.cursor_step("t", cur, &sf("c")),
+            crate::cache::CursorStep::Miss(_)
+        ));
+        // Seeking to the dead node fails.
+        assert!(!svc.cursor_seek("t", cur, b, 2));
+    }
+
+    #[test]
+    fn cursor_table_cap_refuses_new_cursors_when_full() {
+        let cfg = ServiceConfig { shards: 1, max_cursors_per_shard: 2, ..Default::default() };
+        let svc = ShardedCacheService::with_config(cfg, Arc::new(TaskCache::with_defaults))
+            .unwrap();
+        let a = svc.cursor_open("t");
+        let b = svc.cursor_open("t");
+        assert!(a != 0 && b != 0);
+        // Fresh (recently used) cursors are never swept: the table is full,
+        // so the next open refuses and the client falls back to full-prefix
+        // lookups.
+        assert_eq!(svc.cursor_open("t"), 0);
+        svc.cursor_close("t", a);
+        assert!(svc.cursor_open("t") != 0, "freed capacity must be reusable");
+    }
+
+    #[test]
+    fn unknown_cursor_ids_are_safe() {
+        let svc = ShardedCacheService::new(2);
+        svc.insert("t", &traj(&["a"]));
+        assert_eq!(svc.cursor_step("t", 999, &sf("a")), crate::cache::CursorStep::Invalid);
+        assert_eq!(svc.cursor_record("t", 999, &sf("a"), &ToolResult::new("r", 1.0)), 0);
+        assert!(!svc.cursor_seek("t", 999, 1, 1));
+        svc.cursor_close("t", 999); // no-op, no panic
     }
 }

@@ -13,7 +13,7 @@ use std::sync::RwLock;
 
 use super::eviction::{enforce_budget, EvictionPolicy};
 use super::key::{ToolCall, ToolResult};
-use super::lpm::{lookup, Lookup, LpmConfig};
+use super::lpm::{cursor_step, lookup, CursorStep, Lookup, LpmConfig};
 use super::snapshot::{SnapshotCosts, SnapshotPolicy};
 use super::tcg::{NodeId, SnapshotRef, Tcg, ROOT};
 use crate::util::json::Json;
@@ -159,6 +159,122 @@ impl TaskCache {
             }
         }
         result
+    }
+
+    /// Eviction generation of this task's TCG (cursor invalidation tag).
+    pub fn eviction_generation(&self) -> u64 {
+        self.tcg.read().unwrap().generation()
+    }
+
+    /// One incremental cursor step (the O(1) hot-path lookup, §3.2 made
+    /// stateful). `pos`/`steps`/`gen` are the cursor's pinned position,
+    /// consumed-call count, and the eviction generation at which that
+    /// position was last verified. Returns the step outcome plus the
+    /// updated `(pos, gen)` the cursor should carry forward.
+    ///
+    /// Statistics and the §3.4 resume-offer pin behave exactly as
+    /// [`TaskCache::lookup`]: hits bump hit counters under the read guard,
+    /// a miss with a resume offer increments the resume node's refcount
+    /// before the guard drops. An [`CursorStep::Invalid`] outcome (the
+    /// cursor's node was evicted) bumps *nothing* — the caller falls back
+    /// to a full-prefix lookup, which does its own accounting.
+    pub fn cursor_step_at(
+        &self,
+        pos: NodeId,
+        steps: usize,
+        gen: u64,
+        call: &ToolCall,
+    ) -> (CursorStep, NodeId, u64) {
+        let tcg = self.tcg.read().unwrap();
+        let cur_gen = tcg.generation();
+        // Invalidation check: an unchanged generation proves no removal
+        // happened since this position was last verified under a guard, so
+        // the position is still live. On a mismatch, probe the position
+        // itself — node ids are never reused (tombstoned arena), so a live
+        // probe is conclusive. (A future refactor that recycles ids must
+        // turn this mismatch branch into an unconditional invalidation:
+        // the probe could then land on an impostor node.)
+        if gen != cur_gen && tcg.node(pos).is_none() {
+            return (CursorStep::Invalid, pos, gen);
+        }
+        let Some((step, next)) = cursor_step(&tcg, pos, steps, call, self.lpm) else {
+            // Defense in depth; unreachable given the generation check.
+            return (CursorStep::Invalid, pos, gen);
+        };
+        self.stats.lookups.fetch_add(1, Ordering::Relaxed);
+        match &step {
+            CursorStep::Hit { node, result } => {
+                self.stats.hits.fetch_add(1, Ordering::Relaxed);
+                self.stats.api_tokens_saved.fetch_add(result.api_tokens, Ordering::Relaxed);
+                if let Some(n) = tcg.node(*node) {
+                    n.hits.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+            CursorStep::Miss(m) => {
+                if m.matched_calls > 0 {
+                    self.stats.partial_hits.fetch_add(1, Ordering::Relaxed);
+                }
+                if let Some((node, _, _)) = m.resume {
+                    self.stats.snapshot_resumes.fetch_add(1, Ordering::Relaxed);
+                    if let Some(n) = tcg.node(node) {
+                        n.refcount.fetch_add(1, Ordering::AcqRel);
+                    }
+                }
+            }
+            CursorStep::Invalid => unreachable!("cursor_step never returns Invalid"),
+        }
+        (step, next, cur_gen)
+    }
+
+    /// Record the single delta call a cursor just missed on — the
+    /// incremental counterpart of [`TaskCache::record_trajectory`]. Returns
+    /// the cursor's new `(pos, gen)`, or `None` when `pos` was evicted (the
+    /// caller falls back to a full-trajectory insert).
+    pub fn cursor_record_at(
+        &self,
+        pos: NodeId,
+        call: &ToolCall,
+        result: &ToolResult,
+    ) -> Option<(NodeId, u64)> {
+        let mut tcg = self.tcg.write().unwrap();
+        tcg.node(pos)?;
+        let node = if self.lpm.stateful_filtering && !call.mutates_state {
+            if tcg.stateless_result(pos, call).is_none() {
+                tcg.insert_stateless(pos, call.clone(), result.clone());
+                self.stats.inserts.fetch_add(1, Ordering::Relaxed);
+            }
+            pos
+        } else {
+            let before = tcg.len();
+            let id = tcg.insert_child(pos, call.clone(), result.clone());
+            if tcg.len() > before {
+                self.stats.inserts.fetch_add(1, Ordering::Relaxed);
+            }
+            id
+        };
+        Some((node, tcg.generation()))
+    }
+
+    /// Validate a cursor re-seek target: `Some(generation)` when `node` is
+    /// live (ROOT always is), `None` otherwise.
+    pub fn cursor_seek_check(&self, node: NodeId) -> Option<u64> {
+        let tcg = self.tcg.read().unwrap();
+        tcg.node(node)?;
+        Some(tcg.generation())
+    }
+
+    /// White-box subtree eviction (tests of cursor invalidation and of the
+    /// resume-offer race): remove `node`'s subtree unless any node in it is
+    /// refcount-pinned. Returns the freed snapshot refs — the caller owns
+    /// dropping the corresponding store bytes.
+    pub fn remove_subtree_if_unpinned(&self, node: NodeId) -> Option<Vec<SnapshotRef>> {
+        let mut tcg = self.tcg.write().unwrap();
+        if node == ROOT || tcg.node(node).is_none() || tcg.subtree_pinned(node) {
+            return None;
+        }
+        let freed = tcg.remove_subtree(node);
+        self.stats.snapshots_evicted.fetch_add(freed.len() as u64, Ordering::Relaxed);
+        Some(freed)
     }
 
     /// Decrement a node's sandbox refcount (client done forking).
@@ -651,6 +767,70 @@ mod tests {
             m => panic!("{m:?}"),
         }
         assert_eq!(cache.stats().api_tokens_saved, 500);
+    }
+
+    #[test]
+    fn cursor_step_at_mirrors_lookup_stats_and_pins() {
+        let cache = TaskCache::with_defaults();
+        let leaf = cache.record_trajectory(&traj(&["a", "b"]));
+        cache.attach_snapshot(leaf, SnapshotRef { id: 7, bytes: 64, restore_cost: 0.2 });
+        let gen = cache.eviction_generation();
+
+        // Two hit steps, then a divergent miss that pins the resume node.
+        let (s1, pos, gen) = cache.cursor_step_at(ROOT, 0, gen, &sf("a"));
+        assert!(matches!(s1, CursorStep::Hit { .. }));
+        let (s2, pos, gen) = cache.cursor_step_at(pos, 1, gen, &sf("b"));
+        assert!(matches!(s2, CursorStep::Hit { .. }));
+        assert_eq!(pos, leaf);
+        let (s3, _, _) = cache.cursor_step_at(pos, 2, gen, &sf("zz"));
+        let CursorStep::Miss(m) = s3 else { panic!("{s3:?}") };
+        let (rnode, sref, replay) = m.resume.unwrap();
+        assert_eq!((rnode, sref.id, replay), (leaf, 7, 2));
+        assert_eq!(cache.pinned_node_count(), 1, "cursor miss must pin the offer");
+        cache.release(rnode);
+
+        let stats = cache.stats();
+        assert_eq!(stats.lookups, 3);
+        assert_eq!(stats.hits, 2);
+        assert_eq!(stats.partial_hits, 1);
+        assert_eq!(stats.snapshot_resumes, 1);
+    }
+
+    #[test]
+    fn cursor_record_at_advances_and_counts_inserts() {
+        let cache = TaskCache::with_defaults();
+        let (node, gen) =
+            cache.cursor_record_at(ROOT, &sf("a"), &ToolResult::new("ra", 1.0)).unwrap();
+        assert!(node != ROOT);
+        // Stateless record stays at the mutating position.
+        let sl = ToolCall::stateless("s", "x");
+        let (same, _) = cache.cursor_record_at(node, &sl, &ToolResult::new("rs", 0.1)).unwrap();
+        assert_eq!(same, node);
+        assert_eq!(cache.stats().inserts, 2);
+        assert!(cache.lookup(&[sf("a"), sl.clone()]).is_hit());
+        // Recording at a removed node fails (caller falls back).
+        assert!(cache.remove_subtree_if_unpinned(node).is_some());
+        assert!(cache.cursor_record_at(node, &sf("b"), &ToolResult::new("rb", 1.0)).is_none());
+        // And the generation moved, so a stale cursor invalidates.
+        assert!(cache.eviction_generation() > gen);
+        let (step, _, _) = cache.cursor_step_at(node, 1, gen, &sf("b"));
+        assert_eq!(step, CursorStep::Invalid);
+    }
+
+    #[test]
+    fn remove_subtree_if_unpinned_respects_pins() {
+        let cache = TaskCache::with_defaults();
+        let leaf = cache.record_trajectory(&traj(&["a", "b"]));
+        cache.attach_snapshot(leaf, SnapshotRef { id: 3, bytes: 8, restore_cost: 0.1 });
+        let Lookup::Miss(m) = cache.lookup(&[sf("a"), sf("b"), sf("x")]) else {
+            panic!("expected miss")
+        };
+        let (node, _, _) = m.resume.unwrap();
+        assert!(cache.remove_subtree_if_unpinned(node).is_none(), "pinned: must refuse");
+        cache.release(node);
+        let freed = cache.remove_subtree_if_unpinned(node).expect("unpinned: removable");
+        assert_eq!(freed.len(), 1);
+        assert_eq!(cache.stats().snapshots_evicted, 1);
     }
 
     #[test]

@@ -70,6 +70,15 @@ pub struct Tcg {
     nodes: Vec<Option<Node>>,
     /// Count of live (non-tombstoned) nodes, excluding the root.
     live: usize,
+    /// Eviction generation: bumped on every structural *removal*
+    /// (`remove_subtree`). Lookup cursors tag their pinned position with
+    /// the generation observed under the lock; an unchanged generation
+    /// proves the position is still live without re-probing — insertions
+    /// never invalidate a cursor, only removals can. Node ids are never
+    /// reused (tombstoned arena), so a removed position can also always be
+    /// detected by a direct liveness probe; the tag keeps that true even
+    /// if a future refactor recycles ids.
+    generation: u64,
 }
 
 pub const ROOT: NodeId = 0;
@@ -88,7 +97,12 @@ impl Tcg {
             refcount: AtomicU32::new(0),
             warm_fork: AtomicBool::new(false),
         };
-        Tcg { nodes: vec![Some(root)], live: 0 }
+        Tcg { nodes: vec![Some(root)], live: 0, generation: 0 }
+    }
+
+    /// Current eviction generation (see the field docs).
+    pub fn generation(&self) -> u64 {
+        self.generation
     }
 
     pub fn node(&self, id: NodeId) -> Option<&Node> {
@@ -254,6 +268,7 @@ impl Tcg {
         let Some(node) = self.node(id) else { return Vec::new() };
         let parent = node.parent;
         let key = node.call.key();
+        self.generation += 1;
         if let Some(p) = self.node_mut(parent) {
             p.children.remove(&key);
         }
@@ -398,6 +413,22 @@ mod tests {
         assert_eq!(g.stateless_result(a, &s1).unwrap().output, "caps");
         let other = ToolCall::stateless("caption_retrieval", "(5,15)");
         assert!(g.stateless_result(a, &other).is_none());
+    }
+
+    #[test]
+    fn generation_bumps_only_on_removal() {
+        let mut g = Tcg::new();
+        assert_eq!(g.generation(), 0);
+        let a = g.insert_child(ROOT, call("a"), res(""));
+        let b = g.insert_child(a, call("b"), res(""));
+        g.insert_stateless(a, ToolCall::stateless("s", "1"), res("x"));
+        g.set_snapshot(b, SnapshotRef { id: 1, bytes: 1, restore_cost: 0.1 });
+        assert_eq!(g.generation(), 0, "insertions never invalidate cursors");
+        g.remove_subtree(b);
+        assert_eq!(g.generation(), 1);
+        // Removing an already-dead node is a no-op for the generation.
+        g.remove_subtree(b);
+        assert_eq!(g.generation(), 1);
     }
 
     #[test]

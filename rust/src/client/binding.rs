@@ -5,20 +5,28 @@
 //! in-process [`crate::cache::ShardedCacheService`], so executors and
 //! training loops are agnostic to whether the cache is embedded or remote.
 //!
+//! The hot methods (`lookup`, `insert`, `release`, and the whole cursor
+//! family) speak the [`crate::wire`] binary codec; request frames are
+//! encoded into a thread-local buffer reused across calls, so the
+//! steady-state client path performs no request-side allocation. The cold
+//! admin methods (`stats`, `persist`, `warm_start`, snapshots) stay on the
+//! JSON endpoints.
+//!
 //! Network failures degrade to cache misses / no-ops: caching is an
 //! optimization, never a correctness dependency.
 
+use std::cell::RefCell;
 use std::sync::Mutex;
 
 use crate::cache::{
-    BackendStats, CacheBackend, CacheStats, Lookup, Miss, NodeId, SnapshotCosts,
-    SnapshotPolicy, SnapshotRef, ToolCall, ToolResult,
+    BackendStats, CacheBackend, CacheStats, CursorStep, Lookup, Miss, NodeId,
+    SnapshotCosts, SnapshotPolicy, ToolCall, ToolResult,
 };
-use crate::cache::key::trajectory_to_json;
 use crate::sandbox::SandboxSnapshot;
 use crate::server::{hex_decode, hex_encode};
 use crate::util::http::{url_encode, HttpClient};
 use crate::util::json::{self, Json};
+use crate::wire;
 
 /// Idle keep-alive connections retained per binding. One `RemoteBinding` is
 /// shared by all concurrent rollouts of a process, so requests must not
@@ -83,6 +91,43 @@ impl RemoteBinding {
         json::parse(std::str::from_utf8(&resp).ok()?).ok()
     }
 
+    /// POST a binary frame built by `encode` into the thread-local reuse
+    /// buffer (cleared, not reallocated, between calls); returns the raw
+    /// response body on a 200. `retry` enables the one-shot transparent
+    /// retry on a stale keep-alive connection — safe only for idempotent
+    /// requests: a replayed `cursor_step`/`cursor_record`/`cursor_open`
+    /// would apply its effect twice (double-advancing the server-side
+    /// cursor or leaking an orphan one), so those pass `retry = false`
+    /// and let a lost response degrade to the `Invalid`-fallback ladder.
+    fn post_bin(
+        &self,
+        path: &str,
+        retry: bool,
+        encode: impl FnOnce(&mut Vec<u8>),
+    ) -> Option<Vec<u8>> {
+        thread_local! {
+            static WIRE_BUF: RefCell<Vec<u8>> = RefCell::new(Vec::with_capacity(256));
+        }
+        WIRE_BUF.with(|cell| {
+            let mut buf = cell.borrow_mut();
+            buf.clear();
+            encode(&mut buf);
+            let (status, resp) = self
+                .with_client(|c| {
+                    if retry {
+                        c.post(path, &buf)
+                    } else {
+                        c.post_once(path, &buf)
+                    }
+                })
+                .ok()?;
+            if status != 200 {
+                return None;
+            }
+            Some(resp)
+        })
+    }
+
     fn get(&self, path_and_query: &str) -> Option<Json> {
         let (status, resp) = self.with_client(|c| c.get(path_and_query)).ok()?;
         if status != 200 {
@@ -94,68 +139,76 @@ impl RemoteBinding {
 
 impl CacheBackend for RemoteBinding {
     fn lookup(&self, task: &str, q: &[ToolCall]) -> Lookup {
-        let body = Json::obj(vec![
-            ("task", Json::str(task)),
-            ("trajectory", trajectory_to_json(q)),
-        ])
-        .to_string();
-        // Safe to retry transparently: resume offers over HTTP are unpinned
-        // server-side, so a replayed lookup has no pin side effect.
-        let Some(v) = self.post("/prefix_match", body) else {
+        // Binary `/get` frame. Safe to retry transparently: resume offers
+        // over HTTP are unpinned server-side, so a replayed lookup has no
+        // pin side effect.
+        self.post_bin("/get", true, |buf| wire::enc_lookup(buf, task, q))
+            .as_deref()
+            .and_then(wire::dec_lookup_resp)
             // Network failure degrades to a full miss.
-            return Lookup::Miss(Miss { matched_node: 0, matched_calls: 0, resume: None });
-        };
-        if v.get("hit").and_then(|h| h.as_bool()) == Some(true) {
-            let node = v.get("node").and_then(|n| n.as_u64()).unwrap_or(0) as usize;
-            let result = v
-                .get("result")
-                .and_then(ToolResult::from_json)
-                .unwrap_or_else(|| ToolResult::new("", 0.0));
-            Lookup::Hit { node, result }
-        } else {
-            let resume = v.get("resume").map(|r| {
-                let node = r.get("node").and_then(|n| n.as_u64()).unwrap_or(0) as usize;
-                let snap_id = r.get("snap_id").and_then(|s| s.as_u64()).unwrap_or(0);
-                let restore = r.get("restore_cost").and_then(|c| c.as_f64()).unwrap_or(0.0);
-                let replay = r.get("replay_from").and_then(|x| x.as_u64()).unwrap_or(0) as usize;
-                (
-                    node,
-                    SnapshotRef { id: snap_id, bytes: 0, restore_cost: restore },
-                    replay,
-                )
-            });
-            Lookup::Miss(Miss {
-                matched_node: v.get("matched_node").and_then(|n| n.as_u64()).unwrap_or(0)
-                    as usize,
-                matched_calls: v.get("matched_calls").and_then(|n| n.as_u64()).unwrap_or(0)
-                    as usize,
-                resume,
+            .unwrap_or_else(|| {
+                Lookup::Miss(Miss { matched_node: 0, matched_calls: 0, resume: None })
             })
-        }
     }
 
     fn insert(&self, task: &str, traj: &[(ToolCall, ToolResult)]) -> NodeId {
-        let entries: Vec<Json> = traj
-            .iter()
-            .map(|(c, r)| Json::obj(vec![("call", c.to_json()), ("result", r.to_json())]))
-            .collect();
-        let body = Json::obj(vec![
-            ("task", Json::str(task)),
-            ("trajectory", Json::Arr(entries)),
-        ])
-        .to_string();
-        self.post("/put", body)
-            .and_then(|v| v.get("node").and_then(|n| n.as_u64()))
+        self.post_bin("/put", true, |buf| wire::enc_insert(buf, task, traj))
+            .as_deref()
+            .and_then(wire::dec_u64_resp)
             .unwrap_or(0) as usize
     }
 
     fn release(&self, task: &str, node: NodeId) {
-        let body = Json::obj(vec![
-            ("task", Json::str(task)),
-            ("node", Json::num(node as f64)),
-        ])
-        .to_string();
-        self.post("/release", body);
+        let _ = self.post_bin("/release", true, |buf| wire::enc_release(buf, task, node));
+    }
+
+    fn cursor_open(&self, task: &str) -> u64 {
+        self.post_bin("/cursor_open", false, |buf| wire::enc_cursor_open(buf, task))
+            .as_deref()
+            .and_then(wire::dec_u64_resp)
+            .unwrap_or(0)
+    }
+
+    fn cursor_step(&self, task: &str, cursor: u64, call: &ToolCall) -> CursorStep {
+        // The O(1) hot frame: only the delta call crosses the wire. A
+        // transport failure reports `Invalid`, which the executor treats
+        // as "fall back to a full-prefix lookup" — the same degradation
+        // ladder as a server-side eviction.
+        self.post_bin("/cursor_step", false, |buf| {
+            wire::enc_cursor_step(buf, task, cursor, call)
+        })
+        .as_deref()
+        .and_then(wire::dec_step_resp)
+        .unwrap_or(CursorStep::Invalid)
+    }
+
+    fn cursor_record(
+        &self,
+        task: &str,
+        cursor: u64,
+        call: &ToolCall,
+        result: &ToolResult,
+    ) -> NodeId {
+        self.post_bin("/cursor_record", false, |buf| {
+            wire::enc_cursor_record(buf, task, cursor, call, result)
+        })
+        .as_deref()
+        .and_then(wire::dec_u64_resp)
+        .unwrap_or(0) as usize
+    }
+
+    fn cursor_seek(&self, task: &str, cursor: u64, node: NodeId, steps: usize) -> bool {
+        self.post_bin("/cursor_seek", true, |buf| {
+            wire::enc_cursor_seek(buf, task, cursor, node, steps)
+        })
+        .as_deref()
+        .and_then(wire::dec_bool_resp)
+        .unwrap_or(false)
+    }
+
+    fn cursor_close(&self, task: &str, cursor: u64) {
+        let _ =
+            self.post_bin("/cursor_close", true, |buf| wire::enc_cursor_close(buf, task, cursor));
     }
 
     fn should_snapshot(&self, _task: &str, costs: SnapshotCosts) -> bool {

@@ -1,14 +1,18 @@
 //! The `ToolCallExecutor` (Figure 4): the client-side loop the RL framework
 //! integrates with.
 //!
-//! One executor serves one rollout. Before each tool call it serializes the
-//! rollout's full tool history, queries the cache, and on a hit returns the
-//! cached value at cache-get latency. On a miss it reconstructs the needed
-//! sandbox state — preferring, in order: the live sandbox it already owns
-//! (when up-to-date), a forked snapshot from the LPM resume point, catch-up
-//! replay in its live sandbox, and finally a fresh root sandbox with full
-//! replay (the paper's §3.2 fallback) — then executes the call, records the
-//! extended trajectory, and applies the §3.3 selective-snapshot rule.
+//! One executor serves one rollout. The rollout opens a stateful lookup
+//! *cursor* (its pinned TCG position, `CacheBackend::cursor_*`), so each
+//! tool call costs one O(1) delta step instead of serializing the full
+//! history — with a transparent fall-back to the full-prefix lookup when
+//! the backend lacks cursors or eviction invalidates one. On a hit it
+//! returns the cached value at cache-get latency. On a miss it
+//! reconstructs the needed sandbox state — preferring, in order: the live
+//! sandbox it already owns (when up-to-date), a forked snapshot from the
+//! LPM resume point, catch-up replay in its live sandbox, and finally a
+//! fresh root sandbox with full replay (the paper's §3.2 fallback) — then
+//! executes the call, records the extended trajectory (the delta through
+//! the cursor), and applies the §3.3 selective-snapshot rule.
 //!
 //! The returned [`CallOutcome::charged`] is the latency the rollout *waits*,
 //! which the virtual-clock experiments charge to simulated time: cache-get
@@ -16,7 +20,7 @@
 
 use std::sync::Arc;
 
-use crate::cache::{CacheBackend, Lookup, SnapshotCosts, ToolCall, ToolResult};
+use crate::cache::{CacheBackend, CursorStep, Lookup, Miss, SnapshotCosts, ToolCall, ToolResult};
 use crate::sandbox::{SandboxFactory, ToolExecutionEnvironment};
 
 /// Executor tunables (defaults match the paper's measured constants).
@@ -35,6 +39,11 @@ pub struct ExecutorConfig {
     /// Must mirror the server's `LpmConfig::stateful_filtering`: decides how
     /// a resume node's TCG depth maps back to a query index.
     pub stateful_filtering: bool,
+    /// Use a stateful lookup cursor: each lookup/record sends only the
+    /// *delta* call (O(1) per tool call) instead of the full history.
+    /// Falls back to full-prefix lookups transparently when the backend
+    /// does not support cursors or a cursor is invalidated by eviction.
+    pub use_cursor: bool,
     /// Contention multiplier on cold sandbox start/stop (cacheless runs
     /// create B·R containers concurrently at step start; Figure 13 shows
     /// the baseline manager's throughput collapse under that load).
@@ -50,6 +59,7 @@ impl Default for ExecutorConfig {
             proactive_roots: true,
             background_forks: true,
             stateful_filtering: true,
+            use_cursor: true,
             cold_start_factor: 1.0,
         }
     }
@@ -84,6 +94,12 @@ pub struct ToolCallExecutor {
     sandbox: Option<Box<dyn ToolExecutionEnvironment>>,
     /// `history[..valid_upto]` is reflected in the live sandbox's state.
     valid_upto: usize,
+    /// The rollout's lookup cursor (opened on the first call; `None` until
+    /// then, or after the backend reported cursors unsupported).
+    cursor: Option<u64>,
+    /// Set once `cursor_open` returns 0: the backend has no cursor support
+    /// and the rollout stays on full-prefix lookups.
+    cursor_unsupported: bool,
     /// Total charged seconds (incl. start/stop overheads).
     pub total_charged: f64,
     pub hits: u64,
@@ -107,6 +123,8 @@ impl ToolCallExecutor {
             history: Vec::new(),
             sandbox: None,
             valid_upto: 0,
+            cursor: None,
+            cursor_unsupported: false,
             total_charged: 0.0,
             hits: 0,
             misses: 0,
@@ -129,8 +147,12 @@ impl ToolCallExecutor {
     }
 
     /// Rollout finished: tear down the live sandbox (charged; the paper's
-    /// Appendix F attributes much of the baseline's cost to start/stop).
+    /// Appendix F attributes much of the baseline's cost to start/stop)
+    /// and close the lookup cursor.
     pub fn finish(&mut self) -> f64 {
+        if let Some(cur) = self.cursor.take() {
+            self.backend.cursor_close(&self.task, cur);
+        }
         let mut charged = 0.0;
         if let Some(mut sb) = self.sandbox.take() {
             // With proactive management the stop happens off the rollout's
@@ -166,69 +188,156 @@ impl ToolCallExecutor {
     // -- cached path ---------------------------------------------------------
 
     fn call_cached(&mut self, call: ToolCall) -> CallOutcome {
+        let charged = self.cfg.cache_get_latency;
+
+        // Open the rollout's cursor lazily — only while the history is
+        // empty, because a fresh cursor sits at the TCG root: opening one
+        // mid-rollout would desynchronize it from the prefix.
+        if self.cfg.use_cursor
+            && !self.cursor_unsupported
+            && self.cursor.is_none()
+            && self.history.is_empty()
+        {
+            match self.backend.cursor_open(&self.task) {
+                0 => self.cursor_unsupported = true,
+                id => self.cursor = Some(id),
+            }
+        }
+
+        // Hot path: one O(1) cursor step carrying only the delta call —
+        // no full-history clone, no O(L) wire payload.
+        if let Some(cur) = self.cursor {
+            match self.backend.cursor_step(&self.task, cur, &call) {
+                CursorStep::Hit { node: _, result } => {
+                    self.hits += 1;
+                    self.history.push((call, result.clone()));
+                    // Live sandbox (if any) now lags history; `valid_upto`
+                    // already reflects that.
+                    return CallOutcome { result, charged, hit: true };
+                }
+                CursorStep::Miss(miss) => {
+                    return self.execute_miss(call, &miss, charged, true);
+                }
+                CursorStep::Invalid => {
+                    // The cursor's node was evicted (or the transport
+                    // hiccuped): fall through to the full-prefix path for
+                    // this call, which re-seeks the cursor afterwards.
+                }
+            }
+        }
+
+        // Full-prefix (legacy / fallback) path.
         let mut q: Vec<ToolCall> = self.history.iter().map(|(c, _)| c.clone()).collect();
         q.push(call.clone());
-
-        let mut charged = self.cfg.cache_get_latency;
         match self.backend.lookup(&self.task, &q) {
-            Lookup::Hit { node: _, result } => {
+            Lookup::Hit { node, result } => {
                 self.hits += 1;
                 self.history.push((call, result.clone()));
-                // Live sandbox (if any) now lags history; `valid_upto`
-                // already reflects that.
+                // A mutating hit's node — or a stateless hit's parent — is
+                // exactly the rollout's TCG position: re-seat the cursor.
+                self.reseek_cursor(node);
                 CallOutcome { result, charged, hit: true }
             }
-            Lookup::Miss(miss) => {
-                self.misses += 1;
-                charged += self.ensure_state(&q, &miss);
-                let sb = self.sandbox.as_mut().expect("ensure_state built a sandbox");
-                let result = sb.execute(&call);
-                charged += result.exec_time;
-                self.history.push((call.clone(), result.clone()));
-                self.valid_upto = self.history.len();
-
-                // Record the extended trajectory (the /put of Figure 4).
-                let node = self.backend.insert(&self.task, &self.history);
-
-                // §3.3 selective snapshotting, on the critical path; the
-                // fork instantiation happens in the background. node 0 is
-                // the ROOT/failure sentinel (a remote insert that lost the
-                // network degrades to 0): attaching this sandbox's deep
-                // state there would let later rollouts resume wrong state.
-                if call.mutates_state && node != 0 {
-                    let sb = self.sandbox.as_ref().unwrap();
-                    let snap = sb.snapshot();
-                    let costs = SnapshotCosts {
-                        exec_time: result.exec_time,
-                        serialize_cost: snap.serialize_cost,
-                        restore_cost: snap.restore_cost,
-                    };
-                    if self.backend.should_snapshot(&self.task, costs) {
-                        charged += snap.serialize_cost;
-                        // id 0 = the store rejected the attach (node pinned
-                        // or evicted concurrently): no snapshot was kept,
-                        // so there is nothing to background-fork.
-                        let id = self.backend.store_snapshot(&self.task, node, snap);
-                        if id != 0 && self.cfg.background_forks {
-                            self.backend.set_warm_fork(&self.task, node, true);
-                        }
-                    }
-                }
-                CallOutcome { result, charged, hit: false }
-            }
+            Lookup::Miss(miss) => self.execute_miss(call, &miss, charged, false),
         }
     }
 
-    /// Bring `self.sandbox` to the state implied by `q[..q.len()-1]`.
-    /// Returns the charged reconstruction latency.
+    /// The shared miss path: reconstruct state, execute, record the
+    /// extended trajectory (through the cursor when `record_delta`, else a
+    /// full `/put`), and apply the §3.3 selective-snapshot rule.
+    fn execute_miss(
+        &mut self,
+        call: ToolCall,
+        miss: &Miss,
+        mut charged: f64,
+        record_delta: bool,
+    ) -> CallOutcome {
+        self.misses += 1;
+        charged += self.ensure_state(miss);
+        let sb = self.sandbox.as_mut().expect("ensure_state built a sandbox");
+        let result = sb.execute(&call);
+        charged += result.exec_time;
+        self.history.push((call.clone(), result.clone()));
+        self.valid_upto = self.history.len();
+
+        // Record the extended trajectory (the /put of Figure 4). With an
+        // in-sync cursor only the delta crosses the wire; a failed delta
+        // record (cursor invalidated between step and record) falls back
+        // to the full-trajectory insert and re-seeks. Caveat: 0 is also
+        // the *legitimate* return for a stateless delta recorded at the
+        // TCG root (an all-stateless history pins the cursor at ROOT), so
+        // only treat it as a failure when the position cannot be ROOT.
+        let root_legal = !call.mutates_state
+            && !self.history[..self.history.len() - 1]
+                .iter()
+                .any(|(c, _)| c.mutates_state);
+        let node = match (record_delta, self.cursor) {
+            (true, Some(cur)) => {
+                match self.backend.cursor_record(&self.task, cur, &call, &result) {
+                    0 if !root_legal => self.insert_full_and_reseek(),
+                    n => n,
+                }
+            }
+            _ => self.insert_full_and_reseek(),
+        };
+
+        // §3.3 selective snapshotting, on the critical path; the
+        // fork instantiation happens in the background. node 0 is
+        // the ROOT/failure sentinel (a remote insert that lost the
+        // network degrades to 0): attaching this sandbox's deep
+        // state there would let later rollouts resume wrong state.
+        if call.mutates_state && node != 0 {
+            let sb = self.sandbox.as_ref().unwrap();
+            let snap = sb.snapshot();
+            let costs = SnapshotCosts {
+                exec_time: result.exec_time,
+                serialize_cost: snap.serialize_cost,
+                restore_cost: snap.restore_cost,
+            };
+            if self.backend.should_snapshot(&self.task, costs) {
+                charged += snap.serialize_cost;
+                // id 0 = the store rejected the attach (node pinned
+                // or evicted concurrently): no snapshot was kept,
+                // so there is nothing to background-fork.
+                let id = self.backend.store_snapshot(&self.task, node, snap);
+                if id != 0 && self.cfg.background_forks {
+                    self.backend.set_warm_fork(&self.task, node, true);
+                }
+            }
+        }
+        CallOutcome { result, charged, hit: false }
+    }
+
+    /// Full-trajectory insert, then re-seat the cursor on the returned
+    /// node. Returns the node (0 = remote failure sentinel).
+    fn insert_full_and_reseek(&mut self) -> usize {
+        let node = self.backend.insert(&self.task, &self.history);
+        if node != 0 {
+            self.reseek_cursor(node);
+        }
+        node
+    }
+
+    fn reseek_cursor(&mut self, node: usize) {
+        if let Some(cur) = self.cursor {
+            // A failed seek (node evicted again / transport) leaves the
+            // cursor stale: the next step reports Invalid and this same
+            // fallback runs again — correctness never depends on the seek.
+            self.backend.cursor_seek(&self.task, cur, node, self.history.len());
+        }
+    }
+
+    /// Bring `self.sandbox` to the state implied by the current history
+    /// (the prefix of the call being missed). Returns the charged
+    /// reconstruction latency.
     ///
     /// A miss with a resume offer arrives with the resume node *pinned*
     /// (§3.4 Concurrency Control): every path below either adopts the
     /// snapshot (adopt_snapshot releases after forking) or explicitly hands
     /// the pin back — a leaked pin would block eviction of that snapshot
     /// forever.
-    fn ensure_state(&mut self, q: &[ToolCall], miss: &crate::cache::Miss) -> f64 {
-        let prefix_len = q.len() - 1;
+    fn ensure_state(&mut self, miss: &Miss) -> f64 {
+        let prefix_len = self.history.len();
 
         // Fast path: the live sandbox is already up to date. The lookup
         // still pinned the resume node; return the pin unused.
@@ -243,7 +352,7 @@ impl ToolCallExecutor {
         let live_start = if self.sandbox.is_some() { Some(self.valid_upto) } else { None };
 
         // Option A: fork the snapshot the LPM offered. `replay_from` is the
-        // resume node's stateful depth; map it to an index in q. The plan
+        // resume node's stateful depth; map it to a history index. The plan
         // is decided *before* fetching, so a live sandbox that is already
         // at/ahead of the snapshot — or a snapshot whose restore (possibly
         // a disk fault-in from the spill tier) costs more than the replay
@@ -252,7 +361,12 @@ impl ToolCallExecutor {
             let idx = if self.cfg.stateful_filtering {
                 // Clamp: a malformed remote offer must never index past the
                 // prefix the rollout actually executed.
-                stateful_depth_to_index(q, depth).min(prefix_len)
+                depth_to_index(
+                    self.history.iter().map(|(c, _)| c.mutates_state),
+                    depth,
+                    prefix_len,
+                )
+                .min(prefix_len)
             } else {
                 depth.min(prefix_len)
             };
@@ -312,9 +426,9 @@ impl ToolCallExecutor {
             }
         };
 
-        // Replay the state-mutating calls in q[replay_start..prefix_len].
+        // Replay the state-mutating calls in history[replay_start..].
         let sb = self.sandbox.as_mut().unwrap();
-        for call in &q[replay_start..prefix_len] {
+        for (call, _) in &self.history[replay_start..prefix_len] {
             if call.mutates_state {
                 let r = sb.execute(call);
                 charged += r.exec_time;
@@ -344,19 +458,25 @@ impl ToolCallExecutor {
 
 /// Index in `q` just *after* the `depth`-th state-mutating call.
 pub fn stateful_depth_to_index(q: &[ToolCall], depth: usize) -> usize {
+    depth_to_index(q.iter().map(|c| c.mutates_state), depth, q.len())
+}
+
+/// Shared core of [`stateful_depth_to_index`] over any mutates-flag
+/// sequence (the executor iterates its history pairs without cloning).
+fn depth_to_index(flags: impl Iterator<Item = bool>, depth: usize, len: usize) -> usize {
     if depth == 0 {
         return 0;
     }
     let mut seen = 0;
-    for (i, c) in q.iter().enumerate() {
-        if c.mutates_state {
+    for (i, mutates) in flags.enumerate() {
+        if mutates {
             seen += 1;
             if seen == depth {
                 return i + 1;
             }
         }
     }
-    q.len()
+    len
 }
 
 #[cfg(test)]
@@ -382,7 +502,7 @@ mod tests {
 
     fn bash(cmd: &str) -> ToolCall {
         let mutates = !(cmd.starts_with("cat") || cmd.starts_with("ls") || cmd.starts_with("grep"));
-        ToolCall { tool: "bash".into(), args: cmd.into(), mutates_state: mutates }
+        ToolCall::with_flag("bash", cmd, mutates)
     }
 
     #[test]

@@ -20,6 +20,7 @@
 pub mod util;
 pub mod sim;
 pub mod cache;
+pub mod wire;
 pub mod sandbox;
 pub mod server;
 pub mod client;

@@ -26,7 +26,8 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
                 svc.shard_count()
             );
             println!(
-                "endpoints: /get /prefix_match /put /release /snapshot /warm /stats /viz /ping"
+                "endpoints: /get /prefix_match /put /release /cursor_open /cursor_step \
+                 /cursor_record /cursor_seek /cursor_close /snapshot /warm /stats /viz /ping"
             );
             loop {
                 std::thread::sleep(std::time::Duration::from_secs(3600));

@@ -5,10 +5,19 @@
 //!
 //! Endpoints (mirroring the paper's API):
 //!
-//! * `POST /get`           — exact-match lookup (hit or plain miss)
-//! * `POST /prefix_match`  — full LPM lookup (hit, or miss + resume info)
-//! * `POST /put`           — insert an executed trajectory
-//! * `POST /release`       — decrement a node's sandbox refcount
+//! * `POST /get`           — LPM lookup (hit, or miss + resume info);
+//!   **binary or JSON** body (first-byte sniff, see [`crate::wire`])
+//! * `POST /prefix_match`  — JSON alias of `/get` (legacy clients)
+//! * `POST /put`           — insert an executed trajectory (binary or JSON)
+//! * `POST /release`       — decrement a node's sandbox refcount (binary
+//!   or JSON)
+//! * `POST /cursor_open`   — open a lookup cursor for a rollout (binary)
+//! * `POST /cursor_step`   — O(1) incremental lookup of the delta call
+//!   (binary; the hot endpoint)
+//! * `POST /cursor_record` — record the executed delta at the cursor
+//!   (binary)
+//! * `POST /cursor_seek`   — re-seat a cursor after a fallback (binary)
+//! * `POST /cursor_close`  — drop a cursor (binary)
 //! * `POST /snapshot`      — store a serialized sandbox for a node
 //! * `GET  /snapshot`      — fetch snapshot bytes (`?task=&id=`)
 //! * `POST /warm`          — mark a node's background fork warm
@@ -20,18 +29,24 @@
 //! * `GET  /viz`           — TCG structure as JSON (Figure 9)
 //! * `GET  /ping`          — liveness
 //!
-//! Every handler programs against the [`CacheBackend`] trait — the same
-//! surface the executor and the training loops use in-process.
+//! The hot endpoints speak the length-prefixed binary codec of
+//! [`crate::wire`]; the cold admin endpoints (`/stats`, `/persist`,
+//! `/warm_start`, `/viz`, `/snapshot`, `/warm`) remain JSON and stay the
+//! authoritative human-debuggable surface. Every handler programs against
+//! the [`CacheBackend`] trait — the same surface the executor and the
+//! training loops use in-process.
 
 use std::sync::Arc;
 
-use crate::cache::key::{trajectory_from_json, trajectory_to_json, ToolCall};
+use crate::cache::key::{trajectory_from_json, trajectory_json_into, ToolCall};
 use crate::cache::{
-    CacheBackend, CacheFactory, Lookup, ShardedCacheService, TaskCache, ToolResult,
+    CacheBackend, CacheFactory, CursorStep, Lookup, ShardedCacheService, TaskCache,
+    ToolResult,
 };
 use crate::sandbox::SandboxSnapshot;
 use crate::util::http::{Handler, Request, Response, Server};
 use crate::util::json::{self, Json};
+use crate::wire;
 
 /// Default shard count for a served cache (Figure 8a's scaling knob).
 pub const DEFAULT_SHARDS: usize = 8;
@@ -87,12 +102,28 @@ impl CacheService {
         self.sharded.evict_snapshot(task, node)
     }
 
+    /// White-box removal of a node's subtree (tests of cursor
+    /// invalidation mid-rollout).
+    pub fn evict_node(&self, task: &str, node: usize) -> bool {
+        self.sharded.evict_node(task, node)
+    }
+
     fn handle(&self, req: &Request) -> Response {
         match (req.method.as_str(), req.path.as_str()) {
-            ("GET", "/ping") => Response::text(200, "pong"),
+            ("GET", "/ping") => Response::text_static(200, "pong"),
+            // Hot endpoints sniff the first body byte: the binary codec's
+            // magic never collides with JSON's `{`.
+            ("POST", "/get") if wire::is_binary(&req.body) => self.lookup_bin(req),
             ("POST", "/get") | ("POST", "/prefix_match") => self.lookup(req),
+            ("POST", "/put") if wire::is_binary(&req.body) => self.put_bin(req),
             ("POST", "/put") => self.put(req),
+            ("POST", "/release") if wire::is_binary(&req.body) => self.release_bin(req),
             ("POST", "/release") => self.release(req),
+            ("POST", "/cursor_open") => self.cursor_open(req),
+            ("POST", "/cursor_step") => self.cursor_step(req),
+            ("POST", "/cursor_record") => self.cursor_record(req),
+            ("POST", "/cursor_seek") => self.cursor_seek(req),
+            ("POST", "/cursor_close") => self.cursor_close(req),
             ("POST", "/snapshot") => self.store_snapshot(req),
             ("GET", "/snapshot") => self.fetch_snapshot(req),
             ("POST", "/warm") => self.set_warm(req),
@@ -104,6 +135,168 @@ impl CacheService {
             _ => Response::not_found(),
         }
     }
+
+    // ---- binary hot path -------------------------------------------------
+
+    /// The resume-offer unpinning every wire lookup applies (see the long
+    /// comment in [`CacheService::lookup`]): the HTTP protocol cannot carry
+    /// a reliable distributed refcount, so the pin taken by the lookup is
+    /// returned before the response leaves the server.
+    fn unpin_offer(&self, task: &str, resume: &Option<(usize, crate::cache::SnapshotRef, usize)>) {
+        if let Some((node, _, _)) = resume {
+            self.backend().release(task, *node);
+        }
+    }
+
+    fn lookup_bin(&self, req: &Request) -> Response {
+        let decoded = (|| {
+            let mut r = wire::Reader::request(&req.body)?;
+            let task = r.str()?.to_string();
+            let n = r.varint()? as usize;
+            let mut q = Vec::with_capacity(n.min(1024));
+            for _ in 0..n {
+                q.push(r.call()?);
+            }
+            r.done().then_some((task, q))
+        })();
+        let Some((task, q)) = decoded else {
+            return Response::bad_request_static("bad lookup frame");
+        };
+        if q.is_empty() {
+            return Response::bad_request_static("empty trajectory");
+        }
+        let out = self.backend().lookup(&task, &q);
+        if let Lookup::Miss(m) = &out {
+            self.unpin_offer(&task, &m.resume);
+        }
+        let mut buf = Vec::with_capacity(64);
+        wire::enc_lookup_resp(&mut buf, &out);
+        Response::binary(buf)
+    }
+
+    fn put_bin(&self, req: &Request) -> Response {
+        let decoded = (|| {
+            let mut r = wire::Reader::request(&req.body)?;
+            let task = r.str()?.to_string();
+            let n = r.varint()? as usize;
+            let mut traj = Vec::with_capacity(n.min(1024));
+            for _ in 0..n {
+                let call = r.call()?;
+                let result = r.result()?;
+                traj.push((call, result));
+            }
+            r.done().then_some((task, traj))
+        })();
+        let Some((task, traj)) = decoded else {
+            return Response::bad_request_static("bad put frame");
+        };
+        let node = self.backend().insert(&task, &traj);
+        let mut buf = Vec::with_capacity(9);
+        wire::enc_u64_resp(&mut buf, node as u64);
+        Response::binary(buf)
+    }
+
+    fn release_bin(&self, req: &Request) -> Response {
+        let decoded = (|| {
+            let mut r = wire::Reader::request(&req.body)?;
+            let task = r.str()?.to_string();
+            let node = r.varint()? as usize;
+            r.done().then_some((task, node))
+        })();
+        let Some((task, node)) = decoded else {
+            return Response::bad_request_static("bad release frame");
+        };
+        self.backend().release(&task, node);
+        Response::binary(Vec::new())
+    }
+
+    fn cursor_open(&self, req: &Request) -> Response {
+        let decoded = (|| {
+            let mut r = wire::Reader::request(&req.body)?;
+            let task = r.str()?.to_string();
+            r.done().then_some(task)
+        })();
+        let Some(task) = decoded else {
+            return Response::bad_request_static("bad cursor_open frame");
+        };
+        let id = self.backend().cursor_open(&task);
+        let mut buf = Vec::with_capacity(9);
+        wire::enc_u64_resp(&mut buf, id);
+        Response::binary(buf)
+    }
+
+    fn cursor_step(&self, req: &Request) -> Response {
+        let decoded = (|| {
+            let mut r = wire::Reader::request(&req.body)?;
+            let task = r.str()?.to_string();
+            let cursor = r.varint()?;
+            let call = r.call()?;
+            r.done().then_some((task, cursor, call))
+        })();
+        let Some((task, cursor, call)) = decoded else {
+            return Response::bad_request_static("bad cursor_step frame");
+        };
+        let out = self.backend().cursor_step(&task, cursor, &call);
+        if let CursorStep::Miss(m) = &out {
+            // Same unpinned-offer contract as every wire lookup.
+            self.unpin_offer(&task, &m.resume);
+        }
+        let mut buf = Vec::with_capacity(64);
+        wire::enc_step_resp(&mut buf, &out);
+        Response::binary(buf)
+    }
+
+    fn cursor_record(&self, req: &Request) -> Response {
+        let decoded = (|| {
+            let mut r = wire::Reader::request(&req.body)?;
+            let task = r.str()?.to_string();
+            let cursor = r.varint()?;
+            let call = r.call()?;
+            let result = r.result()?;
+            r.done().then_some((task, cursor, call, result))
+        })();
+        let Some((task, cursor, call, result)) = decoded else {
+            return Response::bad_request_static("bad cursor_record frame");
+        };
+        let node = self.backend().cursor_record(&task, cursor, &call, &result);
+        let mut buf = Vec::with_capacity(9);
+        wire::enc_u64_resp(&mut buf, node as u64);
+        Response::binary(buf)
+    }
+
+    fn cursor_seek(&self, req: &Request) -> Response {
+        let decoded = (|| {
+            let mut r = wire::Reader::request(&req.body)?;
+            let task = r.str()?.to_string();
+            let cursor = r.varint()?;
+            let node = r.varint()? as usize;
+            let steps = r.varint()? as usize;
+            r.done().then_some((task, cursor, node, steps))
+        })();
+        let Some((task, cursor, node, steps)) = decoded else {
+            return Response::bad_request_static("bad cursor_seek frame");
+        };
+        let ok = self.backend().cursor_seek(&task, cursor, node, steps);
+        let mut buf = Vec::with_capacity(1);
+        wire::enc_bool_resp(&mut buf, ok);
+        Response::binary(buf)
+    }
+
+    fn cursor_close(&self, req: &Request) -> Response {
+        let decoded = (|| {
+            let mut r = wire::Reader::request(&req.body)?;
+            let task = r.str()?.to_string();
+            let cursor = r.varint()?;
+            r.done().then_some((task, cursor))
+        })();
+        let Some((task, cursor)) = decoded else {
+            return Response::bad_request_static("bad cursor_close frame");
+        };
+        self.backend().cursor_close(&task, cursor);
+        Response::binary(Vec::new())
+    }
+
+    // ---- legacy JSON path ------------------------------------------------
 
     fn parse_body(req: &Request) -> Result<Json, Response> {
         json::parse(req.body_str())
@@ -209,7 +402,7 @@ impl CacheService {
             return Response::bad_request("missing node");
         };
         self.backend().release(task, node as usize);
-        Response::json("{}".to_string())
+        Response::json_static("{}")
     }
 
     fn store_snapshot(&self, req: &Request) -> Response {
@@ -276,7 +469,7 @@ impl CacheService {
             return Response::bad_request("missing node/warm");
         };
         self.backend().set_warm_fork(task, node as usize, warm);
-        Response::json("{}".to_string())
+        Response::json_static("{}")
     }
 
     fn get_warm(&self, req: &Request) -> Response {
@@ -310,7 +503,11 @@ impl CacheService {
         } else {
             self.backend().persist(dir)
         };
-        Response::json(Json::obj(vec![("ok", Json::Bool(ok))]).to_string())
+        if ok {
+            Response::json_static("{\"ok\":true}")
+        } else {
+            Response::json_static("{\"ok\":false}")
+        }
     }
 
     fn persist(&self, req: &Request) -> Response {
@@ -383,13 +580,17 @@ pub fn hex_decode(s: &str) -> Option<Vec<u8>> {
         .collect()
 }
 
-/// Serialize a lookup request body (shared with the client).
+/// Serialize a legacy JSON lookup request body (shared with the client and
+/// the fig10 wire-bytes accounting). Builds the string directly — no `Json`
+/// tree, no `tool`/`args` clones.
 pub fn lookup_body(task: &str, traj: &[ToolCall]) -> String {
-    Json::obj(vec![
-        ("task", Json::str(task)),
-        ("trajectory", trajectory_to_json(traj)),
-    ])
-    .to_string()
+    let mut out = String::with_capacity(24 + traj.len() * 56);
+    out.push_str("{\"task\":");
+    json::escape_str(task, &mut out);
+    out.push_str(",\"trajectory\":");
+    trajectory_json_into(traj, &mut out);
+    out.push('}');
+    out
 }
 
 #[cfg(test)]
@@ -557,6 +758,105 @@ mod tests {
         assert_eq!(status, 400);
         let (status, _) = c.get("/nope").unwrap();
         assert_eq!(status, 404);
+    }
+
+    #[test]
+    fn binary_protocol_roundtrip_and_json_coexistence() {
+        use crate::wire;
+        let (server, _svc) = serve("127.0.0.1:0", 2).unwrap();
+        let mut c = HttpClient::connect(server.addr());
+
+        // Binary /put.
+        let traj = vec![
+            (call("a"), ToolResult::new("ra", 1.0)),
+            (call("b"), ToolResult::new("rb", 2.0)),
+        ];
+        let mut buf = Vec::new();
+        wire::enc_insert(&mut buf, "bt", &traj);
+        let (status, body) = c.post("/put", &buf).unwrap();
+        assert_eq!(status, 200);
+        let node = wire::dec_u64_resp(&body).unwrap();
+        assert!(node > 0);
+
+        // Binary /get hits what binary /put recorded…
+        buf.clear();
+        wire::enc_lookup(&mut buf, "bt", &[call("a"), call("b")]);
+        let (status, body) = c.post("/get", &buf).unwrap();
+        assert_eq!(status, 200);
+        match wire::dec_lookup_resp(&body).unwrap() {
+            Lookup::Hit { result, .. } => assert_eq!(result.output, "rb"),
+            m => panic!("expected binary hit, got {m:?}"),
+        }
+
+        // …and the legacy JSON endpoint sees the same cache.
+        let (_, body) = c
+            .post("/get", lookup_body("bt", &[call("a"), call("b")]).as_bytes())
+            .unwrap();
+        let v = json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+        assert_eq!(v.get("hit").unwrap().as_bool(), Some(true));
+
+        // Binary /release is a 200 no-op on an unpinned node.
+        buf.clear();
+        wire::enc_release(&mut buf, "bt", node as usize);
+        let (status, _) = c.post("/release", &buf).unwrap();
+        assert_eq!(status, 200);
+
+        // Truncated binary frames are 400s, not panics.
+        buf.clear();
+        wire::enc_lookup(&mut buf, "bt", &[call("a")]);
+        let (status, _) = c.post("/get", &buf[..buf.len() - 2]).unwrap();
+        assert_eq!(status, 400);
+    }
+
+    #[test]
+    fn cursor_endpoints_drive_a_full_rollout() {
+        use crate::wire;
+        let (server, svc) = serve("127.0.0.1:0", 2).unwrap();
+        let mut c = HttpClient::connect(server.addr());
+        let mut buf = Vec::new();
+
+        wire::enc_cursor_open(&mut buf, "ct");
+        let (_, body) = c.post("/cursor_open", &buf).unwrap();
+        let cur = wire::dec_u64_resp(&body).unwrap();
+        assert!(cur > 0);
+
+        // Miss → record, twice; then replay the chain as hits.
+        for cmd in ["make", "make test"] {
+            buf.clear();
+            wire::enc_cursor_step(&mut buf, "ct", cur, &call(cmd));
+            let (_, body) = c.post("/cursor_step", &buf).unwrap();
+            assert!(matches!(
+                wire::dec_step_resp(&body).unwrap(),
+                crate::cache::CursorStep::Miss(_)
+            ));
+            buf.clear();
+            wire::enc_cursor_record(&mut buf, "ct", cur, &call(cmd), &ToolResult::new(cmd, 1.0));
+            let (_, body) = c.post("/cursor_record", &buf).unwrap();
+            assert!(wire::dec_u64_resp(&body).unwrap() > 0);
+        }
+        buf.clear();
+        wire::enc_cursor_seek(&mut buf, "ct", cur, 0, 0);
+        let (_, body) = c.post("/cursor_seek", &buf).unwrap();
+        assert_eq!(wire::dec_bool_resp(&body), Some(true));
+        for cmd in ["make", "make test"] {
+            buf.clear();
+            wire::enc_cursor_step(&mut buf, "ct", cur, &call(cmd));
+            let (_, body) = c.post("/cursor_step", &buf).unwrap();
+            match wire::dec_step_resp(&body).unwrap() {
+                crate::cache::CursorStep::Hit { result, .. } => {
+                    assert_eq!(result.output, cmd)
+                }
+                s => panic!("warm chain must hit: {s:?}"),
+            }
+        }
+
+        buf.clear();
+        wire::enc_cursor_close(&mut buf, "ct", cur);
+        let (status, _) = c.post("/cursor_close", &buf).unwrap();
+        assert_eq!(status, 200);
+        // Stats flowed through the cursor path like any lookup.
+        assert_eq!(svc.task("ct").stats().lookups, 4);
+        assert_eq!(svc.task("ct").stats().hits, 2);
     }
 
     #[test]

@@ -124,6 +124,10 @@ pub struct SimOptions {
     pub max_snapshots: usize,
     /// Cache-service shard count (§4.5; tasks hash across shards).
     pub shards: usize,
+    /// Stateful lookup cursors: executors send only the delta call per
+    /// lookup (O(1) per tool call). `false` forces the legacy full-prefix
+    /// path (the fig10 A/B baseline).
+    pub use_cursor: bool,
 }
 
 impl SimOptions {
@@ -137,6 +141,7 @@ impl SimOptions {
             lpm: LpmConfig::default(),
             max_snapshots: 64,
             shards: 4,
+            use_cursor: true,
         }
     }
 }
@@ -218,6 +223,7 @@ pub fn run_workload(cfg: &WorkloadConfig, opts: &SimOptions) -> RunMetrics {
                     let exec_cfg = if opts.cached {
                         ExecutorConfig {
                             stateful_filtering: opts.lpm.stateful_filtering,
+                            use_cursor: opts.use_cursor,
                             ..ExecutorConfig::default()
                         }
                     } else {
@@ -361,6 +367,8 @@ pub struct ConcurrentOptions {
     /// Persist the cache state after the final epoch (warm-start source
     /// for the next run).
     pub persist_to: Option<String>,
+    /// Stateful lookup cursors (see [`SimOptions::use_cursor`]).
+    pub use_cursor: bool,
 }
 
 impl ConcurrentOptions {
@@ -378,6 +386,7 @@ impl ConcurrentOptions {
             spill_dir: None,
             warm_start_from: None,
             persist_to: None,
+            use_cursor: true,
         }
     }
 }
@@ -432,6 +441,7 @@ pub fn run_concurrent(cfg: &WorkloadConfig, opts: &ConcurrentOptions) -> Concurr
             global_byte_budget: None,
             spill_dir: opts.spill_dir.clone().map(std::path::PathBuf::from),
             background: opts.shard_byte_budget.is_some(),
+            ..Default::default()
         },
     );
     if let Some(dir) = &opts.warm_start_from {
@@ -457,6 +467,7 @@ pub fn run_concurrent(cfg: &WorkloadConfig, opts: &ConcurrentOptions) -> Concurr
                 let task_name = format!("task-{task}");
                 let exec_cfg = ExecutorConfig {
                     stateful_filtering: opts.lpm.stateful_filtering,
+                    use_cursor: opts.use_cursor,
                     ..ExecutorConfig::default()
                 };
                 let tx = tx.clone();
@@ -645,6 +656,23 @@ mod tests {
             "warm epoch 0 ({warm_first:.2}) below cold final epoch ({cold_final:.2})"
         );
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn cursor_and_legacy_paths_agree() {
+        // The DES is deterministic given the seed, so the incremental
+        // cursor path and the legacy full-prefix path must make *identical*
+        // hit/miss decisions — any divergence is a cursor-semantics bug.
+        let cfg = WorkloadConfig::config_for(Workload::TerminalEasy);
+        let cursor = run_workload(&cfg, &quick_opts(&cfg, true));
+        let mut legacy_opts = quick_opts(&cfg, true);
+        legacy_opts.use_cursor = false;
+        let legacy = run_workload(&cfg, &legacy_opts);
+        assert_eq!(cursor.overall_hit_rate(), legacy.overall_hit_rate());
+        assert_eq!(cursor.epoch_hit_rates, legacy.epoch_hit_rates);
+        let rc: Vec<f64> = cursor.rollouts.iter().map(|r| r.reward).collect();
+        let rl: Vec<f64> = legacy.rollouts.iter().map(|r| r.reward).collect();
+        assert_eq!(rc, rl, "cursor path changed rewards");
     }
 
     #[test]

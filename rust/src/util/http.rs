@@ -31,29 +31,67 @@ impl Request {
     }
 }
 
-/// An HTTP response under construction.
+/// An HTTP response under construction. The body is a `Cow` so constant
+/// payloads (`"{}"`, `{"ok":true}`, error strings) are served from static
+/// bytes instead of being re-allocated per request.
 #[derive(Debug, Clone)]
 pub struct Response {
     pub status: u16,
     pub content_type: &'static str,
-    pub body: Vec<u8>,
+    pub body: std::borrow::Cow<'static, [u8]>,
 }
 
 impl Response {
     pub fn json(body: String) -> Response {
-        Response { status: 200, content_type: "application/json", body: body.into_bytes() }
+        Response {
+            status: 200,
+            content_type: "application/json",
+            body: body.into_bytes().into(),
+        }
+    }
+
+    /// A constant JSON payload — zero allocation per request.
+    pub fn json_static(body: &'static str) -> Response {
+        Response {
+            status: 200,
+            content_type: "application/json",
+            body: body.as_bytes().into(),
+        }
+    }
+
+    /// A binary-codec payload (`application/octet-stream`).
+    pub fn binary(body: Vec<u8>) -> Response {
+        Response {
+            status: 200,
+            content_type: "application/octet-stream",
+            body: body.into(),
+        }
     }
 
     pub fn text(status: u16, body: impl Into<String>) -> Response {
-        Response { status, content_type: "text/plain", body: body.into().into_bytes() }
+        Response {
+            status,
+            content_type: "text/plain",
+            body: body.into().into_bytes().into(),
+        }
+    }
+
+    /// A constant plain-text response — zero allocation per request.
+    pub fn text_static(status: u16, body: &'static str) -> Response {
+        Response { status, content_type: "text/plain", body: body.as_bytes().into() }
     }
 
     pub fn not_found() -> Response {
-        Response::text(404, "not found")
+        Response::text_static(404, "not found")
     }
 
     pub fn bad_request(msg: impl Into<String>) -> Response {
         Response::text(400, msg)
+    }
+
+    /// A constant bad-request response — zero allocation per request.
+    pub fn bad_request_static(msg: &'static str) -> Response {
+        Response::text_static(400, msg)
     }
 
     fn status_line(&self) -> &'static str {
@@ -270,15 +308,18 @@ fn write_response(w: &mut TcpStream, resp: &Response, keep_alive: bool) -> std::
     w.flush()
 }
 
-/// A blocking HTTP client with a persistent (keep-alive) connection.
+/// A blocking HTTP client with a persistent (keep-alive) connection. The
+/// request-head buffer is reused across requests, so the steady-state
+/// request path allocates nothing beyond what the caller's body needs.
 pub struct HttpClient {
     addr: SocketAddr,
     conn: Option<BufReader<TcpStream>>,
+    head: String,
 }
 
 impl HttpClient {
     pub fn connect(addr: SocketAddr) -> HttpClient {
-        HttpClient { addr, conn: None }
+        HttpClient { addr, conn: None, head: String::new() }
     }
 
     fn ensure(&mut self) -> std::io::Result<&mut BufReader<TcpStream>> {
@@ -317,11 +358,29 @@ impl HttpClient {
         path_and_query: &str,
         body: &[u8],
     ) -> std::io::Result<(u16, Vec<u8>)> {
+        // Build the head in the reused buffer (taken out so the borrow of
+        // `self.conn` below doesn't conflict; restored before returning).
+        let mut head = std::mem::take(&mut self.head);
+        head.clear();
+        {
+            use std::fmt::Write;
+            let _ = write!(
+                head,
+                "{method} {path_and_query} HTTP/1.1\r\nHost: tvcache\r\nContent-Length: {}\r\nConnection: keep-alive\r\n\r\n",
+                body.len()
+            );
+        }
+        let out = self.try_request_with_head(&head, body);
+        self.head = head;
+        out
+    }
+
+    fn try_request_with_head(
+        &mut self,
+        head: &str,
+        body: &[u8],
+    ) -> std::io::Result<(u16, Vec<u8>)> {
         let reader = self.ensure()?;
-        let head = format!(
-            "{method} {path_and_query} HTTP/1.1\r\nHost: tvcache\r\nContent-Length: {}\r\nConnection: keep-alive\r\n\r\n",
-            body.len()
-        );
         {
             let stream = reader.get_mut();
             stream.write_all(head.as_bytes())?;
@@ -364,6 +423,14 @@ impl HttpClient {
         Ok((status, body))
     }
 
+    /// POST without the transparent stale-connection retry: for
+    /// non-idempotent requests (cursor steps/records), where a replay
+    /// after a lost response would apply the operation twice. Callers
+    /// treat the error as a degraded outcome instead.
+    pub fn post_once(&mut self, path: &str, body: &[u8]) -> std::io::Result<(u16, Vec<u8>)> {
+        self.try_request("POST", path, body)
+    }
+
     pub fn get(&mut self, path_and_query: &str) -> std::io::Result<(u16, Vec<u8>)> {
         self.request("GET", path_and_query, b"")
     }
@@ -385,11 +452,7 @@ mod tests {
                     let v = req.query.get("k").cloned().unwrap_or_default();
                     Response::text(200, format!("k={v}"))
                 }
-                ("POST", "/echo") => Response {
-                    status: 200,
-                    content_type: "application/octet-stream",
-                    body: req.body.clone(),
-                },
+                ("POST", "/echo") => Response::binary(req.body.clone()),
                 _ => Response::not_found(),
             }
         });

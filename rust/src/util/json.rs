@@ -87,13 +87,7 @@ impl Json {
             Json::Null => out.push_str("null"),
             Json::Bool(true) => out.push_str("true"),
             Json::Bool(false) => out.push_str("false"),
-            Json::Num(n) => {
-                if n.fract() == 0.0 && n.abs() < 1e15 {
-                    out.push_str(&format!("{}", *n as i64));
-                } else {
-                    out.push_str(&format!("{n}"));
-                }
-            }
+            Json::Num(n) => write_num(*n, out),
             Json::Str(s) => write_escaped(s, out),
             Json::Arr(a) => {
                 out.push('[');
@@ -125,6 +119,24 @@ impl fmt::Display for Json {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         f.write_str(&self.to_string())
     }
+}
+
+/// Serialize a number exactly as `Json::Num` does (integer form for whole
+/// values below 1e15). Public so direct-to-string serializers (e.g.
+/// `ToolResult::json_into`) stay byte-identical with the tree serializer.
+pub fn write_num(n: f64, out: &mut String) {
+    use std::fmt::Write;
+    if n.fract() == 0.0 && n.abs() < 1e15 {
+        let _ = write!(out, "{}", n as i64);
+    } else {
+        let _ = write!(out, "{n}");
+    }
+}
+
+/// Append `s` as a quoted, escaped JSON string — the escaping `Json::Str`
+/// uses, exposed for serializers that build strings without a `Json` tree.
+pub fn escape_str(s: &str, out: &mut String) {
+    write_escaped(s, out)
 }
 
 fn write_escaped(s: &str, out: &mut String) {

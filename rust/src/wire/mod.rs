@@ -1,0 +1,504 @@
+//! The TVCACHE binary wire codec: length-prefixed frames for the hot
+//! endpoints (`/get`, `/put`, `/release`, and the `/cursor_*` family).
+//!
+//! The JSON text protocol serializes a lookup as the rollout's *entire*
+//! tool history — O(L) bytes per call, O(L²) per rollout — and spends most
+//! of its server time in the JSON parser. This codec frames the same
+//! payloads as varint-prefixed byte strings, so a cursor step (the steady
+//! state) is a few dozen bytes regardless of trajectory depth, and decoding
+//! is a single forward scan with no allocation beyond the descriptor
+//! strings themselves.
+//!
+//! Framing rules:
+//!
+//! * every **request** body begins with [`MAGIC`] (`0xB1`) — distinct from
+//!   `{` (`0x7B`), so the shared endpoints (`/get`, `/put`, `/release`)
+//!   sniff the first byte and keep accepting legacy JSON bodies;
+//! * integers are LEB128 varints ([`put_varint`]);
+//! * strings/bytes are varint length + raw bytes;
+//! * `f64` is 8 bytes little-endian IEEE bits;
+//! * a [`ToolCall`] is `tool, args, flags(u8: bit0 = mutates_state),
+//!   key(u64 LE)` — the trailing key is the client's cached
+//!   [`ToolCall::key`] fingerprint, which the server adopts via
+//!   [`ToolCall::from_wire`] so child-index probes never re-hash;
+//! * a [`ToolResult`] is `output, exec_time(f64), api_tokens(varint)`.
+//!
+//! Responses are binary only on binary requests (no magic byte — content
+//! is negotiated by the request). The cold admin endpoints (`/stats`,
+//! `/persist`, `/warm_start`, `/viz`, `/snapshot`) stay JSON: they run
+//! once per epoch or per incident, and human-debuggable output there is
+//! worth more than bytes.
+
+use crate::cache::key::{ToolCall, ToolResult};
+use crate::cache::lpm::{CursorStep, Lookup, Miss};
+use crate::cache::tcg::SnapshotRef;
+
+/// First byte of every binary request body (never `{`, so JSON sniffing
+/// on the shared endpoints is unambiguous).
+pub const MAGIC: u8 = 0xB1;
+
+/// Response tags for lookup/step frames.
+const TAG_MISS: u8 = 0;
+const TAG_HIT: u8 = 1;
+const TAG_INVALID: u8 = 2;
+
+/// Does this request body use the binary codec?
+pub fn is_binary(body: &[u8]) -> bool {
+    body.first() == Some(&MAGIC)
+}
+
+// ---- primitive writers -------------------------------------------------
+
+pub fn put_varint(buf: &mut Vec<u8>, mut v: u64) {
+    loop {
+        let byte = (v & 0x7f) as u8;
+        v >>= 7;
+        if v == 0 {
+            buf.push(byte);
+            return;
+        }
+        buf.push(byte | 0x80);
+    }
+}
+
+pub fn put_f64(buf: &mut Vec<u8>, v: f64) {
+    buf.extend_from_slice(&v.to_bits().to_le_bytes());
+}
+
+pub fn put_str(buf: &mut Vec<u8>, s: &str) {
+    put_varint(buf, s.len() as u64);
+    buf.extend_from_slice(s.as_bytes());
+}
+
+pub fn put_call(buf: &mut Vec<u8>, c: &ToolCall) {
+    put_str(buf, &c.tool);
+    put_str(buf, &c.args);
+    buf.push(c.mutates_state as u8);
+    buf.extend_from_slice(&c.key().to_le_bytes());
+}
+
+pub fn put_result(buf: &mut Vec<u8>, r: &ToolResult) {
+    put_str(buf, &r.output);
+    put_f64(buf, r.exec_time);
+    put_varint(buf, r.api_tokens);
+}
+
+// ---- reader ------------------------------------------------------------
+
+/// A forward-only decoder over a frame. Every accessor returns `None` on
+/// truncation or malformed input — callers map that to a 400 / a degraded
+/// miss, never a panic.
+pub struct Reader<'a> {
+    b: &'a [u8],
+}
+
+impl<'a> Reader<'a> {
+    /// Open a *request* frame: checks and consumes the [`MAGIC`] byte.
+    pub fn request(body: &'a [u8]) -> Option<Reader<'a>> {
+        match body.split_first() {
+            Some((&MAGIC, rest)) => Some(Reader { b: rest }),
+            _ => None,
+        }
+    }
+
+    /// Open a *response* frame (no magic byte).
+    pub fn response(body: &'a [u8]) -> Option<Reader<'a>> {
+        Some(Reader { b: body })
+    }
+
+    pub fn u8(&mut self) -> Option<u8> {
+        let (&v, rest) = self.b.split_first()?;
+        self.b = rest;
+        Some(v)
+    }
+
+    pub fn varint(&mut self) -> Option<u64> {
+        let mut v: u64 = 0;
+        let mut shift = 0u32;
+        loop {
+            let byte = self.u8()?;
+            if shift >= 64 {
+                return None; // over-long encoding
+            }
+            v |= ((byte & 0x7f) as u64) << shift;
+            if byte & 0x80 == 0 {
+                return Some(v);
+            }
+            shift += 7;
+        }
+    }
+
+    fn take(&mut self, n: usize) -> Option<&'a [u8]> {
+        if self.b.len() < n {
+            return None;
+        }
+        let (head, rest) = self.b.split_at(n);
+        self.b = rest;
+        Some(head)
+    }
+
+    pub fn f64(&mut self) -> Option<f64> {
+        Some(f64::from_bits(self.u64_le()?))
+    }
+
+    pub fn u64_le(&mut self) -> Option<u64> {
+        let head = self.take(8)?;
+        Some(u64::from_le_bytes(head.try_into().ok()?))
+    }
+
+    pub fn str(&mut self) -> Option<&'a str> {
+        let len = self.varint()?;
+        if len > usize::MAX as u64 {
+            return None;
+        }
+        let head = self.take(len as usize)?;
+        std::str::from_utf8(head).ok()
+    }
+
+    pub fn call(&mut self) -> Option<ToolCall> {
+        let tool = self.str()?;
+        let args = self.str()?;
+        let flags = self.u8()?;
+        let key = self.u64_le()?;
+        Some(ToolCall::from_wire(tool, args, flags & 1 != 0, key))
+    }
+
+    pub fn result(&mut self) -> Option<ToolResult> {
+        let output = self.str()?.to_string();
+        let exec_time = self.f64()?;
+        let api_tokens = self.varint()?;
+        Some(ToolResult { output, exec_time, api_tokens })
+    }
+
+    /// True when the frame is fully consumed (strict decoders check this).
+    pub fn done(&self) -> bool {
+        self.b.is_empty()
+    }
+}
+
+// ---- request frames ----------------------------------------------------
+
+/// `/get` — full-prefix lookup: `task, n, n × call`.
+pub fn enc_lookup(buf: &mut Vec<u8>, task: &str, q: &[ToolCall]) {
+    buf.push(MAGIC);
+    put_str(buf, task);
+    put_varint(buf, q.len() as u64);
+    for c in q {
+        put_call(buf, c);
+    }
+}
+
+/// `/put` — full-trajectory insert: `task, n, n × (call, result)`.
+pub fn enc_insert(buf: &mut Vec<u8>, task: &str, traj: &[(ToolCall, ToolResult)]) {
+    buf.push(MAGIC);
+    put_str(buf, task);
+    put_varint(buf, traj.len() as u64);
+    for (c, r) in traj {
+        put_call(buf, c);
+        put_result(buf, r);
+    }
+}
+
+/// `/release` — `task, node`.
+pub fn enc_release(buf: &mut Vec<u8>, task: &str, node: usize) {
+    buf.push(MAGIC);
+    put_str(buf, task);
+    put_varint(buf, node as u64);
+}
+
+/// `/cursor_open` — `task`.
+pub fn enc_cursor_open(buf: &mut Vec<u8>, task: &str) {
+    buf.push(MAGIC);
+    put_str(buf, task);
+}
+
+/// `/cursor_step` — the O(1) hot frame: `task, cursor, call`.
+pub fn enc_cursor_step(buf: &mut Vec<u8>, task: &str, cursor: u64, call: &ToolCall) {
+    buf.push(MAGIC);
+    put_str(buf, task);
+    put_varint(buf, cursor);
+    put_call(buf, call);
+}
+
+/// `/cursor_record` — `task, cursor, call, result`.
+pub fn enc_cursor_record(
+    buf: &mut Vec<u8>,
+    task: &str,
+    cursor: u64,
+    call: &ToolCall,
+    result: &ToolResult,
+) {
+    buf.push(MAGIC);
+    put_str(buf, task);
+    put_varint(buf, cursor);
+    put_call(buf, call);
+    put_result(buf, result);
+}
+
+/// `/cursor_seek` — `task, cursor, node, steps`.
+pub fn enc_cursor_seek(buf: &mut Vec<u8>, task: &str, cursor: u64, node: usize, steps: usize) {
+    buf.push(MAGIC);
+    put_str(buf, task);
+    put_varint(buf, cursor);
+    put_varint(buf, node as u64);
+    put_varint(buf, steps as u64);
+}
+
+/// `/cursor_close` — `task, cursor`.
+pub fn enc_cursor_close(buf: &mut Vec<u8>, task: &str, cursor: u64) {
+    buf.push(MAGIC);
+    put_str(buf, task);
+    put_varint(buf, cursor);
+}
+
+// ---- response frames ---------------------------------------------------
+
+fn put_miss(buf: &mut Vec<u8>, m: &Miss) {
+    buf.push(TAG_MISS);
+    put_varint(buf, m.matched_node as u64);
+    put_varint(buf, m.matched_calls as u64);
+    match m.resume {
+        Some((node, snap, replay_from)) => {
+            buf.push(1);
+            put_varint(buf, node as u64);
+            put_varint(buf, snap.id);
+            put_f64(buf, snap.restore_cost);
+            put_varint(buf, replay_from as u64);
+        }
+        None => buf.push(0),
+    }
+}
+
+fn read_miss(r: &mut Reader) -> Option<Miss> {
+    let matched_node = r.varint()? as usize;
+    let matched_calls = r.varint()? as usize;
+    let resume = match r.u8()? {
+        0 => None,
+        _ => {
+            let node = r.varint()? as usize;
+            let id = r.varint()?;
+            let restore_cost = r.f64()?;
+            let replay_from = r.varint()? as usize;
+            // The wire carries no payload size (the client never needs it
+            // before fetching) — parity with the JSON protocol's `bytes: 0`.
+            Some((node, SnapshotRef { id, bytes: 0, restore_cost }, replay_from))
+        }
+    };
+    Some(Miss { matched_node, matched_calls, resume })
+}
+
+/// Lookup response: `tag, …` (`1` hit: `node, result`; `0` miss).
+pub fn enc_lookup_resp(buf: &mut Vec<u8>, out: &Lookup) {
+    match out {
+        Lookup::Hit { node, result } => {
+            buf.push(TAG_HIT);
+            put_varint(buf, *node as u64);
+            put_result(buf, result);
+        }
+        Lookup::Miss(m) => put_miss(buf, m),
+    }
+}
+
+pub fn dec_lookup_resp(body: &[u8]) -> Option<Lookup> {
+    let mut r = Reader::response(body)?;
+    let out = match r.u8()? {
+        TAG_HIT => Lookup::Hit { node: r.varint()? as usize, result: r.result()? },
+        TAG_MISS => Lookup::Miss(read_miss(&mut r)?),
+        _ => return None,
+    };
+    r.done().then_some(out)
+}
+
+/// Cursor-step response: a lookup frame plus the `2` (invalid) tag.
+pub fn enc_step_resp(buf: &mut Vec<u8>, out: &CursorStep) {
+    match out {
+        CursorStep::Hit { node, result } => {
+            buf.push(TAG_HIT);
+            put_varint(buf, *node as u64);
+            put_result(buf, result);
+        }
+        CursorStep::Miss(m) => put_miss(buf, m),
+        CursorStep::Invalid => buf.push(TAG_INVALID),
+    }
+}
+
+pub fn dec_step_resp(body: &[u8]) -> Option<CursorStep> {
+    let mut r = Reader::response(body)?;
+    let out = match r.u8()? {
+        TAG_HIT => CursorStep::Hit { node: r.varint()? as usize, result: r.result()? },
+        TAG_MISS => CursorStep::Miss(read_miss(&mut r)?),
+        TAG_INVALID => CursorStep::Invalid,
+        _ => return None,
+    };
+    r.done().then_some(out)
+}
+
+/// Node-id response (`/put`, `/cursor_record`, `/cursor_open`'s cursor id).
+pub fn enc_u64_resp(buf: &mut Vec<u8>, v: u64) {
+    put_varint(buf, v);
+}
+
+pub fn dec_u64_resp(body: &[u8]) -> Option<u64> {
+    let mut r = Reader::response(body)?;
+    let v = r.varint()?;
+    r.done().then_some(v)
+}
+
+/// Boolean response (`/cursor_seek`).
+pub fn enc_bool_resp(buf: &mut Vec<u8>, ok: bool) {
+    buf.push(ok as u8);
+}
+
+pub fn dec_bool_resp(body: &[u8]) -> Option<bool> {
+    let mut r = Reader::response(body)?;
+    let v = r.u8()?;
+    r.done().then_some(v != 0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn calls() -> Vec<ToolCall> {
+        vec![
+            ToolCall::new("bash", "make && ./run \"x\""),
+            ToolCall::stateless("caption_retrieval", "(0, 10)"),
+            ToolCall::new("sql", "SELECT * FROM t WHERE a = 'ünïcødé 😀';"),
+        ]
+    }
+
+    #[test]
+    fn varint_roundtrip_boundaries() {
+        for v in [0u64, 1, 127, 128, 300, u32::MAX as u64, u64::MAX] {
+            let mut buf = Vec::new();
+            put_varint(&mut buf, v);
+            let mut r = Reader::response(&buf).unwrap();
+            assert_eq!(r.varint(), Some(v));
+            assert!(r.done());
+        }
+    }
+
+    #[test]
+    fn lookup_request_roundtrip_preserves_calls_and_keys() {
+        let q = calls();
+        let mut buf = Vec::new();
+        enc_lookup(&mut buf, "task-7", &q);
+        assert!(is_binary(&buf));
+        let mut r = Reader::request(&buf).unwrap();
+        assert_eq!(r.str(), Some("task-7"));
+        let n = r.varint().unwrap() as usize;
+        assert_eq!(n, q.len());
+        for want in &q {
+            let got = r.call().unwrap();
+            assert_eq!(&got, want);
+            assert_eq!(got.key(), want.key(), "wire must carry the cached fingerprint");
+        }
+        assert!(r.done());
+    }
+
+    #[test]
+    fn insert_request_roundtrip() {
+        let traj: Vec<(ToolCall, ToolResult)> = calls()
+            .into_iter()
+            .enumerate()
+            .map(|(i, c)| {
+                let r = ToolResult {
+                    output: format!("out-{i}\nline"),
+                    exec_time: 0.5 * i as f64,
+                    api_tokens: i as u64,
+                };
+                (c, r)
+            })
+            .collect();
+        let mut buf = Vec::new();
+        enc_insert(&mut buf, "t", &traj);
+        let mut r = Reader::request(&buf).unwrap();
+        assert_eq!(r.str(), Some("t"));
+        let n = r.varint().unwrap() as usize;
+        let got: Vec<(ToolCall, ToolResult)> =
+            (0..n).map(|_| (r.call().unwrap(), r.result().unwrap())).collect();
+        assert_eq!(got, traj);
+        assert!(r.done());
+    }
+
+    #[test]
+    fn lookup_response_roundtrip_hit_and_miss() {
+        let hit = Lookup::Hit {
+            node: 42,
+            result: ToolResult { output: "12 passed".into(), exec_time: 3.25, api_tokens: 9 },
+        };
+        let miss_with_resume = Lookup::Miss(Miss {
+            matched_node: 7,
+            matched_calls: 3,
+            resume: Some((7, SnapshotRef { id: 99, bytes: 0, restore_cost: 0.75 }, 2)),
+        });
+        let plain_miss =
+            Lookup::Miss(Miss { matched_node: 0, matched_calls: 0, resume: None });
+        for want in [hit, miss_with_resume, plain_miss] {
+            let mut buf = Vec::new();
+            enc_lookup_resp(&mut buf, &want);
+            assert_eq!(dec_lookup_resp(&buf), Some(want));
+        }
+    }
+
+    #[test]
+    fn step_response_roundtrip_including_invalid() {
+        for want in [
+            CursorStep::Hit { node: 5, result: ToolResult::new("r", 1.0) },
+            CursorStep::Miss(Miss { matched_node: 5, matched_calls: 4, resume: None }),
+            CursorStep::Invalid,
+        ] {
+            let mut buf = Vec::new();
+            enc_step_resp(&mut buf, &want);
+            assert_eq!(dec_step_resp(&buf), Some(want));
+        }
+    }
+
+    #[test]
+    fn cursor_frames_are_depth_independent() {
+        // The whole point: a step frame's size depends only on the delta
+        // call, never on trajectory depth.
+        let call = ToolCall::new("bash", "make test");
+        let mut shallow = Vec::new();
+        enc_cursor_step(&mut shallow, "t", 1, &call);
+        let mut deep = Vec::new();
+        enc_cursor_step(&mut deep, "t", u64::MAX, &call);
+        assert!(deep.len() <= shallow.len() + 9, "cursor id is the only variable part");
+    }
+
+    #[test]
+    fn truncated_and_malformed_frames_never_panic() {
+        let mut buf = Vec::new();
+        enc_insert(&mut buf, "task", &[(ToolCall::new("a", "b"), ToolResult::new("r", 1.0))]);
+        for cut in 0..buf.len() {
+            let mut r = match Reader::request(&buf[..cut]) {
+                Some(r) => r,
+                None => continue,
+            };
+            // Decoding a truncated frame returns None somewhere, never panics.
+            let _ = r
+                .str()
+                .and_then(|_| r.varint())
+                .and_then(|_| r.call())
+                .and_then(|_| r.result());
+        }
+        assert_eq!(dec_lookup_resp(&[]), None);
+        assert_eq!(dec_lookup_resp(&[9, 9, 9]), None);
+        assert_eq!(dec_step_resp(&[TAG_HIT]), None);
+        assert_eq!(dec_u64_resp(&[0x80]), None);
+        // Trailing garbage is rejected by strict decoders.
+        let mut buf = Vec::new();
+        enc_bool_resp(&mut buf, true);
+        buf.push(0);
+        assert_eq!(dec_bool_resp(&buf), None);
+    }
+
+    #[test]
+    fn json_bodies_never_sniff_as_binary() {
+        assert!(!is_binary(b"{\"task\":\"t\"}"));
+        assert!(!is_binary(b""));
+        let mut buf = Vec::new();
+        enc_release(&mut buf, "t", 3);
+        assert!(is_binary(&buf));
+    }
+}

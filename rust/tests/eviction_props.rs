@@ -18,7 +18,7 @@ use std::sync::atomic::Ordering;
 use std::sync::Arc;
 
 use tvcache::cache::{
-    enforce_budget, CacheBackend, EvictionPolicy, Lookup, ServiceConfig,
+    enforce_budget, CacheBackend, CursorStep, EvictionPolicy, Lookup, ServiceConfig,
     ShardedCacheService, SnapshotRef, TaskCache, Tcg, ToolCall, ToolResult, ROOT,
 };
 use tvcache::sandbox::SandboxSnapshot;
@@ -294,6 +294,181 @@ fn crash_mid_spill_recovers_to_consistent_tcg() {
         std::fs::remove_dir_all(&work).unwrap();
     }
     std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// A cursor whose node is *spilled* keeps working — spilling demotes the
+/// payload, never the TCG node — and every subsequent step must agree with
+/// the full-prefix lookup node-for-node (no stale hit, no lost resume).
+#[test]
+fn cursor_survives_spill_and_matches_full_lookup() {
+    let dir = tmpdir("cursor-spill");
+    let cfg = ServiceConfig {
+        shards: 2,
+        shard_byte_budget: Some(50), // below one payload: spill everything
+        spill_dir: Some(dir.clone()),
+        background: false,
+        ..Default::default()
+    };
+    let svc =
+        ShardedCacheService::with_config(cfg, Arc::new(TaskCache::with_defaults)).unwrap();
+    let calls: Vec<ToolCall> = (0..4).map(|i| call(format!("c{i}"))).collect();
+    let traj: Vec<(ToolCall, ToolResult)> = calls
+        .iter()
+        .map(|c| (c.clone(), ToolResult::new(format!("r-{}", c.args), 2.0)))
+        .collect();
+    let node = svc.insert("t", &traj);
+    assert!(svc.store_snapshot("t", node, snap_bytes(100)) > 0);
+
+    let cur = svc.cursor_open("t");
+    for c in &calls[..2] {
+        assert!(svc.cursor_step("t", cur, c).is_hit(), "warm prefix must hit");
+    }
+    svc.drain_over_budget();
+    assert!(svc.spilled_count() > 0, "the budget must actually force the spill");
+
+    // The remaining steps still hit, identical to the full-prefix walk.
+    for (i, c) in calls[2..].iter().enumerate() {
+        let full = svc.lookup("t", &calls[..2 + i + 1]);
+        match (svc.cursor_step("t", cur, c), full) {
+            (CursorStep::Hit { node: a, result: ra }, Lookup::Hit { node: b, result: rb }) => {
+                assert_eq!(a, b, "spill changed the cursor's position");
+                assert_eq!(ra, rb, "spill changed a cursor-served result");
+            }
+            (s, f) => panic!("outcomes diverged after spill: {s:?} vs {f:?}"),
+        }
+    }
+    // A divergent step still offers the (spilled) snapshot, and it faults in.
+    match svc.cursor_step("t", cur, &call("divergent".into())) {
+        CursorStep::Miss(m) => {
+            let (rnode, sref, _) = m.resume.expect("spilled node must still offer resume");
+            assert_eq!(rnode, node);
+            assert!(svc.fetch_snapshot("t", sref.id).is_some(), "fault-in failed");
+            svc.release("t", rnode);
+        }
+        s => panic!("expected miss, got {s:?}"),
+    }
+    svc.cursor_close("t", cur);
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// A cursor whose node is destroyed (subtree removal — what destroy-mode
+/// background eviction and the count budget's leaf eviction do) must report
+/// `Invalid` and never a stale hit; a full-prefix fallback then gives the
+/// ground truth and a re-seek re-arms the cursor.
+#[test]
+fn cursor_invalidated_by_node_removal_never_serves_stale() {
+    let svc = ShardedCacheService::new(2);
+    let calls: Vec<ToolCall> = (0..3).map(|i| call(format!("c{i}"))).collect();
+    let traj: Vec<(ToolCall, ToolResult)> = calls
+        .iter()
+        .map(|c| (c.clone(), ToolResult::new(format!("r-{}", c.args), 2.0)))
+        .collect();
+    svc.insert("t", &traj);
+    let cur = svc.cursor_open("t");
+    for c in &calls {
+        assert!(svc.cursor_step("t", cur, c).is_hit());
+    }
+    // Remove the subtree holding the cursor (depth-2 node: kills 2 and 3).
+    let mid = match svc.lookup("t", &calls[..2]) {
+        Lookup::Hit { node, .. } => node,
+        m => panic!("{m:?}"),
+    };
+    assert!(svc.evict_node("t", mid));
+    // Every further step — hit-shaped or not — must be Invalid.
+    assert_eq!(svc.cursor_step("t", cur, &call("c2".into())), CursorStep::Invalid);
+    assert_eq!(svc.cursor_step("t", cur, &call("anything".into())), CursorStep::Invalid);
+    // The fallback full-prefix lookup reports the truth: only c0 remains.
+    match svc.lookup("t", &calls) {
+        Lookup::Miss(m) => assert_eq!(m.matched_calls, 1),
+        h => panic!("evicted chain cannot hit: {h:?}"),
+    }
+    // Re-seek onto the surviving ancestor re-arms the cursor.
+    let root_child = match svc.lookup("t", &calls[..1]) {
+        Lookup::Hit { node, .. } => node,
+        m => panic!("{m:?}"),
+    };
+    assert!(svc.cursor_seek("t", cur, root_child, 1));
+    assert!(matches!(svc.cursor_step("t", cur, &call("c1".into())), CursorStep::Miss(_)));
+    svc.cursor_close("t", cur);
+}
+
+/// 8 threads of cursor-driven rollouts against background eviction plus
+/// hostile subtree removals: hits must always return the recorded value
+/// (never stale garbage), invalidations must degrade cleanly, and no pin
+/// or cursor may leak.
+#[test]
+fn stress_cursors_under_background_eviction_and_removal() {
+    let cfg = ServiceConfig {
+        shards: 4,
+        shard_byte_budget: Some(400),
+        background: true,
+        ..Default::default()
+    };
+    let svc = Arc::new(
+        ShardedCacheService::with_config(cfg, Arc::new(TaskCache::with_defaults)).unwrap(),
+    );
+    let handles: Vec<_> = (0..8)
+        .map(|t| {
+            let svc = Arc::clone(&svc);
+            std::thread::spawn(move || {
+                for i in 0..300usize {
+                    let task = format!("task-{}", (t + i) % 8);
+                    let depth = 1 + (i % 3);
+                    let calls: Vec<ToolCall> =
+                        (0..depth).map(|d| call(format!("step-{d}-{}", i % 5))).collect();
+                    let traj: Vec<(ToolCall, ToolResult)> = calls
+                        .iter()
+                        .map(|c| (c.clone(), ToolResult::new("r", 2.0)))
+                        .collect();
+                    let node = svc.insert(&task, &traj);
+                    if i % 2 == 0 {
+                        svc.store_snapshot(&task, node, snap_bytes(100));
+                    }
+                    // Cursor walk of the same trajectory under churn.
+                    let cur = svc.cursor_open(&task);
+                    for c in &calls {
+                        match svc.cursor_step(&task, cur, c) {
+                            CursorStep::Hit { result, .. } => {
+                                assert_eq!(result.output, "r", "stale hit under churn");
+                            }
+                            CursorStep::Miss(m) => {
+                                if let Some((rnode, _, _)) = m.resume {
+                                    svc.release(&task, rnode);
+                                }
+                                if svc.cursor_record(&task, cur, c, &ToolResult::new("r", 2.0))
+                                    == 0
+                                {
+                                    break; // invalidated mid-walk: a real
+                                           // executor would fall back
+                                }
+                            }
+                            CursorStep::Invalid => break,
+                        }
+                    }
+                    svc.cursor_close(&task, cur);
+                    // Hostile churn: remove arbitrary subtrees.
+                    if i % 7 == 0 {
+                        let _ = svc.evict_node(&task, 1 + (i % 5));
+                    }
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().expect("cursor stress thread panicked");
+    }
+    svc.quiesce();
+    assert_eq!(svc.cursor_count(), 0, "cursors leaked");
+    for task in svc.task_ids() {
+        assert_eq!(svc.task(&task).pinned_node_count(), 0, "{task} leaked a pin");
+        for (_, sref) in svc.task(&task).snapshotted_nodes() {
+            assert!(
+                svc.fetch_snapshot(&task, sref.id).is_some(),
+                "TCG references snapshot {} the store no longer has",
+                sref.id
+            );
+        }
+    }
 }
 
 /// 8 threads × mixed ops against a *destroy-mode* (no spill dir) background

@@ -8,7 +8,7 @@
 use std::sync::Arc;
 
 use tvcache::cache::{
-    BackendStats, CacheBackend, CacheStats, Lookup, LpmConfig, NodeId,
+    BackendStats, CacheBackend, CacheStats, CursorStep, Lookup, LpmConfig, NodeId,
     ShardedCacheService, SnapshotCosts, TaskCache, ToolCall, ToolResult,
 };
 use tvcache::client::{ExecutorConfig, RemoteBinding, ToolCallExecutor};
@@ -19,7 +19,7 @@ use tvcache::util::rng::Rng;
 fn bash(cmd: &str) -> ToolCall {
     let stateless =
         cmd.starts_with("cat ") || cmd.starts_with("ls") || cmd.starts_with("grep ");
-    ToolCall { tool: "bash".into(), args: cmd.into(), mutates_state: !stateless }
+    ToolCall::with_flag("bash", cmd, !stateless)
 }
 
 /// Remote executor over a real HTTP server: second rollout hits, divergent
@@ -135,6 +135,187 @@ fn backend_parity_inprocess_and_http() {
     let (server, _svc) = serve("127.0.0.1:0", 4).unwrap();
     let remote = RemoteBinding::connect(server.addr());
     exercise_backend(&remote, "parity-task");
+}
+
+/// The cursor acceptance contract: identical step/record/seek behaviour —
+/// including resume offers and statistics — over both backends.
+fn exercise_cursor_backend(backend: &dyn CacheBackend, task: &str) {
+    let traj: Vec<(ToolCall, ToolResult)> = [("git clone repo", "ok"), ("make", "build OK")]
+        .iter()
+        .map(|(c, r)| (bash(c), ToolResult::new(*r, 5.0)))
+        .collect();
+    let node = backend.insert(task, &traj);
+    let snap = SandboxSnapshot {
+        bytes: b"cursor-state".to_vec(),
+        serialize_cost: 0.2,
+        restore_cost: 0.4,
+    };
+    let snap_id = backend.store_snapshot(task, node, snap);
+    assert!(snap_id > 0);
+
+    let cur = backend.cursor_open(task);
+    assert!(cur != 0, "both backends must support cursors");
+
+    // Delta steps along the recorded chain: hits, O(1) each.
+    match backend.cursor_step(task, cur, &bash("git clone repo")) {
+        CursorStep::Hit { result, .. } => assert_eq!(result.output, "ok"),
+        s => panic!("expected hit, got {s:?}"),
+    }
+    match backend.cursor_step(task, cur, &bash("make")) {
+        CursorStep::Hit { node: n, result } => {
+            assert_eq!(n, node);
+            assert_eq!(result.output, "build OK");
+        }
+        s => panic!("expected hit, got {s:?}"),
+    }
+
+    // Divergent delta: a miss whose resume offer matches the full-prefix
+    // walk's (the cursor node *is* the LPM match).
+    match backend.cursor_step(task, cur, &bash("make test")) {
+        CursorStep::Miss(m) => {
+            assert_eq!(m.matched_node, node);
+            assert_eq!(m.matched_calls, 2);
+            let (rnode, sref, replay_from) = m.resume.expect("snapshot offered");
+            assert_eq!((rnode, sref.id, replay_from), (node, snap_id, 2));
+            backend.release(task, rnode);
+        }
+        s => panic!("expected miss, got {s:?}"),
+    }
+
+    // Record the executed delta; the extended chain is immediately live.
+    let n2 =
+        backend.cursor_record(task, cur, &bash("make test"), &ToolResult::new("12 passed", 7.0));
+    assert!(n2 != 0 && n2 != node, "record must create the new node");
+
+    // Next divergent step misses at the *new* node, with the ancestor's
+    // snapshot as the resume offer.
+    match backend.cursor_step(task, cur, &bash("echo done > s.txt")) {
+        CursorStep::Miss(m) => {
+            assert_eq!(m.matched_node, n2);
+            assert_eq!(m.matched_calls, 3);
+            let (rnode, sref, replay_from) = m.resume.expect("ancestor snapshot offered");
+            assert_eq!((rnode, sref.id, replay_from), (node, snap_id, 2));
+            backend.release(task, rnode);
+        }
+        s => panic!("expected miss, got {s:?}"),
+    }
+
+    // Seek back to the root replays the chain as hits.
+    assert!(backend.cursor_seek(task, cur, 0, 0));
+    match backend.cursor_step(task, cur, &bash("git clone repo")) {
+        CursorStep::Hit { result, .. } => assert_eq!(result.output, "ok"),
+        s => panic!("expected hit after seek, got {s:?}"),
+    }
+    backend.cursor_close(task, cur);
+
+    // Cursor traffic flows through the same statistics as full lookups.
+    let stats = backend.stats(task);
+    assert_eq!(stats.lookups, 5);
+    assert_eq!(stats.hits, 3);
+    assert_eq!(stats.partial_hits, 2);
+    assert_eq!(stats.snapshot_resumes, 2);
+    assert!(stats.inserts >= 3);
+}
+
+#[test]
+fn backend_parity_cursors_inprocess_and_http() {
+    let sharded = ShardedCacheService::new(4);
+    exercise_cursor_backend(&sharded, "cursor-parity");
+
+    let (server, _svc) = serve("127.0.0.1:0", 4).unwrap();
+    let remote = RemoteBinding::connect(server.addr());
+    exercise_cursor_backend(&remote, "cursor-parity");
+}
+
+/// Forced cursor invalidation mid-rollout, on both backends: after every
+/// call, the node the cursor pins is evicted server-side (subtree removal),
+/// so the next step reports `Invalid` and the executor must fall back to a
+/// full-prefix lookup + insert + re-seek — outputs must equal a clean
+/// cacheless execution, and no pin may leak.
+fn exercise_cursor_invalidation_mid_rollout(
+    backend: Arc<dyn CacheBackend>,
+    evict: &dyn Fn(&str, usize) -> bool,
+    pinned: &dyn Fn(&str) -> usize,
+    task: &str,
+) {
+    let factory = Arc::new(TerminalFactory { medium: false });
+    let script =
+        ["pip install libdep1", "make", "echo go > f.txt", "make test", "cat f.txt"];
+
+    // Rollout 1 populates the cache (cursor path).
+    let mut warm = ToolCallExecutor::new(
+        Arc::clone(&backend),
+        task,
+        Arc::clone(&factory) as Arc<_>,
+        13,
+        ExecutorConfig::default(),
+    );
+    for c in script {
+        warm.call(bash(c));
+    }
+    warm.finish();
+
+    // Rollout 2: evict the cursor's node after every call.
+    let mut exec = ToolCallExecutor::new(
+        Arc::clone(&backend),
+        task,
+        Arc::clone(&factory) as Arc<_>,
+        13,
+        ExecutorConfig::default(),
+    );
+    let mut reference = factory.create(13);
+    let mut evictions = 0;
+    for (i, c) in script.iter().enumerate() {
+        let got = exec.call(bash(c)).result.output;
+        let want = reference.execute(&bash(c)).output;
+        assert_eq!(got, want, "{task}: cursor invalidation corrupted call {i} ({c})");
+        // Locate the rollout's current TCG position via a full-prefix
+        // lookup, then remove its subtree out from under the cursor.
+        let q: Vec<ToolCall> = script[..=i].iter().map(|s| bash(s)).collect();
+        match backend.lookup(task, &q) {
+            Lookup::Hit { node, .. } => {
+                if evict(task, node) {
+                    evictions += 1;
+                }
+            }
+            Lookup::Miss(m) => {
+                // Unexpected here, but a miss's resume offer pins on the
+                // in-process backend: hand the pin back.
+                if let Some((rnode, _, _)) = m.resume {
+                    backend.release(task, rnode);
+                }
+            }
+        }
+    }
+    exec.finish();
+    assert!(evictions >= 3, "{task}: the test must actually force invalidations");
+    assert_eq!(pinned(task), 0, "{task}: invalidation fallback leaked a pin");
+}
+
+#[test]
+fn cursor_invalidation_mid_rollout_on_both_backends() {
+    let sharded = Arc::new(ShardedCacheService::new(2));
+    {
+        let white = Arc::clone(&sharded);
+        let pin_svc = Arc::clone(&sharded);
+        exercise_cursor_invalidation_mid_rollout(
+            Arc::clone(&sharded) as Arc<dyn CacheBackend>,
+            &move |task, node| white.evict_node(task, node),
+            &move |task| pin_svc.task(task).pinned_node_count(),
+            "inval-inproc",
+        );
+    }
+
+    let (server, svc) = serve("127.0.0.1:0", 4).unwrap();
+    let binding = Arc::new(RemoteBinding::connect(server.addr()));
+    let white = Arc::clone(&svc);
+    let pin_svc = Arc::clone(&svc);
+    exercise_cursor_invalidation_mid_rollout(
+        binding as Arc<dyn CacheBackend>,
+        &move |task, node| white.evict_node(task, node),
+        &move |task| pin_svc.task(task).pinned_node_count(),
+        "inval-http",
+    );
 }
 
 /// Persist from one backend, warm-start another, and report what the
