@@ -4,7 +4,7 @@
 //! (§3.1). Paid literally — a root-to-leaf TCG walk per call, a
 //! JSON-serialized full prefix per request — that makes the per-call cost
 //! O(L) and the per-rollout wire traffic O(L²). Stateful lookup cursors
-//! (`CacheBackend::cursor_open/step/record`) pin the rollout's TCG
+//! (`SessionBackend::cursor_open/step/record`) pin the rollout's TCG
 //! position server-side so each call ships only the delta: O(1) work and
 //! bytes per call regardless of depth.
 //!
@@ -18,18 +18,26 @@
 //!    binary cursor protocol vs the JSON full-prefix protocol. Cursor
 //!    bytes are O(L); JSON bytes are O(L²) — the bench asserts ≥5× fewer.
 //!
+//! 3. **Turn batching** (session API v2): exact frame + byte accounting
+//!    for a depth-32 rollout with 4 speculative stateless probes per
+//!    reasoning turn — per-call cursor protocol (5+ frames/turn) vs one
+//!    `/session_turn` frame per turn. Asserts ≤ 1 round-trip per warm
+//!    turn batched and ≥ 5 per-call.
+//!
 //! `TVCACHE_BENCH_SMOKE=1` shrinks iteration counts and relaxes the
-//! timing assertions for CI smoke runs (the byte accounting is exact and
-//! stays asserted). Results are appended as one JSON line to `BENCH_3.json`
-//! (override the path with `TVCACHE_BENCH_OUT`) so successive PRs build a
-//! machine-readable perf trajectory.
+//! timing assertions for CI smoke runs (the byte and frame accounting is
+//! exact and stays asserted). Results are appended as one JSON line to
+//! `BENCH_4.json` (override the path with `TVCACHE_BENCH_OUT`) so
+//! successive PRs build a machine-readable perf trajectory.
 
 use std::io::Write as _;
 use std::sync::Arc;
 use std::time::Instant;
 
 use tvcache::bench::print_table;
-use tvcache::cache::{CacheBackend, ShardedCacheService, ToolCall, ToolResult};
+use tvcache::cache::{
+    CacheBackend, SessionBackend, ShardedCacheService, ToolCall, ToolResult, TurnBatch, TurnOp,
+};
 use tvcache::metrics::CsvWriter;
 use tvcache::server::lookup_body;
 use tvcache::wire;
@@ -38,6 +46,9 @@ const TASK: &str = "fig10-task";
 const MAX_DEPTH: usize = 128;
 const DEPTHS: [usize; 8] = [1, 2, 4, 8, 16, 32, 64, 128];
 const BYTES_DEPTH: usize = 32;
+/// Speculative stateless probes per reasoning turn in the batching section
+/// (the acceptance scenario: 4 probes + 1 stateful step per turn).
+const PROBES_PER_TURN: usize = 4;
 
 fn call_at(d: usize) -> ToolCall {
     ToolCall::new("bash", format!("step-{d} --with --some --realistic args"))
@@ -119,6 +130,98 @@ fn wire_bytes(depth: usize) -> (usize, usize) {
     (json_bytes, bin_bytes)
 }
 
+fn probe_at(p: usize) -> ToolCall {
+    ToolCall::stateless("bash", format!("cat status-{p}.txt"))
+}
+
+/// Exact wire frames + bytes for a depth-L rollout with
+/// [`PROBES_PER_TURN`] speculative probes per reasoning turn, per-call
+/// cursor protocol vs `/session_turn` batching. Returns
+/// `(percall_frames, percall_bytes, batch_frames, batch_bytes)`.
+///
+/// Per-call (the PR 3 protocol): every probe is its own `/cursor_step`
+/// frame, the step another, a miss's record one more — ≥ 5 round trips per
+/// warm turn at 4 probes. Batched: the probes and the turn's stateful op
+/// share a single `/session_turn` frame (the session open rides the first
+/// frame; on a miss the record is its own frame, since its result only
+/// exists after client-side execution).
+fn turn_traffic(depth: usize, warm: bool) -> (usize, usize, usize, usize) {
+    let mut buf = Vec::new();
+    let (mut pc_frames, mut pc_bytes) = (0usize, 0usize);
+    let (mut b_frames, mut b_bytes) = (0usize, 0usize);
+
+    // Per-call path pays an explicit open round trip.
+    buf.clear();
+    wire::enc_cursor_open(&mut buf, TASK);
+    pc_frames += 1;
+    pc_bytes += buf.len();
+
+    for d in 0..depth {
+        let call = call_at(d);
+        let probes: Vec<ToolCall> = (0..PROBES_PER_TURN).map(probe_at).collect();
+
+        // Per-call: each probe and the step is one frame.
+        for p in &probes {
+            buf.clear();
+            wire::enc_cursor_step(&mut buf, TASK, 1, p);
+            pc_frames += 1;
+            pc_bytes += buf.len();
+        }
+        buf.clear();
+        wire::enc_cursor_step(&mut buf, TASK, 1, &call);
+        pc_frames += 1;
+        pc_bytes += buf.len();
+
+        // Batched: one turn frame (cursor 0 on the first = open piggyback).
+        buf.clear();
+        let cursor = if d == 0 { 0 } else { 1 };
+        wire::enc_turn(&mut buf, TASK, cursor, &TurnBatch {
+            probes,
+            op: TurnOp::Step(call.clone()),
+        });
+        b_frames += 1;
+        b_bytes += buf.len();
+
+        if !warm {
+            // Cold turn: the executed delta is recorded — one more frame
+            // on both paths.
+            let result = result_at(d);
+            buf.clear();
+            wire::enc_cursor_record(&mut buf, TASK, 1, &call, &result);
+            pc_frames += 1;
+            pc_bytes += buf.len();
+            buf.clear();
+            wire::enc_turn(&mut buf, TASK, 1, &TurnBatch {
+                probes: Vec::new(),
+                op: TurnOp::Record(call, result),
+            });
+            b_frames += 1;
+            b_bytes += buf.len();
+        }
+    }
+    (pc_frames, pc_bytes, b_frames, b_bytes)
+}
+
+/// End-to-end sanity for the batched path: a warm depth-`depth` rollout
+/// with probes per turn, driven through the real in-process service; every
+/// step must hit and the probes must answer.
+fn drive_batched_session(svc: &ShardedCacheService, depth: usize) {
+    let mut cursor = 0u64;
+    for d in 0..depth {
+        let reply = svc.session_turn(TASK, cursor, &TurnBatch {
+            probes: (0..PROBES_PER_TURN).map(probe_at).collect(),
+            op: TurnOp::Step(call_at(d)),
+        });
+        assert!(reply.cursor != 0, "turn frame must open/keep the session");
+        cursor = reply.cursor;
+        assert!(
+            matches!(reply.step, Some(tvcache::cache::CursorStep::Hit { .. })),
+            "warm chain must hit at depth {d}"
+        );
+    }
+    svc.cursor_close(TASK, cursor);
+}
+
 /// The legacy `/put` JSON body (what `RemoteBinding::insert` used to send).
 fn json_put_body(traj: &[(ToolCall, ToolResult)]) -> String {
     use tvcache::util::json::Json;
@@ -161,6 +264,18 @@ fn main() {
     let (json_bytes, bin_bytes) = wire_bytes(BYTES_DEPTH);
     let byte_ratio = json_bytes as f64 / bin_bytes as f64;
 
+    // Turn-level batching (session API v2): a depth-32 rollout with 4
+    // speculative probes per reasoning turn, per-call cursor protocol vs
+    // one `/session_turn` frame per turn.
+    let (pc_frames_warm, pc_bytes_warm, b_frames_warm, b_bytes_warm) =
+        turn_traffic(BYTES_DEPTH, true);
+    let (pc_frames_cold, pc_bytes_cold, b_frames_cold, b_bytes_cold) =
+        turn_traffic(BYTES_DEPTH, false);
+    let warm_rt_per_turn = b_frames_warm as f64 / BYTES_DEPTH as f64;
+    let pc_rt_per_turn = pc_frames_warm as f64 / BYTES_DEPTH as f64;
+    // And prove the batched path actually serves the same warm rollout.
+    drive_batched_session(&svc, BYTES_DEPTH);
+
     let mut rows = Vec::new();
     let mut csv = CsvWriter::new(&["depth", "cursor_ns_per_call", "legacy_ns_per_call"]);
     for (i, &depth) in DEPTHS.iter().enumerate() {
@@ -180,17 +295,33 @@ fn main() {
         "\nwire bytes, depth-{BYTES_DEPTH} all-miss rollout: JSON {json_bytes} B vs binary \
          cursor {bin_bytes} B  ({byte_ratio:.1}x fewer)"
     );
+    println!(
+        "\nturn batching, depth-{BYTES_DEPTH} rollout, {PROBES_PER_TURN} probes/turn:\n\
+         \x20 warm: per-call {pc_frames_warm} frames / {pc_bytes_warm} B  vs  \
+         /session_turn {b_frames_warm} frames / {b_bytes_warm} B  \
+         ({pc_rt_per_turn:.2} -> {warm_rt_per_turn:.2} round-trips per reasoning turn)\n\
+         \x20 cold: per-call {pc_frames_cold} frames / {pc_bytes_cold} B  vs  \
+         /session_turn {b_frames_cold} frames / {b_bytes_cold} B"
+    );
     csv.write("results/fig10_lookup_depth.csv").unwrap();
     println!("series -> results/fig10_lookup_depth.csv");
 
     // Machine-readable perf trajectory for future PRs.
-    let out = std::env::var("TVCACHE_BENCH_OUT").unwrap_or_else(|_| "../BENCH_3.json".into());
+    let out = std::env::var("TVCACHE_BENCH_OUT").unwrap_or_else(|_| "../BENCH_4.json".into());
     let line = format!(
         "{{\"bench\":\"fig10_lookup_depth\",\"mode\":\"{}\",\
          \"cursor_ns_d1\":{:.1},\"cursor_ns_d128\":{:.1},\
          \"legacy_ns_d1\":{:.1},\"legacy_ns_d128\":{:.1},\
          \"json_bytes_d32\":{json_bytes},\"bin_bytes_d32\":{bin_bytes},\
-         \"byte_ratio\":{byte_ratio:.2}}}",
+         \"byte_ratio\":{byte_ratio:.2},\
+         \"probes_per_turn\":{PROBES_PER_TURN},\
+         \"percall_frames_warm_d32\":{pc_frames_warm},\
+         \"batch_frames_warm_d32\":{b_frames_warm},\
+         \"percall_bytes_warm_d32\":{pc_bytes_warm},\
+         \"batch_bytes_warm_d32\":{b_bytes_warm},\
+         \"percall_frames_cold_d32\":{pc_frames_cold},\
+         \"batch_frames_cold_d32\":{b_frames_cold},\
+         \"rt_per_turn_warm\":{warm_rt_per_turn:.3}}}",
         if smoke { "smoke" } else { "full" },
         cursor_ns[0],
         cursor_ns[DEPTHS.len() - 1],
@@ -210,6 +341,23 @@ fn main() {
         byte_ratio >= 5.0,
         "binary cursor protocol must cut depth-{BYTES_DEPTH} rollout bytes ≥5x \
          (got {byte_ratio:.2}x)"
+    );
+    // Acceptance (PR 4): a depth-32 rollout with 4 speculative probes per
+    // turn issues ≤ 1 wire round-trip per reasoning turn batched, vs ≥ 5
+    // on the per-call protocol.
+    assert!(
+        warm_rt_per_turn <= 1.0,
+        "turn batching must cost ≤ 1 round-trip per reasoning turn \
+         (got {warm_rt_per_turn:.2})"
+    );
+    assert!(
+        pc_rt_per_turn >= 5.0,
+        "per-call baseline sanity: {PROBES_PER_TURN} probes + 1 step must be ≥ 5 \
+         round-trips per turn (got {pc_rt_per_turn:.2})"
+    );
+    assert!(
+        b_bytes_cold < pc_bytes_cold && b_bytes_warm < pc_bytes_warm,
+        "turn frames must not cost more bytes than the per-call frames they replace"
     );
 
     // Latency shape. The cursor path does identical O(1) work per step at

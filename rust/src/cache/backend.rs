@@ -1,8 +1,11 @@
-//! The `CacheBackend` trait: the single access surface for TVCACHE.
+//! The cache access surface for TVCACHE: the narrow per-call
+//! [`CacheBackend`] core plus the [`SessionBackend`] extension (capability
+//! negotiation, stateful lookup cursors, turn-level batched ops).
 //!
-//! Everything that talks to the cache — the `ToolCallExecutor`, the HTTP
-//! server handlers, the simulated and concurrent training loops, and the
-//! figure benches — programs against this trait. Two implementations ship:
+//! Everything that talks to the cache — the `ToolCallExecutor` (through
+//! its owned `RolloutSession`), the HTTP server handlers, the simulated
+//! and concurrent training loops, and the figure benches — programs
+//! against these traits. Two implementations ship:
 //!
 //! * [`super::ShardedCacheService`] — in-process, task-id-sharded (§4.5):
 //!   N independent shards, each owning its own task map *and* its own
@@ -83,7 +86,118 @@ impl BackendStats {
     }
 }
 
-/// The cache access surface (Figure 4's client↔service API as one trait).
+/// Capability set a backend advertises (the `/capabilities` handshake).
+///
+/// Negotiated **once** — at session open for the HTTP binding, statically
+/// for the in-process service — instead of magic-byte sniffing or
+/// try-and-fall-back probing on every request. A backend that advertises
+/// nothing (the default for decorators and legacy servers that 404 the
+/// handshake) keeps every caller on the per-call full-prefix path, which
+/// every [`CacheBackend`] supports.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Capabilities {
+    /// Understands the binary wire codec on the hot endpoints.
+    pub binary: bool,
+    /// Supports stateful lookup cursors (`cursor_open` returns real ids).
+    pub cursors: bool,
+    /// Supports turn-level batched ops (`session_turn`, `/session_turn`).
+    pub turn_batch: bool,
+}
+
+impl Capabilities {
+    /// Protocol generation carried by the handshake frames.
+    pub const PROTO_V2: u64 = 2;
+
+    /// Everything this codebase implements (the v2 server / in-process
+    /// service).
+    pub const V2: Capabilities =
+        Capabilities { binary: true, cursors: true, turn_batch: true };
+
+    /// What a pre-handshake server is assumed to speak when `/capabilities`
+    /// fails: binary + cursors existed before negotiation (magic-byte
+    /// sniffed), turn batching did not.
+    pub const LEGACY: Capabilities =
+        Capabilities { binary: true, cursors: true, turn_batch: false };
+
+    /// A backend that only implements the narrow [`CacheBackend`] core.
+    pub const CORE: Capabilities =
+        Capabilities { binary: false, cursors: false, turn_batch: false };
+}
+
+/// The stateful half of a [`TurnBatch`]: at most one cursor step *or*
+/// record per turn frame (a record's result is only known after client-side
+/// execution, so a single turn can never carry both for the same call).
+#[derive(Debug, Clone, PartialEq)]
+pub enum TurnOp {
+    /// Probe-only frame (no stateful op this turn).
+    None,
+    /// Incremental lookup of the turn's delta call (`cursor_step`).
+    Step(ToolCall),
+    /// Record the executed delta and advance (`cursor_record`).
+    Record(ToolCall, ToolResult),
+}
+
+/// One reasoning turn's batched cache traffic: several speculative
+/// *stateless* probes plus at most one stateful step/record, shipped as a
+/// single `/session_turn` wire frame instead of N per-call round trips.
+///
+/// Probes are evaluated at the session's position *after* the op applies
+/// and never advance the cursor, touch statistics, or pin resume offers —
+/// they are pure hints. An unanswered probe (backend without native
+/// batching) simply means the later real call does its own lookup, so
+/// hit/miss decisions are identical with probes on or off.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TurnBatch {
+    /// Speculative stateless lookups (mutating calls are never probed).
+    pub probes: Vec<ToolCall>,
+    pub op: TurnOp,
+}
+
+/// Reply to a [`TurnBatch`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct TurnReply {
+    /// The session id the ops ran under (a frame sent with cursor 0 opens a
+    /// session and returns its id here). 0 = the backend refused or does
+    /// not support sessions — the caller falls back to the per-call path.
+    pub cursor: u64,
+    /// Per probe: the cached stateless result, or `None` (miss *or*
+    /// unanswered — the two are deliberately indistinguishable: a probe
+    /// miss must never suppress the later real lookup).
+    pub probes: Vec<Option<ToolResult>>,
+    /// Outcome of a [`TurnOp::Step`], if the batch carried one.
+    pub step: Option<CursorStep>,
+    /// Node id of a [`TurnOp::Record`], if the batch carried one (0 =
+    /// failed; fall back to a full insert).
+    pub recorded: Option<NodeId>,
+}
+
+impl TurnReply {
+    /// The "no session" reply: every op unanswered, caller falls back.
+    pub fn refused(batch: &TurnBatch) -> TurnReply {
+        TurnReply {
+            cursor: 0,
+            probes: vec![None; batch.probes.len()],
+            step: match batch.op {
+                TurnOp::Step(_) => Some(CursorStep::Invalid),
+                _ => None,
+            },
+            recorded: match batch.op {
+                TurnOp::Record(..) => Some(0),
+                _ => None,
+            },
+        }
+    }
+}
+
+/// The narrow per-call cache surface (Figure 4's client↔service API).
+///
+/// Everything here is a self-contained request: no server-side state ties
+/// one call to the next, so any decorator or transport can implement it.
+/// The stateful rollout-scoped surface (cursors, turn batching, capability
+/// negotiation) lives on the [`SessionBackend`] extension; rollout code
+/// should not drive these methods by hand — open a
+/// [`crate::client::RolloutSession`] instead and let the handle sequence
+/// the lifecycle.
 pub trait CacheBackend: Send + Sync {
     /// §3.2 LPM lookup of `q` (last element = the call being looked up).
     /// A miss with a resume offer may pin the resume node (§3.4); the
@@ -98,60 +212,6 @@ pub trait CacheBackend: Send + Sync {
     /// Upsert an executed trajectory (`/put`); returns the id of the final
     /// state-mutating node on the path.
     fn insert(&self, task: &str, traj: &[(ToolCall, ToolResult)]) -> NodeId;
-
-    // ---- stateful lookup cursors (the O(1)-per-call hot path) ----
-    //
-    // A rollout opens one cursor, then sends only the *delta* — the single
-    // new `ToolCall` — per lookup instead of its full history: the backend
-    // pins the rollout's TCG position, so a step is one child-index probe
-    // and the wire carries O(1) bytes per call rather than O(L). Eviction
-    // of a cursor's node invalidates it safely: the next step reports
-    // `CursorStep::Invalid` and the caller falls back to the full-prefix
-    // `lookup`/`insert` pair, then re-seeks. The default implementations
-    // make cursors an *optional capability*: a backend (or decorator) that
-    // does not override them reports "unsupported" (`cursor_open` → 0) and
-    // callers transparently stay on the full-prefix path.
-
-    /// Open a cursor at the TCG root for a new rollout of `task`.
-    /// Returns 0 when the backend does not support cursors (or the
-    /// transport failed) — the caller must then use full-prefix lookups.
-    fn cursor_open(&self, _task: &str) -> u64 {
-        0
-    }
-
-    /// Incremental lookup of the single delta `call` at the cursor's
-    /// position. Hit/miss payloads (including the §3.4 resume-offer pin
-    /// contract) are identical to [`CacheBackend::lookup`] of the full
-    /// prefix; `Invalid` means the cursor lost its node and the caller
-    /// must fall back (and may [`CacheBackend::cursor_seek`] afterwards).
-    fn cursor_step(&self, _task: &str, _cursor: u64, _call: &ToolCall) -> CursorStep {
-        CursorStep::Invalid
-    }
-
-    /// Record the single executed delta at the cursor's position and
-    /// advance it — the incremental counterpart of
-    /// [`CacheBackend::insert`]. Returns the final state-mutating node id
-    /// (the new cursor position), or 0 when the cursor is invalid / the
-    /// transport failed (fall back to a full insert + seek).
-    fn cursor_record(
-        &self,
-        _task: &str,
-        _cursor: u64,
-        _call: &ToolCall,
-        _result: &ToolResult,
-    ) -> NodeId {
-        0
-    }
-
-    /// Re-seat a cursor on `node` with `steps` calls consumed — used after
-    /// a fallback full-prefix lookup/insert re-established the position.
-    /// Returns `false` when the node is gone or the cursor is unknown.
-    fn cursor_seek(&self, _task: &str, _cursor: u64, _node: NodeId, _steps: usize) -> bool {
-        false
-    }
-
-    /// Close a cursor (rollout finished). Unknown ids are a no-op.
-    fn cursor_close(&self, _task: &str, _cursor: u64) {}
 
     /// Decrement `node`'s sandbox refcount (client done forking).
     fn release(&self, task: &str, node: NodeId);
@@ -187,4 +247,107 @@ pub trait CacheBackend: Send + Sync {
     /// (payloads stay on disk until a resume faults them in) — so epoch 0
     /// of a new run starts warm. Returns `true` on success.
     fn warm_start(&self, dir: &str) -> bool;
+}
+
+/// The session extension of [`CacheBackend`]: rollout-scoped state the
+/// backend keeps between calls — stateful lookup cursors, turn-level
+/// batched ops, and the capability handshake that negotiates them.
+///
+/// Every default here reports "unsupported", so a decorator (or any
+/// backend that only cares about the per-call core) opts in with an empty
+/// `impl SessionBackend for T {}` and callers transparently stay on the
+/// full-prefix path. Rollouts should not call these methods directly:
+/// [`crate::client::RolloutSession`] (opened via
+/// [`open_session`](crate::client::open_session)) owns the task binding,
+/// the cursor position, and all pinned resume refs, and releases
+/// everything on `finish()` or `Drop` — so a panicking rollout can never
+/// leak server-side state.
+pub trait SessionBackend: CacheBackend {
+    /// What this backend speaks. Resolved once per binding (the HTTP
+    /// implementation performs the `/capabilities` handshake on first use
+    /// and caches the answer), never per request.
+    fn capabilities(&self) -> Capabilities {
+        Capabilities::CORE
+    }
+
+    // ---- stateful lookup cursors (the O(1)-per-call hot path) ----
+    //
+    // A rollout opens one cursor, then sends only the *delta* — the single
+    // new `ToolCall` — per lookup instead of its full history: the backend
+    // pins the rollout's TCG position, so a step is one child-index probe
+    // and the wire carries O(1) bytes per call rather than O(L). Eviction
+    // of a cursor's node invalidates it safely: the next step reports
+    // `CursorStep::Invalid` and the caller falls back to the full-prefix
+    // `lookup`/`insert` pair, then re-seeks.
+
+    /// Open a cursor at the TCG root for a new rollout of `task`.
+    /// Returns 0 when the backend does not support cursors (or the
+    /// transport failed) — the caller must then use full-prefix lookups.
+    fn cursor_open(&self, _task: &str) -> u64 {
+        0
+    }
+
+    /// Incremental lookup of the single delta `call` at the cursor's
+    /// position. Hit/miss payloads (including the §3.4 resume-offer pin
+    /// contract) are identical to [`CacheBackend::lookup`] of the full
+    /// prefix; `Invalid` means the cursor lost its node and the caller
+    /// must fall back (and may [`SessionBackend::cursor_seek`] afterwards).
+    fn cursor_step(&self, _task: &str, _cursor: u64, _call: &ToolCall) -> CursorStep {
+        CursorStep::Invalid
+    }
+
+    /// Record the single executed delta at the cursor's position and
+    /// advance it — the incremental counterpart of
+    /// [`CacheBackend::insert`]. Returns the final state-mutating node id
+    /// (the new cursor position), or 0 when the cursor is invalid / the
+    /// transport failed (fall back to a full insert + seek).
+    fn cursor_record(
+        &self,
+        _task: &str,
+        _cursor: u64,
+        _call: &ToolCall,
+        _result: &ToolResult,
+    ) -> NodeId {
+        0
+    }
+
+    /// Re-seat a cursor on `node` with `steps` calls consumed — used after
+    /// a fallback full-prefix lookup/insert re-established the position.
+    /// Returns `false` when the node is gone or the cursor is unknown.
+    fn cursor_seek(&self, _task: &str, _cursor: u64, _node: NodeId, _steps: usize) -> bool {
+        false
+    }
+
+    /// Close a cursor (rollout finished): drop the session entry and
+    /// release every resume pin it still holds. Unknown ids are a no-op.
+    fn cursor_close(&self, _task: &str, _cursor: u64) {}
+
+    /// Release a resume pin taken *through this session* (the session
+    /// table forgets the pin, so closing the session later cannot
+    /// double-release it). Pins taken outside any session route through
+    /// here too — the default is a plain [`CacheBackend::release`].
+    fn session_release(&self, task: &str, _cursor: u64, node: NodeId) {
+        self.release(task, node);
+    }
+
+    /// One reasoning turn's batched ops in a single round trip. A `cursor`
+    /// of 0 opens a session first (the open piggybacks on the first turn
+    /// frame — no separate round trip). The default emulates the batch
+    /// over the per-call cursor surface and leaves every probe unanswered,
+    /// which keeps decorators and legacy backends correct: probes are
+    /// hints, so an unanswered probe only costs the later real lookup.
+    fn session_turn(&self, task: &str, cursor: u64, batch: &TurnBatch) -> TurnReply {
+        let cursor = if cursor == 0 { self.cursor_open(task) } else { cursor };
+        if cursor == 0 {
+            return TurnReply::refused(batch);
+        }
+        let (step, recorded) = match &batch.op {
+            TurnOp::None => (None, None),
+            TurnOp::Step(call) => (Some(self.cursor_step(task, cursor, call)), None),
+            TurnOp::Record(call, result) => {
+                (None, Some(self.cursor_record(task, cursor, call, result)))
+            }
+        };
+        TurnReply { cursor, probes: vec![None; batch.probes.len()], step, recorded }
+    }
 }

@@ -15,7 +15,9 @@ pub mod spill;
 pub mod store;
 pub mod tcg;
 
-pub use backend::{BackendStats, CacheBackend};
+pub use backend::{
+    BackendStats, CacheBackend, Capabilities, SessionBackend, TurnBatch, TurnOp, TurnReply,
+};
 pub use eviction::{enforce_budget, recreation_cost, EvictionPolicy};
 pub use key::{ToolCall, ToolResult};
 pub use lpm::{CursorStep, Lookup, LpmConfig, Miss};

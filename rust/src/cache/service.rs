@@ -28,7 +28,9 @@ use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 
-use super::backend::{BackendStats, CacheBackend};
+use super::backend::{
+    BackendStats, CacheBackend, Capabilities, SessionBackend, TurnBatch, TurnOp, TurnReply,
+};
 use super::key::{ToolCall, ToolResult};
 use super::lpm::{CursorStep, Lookup};
 use super::shard::{CacheFactory, Shard, ShardRouter};
@@ -54,19 +56,31 @@ pub struct ServiceConfig {
     /// caller drives enforcement with [`ShardedCacheService::drain_over_budget`]
     /// (deterministic; what the property tests use).
     pub background: bool,
-    /// Upper bound on live lookup cursors per shard. A `cursor_open` that
+    /// Upper bound on live rollout sessions per shard. A session open that
     /// finds the table full first sweeps entries idle longer than
-    /// [`CURSOR_IDLE_TTL`] (remote rollouts that died without closing),
-    /// then refuses (returns 0) if still full — the client transparently
-    /// falls back to full-prefix lookups, so this is a memory bound, not
-    /// a correctness gate.
-    pub max_cursors_per_shard: usize,
+    /// [`ServiceConfig::session_idle_ttl`] (remote rollouts that died
+    /// without closing), then refuses (returns 0) if still full — the
+    /// client transparently falls back to full-prefix lookups, so this is
+    /// a memory bound, not a correctness gate.
+    pub max_sessions_per_shard: usize,
+    /// A session untouched for this long is presumed abandoned (its
+    /// rollout died without closing) and is swept — its table entry is
+    /// dropped and every resume pin it still holds is released.
+    pub session_idle_ttl: std::time::Duration,
+    /// Run the idle-session sweep every K session ops per shard (in
+    /// addition to the full-table sweep and the background timer tick), so
+    /// abandoned sessions are reclaimed on a steadily busy shard long
+    /// before its table ever hits the cap. 0 disables the op-count tick.
+    pub session_sweep_every_ops: u64,
 }
 
-/// A cursor untouched for this long is presumed abandoned (its rollout
-/// died without `/cursor_close`) and may be swept when a shard's cursor
-/// table hits [`ServiceConfig::max_cursors_per_shard`].
-pub const CURSOR_IDLE_TTL: std::time::Duration = std::time::Duration::from_secs(900);
+/// Default [`ServiceConfig::session_idle_ttl`].
+pub const SESSION_IDLE_TTL: std::time::Duration = std::time::Duration::from_secs(900);
+
+/// How often an idle background worker wakes to sweep its shard's session
+/// table (the timer tick of the periodic sweep; workers exist only on
+/// budgeted `background: true` services — op-count ticks cover the rest).
+const SESSION_SWEEP_TICK: std::time::Duration = std::time::Duration::from_secs(60);
 
 impl Default for ServiceConfig {
     fn default() -> Self {
@@ -76,7 +90,9 @@ impl Default for ServiceConfig {
             global_byte_budget: None,
             spill_dir: None,
             background: false,
-            max_cursors_per_shard: 8192,
+            max_sessions_per_shard: 8192,
+            session_idle_ttl: SESSION_IDLE_TTL,
+            session_sweep_every_ops: 4096,
         }
     }
 }
@@ -117,32 +133,73 @@ impl WorkerSignal {
     }
 }
 
-/// One live lookup cursor: the rollout's pinned TCG position (§3.2 made
-/// stateful). `gen` is the task TCG's eviction generation at which `node`
-/// was last verified live — eviction of the node flips the next step to
-/// `CursorStep::Invalid` instead of ever serving a stale position.
-struct CursorEntry {
+/// One live rollout session: the rollout's pinned TCG position (§3.2 made
+/// stateful) plus every resume-offer pin taken through the session. `gen`
+/// is the task TCG's eviction generation at which `node` was last verified
+/// live — eviction of the node flips the next step to `CursorStep::Invalid`
+/// instead of ever serving a stale position. `pins` unifies the old cursor
+/// table with resume-offer ownership: closing (or sweeping) the session
+/// releases them, so a rollout that dies mid-run can never leak a pin that
+/// would block snapshot eviction forever.
+struct SessionEntry {
     cache: Arc<TaskCache>,
     node: NodeId,
     /// Calls consumed so far (= `matched_calls` for the next step's miss).
     steps: usize,
     gen: u64,
-    /// Refreshed on every op; drives the abandoned-cursor sweep.
+    /// Refreshed on every op; drives the abandoned-session sweep.
     last_used: std::time::Instant,
+    /// Resume-offer pins taken through `session_turn` and not yet released
+    /// via `session_release`. (Per-call `cursor_step` pins stay owned by
+    /// the caller, exactly as before — only session-scoped traffic is
+    /// tracked here, so a bare-cursor client's own `release` can never
+    /// race a second release from session teardown.)
+    pins: Vec<NodeId>,
 }
 
-/// One shard's state: task map + snapshot byte store + cursor table +
+impl SessionEntry {
+    /// Hand every outstanding pin back (session closed or swept).
+    fn release_pins(self) {
+        for node in self.pins {
+            self.cache.release(node);
+        }
+    }
+}
+
+/// One shard's state: task map + snapshot byte store + session table +
 /// worker bookkeeping.
 struct ShardSlot {
     tasks: Shard,
     snapshots: SnapshotStore,
-    /// Live lookup cursors for this shard's tasks. A plain mutex: cursor
-    /// ops are O(1) probes and each rollout owns exactly one cursor, so
-    /// the hold time is a hash probe plus one TCG child lookup.
-    cursors: Mutex<HashMap<u64, CursorEntry>>,
+    /// Live rollout sessions for this shard's tasks. A plain mutex:
+    /// session ops are O(1) probes and each rollout owns exactly one
+    /// session, so the hold time is a hash probe plus one TCG child
+    /// lookup.
+    sessions: Mutex<HashMap<u64, SessionEntry>>,
+    /// Session ops since the last op-count sweep tick.
+    session_ops: AtomicU64,
     /// Snapshots the background worker destroyed (detached + dropped).
     bg_evicted: AtomicU64,
     signal: WorkerSignal,
+}
+
+impl ShardSlot {
+    /// Drop every session idle longer than `ttl`, releasing its pins.
+    fn sweep_idle_sessions(&self, ttl: std::time::Duration) {
+        let swept: Vec<SessionEntry> = {
+            let mut sessions = self.sessions.lock().unwrap();
+            let dead: Vec<u64> = sessions
+                .iter()
+                .filter(|(_, e)| e.last_used.elapsed() >= ttl)
+                .map(|(&id, _)| id)
+                .collect();
+            dead.into_iter().filter_map(|id| sessions.remove(&id)).collect()
+        };
+        // Pin releases take TCG read locks — never under the table mutex.
+        for entry in swept {
+            entry.release_pins();
+        }
+    }
 }
 
 /// Task-id-sharded cache service; implements [`CacheBackend`] in-process.
@@ -151,6 +208,11 @@ pub struct ShardedCacheService {
     shards: Vec<Arc<ShardSlot>>,
     cfg: ServiceConfig,
     workers: Vec<std::thread::JoinHandle<()>>,
+    /// The live spill store (shared with every shard's snapshot store) —
+    /// kept so `persist_to_dir` into the live spill directory reuses the
+    /// *same* writer: two stores on one manifest would let the primary's
+    /// compaction discard the secondary's appended records.
+    spill: Option<Arc<SpillStore>>,
     /// Cursor id allocator (0 is the "unsupported/failed" sentinel).
     next_cursor: AtomicU64,
 }
@@ -190,7 +252,8 @@ impl ShardedCacheService {
                 Arc::new(ShardSlot {
                     tasks: Shard::from_factory(Arc::clone(&factory)),
                     snapshots,
-                    cursors: Mutex::new(HashMap::new()),
+                    sessions: Mutex::new(HashMap::new()),
+                    session_ops: AtomicU64::new(0),
                     bg_evicted: AtomicU64::new(0),
                     signal: WorkerSignal::new(),
                 })
@@ -201,6 +264,7 @@ impl ShardedCacheService {
             shards,
             cfg,
             workers: Vec::new(),
+            spill,
             next_cursor: AtomicU64::new(1),
         };
         if svc.cfg.background && svc.cfg.bounded() {
@@ -220,7 +284,22 @@ impl ShardedCacheService {
                     {
                         let mut st = slot.signal.state.lock().unwrap();
                         while !st.dirty && !st.shutdown {
-                            st = slot.signal.cv.wait(st).unwrap();
+                            // Timer tick: an idle worker periodically sweeps
+                            // its shard's session table, so abandoned
+                            // sessions (and their resume pins) are reclaimed
+                            // even on a shard that never goes over budget
+                            // and never fills its table.
+                            let (next, timeout) = slot
+                                .signal
+                                .cv
+                                .wait_timeout(st, SESSION_SWEEP_TICK)
+                                .unwrap();
+                            st = next;
+                            if timeout.timed_out() && !st.dirty && !st.shutdown {
+                                drop(st);
+                                slot.sweep_idle_sessions(cfg.session_idle_ttl);
+                                st = slot.signal.state.lock().unwrap();
+                            }
                         }
                         if st.shutdown {
                             break;
@@ -354,10 +433,135 @@ impl ShardedCacheService {
         }
     }
 
-    /// Live cursors across all shards (diagnostics; a steady non-zero
-    /// count after every rollout finished means leaked cursors).
-    pub fn cursor_count(&self) -> usize {
-        self.shards.iter().map(|s| s.cursors.lock().unwrap().len()).sum()
+    /// Live rollout sessions across all shards (diagnostics; a steady
+    /// non-zero count after every rollout finished means leaked sessions).
+    pub fn session_count(&self) -> usize {
+        self.shards.iter().map(|s| s.sessions.lock().unwrap().len()).sum()
+    }
+
+    /// Resume pins currently owned by session entries across all shards.
+    pub fn session_pin_count(&self) -> usize {
+        self.shards
+            .iter()
+            .map(|s| s.sessions.lock().unwrap().values().map(|e| e.pins.len()).sum::<usize>())
+            .sum()
+    }
+
+    /// Sweep every shard's idle sessions now (deterministic tests).
+    pub fn sweep_idle_sessions(&self) {
+        for slot in &self.shards {
+            slot.sweep_idle_sessions(self.cfg.session_idle_ttl);
+        }
+    }
+
+    /// Op-count tick of the periodic session sweep: every
+    /// [`ServiceConfig::session_sweep_every_ops`] session ops on a shard,
+    /// sweep its idle sessions — the table is reclaimed on busy shards
+    /// without waiting for the cap or the background timer.
+    fn session_op_tick(&self, slot: &ShardSlot) {
+        let every = self.cfg.session_sweep_every_ops;
+        if every == 0 {
+            return;
+        }
+        let n = slot.session_ops.fetch_add(1, Ordering::Relaxed) + 1;
+        if n % every == 0 {
+            slot.sweep_idle_sessions(self.cfg.session_idle_ttl);
+        }
+    }
+
+    // The session ops snapshot the entry under the table mutex, run the
+    // TCG operation with the mutex *released* (a task's TCG write-lock
+    // stall must not block other tasks' sessions on the same shard), then
+    // re-lock briefly to write the advanced position back. A session has
+    // exactly one owning rollout, so the unlocked window admits no lost
+    // update — and an eviction landing in that window is caught by the
+    // next step's generation/liveness check, exactly as it would be after
+    // the op.
+
+    /// Shared core of [`SessionBackend::cursor_step`] and the turn path:
+    /// one incremental step. With `session_pin` a miss's resume pin is
+    /// registered on the session entry (released on close/sweep if the
+    /// client never does); without it the pin stays caller-owned, exactly
+    /// as the bare per-call cursor protocol always worked.
+    fn step_session(
+        &self,
+        task: &str,
+        cursor: u64,
+        call: &ToolCall,
+        session_pin: bool,
+    ) -> CursorStep {
+        let slot = self.slot(task);
+        self.session_op_tick(slot);
+        let snapshot = {
+            let sessions = slot.sessions.lock().unwrap();
+            sessions
+                .get(&cursor)
+                .map(|e| (Arc::clone(&e.cache), e.node, e.steps, e.gen))
+        };
+        let Some((cache, node, steps, gen)) = snapshot else {
+            return CursorStep::Invalid;
+        };
+        let (step, new_node, new_gen) = cache.cursor_step_at(node, steps, gen, call);
+        if !matches!(step, CursorStep::Invalid) {
+            // Hit or miss: the call is consumed either way (a miss is
+            // executed and then `cursor_record`ed by the caller).
+            let mut entry_gone = false;
+            {
+                let mut sessions = slot.sessions.lock().unwrap();
+                match sessions.get_mut(&cursor) {
+                    Some(e) => {
+                        e.node = new_node;
+                        e.gen = new_gen;
+                        e.steps = steps + 1;
+                        e.last_used = std::time::Instant::now();
+                        if session_pin {
+                            if let CursorStep::Miss(m) = &step {
+                                if let Some((pin, _, _)) = m.resume {
+                                    e.pins.push(pin);
+                                }
+                            }
+                        }
+                    }
+                    None => entry_gone = true,
+                }
+            }
+            if entry_gone && session_pin {
+                // The sweep (or a close) removed the entry in the unlocked
+                // window: nobody would ever release the pin the step just
+                // took — hand it back now. The offer still reaches the
+                // caller, degraded to the legacy unpinned contract (a
+                // fetch that loses an eviction race replays).
+                if let CursorStep::Miss(m) = &step {
+                    if let Some((pin, _, _)) = m.resume {
+                        cache.release(pin);
+                    }
+                }
+            }
+        }
+        step
+    }
+
+    /// Evaluate a turn's speculative probes at the session's current
+    /// position. Non-advancing, stat-free, pin-free (see
+    /// [`TaskCache::probe_stateless`]); a dead session answers nothing.
+    fn probe_session(
+        &self,
+        task: &str,
+        cursor: u64,
+        probes: &[ToolCall],
+    ) -> Vec<Option<ToolResult>> {
+        if probes.is_empty() {
+            return Vec::new();
+        }
+        let slot = self.slot(task);
+        let snapshot = {
+            let sessions = slot.sessions.lock().unwrap();
+            sessions.get(&cursor).map(|e| (Arc::clone(&e.cache), e.node))
+        };
+        let Some((cache, node)) = snapshot else {
+            return vec![None; probes.len()];
+        };
+        probes.iter().map(|p| cache.probe_stateless(node, p)).collect()
     }
 
     fn kick_if_over_budget(&self, shard: usize) {
@@ -385,7 +589,26 @@ impl ShardedCacheService {
     /// payloads reuse the spill format (`snap-<id>.bin` + manifest);
     /// `tcgs.json` is written atomically last.
     pub fn persist_to_dir(&self, dir: &Path) -> std::io::Result<()> {
-        let spill = SpillStore::open(dir)?;
+        // Persisting into the live spill directory reuses the service's
+        // own store (one writer, one compaction authority: a second store
+        // on the same manifest could have its appends discarded by the
+        // primary's compaction rewrite, and its fd stranded on the
+        // unlinked inode). Any other destination gets a fresh
+        // append-only writer.
+        // Canonicalize before comparing: "./out/spill", a symlink, or a
+        // trailing-dot spelling of the live spill dir must not sneak a
+        // second writer onto the same manifest.
+        let canon = |p: &Path| std::fs::canonicalize(p).unwrap_or_else(|_| p.to_path_buf());
+        let dir_canon = canon(dir);
+        let own = self.spill.as_ref().filter(|s| canon(s.dir()) == dir_canon).cloned();
+        let opened;
+        let spill: &SpillStore = match &own {
+            Some(s) => s.as_ref(),
+            None => {
+                opened = SpillStore::open_append_only(dir)?;
+                &opened
+            }
+        };
         let mut tasks_json = Vec::new();
         for slot in &self.shards {
             let mut ids = slot.tasks.task_ids();
@@ -554,128 +777,6 @@ impl CacheBackend for ShardedCacheService {
         self.task(task).record_trajectory(traj)
     }
 
-    fn cursor_open(&self, task: &str) -> u64 {
-        let slot = self.slot(task);
-        let cache = slot.tasks.task(task);
-        let gen = cache.eviction_generation();
-        let mut cursors = slot.cursors.lock().unwrap();
-        if cursors.len() >= self.cfg.max_cursors_per_shard {
-            // Sweep cursors whose rollouts died without closing; if the
-            // table is still full, refuse — the client falls back to
-            // full-prefix lookups for this rollout.
-            cursors.retain(|_, e| e.last_used.elapsed() < CURSOR_IDLE_TTL);
-            if cursors.len() >= self.cfg.max_cursors_per_shard {
-                return 0;
-            }
-        }
-        let id = self.next_cursor.fetch_add(1, Ordering::Relaxed);
-        cursors.insert(
-            id,
-            CursorEntry {
-                cache,
-                node: super::tcg::ROOT,
-                steps: 0,
-                gen,
-                last_used: std::time::Instant::now(),
-            },
-        );
-        id
-    }
-
-    // The cursor ops snapshot the entry under the table mutex, run the TCG
-    // operation with the mutex *released* (a task's TCG write-lock stall
-    // must not block other tasks' cursors on the same shard), then re-lock
-    // briefly to write the advanced position back. A cursor has exactly
-    // one owning rollout, so the unlocked window admits no lost update —
-    // and an eviction landing in that window is caught by the next step's
-    // generation/liveness check, exactly as it would be after the op.
-
-    fn cursor_step(&self, task: &str, cursor: u64, call: &ToolCall) -> CursorStep {
-        let slot = self.slot(task);
-        let snapshot = {
-            let cursors = slot.cursors.lock().unwrap();
-            cursors
-                .get(&cursor)
-                .map(|e| (Arc::clone(&e.cache), e.node, e.steps, e.gen))
-        };
-        let Some((cache, node, steps, gen)) = snapshot else {
-            return CursorStep::Invalid;
-        };
-        let (step, new_node, new_gen) = cache.cursor_step_at(node, steps, gen, call);
-        if !matches!(step, CursorStep::Invalid) {
-            // Hit or miss: the call is consumed either way (a miss is
-            // executed and then `cursor_record`ed by the caller).
-            let mut cursors = slot.cursors.lock().unwrap();
-            if let Some(e) = cursors.get_mut(&cursor) {
-                e.node = new_node;
-                e.gen = new_gen;
-                e.steps = steps + 1;
-                e.last_used = std::time::Instant::now();
-            }
-        }
-        step
-    }
-
-    fn cursor_record(
-        &self,
-        task: &str,
-        cursor: u64,
-        call: &ToolCall,
-        result: &ToolResult,
-    ) -> NodeId {
-        let slot = self.slot(task);
-        let snapshot = {
-            let cursors = slot.cursors.lock().unwrap();
-            cursors.get(&cursor).map(|e| (Arc::clone(&e.cache), e.node))
-        };
-        let Some((cache, node)) = snapshot else {
-            return 0;
-        };
-        match cache.cursor_record_at(node, call, result) {
-            Some((new_node, gen)) => {
-                let mut cursors = slot.cursors.lock().unwrap();
-                if let Some(e) = cursors.get_mut(&cursor) {
-                    e.node = new_node;
-                    e.gen = gen;
-                    e.last_used = std::time::Instant::now();
-                }
-                new_node
-            }
-            None => 0,
-        }
-    }
-
-    fn cursor_seek(&self, task: &str, cursor: u64, node: NodeId, steps: usize) -> bool {
-        let slot = self.slot(task);
-        let snapshot = {
-            let cursors = slot.cursors.lock().unwrap();
-            cursors.get(&cursor).map(|e| Arc::clone(&e.cache))
-        };
-        let Some(cache) = snapshot else {
-            return false;
-        };
-        match cache.cursor_seek_check(node) {
-            Some(gen) => {
-                let mut cursors = slot.cursors.lock().unwrap();
-                match cursors.get_mut(&cursor) {
-                    Some(e) => {
-                        e.node = node;
-                        e.steps = steps;
-                        e.gen = gen;
-                        e.last_used = std::time::Instant::now();
-                        true
-                    }
-                    None => false, // closed concurrently
-                }
-            }
-            None => false,
-        }
-    }
-
-    fn cursor_close(&self, task: &str, cursor: u64) {
-        self.slot(task).cursors.lock().unwrap().remove(&cursor);
-    }
-
     fn release(&self, task: &str, node: NodeId) {
         self.task(task).release(node);
     }
@@ -760,6 +861,167 @@ impl CacheBackend for ShardedCacheService {
 
     fn warm_start(&self, dir: &str) -> bool {
         self.warm_start_from_dir(Path::new(dir)).is_ok()
+    }
+}
+
+impl SessionBackend for ShardedCacheService {
+    fn capabilities(&self) -> Capabilities {
+        Capabilities::V2
+    }
+
+    fn cursor_open(&self, task: &str) -> u64 {
+        let slot = self.slot(task);
+        self.session_op_tick(slot);
+        let cache = slot.tasks.task(task);
+        let gen = cache.eviction_generation();
+        let id = self.next_cursor.fetch_add(1, Ordering::Relaxed);
+        let entry = SessionEntry {
+            cache,
+            node: super::tcg::ROOT,
+            steps: 0,
+            gen,
+            last_used: std::time::Instant::now(),
+            pins: Vec::new(),
+        };
+        let mut sessions = slot.sessions.lock().unwrap();
+        if sessions.len() >= self.cfg.max_sessions_per_shard {
+            // Sweep sessions whose rollouts died without closing; if the
+            // table is still full, refuse — the client falls back to
+            // full-prefix lookups for this rollout.
+            drop(sessions);
+            slot.sweep_idle_sessions(self.cfg.session_idle_ttl);
+            sessions = slot.sessions.lock().unwrap();
+        }
+        // Admission check and insert under one guard: the cap is a strict
+        // bound, never overshot by concurrent opens racing the check.
+        if sessions.len() >= self.cfg.max_sessions_per_shard {
+            return 0;
+        }
+        sessions.insert(id, entry);
+        id
+    }
+
+    fn cursor_step(&self, task: &str, cursor: u64, call: &ToolCall) -> CursorStep {
+        self.step_session(task, cursor, call, false)
+    }
+
+    fn cursor_record(
+        &self,
+        task: &str,
+        cursor: u64,
+        call: &ToolCall,
+        result: &ToolResult,
+    ) -> NodeId {
+        let slot = self.slot(task);
+        self.session_op_tick(slot);
+        let snapshot = {
+            let sessions = slot.sessions.lock().unwrap();
+            sessions.get(&cursor).map(|e| (Arc::clone(&e.cache), e.node))
+        };
+        let Some((cache, node)) = snapshot else {
+            return 0;
+        };
+        match cache.cursor_record_at(node, call, result) {
+            Some((new_node, gen)) => {
+                let mut sessions = slot.sessions.lock().unwrap();
+                if let Some(e) = sessions.get_mut(&cursor) {
+                    e.node = new_node;
+                    e.gen = gen;
+                    e.last_used = std::time::Instant::now();
+                }
+                new_node
+            }
+            None => 0,
+        }
+    }
+
+    fn cursor_seek(&self, task: &str, cursor: u64, node: NodeId, steps: usize) -> bool {
+        let slot = self.slot(task);
+        self.session_op_tick(slot);
+        let snapshot = {
+            let sessions = slot.sessions.lock().unwrap();
+            sessions.get(&cursor).map(|e| Arc::clone(&e.cache))
+        };
+        let Some(cache) = snapshot else {
+            return false;
+        };
+        match cache.cursor_seek_check(node) {
+            Some(gen) => {
+                let mut sessions = slot.sessions.lock().unwrap();
+                match sessions.get_mut(&cursor) {
+                    Some(e) => {
+                        e.node = node;
+                        e.steps = steps;
+                        e.gen = gen;
+                        e.last_used = std::time::Instant::now();
+                        true
+                    }
+                    None => false, // closed concurrently
+                }
+            }
+            None => false,
+        }
+    }
+
+    fn cursor_close(&self, task: &str, cursor: u64) {
+        let entry = self.slot(task).sessions.lock().unwrap().remove(&cursor);
+        if let Some(entry) = entry {
+            // Closing releases everything the session still owns — the
+            // RolloutSession Drop guarantee's server half.
+            entry.release_pins();
+        }
+    }
+
+    /// Known narrow race: if the idle sweep reclaimed this session (and
+    /// released its pins) while the client stalled, the client's late
+    /// release lands here with no entry and still decrements once —
+    /// potentially returning a pin some *other* rollout holds on the same
+    /// node. The exposure window needs a rollout idle past the TTL that
+    /// then resumes; the consequence is the legacy unpinned-offer contract
+    /// (the other rollout's fetch may lose an eviction race and degrade to
+    /// replay — correct output, lost optimization), the same hazard the
+    /// pre-session wire protocol accepted on every offer.
+    fn session_release(&self, task: &str, cursor: u64, node: NodeId) {
+        let slot = self.slot(task);
+        if cursor != 0 {
+            let mut sessions = slot.sessions.lock().unwrap();
+            if let Some(e) = sessions.get_mut(&cursor) {
+                if let Some(i) = e.pins.iter().position(|&p| p == node) {
+                    // The session no longer owns this pin: close/sweep
+                    // must not release it a second time.
+                    e.pins.swap_remove(i);
+                }
+            }
+        }
+        slot.tasks.task(task).release(node);
+    }
+
+    fn session_turn(&self, task: &str, cursor: u64, batch: &TurnBatch) -> TurnReply {
+        let cursor = if cursor == 0 {
+            // Session open piggybacks on the first turn frame.
+            self.cursor_open(task)
+        } else {
+            cursor
+        };
+        if cursor == 0 {
+            return TurnReply::refused(batch);
+        }
+        let (step, recorded) = match &batch.op {
+            TurnOp::None => (None, None),
+            TurnOp::Step(call) => {
+                // Turn-path resume pins are session-owned: the entry
+                // remembers them so close/sweep releases whatever the
+                // client never did.
+                (Some(self.step_session(task, cursor, call, true)), None)
+            }
+            TurnOp::Record(call, result) => {
+                (None, Some(self.cursor_record(task, cursor, call, result)))
+            }
+        };
+        // Probes run at the position *after* the op, so they predict the
+        // rollout's next stateless calls.
+        let probes = self.probe_session(task, cursor, &batch.probes);
+        TurnReply { cursor, probes, step, recorded }
     }
 }
 
@@ -1056,7 +1318,7 @@ mod tests {
             }
         }
         svc.cursor_close("t", cur);
-        assert_eq!(svc.cursor_count(), 0, "close must drop the table entry");
+        assert_eq!(svc.session_count(), 0, "close must drop the table entry");
         let stats = svc.stats("t");
         assert_eq!(stats.lookups, 3);
         assert_eq!(stats.hits, 3);
@@ -1135,7 +1397,7 @@ mod tests {
 
     #[test]
     fn cursor_table_cap_refuses_new_cursors_when_full() {
-        let cfg = ServiceConfig { shards: 1, max_cursors_per_shard: 2, ..Default::default() };
+        let cfg = ServiceConfig { shards: 1, max_sessions_per_shard: 2, ..Default::default() };
         let svc = ShardedCacheService::with_config(cfg, Arc::new(TaskCache::with_defaults))
             .unwrap();
         let a = svc.cursor_open("t");
@@ -1157,5 +1419,169 @@ mod tests {
         assert_eq!(svc.cursor_record("t", 999, &sf("a"), &ToolResult::new("r", 1.0)), 0);
         assert!(!svc.cursor_seek("t", 999, 1, 1));
         svc.cursor_close("t", 999); // no-op, no panic
+        let batch = TurnBatch { probes: vec![sf("a")], op: TurnOp::Step(sf("a")) };
+        let reply = svc.session_turn("t", 999, &batch);
+        assert_eq!(reply.step, Some(crate::cache::CursorStep::Invalid));
+        svc.session_release("t", 999, 1); // unknown session: plain release
+    }
+
+    // ---- session API v2 ----
+
+    #[test]
+    fn session_turn_opens_steps_probes_and_records_in_one_frame() {
+        let svc = ShardedCacheService::new(2);
+        svc.insert(
+            "t",
+            &[
+                (sf("a"), ToolResult::new("out-a", 1.0)),
+                (ToolCall::stateless("t", "peek"), ToolResult::new("peeked", 0.1)),
+            ],
+        );
+        // Turn 1: cursor 0 opens a session; step hits; probes answered at
+        // the post-step position.
+        let batch = TurnBatch {
+            probes: vec![ToolCall::stateless("t", "peek"), ToolCall::stateless("t", "nope")],
+            op: TurnOp::Step(sf("a")),
+        };
+        let r1 = svc.session_turn("t", 0, &batch);
+        assert!(r1.cursor != 0, "first frame must open the session");
+        assert!(matches!(r1.step, Some(crate::cache::CursorStep::Hit { .. })));
+        assert_eq!(r1.probes.len(), 2);
+        assert_eq!(r1.probes[0].as_ref().unwrap().output, "peeked");
+        assert_eq!(r1.probes[1], None, "unknown probe must be unanswered");
+
+        // Turn 2: step miss; turn 3: record advances the chain.
+        let r2 = svc.session_turn(
+            "t",
+            r1.cursor,
+            &TurnBatch { probes: Vec::new(), op: TurnOp::Step(sf("b")) },
+        );
+        assert!(matches!(r2.step, Some(crate::cache::CursorStep::Miss(_))));
+        let r3 = svc.session_turn(
+            "t",
+            r1.cursor,
+            &TurnBatch {
+                probes: Vec::new(),
+                op: TurnOp::Record(sf("b"), ToolResult::new("out-b", 1.0)),
+            },
+        );
+        let node = r3.recorded.unwrap();
+        assert!(node != 0);
+        assert!(svc.lookup("t", &[sf("a"), sf("b")]).is_hit());
+        // Probe traffic must not have perturbed the stats: 3 real lookups
+        // (1 legacy + turn steps), with the legacy lookup hitting too.
+        svc.cursor_close("t", r1.cursor);
+        assert_eq!(svc.session_count(), 0);
+    }
+
+    #[test]
+    fn probes_do_not_touch_stats_or_pins() {
+        let svc = ShardedCacheService::new(2);
+        let node = svc.insert(
+            "t",
+            &[
+                (sf("a"), ToolResult::new("out-a", 1.0)),
+                (ToolCall::stateless("t", "peek"), ToolResult::new("peeked", 0.1)),
+            ],
+        );
+        svc.store_snapshot("t", node, snap(8));
+        let r1 = svc.session_turn(
+            "t",
+            0,
+            &TurnBatch {
+                probes: vec![ToolCall::stateless("t", "peek")],
+                op: TurnOp::Step(sf("a")),
+            },
+        );
+        assert!(r1.probes[0].is_some());
+        let stats = svc.stats("t");
+        assert_eq!(stats.lookups, 1, "only the step counts as a lookup");
+        assert_eq!(stats.hits, 1);
+        assert_eq!(svc.task("t").pinned_node_count(), 0, "probes must never pin");
+        svc.cursor_close("t", r1.cursor);
+    }
+
+    #[test]
+    fn idle_session_sweep_runs_on_op_ticks_and_releases_pins() {
+        let cfg = ServiceConfig {
+            shards: 1,
+            session_idle_ttl: std::time::Duration::from_millis(40),
+            session_sweep_every_ops: 8,
+            ..Default::default()
+        };
+        let svc = ShardedCacheService::with_config(cfg, Arc::new(TaskCache::with_defaults))
+            .unwrap();
+        let node = svc.insert("t", &traj(&["a", "b"]));
+        svc.store_snapshot("t", node, snap(8));
+
+        // An abandoned session holding a pin: walk to the snapshotted node,
+        // then a divergent turn-path step miss pins the resume offer.
+        let dead = svc.session_turn(
+            "t",
+            0,
+            &TurnBatch { probes: Vec::new(), op: TurnOp::Step(sf("a")) },
+        );
+        assert!(dead.cursor != 0);
+        for step in ["b", "zz"] {
+            svc.session_turn(
+                "t",
+                dead.cursor,
+                &TurnBatch { probes: Vec::new(), op: TurnOp::Step(sf(step)) },
+            );
+        }
+        assert_eq!(svc.task("t").pinned_node_count(), 1, "turn miss offer pins");
+        assert_eq!(svc.session_count(), 1);
+
+        // Let it go idle, then generate op traffic well below the table
+        // cap: the op-count tick alone must sweep it — no cap pressure.
+        std::thread::sleep(std::time::Duration::from_millis(60));
+        for _ in 0..9 {
+            let _ = svc.cursor_step("t", 0xDEAD, &sf("a")); // unknown id: cheap op
+        }
+        assert_eq!(svc.session_count(), 0, "op-tick sweep must reclaim the idle session");
+        assert_eq!(svc.task("t").pinned_node_count(), 0, "sweep must release its pins");
+    }
+
+    #[test]
+    fn capabilities_advertise_everything_in_process() {
+        let svc = ShardedCacheService::new(1);
+        assert_eq!(svc.capabilities(), crate::cache::Capabilities::V2);
+    }
+
+    #[test]
+    fn persist_into_live_spill_dir_shares_the_writer_and_keeps_spilling() {
+        // Regression: persisting into the service's *own* spill directory
+        // must reuse the primary manifest writer — a second store on the
+        // same file could have its records discarded by the primary's
+        // compaction (and its fd stranded by the atomic rename).
+        let dir = tmpdir("persist-live");
+        let cfg = ServiceConfig {
+            shards: 1,
+            shard_byte_budget: Some(150),
+            spill_dir: Some(dir.clone()),
+            background: false,
+            ..Default::default()
+        };
+        let svc = ShardedCacheService::with_config(cfg, Arc::new(TaskCache::with_defaults))
+            .unwrap();
+        for i in 0..3 {
+            let node = svc.insert("t", &traj(&["p", &format!("leaf{i}")]));
+            assert!(svc.store_snapshot("t", node, snap(100)) > 0);
+        }
+        svc.drain_over_budget(); // spills into `dir`
+        assert!(svc.spilled_count() >= 2);
+        svc.persist_to_dir(&dir).unwrap();
+
+        // Post-persist spills still reach the same manifest (the writer
+        // was never replaced or stranded), and a warm start sees every
+        // payload.
+        let node = svc.insert("t", &traj(&["p", "leaf-late"]));
+        assert!(svc.store_snapshot("t", node, snap(100)) > 0);
+        svc.drain_over_budget();
+        // Persist recorded every snapshot (both tiers) and the post-persist
+        // spill appended through the same writer: one record per snapshot.
+        let records = spill::load_manifest(&dir);
+        assert_eq!(records.len(), svc.snapshot_count(), "manifest lost a record");
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 }

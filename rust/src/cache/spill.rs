@@ -83,6 +83,20 @@ impl ManifestRecord {
             restore_cost: self.restore_cost,
         }
     }
+
+    /// The record's manifest line — the one serialization both the append
+    /// path and the compaction rewrite emit, so the two can never drift.
+    fn to_line(&self) -> String {
+        Json::obj(vec![
+            ("op", Json::str("spill")),
+            ("task", Json::str(self.task.as_str())),
+            ("id", Json::num(self.id as f64)),
+            ("bytes", Json::num(self.bytes as f64)),
+            ("serialize_cost", Json::num(self.serialize_cost)),
+            ("restore_cost", Json::num(self.restore_cost)),
+        ])
+        .to_string()
+    }
 }
 
 pub fn payload_path(dir: &Path, id: u64) -> PathBuf {
@@ -93,27 +107,87 @@ fn manifest_path(dir: &Path) -> PathBuf {
     dir.join("manifest.jsonl")
 }
 
-/// Writer side of the spill directory: payload files + append-only manifest.
+/// Compaction is considered once the manifest holds at least this many
+/// lines (tiny manifests are never worth rewriting).
+const COMPACT_MIN_LINES: u64 = 64;
+
+/// The manifest writer behind [`SpillStore`]'s mutex: the append handle
+/// plus the bookkeeping compaction needs — total line count and the
+/// currently-live records (superseded and dropped lines are *dead*).
+#[derive(Debug)]
+struct ManifestState {
+    file: fs::File,
+    /// Lines in the manifest file (live + dead).
+    lines: u64,
+    /// Live records by id — exactly what a fresh [`load_manifest`] would
+    /// return, maintained incrementally so compaction never re-reads.
+    live: HashMap<u64, ManifestRecord>,
+    /// Lifetime compaction passes (tests / diagnostics).
+    compactions: u64,
+}
+
+/// Writer side of the spill directory: payload files + append-only manifest
+/// with automatic compaction — when dead lines (drops + superseded spills)
+/// exceed half the manifest, it is rewritten to just the live records via
+/// a temp file + atomic rename, so a crash at any point leaves either the
+/// old or the new manifest intact, never a torn one.
 #[derive(Debug)]
 pub struct SpillStore {
     dir: PathBuf,
-    manifest: Mutex<fs::File>,
+    manifest: Mutex<ManifestState>,
+    /// Compaction gate: disabled for secondary writers (`persist_to_dir`
+    /// into a live spill directory) — a rewrite under an aliased append
+    /// handle would strand the other writer's fd on the unlinked inode.
+    compact: bool,
 }
 
 impl SpillStore {
     /// Create/open the spill directory, appending to an existing manifest.
+    /// This primary handle compacts the manifest when it grows mostly dead.
     pub fn open(dir: impl Into<PathBuf>) -> std::io::Result<SpillStore> {
+        Self::open_with(dir, true)
+    }
+
+    /// As [`SpillStore::open`], but never compacts — for secondary writers
+    /// appending to a directory another `SpillStore` may own.
+    pub fn open_append_only(dir: impl Into<PathBuf>) -> std::io::Result<SpillStore> {
+        Self::open_with(dir, false)
+    }
+
+    fn open_with(dir: impl Into<PathBuf>, compact: bool) -> std::io::Result<SpillStore> {
         let dir = dir.into();
         fs::create_dir_all(&dir)?;
-        let manifest = fs::OpenOptions::new()
+        // A stray tmp from a compaction that crashed pre-rename is dead
+        // weight; the manifest itself is untouched by such a crash.
+        let _ = fs::remove_file(dir.join("manifest.jsonl.tmp"));
+        // One read serves both the compaction bookkeeping (line count) and
+        // the live-record map.
+        let text = fs::read_to_string(manifest_path(&dir)).unwrap_or_default();
+        let lines = text.lines().filter(|l| !l.trim().is_empty()).count() as u64;
+        let live = parse_manifest(&dir, &text);
+        let file = fs::OpenOptions::new()
             .create(true)
             .append(true)
             .open(manifest_path(&dir))?;
-        Ok(SpillStore { dir, manifest: Mutex::new(manifest) })
+        Ok(SpillStore {
+            dir,
+            manifest: Mutex::new(ManifestState { file, lines, live, compactions: 0 }),
+            compact,
+        })
     }
 
     pub fn dir(&self) -> &Path {
         &self.dir
+    }
+
+    /// Manifest lines currently in the file (tests / diagnostics).
+    pub fn manifest_lines(&self) -> u64 {
+        self.manifest.lock().unwrap().lines
+    }
+
+    /// Lifetime compaction passes (tests / diagnostics).
+    pub fn compaction_count(&self) -> u64 {
+        self.manifest.lock().unwrap().compactions
     }
 
     /// Write `snap`'s payload for `id` and record it in the manifest.
@@ -130,15 +204,13 @@ impl SpillStore {
         let tmp = self.dir.join(format!("snap-{id}.tmp"));
         fs::write(&tmp, &snap.bytes)?;
         fs::rename(&tmp, &path)?;
-        let record = Json::obj(vec![
-            ("op", Json::str("spill")),
-            ("task", Json::str(task)),
-            ("id", Json::num(id as f64)),
-            ("bytes", Json::num(snap.bytes.len() as f64)),
-            ("serialize_cost", Json::num(snap.serialize_cost)),
-            ("restore_cost", Json::num(restore_cost)),
-        ]);
-        self.append_line(&record.to_string())?;
+        self.append_spill(ManifestRecord {
+            task: task.to_string(),
+            id,
+            bytes: snap.bytes.len() as u64,
+            serialize_cost: snap.serialize_cost,
+            restore_cost,
+        })?;
         Ok(SpillSlot {
             path,
             bytes: snap.bytes.len() as u64,
@@ -157,30 +229,84 @@ impl SpillStore {
         slot: &SpillSlot,
         restore_cost: f64,
     ) -> std::io::Result<()> {
-        let record = Json::obj(vec![
-            ("op", Json::str("spill")),
-            ("task", Json::str(task)),
-            ("id", Json::num(id as f64)),
-            ("bytes", Json::num(slot.bytes as f64)),
-            ("serialize_cost", Json::num(slot.serialize_cost)),
-            ("restore_cost", Json::num(restore_cost)),
-        ]);
-        self.append_line(&record.to_string())
+        self.append_spill(ManifestRecord {
+            task: task.to_string(),
+            id,
+            bytes: slot.bytes,
+            serialize_cost: slot.serialize_cost,
+            restore_cost,
+        })
     }
 
     /// Record that `id`'s payload is gone and best-effort delete the file.
     pub fn drop_payload(&self, id: u64) {
-        let record =
-            Json::obj(vec![("op", Json::str("drop")), ("id", Json::num(id as f64))]);
-        let _ = self.append_line(&record.to_string());
+        let line =
+            Json::obj(vec![("op", Json::str("drop")), ("id", Json::num(id as f64))]).to_string();
+        {
+            let mut st = self.manifest.lock().unwrap();
+            if Self::append_line(&mut st, &line).is_ok() {
+                st.live.remove(&id);
+                self.maybe_compact(&mut st);
+            }
+        }
         let _ = fs::remove_file(payload_path(&self.dir, id));
     }
 
-    fn append_line(&self, line: &str) -> std::io::Result<()> {
-        let mut f = self.manifest.lock().unwrap();
-        f.write_all(line.as_bytes())?;
-        f.write_all(b"\n")?;
-        f.flush()
+    fn append_spill(&self, rec: ManifestRecord) -> std::io::Result<()> {
+        let line = rec.to_line();
+        let mut st = self.manifest.lock().unwrap();
+        Self::append_line(&mut st, &line)?;
+        st.live.insert(rec.id, rec);
+        self.maybe_compact(&mut st);
+        Ok(())
+    }
+
+    fn append_line(st: &mut ManifestState, line: &str) -> std::io::Result<()> {
+        st.file.write_all(line.as_bytes())?;
+        st.file.write_all(b"\n")?;
+        st.file.flush()?;
+        st.lines += 1;
+        Ok(())
+    }
+
+    /// Rewrite the manifest to just the live records once dead lines
+    /// (drops + superseded spills) exceed 50% of a non-trivial file.
+    /// Crash-safe: the replacement is fully written and flushed to a temp
+    /// file, then atomically renamed over the manifest — a crash before
+    /// the rename leaves the old (correct, just bloated) manifest; a crash
+    /// after leaves the new one. Failures are swallowed: compaction is an
+    /// optimization, the append-only log stays authoritative.
+    fn maybe_compact(&self, st: &mut ManifestState) {
+        if !self.compact
+            || st.lines < COMPACT_MIN_LINES
+            || st.lines <= 2 * st.live.len() as u64
+        {
+            return;
+        }
+        let mut ids: Vec<u64> = st.live.keys().copied().collect();
+        ids.sort_unstable();
+        let mut out = String::with_capacity(ids.len() * 96);
+        for id in &ids {
+            out.push_str(&st.live[id].to_line());
+            out.push('\n');
+        }
+        let tmp = self.dir.join("manifest.jsonl.tmp");
+        let rewrite = || -> std::io::Result<fs::File> {
+            fs::write(&tmp, &out)?;
+            fs::rename(&tmp, manifest_path(&self.dir))?;
+            // The old append handle points at the unlinked inode: reopen.
+            fs::OpenOptions::new().append(true).open(manifest_path(&self.dir))
+        };
+        match rewrite() {
+            Ok(file) => {
+                st.file = file;
+                st.lines = ids.len() as u64;
+                st.compactions += 1;
+            }
+            Err(_) => {
+                let _ = fs::remove_file(&tmp);
+            }
+        }
     }
 }
 
@@ -191,10 +317,16 @@ impl SpillStore {
 /// is missing or has the wrong length are skipped, so the result is always
 /// self-consistent. An absent manifest is an empty store, not an error.
 pub fn load_manifest(dir: &Path) -> HashMap<u64, ManifestRecord> {
-    let mut records: HashMap<u64, ManifestRecord> = HashMap::new();
     let Ok(text) = fs::read_to_string(manifest_path(dir)) else {
-        return records;
+        return HashMap::new();
     };
+    parse_manifest(dir, &text)
+}
+
+/// Replay already-read manifest text (shared by [`load_manifest`] and the
+/// single-read open path).
+fn parse_manifest(dir: &Path, text: &str) -> HashMap<u64, ManifestRecord> {
+    let mut records: HashMap<u64, ManifestRecord> = HashMap::new();
     for line in text.lines() {
         let line = line.trim();
         if line.is_empty() {
@@ -334,5 +466,105 @@ mod tests {
     fn missing_dir_is_empty_not_error() {
         let dir = tmpdir("absent");
         assert!(load_manifest(&dir).is_empty());
+    }
+
+    // ---- manifest compaction ----
+
+    #[test]
+    fn compaction_rewrites_mostly_dead_manifest_without_losing_records() {
+        let dir = tmpdir("compact");
+        let store = SpillStore::open(&dir).unwrap();
+        // 60 spills, 50 of them dropped: 110 lines, 10 live (> 50% dead),
+        // crossing COMPACT_MIN_LINES on the way.
+        for id in 1..=60u64 {
+            store.write("t", id, &snap(id as u8, 8 + id as usize), 0.5).unwrap();
+        }
+        for id in 1..=50u64 {
+            store.drop_payload(id);
+        }
+        assert!(store.compaction_count() >= 1, "compaction must have triggered");
+        assert!(
+            store.manifest_lines() <= 20,
+            "compacted manifest still bloated: {} lines",
+            store.manifest_lines()
+        );
+        // The compacted manifest is semantically identical: exactly the 10
+        // survivors, each backed by its payload.
+        let records = load_manifest(&dir);
+        assert_eq!(records.len(), 10);
+        for id in 51..=60u64 {
+            let r = &records[&id];
+            assert_eq!(r.bytes, 8 + id);
+            assert_eq!(r.task, "t");
+            assert_eq!(r.slot(&dir).fault().unwrap().bytes.len() as u64, 8 + id);
+        }
+        // And the store keeps appending correctly after the rewrite (the
+        // handle was re-opened on the new inode).
+        store.write("t", 99, &snap(9, 32), 0.5).unwrap();
+        assert_eq!(load_manifest(&dir).len(), 11);
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn small_or_mostly_live_manifests_are_never_compacted() {
+        let dir = tmpdir("compact-skip");
+        let store = SpillStore::open(&dir).unwrap();
+        for id in 1..=10u64 {
+            store.write("t", id, &snap(1, 8), 0.5).unwrap();
+        }
+        store.drop_payload(1); // 11 lines, far below COMPACT_MIN_LINES
+        assert_eq!(store.compaction_count(), 0);
+        // Mostly-live large manifest: 100 lines, 90 live — no compaction.
+        for id in 11..=100u64 {
+            store.write("t", id, &snap(1, 8), 0.5).unwrap();
+        }
+        assert_eq!(store.compaction_count(), 0, "live manifests must not be rewritten");
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn crashed_compaction_tmp_is_ignored_and_cleaned() {
+        let dir = tmpdir("compact-crash");
+        let store = SpillStore::open(&dir).unwrap();
+        for id in 1..=4u64 {
+            store.write("t", id, &snap(id as u8, 16), 0.5).unwrap();
+        }
+        drop(store);
+        // Simulate a compaction that died before its atomic rename: a stray
+        // tmp full of garbage next to an intact manifest.
+        fs::write(dir.join("manifest.jsonl.tmp"), b"{\"op\":\"drop\",\"id\":1}\ngarbage").unwrap();
+        // Recovery ignores the tmp entirely…
+        assert_eq!(load_manifest(&dir).len(), 4);
+        // …and reopening the store clears it.
+        let store = SpillStore::open(&dir).unwrap();
+        assert!(!dir.join("manifest.jsonl.tmp").exists());
+        assert_eq!(store.manifest_lines(), 4);
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn truncated_manifest_after_compaction_still_recovers() {
+        let dir = tmpdir("compact-trunc");
+        let store = SpillStore::open(&dir).unwrap();
+        for id in 1..=70u64 {
+            store.write("t", id, &snap(id as u8, 16), 0.5).unwrap();
+        }
+        for id in 1..=60u64 {
+            store.drop_payload(id);
+        }
+        assert!(store.compaction_count() >= 1);
+        drop(store);
+        // The crash-safety property must hold for the *rewritten* file too:
+        // truncate at every offset; every surviving record stays backed.
+        let full = fs::read(manifest_path(&dir)).unwrap();
+        for cut in 0..=full.len() {
+            fs::write(manifest_path(&dir), &full[..cut]).unwrap();
+            let records = load_manifest(&dir);
+            for (id, r) in &records {
+                assert!(r.slot(&dir).fault().is_some(), "cut {cut}: dangling record {id}");
+            }
+            assert!(records.len() <= 10);
+        }
+        fs::remove_dir_all(&dir).unwrap();
     }
 }

@@ -255,6 +255,21 @@ impl TaskCache {
         Some((node, tcg.generation()))
     }
 
+    /// Speculative stateless probe at a session's position: the cached
+    /// result of `call` in `pos`'s side index, if any. Unlike
+    /// [`TaskCache::cursor_step_at`] this never advances the position,
+    /// touches statistics, or pins a resume offer — probes are pure hints
+    /// batched alongside a turn's real op, and must not perturb the
+    /// hit/miss accounting the real calls produce.
+    pub fn probe_stateless(&self, pos: NodeId, call: &ToolCall) -> Option<ToolResult> {
+        if call.mutates_state {
+            return None;
+        }
+        let tcg = self.tcg.read().unwrap();
+        tcg.node(pos)?;
+        tcg.stateless_result(pos, call).cloned()
+    }
+
     /// Validate a cursor re-seek target: `Some(generation)` when `node` is
     /// live (ROOT always is), `None` otherwise.
     pub fn cursor_seek_check(&self, node: NodeId) -> Option<u64> {

@@ -19,8 +19,8 @@ use std::cell::RefCell;
 use std::sync::Mutex;
 
 use crate::cache::{
-    BackendStats, CacheBackend, CacheStats, CursorStep, Lookup, Miss, NodeId,
-    SnapshotCosts, SnapshotPolicy, ToolCall, ToolResult,
+    BackendStats, CacheBackend, CacheStats, Capabilities, CursorStep, Lookup, Miss, NodeId,
+    SessionBackend, SnapshotCosts, SnapshotPolicy, ToolCall, ToolResult, TurnBatch, TurnReply,
 };
 use crate::sandbox::SandboxSnapshot;
 use crate::server::{hex_decode, hex_encode};
@@ -46,11 +46,16 @@ const MAX_IDLE_AGE: std::time::Duration = std::time::Duration::from_secs(10);
 pub struct RemoteBinding {
     addr: std::net::SocketAddr,
     pool: Mutex<Vec<(HttpClient, std::time::Instant)>>,
+    /// Negotiated server capabilities (`/capabilities` handshake), resolved
+    /// once on first session open and cached for the binding's lifetime —
+    /// the per-request magic-byte guessing game this replaces is exactly
+    /// what the handshake exists to avoid.
+    caps: Mutex<Option<Capabilities>>,
 }
 
 impl RemoteBinding {
     pub fn connect(addr: std::net::SocketAddr) -> RemoteBinding {
-        RemoteBinding { addr, pool: Mutex::new(Vec::new()) }
+        RemoteBinding { addr, pool: Mutex::new(Vec::new()), caps: Mutex::new(None) }
     }
 
     /// Run `f` with a pooled connection; I/O happens outside the pool lock.
@@ -162,55 +167,6 @@ impl CacheBackend for RemoteBinding {
         let _ = self.post_bin("/release", true, |buf| wire::enc_release(buf, task, node));
     }
 
-    fn cursor_open(&self, task: &str) -> u64 {
-        self.post_bin("/cursor_open", false, |buf| wire::enc_cursor_open(buf, task))
-            .as_deref()
-            .and_then(wire::dec_u64_resp)
-            .unwrap_or(0)
-    }
-
-    fn cursor_step(&self, task: &str, cursor: u64, call: &ToolCall) -> CursorStep {
-        // The O(1) hot frame: only the delta call crosses the wire. A
-        // transport failure reports `Invalid`, which the executor treats
-        // as "fall back to a full-prefix lookup" — the same degradation
-        // ladder as a server-side eviction.
-        self.post_bin("/cursor_step", false, |buf| {
-            wire::enc_cursor_step(buf, task, cursor, call)
-        })
-        .as_deref()
-        .and_then(wire::dec_step_resp)
-        .unwrap_or(CursorStep::Invalid)
-    }
-
-    fn cursor_record(
-        &self,
-        task: &str,
-        cursor: u64,
-        call: &ToolCall,
-        result: &ToolResult,
-    ) -> NodeId {
-        self.post_bin("/cursor_record", false, |buf| {
-            wire::enc_cursor_record(buf, task, cursor, call, result)
-        })
-        .as_deref()
-        .and_then(wire::dec_u64_resp)
-        .unwrap_or(0) as usize
-    }
-
-    fn cursor_seek(&self, task: &str, cursor: u64, node: NodeId, steps: usize) -> bool {
-        self.post_bin("/cursor_seek", true, |buf| {
-            wire::enc_cursor_seek(buf, task, cursor, node, steps)
-        })
-        .as_deref()
-        .and_then(wire::dec_bool_resp)
-        .unwrap_or(false)
-    }
-
-    fn cursor_close(&self, task: &str, cursor: u64) {
-        let _ =
-            self.post_bin("/cursor_close", true, |buf| wire::enc_cursor_close(buf, task, cursor));
-    }
-
     fn should_snapshot(&self, _task: &str, costs: SnapshotCosts) -> bool {
         // Policy evaluated client-side (the server applies budget on attach).
         SnapshotPolicy::default().should_snapshot(costs)
@@ -280,5 +236,102 @@ impl CacheBackend for RemoteBinding {
         self.post("/warm_start", body)
             .and_then(|v| v.get("ok").and_then(|o| o.as_bool()))
             .unwrap_or(false)
+    }
+}
+
+impl SessionBackend for RemoteBinding {
+    /// One `/capabilities` round trip, once per binding (not per session,
+    /// not per request). A server that 404s the handshake — or a network
+    /// hiccup — negotiates down to [`Capabilities::LEGACY`]: the magic-byte
+    /// sniffed binary + cursor protocol every pre-v2 server speaks, with
+    /// turn batching off. The decision is cached so a flaky handshake can
+    /// never flap the protocol mid-run.
+    fn capabilities(&self) -> Capabilities {
+        if let Some(c) = *self.caps.lock().unwrap() {
+            return c;
+        }
+        let negotiated = self
+            .post_bin("/capabilities", true, |buf| {
+                wire::enc_hello(buf, Capabilities::PROTO_V2)
+            })
+            .as_deref()
+            .and_then(wire::dec_caps_resp)
+            .map(|(_proto, caps)| caps)
+            .unwrap_or(Capabilities::LEGACY);
+        *self.caps.lock().unwrap() = Some(negotiated);
+        negotiated
+    }
+
+    fn cursor_open(&self, task: &str) -> u64 {
+        self.post_bin("/cursor_open", false, |buf| wire::enc_cursor_open(buf, task))
+            .as_deref()
+            .and_then(wire::dec_u64_resp)
+            .unwrap_or(0)
+    }
+
+    fn cursor_step(&self, task: &str, cursor: u64, call: &ToolCall) -> CursorStep {
+        // The O(1) hot frame: only the delta call crosses the wire. A
+        // transport failure reports `Invalid`, which the executor treats
+        // as "fall back to a full-prefix lookup" — the same degradation
+        // ladder as a server-side eviction.
+        self.post_bin("/cursor_step", false, |buf| {
+            wire::enc_cursor_step(buf, task, cursor, call)
+        })
+        .as_deref()
+        .and_then(wire::dec_step_resp)
+        .unwrap_or(CursorStep::Invalid)
+    }
+
+    fn cursor_record(
+        &self,
+        task: &str,
+        cursor: u64,
+        call: &ToolCall,
+        result: &ToolResult,
+    ) -> NodeId {
+        self.post_bin("/cursor_record", false, |buf| {
+            wire::enc_cursor_record(buf, task, cursor, call, result)
+        })
+        .as_deref()
+        .and_then(wire::dec_u64_resp)
+        .unwrap_or(0) as usize
+    }
+
+    fn cursor_seek(&self, task: &str, cursor: u64, node: NodeId, steps: usize) -> bool {
+        self.post_bin("/cursor_seek", true, |buf| {
+            wire::enc_cursor_seek(buf, task, cursor, node, steps)
+        })
+        .as_deref()
+        .and_then(wire::dec_bool_resp)
+        .unwrap_or(false)
+    }
+
+    fn cursor_close(&self, task: &str, cursor: u64) {
+        let _ =
+            self.post_bin("/cursor_close", true, |buf| wire::enc_cursor_close(buf, task, cursor));
+    }
+
+    /// Session-owned pin release. Not retried: a lost response leaves the
+    /// pin registered on the server-side session entry, which releases it
+    /// at close/sweep — bounded by the session lifetime instead of leaked
+    /// forever (the failure mode that forced the legacy wire protocol to
+    /// unpin offers before replying).
+    fn session_release(&self, task: &str, cursor: u64, node: NodeId) {
+        let _ = self.post_bin("/session_release", false, |buf| {
+            wire::enc_session_release(buf, task, cursor, node)
+        });
+    }
+
+    /// One reasoning turn, one round trip (`/session_turn`). Never retried
+    /// transparently — a replayed step/record would double-apply; a lost
+    /// response degrades through [`TurnReply::refused`] into the same
+    /// `Invalid`-fallback ladder as a server-side eviction.
+    fn session_turn(&self, task: &str, cursor: u64, batch: &TurnBatch) -> TurnReply {
+        self.post_bin("/session_turn", false, |buf| {
+            wire::enc_turn(buf, task, cursor, batch)
+        })
+        .as_deref()
+        .and_then(wire::dec_turn_resp)
+        .unwrap_or_else(|| TurnReply::refused(batch))
     }
 }

@@ -1,11 +1,13 @@
 //! The `ToolCallExecutor` (Figure 4): the client-side loop the RL framework
 //! integrates with.
 //!
-//! One executor serves one rollout. The rollout opens a stateful lookup
-//! *cursor* (its pinned TCG position, `CacheBackend::cursor_*`), so each
-//! tool call costs one O(1) delta step instead of serializing the full
-//! history — with a transparent fall-back to the full-prefix lookup when
-//! the backend lacks cursors or eviction invalidates one. On a hit it
+//! One executor serves one rollout, through one owned
+//! [`RolloutSession`]: the session holds the rollout's pinned TCG
+//! position (its lookup cursor) plus every resume pin, so each tool call
+//! costs one O(1) delta step — a single `/session_turn` frame per
+//! reasoning turn on a turn-batch backend — instead of serializing the
+//! full history, with a transparent fall-back to the full-prefix lookup
+//! when the backend lacks cursors or eviction invalidates one. On a hit it
 //! returns the cached value at cache-get latency. On a miss it
 //! reconstructs the needed sandbox state — preferring, in order: the live
 //! sandbox it already owns (when up-to-date), a forked snapshot from the
@@ -20,7 +22,8 @@
 
 use std::sync::Arc;
 
-use crate::cache::{CacheBackend, CursorStep, Lookup, Miss, SnapshotCosts, ToolCall, ToolResult};
+use super::session::{open_session, RolloutSession, SessionConfig};
+use crate::cache::{CursorStep, Lookup, Miss, SessionBackend, SnapshotCosts, ToolCall, ToolResult};
 use crate::sandbox::{SandboxFactory, ToolExecutionEnvironment};
 
 /// Executor tunables (defaults match the paper's measured constants).
@@ -44,6 +47,10 @@ pub struct ExecutorConfig {
     /// Falls back to full-prefix lookups transparently when the backend
     /// does not support cursors or a cursor is invalidated by eviction.
     pub use_cursor: bool,
+    /// Ship cursor ops as single `/session_turn` batch frames (probes +
+    /// one stateful op per reasoning turn) when the backend negotiated the
+    /// capability; `false` forces the per-call cursor endpoints.
+    pub batch_turns: bool,
     /// Contention multiplier on cold sandbox start/stop (cacheless runs
     /// create B·R containers concurrently at step start; Figure 13 shows
     /// the baseline manager's throughput collapse under that load).
@@ -60,6 +67,7 @@ impl Default for ExecutorConfig {
             background_forks: true,
             stateful_filtering: true,
             use_cursor: true,
+            batch_turns: true,
             cold_start_factor: 1.0,
         }
     }
@@ -84,9 +92,10 @@ pub struct CallOutcome {
 /// backend (in-process sharded service or HTTP binding) is shared across
 /// every concurrent rollout.
 pub struct ToolCallExecutor {
-    backend: Arc<dyn CacheBackend>,
-    /// Task id the backend routes on (§4.5 task-id sharding).
-    task: String,
+    /// The rollout's owned cache session: task binding + cursor + pinned
+    /// resume refs, all torn down on `finish()` or `Drop` (a panicking
+    /// rollout can no longer leak a server-side cursor entry or pin).
+    session: RolloutSession,
     factory: Arc<dyn SandboxFactory>,
     task_seed: u64,
     cfg: ExecutorConfig,
@@ -94,12 +103,6 @@ pub struct ToolCallExecutor {
     sandbox: Option<Box<dyn ToolExecutionEnvironment>>,
     /// `history[..valid_upto]` is reflected in the live sandbox's state.
     valid_upto: usize,
-    /// The rollout's lookup cursor (opened on the first call; `None` until
-    /// then, or after the backend reported cursors unsupported).
-    cursor: Option<u64>,
-    /// Set once `cursor_open` returns 0: the backend has no cursor support
-    /// and the rollout stays on full-prefix lookups.
-    cursor_unsupported: bool,
     /// Total charged seconds (incl. start/stop overheads).
     pub total_charged: f64,
     pub hits: u64,
@@ -108,23 +111,25 @@ pub struct ToolCallExecutor {
 
 impl ToolCallExecutor {
     pub fn new(
-        backend: Arc<dyn CacheBackend>,
+        backend: Arc<dyn SessionBackend>,
         task: impl Into<String>,
         factory: Arc<dyn SandboxFactory>,
         task_seed: u64,
         cfg: ExecutorConfig,
     ) -> ToolCallExecutor {
-        ToolCallExecutor {
+        let session = open_session(
             backend,
-            task: task.into(),
+            task,
+            SessionConfig { use_cursor: cfg.use_cursor, batch_turns: cfg.batch_turns },
+        );
+        ToolCallExecutor {
+            session,
             factory,
             task_seed,
             cfg,
             history: Vec::new(),
             sandbox: None,
             valid_upto: 0,
-            cursor: None,
-            cursor_unsupported: false,
             total_charged: 0.0,
             hits: 0,
             misses: 0,
@@ -137,7 +142,17 @@ impl ToolCallExecutor {
 
     /// Execute one tool call (the RL loop's integration point).
     pub fn call(&mut self, call: ToolCall) -> CallOutcome {
+        self.call_with_probes(call, &[])
+    }
+
+    /// Execute one tool call, batching speculative stateless `probes` into
+    /// the same turn frame (the agent's guesses at its next read-only
+    /// calls). Probe hits are served locally by the session on later
+    /// calls; probe misses are ignored, so hit/miss decisions are
+    /// identical with or without probes.
+    pub fn call_with_probes(&mut self, call: ToolCall, probes: &[ToolCall]) -> CallOutcome {
         let outcome = if self.cfg.enabled {
+            self.session.queue_probes(probes);
             self.call_cached(call)
         } else {
             self.call_direct(call)
@@ -148,11 +163,9 @@ impl ToolCallExecutor {
 
     /// Rollout finished: tear down the live sandbox (charged; the paper's
     /// Appendix F attributes much of the baseline's cost to start/stop)
-    /// and close the lookup cursor.
+    /// and finish the session (cursor close + pin release).
     pub fn finish(&mut self) -> f64 {
-        if let Some(cur) = self.cursor.take() {
-            self.backend.cursor_close(&self.task, cur);
-        }
+        self.session.finish();
         let mut charged = 0.0;
         if let Some(mut sb) = self.sandbox.take() {
             // With proactive management the stop happens off the rollout's
@@ -190,52 +203,40 @@ impl ToolCallExecutor {
     fn call_cached(&mut self, call: ToolCall) -> CallOutcome {
         let charged = self.cfg.cache_get_latency;
 
-        // Open the rollout's cursor lazily — only while the history is
-        // empty, because a fresh cursor sits at the TCG root: opening one
-        // mid-rollout would desynchronize it from the prefix.
-        if self.cfg.use_cursor
-            && !self.cursor_unsupported
-            && self.cursor.is_none()
-            && self.history.is_empty()
-        {
-            match self.backend.cursor_open(&self.task) {
-                0 => self.cursor_unsupported = true,
-                id => self.cursor = Some(id),
+        // Hot path: one O(1) session step carrying only the delta call —
+        // no full-history clone, no O(L) wire payload, and (with a
+        // negotiated turn-batch backend) one wire frame for the whole
+        // reasoning turn. The session opens its cursor lazily on the first
+        // call and handles the unsupported/mid-rollout cases by reporting
+        // `Invalid`, which lands on the full-prefix path below.
+        match self.session.step(&call) {
+            CursorStep::Hit { node: _, result } => {
+                self.hits += 1;
+                self.history.push((call, result.clone()));
+                // Live sandbox (if any) now lags history; `valid_upto`
+                // already reflects that.
+                return CallOutcome { result, charged, hit: true };
             }
-        }
-
-        // Hot path: one O(1) cursor step carrying only the delta call —
-        // no full-history clone, no O(L) wire payload.
-        if let Some(cur) = self.cursor {
-            match self.backend.cursor_step(&self.task, cur, &call) {
-                CursorStep::Hit { node: _, result } => {
-                    self.hits += 1;
-                    self.history.push((call, result.clone()));
-                    // Live sandbox (if any) now lags history; `valid_upto`
-                    // already reflects that.
-                    return CallOutcome { result, charged, hit: true };
-                }
-                CursorStep::Miss(miss) => {
-                    return self.execute_miss(call, &miss, charged, true);
-                }
-                CursorStep::Invalid => {
-                    // The cursor's node was evicted (or the transport
-                    // hiccuped): fall through to the full-prefix path for
-                    // this call, which re-seeks the cursor afterwards.
-                }
+            CursorStep::Miss(miss) => {
+                return self.execute_miss(call, &miss, charged, true);
+            }
+            CursorStep::Invalid => {
+                // The cursor's node was evicted, the transport hiccuped,
+                // or the backend has no cursor support: fall through to
+                // the full-prefix path, which re-seeks afterwards.
             }
         }
 
         // Full-prefix (legacy / fallback) path.
         let mut q: Vec<ToolCall> = self.history.iter().map(|(c, _)| c.clone()).collect();
         q.push(call.clone());
-        match self.backend.lookup(&self.task, &q) {
+        match self.session.lookup_full(&q) {
             Lookup::Hit { node, result } => {
                 self.hits += 1;
                 self.history.push((call, result.clone()));
                 // A mutating hit's node — or a stateless hit's parent — is
                 // exactly the rollout's TCG position: re-seat the cursor.
-                self.reseek_cursor(node);
+                self.session.seek(node, self.history.len());
                 CallOutcome { result, charged, hit: true }
             }
             Lookup::Miss(miss) => self.execute_miss(call, &miss, charged, false),
@@ -271,14 +272,13 @@ impl ToolCallExecutor {
             && !self.history[..self.history.len() - 1]
                 .iter()
                 .any(|(c, _)| c.mutates_state);
-        let node = match (record_delta, self.cursor) {
-            (true, Some(cur)) => {
-                match self.backend.cursor_record(&self.task, cur, &call, &result) {
-                    0 if !root_legal => self.insert_full_and_reseek(),
-                    n => n,
-                }
+        let node = if record_delta {
+            match self.session.record(&call, &result) {
+                0 if !root_legal => self.insert_full_and_reseek(),
+                n => n,
             }
-            _ => self.insert_full_and_reseek(),
+        } else {
+            self.insert_full_and_reseek()
         };
 
         // §3.3 selective snapshotting, on the critical path; the
@@ -294,37 +294,25 @@ impl ToolCallExecutor {
                 serialize_cost: snap.serialize_cost,
                 restore_cost: snap.restore_cost,
             };
-            if self.backend.should_snapshot(&self.task, costs) {
+            if self.session.should_snapshot(costs) {
                 charged += snap.serialize_cost;
                 // id 0 = the store rejected the attach (node pinned
                 // or evicted concurrently): no snapshot was kept,
                 // so there is nothing to background-fork.
-                let id = self.backend.store_snapshot(&self.task, node, snap);
+                let id = self.session.store_snapshot(node, snap);
                 if id != 0 && self.cfg.background_forks {
-                    self.backend.set_warm_fork(&self.task, node, true);
+                    self.session.set_warm_fork(node, true);
                 }
             }
         }
         CallOutcome { result, charged, hit: false }
     }
 
-    /// Full-trajectory insert, then re-seat the cursor on the returned
-    /// node. Returns the node (0 = remote failure sentinel).
+    /// Full-trajectory insert through the session, which re-seats the
+    /// cursor on the returned node. Returns it (0 = remote failure
+    /// sentinel).
     fn insert_full_and_reseek(&mut self) -> usize {
-        let node = self.backend.insert(&self.task, &self.history);
-        if node != 0 {
-            self.reseek_cursor(node);
-        }
-        node
-    }
-
-    fn reseek_cursor(&mut self, node: usize) {
-        if let Some(cur) = self.cursor {
-            // A failed seek (node evicted again / transport) leaves the
-            // cursor stale: the next step reports Invalid and this same
-            // fallback runs again — correctness never depends on the seek.
-            self.backend.cursor_seek(&self.task, cur, node, self.history.len());
-        }
+        self.session.insert_full(&self.history)
     }
 
     /// Bring `self.sandbox` to the state implied by the current history
@@ -343,7 +331,7 @@ impl ToolCallExecutor {
         // still pinned the resume node; return the pin unused.
         if self.sandbox.is_some() && self.valid_upto == prefix_len {
             if let Some((node, _, _)) = miss.resume {
-                self.backend.release(&self.task, node);
+                self.session.release(node);
             }
             return 0.0;
         }
@@ -374,7 +362,7 @@ impl ToolCallExecutor {
             if replay_start >= idx {
                 // The snapshot cannot skip any replay work: keep what we
                 // have, return the pin unused.
-                self.backend.release(&self.task, node);
+                self.session.release(node);
                 return None;
             }
             // Seconds of replay the snapshot saves: the recorded latencies
@@ -390,17 +378,17 @@ impl ToolCallExecutor {
                 .filter(|(c, _)| c.mutates_state)
                 .map(|(_, r)| r.exec_time)
                 .sum();
-            if snap.restore_cost >= saved && !self.backend.has_warm_fork(&self.task, node)
+            if snap.restore_cost >= saved && !self.session.has_warm_fork(node)
             {
-                self.backend.release(&self.task, node);
+                self.session.release(node);
                 return None;
             }
-            match self.backend.fetch_snapshot(&self.task, snap.id) {
+            match self.session.fetch_snapshot(snap.id) {
                 Some(s) => Some((node, s, idx)),
                 None => {
                     // Snapshot gone (evicted / transport failure): the pin
                     // from the lookup must still be returned.
-                    self.backend.release(&self.task, node);
+                    self.session.release(node);
                     None
                 }
             }
@@ -443,15 +431,15 @@ impl ToolCallExecutor {
         node: usize,
         snap: crate::sandbox::SandboxSnapshot,
     ) -> f64 {
-        let charged = if self.backend.has_warm_fork(&self.task, node) {
+        let charged = if self.session.has_warm_fork(node) {
             // §3.3 reactive forking found a background-instantiated copy.
-            self.backend.set_warm_fork(&self.task, node, false);
+            self.session.set_warm_fork(node, false);
             self.cfg.warm_fork_attach
         } else {
             snap.restore_cost
         };
         self.sandbox = Some(self.factory.restore(&snap));
-        self.backend.release(&self.task, node);
+        self.session.release(node);
         charged
     }
 }
@@ -482,7 +470,7 @@ fn depth_to_index(flags: impl Iterator<Item = bool>, depth: usize, len: usize) -
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::cache::ShardedCacheService;
+    use crate::cache::{CacheBackend, ShardedCacheService};
     use crate::sandbox::TerminalFactory;
 
     const TASK: &str = "task-under-test";

@@ -1,11 +1,14 @@
-//! Client library (the paper's `tvclient`): the HTTP `CacheBackend`
-//! binding and the `ToolCallExecutor` the RL training loop integrates with
-//! (Figure 4). Both the remote binding here and the in-process
-//! [`crate::cache::ShardedCacheService`] implement the same
-//! [`crate::cache::CacheBackend`] trait.
+//! Client library (the paper's `tvclient`): the HTTP binding, the owned
+//! [`RolloutSession`] handle (session API v2), and the `ToolCallExecutor`
+//! the RL training loop integrates with (Figure 4). Both the remote
+//! binding here and the in-process [`crate::cache::ShardedCacheService`]
+//! implement the same [`crate::cache::CacheBackend`] +
+//! [`crate::cache::SessionBackend`] traits.
 
 pub mod binding;
 pub mod executor;
+pub mod session;
 
 pub use binding::RemoteBinding;
 pub use executor::{CallOutcome, ExecutorConfig, ToolCallExecutor};
+pub use session::{open_session, RolloutSession, SessionConfig};

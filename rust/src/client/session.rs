@@ -1,0 +1,573 @@
+//! The owned rollout-session handle — the client half of the session API
+//! v2 (`open_session` → [`RolloutSession`] → `finish()`).
+//!
+//! PRs 1–3 grew the cache surface into 10+ per-call methods that every
+//! caller had to sequence by hand: open a cursor lazily (but only at the
+//! rollout's start), step it, fall back to a full-prefix lookup on
+//! `Invalid`, re-seek after the fallback, release every resume pin exactly
+//! once, close the cursor at the end — and a panic anywhere leaked the
+//! server-side cursor entry and any outstanding pin. `RolloutSession`
+//! owns all of that: the task binding, the cursor position, and every
+//! pinned snapshot/resume ref, releasing everything on [`finish`] or
+//! `Drop`, so a panicking rollout can never leak server-side state.
+//!
+//! The handle also carries the turn-level batched hot path: with a
+//! backend that negotiated [`Capabilities::turn_batch`], each
+//! [`RolloutSession::step`]/[`RolloutSession::record`] ships as a single
+//! `/session_turn` frame that can carry speculative stateless *probes*
+//! alongside the stateful op — one wire round trip per reasoning turn
+//! instead of one per lookup. Probe hits are cached locally and served
+//! with zero round trips when the rollout actually issues the probed
+//! call; probe misses are deliberately forgotten (trusting them could
+//! diverge from a concurrent rollout's record), so batched and unbatched
+//! paths make identical hit/miss decisions.
+//!
+//! [`finish`]: RolloutSession::finish
+
+use std::sync::Arc;
+
+use crate::cache::{
+    CacheStats, Capabilities, CursorStep, Lookup, NodeId, SessionBackend, SnapshotCosts,
+    ToolCall, ToolResult, TurnBatch, TurnOp, TurnReply,
+};
+use crate::sandbox::SandboxSnapshot;
+
+/// Session knobs (mirrored from `ExecutorConfig`).
+#[derive(Debug, Clone, Copy)]
+pub struct SessionConfig {
+    /// Use a stateful lookup cursor (the O(1) delta path). `false` keeps
+    /// the whole rollout on full-prefix lookups.
+    pub use_cursor: bool,
+    /// Ship cursor ops as `/session_turn` batch frames when the backend
+    /// advertises the capability; `false` forces the per-call cursor
+    /// endpoints (the fig10 A/B baseline).
+    pub batch_turns: bool,
+}
+
+impl Default for SessionConfig {
+    fn default() -> Self {
+        SessionConfig { use_cursor: true, batch_turns: true }
+    }
+}
+
+/// Open a rollout session on `backend` for `task` — the entry point of the
+/// v2 API. Performs no I/O: capability negotiation and the cursor open are
+/// deferred to the first lookup (and the open piggybacks on the first turn
+/// frame when batching is negotiated), so a cacheless or short-circuited
+/// rollout costs nothing.
+pub fn open_session(
+    backend: Arc<dyn SessionBackend>,
+    task: impl Into<String>,
+    cfg: SessionConfig,
+) -> RolloutSession {
+    RolloutSession {
+        backend,
+        task: task.into(),
+        cfg,
+        caps: None,
+        cursor: 0,
+        unsupported: false,
+        touched: false,
+        consumed: 0,
+        pins: Vec::new(),
+        probe_cache: Vec::new(),
+        queued_probes: Vec::new(),
+        finished: false,
+    }
+}
+
+/// One rollout's owned cache session. See the module docs; obtain one via
+/// [`open_session`], drive it through `step`/`record`/`lookup_full`, and
+/// let [`RolloutSession::finish`] (or `Drop`) tear everything down.
+pub struct RolloutSession {
+    backend: Arc<dyn SessionBackend>,
+    /// Task id the backend routes on (§4.5 task-id sharding) — owned by
+    /// the session so callers can't mix tasks mid-rollout.
+    task: String,
+    cfg: SessionConfig,
+    /// Negotiated once on first use (the backend caches the wire handshake
+    /// itself, so this is one virtual call after the first lookup).
+    caps: Option<Capabilities>,
+    /// Server-side session / cursor id (0 = none).
+    cursor: u64,
+    /// Set when the backend refused a cursor (or lost one turn-open): the
+    /// rollout stays on full-prefix lookups, never re-probing per call.
+    unsupported: bool,
+    /// Any lookup happened: a cursor may no longer be opened (a fresh one
+    /// sits at the TCG root and would desynchronize from the prefix).
+    touched: bool,
+    /// Calls consumed so far (mirrors the executor's history length while
+    /// the cursor path is in sync).
+    consumed: usize,
+    /// Resume-offer pins this rollout still owes a release for. Every miss
+    /// path releases explicitly; whatever survives (panic, early drop) is
+    /// handed back in [`RolloutSession::finish`].
+    pins: Vec<NodeId>,
+    /// Probe hits valid at the current session position, keyed by the
+    /// probed call's fingerprint. Cleared whenever the position moves.
+    probe_cache: Vec<(u64, ToolResult)>,
+    /// Probes to attach to the next turn frame.
+    queued_probes: Vec<ToolCall>,
+    finished: bool,
+}
+
+impl RolloutSession {
+    pub fn task(&self) -> &str {
+        &self.task
+    }
+
+    /// Outstanding resume pins (diagnostics/tests).
+    pub fn pin_count(&self) -> usize {
+        self.pins.len()
+    }
+
+    /// Calls consumed through the session so far (hits + committed
+    /// misses, including probe-cache hits served locally).
+    pub fn consumed(&self) -> usize {
+        self.consumed
+    }
+
+    /// Negotiated capabilities (resolves the handshake on first call).
+    pub fn capabilities(&mut self) -> Capabilities {
+        *self.caps.get_or_insert_with(|| self.backend.capabilities())
+    }
+
+    /// Queue speculative stateless probes for the next turn frame.
+    /// Mutating calls are ignored (probing one could never be answered
+    /// without advancing state). No-op unless batching is negotiated —
+    /// probes only exist to fill otherwise-idle space in a turn frame.
+    pub fn queue_probes(&mut self, probes: &[ToolCall]) {
+        if probes.is_empty() || !self.batched() {
+            return;
+        }
+        self.queued_probes.extend(probes.iter().filter(|p| !p.mutates_state).cloned());
+    }
+
+    fn batched(&mut self) -> bool {
+        self.cfg.use_cursor && self.cfg.batch_turns && self.capabilities().turn_batch
+    }
+
+    /// Serve a stateless call from the probe cache, if the last turn's
+    /// probes covered it. Zero round trips; correctness holds because a
+    /// cached stateless result at an unchanged position is exactly what a
+    /// cursor step would return (values are deterministic given state, so
+    /// even a concurrent eviction cannot make the served result wrong).
+    ///
+    /// Known skew (inherent to serving without a round trip): the server
+    /// session's step count does not advance for a locally-served call, so
+    /// a later miss's informational `matched_calls` — and the per-task
+    /// `lookups`/`partial_hits` counters — under-count by the number of
+    /// probe-served calls. Hit/miss *decisions* are unaffected, and
+    /// rollouts that never pass probes (both training drivers) see
+    /// byte-identical statistics to the legacy path.
+    fn probe_hit(&mut self, call: &ToolCall) -> Option<ToolResult> {
+        if call.mutates_state {
+            return None;
+        }
+        let key = call.key();
+        let i = self.probe_cache.iter().position(|(k, _)| *k == key)?;
+        Some(self.probe_cache[i].1.clone())
+    }
+
+    fn absorb_probe_replies(&mut self, sent: &[ToolCall], replies: Vec<Option<ToolResult>>) {
+        for (probe, reply) in sent.iter().zip(replies) {
+            if let Some(result) = reply {
+                self.probe_cache.push((probe.key(), result));
+            }
+        }
+    }
+
+    /// The position moved (mutating hit/record, seek, fallback): every
+    /// cached probe answer was for the old position.
+    fn invalidate_probes(&mut self) {
+        self.probe_cache.clear();
+    }
+
+    /// Incremental lookup of the rollout's next call — the hot path. Opens
+    /// the cursor lazily on the first call (piggybacked on the turn frame
+    /// when batching). `Invalid` means "use [`RolloutSession::lookup_full`]
+    /// for this call"; the session re-arms itself on the follow-up
+    /// [`RolloutSession::seek`].
+    pub fn step(&mut self, call: &ToolCall) -> CursorStep {
+        if let Some(result) = self.probe_hit(call) {
+            self.touched = true;
+            self.consumed += 1;
+            // Stateless by construction (only stateless calls are probed),
+            // so the position is unchanged and the node id is irrelevant
+            // to callers (hit handling never re-seeks).
+            return CursorStep::Hit { node: 0, result };
+        }
+        if !self.cfg.use_cursor || self.unsupported {
+            self.touched = true;
+            return CursorStep::Invalid;
+        }
+        let opening = self.cursor == 0;
+        if opening && self.touched {
+            // Mid-rollout: a fresh root cursor would desync from the
+            // prefix; stay on the full-prefix path.
+            return CursorStep::Invalid;
+        }
+        self.touched = true;
+        let step = if self.batched() {
+            let batch = TurnBatch {
+                probes: std::mem::take(&mut self.queued_probes),
+                op: TurnOp::Step(call.clone()),
+            };
+            let reply = self.backend.session_turn(&self.task, self.cursor, &batch);
+            // `apply_turn_reply` invalidates the stale probe cache (when
+            // the step moved the position) *before* absorbing the reply's
+            // probes, which the server evaluated at the post-step position.
+            self.apply_turn_reply(&batch, reply, opening)
+        } else {
+            if opening {
+                match self.backend.cursor_open(&self.task) {
+                    0 => {
+                        self.unsupported = true;
+                        return CursorStep::Invalid;
+                    }
+                    id => self.cursor = id,
+                }
+            }
+            let step = self.backend.cursor_step(&self.task, self.cursor, call);
+            if call.mutates_state && step.is_hit() {
+                // Per-call path: a mutating hit moved the position, so any
+                // earlier probe answers are stale. (The cache is only ever
+                // populated in batched mode, so this is belt-and-braces.)
+                self.invalidate_probes();
+            }
+            step
+        };
+        match &step {
+            CursorStep::Hit { .. } => {
+                self.consumed += 1;
+            }
+            CursorStep::Miss(m) => {
+                // The call is consumed either way (executed + recorded by
+                // the caller); the offer's pin is now this session's debt.
+                self.consumed += 1;
+                if let Some((node, _, _)) = m.resume {
+                    self.pins.push(node);
+                }
+            }
+            CursorStep::Invalid => {}
+        }
+        step
+    }
+
+    /// Record the executed delta at the cursor and advance it. Returns the
+    /// new position's node id, 0 on failure (fall back to
+    /// [`RolloutSession::insert_full`]).
+    pub fn record(&mut self, call: &ToolCall, result: &ToolResult) -> NodeId {
+        if self.cursor == 0 {
+            return 0;
+        }
+        let node = if self.batched() {
+            let batch = TurnBatch {
+                probes: std::mem::take(&mut self.queued_probes),
+                op: TurnOp::Record(call.clone(), result.clone()),
+            };
+            let reply = self.backend.session_turn(&self.task, self.cursor, &batch);
+            let node = reply.recorded.unwrap_or(0);
+            if call.mutates_state {
+                self.invalidate_probes();
+            }
+            // Probes rode the record frame and were evaluated at the
+            // post-record position — exactly where the next turn starts.
+            self.absorb_turn_probes(&batch, reply);
+            node
+        } else {
+            let node = self.backend.cursor_record(&self.task, self.cursor, call, result);
+            if call.mutates_state {
+                self.invalidate_probes();
+            }
+            node
+        };
+        node
+    }
+
+    fn apply_turn_reply(
+        &mut self,
+        batch: &TurnBatch,
+        reply: TurnReply,
+        opening: bool,
+    ) -> CursorStep {
+        if reply.cursor == 0 {
+            if opening {
+                // The backend has no session support (or its table is
+                // full): this rollout stays on full-prefix lookups.
+                self.unsupported = true;
+            }
+            // Mid-rollout refusal/transport failure: keep the cursor — the
+            // server entry may be fine — and fall back for this call only.
+            return CursorStep::Invalid;
+        }
+        self.cursor = reply.cursor;
+        // Destructure instead of cloning: the step payload (a hit carries
+        // the full cached output string) goes straight to the caller.
+        let TurnReply { probes, step, .. } = reply;
+        let step = step.unwrap_or(CursorStep::Invalid);
+        // A mutating step hit advanced the position: clear the stale probe
+        // answers *before* absorbing this reply's, which the server
+        // evaluated at the new position.
+        if step.is_hit() {
+            if let TurnOp::Step(call) = &batch.op {
+                if call.mutates_state {
+                    self.invalidate_probes();
+                }
+            }
+        }
+        self.absorb_probe_replies(&batch.probes, probes);
+        step
+    }
+
+    fn absorb_turn_probes(&mut self, batch: &TurnBatch, reply: TurnReply) {
+        if !batch.probes.is_empty() {
+            self.absorb_probe_replies(&batch.probes, reply.probes);
+        }
+    }
+
+    /// Full-prefix lookup (the legacy path / the `Invalid` fallback). A
+    /// miss's resume pin becomes session debt like any other.
+    pub fn lookup_full(&mut self, q: &[ToolCall]) -> Lookup {
+        self.touched = true;
+        self.invalidate_probes();
+        let out = self.backend.lookup(&self.task, q);
+        if let Lookup::Miss(m) = &out {
+            if let Some((node, _, _)) = m.resume {
+                self.pins.push(node);
+            }
+        }
+        out
+    }
+
+    /// Full-trajectory insert, then re-seat the cursor on the returned
+    /// node. Returns the node (0 = remote failure sentinel).
+    pub fn insert_full(&mut self, traj: &[(ToolCall, ToolResult)]) -> NodeId {
+        self.touched = true;
+        let node = self.backend.insert(&self.task, traj);
+        if node != 0 {
+            self.seek(node, traj.len());
+        }
+        node
+    }
+
+    /// Re-seat the cursor after a fallback re-established the position.
+    ///
+    /// A failed seek usually means the server swept this session (idle
+    /// longer than its TTL — a stalled rollout that came back): recover by
+    /// opening a fresh cursor and seating it directly on `node`, so the
+    /// rest of the rollout returns to the O(1) path instead of paying a
+    /// wasted `Invalid` round trip plus a full-prefix lookup per call. If
+    /// even the fresh cursor cannot be seated (the node died in between),
+    /// the session goes cursorless — a root-parked cursor must never be
+    /// stepped mid-rollout — and the rollout stays on full-prefix lookups.
+    /// Correctness never depends on the seek.
+    pub fn seek(&mut self, node: NodeId, steps: usize) {
+        self.invalidate_probes();
+        if self.cursor == 0 {
+            return;
+        }
+        if self.backend.cursor_seek(&self.task, self.cursor, node, steps) {
+            self.consumed = steps;
+            return;
+        }
+        // Cursor unknown server-side (swept) or the node is gone: replace
+        // it. Executor flows hold no outstanding offer pins at seek time
+        // (every miss path releases before recording), so closing the old
+        // entry releases nothing the client still owes.
+        self.backend.cursor_close(&self.task, self.cursor);
+        self.cursor = 0;
+        let fresh = self.backend.cursor_open(&self.task);
+        if fresh == 0 {
+            return; // cursorless: full-prefix for the rest of the rollout
+        }
+        if self.backend.cursor_seek(&self.task, fresh, node, steps) {
+            self.cursor = fresh;
+            self.consumed = steps;
+        } else {
+            self.backend.cursor_close(&self.task, fresh);
+        }
+    }
+
+    /// Hand back one resume pin (the rollout is done with the offer).
+    pub fn release(&mut self, node: NodeId) {
+        if let Some(i) = self.pins.iter().position(|&p| p == node) {
+            self.pins.swap_remove(i);
+        }
+        self.backend.session_release(&self.task, self.cursor, node);
+    }
+
+    // ---- task-scoped pass-throughs (the executor's miss path) ----
+
+    pub fn should_snapshot(&self, costs: SnapshotCosts) -> bool {
+        self.backend.should_snapshot(&self.task, costs)
+    }
+
+    pub fn store_snapshot(&self, node: NodeId, snap: SandboxSnapshot) -> u64 {
+        self.backend.store_snapshot(&self.task, node, snap)
+    }
+
+    pub fn fetch_snapshot(&self, id: u64) -> Option<SandboxSnapshot> {
+        self.backend.fetch_snapshot(&self.task, id)
+    }
+
+    pub fn set_warm_fork(&self, node: NodeId, warm: bool) {
+        self.backend.set_warm_fork(&self.task, node, warm);
+    }
+
+    pub fn has_warm_fork(&self, node: NodeId) -> bool {
+        self.backend.has_warm_fork(&self.task, node)
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        self.backend.stats(&self.task)
+    }
+
+    /// Rollout finished: release every outstanding pin and close the
+    /// cursor (dropping the server-side session entry, which releases any
+    /// pins *it* still tracks). Idempotent; `Drop` calls it, so a leaked
+    /// or panicking rollout tears down exactly like a finished one.
+    pub fn finish(&mut self) {
+        if self.finished {
+            return;
+        }
+        self.finished = true;
+        for node in std::mem::take(&mut self.pins) {
+            self.backend.session_release(&self.task, self.cursor, node);
+        }
+        if self.cursor != 0 {
+            self.backend.cursor_close(&self.task, self.cursor);
+            self.cursor = 0;
+        }
+        self.probe_cache.clear();
+        self.queued_probes.clear();
+    }
+}
+
+impl Drop for RolloutSession {
+    fn drop(&mut self) {
+        self.finish();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cache::{CacheBackend, ShardedCacheService};
+    use crate::sandbox::SandboxSnapshot;
+
+    const TASK: &str = "session-task";
+
+    fn sf(s: &str) -> ToolCall {
+        ToolCall::new("t", s)
+    }
+
+    fn sl(s: &str) -> ToolCall {
+        ToolCall::stateless("t", s)
+    }
+
+    fn warm_service() -> (Arc<ShardedCacheService>, NodeId) {
+        let svc = Arc::new(ShardedCacheService::new(2));
+        let traj: Vec<(ToolCall, ToolResult)> = ["a", "b"]
+            .iter()
+            .map(|c| (sf(c), ToolResult::new(format!("out-{c}"), 1.0)))
+            .collect();
+        let node = svc.insert(TASK, &traj);
+        let snap =
+            SandboxSnapshot { bytes: vec![1u8; 16], serialize_cost: 0.1, restore_cost: 0.2 };
+        assert!(svc.store_snapshot(TASK, node, snap) > 0);
+        (svc, node)
+    }
+
+    fn open(svc: &Arc<ShardedCacheService>, cfg: SessionConfig) -> RolloutSession {
+        open_session(Arc::clone(svc) as Arc<dyn SessionBackend>, TASK, cfg)
+    }
+
+    #[test]
+    fn dropped_session_releases_cursor_and_pins() {
+        let (svc, _) = warm_service();
+        let mut s = open(&svc, SessionConfig::default());
+        assert!(s.step(&sf("a")).is_hit());
+        assert!(s.step(&sf("b")).is_hit());
+        // Divergent step: miss with a pinned resume offer the rollout
+        // never releases (models a panic mid-miss).
+        assert!(matches!(s.step(&sf("zz")), CursorStep::Miss(_)));
+        assert_eq!(s.pin_count(), 1);
+        assert_eq!(svc.session_count(), 1);
+        assert_eq!(svc.task(TASK).pinned_node_count(), 1);
+        drop(s); // no finish(): the Drop guard must tear everything down
+        assert_eq!(svc.session_count(), 0, "leaked session entry");
+        assert_eq!(svc.task(TASK).pinned_node_count(), 0, "leaked resume pin");
+    }
+
+    #[test]
+    fn finish_is_idempotent_and_explicit_release_prevents_double_free() {
+        let (svc, node) = warm_service();
+        let mut s = open(&svc, SessionConfig::default());
+        assert!(s.step(&sf("a")).is_hit());
+        assert!(s.step(&sf("b")).is_hit());
+        let CursorStep::Miss(m) = s.step(&sf("zz")) else { panic!("expected miss") };
+        let (rnode, _, _) = m.resume.expect("snapshot offered");
+        assert_eq!(rnode, node);
+        s.release(rnode);
+        assert_eq!(s.pin_count(), 0);
+        assert_eq!(svc.task(TASK).pinned_node_count(), 0);
+        // A second rollout pins the same node; our finish must not steal it.
+        let mut other = open(&svc, SessionConfig::default());
+        assert!(other.step(&sf("a")).is_hit());
+        assert!(other.step(&sf("b")).is_hit());
+        assert!(matches!(other.step(&sf("yy")), CursorStep::Miss(_)));
+        assert_eq!(svc.task(TASK).pinned_node_count(), 1);
+        s.finish();
+        s.finish();
+        assert_eq!(
+            svc.task(TASK).pinned_node_count(),
+            1,
+            "finish of a pin-free session must not release another rollout's pin"
+        );
+        drop(other);
+        assert_eq!(svc.task(TASK).pinned_node_count(), 0);
+    }
+
+    #[test]
+    fn probe_hit_served_locally_and_invalidated_on_mutation() {
+        let svc = Arc::new(ShardedCacheService::new(2));
+        // Warm: a (mutating) then stateless reads indexed on it.
+        svc.insert(
+            TASK,
+            &[
+                (sf("a"), ToolResult::new("out-a", 1.0)),
+                (sl("cat x"), ToolResult::new("x-contents", 0.1)),
+            ],
+        );
+        let mut s = open(&svc, SessionConfig::default());
+        s.queue_probes(&[sl("cat x"), sl("cat missing")]);
+        assert!(s.step(&sf("a")).is_hit(), "probes ride the step frame");
+        let lookups_before = svc.stats(TASK).lookups;
+        // The probed stateless call is served locally: no backend lookup.
+        match s.step(&sl("cat x")) {
+            CursorStep::Hit { result, .. } => assert_eq!(result.output, "x-contents"),
+            step => panic!("probe-covered call must hit locally: {step:?}"),
+        }
+        assert_eq!(
+            svc.stats(TASK).lookups,
+            lookups_before,
+            "a probe-cache hit must not issue a backend lookup"
+        );
+        // The un-probed miss still goes to the backend (probe misses are
+        // never trusted).
+        assert!(matches!(s.step(&sl("cat missing")), CursorStep::Miss(_)));
+        assert_eq!(s.consumed(), 3, "probe-served hits count as consumed calls");
+    }
+
+    #[test]
+    fn cursorless_config_stays_on_full_prefix_path() {
+        let (svc, _) = warm_service();
+        let mut s =
+            open(&svc, SessionConfig { use_cursor: false, batch_turns: true });
+        assert_eq!(s.step(&sf("a")), CursorStep::Invalid);
+        assert!(s.lookup_full(&[sf("a")]).is_hit());
+        assert_eq!(svc.session_count(), 0, "cursorless session must not open one");
+        s.finish();
+    }
+}

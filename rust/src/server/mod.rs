@@ -18,6 +18,11 @@
 //!   (binary)
 //! * `POST /cursor_seek`   — re-seat a cursor after a fallback (binary)
 //! * `POST /cursor_close`  — drop a cursor (binary)
+//! * `POST /capabilities`  — binary capability handshake: negotiated once
+//!   per binding instead of sniffing every request (`GET` = JSON debug view)
+//! * `POST /session_turn`  — one reasoning turn's batched ops: speculative
+//!   stateless probes + at most one stateful step/record, in one frame
+//! * `POST /session_release` — return a session-owned resume pin (binary)
 //! * `POST /snapshot`      — store a serialized sandbox for a node
 //! * `GET  /snapshot`      — fetch snapshot bytes (`?task=&id=`)
 //! * `POST /warm`          — mark a node's background fork warm
@@ -40,8 +45,8 @@ use std::sync::Arc;
 
 use crate::cache::key::{trajectory_from_json, trajectory_json_into, ToolCall};
 use crate::cache::{
-    CacheBackend, CacheFactory, CursorStep, Lookup, ShardedCacheService, TaskCache,
-    ToolResult,
+    CacheBackend, CacheFactory, Capabilities, CursorStep, Lookup, SessionBackend,
+    ShardedCacheService, TaskCache, ToolResult,
 };
 use crate::sandbox::SandboxSnapshot;
 use crate::util::http::{Handler, Request, Response, Server};
@@ -82,6 +87,12 @@ impl CacheService {
         &self.sharded
     }
 
+    /// The session extension surface (cursors, turn batches, capability
+    /// negotiation).
+    pub fn session_backend(&self) -> &dyn SessionBackend {
+        &self.sharded
+    }
+
     /// White-box access to a per-task cache (tests, persistence jobs).
     pub fn task(&self, id: &str) -> Arc<TaskCache> {
         self.sharded.task(id)
@@ -94,6 +105,16 @@ impl CacheService {
     /// Stored snapshots across all shards.
     pub fn snapshot_count(&self) -> usize {
         self.sharded.snapshot_count()
+    }
+
+    /// Live rollout sessions across all shards (leak diagnostics).
+    pub fn session_count(&self) -> usize {
+        self.sharded.session_count()
+    }
+
+    /// Resume pins owned by server-side session entries (leak diagnostics).
+    pub fn session_pin_count(&self) -> usize {
+        self.sharded.session_pin_count()
     }
 
     /// White-box eviction of one node's snapshot (tests of the unpinned
@@ -124,6 +145,10 @@ impl CacheService {
             ("POST", "/cursor_record") => self.cursor_record(req),
             ("POST", "/cursor_seek") => self.cursor_seek(req),
             ("POST", "/cursor_close") => self.cursor_close(req),
+            ("POST", "/capabilities") => self.capabilities(req),
+            ("GET", "/capabilities") => self.capabilities_json(),
+            ("POST", "/session_turn") => self.session_turn(req),
+            ("POST", "/session_release") => self.session_release(req),
             ("POST", "/snapshot") => self.store_snapshot(req),
             ("GET", "/snapshot") => self.fetch_snapshot(req),
             ("POST", "/warm") => self.set_warm(req),
@@ -219,7 +244,7 @@ impl CacheService {
         let Some(task) = decoded else {
             return Response::bad_request_static("bad cursor_open frame");
         };
-        let id = self.backend().cursor_open(&task);
+        let id = self.session_backend().cursor_open(&task);
         let mut buf = Vec::with_capacity(9);
         wire::enc_u64_resp(&mut buf, id);
         Response::binary(buf)
@@ -236,7 +261,7 @@ impl CacheService {
         let Some((task, cursor, call)) = decoded else {
             return Response::bad_request_static("bad cursor_step frame");
         };
-        let out = self.backend().cursor_step(&task, cursor, &call);
+        let out = self.session_backend().cursor_step(&task, cursor, &call);
         if let CursorStep::Miss(m) = &out {
             // Same unpinned-offer contract as every wire lookup.
             self.unpin_offer(&task, &m.resume);
@@ -258,7 +283,7 @@ impl CacheService {
         let Some((task, cursor, call, result)) = decoded else {
             return Response::bad_request_static("bad cursor_record frame");
         };
-        let node = self.backend().cursor_record(&task, cursor, &call, &result);
+        let node = self.session_backend().cursor_record(&task, cursor, &call, &result);
         let mut buf = Vec::with_capacity(9);
         wire::enc_u64_resp(&mut buf, node as u64);
         Response::binary(buf)
@@ -276,7 +301,7 @@ impl CacheService {
         let Some((task, cursor, node, steps)) = decoded else {
             return Response::bad_request_static("bad cursor_seek frame");
         };
-        let ok = self.backend().cursor_seek(&task, cursor, node, steps);
+        let ok = self.session_backend().cursor_seek(&task, cursor, node, steps);
         let mut buf = Vec::with_capacity(1);
         wire::enc_bool_resp(&mut buf, ok);
         Response::binary(buf)
@@ -292,7 +317,68 @@ impl CacheService {
         let Some((task, cursor)) = decoded else {
             return Response::bad_request_static("bad cursor_close frame");
         };
-        self.backend().cursor_close(&task, cursor);
+        self.session_backend().cursor_close(&task, cursor);
+        Response::binary(Vec::new())
+    }
+
+    // ---- session API v2 --------------------------------------------------
+
+    /// The binary capability handshake: a client hello (protocol
+    /// generation) answered with what this server speaks. Negotiated once
+    /// per binding, replacing per-request magic-byte guessing for v2
+    /// clients; old clients never call this and keep being sniffed.
+    fn capabilities(&self, req: &Request) -> Response {
+        let Some(client_proto) = wire::dec_hello(&req.body) else {
+            return Response::bad_request_static("bad hello frame");
+        };
+        let proto = client_proto.min(Capabilities::PROTO_V2);
+        let mut buf = Vec::with_capacity(4);
+        wire::enc_caps_resp(&mut buf, proto, &self.session_backend().capabilities());
+        Response::binary(buf)
+    }
+
+    /// Human-debuggable view of the handshake (`GET /capabilities`).
+    fn capabilities_json(&self) -> Response {
+        let caps = self.session_backend().capabilities();
+        Response::json(
+            Json::obj(vec![
+                ("proto", Json::num(Capabilities::PROTO_V2 as f64)),
+                ("binary", Json::Bool(caps.binary)),
+                ("cursors", Json::Bool(caps.cursors)),
+                ("turn_batch", Json::Bool(caps.turn_batch)),
+            ])
+            .to_string(),
+        )
+    }
+
+    /// One reasoning turn in one round trip: probes + at most one stateful
+    /// step/record. Unlike the legacy per-call lookups, a turn's step-miss
+    /// resume offer stays *pinned* — the pin is owned by the server-side
+    /// session entry, and close/sweep releases whatever the client never
+    /// did, so a lost response bounds the leak by the session lifetime.
+    fn session_turn(&self, req: &Request) -> Response {
+        let Some((task, cursor, batch)) = wire::dec_turn_req(&req.body) else {
+            return Response::bad_request_static("bad turn frame");
+        };
+        let reply = self.session_backend().session_turn(&task, cursor, &batch);
+        let mut buf = Vec::with_capacity(64);
+        wire::enc_turn_resp(&mut buf, &reply);
+        Response::binary(buf)
+    }
+
+    /// Return a session-owned resume pin (`task, cursor, node`).
+    fn session_release(&self, req: &Request) -> Response {
+        let decoded = (|| {
+            let mut r = wire::Reader::request(&req.body)?;
+            let task = r.str()?.to_string();
+            let cursor = r.varint()?;
+            let node = r.varint()? as usize;
+            r.done().then_some((task, cursor, node))
+        })();
+        let Some((task, cursor, node)) = decoded else {
+            return Response::bad_request_static("bad session_release frame");
+        };
+        self.session_backend().session_release(&task, cursor, node);
         Response::binary(Vec::new())
     }
 

@@ -21,7 +21,7 @@ use std::sync::Arc;
 
 use crate::agent::scripted::Agent;
 use crate::cache::{
-    CacheBackend, CacheFactory, EvictionPolicy, LpmConfig, ServiceConfig,
+    CacheBackend, CacheFactory, EvictionPolicy, LpmConfig, ServiceConfig, SessionBackend,
     ShardedCacheService, TaskCache,
 };
 use crate::client::{ExecutorConfig, ToolCallExecutor};
@@ -128,6 +128,10 @@ pub struct SimOptions {
     /// lookup (O(1) per tool call). `false` forces the legacy full-prefix
     /// path (the fig10 A/B baseline).
     pub use_cursor: bool,
+    /// Turn-level batching: cursor ops ship as single `/session_turn`
+    /// frames. `false` forces the per-call cursor endpoints; hit/miss
+    /// decisions are identical either way (asserted by a DES test).
+    pub batch_turns: bool,
 }
 
 impl SimOptions {
@@ -142,6 +146,7 @@ impl SimOptions {
             max_snapshots: 64,
             shards: 4,
             use_cursor: true,
+            batch_turns: true,
         }
     }
 }
@@ -224,6 +229,7 @@ pub fn run_workload(cfg: &WorkloadConfig, opts: &SimOptions) -> RunMetrics {
                         ExecutorConfig {
                             stateful_filtering: opts.lpm.stateful_filtering,
                             use_cursor: opts.use_cursor,
+                            batch_turns: opts.batch_turns,
                             ..ExecutorConfig::default()
                         }
                     } else {
@@ -238,7 +244,7 @@ pub fn run_workload(cfg: &WorkloadConfig, opts: &SimOptions) -> RunMetrics {
                     RolloutProc {
                         agent: cfg.agent(task_seed, rollout_seed),
                         executor: ToolCallExecutor::new(
-                            Arc::clone(&backend) as Arc<dyn CacheBackend>,
+                            Arc::clone(&backend) as Arc<dyn SessionBackend>,
                             task_name.clone(),
                             Arc::clone(&factory),
                             task_seed,
@@ -369,6 +375,8 @@ pub struct ConcurrentOptions {
     pub persist_to: Option<String>,
     /// Stateful lookup cursors (see [`SimOptions::use_cursor`]).
     pub use_cursor: bool,
+    /// Turn-level batching (see [`SimOptions::batch_turns`]).
+    pub batch_turns: bool,
 }
 
 impl ConcurrentOptions {
@@ -387,6 +395,7 @@ impl ConcurrentOptions {
             warm_start_from: None,
             persist_to: None,
             use_cursor: true,
+            batch_turns: true,
         }
     }
 }
@@ -462,12 +471,13 @@ pub fn run_concurrent(cfg: &WorkloadConfig, opts: &ConcurrentOptions) -> Concurr
             for r in 0..opts.rollouts {
                 let rollout_seed = (epoch * opts.rollouts + r) as u64;
                 let mut agent = cfg.agent(task_seed, rollout_seed);
-                let backend = Arc::clone(&backend) as Arc<dyn CacheBackend>;
+                let backend = Arc::clone(&backend) as Arc<dyn SessionBackend>;
                 let factory = Arc::clone(&factory);
                 let task_name = format!("task-{task}");
                 let exec_cfg = ExecutorConfig {
                     stateful_filtering: opts.lpm.stateful_filtering,
                     use_cursor: opts.use_cursor,
+                    batch_turns: opts.batch_turns,
                     ..ExecutorConfig::default()
                 };
                 let tx = tx.clone();
@@ -673,6 +683,27 @@ mod tests {
         let rc: Vec<f64> = cursor.rollouts.iter().map(|r| r.reward).collect();
         let rl: Vec<f64> = legacy.rollouts.iter().map(|r| r.reward).collect();
         assert_eq!(rc, rl, "cursor path changed rewards");
+    }
+
+    #[test]
+    fn batched_and_unbatched_turns_make_identical_decisions() {
+        // The acceptance DES test: turn-level batching is a wire-shape
+        // change only. The virtual-clock driver is deterministic given the
+        // seed, so the batched (`/session_turn`) and unbatched (per-call
+        // cursor) paths must make *identical* per-call hit/miss decisions
+        // — any divergence is a batching-semantics bug.
+        let cfg = WorkloadConfig::config_for(Workload::TerminalEasy);
+        let batched = run_workload(&cfg, &quick_opts(&cfg, true));
+        let mut unbatched_opts = quick_opts(&cfg, true);
+        unbatched_opts.batch_turns = false;
+        let unbatched = run_workload(&cfg, &unbatched_opts);
+        let db: Vec<bool> = batched.calls.iter().map(|c| c.hit).collect();
+        let du: Vec<bool> = unbatched.calls.iter().map(|c| c.hit).collect();
+        assert_eq!(db, du, "batching changed a per-call hit/miss decision");
+        assert_eq!(batched.epoch_hit_rates, unbatched.epoch_hit_rates);
+        let rb: Vec<f64> = batched.rollouts.iter().map(|r| r.reward).collect();
+        let ru: Vec<f64> = unbatched.rollouts.iter().map(|r| r.reward).collect();
+        assert_eq!(rb, ru, "batching changed rewards");
     }
 
     #[test]

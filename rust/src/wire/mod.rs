@@ -29,9 +29,10 @@
 //! once per epoch or per incident, and human-debuggable output there is
 //! worth more than bytes.
 
+use crate::cache::backend::{Capabilities, TurnBatch, TurnOp, TurnReply};
 use crate::cache::key::{ToolCall, ToolResult};
 use crate::cache::lpm::{CursorStep, Lookup, Miss};
-use crate::cache::tcg::SnapshotRef;
+use crate::cache::tcg::{NodeId, SnapshotRef};
 
 /// First byte of every binary request body (never `{`, so JSON sniffing
 /// on the shared endpoints is unambiguous).
@@ -251,6 +252,155 @@ pub fn enc_cursor_close(buf: &mut Vec<u8>, task: &str, cursor: u64) {
     put_varint(buf, cursor);
 }
 
+// ---- session API v2 frames ---------------------------------------------
+
+/// [`TurnOp`] tags in a turn frame.
+const OP_NONE: u8 = 0;
+const OP_STEP: u8 = 1;
+const OP_RECORD: u8 = 2;
+
+/// `/capabilities` — the client hello: just the protocol generation.
+pub fn enc_hello(buf: &mut Vec<u8>, proto: u64) {
+    buf.push(MAGIC);
+    put_varint(buf, proto);
+}
+
+/// Server side of the hello. Returns the client's protocol generation.
+pub fn dec_hello(body: &[u8]) -> Option<u64> {
+    let mut r = Reader::request(body)?;
+    let proto = r.varint()?;
+    r.done().then_some(proto)
+}
+
+/// `/capabilities` response: `proto, flags(u8: bit0 binary, bit1 cursors,
+/// bit2 turn_batch)`.
+pub fn enc_caps_resp(buf: &mut Vec<u8>, proto: u64, caps: &Capabilities) {
+    put_varint(buf, proto);
+    let flags =
+        (caps.binary as u8) | ((caps.cursors as u8) << 1) | ((caps.turn_batch as u8) << 2);
+    buf.push(flags);
+}
+
+pub fn dec_caps_resp(body: &[u8]) -> Option<(u64, Capabilities)> {
+    let mut r = Reader::response(body)?;
+    let proto = r.varint()?;
+    let flags = r.u8()?;
+    let caps = Capabilities {
+        binary: flags & 1 != 0,
+        cursors: flags & 2 != 0,
+        turn_batch: flags & 4 != 0,
+    };
+    r.done().then_some((proto, caps))
+}
+
+/// `/session_turn` — one reasoning turn's batched ops: `task, cursor
+/// (0 = open a session first), n_probes, n × call, op_tag, [call,
+/// [result]]`. The steady-state turn frame replaces N per-call round
+/// trips with one.
+pub fn enc_turn(buf: &mut Vec<u8>, task: &str, cursor: u64, batch: &TurnBatch) {
+    buf.push(MAGIC);
+    put_str(buf, task);
+    put_varint(buf, cursor);
+    put_varint(buf, batch.probes.len() as u64);
+    for p in &batch.probes {
+        put_call(buf, p);
+    }
+    match &batch.op {
+        TurnOp::None => buf.push(OP_NONE),
+        TurnOp::Step(call) => {
+            buf.push(OP_STEP);
+            put_call(buf, call);
+        }
+        TurnOp::Record(call, result) => {
+            buf.push(OP_RECORD);
+            put_call(buf, call);
+            put_result(buf, result);
+        }
+    }
+}
+
+/// Server side of the turn frame. Probe counts are capped like every other
+/// repeated field (a malicious length never pre-allocates unbounded).
+pub fn dec_turn_req(body: &[u8]) -> Option<(String, u64, TurnBatch)> {
+    let mut r = Reader::request(body)?;
+    let task = r.str()?.to_string();
+    let cursor = r.varint()?;
+    let n = r.varint()? as usize;
+    let mut probes = Vec::with_capacity(n.min(64));
+    for _ in 0..n {
+        probes.push(r.call()?);
+    }
+    let op = match r.u8()? {
+        OP_NONE => TurnOp::None,
+        OP_STEP => TurnOp::Step(r.call()?),
+        OP_RECORD => {
+            let call = r.call()?;
+            let result = r.result()?;
+            TurnOp::Record(call, result)
+        }
+        _ => return None,
+    };
+    r.done().then_some((task, cursor, TurnBatch { probes, op }))
+}
+
+/// Turn response: `cursor (0 = refused), n_probes, n × (0 | 1 + result),
+/// op_tag, [step_resp | node]`. Self-describing, so the decoder needs no
+/// request context.
+pub fn enc_turn_resp(buf: &mut Vec<u8>, reply: &TurnReply) {
+    put_varint(buf, reply.cursor);
+    put_varint(buf, reply.probes.len() as u64);
+    for p in &reply.probes {
+        match p {
+            Some(result) => {
+                buf.push(1);
+                put_result(buf, result);
+            }
+            None => buf.push(0),
+        }
+    }
+    match (&reply.step, &reply.recorded) {
+        (Some(step), _) => {
+            buf.push(OP_STEP);
+            enc_step_resp(buf, step);
+        }
+        (None, Some(node)) => {
+            buf.push(OP_RECORD);
+            put_varint(buf, *node as u64);
+        }
+        (None, None) => buf.push(OP_NONE),
+    }
+}
+
+pub fn dec_turn_resp(body: &[u8]) -> Option<TurnReply> {
+    let mut r = Reader::response(body)?;
+    let cursor = r.varint()?;
+    let n = r.varint()? as usize;
+    let mut probes = Vec::with_capacity(n.min(64));
+    for _ in 0..n {
+        probes.push(match r.u8()? {
+            0 => None,
+            1 => Some(r.result()?),
+            _ => return None,
+        });
+    }
+    let (step, recorded) = match r.u8()? {
+        OP_NONE => (None, None),
+        OP_STEP => (Some(read_step(&mut r)?), None),
+        OP_RECORD => (None, Some(r.varint()? as NodeId)),
+        _ => return None,
+    };
+    r.done().then_some(TurnReply { cursor, probes, step, recorded })
+}
+
+/// `/session_release` — return a session-owned resume pin: `task, cursor,
+/// node`.
+pub fn enc_session_release(buf: &mut Vec<u8>, task: &str, cursor: u64, node: NodeId) {
+    buf.push(MAGIC);
+    put_str(buf, task);
+    put_varint(buf, cursor);
+    put_varint(buf, node as u64);
+}
+
 // ---- response frames ---------------------------------------------------
 
 fn put_miss(buf: &mut Vec<u8>, m: &Miss) {
@@ -322,14 +472,20 @@ pub fn enc_step_resp(buf: &mut Vec<u8>, out: &CursorStep) {
     }
 }
 
-pub fn dec_step_resp(body: &[u8]) -> Option<CursorStep> {
-    let mut r = Reader::response(body)?;
-    let out = match r.u8()? {
+/// Read one step-outcome frame body (shared by `/cursor_step` responses
+/// and the step slot of a turn response).
+fn read_step(r: &mut Reader) -> Option<CursorStep> {
+    Some(match r.u8()? {
         TAG_HIT => CursorStep::Hit { node: r.varint()? as usize, result: r.result()? },
-        TAG_MISS => CursorStep::Miss(read_miss(&mut r)?),
+        TAG_MISS => CursorStep::Miss(read_miss(r)?),
         TAG_INVALID => CursorStep::Invalid,
         _ => return None,
-    };
+    })
+}
+
+pub fn dec_step_resp(body: &[u8]) -> Option<CursorStep> {
+    let mut r = Reader::response(body)?;
+    let out = read_step(&mut r)?;
     r.done().then_some(out)
 }
 
@@ -491,6 +647,154 @@ mod tests {
         enc_bool_resp(&mut buf, true);
         buf.push(0);
         assert_eq!(dec_bool_resp(&buf), None);
+    }
+
+    fn turn_batches() -> Vec<TurnBatch> {
+        let probes = vec![
+            ToolCall::stateless("bash", "cat cfg.txt"),
+            ToolCall::stateless("bash", "ls -la"),
+        ];
+        vec![
+            TurnBatch { probes: probes.clone(), op: TurnOp::None },
+            TurnBatch { probes: probes.clone(), op: TurnOp::Step(ToolCall::new("bash", "make")) },
+            TurnBatch {
+                probes: Vec::new(),
+                op: TurnOp::Record(
+                    ToolCall::new("bash", "make test"),
+                    ToolResult { output: "12 passed".into(), exec_time: 3.5, api_tokens: 7 },
+                ),
+            },
+        ]
+    }
+
+    #[test]
+    fn turn_request_roundtrip_all_ops() {
+        for want in turn_batches() {
+            let mut buf = Vec::new();
+            enc_turn(&mut buf, "turn-task", 42, &want);
+            assert!(is_binary(&buf));
+            let (task, cursor, got) = dec_turn_req(&buf).unwrap();
+            assert_eq!(task, "turn-task");
+            assert_eq!(cursor, 42);
+            assert_eq!(got, want);
+        }
+    }
+
+    #[test]
+    fn turn_response_roundtrip_all_shapes() {
+        let replies = vec![
+            TurnReply { cursor: 0, probes: vec![None, None], step: None, recorded: Some(0) },
+            TurnReply {
+                cursor: 9,
+                probes: vec![Some(ToolResult::new("alpha", 0.5)), None],
+                step: Some(CursorStep::Hit { node: 3, result: ToolResult::new("r", 1.0) }),
+                recorded: None,
+            },
+            TurnReply {
+                cursor: 9,
+                probes: Vec::new(),
+                step: Some(CursorStep::Miss(Miss {
+                    matched_node: 4,
+                    matched_calls: 2,
+                    resume: Some((4, SnapshotRef { id: 8, bytes: 0, restore_cost: 0.3 }, 2)),
+                })),
+                recorded: None,
+            },
+            TurnReply { cursor: 9, probes: vec![None], step: None, recorded: Some(17) },
+            TurnReply {
+                cursor: 9,
+                probes: Vec::new(),
+                step: Some(CursorStep::Invalid),
+                recorded: None,
+            },
+        ];
+        for want in replies {
+            let mut buf = Vec::new();
+            enc_turn_resp(&mut buf, &want);
+            assert_eq!(dec_turn_resp(&buf), Some(want));
+        }
+    }
+
+    #[test]
+    fn capability_frames_roundtrip() {
+        let mut buf = Vec::new();
+        enc_hello(&mut buf, Capabilities::PROTO_V2);
+        assert!(is_binary(&buf));
+        assert_eq!(dec_hello(&buf), Some(Capabilities::PROTO_V2));
+
+        for caps in [Capabilities::V2, Capabilities::LEGACY, Capabilities::CORE] {
+            let mut buf = Vec::new();
+            enc_caps_resp(&mut buf, Capabilities::PROTO_V2, &caps);
+            assert_eq!(dec_caps_resp(&buf), Some((Capabilities::PROTO_V2, caps)));
+        }
+    }
+
+    #[test]
+    fn turn_and_capability_frames_survive_truncation_fuzz() {
+        // Every prefix of every frame decodes to None (or a shorter valid
+        // frame — impossible here because strict decoders require full
+        // consumption), and never panics.
+        let mut frames: Vec<Vec<u8>> = Vec::new();
+        for b in turn_batches() {
+            let mut buf = Vec::new();
+            enc_turn(&mut buf, "t", 7, &b);
+            frames.push(buf);
+        }
+        let mut buf = Vec::new();
+        enc_hello(&mut buf, Capabilities::PROTO_V2);
+        frames.push(buf);
+        let mut buf = Vec::new();
+        enc_session_release(&mut buf, "t", 7, 3);
+        frames.push(buf);
+        for frame in &frames {
+            for cut in 0..frame.len() {
+                assert_eq!(dec_turn_req(&frame[..cut]), None, "truncated req at {cut}");
+            }
+        }
+        let mut resp = Vec::new();
+        enc_turn_resp(
+            &mut resp,
+            &TurnReply {
+                cursor: 5,
+                probes: vec![Some(ToolResult::new("x", 1.0)), None],
+                step: Some(CursorStep::Miss(Miss {
+                    matched_node: 1,
+                    matched_calls: 1,
+                    resume: None,
+                })),
+                recorded: None,
+            },
+        );
+        for cut in 0..resp.len() {
+            assert_eq!(dec_turn_resp(&resp[..cut]), None, "truncated resp at {cut}");
+        }
+        let mut caps = Vec::new();
+        enc_caps_resp(&mut caps, Capabilities::PROTO_V2, &Capabilities::V2);
+        for cut in 0..caps.len() {
+            assert_eq!(dec_caps_resp(&caps[..cut]), None, "truncated caps at {cut}");
+        }
+    }
+
+    #[test]
+    fn turn_frames_reject_garbage_magic_and_trailing_bytes() {
+        let mut buf = Vec::new();
+        enc_turn(&mut buf, "t", 1, &turn_batches()[1]);
+        // Wrong magic byte: not a binary request at all.
+        let mut garbage = buf.clone();
+        garbage[0] = b'{';
+        assert_eq!(dec_turn_req(&garbage), None);
+        // Unknown op tag (an op-None frame ends with its tag byte).
+        let mut bad_op = Vec::new();
+        enc_turn(&mut bad_op, "t", 1, &TurnBatch { probes: Vec::new(), op: TurnOp::None });
+        *bad_op.last_mut().unwrap() = 9;
+        assert_eq!(dec_turn_req(&bad_op), None);
+        // Trailing garbage is rejected by the strict decoders.
+        buf.push(0xEE);
+        assert_eq!(dec_turn_req(&buf), None);
+        assert_eq!(dec_hello(&[MAGIC, 0x80]), None);
+        assert_eq!(dec_caps_resp(&[2, 7, 7]), None);
+        assert_eq!(dec_turn_resp(&[]), None);
+        assert_eq!(dec_turn_resp(&[0xFF, 0xFF, 0xFF]), None);
     }
 
     #[test]

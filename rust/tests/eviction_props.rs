@@ -19,7 +19,8 @@ use std::sync::Arc;
 
 use tvcache::cache::{
     enforce_budget, CacheBackend, CursorStep, EvictionPolicy, Lookup, ServiceConfig,
-    ShardedCacheService, SnapshotRef, TaskCache, Tcg, ToolCall, ToolResult, ROOT,
+    SessionBackend, ShardedCacheService, SnapshotRef, TaskCache, Tcg, ToolCall, ToolResult,
+    ROOT,
 };
 use tvcache::sandbox::SandboxSnapshot;
 use tvcache::util::rng::Rng;
@@ -458,7 +459,7 @@ fn stress_cursors_under_background_eviction_and_removal() {
         h.join().expect("cursor stress thread panicked");
     }
     svc.quiesce();
-    assert_eq!(svc.cursor_count(), 0, "cursors leaked");
+    assert_eq!(svc.session_count(), 0, "sessions leaked");
     for task in svc.task_ids() {
         assert_eq!(svc.task(&task).pinned_node_count(), 0, "{task} leaked a pin");
         for (_, sref) in svc.task(&task).snapshotted_nodes() {

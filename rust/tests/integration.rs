@@ -9,7 +9,7 @@ use std::sync::Arc;
 
 use tvcache::cache::{
     BackendStats, CacheBackend, CacheStats, CursorStep, Lookup, LpmConfig, NodeId,
-    ShardedCacheService, SnapshotCosts, TaskCache, ToolCall, ToolResult,
+    SessionBackend, ShardedCacheService, SnapshotCosts, TaskCache, ToolCall, ToolResult,
 };
 use tvcache::client::{ExecutorConfig, RemoteBinding, ToolCallExecutor};
 use tvcache::sandbox::{SandboxFactory, SandboxSnapshot, TerminalFactory, ToolExecutionEnvironment};
@@ -139,7 +139,7 @@ fn backend_parity_inprocess_and_http() {
 
 /// The cursor acceptance contract: identical step/record/seek behaviour —
 /// including resume offers and statistics — over both backends.
-fn exercise_cursor_backend(backend: &dyn CacheBackend, task: &str) {
+fn exercise_cursor_backend(backend: &dyn SessionBackend, task: &str) {
     let traj: Vec<(ToolCall, ToolResult)> = [("git clone repo", "ok"), ("make", "build OK")]
         .iter()
         .map(|(c, r)| (bash(c), ToolResult::new(*r, 5.0)))
@@ -233,7 +233,7 @@ fn backend_parity_cursors_inprocess_and_http() {
 /// full-prefix lookup + insert + re-seek — outputs must equal a clean
 /// cacheless execution, and no pin may leak.
 fn exercise_cursor_invalidation_mid_rollout(
-    backend: Arc<dyn CacheBackend>,
+    backend: Arc<dyn SessionBackend>,
     evict: &dyn Fn(&str, usize) -> bool,
     pinned: &dyn Fn(&str) -> usize,
     task: &str,
@@ -299,7 +299,7 @@ fn cursor_invalidation_mid_rollout_on_both_backends() {
         let white = Arc::clone(&sharded);
         let pin_svc = Arc::clone(&sharded);
         exercise_cursor_invalidation_mid_rollout(
-            Arc::clone(&sharded) as Arc<dyn CacheBackend>,
+            Arc::clone(&sharded) as Arc<dyn SessionBackend>,
             &move |task, node| white.evict_node(task, node),
             &move |task| pin_svc.task(task).pinned_node_count(),
             "inval-inproc",
@@ -311,7 +311,7 @@ fn cursor_invalidation_mid_rollout_on_both_backends() {
     let white = Arc::clone(&svc);
     let pin_svc = Arc::clone(&svc);
     exercise_cursor_invalidation_mid_rollout(
-        binding as Arc<dyn CacheBackend>,
+        binding as Arc<dyn SessionBackend>,
         &move |task, node| white.evict_node(task, node),
         &move |task| pin_svc.task(task).pinned_node_count(),
         "inval-http",
@@ -454,6 +454,12 @@ impl CacheBackend for EvictAfterLookup {
         self.inner.warm_start(dir)
     }
 }
+
+// The decorator opts into the session surface with the defaults: no
+// capabilities, no cursors — executors negotiate down to the full-prefix
+// path (where the lookup decoration applies), exactly the transparent
+// fallback the v2 API promises decorator backends.
+impl SessionBackend for EvictAfterLookup {}
 
 /// Regression for the race noted in `rust/src/server/mod.rs` (`lookup`):
 /// an outstanding resume offer whose node is evicted before the fetch must
@@ -673,4 +679,231 @@ fn concurrent_remote_rollouts() {
     assert!(stats.lookups >= 12);
     // The shared prefix exists once; the divergent writes branch.
     assert!(svc.task("shared-task").node_count() >= 4);
+}
+
+// ---- session API v2 ----------------------------------------------------
+
+/// Session/legacy parity: the batched turn path, the per-call cursor path,
+/// and the cursorless full-prefix path must make *identical* hit/miss
+/// decisions and produce identical outputs — on both backends.
+#[test]
+fn session_parity_batched_percall_and_legacy_on_both_backends() {
+    let script = [
+        "pip install libdep1",
+        "cat README.md",
+        "make",
+        "ls -la",
+        "make test",
+        "echo done > s.txt",
+        "cat s.txt",
+    ];
+    let configs = [
+        ExecutorConfig::default(), // batched turns
+        ExecutorConfig { batch_turns: false, ..ExecutorConfig::default() },
+        ExecutorConfig { use_cursor: false, ..ExecutorConfig::default() },
+    ];
+
+    let drive = |backend: Arc<dyn SessionBackend>, tag: &str, cfg: ExecutorConfig| {
+        let factory = Arc::new(TerminalFactory { medium: false });
+        let mut decisions = Vec::new();
+        let mut outputs = Vec::new();
+        for rollout in 0..3 {
+            let mut exec = ToolCallExecutor::new(
+                Arc::clone(&backend),
+                format!("parity-{tag}"),
+                Arc::clone(&factory) as Arc<_>,
+                21,
+                cfg,
+            );
+            for c in script {
+                let o = exec.call(bash(c));
+                decisions.push((rollout, c, o.hit));
+                outputs.push(o.result.output);
+            }
+            exec.finish();
+        }
+        (decisions, outputs)
+    };
+
+    // In-process: three fresh services, one per mode.
+    let mut inproc = Vec::new();
+    for (i, cfg) in configs.iter().enumerate() {
+        let svc = Arc::new(ShardedCacheService::new(2));
+        inproc.push(drive(svc as Arc<dyn SessionBackend>, &format!("in{i}"), *cfg));
+    }
+    assert_eq!(inproc[0], inproc[1], "batched vs per-call cursor decisions diverged");
+    assert_eq!(inproc[0], inproc[2], "session vs legacy full-prefix decisions diverged");
+
+    // HTTP: three fresh servers, one per mode.
+    let mut http = Vec::new();
+    for (i, cfg) in configs.iter().enumerate() {
+        let (server, _svc) = serve("127.0.0.1:0", 4).unwrap();
+        let binding = Arc::new(RemoteBinding::connect(server.addr()));
+        http.push(drive(binding as Arc<dyn SessionBackend>, &format!("ht{i}"), *cfg));
+    }
+    assert_eq!(http[0], http[1], "HTTP batched vs per-call decisions diverged");
+    assert_eq!(http[0], http[2], "HTTP session vs legacy decisions diverged");
+    assert_eq!(inproc[0], http[0], "in-process vs HTTP session decisions diverged");
+}
+
+/// Regression (PR 4 satellite): an executor leaked mid-run — dropped
+/// without `finish()`, as a panicking rollout would be — must free its
+/// server-side session entry and every resume pin, on both backends.
+#[test]
+fn leaked_executor_frees_server_side_session_state() {
+    let factory = Arc::new(TerminalFactory { medium: false });
+
+    // In-process.
+    let sharded = Arc::new(ShardedCacheService::new(2));
+    let mut exec = ToolCallExecutor::new(
+        Arc::clone(&sharded) as Arc<dyn SessionBackend>,
+        "leak-inproc",
+        Arc::clone(&factory) as Arc<_>,
+        5,
+        ExecutorConfig::default(),
+    );
+    exec.call(bash("pip install libdep1"));
+    exec.call(bash("make"));
+    assert_eq!(sharded.session_count(), 1);
+    drop(exec); // no finish()
+    assert_eq!(sharded.session_count(), 0, "in-process session entry leaked");
+    assert_eq!(sharded.task("leak-inproc").pinned_node_count(), 0);
+
+    // HTTP: the Drop guard must reach across the wire.
+    let (server, svc) = serve("127.0.0.1:0", 4).unwrap();
+    let binding = Arc::new(RemoteBinding::connect(server.addr()));
+    let mut exec = ToolCallExecutor::new(
+        Arc::clone(&binding) as Arc<dyn SessionBackend>,
+        "leak-http",
+        Arc::clone(&factory) as Arc<_>,
+        5,
+        ExecutorConfig::default(),
+    );
+    exec.call(bash("pip install libdep1"));
+    exec.call(bash("make"));
+    assert_eq!(svc.session_count(), 1);
+    drop(exec);
+    assert_eq!(svc.session_count(), 0, "HTTP session entry leaked");
+    assert_eq!(svc.session_pin_count(), 0);
+    assert_eq!(svc.task("leak-http").pinned_node_count(), 0);
+}
+
+/// The v2 pin contract over the wire: a `/session_turn` step-miss keeps
+/// its resume offer *pinned* (unlike the legacy unpinned-offer lookups),
+/// owned by the server-side session entry — and closing the session
+/// releases whatever the client never did.
+#[test]
+fn turn_step_miss_pin_owned_by_session_until_close() {
+    let (server, svc) = serve("127.0.0.1:0", 2).unwrap();
+    let binding = RemoteBinding::connect(server.addr());
+    let task = "turn-pin";
+
+    let traj = vec![(bash("make"), ToolResult::new("built", 9.0))];
+    let node = binding.insert(task, &traj);
+    let id = binding.store_snapshot(
+        task,
+        node,
+        SandboxSnapshot { bytes: b"state".to_vec(), serialize_cost: 0.2, restore_cost: 0.4 },
+    );
+    assert!(id > 0);
+    assert_eq!(binding.capabilities(), tvcache::cache::Capabilities::V2);
+
+    // Turn 1: step hit on "make". Turn 2: divergent step miss — the offer
+    // must arrive pinned and stay pinned (no unpin-before-reply).
+    use tvcache::cache::{TurnBatch, TurnOp};
+    let r1 = binding.session_turn(
+        task,
+        0,
+        &TurnBatch { probes: Vec::new(), op: TurnOp::Step(bash("make")) },
+    );
+    assert!(r1.cursor != 0, "first turn frame must open the session");
+    assert!(matches!(r1.step, Some(CursorStep::Hit { .. })));
+    let r2 = binding.session_turn(
+        task,
+        r1.cursor,
+        &TurnBatch { probes: Vec::new(), op: TurnOp::Step(bash("echo x > f")) },
+    );
+    let Some(CursorStep::Miss(m)) = r2.step else { panic!("expected miss: {r2:?}") };
+    let (rnode, _, _) = m.resume.expect("resume offered");
+    assert_eq!(rnode, node);
+    assert_eq!(svc.task(task).pinned_node_count(), 1, "turn offer must stay pinned");
+    assert_eq!(svc.session_pin_count(), 1);
+
+    // An eviction attempt while pinned must fail (the §3.4 guarantee the
+    // legacy wire protocol could not give).
+    assert!(!svc.evict_snapshot(task, rnode), "pinned snapshot must not evict");
+
+    // Close without releasing: the session entry owns the pin and returns it.
+    binding.cursor_close(task, r1.cursor);
+    assert_eq!(svc.task(task).pinned_node_count(), 0, "close must release the pin");
+    assert_eq!(svc.session_pin_count(), 0);
+    assert_eq!(svc.session_count(), 0);
+}
+
+/// Capability negotiation against an old (pre-v2) server: simulated by a
+/// server that 404s `/capabilities` — the binding must fall back to the
+/// legacy binary+cursor profile with turn batching off, and the executor
+/// must still work end-to-end through the per-call path.
+#[test]
+fn capability_fallback_for_old_servers() {
+    use tvcache::util::http::{Handler, Request, Response, Server};
+
+    // A "legacy" façade: forwards everything except /capabilities and the
+    // session endpoints (which a pre-v2 server would 404) to a real
+    // service.
+    let (inner_server, inner_svc) = serve("127.0.0.1:0", 2).unwrap();
+    let inner_addr = inner_server.addr();
+    let handler: Handler = Arc::new(move |req: &Request| {
+        if req.path == "/capabilities"
+            || req.path == "/session_turn"
+            || req.path == "/session_release"
+        {
+            return Response::not_found();
+        }
+        // Forward body + method (and the parsed query, reassembled) to the
+        // real server.
+        let mut path = req.path.clone();
+        let mut sep = '?';
+        for (k, v) in &req.query {
+            path.push(sep);
+            sep = '&';
+            path.push_str(&tvcache::util::http::url_encode(k));
+            path.push('=');
+            path.push_str(&tvcache::util::http::url_encode(v));
+        }
+        let mut c = tvcache::util::http::HttpClient::connect(inner_addr);
+        let out = if req.method == "GET" {
+            c.get(&path)
+        } else {
+            c.post(&path, &req.body)
+        };
+        match out {
+            Ok((200, body)) => Response::binary(body),
+            Ok((status, _)) => Response::text_static(if status == 400 { 400 } else { 404 }, "err"),
+            Err(_) => Response::text_static(500, "proxy error"),
+        }
+    });
+    let facade = Server::bind("127.0.0.1:0", 2, handler).unwrap();
+
+    let binding = Arc::new(RemoteBinding::connect(facade.addr()));
+    let caps = binding.capabilities();
+    assert_eq!(caps, tvcache::cache::Capabilities::LEGACY, "handshake must fall back");
+
+    let factory = Arc::new(TerminalFactory { medium: false });
+    let script = ["make", "make test"];
+    for rollout in 0..2 {
+        let mut exec = ToolCallExecutor::new(
+            Arc::clone(&binding) as Arc<dyn SessionBackend>,
+            "old-server-task",
+            Arc::clone(&factory) as Arc<_>,
+            9,
+            ExecutorConfig::default(),
+        );
+        for c in script {
+            let o = exec.call(bash(c));
+            assert_eq!(o.hit, rollout > 0, "legacy fallback broke caching: {c}");
+        }
+        exec.finish();
+    }
+    assert!(inner_svc.task("old-server-task").stats().hits >= 2);
 }
