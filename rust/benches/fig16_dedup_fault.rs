@@ -1,0 +1,247 @@
+//! Figure 16 (extension): content-addressed payload dedup + the spill-tier
+//! fault cache.
+//!
+//! Post-training fleets run *many rollouts of the same task family*: K
+//! concurrent tasks re-derive the same sandbox states, so a naive snapshot
+//! store holds O(K × states) payload bytes. The content-addressed payload
+//! tier (`cache/payload.rs`) keys every payload by a strong content hash
+//! and refcounts it across tasks and shards, collapsing that footprint to
+//! O(distinct states). Below it, a byte-budgeted LRU fault cache absorbs
+//! repeat fault-ins of hot spilled payloads so only the *first* fault pays
+//! a disk read.
+//!
+//! Three sections, all exact-accounting (no timing asserts):
+//!
+//! 1. **Dedup scaling**: K = 6 tasks each snapshot the same tree of
+//!    distinct sandbox states. Asserted: total resident bytes with all K
+//!    tasks stay within 1.5× the single-task footprint (they are in fact
+//!    identical — bytes are O(distinct states), not O(K × states)).
+//! 2. **Fault cache**: spill a set of payloads, fault the same one in
+//!    twice. Asserted: the repeat fetch is served from the fault cache
+//!    with *exactly one* disk read across both fetches.
+//! 3. **HTTP parity**: the same dedup counters are visible through the
+//!    binary-protocol HTTP backend (`/stats` + the negotiated
+//!    `payload_dedup` capability bit), not just in-process.
+//!
+//! `TVCACHE_BENCH_SMOKE=1` shrinks payload sizes for CI. Results are
+//! appended as one JSON line to `BENCH_5.json` (override with
+//! `TVCACHE_BENCH_OUT`).
+
+use std::io::Write as _;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use tvcache::bench::print_table;
+use tvcache::cache::{
+    CacheBackend, ServiceConfig, SessionBackend, ShardedCacheService, TaskCache, ToolCall,
+    ToolResult,
+};
+use tvcache::client::RemoteBinding;
+use tvcache::metrics::CsvWriter;
+use tvcache::sandbox::SandboxSnapshot;
+
+/// Concurrent tasks sharing one state tree in the dedup section.
+const K_TASKS: usize = 6;
+/// Distinct sandbox states per task.
+const STATES: usize = 24;
+/// Payloads spilled in the fault-cache section.
+const SPILLED: usize = 8;
+
+fn call(s: String) -> ToolCall {
+    ToolCall::new("bash", s)
+}
+
+/// Deterministic, pairwise-distinct payload for state `s`.
+fn payload(s: usize, size: usize) -> Vec<u8> {
+    (0..size).map(|i| ((i as u64 * 31 + s as u64 * 131) % 251) as u8).collect()
+}
+
+fn snap(s: usize, size: usize) -> SandboxSnapshot {
+    SandboxSnapshot { bytes: payload(s, size), serialize_cost: 0.1, restore_cost: 0.2 }
+}
+
+/// Snapshot every state of the shared tree under `task`.
+fn store_states(svc: &ShardedCacheService, task: &str, size: usize) -> Vec<u64> {
+    (0..STATES)
+        .map(|s| {
+            let traj =
+                vec![(call(format!("derive state-{s}")), ToolResult::new("ok", 1.0))];
+            let node = svc.insert(task, &traj);
+            let id = svc.store_snapshot(task, node, snap(s, size));
+            assert!(id > 0, "store of state {s} for {task} rejected");
+            id
+        })
+        .collect()
+}
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir()
+        .join(format!("tvcache-fig16-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+fn main() {
+    let smoke = std::env::var("TVCACHE_BENCH_SMOKE").is_ok();
+    let size: usize = if smoke { 4 * 1024 } else { 64 * 1024 };
+
+    // ── 1. Dedup scaling: K tasks over one state tree ───────────────────
+    let svc = ShardedCacheService::with_config(
+        ServiceConfig { shards: 4, ..Default::default() },
+        Arc::new(TaskCache::with_defaults),
+    )
+    .unwrap();
+    store_states(&svc, "task-0", size);
+    let bytes_single = svc.resident_bytes();
+    for k in 1..K_TASKS {
+        store_states(&svc, &format!("task-{k}"), size);
+    }
+    let bytes_k = svc.resident_bytes();
+    let dedup_stats = svc.service_stats();
+    let naive_k = bytes_single * K_TASKS as u64;
+    let scale_ratio = bytes_k as f64 / bytes_single as f64;
+
+    // ── 2. Fault cache: repeat fault-ins of one spilled payload ─────────
+    let dir = tmpdir("spill");
+    let fsvc = ShardedCacheService::with_config(
+        ServiceConfig {
+            shards: 1,
+            shard_byte_budget: Some(10), // far below one payload: spill all
+            spill_dir: Some(dir.clone()),
+            background: false,
+            // Room for half the spilled set, so the full sweep below also
+            // exercises LRU eviction.
+            fault_cache_bytes: (size * SPILLED / 2) as u64,
+            ..Default::default()
+        },
+        Arc::new(TaskCache::with_defaults),
+    )
+    .unwrap();
+    let ids = store_states(&fsvc, "spiller", size);
+    fsvc.drain_over_budget();
+    let s0 = fsvc.service_stats();
+    assert_eq!(s0.spilled_snapshots, STATES, "budget 10 must spill everything");
+
+    // First fault-in: one disk read, cached on the way through.
+    assert!(fsvc.fetch_snapshot("spiller", ids[0]).is_some(), "fault-in failed");
+    let s1 = fsvc.service_stats();
+    // Repeat fault-in of the same payload: served from the fault cache.
+    assert!(fsvc.fetch_snapshot("spiller", ids[0]).is_some(), "repeat fetch failed");
+    let s2 = fsvc.service_stats();
+
+    let disk_reads_first = s1.spill_faults - s0.spill_faults;
+    let disk_reads_repeat = s2.spill_faults - s1.spill_faults;
+    let cache_hits_repeat = s2.fault_cache_hits - s1.fault_cache_hits;
+
+    // A sweep over more payloads than the cache budget holds: the LRU must
+    // evict rather than grow.
+    for &id in ids.iter().take(SPILLED) {
+        assert!(fsvc.fetch_snapshot("spiller", id).is_some());
+    }
+    let s3 = fsvc.service_stats();
+
+    // ── 3. HTTP parity: counters + capability bit over the wire ────────
+    let (server, _svc) = tvcache::server::serve_with("127.0.0.1:0", 2, 4).unwrap();
+    let remote = RemoteBinding::connect(server.addr());
+    for t in 0..3 {
+        let task = format!("twin-{t}");
+        let traj = vec![(call("make".into()), ToolResult::new("ok", 1.0))];
+        let node = remote.insert(&task, &traj);
+        assert!(remote.store_snapshot(&task, node, snap(0, size)) > 0);
+    }
+    let http_stats = remote.service_stats();
+    let http_caps = remote.capabilities();
+    drop(server);
+
+    // ── Report ──────────────────────────────────────────────────────────
+    let rows = vec![
+        vec!["resident bytes, 1 task".into(), format!("{bytes_single}")],
+        vec![format!("resident bytes, {K_TASKS} tasks"), format!("{bytes_k}")],
+        vec!["naive (no dedup) bytes".into(), format!("{naive_k}")],
+        vec!["scale ratio K/1".into(), format!("{scale_ratio:.2}")],
+        vec!["dedup hits".into(), format!("{}", dedup_stats.dedup_hits)],
+        vec![
+            "resident bytes saved".into(),
+            format!("{}", dedup_stats.dedup_resident_bytes_saved),
+        ],
+        vec!["disk reads, first fault".into(), format!("{disk_reads_first}")],
+        vec!["disk reads, repeat fault".into(), format!("{disk_reads_repeat}")],
+        vec!["fault-cache hits, repeat".into(), format!("{cache_hits_repeat}")],
+        vec!["fault-cache evictions, sweep".into(), format!("{}", s3.fault_cache_evictions)],
+        vec!["dedup hits over HTTP".into(), format!("{}", http_stats.dedup_hits)],
+    ];
+    print_table(
+        "Figure 16 (ext): payload dedup across tasks + spill-tier fault cache",
+        &["metric", "value"],
+        &rows,
+    );
+    let mut csv = CsvWriter::new(&["metric", "value"]);
+    for r in &rows {
+        csv.rowf(&[&r[0], &r[1]]);
+    }
+    csv.write("results/fig16_dedup_fault.csv").unwrap();
+    println!("series -> results/fig16_dedup_fault.csv");
+
+    // Machine-readable perf trajectory for future PRs.
+    let out = std::env::var("TVCACHE_BENCH_OUT").unwrap_or_else(|_| "../BENCH_5.json".into());
+    let line = format!(
+        "{{\"bench\":\"fig16_dedup_fault\",\"mode\":\"{}\",\
+         \"k_tasks\":{K_TASKS},\"distinct_states\":{STATES},\"payload_bytes\":{size},\
+         \"bytes_single_task\":{bytes_single},\"bytes_k_tasks\":{bytes_k},\
+         \"scale_ratio\":{scale_ratio:.3},\
+         \"dedup_hits\":{},\"dedup_resident_bytes_saved\":{},\
+         \"disk_reads_first_fault\":{disk_reads_first},\
+         \"disk_reads_repeat_fault\":{disk_reads_repeat},\
+         \"fault_cache_hits_repeat\":{cache_hits_repeat},\
+         \"fault_cache_evictions_sweep\":{},\
+         \"http_dedup_hits\":{}}}",
+        if smoke { "smoke" } else { "full" },
+        dedup_stats.dedup_hits,
+        dedup_stats.dedup_resident_bytes_saved,
+        s3.fault_cache_evictions,
+        http_stats.dedup_hits,
+    );
+    match std::fs::OpenOptions::new().create(true).append(true).open(&out) {
+        Ok(mut f) => {
+            let _ = writeln!(f, "{line}");
+            println!("appended -> {out}");
+        }
+        Err(e) => println!("could not append to {out}: {e}"),
+    }
+
+    // Acceptance (a): resident bytes are O(distinct states), not
+    // O(tasks × states) — K tasks stay within 1.5× one task.
+    assert!(
+        scale_ratio <= 1.5,
+        "dedup failed: {K_TASKS} tasks hold {scale_ratio:.2}x one task's bytes (limit 1.5x)"
+    );
+    assert_eq!(
+        dedup_stats.dedup_hits,
+        ((K_TASKS - 1) * STATES) as u64,
+        "every repeat store must dedup"
+    );
+    assert_eq!(
+        dedup_stats.dedup_resident_bytes_saved,
+        ((K_TASKS - 1) * STATES * size) as u64,
+        "bytes-saved gauge must count every shared referent"
+    );
+    // Acceptance (b): the repeat fault-in is served from the cache with
+    // exactly one disk read across both fetches.
+    assert_eq!(disk_reads_first, 1, "first fault-in must read the disk once");
+    assert_eq!(disk_reads_repeat, 0, "repeat fault-in must not touch the disk");
+    assert_eq!(cache_hits_repeat, 1, "repeat fault-in must hit the fault cache");
+    assert!(
+        s3.fault_cache_evictions > 0,
+        "sweeping past the cache budget must evict, not grow"
+    );
+    // Acceptance (c): dedup visible on BOTH backends.
+    assert!(dedup_stats.dedup_hits > 0, "in-process dedup_hits must be visible");
+    assert_eq!(http_stats.dedup_hits, 2, "HTTP /stats must carry dedup_hits");
+    assert!(http_caps.payload_dedup, "handshake must advertise payload_dedup");
+
+    println!(
+        "fig16 OK: {K_TASKS} tasks share one {STATES}-state tree at 1.0x bytes; \
+         repeat fault-ins skip the disk"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -46,6 +46,18 @@ pub struct BackendStats {
     pub spill_faults: u64,
     /// Snapshots the background worker destroyed (no spill tier).
     pub bg_evictions: u64,
+    /// Inserts (or warm-start adopts) whose content key was already stored
+    /// — the payload tier served a shared copy instead of a new one.
+    pub dedup_hits: u64,
+    /// Resident bytes the content-addressed payload tier is currently
+    /// saving: Σ over resident payloads of `len × (referents − 1)`.
+    pub dedup_resident_bytes_saved: u64,
+    /// Spill fault-ins served from the LRU fault cache (no disk read).
+    pub fault_cache_hits: u64,
+    /// Spill fault-ins that had to read the payload from disk.
+    pub fault_cache_misses: u64,
+    /// Fault-cache entries evicted to stay under its byte budget.
+    pub fault_cache_evictions: u64,
 }
 
 impl BackendStats {
@@ -62,6 +74,17 @@ impl BackendStats {
             ("spills", Json::num(self.spills as f64)),
             ("spill_faults", Json::num(self.spill_faults as f64)),
             ("bg_evictions", Json::num(self.bg_evictions as f64)),
+            // Payload-tier counters (PR 5) — appended after the PR 4
+            // fields, so position-insensitive JSON readers see the same
+            // layout they always did.
+            ("dedup_hits", Json::num(self.dedup_hits as f64)),
+            (
+                "dedup_resident_bytes_saved",
+                Json::num(self.dedup_resident_bytes_saved as f64),
+            ),
+            ("fault_cache_hits", Json::num(self.fault_cache_hits as f64)),
+            ("fault_cache_misses", Json::num(self.fault_cache_misses as f64)),
+            ("fault_cache_evictions", Json::num(self.fault_cache_evictions as f64)),
         ])
     }
 
@@ -82,6 +105,13 @@ impl BackendStats {
             spills: g("spills"),
             spill_faults: g("spill_faults"),
             bg_evictions: g("bg_evictions"),
+            // Absent on pre-payload-tier servers: `unwrap_or(0)` keeps the
+            // parse backward compatible.
+            dedup_hits: g("dedup_hits"),
+            dedup_resident_bytes_saved: g("dedup_resident_bytes_saved"),
+            fault_cache_hits: g("fault_cache_hits"),
+            fault_cache_misses: g("fault_cache_misses"),
+            fault_cache_evictions: g("fault_cache_evictions"),
         })
     }
 }
@@ -102,6 +132,9 @@ pub struct Capabilities {
     pub cursors: bool,
     /// Supports turn-level batched ops (`session_turn`, `/session_turn`).
     pub turn_batch: bool,
+    /// Runs the content-addressed payload tier (cross-task snapshot dedup
+    /// + spill fault cache) and reports its counters in `/stats`.
+    pub payload_dedup: bool,
 }
 
 impl Capabilities {
@@ -110,18 +143,30 @@ impl Capabilities {
 
     /// Everything this codebase implements (the v2 server / in-process
     /// service).
-    pub const V2: Capabilities =
-        Capabilities { binary: true, cursors: true, turn_batch: true };
+    pub const V2: Capabilities = Capabilities {
+        binary: true,
+        cursors: true,
+        turn_batch: true,
+        payload_dedup: true,
+    };
 
     /// What a pre-handshake server is assumed to speak when `/capabilities`
     /// fails: binary + cursors existed before negotiation (magic-byte
-    /// sniffed), turn batching did not.
-    pub const LEGACY: Capabilities =
-        Capabilities { binary: true, cursors: true, turn_batch: false };
+    /// sniffed), turn batching and the payload tier did not.
+    pub const LEGACY: Capabilities = Capabilities {
+        binary: true,
+        cursors: true,
+        turn_batch: false,
+        payload_dedup: false,
+    };
 
     /// A backend that only implements the narrow [`CacheBackend`] core.
-    pub const CORE: Capabilities =
-        Capabilities { binary: false, cursors: false, turn_batch: false };
+    pub const CORE: Capabilities = Capabilities {
+        binary: false,
+        cursors: false,
+        turn_batch: false,
+        payload_dedup: false,
+    };
 }
 
 /// The stateful half of a [`TurnBatch`]: at most one cursor step *or*

@@ -1,0 +1,711 @@
+//! Content-addressed snapshot payload store with cross-task dedup and an
+//! LRU fault cache over the spill tier.
+//!
+//! Parallel rollouts routinely reach *identical* sandbox states (same
+//! files, same DB, same container layer). Before this layer every
+//! [`super::SnapshotStore`] kept its own private copy of each payload, so
+//! K tasks at the same state paid K× the bytes. Now every payload is keyed
+//! by a 256-bit content hash ([`ContentKey`]) computed once at insert and
+//! refcounted across all tasks and shards: identical states share one
+//! resident (or one spilled) copy, and the per-shard stores hold
+//! `(content_key, size, restore_cost)` handles instead of owned bytes.
+//!
+//! Accounting follows a *charge-owner* model: each payload's bytes are
+//! charged to exactly one registered store (the first inserter); when that
+//! store drops its last reference while others remain, the charge moves to
+//! a surviving referent. A store's `resident_bytes`/`spilled_bytes` are
+//! therefore sums of the payloads it is charged for — shared bytes are
+//! never double-counted against the byte budget.
+//!
+//! Fault-ins from the spill tier go through a byte-budgeted LRU fault
+//! cache: a hot spilled payload is read from disk once and served from
+//! memory thereafter (no [`super::spill::SPILL_FAULT_PENALTY`] charge on a
+//! cache hit). Because entries are content-addressed, a stale cache entry
+//! can never serve wrong bytes — same key, same content, by construction.
+
+use std::collections::{BTreeMap, HashMap};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use super::spill::{SpillSlot, SpillStore};
+
+/// Default byte budget for the spill-tier fault cache (16 MiB).
+pub const DEFAULT_FAULT_CACHE_BYTES: u64 = 16 * 1024 * 1024;
+
+/// 256-bit content hash of a snapshot payload.
+///
+/// Four independently-seeded 64-bit lanes of an xxHash-style mix — not
+/// cryptographic, but at 2⁻¹²⁸ collision scale for the cache's working-set
+/// sizes, which is what content addressing needs here. Computed once at
+/// insert; equality of keys is treated as equality of content.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ContentKey(pub [u64; 4]);
+
+const P1: u64 = 0x9E37_79B1_85EB_CA87;
+const P2: u64 = 0xC2B2_AE3D_27D4_EB4F;
+const P3: u64 = 0x1656_67B1_9E37_79F9;
+const P4: u64 = 0x85EB_CA77_C2B2_AE63;
+const P5: u64 = 0x27D4_EB2F_1656_67C5;
+
+/// One seeded 64-bit lane over `bytes` (xxHash64-style rounds + avalanche).
+fn hash64(bytes: &[u8], seed: u64) -> u64 {
+    let mut acc = seed.wrapping_add(P5).wrapping_add(bytes.len() as u64);
+    let mut chunks = bytes.chunks_exact(8);
+    for c in &mut chunks {
+        let w = u64::from_le_bytes(c.try_into().unwrap());
+        acc ^= w.wrapping_mul(P2).rotate_left(31).wrapping_mul(P1);
+        acc = acc.rotate_left(27).wrapping_mul(P1).wrapping_add(P4);
+    }
+    for &b in chunks.remainder() {
+        acc ^= (b as u64).wrapping_mul(P5);
+        acc = acc.rotate_left(11).wrapping_mul(P1);
+    }
+    acc ^= acc >> 33;
+    acc = acc.wrapping_mul(P2);
+    acc ^= acc >> 29;
+    acc = acc.wrapping_mul(P3);
+    acc ^= acc >> 32;
+    acc
+}
+
+impl ContentKey {
+    /// Hash `bytes` into a key. The four lane seeds are the first four
+    /// SHA-256 IV words — arbitrary, fixed, and mutually independent.
+    pub fn of(bytes: &[u8]) -> ContentKey {
+        ContentKey([
+            hash64(bytes, 0x6A09_E667_F3BC_C908),
+            hash64(bytes, 0xBB67_AE85_84CA_A73B),
+            hash64(bytes, 0x3C6E_F372_FE94_F82B),
+            hash64(bytes, 0xA54F_F53A_5F1D_36F1),
+        ])
+    }
+
+    /// A key for a legacy (pre-content-hash) spilled payload identified
+    /// only by its snapshot id. All-ones upper lanes keep synthetic keys
+    /// disjoint from real hashes except at negligible probability; two
+    /// legacy records never dedup against each other (distinct ids).
+    pub fn synthetic(id: u64) -> ContentKey {
+        ContentKey([u64::MAX, u64::MAX, u64::MAX ^ id, id])
+    }
+
+    /// 64-hex-char encoding (manifest column / payload file name).
+    pub fn to_hex(&self) -> String {
+        format!(
+            "{:016x}{:016x}{:016x}{:016x}",
+            self.0[0], self.0[1], self.0[2], self.0[3]
+        )
+    }
+
+    /// Parse [`ContentKey::to_hex`] output; `None` on any malformation.
+    pub fn from_hex(s: &str) -> Option<ContentKey> {
+        if s.len() != 64 || !s.is_ascii() {
+            return None;
+        }
+        let mut lanes = [0u64; 4];
+        for (i, lane) in lanes.iter_mut().enumerate() {
+            *lane = u64::from_str_radix(&s[i * 16..(i + 1) * 16], 16).ok()?;
+        }
+        Some(ContentKey(lanes))
+    }
+}
+
+/// Where [`PayloadStore::fetch`] found the bytes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FetchSource {
+    /// In the resident tier — no charge.
+    Resident,
+    /// In the LRU fault cache — spilled, but served from memory.
+    FaultCache,
+    /// Read from the spill tier on disk (the caller charges the fault
+    /// penalty and counts a disk fault).
+    Disk,
+}
+
+/// Outcome of [`PayloadStore::insert`] / [`PayloadStore::adopt`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum InsertOutcome {
+    /// First copy of this content — bytes now charged to the inserter.
+    New,
+    /// Content already stored: the reference was shared (a dedup hit).
+    Deduped,
+}
+
+/// Outcome of [`PayloadStore::spill`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpillOutcome {
+    /// This call demoted the payload from memory to disk.
+    Demoted,
+    /// The payload already lived on disk — a no-op success.
+    AlreadySpilled,
+    /// No spill tier configured.
+    Refused,
+    /// The payload vanished concurrently (all referents removed).
+    Gone,
+    /// The disk write failed.
+    Failed,
+}
+
+/// One stored payload: bytes (or their on-disk slot), per-store refcounts,
+/// and the store currently charged for the bytes.
+#[derive(Debug)]
+struct Payload {
+    len: u64,
+    tier: Tier,
+    /// Live references per registered store tag.
+    refs: HashMap<u32, u64>,
+    /// The tag whose `resident_bytes`/`spilled_bytes` carry this payload.
+    charged: u32,
+}
+
+#[derive(Debug)]
+enum Tier {
+    Resident(Arc<Vec<u8>>),
+    Spilled(SpillSlot),
+}
+
+impl Payload {
+    fn ref_total(&self) -> u64 {
+        self.refs.values().sum()
+    }
+}
+
+/// Shared table state: payloads by key plus per-tag byte gauges.
+#[derive(Debug, Default)]
+struct Table {
+    payloads: HashMap<ContentKey, Payload>,
+    resident_by: Vec<u64>,
+    spilled_by: Vec<u64>,
+}
+
+/// Byte-budgeted LRU over fault-in reads: key → (bytes, LRU sequence).
+#[derive(Debug)]
+struct FaultCache {
+    budget: u64,
+    used: u64,
+    seq: u64,
+    map: HashMap<ContentKey, (Arc<Vec<u8>>, u64)>,
+    order: BTreeMap<u64, ContentKey>,
+}
+
+impl FaultCache {
+    fn new(budget: u64) -> FaultCache {
+        FaultCache { budget, used: 0, seq: 0, map: HashMap::new(), order: BTreeMap::new() }
+    }
+
+    fn get(&mut self, key: &ContentKey) -> Option<Arc<Vec<u8>>> {
+        let seq = self.seq + 1;
+        let (bytes, old) = self.map.get_mut(key)?;
+        self.order.remove(old);
+        *old = seq;
+        self.seq = seq;
+        let out = Arc::clone(bytes);
+        self.order.insert(seq, *key);
+        Some(out)
+    }
+
+    /// Insert (or refresh) `key`; returns how many entries were evicted to
+    /// make room. Oversized payloads are not cached at all.
+    fn insert(&mut self, key: ContentKey, bytes: Arc<Vec<u8>>) -> u64 {
+        let len = bytes.len() as u64;
+        if len > self.budget {
+            return 0;
+        }
+        if self.map.contains_key(&key) {
+            let _ = self.get(&key); // refresh recency
+            return 0;
+        }
+        let mut evicted = 0;
+        while self.used + len > self.budget {
+            let Some((&oldest, _)) = self.order.iter().next() else { break };
+            let victim = self.order.remove(&oldest).unwrap();
+            if let Some((b, _)) = self.map.remove(&victim) {
+                self.used -= b.len() as u64;
+            }
+            evicted += 1;
+        }
+        self.seq += 1;
+        self.order.insert(self.seq, key);
+        self.map.insert(key, (bytes, self.seq));
+        self.used += len;
+        evicted
+    }
+
+    fn remove(&mut self, key: &ContentKey) {
+        if let Some((bytes, seq)) = self.map.remove(key) {
+            self.used -= bytes.len() as u64;
+            self.order.remove(&seq);
+        }
+    }
+}
+
+/// The content-addressed payload table shared by every [`super::SnapshotStore`]
+/// of a service, plus the spill tier handle and the fault cache.
+///
+/// Stores register once (getting a `tag`) and then insert/release
+/// references under that tag; the table keeps per-tag byte gauges under
+/// the charge-owner model described in the module docs.
+#[derive(Debug)]
+pub struct PayloadStore {
+    table: Mutex<Table>,
+    fault_cache: Mutex<FaultCache>,
+    spill: Option<Arc<SpillStore>>,
+    dedup_hits: AtomicU64,
+    fc_hits: AtomicU64,
+    fc_misses: AtomicU64,
+    fc_evictions: AtomicU64,
+}
+
+impl PayloadStore {
+    /// A payload table over an optional spill tier, with a fault cache of
+    /// `fault_cache_bytes` (0 disables the cache).
+    pub fn new(spill: Option<Arc<SpillStore>>, fault_cache_bytes: u64) -> PayloadStore {
+        PayloadStore {
+            table: Mutex::new(Table::default()),
+            fault_cache: Mutex::new(FaultCache::new(fault_cache_bytes)),
+            spill,
+            dedup_hits: AtomicU64::new(0),
+            fc_hits: AtomicU64::new(0),
+            fc_misses: AtomicU64::new(0),
+            fc_evictions: AtomicU64::new(0),
+        }
+    }
+
+    /// Register a referencing store; the returned tag scopes its byte
+    /// gauges and refcounts.
+    pub fn register(&self) -> u32 {
+        let mut t = self.table.lock().unwrap();
+        t.resident_by.push(0);
+        t.spilled_by.push(0);
+        (t.resident_by.len() - 1) as u32
+    }
+
+    /// Whether a spill tier is attached.
+    pub fn has_spill(&self) -> bool {
+        self.spill.is_some()
+    }
+
+    /// The attached spill tier, if any.
+    pub fn spill_store(&self) -> Option<&Arc<SpillStore>> {
+        self.spill.as_ref()
+    }
+
+    /// Store one reference to `bytes` under `key` for store `tag`. If the
+    /// content is already present the bytes are dropped and the reference
+    /// shared ([`InsertOutcome::Deduped`]); otherwise the payload becomes
+    /// resident, charged to `tag`.
+    pub fn insert(&self, tag: u32, key: ContentKey, bytes: Vec<u8>) -> InsertOutcome {
+        let mut t = self.table.lock().unwrap();
+        let tbl = &mut *t;
+        if let Some(p) = tbl.payloads.get_mut(&key) {
+            *p.refs.entry(tag).or_insert(0) += 1;
+            self.dedup_hits.fetch_add(1, Ordering::Relaxed);
+            return InsertOutcome::Deduped;
+        }
+        let len = bytes.len() as u64;
+        tbl.resident_by[tag as usize] += len;
+        let mut refs = HashMap::new();
+        refs.insert(tag, 1);
+        tbl.payloads.insert(
+            key,
+            Payload { len, tier: Tier::Resident(Arc::new(bytes)), refs, charged: tag },
+        );
+        InsertOutcome::New
+    }
+
+    /// Register a reference to a payload that already lives on disk
+    /// (warm-start reload). A key already present simply gains a shared
+    /// reference — deduped payloads rehydrate shared.
+    pub fn adopt(&self, tag: u32, key: ContentKey, slot: SpillSlot) -> InsertOutcome {
+        let mut t = self.table.lock().unwrap();
+        let tbl = &mut *t;
+        if let Some(p) = tbl.payloads.get_mut(&key) {
+            *p.refs.entry(tag).or_insert(0) += 1;
+            self.dedup_hits.fetch_add(1, Ordering::Relaxed);
+            return InsertOutcome::Deduped;
+        }
+        let len = slot.bytes;
+        tbl.spilled_by[tag as usize] += len;
+        let mut refs = HashMap::new();
+        refs.insert(tag, 1);
+        tbl.payloads.insert(key, Payload { len, tier: Tier::Spilled(slot), refs, charged: tag });
+        InsertOutcome::New
+    }
+
+    /// Fetch the bytes behind `key`, faulting from disk through the LRU
+    /// fault cache when spilled. The [`FetchSource`] tells the caller
+    /// whether a disk read actually happened.
+    pub fn fetch(&self, key: &ContentKey) -> Option<(Arc<Vec<u8>>, FetchSource)> {
+        let slot = {
+            let t = self.table.lock().unwrap();
+            match t.payloads.get(key) {
+                None => return None,
+                Some(p) => match &p.tier {
+                    Tier::Resident(b) => return Some((Arc::clone(b), FetchSource::Resident)),
+                    Tier::Spilled(s) => s.clone(),
+                },
+            }
+        };
+        if let Some(hit) = self.fault_cache.lock().unwrap().get(key) {
+            self.fc_hits.fetch_add(1, Ordering::Relaxed);
+            return Some((hit, FetchSource::FaultCache));
+        }
+        self.fc_misses.fetch_add(1, Ordering::Relaxed);
+        // Disk read outside both locks.
+        let snap = slot.fault()?;
+        let bytes = Arc::new(snap.bytes);
+        let evicted = self.fault_cache.lock().unwrap().insert(*key, Arc::clone(&bytes));
+        self.fc_evictions.fetch_add(evicted, Ordering::Relaxed);
+        Some((bytes, FetchSource::Disk))
+    }
+
+    /// Drop store `tag`'s reference (handle `id`) to `key`. Bytes are only
+    /// freed — and the disk slot only retracted — when the *last* referent
+    /// across all stores dies; losing the charging store's last reference
+    /// while others remain moves the charge to a survivor.
+    pub fn release(&self, tag: u32, key: ContentKey, id: u64) {
+        enum Disk {
+            None,
+            DropRecord,
+            DropPayloadAt(std::path::PathBuf),
+            RemoveFile(std::path::PathBuf),
+        }
+        let mut action = Disk::None;
+        {
+            let mut t = self.table.lock().unwrap();
+            let tbl = &mut *t;
+            let Some(p) = tbl.payloads.get_mut(&key) else { return };
+            match p.refs.get_mut(&tag) {
+                Some(n) if *n > 0 => *n -= 1,
+                _ => return, // tag held no reference: nothing to release
+            }
+            if p.ref_total() == 0 {
+                let p = tbl.payloads.remove(&key).unwrap();
+                match p.tier {
+                    Tier::Resident(_) => {
+                        let g = &mut tbl.resident_by[p.charged as usize];
+                        *g = g.saturating_sub(p.len);
+                    }
+                    Tier::Spilled(slot) => {
+                        let g = &mut tbl.spilled_by[p.charged as usize];
+                        *g = g.saturating_sub(p.len);
+                        action = match &self.spill {
+                            Some(sp) if slot.path.parent() == Some(sp.dir()) => {
+                                Disk::DropPayloadAt(slot.path)
+                            }
+                            // Adopted from a foreign dir (or no tier):
+                            // deleting the file suffices — manifest reload
+                            // discards records whose file is gone.
+                            _ => Disk::RemoveFile(slot.path),
+                        };
+                    }
+                }
+                self.fault_cache.lock().unwrap().remove(&key);
+            } else {
+                let resident = matches!(p.tier, Tier::Resident(_));
+                if p.refs.get(&tag) == Some(&0) {
+                    p.refs.remove(&tag);
+                    if p.charged == tag {
+                        // Move the byte charge to a surviving referent.
+                        let new = *p.refs.keys().next().unwrap();
+                        let len = p.len;
+                        p.charged = new;
+                        let gauges = if resident {
+                            &mut tbl.resident_by
+                        } else {
+                            &mut tbl.spilled_by
+                        };
+                        gauges[tag as usize] = gauges[tag as usize].saturating_sub(len);
+                        gauges[new as usize] += len;
+                    }
+                }
+                if !resident {
+                    action = Disk::DropRecord;
+                }
+            }
+        }
+        match (action, &self.spill) {
+            (Disk::DropPayloadAt(path), Some(sp)) => sp.drop_payload_at(id, &path),
+            (Disk::DropRecord, Some(sp)) => sp.drop_record(id),
+            (Disk::RemoveFile(path), _) => {
+                let _ = std::fs::remove_file(path);
+            }
+            _ => {}
+        }
+    }
+
+    /// Demote `key`'s payload to the spill tier, recording handle `id` in
+    /// the manifest. The byte write is skipped when the content already
+    /// has a live disk slot (cross-task spill dedup).
+    pub fn spill(
+        &self,
+        key: ContentKey,
+        task: &str,
+        id: u64,
+        serialize_cost: f64,
+        restore_cost: f64,
+    ) -> SpillOutcome {
+        let Some(sp) = &self.spill else { return SpillOutcome::Refused };
+        let bytes = {
+            let t = self.table.lock().unwrap();
+            match t.payloads.get(&key) {
+                None => return SpillOutcome::Gone,
+                Some(p) => match &p.tier {
+                    Tier::Spilled(_) => return SpillOutcome::AlreadySpilled,
+                    Tier::Resident(b) => Arc::clone(b),
+                },
+            }
+        };
+        // File + manifest I/O outside the table lock; swap the tier after.
+        let Ok(slot) = sp.write_keyed(task, id, key, &bytes, serialize_cost, restore_cost)
+        else {
+            return SpillOutcome::Failed;
+        };
+        let mut retract = false;
+        let out = {
+            let mut t = self.table.lock().unwrap();
+            let tbl = &mut *t;
+            match tbl.payloads.get_mut(&key) {
+                None => {
+                    // All referents vanished while we wrote: retract.
+                    retract = true;
+                    SpillOutcome::Gone
+                }
+                Some(p) => {
+                    if matches!(p.tier, Tier::Spilled(_)) {
+                        // A concurrent spill (same content, another handle)
+                        // won; our record stays — it names the same file.
+                        SpillOutcome::AlreadySpilled
+                    } else {
+                        let len = p.len;
+                        let charged = p.charged as usize;
+                        p.tier = Tier::Spilled(slot);
+                        tbl.resident_by[charged] =
+                            tbl.resident_by[charged].saturating_sub(len);
+                        tbl.spilled_by[charged] += len;
+                        SpillOutcome::Demoted
+                    }
+                }
+            }
+        };
+        if retract {
+            sp.drop_payload(id);
+        }
+        out
+    }
+
+    /// True when `key` is stored with its bytes in memory.
+    pub fn is_resident(&self, key: &ContentKey) -> bool {
+        matches!(
+            self.table.lock().unwrap().payloads.get(key).map(|p| &p.tier),
+            Some(Tier::Resident(_))
+        )
+    }
+
+    /// How many of `keys` currently live in the spill tier (one table lock
+    /// for the whole batch; duplicates count once per occurrence).
+    pub fn count_spilled(&self, keys: &[ContentKey]) -> usize {
+        let t = self.table.lock().unwrap();
+        keys.iter()
+            .filter(|k| matches!(t.payloads.get(k).map(|p| &p.tier), Some(Tier::Spilled(_))))
+            .count()
+    }
+
+    /// The on-disk slot behind `key`, when spilled.
+    pub fn spilled_slot(&self, key: &ContentKey) -> Option<SpillSlot> {
+        match self.table.lock().unwrap().payloads.get(key).map(|p| &p.tier) {
+            Some(Tier::Spilled(s)) => Some(s.clone()),
+            _ => None,
+        }
+    }
+
+    /// Total live references to `key` across all stores (0 = absent).
+    pub fn ref_total(&self, key: &ContentKey) -> u64 {
+        self.table
+            .lock()
+            .unwrap()
+            .payloads
+            .get(key)
+            .map(|p| p.ref_total())
+            .unwrap_or(0)
+    }
+
+    /// Resident bytes charged to store `tag`.
+    pub fn resident_bytes_of(&self, tag: u32) -> u64 {
+        self.table.lock().unwrap().resident_by[tag as usize]
+    }
+
+    /// Spilled bytes charged to store `tag`.
+    pub fn spilled_bytes_of(&self, tag: u32) -> u64 {
+        self.table.lock().unwrap().spilled_by[tag as usize]
+    }
+
+    /// Distinct payloads currently stored.
+    pub fn payload_count(&self) -> usize {
+        self.table.lock().unwrap().payloads.len()
+    }
+
+    /// Lifetime inserts/adopts that shared an existing payload.
+    pub fn dedup_hits(&self) -> u64 {
+        self.dedup_hits.load(Ordering::Relaxed)
+    }
+
+    /// Resident bytes avoided right now by sharing: Σ len × (refs − 1)
+    /// over resident payloads.
+    pub fn dedup_resident_bytes_saved(&self) -> u64 {
+        let t = self.table.lock().unwrap();
+        t.payloads
+            .values()
+            .filter(|p| matches!(p.tier, Tier::Resident(_)))
+            .map(|p| p.len * p.ref_total().saturating_sub(1))
+            .sum()
+    }
+
+    /// Fault-ins served from the LRU fault cache (no disk read).
+    pub fn fault_cache_hits(&self) -> u64 {
+        self.fc_hits.load(Ordering::Relaxed)
+    }
+
+    /// Fault-ins that had to read the spill tier.
+    pub fn fault_cache_misses(&self) -> u64 {
+        self.fc_misses.load(Ordering::Relaxed)
+    }
+
+    /// Entries evicted from the fault cache to respect its byte budget.
+    pub fn fault_cache_evictions(&self) -> u64 {
+        self.fc_evictions.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn content_key_is_stable_and_content_sensitive() {
+        let a = ContentKey::of(b"hello sandbox");
+        assert_eq!(a, ContentKey::of(b"hello sandbox"));
+        assert_ne!(a, ContentKey::of(b"hello sandboy"));
+        assert_ne!(a, ContentKey::of(b"hello sandbox "));
+        assert_ne!(ContentKey::of(b""), ContentKey::of(b"\0"));
+        // Length is mixed in: a prefix never collides with its extension.
+        assert_ne!(ContentKey::of(&[0u8; 8]), ContentKey::of(&[0u8; 16]));
+    }
+
+    #[test]
+    fn hex_roundtrip_and_rejects() {
+        let k = ContentKey::of(b"roundtrip me");
+        let hex = k.to_hex();
+        assert_eq!(hex.len(), 64);
+        assert_eq!(ContentKey::from_hex(&hex), Some(k));
+        assert_eq!(ContentKey::from_hex("abc"), None);
+        assert_eq!(ContentKey::from_hex(&"g".repeat(64)), None);
+        let synth = ContentKey::synthetic(42);
+        assert_eq!(ContentKey::from_hex(&synth.to_hex()), Some(synth));
+        assert_ne!(ContentKey::synthetic(1), ContentKey::synthetic(2));
+    }
+
+    #[test]
+    fn dedup_shares_one_resident_copy_and_charges_once() {
+        let store = PayloadStore::new(None, 0);
+        let a = store.register();
+        let b = store.register();
+        let key = ContentKey::of(&[9u8; 100]);
+        assert_eq!(store.insert(a, key, vec![9u8; 100]), InsertOutcome::New);
+        assert_eq!(store.insert(b, key, vec![9u8; 100]), InsertOutcome::Deduped);
+        assert_eq!(store.insert(b, key, vec![9u8; 100]), InsertOutcome::Deduped);
+        assert_eq!(store.dedup_hits(), 2);
+        assert_eq!(store.ref_total(&key), 3);
+        assert_eq!(store.payload_count(), 1);
+        assert_eq!(store.resident_bytes_of(a), 100, "charged to the first inserter");
+        assert_eq!(store.resident_bytes_of(b), 0, "shared bytes are not double-charged");
+        assert_eq!(store.dedup_resident_bytes_saved(), 200);
+
+        // Dropping the charging store's last ref moves the charge.
+        store.release(a, key, 1);
+        assert_eq!(store.ref_total(&key), 2);
+        assert_eq!(store.resident_bytes_of(a), 0);
+        assert_eq!(store.resident_bytes_of(b), 100);
+        assert!(store.is_resident(&key));
+
+        store.release(b, key, 2);
+        store.release(b, key, 3);
+        assert_eq!(store.ref_total(&key), 0);
+        assert_eq!(store.resident_bytes_of(b), 0);
+        assert_eq!(store.payload_count(), 0);
+        assert!(store.fetch(&key).is_none());
+    }
+
+    #[test]
+    fn fetch_reports_where_bytes_came_from() {
+        let dir = std::env::temp_dir()
+            .join(format!("tvcache-payload-fetch-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let spill = Arc::new(SpillStore::open(&dir).unwrap());
+        let store = PayloadStore::new(Some(spill), 1024);
+        let tag = store.register();
+        let key = ContentKey::of(&[4u8; 64]);
+        store.insert(tag, key, vec![4u8; 64]);
+        assert_eq!(store.fetch(&key).unwrap().1, FetchSource::Resident);
+
+        assert_eq!(store.spill(key, "t", 1, 0.1, 0.2), SpillOutcome::Demoted);
+        assert_eq!(store.spill(key, "t", 1, 0.1, 0.2), SpillOutcome::AlreadySpilled);
+        assert_eq!(store.resident_bytes_of(tag), 0);
+        assert_eq!(store.spilled_bytes_of(tag), 64);
+
+        // First fault reads disk; the second is served by the LRU cache.
+        let (bytes, src) = store.fetch(&key).unwrap();
+        assert_eq!(src, FetchSource::Disk);
+        assert_eq!(*bytes, vec![4u8; 64]);
+        let (bytes, src) = store.fetch(&key).unwrap();
+        assert_eq!(src, FetchSource::FaultCache);
+        assert_eq!(*bytes, vec![4u8; 64]);
+        assert_eq!(store.fault_cache_misses(), 1);
+        assert_eq!(store.fault_cache_hits(), 1);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn fault_cache_evicts_lru_within_budget() {
+        let mut fc = FaultCache::new(100);
+        let (a, b, c) = (
+            ContentKey::of(b"a"),
+            ContentKey::of(b"b"),
+            ContentKey::of(b"c"),
+        );
+        assert_eq!(fc.insert(a, Arc::new(vec![0; 60])), 0);
+        assert_eq!(fc.insert(b, Arc::new(vec![0; 40])), 0);
+        // Touch `a` so `b` is the LRU victim.
+        assert!(fc.get(&a).is_some());
+        assert_eq!(fc.insert(c, Arc::new(vec![0; 40])), 1);
+        assert!(fc.get(&b).is_none(), "LRU entry evicted");
+        assert!(fc.get(&a).is_some());
+        assert!(fc.get(&c).is_some());
+        assert!(fc.used <= 100);
+        // Oversized payloads are passed through, not cached.
+        assert_eq!(fc.insert(ContentKey::of(b"big"), Arc::new(vec![0; 101])), 0);
+        assert!(fc.get(&ContentKey::of(b"big")).is_none());
+    }
+
+    #[test]
+    fn shared_spilled_payload_keeps_its_file_until_last_referent_dies() {
+        let dir = std::env::temp_dir()
+            .join(format!("tvcache-payload-shared-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let spill = Arc::new(SpillStore::open(&dir).unwrap());
+        let store = PayloadStore::new(Some(Arc::clone(&spill)), 0);
+        let tag = store.register();
+        let key = ContentKey::of(&[8u8; 32]);
+        store.insert(tag, key, vec![8u8; 32]);
+        store.insert(tag, key, vec![8u8; 32]);
+        assert_eq!(store.spill(key, "t", 1, 0.1, 0.2), SpillOutcome::Demoted);
+        let path = store.spilled_slot(&key).unwrap().path;
+        assert!(path.exists());
+
+        store.release(tag, key, 1);
+        assert!(path.exists(), "file must survive while a referent remains");
+        assert!(store.fetch(&key).is_some());
+        store.release(tag, key, 2);
+        assert!(!path.exists(), "last release retracts the disk slot");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -33,6 +33,7 @@ use super::backend::{
 };
 use super::key::{ToolCall, ToolResult};
 use super::lpm::{CursorStep, Lookup};
+use super::payload::{ContentKey, PayloadStore, DEFAULT_FAULT_CACHE_BYTES};
 use super::shard::{CacheFactory, Shard, ShardRouter};
 use super::snapshot::{SnapshotCosts, SnapshotStore};
 use super::spill::{self, SpillStore};
@@ -72,6 +73,11 @@ pub struct ServiceConfig {
     /// abandoned sessions are reclaimed on a steadily busy shard long
     /// before its table ever hits the cap. 0 disables the op-count tick.
     pub session_sweep_every_ops: u64,
+    /// Byte budget of the LRU fault cache layered over spill fault-ins
+    /// (shared across shards; a hot spilled payload is read from disk once
+    /// and served from memory thereafter). 0 disables the cache. Only
+    /// meaningful with a `spill_dir`.
+    pub fault_cache_bytes: u64,
 }
 
 /// Default [`ServiceConfig::session_idle_ttl`].
@@ -93,6 +99,7 @@ impl Default for ServiceConfig {
             max_sessions_per_shard: 8192,
             session_idle_ttl: SESSION_IDLE_TTL,
             session_sweep_every_ops: 4096,
+            fault_cache_bytes: DEFAULT_FAULT_CACHE_BYTES,
         }
     }
 }
@@ -213,6 +220,10 @@ pub struct ShardedCacheService {
     /// *same* writer: two stores on one manifest would let the primary's
     /// compaction discard the secondary's appended records.
     spill: Option<Arc<SpillStore>>,
+    /// The content-addressed payload tier shared by every shard's snapshot
+    /// store: identical sandbox states dedup to one resident (or spilled)
+    /// copy, and spill fault-ins go through one LRU fault cache.
+    payloads: Arc<PayloadStore>,
     /// Cursor id allocator (0 is the "unsupported/failed" sentinel).
     next_cursor: AtomicU64,
 }
@@ -241,14 +252,17 @@ impl ShardedCacheService {
             Some(dir) => Some(Arc::new(SpillStore::open(dir)?)),
             None => None,
         };
+        // One payload store for the whole service: dedup and the fault
+        // cache work across shards (and across tasks) by construction.
+        let payloads =
+            Arc::new(PayloadStore::new(spill.clone(), cfg.fault_cache_bytes));
         let shards: Vec<Arc<ShardSlot>> = (0..n)
             .map(|i| {
-                let snapshots = match &spill {
-                    Some(s) => {
-                        SnapshotStore::with_spill(i as u64 + 1, n as u64, Arc::clone(s))
-                    }
-                    None => SnapshotStore::new(i as u64 + 1, n as u64),
-                };
+                let snapshots = SnapshotStore::with_payloads(
+                    i as u64 + 1,
+                    n as u64,
+                    Arc::clone(&payloads),
+                );
                 Arc::new(ShardSlot {
                     tasks: Shard::from_factory(Arc::clone(&factory)),
                     snapshots,
@@ -265,6 +279,7 @@ impl ShardedCacheService {
             cfg,
             workers: Vec::new(),
             spill,
+            payloads,
             next_cursor: AtomicU64::new(1),
         };
         if svc.cfg.background && svc.cfg.bounded() {
@@ -321,6 +336,12 @@ impl ShardedCacheService {
         self.shards.len()
     }
 
+    /// The shared content-addressed payload tier (white-box access for
+    /// tests and benches: dedup/fault-cache counters, payload counts).
+    pub fn payload_store(&self) -> &Arc<PayloadStore> {
+        &self.payloads
+    }
+
     fn slot(&self, task: &str) -> &ShardSlot {
         &self.shards[self.router.route(task)]
     }
@@ -360,6 +381,12 @@ impl ShardedCacheService {
     /// Snapshots currently demoted to the disk tier.
     pub fn spilled_count(&self) -> usize {
         self.shards.iter().map(|s| s.snapshots.spilled_count()).sum()
+    }
+
+    /// White-box: is `task`'s snapshot `id` currently in the resident tier?
+    /// (Property tests of the pin/spill interaction.)
+    pub fn snapshot_is_resident(&self, task: &str, id: u64) -> bool {
+        self.slot(task).snapshots.is_resident(id)
     }
 
     /// Fetch a snapshot by id alone (legacy `/snapshot?id=` fetches that
@@ -616,19 +643,33 @@ impl ShardedCacheService {
             for tid in ids {
                 let tc = slot.tasks.task(&tid);
                 for (_, sref) in tc.snapshotted_nodes() {
-                    // Already spilled into this very directory: the bytes
-                    // are in place — append the manifest record only (no
-                    // re-read/re-write, no fault-counter pollution).
+                    // Already spilled into this very directory (keyed or
+                    // legacy file name): the bytes are in place — append
+                    // the manifest record only (no re-read/re-write, no
+                    // fault-counter pollution).
                     if let Some(s) = slot.snapshots.spilled_slot(sref.id) {
-                        if s.path == spill::payload_path(dir, sref.id) {
+                        let in_dir =
+                            s.path.parent().map(canon).is_some_and(|p| p == dir_canon);
+                        if in_dir {
                             spill.record(&tid, sref.id, &s, sref.restore_cost)?;
                             continue;
                         }
                     }
-                    if let Some(snap) = slot.snapshots.get(sref.id) {
-                        // The manifest records the ref's original restore
-                        // cost — not the fault-penalized one `get` reports.
-                        spill.write(&tid, sref.id, &snap, sref.restore_cost)?;
+                    if let (Some(key), Some(snap)) =
+                        (slot.snapshots.content_key(sref.id), slot.snapshots.get(sref.id))
+                    {
+                        // Content-keyed write: a payload shared by many
+                        // handles lands on disk once. The manifest records
+                        // the ref's original restore cost — not the
+                        // fault-penalized one `get` reports.
+                        spill.write_keyed(
+                            &tid,
+                            sref.id,
+                            key,
+                            &snap.bytes,
+                            snap.serialize_cost,
+                            sref.restore_cost,
+                        )?;
                     }
                 }
                 tasks_json.push(Json::obj(vec![
@@ -660,6 +701,11 @@ impl ShardedCacheService {
                 "tcgs.json missing tasks",
             ));
         };
+        // Crash hygiene: a run killed mid-compaction (or mid-spill) leaves
+        // a stray `manifest.jsonl.tmp` and orphaned `snap-*` files that no
+        // surviving manifest record references. Sweep them now — before
+        // this sweep they lingered until the *next* compaction rewrite.
+        spill::sweep_orphans(dir, &records);
         let mut loaded = 0usize;
         for entry in tasks {
             let (Some(tid), Some(tcg_json)) =
@@ -717,6 +763,10 @@ impl Drop for ShardedCacheService {
 /// a snapshot changes the recreation cost (and subtree shape) of its
 /// neighbours, so a one-shot sorted list would evict against stale scores.
 /// The rescans run on the background worker, off every request path.
+/// Bytes per MiB — the unit of the keep-score byte term (see
+/// [`EvictionPolicy::keep_score`](super::eviction::EvictionPolicy)).
+const MIB: f64 = 1048576.0;
+
 fn drain_slot(slot: &ShardSlot, all: &[Arc<ShardSlot>], cfg: &ServiceConfig) {
     let mut skip: HashSet<u64> = HashSet::new();
     loop {
@@ -729,6 +779,30 @@ fn drain_slot(slot: &ShardSlot, all: &[Arc<ShardSlot>], cfg: &ServiceConfig) {
         if !over_shard && !over_global {
             break;
         }
+        // Content keys pinned anywhere (any task, any shard). Spilling
+        // demotes the shared *payload*, not just the victim handle — so a
+        // candidate whose content key is pinned through some other handle
+        // must be skipped, or the pinned snapshot's bytes would leave
+        // memory out from under its holder. Recollected every iteration,
+        // like the candidate scores: pins move while we drain.
+        let pinned_keys: HashSet<ContentKey> = if cfg.spill_dir.is_some() {
+            let mut keys = HashSet::new();
+            for s in all {
+                for tid in s.tasks.task_ids() {
+                    for pref in s.tasks.task(&tid).pinned_snapshot_refs() {
+                        if let Some(k) = s.snapshots.content_key(pref.id) {
+                            keys.insert(k);
+                        }
+                    }
+                }
+            }
+            keys
+        } else {
+            // Destroying a handle only drops a refcount; a shared payload
+            // survives for its pinned referents, so no cross-task guard is
+            // needed on this path.
+            HashSet::new()
+        };
         let mut task_ids = slot.tasks.task_ids();
         task_ids.sort();
         // (score, cache, task id, node, ref) of the worst keeper so far.
@@ -739,6 +813,27 @@ fn drain_slot(slot: &ShardSlot, all: &[Arc<ShardSlot>], cfg: &ServiceConfig) {
                 if skip.contains(&sref.id) || !slot.snapshots.is_resident(sref.id) {
                     continue;
                 }
+                if cfg.spill_dir.is_some()
+                    && slot
+                        .snapshots
+                        .content_key(sref.id)
+                        .is_some_and(|k| pinned_keys.contains(&k))
+                {
+                    continue;
+                }
+                // Byte accounting charges a shared payload once, so the
+                // keep-score's byte penalty must not count it once *per
+                // handle*: give shared-payload candidates the byte term
+                // back — evicting one of their handles reclaims (at most)
+                // a fraction of those bytes, and the payload is serving
+                // several positions per resident byte.
+                let score = if tc.eviction.byte_weight != 0.0
+                    && slot.snapshots.payload_shared(sref.id)
+                {
+                    score + tc.eviction.byte_weight * sref.bytes as f64 / MIB
+                } else {
+                    score
+                };
                 let better = match &best {
                     None => true,
                     Some((bs, _, _, _, bref)) => {
@@ -852,6 +947,13 @@ impl CacheBackend for ShardedCacheService {
                 agg.hits += st.hits;
             }
         }
+        // The payload tier is service-global (shared by every shard), so
+        // its counters are read once, not summed per shard.
+        agg.dedup_hits = self.payloads.dedup_hits();
+        agg.dedup_resident_bytes_saved = self.payloads.dedup_resident_bytes_saved();
+        agg.fault_cache_hits = self.payloads.fault_cache_hits();
+        agg.fault_cache_misses = self.payloads.fault_cache_misses();
+        agg.fault_cache_evictions = self.payloads.fault_cache_evictions();
         agg
     }
 
@@ -1044,6 +1146,12 @@ mod tests {
         SandboxSnapshot { bytes: vec![7u8; n], serialize_cost: 0.1, restore_cost: 0.2 }
     }
 
+    /// Distinct-content snapshot: byte-accounting tests want every payload
+    /// unique, so content-dedup stays out of their arithmetic.
+    fn snapf(fill: u8, n: usize) -> SandboxSnapshot {
+        SandboxSnapshot { bytes: vec![fill; n], serialize_cost: 0.1, restore_cost: 0.2 }
+    }
+
     fn tmpdir(tag: &str) -> PathBuf {
         let d = std::env::temp_dir()
             .join(format!("tvcache-svc-{tag}-{}", std::process::id()));
@@ -1100,7 +1208,7 @@ mod tests {
         let svc = ShardedCacheService::with_factory(1, factory);
         for i in 0..5 {
             let node = svc.insert("t", &traj(&["p", &format!("leaf{i}")]));
-            svc.store_snapshot("t", node, snap(100));
+            svc.store_snapshot("t", node, snapf(i as u8, 100));
         }
         // Budget 2 ⇒ 3 evicted; evicted bytes must leave the shard store.
         assert_eq!(svc.snapshot_count(), 2);
@@ -1169,7 +1277,7 @@ mod tests {
         let mut nodes = Vec::new();
         for i in 0..5 {
             let node = svc.insert("t", &traj(&["p", &format!("leaf{i}")]));
-            assert!(svc.store_snapshot("t", node, snap(100)) > 0);
+            assert!(svc.store_snapshot("t", node, snapf(i as u8, 100)) > 0);
             nodes.push(node);
         }
         assert_eq!(svc.resident_bytes(), 500);
@@ -1214,7 +1322,7 @@ mod tests {
         for i in 0..24 {
             let task = format!("task-{i}");
             let node = svc.insert(&task, &traj(&["a", "b"]));
-            svc.store_snapshot(&task, node, snap(100));
+            svc.store_snapshot(&task, node, snapf(i as u8, 100));
         }
         // The worker runs asynchronously; wait for it to go idle, then
         // verify the budget converged without losing any snapshot.
@@ -1241,7 +1349,7 @@ mod tests {
             .unwrap();
         for i in 0..4 {
             let node = svc.insert("t", &traj(&["p", &format!("leaf{i}")]));
-            svc.store_snapshot("t", node, snap(100));
+            svc.store_snapshot("t", node, snapf(i as u8, 100));
         }
         svc.drain_over_budget();
         assert!(svc.resident_bytes() <= 150);
@@ -1262,7 +1370,7 @@ mod tests {
         for i in 0..8 {
             let task = format!("task-{i}");
             let node = svc.insert(&task, &traj(&["a"]));
-            svc.store_snapshot(&task, node, snap(100));
+            svc.store_snapshot(&task, node, snapf(i as u8, 100));
         }
         assert_eq!(svc.resident_bytes(), 800);
         svc.drain_over_budget();
@@ -1566,7 +1674,7 @@ mod tests {
             .unwrap();
         for i in 0..3 {
             let node = svc.insert("t", &traj(&["p", &format!("leaf{i}")]));
-            assert!(svc.store_snapshot("t", node, snap(100)) > 0);
+            assert!(svc.store_snapshot("t", node, snapf(i as u8, 100)) > 0);
         }
         svc.drain_over_budget(); // spills into `dir`
         assert!(svc.spilled_count() >= 2);
@@ -1576,12 +1684,97 @@ mod tests {
         // was never replaced or stranded), and a warm start sees every
         // payload.
         let node = svc.insert("t", &traj(&["p", "leaf-late"]));
-        assert!(svc.store_snapshot("t", node, snap(100)) > 0);
+        assert!(svc.store_snapshot("t", node, snapf(9, 100)) > 0);
         svc.drain_over_budget();
         // Persist recorded every snapshot (both tiers) and the post-persist
         // spill appended through the same writer: one record per snapshot.
         let records = spill::load_manifest(&dir);
         assert_eq!(records.len(), svc.snapshot_count(), "manifest lost a record");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    // ---- content-addressed payload tier ----
+
+    #[test]
+    fn identical_payloads_dedup_across_tasks_and_shards() {
+        let svc = ShardedCacheService::new(4);
+        let mut ids = Vec::new();
+        for i in 0..6 {
+            let task = format!("task-{i}");
+            let node = svc.insert(&task, &traj(&["a"]));
+            let id = svc.store_snapshot(&task, node, snap(256));
+            assert!(id > 0);
+            ids.push((task, id));
+        }
+        // Six handles, one resident copy: the bytes are charged once
+        // service-wide, whatever shard each task routed to.
+        assert_eq!(svc.snapshot_count(), 6);
+        assert_eq!(svc.resident_bytes(), 256);
+        assert_eq!(svc.payload_store().payload_count(), 1);
+        let agg = svc.service_stats();
+        assert_eq!(agg.dedup_hits, 5);
+        assert_eq!(agg.dedup_resident_bytes_saved, 5 * 256);
+        for (task, id) in &ids {
+            assert_eq!(svc.fetch_snapshot(task, *id).unwrap().size(), 256);
+        }
+    }
+
+    #[test]
+    fn drain_never_spills_a_payload_pinned_through_another_task() {
+        let dir = tmpdir("pin-shared");
+        let cfg = ServiceConfig {
+            shards: 1,
+            shard_byte_budget: Some(50),
+            spill_dir: Some(dir.clone()),
+            background: false,
+            ..Default::default()
+        };
+        let svc = ShardedCacheService::with_config(cfg, Arc::new(TaskCache::with_defaults))
+            .unwrap();
+        // Task A pins its snapshot through a resume offer; task B holds an
+        // unpinned handle of the *same content*.
+        let a = svc.insert("task-a", &traj(&["a", "b"]));
+        assert!(svc.store_snapshot("task-a", a, snap(100)) > 0);
+        let b = svc.insert("task-b", &traj(&["x"]));
+        assert!(svc.store_snapshot("task-b", b, snap(100)) > 0);
+        let Lookup::Miss(m) = svc.lookup("task-a", &[sf("a"), sf("b"), sf("z")]) else {
+            panic!("expected miss")
+        };
+        let (pin, _, _) = m.resume.expect("snapshot offered");
+        // Over budget (100 > 50), but the only payload's content key is
+        // pinned via task A: spilling task B's handle would demote the
+        // shared payload out from under the pinned holder — it must stay.
+        svc.drain_over_budget();
+        assert_eq!(svc.spilled_count(), 0, "pinned content key must not spill");
+        assert_eq!(svc.resident_bytes(), 100);
+        svc.release("task-a", pin);
+        // Released: the payload is fair game, and demoting either handle
+        // demotes both (one payload, one disk write).
+        svc.drain_over_budget();
+        assert_eq!(svc.spilled_count(), 2);
+        assert_eq!(svc.resident_bytes(), 0);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn warm_start_sweeps_crash_leftovers() {
+        let dir = tmpdir("sweep");
+        let svc = ShardedCacheService::new(1);
+        let node = svc.insert("t", &traj(&["a"]));
+        let id = svc.store_snapshot("t", node, snap(32));
+        svc.persist_to_dir(&dir).unwrap();
+        // Simulate a crash mid-compaction: a half-written manifest rewrite
+        // plus payload files no surviving manifest record references.
+        std::fs::write(dir.join("manifest.jsonl.tmp"), b"{trunc").unwrap();
+        std::fs::write(dir.join("snap-999.bin"), b"orphan").unwrap();
+        std::fs::write(dir.join("snap-777.tmp"), b"orphan").unwrap();
+        let fresh = ShardedCacheService::new(1);
+        assert_eq!(fresh.warm_start_from_dir(&dir).unwrap(), 1);
+        assert!(!dir.join("manifest.jsonl.tmp").exists(), "stray tmp must be swept");
+        assert!(!dir.join("snap-999.bin").exists(), "orphaned payload must be swept");
+        assert!(!dir.join("snap-777.tmp").exists(), "orphaned spill tmp must be swept");
+        // The live payload survived the sweep and still faults in.
+        assert_eq!(fresh.fetch_snapshot("t", id).unwrap().size(), 32);
         std::fs::remove_dir_all(&dir).unwrap();
     }
 }

@@ -1,21 +1,29 @@
-//! Selective sandbox snapshotting policy (§3.3) and the snapshot byte store.
+//! Selective sandbox snapshotting policy (§3.3) and the snapshot store.
 //!
 //! TVCACHE snapshots the sandbox after a tool call only when re-executing
 //! the call would cost more than serializing + later restoring a snapshot.
 //! In practice this snapshots after long builds and test-suite runs but not
 //! after `cat foo.py`.
 //!
-//! [`SnapshotStore`] holds the serialized sandbox bytes. Each shard of the
-//! sharded cache service owns its *own* store (strided id space), so the
-//! snapshot path never funnels through a global lock. A store may carry a
-//! spill tier (`cache/spill.rs`): over-budget payloads are demoted to disk
-//! (`spill`) and faulted back in transparently on `get`, with a small read
-//! penalty folded into the returned `restore_cost`.
+//! [`SnapshotStore`] maps snapshot ids to *handles* — `(content_key, size,
+//! costs)` — while the bytes themselves live in a content-addressed
+//! [`PayloadStore`] (`cache/payload.rs`), shared across all stores of a
+//! service. Each shard of the sharded cache service owns its *own* handle
+//! store (strided id space), so the snapshot path never funnels through a
+//! global id lock; identical sandbox states inserted by different tasks or
+//! shards still collapse to one resident (or one spilled) copy. A store
+//! may carry a spill tier (`cache/spill.rs`): over-budget payloads are
+//! demoted to disk (`spill`) and faulted back in transparently on `get`
+//! through an LRU fault cache, with a small read penalty folded into the
+//! returned `restore_cost` only when the disk was actually touched.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
+use super::payload::{
+    ContentKey, FetchSource, PayloadStore, SpillOutcome, DEFAULT_FAULT_CACHE_BYTES,
+};
 use super::spill::{SpillSlot, SpillStore, SPILL_FAULT_PENALTY};
 use crate::sandbox::SandboxSnapshot;
 
@@ -71,11 +79,14 @@ impl SnapshotPolicy {
     }
 }
 
-/// One stored snapshot: payload in memory, or demoted to the disk tier.
-#[derive(Debug)]
-enum Slot {
-    Resident(SandboxSnapshot),
-    Spilled(SpillSlot),
+/// One stored snapshot: a content-addressed reference plus the per-handle
+/// cost metadata the payload table does not keep.
+#[derive(Debug, Clone, Copy)]
+struct Handle {
+    key: ContentKey,
+    bytes: u64,
+    serialize_cost: f64,
+    restore_cost: f64,
 }
 
 /// Store of serialized sandboxes, keyed by snapshot id.
@@ -84,18 +95,23 @@ enum Slot {
 /// same value later passed to `get`/`remove` and embedded in
 /// [`super::tcg::SnapshotRef::id`]. Ids start at `first_id` (≥ 1: id 0 is
 /// the wire sentinel for "no snapshot") and advance by `stride`, so N
-/// per-shard stores constructed as `SnapshotStore::new(shard + 1, N)` hand
-/// out globally disjoint ids without any shared state.
+/// per-shard stores constructed as `SnapshotStore::with_payloads(shard + 1,
+/// N, payloads)` hand out globally disjoint ids without any shared state.
+///
+/// Byte gauges (`resident_bytes`/`spilled_bytes`) follow the payload
+/// table's charge-owner model: a payload shared with another store counts
+/// against exactly one of them at a time.
 #[derive(Debug)]
 pub struct SnapshotStore {
     next_id: AtomicU64,
     stride: u64,
-    snaps: Mutex<HashMap<u64, Slot>>,
-    /// Spill tier; `None` = over-budget payloads are destroyed, not demoted.
-    spill: Option<Arc<SpillStore>>,
-    resident_bytes: AtomicU64,
-    spilled_bytes: AtomicU64,
-    /// Payloads demoted to disk / faulted back in (service-stats counters).
+    snaps: Mutex<HashMap<u64, Handle>>,
+    /// Content-addressed byte table (possibly shared across stores).
+    payloads: Arc<PayloadStore>,
+    /// This store's registration tag in `payloads`.
+    tag: u32,
+    /// Payloads demoted to disk / faulted back in *by this store*
+    /// (service-stats counters).
     spills: AtomicU64,
     faults: AtomicU64,
 }
@@ -108,102 +124,127 @@ impl Default for SnapshotStore {
 
 impl SnapshotStore {
     pub fn new(first_id: u64, stride: u64) -> SnapshotStore {
-        Self::build(first_id, stride, None)
+        Self::build(first_id, stride, Arc::new(PayloadStore::new(None, 0)))
     }
 
-    /// A store whose over-budget payloads spill to `spill` instead of dying.
+    /// A store whose over-budget payloads spill to `spill` instead of
+    /// dying, with a default-sized fault cache over the fault-in path.
     pub fn with_spill(first_id: u64, stride: u64, spill: Arc<SpillStore>) -> SnapshotStore {
-        Self::build(first_id, stride, Some(spill))
+        Self::build(
+            first_id,
+            stride,
+            Arc::new(PayloadStore::new(Some(spill), DEFAULT_FAULT_CACHE_BYTES)),
+        )
     }
 
-    fn build(first_id: u64, stride: u64, spill: Option<Arc<SpillStore>>) -> SnapshotStore {
+    /// A store over a shared payload table — how the sharded service wires
+    /// its per-shard stores so identical payloads dedup across shards.
+    pub fn with_payloads(
+        first_id: u64,
+        stride: u64,
+        payloads: Arc<PayloadStore>,
+    ) -> SnapshotStore {
+        Self::build(first_id, stride, payloads)
+    }
+
+    fn build(first_id: u64, stride: u64, payloads: Arc<PayloadStore>) -> SnapshotStore {
         assert!(first_id >= 1, "snapshot id 0 is reserved for 'no snapshot'");
         assert!(stride >= 1);
+        let tag = payloads.register();
         SnapshotStore {
             next_id: AtomicU64::new(first_id),
             stride,
             snaps: Mutex::new(HashMap::new()),
-            spill,
-            resident_bytes: AtomicU64::new(0),
-            spilled_bytes: AtomicU64::new(0),
+            payloads,
+            tag,
             spills: AtomicU64::new(0),
             faults: AtomicU64::new(0),
         }
     }
 
+    /// The payload table backing this store (shared across a service's
+    /// shards; dedup / fault-cache counters live here).
+    pub fn payloads(&self) -> &Arc<PayloadStore> {
+        &self.payloads
+    }
+
     /// Store `snap`; the returned id is exactly the key it is stored under.
+    /// Content identical to an already-stored payload is shared, not
+    /// copied — the dedup hit is visible via [`PayloadStore::dedup_hits`].
     pub fn insert(&self, snap: SandboxSnapshot) -> u64 {
         let id = self.next_id.fetch_add(self.stride, Ordering::SeqCst);
-        self.resident_bytes.fetch_add(snap.size(), Ordering::Relaxed);
-        self.snaps.lock().unwrap().insert(id, Slot::Resident(snap));
+        let key = ContentKey::of(&snap.bytes);
+        let handle = Handle {
+            key,
+            bytes: snap.bytes.len() as u64,
+            serialize_cost: snap.serialize_cost,
+            restore_cost: snap.restore_cost,
+        };
+        self.payloads.insert(self.tag, key, snap.bytes);
+        self.snaps.lock().unwrap().insert(id, handle);
         id
     }
 
-    /// Fetch by id. A spilled payload is faulted in from disk; the returned
-    /// `restore_cost` then carries the [`SPILL_FAULT_PENALTY`] read charge.
-    /// `None` = never stored, removed, or the spill file is unreadable —
-    /// the caller degrades to replay.
+    /// Fetch by id. A spilled payload is faulted in through the LRU fault
+    /// cache; only an actual disk read charges the [`SPILL_FAULT_PENALTY`]
+    /// on the returned `restore_cost` (and counts a fault). `None` = never
+    /// stored, removed, or the spill file is unreadable — the caller
+    /// degrades to replay.
     pub fn get(&self, id: u64) -> Option<SandboxSnapshot> {
-        let slot = {
-            let snaps = self.snaps.lock().unwrap();
-            match snaps.get(&id) {
-                Some(Slot::Resident(s)) => return Some(s.clone()),
-                Some(Slot::Spilled(s)) => s.clone(),
-                None => return None,
-            }
-        };
-        // Disk read happens outside the store lock.
-        let mut snap = slot.fault()?;
-        snap.restore_cost += SPILL_FAULT_PENALTY;
-        self.faults.fetch_add(1, Ordering::Relaxed);
-        Some(snap)
+        let handle = *self.snaps.lock().unwrap().get(&id)?;
+        let (bytes, source) = self.payloads.fetch(&handle.key)?;
+        let mut restore_cost = handle.restore_cost;
+        if source == FetchSource::Disk {
+            restore_cost += SPILL_FAULT_PENALTY;
+            self.faults.fetch_add(1, Ordering::Relaxed);
+        }
+        Some(SandboxSnapshot {
+            bytes: (*bytes).clone(),
+            serialize_cost: handle.serialize_cost,
+            restore_cost,
+        })
     }
 
     /// Demote `id`'s payload to the spill tier. Returns `true` if the bytes
     /// now live on disk (also when they already did). `false` when the
     /// store has no spill tier, the id is gone, or the write failed.
     /// `restore_cost` to record comes from the caller (the TCG ref), so
-    /// fault penalties never compound across repeated spills.
+    /// fault penalties never compound across repeated spills. Spilling a
+    /// shared payload demotes every handle referencing it, across all
+    /// stores, at once — and writes the bytes at most once.
     pub fn spill(&self, task: &str, id: u64, restore_cost: f64) -> bool {
-        let Some(spill) = &self.spill else { return false };
-        let payload = {
-            let snaps = self.snaps.lock().unwrap();
-            match snaps.get(&id) {
-                Some(Slot::Resident(s)) => s.clone(),
-                Some(Slot::Spilled(_)) => return true,
+        let handle = {
+            match self.snaps.lock().unwrap().get(&id) {
+                Some(h) => *h,
                 None => return false,
             }
         };
-        // File + manifest I/O outside the lock; swap the slot after.
-        let Ok(slot) = spill.write(task, id, &payload, restore_cost) else {
-            return false;
-        };
-        let mut snaps = self.snaps.lock().unwrap();
-        match snaps.get_mut(&id) {
-            Some(s @ Slot::Resident(_)) => {
-                *s = Slot::Spilled(slot);
-                self.resident_bytes.fetch_sub(payload.size(), Ordering::Relaxed);
-                self.spilled_bytes.fetch_add(payload.size(), Ordering::Relaxed);
+        match self.payloads.spill(handle.key, task, id, handle.serialize_cost, restore_cost) {
+            SpillOutcome::Demoted => {
                 self.spills.fetch_add(1, Ordering::Relaxed);
                 true
             }
-            Some(Slot::Spilled(_)) => true,
-            None => {
-                // Removed while we wrote: retract the orphaned payload.
-                spill.drop_payload(id);
-                false
-            }
+            SpillOutcome::AlreadySpilled => true,
+            SpillOutcome::Refused | SpillOutcome::Gone | SpillOutcome::Failed => false,
         }
     }
 
     /// Register a payload that already lives on disk (warm-start reload).
+    /// Slots that share a content key rehydrate to one shared payload.
     pub fn adopt_spilled(&self, id: u64, slot: SpillSlot) {
         let mut snaps = self.snaps.lock().unwrap();
         if snaps.contains_key(&id) {
             return;
         }
-        self.spilled_bytes.fetch_add(slot.bytes, Ordering::Relaxed);
-        snaps.insert(id, Slot::Spilled(slot));
+        let key = slot.key.unwrap_or_else(|| ContentKey::synthetic(id));
+        let handle = Handle {
+            key,
+            bytes: slot.bytes,
+            serialize_cost: slot.serialize_cost,
+            restore_cost: slot.restore_cost,
+        };
+        self.payloads.adopt(self.tag, key, slot);
+        snaps.insert(id, handle);
     }
 
     /// Advance the id allocator past `max_id` (same stride), so ids handed
@@ -220,38 +261,40 @@ impl SnapshotStore {
 
     /// True when `id` is stored with its payload in memory.
     pub fn is_resident(&self, id: u64) -> bool {
-        matches!(self.snaps.lock().unwrap().get(&id), Some(Slot::Resident(_)))
+        let key = match self.snaps.lock().unwrap().get(&id) {
+            Some(h) => h.key,
+            None => return false,
+        };
+        self.payloads.is_resident(&key)
+    }
+
+    /// The content key behind `id`, if stored.
+    pub fn content_key(&self, id: u64) -> Option<ContentKey> {
+        self.snaps.lock().unwrap().get(&id).map(|h| h.key)
+    }
+
+    /// True when `id`'s payload is referenced by more than one handle
+    /// (eviction should know that dropping one referent frees nothing).
+    pub fn payload_shared(&self, id: u64) -> bool {
+        match self.content_key(id) {
+            Some(key) => self.payloads.ref_total(&key) > 1,
+            None => false,
+        }
     }
 
     /// The on-disk location of `id` if it is currently spilled (persist
     /// fast-path: an already-spilled payload need not be re-read/re-written).
     pub fn spilled_slot(&self, id: u64) -> Option<SpillSlot> {
-        match self.snaps.lock().unwrap().get(&id) {
-            Some(Slot::Spilled(s)) => Some(s.clone()),
-            _ => None,
-        }
+        let key = self.content_key(id)?;
+        self.payloads.spilled_slot(&key)
     }
 
+    /// Drop the handle; the payload's bytes (and any disk slot) are freed
+    /// only when the last handle referencing them — in any store — dies.
     pub fn remove(&self, id: u64) {
-        let removed = self.snaps.lock().unwrap().remove(&id);
-        match removed {
-            Some(Slot::Resident(s)) => {
-                self.resident_bytes.fetch_sub(s.size(), Ordering::Relaxed);
-            }
-            Some(Slot::Spilled(s)) => {
-                self.spilled_bytes.fetch_sub(s.bytes, Ordering::Relaxed);
-                match &self.spill {
-                    Some(spill) => spill.drop_payload(id),
-                    // Adopted at warm-start (no manifest handle): deleting
-                    // the payload file suffices — manifest reload discards
-                    // records whose file is gone, so a destroyed snapshot
-                    // can never be resurrected by a later warm-start.
-                    None => {
-                        let _ = std::fs::remove_file(&s.path);
-                    }
-                }
-            }
-            None => {}
+        let handle = self.snaps.lock().unwrap().remove(&id);
+        if let Some(h) = handle {
+            self.payloads.release(self.tag, h.key, id);
         }
     }
 
@@ -263,26 +306,24 @@ impl SnapshotStore {
         self.len() == 0
     }
 
-    /// Bytes stored across both tiers (memory + disk).
+    /// Bytes charged to this store across both tiers (memory + disk).
     pub fn total_bytes(&self) -> u64 {
         self.resident_bytes() + self.spilled_bytes()
     }
 
     pub fn resident_bytes(&self) -> u64 {
-        self.resident_bytes.load(Ordering::Relaxed)
+        self.payloads.resident_bytes_of(self.tag)
     }
 
     pub fn spilled_bytes(&self) -> u64 {
-        self.spilled_bytes.load(Ordering::Relaxed)
+        self.payloads.spilled_bytes_of(self.tag)
     }
 
+    /// Handles whose payload currently lives in the spill tier.
     pub fn spilled_count(&self) -> usize {
-        self.snaps
-            .lock()
-            .unwrap()
-            .values()
-            .filter(|s| matches!(s, Slot::Spilled(_)))
-            .count()
+        let keys: Vec<ContentKey> =
+            self.snaps.lock().unwrap().values().map(|h| h.key).collect();
+        self.payloads.count_spilled(&keys)
     }
 
     pub fn spill_count(&self) -> u64 {
@@ -341,6 +382,11 @@ mod tests {
 
     fn snap(n: usize) -> SandboxSnapshot {
         SandboxSnapshot { bytes: vec![0u8; n], serialize_cost: 0.1, restore_cost: 0.2 }
+    }
+
+    /// A snapshot whose content is distinguishable by `fill`.
+    fn snap_fill(fill: u8, n: usize) -> SandboxSnapshot {
+        SandboxSnapshot { bytes: vec![fill; n], serialize_cost: 0.1, restore_cost: 0.2 }
     }
 
     #[test]
@@ -449,5 +495,98 @@ mod tests {
         let unique: std::collections::HashSet<u64> = all.iter().copied().collect();
         assert_eq!(unique.len(), 200, "every insert got a distinct key");
         assert_eq!(store.len(), 200);
+    }
+
+    // ---- content dedup + fault cache ----
+
+    #[test]
+    fn identical_content_is_stored_once_and_shared_across_stores() {
+        let payloads = Arc::new(PayloadStore::new(None, 0));
+        let a = SnapshotStore::with_payloads(1, 2, Arc::clone(&payloads));
+        let b = SnapshotStore::with_payloads(2, 2, Arc::clone(&payloads));
+
+        let ia = a.insert(snap_fill(7, 100));
+        let ib = b.insert(snap_fill(7, 100));
+        assert_ne!(ia, ib, "handles keep distinct ids");
+        assert_eq!(payloads.payload_count(), 1, "one resident copy");
+        assert_eq!(payloads.dedup_hits(), 1);
+        assert_eq!(payloads.dedup_resident_bytes_saved(), 100);
+        assert!(a.payload_shared(ia) && b.payload_shared(ib));
+        // Charged once — to the first inserter.
+        assert_eq!(a.resident_bytes(), 100);
+        assert_eq!(b.resident_bytes(), 0);
+
+        // Both handles read back the same content independently.
+        assert_eq!(a.get(ia).unwrap().bytes, vec![7u8; 100]);
+        assert_eq!(b.get(ib).unwrap().bytes, vec![7u8; 100]);
+
+        // Removing one referent keeps the bytes; the charge moves over.
+        a.remove(ia);
+        assert!(a.get(ia).is_none());
+        assert_eq!(b.get(ib).unwrap().bytes, vec![7u8; 100]);
+        assert_eq!(a.resident_bytes(), 0);
+        assert_eq!(b.resident_bytes(), 100);
+        b.remove(ib);
+        assert_eq!(payloads.payload_count(), 0);
+        assert_eq!(b.resident_bytes(), 0);
+    }
+
+    #[test]
+    fn second_fault_in_is_served_by_the_cache_without_a_disk_read() {
+        let dir = std::env::temp_dir()
+            .join(format!("tvcache-store-fcache-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let spill = Arc::new(SpillStore::open(&dir).unwrap());
+        let store = SnapshotStore::with_spill(1, 1, spill);
+        let id = store.insert(snap_fill(3, 128));
+        assert!(store.spill("t", id, 0.2));
+
+        let first = store.get(id).unwrap();
+        assert!((first.restore_cost - (0.2 + SPILL_FAULT_PENALTY)).abs() < 1e-12);
+        assert_eq!(store.fault_count(), 1);
+        assert_eq!(store.payloads().fault_cache_misses(), 1);
+
+        // Same spilled payload again: cache hit — no disk read, no fault,
+        // no read penalty.
+        let second = store.get(id).unwrap();
+        assert_eq!(second.bytes, first.bytes);
+        assert!((second.restore_cost - 0.2).abs() < 1e-12);
+        assert_eq!(store.fault_count(), 1, "no second disk fault");
+        assert_eq!(store.payloads().fault_cache_hits(), 1);
+        assert_eq!(store.payloads().fault_cache_misses(), 1);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn spilling_one_shared_handle_demotes_all_and_writes_once() {
+        let dir = std::env::temp_dir()
+            .join(format!("tvcache-store-shared-spill-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let spill = Arc::new(SpillStore::open(&dir).unwrap());
+        let payloads =
+            Arc::new(PayloadStore::new(Some(Arc::clone(&spill)), DEFAULT_FAULT_CACHE_BYTES));
+        let a = SnapshotStore::with_payloads(1, 2, Arc::clone(&payloads));
+        let b = SnapshotStore::with_payloads(2, 2, Arc::clone(&payloads));
+        let ia = a.insert(snap_fill(5, 80));
+        let ib = b.insert(snap_fill(5, 80));
+
+        assert!(a.spill("ta", ia, 0.2));
+        assert_eq!(a.spill_count(), 1);
+        // The shared payload is now on disk for *both* handles.
+        assert!(!a.is_resident(ia) && !b.is_resident(ib));
+        assert_eq!(b.spilled_count(), 1);
+        // Re-spilling via the other handle is a no-op (bytes already there).
+        assert!(b.spill("tb", ib, 0.2));
+        assert_eq!(b.spill_count(), 0, "no second demotion happened");
+        assert_eq!(b.get(ib).unwrap().bytes, vec![5u8; 80]);
+
+        // Removing one handle keeps the shared disk payload alive.
+        let path = a.spilled_slot(ia).unwrap().path;
+        a.remove(ia);
+        assert!(path.exists());
+        assert_eq!(b.get(ib).unwrap().bytes, vec![5u8; 80]);
+        b.remove(ib);
+        assert!(!path.exists(), "last referent retracts the disk payload");
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 }

@@ -11,11 +11,17 @@
 //!
 //! On-disk layout (`<dir>/`):
 //!
-//! * `snap-<id>.bin`    — one file per snapshot, the raw payload bytes.
+//! * `snap-<id>.bin`    — one payload file per snapshot id (legacy,
+//!   pre-content-hash records).
+//! * `snap-k<hex>.bin`  — one payload file per *content key* (64 hex
+//!   chars): deduped snapshots share the file, and a write whose key
+//!   already has a complete file on disk skips the byte write entirely.
 //! * `manifest.jsonl`   — append-only log, one JSON record per line:
 //!   `{"op":"spill","task":…,"id":…,"bytes":…,"serialize_cost":…,
-//!   "restore_cost":…}` when a payload lands on disk, `{"op":"drop",
-//!   "id":…}` when it is deleted.
+//!   "restore_cost":…,"key":…}` when a payload lands on disk (the `key`
+//!   column is absent on legacy lines and reloads fine without it),
+//!   `{"op":"drop","id":…}` when a record is retracted. A shared payload
+//!   file is only deleted when its *last* referencing record drops.
 //! * `tcgs.json`        — written atomically (tmp + rename) by
 //!   `ShardedCacheService::persist_to_dir`: every task's persistent TCG.
 //!
@@ -32,6 +38,7 @@ use std::io::Write;
 use std::path::{Path, PathBuf};
 use std::sync::Mutex;
 
+use super::payload::ContentKey;
 use crate::sandbox::SandboxSnapshot;
 use crate::util::json::{self, Json};
 
@@ -43,6 +50,8 @@ pub const SPILL_FAULT_PENALTY: f64 = 0.02;
 #[derive(Debug, Clone, PartialEq)]
 pub struct SpillSlot {
     pub path: PathBuf,
+    /// Content key of the payload (`None` for legacy keyless records).
+    pub key: Option<ContentKey>,
     pub bytes: u64,
     pub serialize_cost: f64,
     pub restore_cost: f64,
@@ -69,6 +78,8 @@ impl SpillSlot {
 pub struct ManifestRecord {
     pub task: String,
     pub id: u64,
+    /// Content key (`None` on legacy lines written before dedup).
+    pub key: Option<ContentKey>,
     pub bytes: u64,
     pub serialize_cost: f64,
     pub restore_cost: f64,
@@ -77,30 +88,49 @@ pub struct ManifestRecord {
 impl ManifestRecord {
     pub fn slot(&self, dir: &Path) -> SpillSlot {
         SpillSlot {
-            path: payload_path(dir, self.id),
+            path: self.payload_path(dir),
+            key: self.key,
             bytes: self.bytes,
             serialize_cost: self.serialize_cost,
             restore_cost: self.restore_cost,
         }
     }
 
+    /// Where this record's payload bytes live: the content-keyed file for
+    /// keyed records, the per-id legacy file otherwise.
+    pub fn payload_path(&self, dir: &Path) -> PathBuf {
+        match &self.key {
+            Some(k) => payload_path_keyed(dir, k),
+            None => payload_path(dir, self.id),
+        }
+    }
+
     /// The record's manifest line — the one serialization both the append
     /// path and the compaction rewrite emit, so the two can never drift.
     fn to_line(&self) -> String {
-        Json::obj(vec![
+        let mut fields = vec![
             ("op", Json::str("spill")),
             ("task", Json::str(self.task.as_str())),
             ("id", Json::num(self.id as f64)),
             ("bytes", Json::num(self.bytes as f64)),
             ("serialize_cost", Json::num(self.serialize_cost)),
             ("restore_cost", Json::num(self.restore_cost)),
-        ])
-        .to_string()
+        ];
+        if let Some(k) = &self.key {
+            fields.push(("key", Json::str(k.to_hex())));
+        }
+        Json::obj(fields).to_string()
     }
 }
 
 pub fn payload_path(dir: &Path, id: u64) -> PathBuf {
     dir.join(format!("snap-{id}.bin"))
+}
+
+/// Payload file for a content-keyed record: shared by every record whose
+/// snapshot hashes to `key`.
+pub fn payload_path_keyed(dir: &Path, key: &ContentKey) -> PathBuf {
+    dir.join(format!("snap-k{}.bin", key.to_hex()))
 }
 
 fn manifest_path(dir: &Path) -> PathBuf {
@@ -200,23 +230,57 @@ impl SpillStore {
         snap: &SandboxSnapshot,
         restore_cost: f64,
     ) -> std::io::Result<SpillSlot> {
-        let path = payload_path(&self.dir, id);
-        let tmp = self.dir.join(format!("snap-{id}.tmp"));
-        fs::write(&tmp, &snap.bytes)?;
-        fs::rename(&tmp, &path)?;
+        self.write_inner(task, id, None, &snap.bytes, snap.serialize_cost, restore_cost)
+    }
+
+    /// As [`SpillStore::write`], but content-addressed: the payload file is
+    /// named by `key`, and when a complete file for that key is already on
+    /// disk the byte write is skipped — only the (cheap) manifest record
+    /// for `id` is appended. This is what makes spilling K handles of the
+    /// same sandbox state cost one disk payload, not K.
+    pub fn write_keyed(
+        &self,
+        task: &str,
+        id: u64,
+        key: ContentKey,
+        bytes: &[u8],
+        serialize_cost: f64,
+        restore_cost: f64,
+    ) -> std::io::Result<SpillSlot> {
+        self.write_inner(task, id, Some(key), bytes, serialize_cost, restore_cost)
+    }
+
+    fn write_inner(
+        &self,
+        task: &str,
+        id: u64,
+        key: Option<ContentKey>,
+        bytes: &[u8],
+        serialize_cost: f64,
+        restore_cost: f64,
+    ) -> std::io::Result<SpillSlot> {
+        let path = match &key {
+            Some(k) => payload_path_keyed(&self.dir, k),
+            None => payload_path(&self.dir, id),
+        };
+        // Content-keyed files are immutable by construction (same name ⇒
+        // same bytes), so a complete file means the write already happened.
+        let already = key.is_some()
+            && fs::metadata(&path).map(|m| m.len() == bytes.len() as u64).unwrap_or(false);
+        if !already {
+            let tmp = self.dir.join(format!("snap-{id}.tmp"));
+            fs::write(&tmp, bytes)?;
+            fs::rename(&tmp, &path)?;
+        }
         self.append_spill(ManifestRecord {
             task: task.to_string(),
             id,
-            bytes: snap.bytes.len() as u64,
-            serialize_cost: snap.serialize_cost,
+            key,
+            bytes: bytes.len() as u64,
+            serialize_cost,
             restore_cost,
         })?;
-        Ok(SpillSlot {
-            path,
-            bytes: snap.bytes.len() as u64,
-            serialize_cost: snap.serialize_cost,
-            restore_cost,
-        })
+        Ok(SpillSlot { path, key, bytes: bytes.len() as u64, serialize_cost, restore_cost })
     }
 
     /// Append a manifest record for a payload whose file is already in
@@ -232,24 +296,79 @@ impl SpillStore {
         self.append_spill(ManifestRecord {
             task: task.to_string(),
             id,
+            key: slot.key,
             bytes: slot.bytes,
             serialize_cost: slot.serialize_cost,
             restore_cost,
         })
     }
 
-    /// Record that `id`'s payload is gone and best-effort delete the file.
-    pub fn drop_payload(&self, id: u64) {
-        let line =
-            Json::obj(vec![("op", Json::str("drop")), ("id", Json::num(id as f64))]).to_string();
-        {
+    fn drop_line(id: u64) -> String {
+        Json::obj(vec![("op", Json::str("drop")), ("id", Json::num(id as f64))]).to_string()
+    }
+
+    /// Retract `id`'s manifest record *without* touching its payload file —
+    /// for a handle of a still-shared payload: other records keep the
+    /// bytes reachable. A no-op when `id` has no live record.
+    pub fn drop_record(&self, id: u64) {
+        let mut st = self.manifest.lock().unwrap();
+        if !st.live.contains_key(&id) {
+            return;
+        }
+        if Self::append_line(&mut st, &Self::drop_line(id)).is_ok() {
+            st.live.remove(&id);
+            self.maybe_compact(&mut st);
+        }
+    }
+
+    /// Retract `id`'s record (if any) and delete the payload file at
+    /// `path` — unless another live record still references that file.
+    /// The per-`id` [`SpillStore::drop_payload`] cannot cover a handle that
+    /// was never recorded (a dedup no-op spill): the caller knows the real
+    /// file from its slot, so it names the path explicitly.
+    pub fn drop_payload_at(&self, id: u64, path: &Path) {
+        let victim = {
             let mut st = self.manifest.lock().unwrap();
-            if Self::append_line(&mut st, &line).is_ok() {
+            if st.live.contains_key(&id)
+                && Self::append_line(&mut st, &Self::drop_line(id)).is_ok()
+            {
                 st.live.remove(&id);
                 self.maybe_compact(&mut st);
             }
+            !st.live.values().any(|r| r.payload_path(&self.dir) == *path)
+        };
+        if victim {
+            let _ = fs::remove_file(path);
         }
-        let _ = fs::remove_file(payload_path(&self.dir, id));
+    }
+
+    /// Record that `id`'s payload is gone and best-effort delete the file —
+    /// unless another live record still shares the same payload file (a
+    /// deduped spill), in which case only the record is retracted.
+    pub fn drop_payload(&self, id: u64) {
+        let mut victim: Option<PathBuf> = None;
+        {
+            let mut st = self.manifest.lock().unwrap();
+            let path = st
+                .live
+                .get(&id)
+                .map(|r| r.payload_path(&self.dir))
+                .unwrap_or_else(|| payload_path(&self.dir, id));
+            let shared = st
+                .live
+                .iter()
+                .any(|(rid, r)| *rid != id && r.payload_path(&self.dir) == path);
+            if Self::append_line(&mut st, &Self::drop_line(id)).is_ok() {
+                st.live.remove(&id);
+                self.maybe_compact(&mut st);
+            }
+            if !shared {
+                victim = Some(path);
+            }
+        }
+        if let Some(path) = victim {
+            let _ = fs::remove_file(path);
+        }
     }
 
     fn append_spill(&self, rec: ManifestRecord) -> std::io::Result<()> {
@@ -350,11 +469,21 @@ fn parse_manifest(dir: &Path, text: &str) -> HashMap<u64, ManifestRecord> {
                     .and_then(Json::as_str)
                     .unwrap_or("")
                     .to_string();
+                // Legacy lines have no key column; keyed lines with a
+                // malformed key are treated as corrupt and skipped.
+                let key = match v.get("key") {
+                    None => None,
+                    Some(k) => match k.as_str().and_then(ContentKey::from_hex) {
+                        Some(parsed) => Some(parsed),
+                        None => continue,
+                    },
+                };
                 records.insert(
                     id,
                     ManifestRecord {
                         task,
                         id,
+                        key,
                         bytes,
                         serialize_cost: ser,
                         restore_cost: rest,
@@ -371,12 +500,37 @@ fn parse_manifest(dir: &Path, text: &str) -> HashMap<u64, ManifestRecord> {
     }
     // Re-verify against the payload files: a record is only as good as the
     // bytes behind it.
-    records.retain(|id, r| {
-        fs::metadata(payload_path(dir, *id))
+    records.retain(|_, r| {
+        fs::metadata(r.payload_path(dir))
             .map(|m| m.len() == r.bytes)
             .unwrap_or(false)
     });
     records
+}
+
+/// Delete stray spill-dir files left by a crash: `manifest.jsonl.tmp`
+/// (compaction died pre-rename), `snap-*.tmp` (payload write died
+/// pre-rename), and `snap-*.bin` payloads no live record references
+/// (their manifest line was torn or never written — nothing can resurrect
+/// them). `records` must be the dir's replayed manifest ([`load_manifest`]).
+/// Returns how many files were removed. Callers must ensure no other
+/// writer is actively spilling into `dir`.
+pub fn sweep_orphans(dir: &Path, records: &HashMap<u64, ManifestRecord>) -> usize {
+    let keep: std::collections::HashSet<PathBuf> =
+        records.values().map(|r| r.payload_path(dir)).collect();
+    let Ok(rd) = fs::read_dir(dir) else { return 0 };
+    let mut swept = 0;
+    for entry in rd.flatten() {
+        let path = entry.path();
+        let Some(name) = path.file_name().and_then(|n| n.to_str()) else { continue };
+        let stray_payload = name.starts_with("snap-")
+            && (name.ends_with(".bin") || name.ends_with(".tmp"))
+            && !keep.contains(&path);
+        if (stray_payload || name == "manifest.jsonl.tmp") && fs::remove_file(&path).is_ok() {
+            swept += 1;
+        }
+    }
+    swept
 }
 
 #[cfg(test)]
@@ -565,6 +719,112 @@ mod tests {
             }
             assert!(records.len() <= 10);
         }
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    // ---- content-keyed records, dedup, orphan sweep ----
+
+    #[test]
+    fn keyed_writes_share_one_payload_file_until_last_record_drops() {
+        let dir = tmpdir("keyed");
+        let store = SpillStore::open(&dir).unwrap();
+        let payload = vec![6u8; 48];
+        let key = ContentKey::of(&payload);
+        let slot1 = store.write_keyed("a", 1, key, &payload, 0.3, 0.7).unwrap();
+        let slot2 = store.write_keyed("b", 2, key, &payload, 0.3, 0.7).unwrap();
+        assert_eq!(slot1.path, slot2.path, "same content, same file");
+        assert_eq!(slot1.key, Some(key));
+
+        // Two live records, one payload file on disk.
+        let records = load_manifest(&dir);
+        assert_eq!(records.len(), 2);
+        assert_eq!(records[&1].key, Some(key));
+        let payload_files = fs::read_dir(&dir)
+            .unwrap()
+            .flatten()
+            .filter(|e| e.file_name().to_string_lossy().ends_with(".bin"))
+            .count();
+        assert_eq!(payload_files, 1, "dedup must collapse the byte write");
+
+        // Dropping one record keeps the shared file; dropping the last
+        // deletes it.
+        store.drop_payload(1);
+        assert!(slot1.path.exists(), "shared payload must survive");
+        assert!(slot2.fault().is_some());
+        store.drop_payload(2);
+        assert!(!slot1.path.exists(), "last drop retracts the file");
+        assert!(load_manifest(&dir).is_empty());
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn drop_record_retracts_without_touching_the_file() {
+        let dir = tmpdir("drop-record");
+        let store = SpillStore::open(&dir).unwrap();
+        let payload = vec![3u8; 24];
+        let key = ContentKey::of(&payload);
+        let slot = store.write_keyed("t", 1, key, &payload, 0.1, 0.2).unwrap();
+        store.drop_record(1);
+        assert!(load_manifest(&dir).is_empty(), "record retracted");
+        assert!(slot.path.exists(), "payload file untouched");
+        store.drop_record(99); // unknown id: no-op, no stray drop line
+        assert_eq!(store.manifest_lines(), 2);
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn legacy_keyless_lines_reload_alongside_keyed_ones() {
+        let dir = tmpdir("legacy-mixed");
+        let store = SpillStore::open(&dir).unwrap();
+        store.write("t", 1, &snap(1, 16), 0.5).unwrap(); // legacy
+        let payload = vec![2u8; 32];
+        store
+            .write_keyed("t", 2, ContentKey::of(&payload), &payload, 0.3, 0.6)
+            .unwrap();
+        drop(store);
+
+        let records = load_manifest(&dir);
+        assert_eq!(records.len(), 2);
+        assert_eq!(records[&1].key, None);
+        assert_eq!(records[&1].slot(&dir).path, payload_path(&dir, 1));
+        assert!(records[&1].slot(&dir).fault().is_some());
+        assert_eq!(records[&2].key, Some(ContentKey::of(&payload)));
+        assert_eq!(records[&2].slot(&dir).fault().unwrap().bytes, payload);
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn sweep_orphans_removes_strays_and_keeps_live_payloads() {
+        let dir = tmpdir("sweep");
+        let store = SpillStore::open(&dir).unwrap();
+        let payload = vec![5u8; 40];
+        let keyed = store
+            .write_keyed("t", 1, ContentKey::of(&payload), &payload, 0.3, 0.6)
+            .unwrap();
+        let legacy = store.write("t", 2, &snap(2, 16), 0.5).unwrap();
+        drop(store);
+
+        // A crash mid-compaction / mid-spill leaves: a manifest tmp, a
+        // payload tmp, and payload files whose manifest line never landed.
+        fs::write(dir.join("manifest.jsonl.tmp"), b"garbage").unwrap();
+        fs::write(dir.join("snap-9.tmp"), b"torn write").unwrap();
+        fs::write(dir.join("snap-777.bin"), b"unreferenced").unwrap();
+        fs::write(
+            payload_path_keyed(&dir, &ContentKey::of(b"never recorded")),
+            b"unreferenced keyed",
+        )
+        .unwrap();
+
+        let records = load_manifest(&dir);
+        assert_eq!(records.len(), 2);
+        let swept = sweep_orphans(&dir, &records);
+        assert_eq!(swept, 4, "exactly the four stray files go");
+        assert!(!dir.join("manifest.jsonl.tmp").exists());
+        assert!(!dir.join("snap-9.tmp").exists());
+        assert!(!dir.join("snap-777.bin").exists());
+        assert!(keyed.fault().is_some(), "live keyed payload survives the sweep");
+        assert!(legacy.fault().is_some(), "live legacy payload survives the sweep");
+        assert!(manifest_path(&dir).exists());
         fs::remove_dir_all(&dir).unwrap();
     }
 }

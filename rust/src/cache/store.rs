@@ -443,6 +443,27 @@ impl TaskCache {
             .collect()
     }
 
+    /// Snapshot refs of refcount-pinned nodes (read lock only). The shard
+    /// eviction worker collects these across *every* shard before picking
+    /// victims: with content-addressed payloads, spilling an unpinned
+    /// handle would demote the shared payload out from under a pinned
+    /// handle in another task, so any candidate whose content key is
+    /// pinned anywhere must be skipped.
+    pub fn pinned_snapshot_refs(&self) -> Vec<SnapshotRef> {
+        let tcg = self.tcg.read().unwrap();
+        tcg.live_nodes()
+            .into_iter()
+            .filter_map(|id| {
+                let n = tcg.node(id)?;
+                if n.is_pinned() {
+                    n.snapshot
+                } else {
+                    None
+                }
+            })
+            .collect()
+    }
+
     /// Snapshot-bearing, *unpinned* nodes with their keep-scores — the
     /// shard eviction/spill worker's candidate list (read lock only).
     /// Pinned nodes are excluded here, so they are never spilled either.

@@ -1,7 +1,7 @@
 //! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt`) and
 //! executes them on the CPU PJRT client.
 //!
-//! The PJRT-backed implementation lives in [`pjrt`] behind the `pjrt` cargo
+//! The PJRT-backed implementation lives in `pjrt` behind the `pjrt` cargo
 //! feature: it is the only code in the crate that needs the external `xla`
 //! crate, which the offline toolchain does not ship. Without the feature a
 //! stub `AgentRuntime` with the identical API compiles in; every call

@@ -346,6 +346,7 @@ impl CacheService {
                 ("binary", Json::Bool(caps.binary)),
                 ("cursors", Json::Bool(caps.cursors)),
                 ("turn_batch", Json::Bool(caps.turn_batch)),
+                ("payload_dedup", Json::Bool(caps.payload_dedup)),
             ])
             .to_string(),
         )

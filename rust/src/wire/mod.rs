@@ -273,11 +273,15 @@ pub fn dec_hello(body: &[u8]) -> Option<u64> {
 }
 
 /// `/capabilities` response: `proto, flags(u8: bit0 binary, bit1 cursors,
-/// bit2 turn_batch)`.
+/// bit2 turn_batch, bit3 payload_dedup)`. New capabilities claim further
+/// bits of the *same* flags byte, so the PR 4 frame layout is unchanged —
+/// old clients mask the bits they know, old servers leave bit3 clear.
 pub fn enc_caps_resp(buf: &mut Vec<u8>, proto: u64, caps: &Capabilities) {
     put_varint(buf, proto);
-    let flags =
-        (caps.binary as u8) | ((caps.cursors as u8) << 1) | ((caps.turn_batch as u8) << 2);
+    let flags = (caps.binary as u8)
+        | ((caps.cursors as u8) << 1)
+        | ((caps.turn_batch as u8) << 2)
+        | ((caps.payload_dedup as u8) << 3);
     buf.push(flags);
 }
 
@@ -289,6 +293,7 @@ pub fn dec_caps_resp(body: &[u8]) -> Option<(u64, Capabilities)> {
         binary: flags & 1 != 0,
         cursors: flags & 2 != 0,
         turn_batch: flags & 4 != 0,
+        payload_dedup: flags & 8 != 0,
     };
     r.done().then_some((proto, caps))
 }
@@ -727,6 +732,33 @@ mod tests {
             enc_caps_resp(&mut buf, Capabilities::PROTO_V2, &caps);
             assert_eq!(dec_caps_resp(&buf), Some((Capabilities::PROTO_V2, caps)));
         }
+    }
+
+    #[test]
+    fn extended_capability_flags_roundtrip_exhaustively() {
+        // The payload_dedup bit extended the flags byte in place (bit3):
+        // every combination of the four known bits must survive the wire
+        // unchanged, and the strict decoder must still reject trailers.
+        for flags in 0u8..16 {
+            let caps = Capabilities {
+                binary: flags & 1 != 0,
+                cursors: flags & 2 != 0,
+                turn_batch: flags & 4 != 0,
+                payload_dedup: flags & 8 != 0,
+            };
+            let mut buf = Vec::new();
+            enc_caps_resp(&mut buf, Capabilities::PROTO_V2, &caps);
+            assert_eq!(dec_caps_resp(&buf), Some((Capabilities::PROTO_V2, caps)));
+            buf.push(0xAB);
+            assert_eq!(dec_caps_resp(&buf), None, "trailing byte at flags {flags}");
+        }
+        // A future server may claim bits this client does not know: the
+        // unknown high bits are masked off, never a parse failure.
+        assert_eq!(
+            dec_caps_resp(&[2, 0xFF]),
+            Some((2, Capabilities::V2)),
+            "unknown capability bits must be ignored"
+        );
     }
 
     #[test]

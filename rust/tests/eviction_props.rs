@@ -472,6 +472,161 @@ fn stress_cursors_under_background_eviction_and_removal() {
     }
 }
 
+/// Shared-payload refcounting must never violate pin semantics: a pinned
+/// snapshot's *payload* stays resident even when an unpinned snapshot in
+/// another task shares the same content key — spilling the unpinned handle
+/// would demote the shared bytes out from under the pinned holder.
+#[test]
+fn prop_shared_payload_respects_pins_across_tasks() {
+    for trial in 0..12u64 {
+        let dir = tmpdir(&format!("shared-pin-{trial}"));
+        let cfg = ServiceConfig {
+            shards: 2,
+            // Far below a single payload: maximum spill pressure, so only
+            // the pin guard can keep anything resident.
+            shard_byte_budget: Some(10),
+            spill_dir: Some(dir.clone()),
+            background: false,
+            ..Default::default()
+        };
+        let svc = ShardedCacheService::with_config(cfg, Arc::new(TaskCache::with_defaults))
+            .unwrap();
+        let mut rng = Rng::new(0x5EED ^ trial.wrapping_mul(0x9E37_79B9));
+        // A handful of distinct contents, each stored under several tasks —
+        // so pinned and unpinned handles of one content key coexist across
+        // task (and shard) boundaries.
+        let n_contents = 2 + rng.below(3);
+        let mut pins: Vec<(String, usize, u64)> = Vec::new();
+        for t in 0..6u64 {
+            let task = format!("task-{t}");
+            let content = rng.below(n_contents) as u8;
+            let traj: Vec<(ToolCall, ToolResult)> = (0..2)
+                .map(|d| (call(format!("s{content}-{d}")), ToolResult::new("r", 2.0)))
+                .collect();
+            let node = svc.insert(&task, &traj);
+            let snap = SandboxSnapshot {
+                bytes: vec![content; 100],
+                serialize_cost: 0.1,
+                restore_cost: 0.2,
+            };
+            assert!(svc.store_snapshot(&task, node, snap) > 0);
+            if rng.chance(0.35) {
+                // Pin through a real resume offer, like a rollout would.
+                let mut q: Vec<ToolCall> = traj.iter().map(|(c, _)| c.clone()).collect();
+                q.push(call("divergent".to_string()));
+                if let Lookup::Miss(m) = svc.lookup(&task, &q) {
+                    if let Some((rnode, sref, _)) = m.resume {
+                        pins.push((task.clone(), rnode, sref.id));
+                    }
+                }
+            }
+        }
+        svc.drain_over_budget();
+        for (task, _, sid) in &pins {
+            assert!(
+                svc.snapshot_is_resident(task, *sid),
+                "trial {trial}: pinned snapshot {sid} of {task} left the \
+                 resident tier (its shared payload was demoted)"
+            );
+        }
+        // Released, the same payloads are fair game: the drain finishes
+        // the job and the budget finally holds.
+        for (task, rnode, _) in &pins {
+            svc.release(task, *rnode);
+        }
+        svc.drain_over_budget();
+        assert_eq!(
+            svc.resident_bytes(),
+            0,
+            "trial {trial}: released payloads must all spill under a 10-byte budget"
+        );
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}
+
+/// 8 threads of insert / evict / fault churn over a *shared* content pool
+/// (6 distinct payloads across 8 tasks, so nearly every insert dedups)
+/// against background spill workers and a deliberately tiny fault cache:
+/// pinned fetches must always succeed wherever the payload currently
+/// lives, and the TCGs, the handle stores, and the payload tier must agree
+/// when the dust settles.
+#[test]
+fn stress_shared_payload_insert_evict_fault_churn() {
+    let dir = tmpdir("dedup-churn");
+    let cfg = ServiceConfig {
+        shards: 4,
+        shard_byte_budget: Some(300),
+        spill_dir: Some(dir.clone()),
+        background: true,
+        fault_cache_bytes: 256, // a couple of payloads: forces evictions
+        ..Default::default()
+    };
+    let svc = Arc::new(
+        ShardedCacheService::with_config(cfg, Arc::new(TaskCache::with_defaults)).unwrap(),
+    );
+    let handles: Vec<_> = (0..8)
+        .map(|t| {
+            let svc = Arc::clone(&svc);
+            std::thread::spawn(move || {
+                for i in 0..250usize {
+                    let task = format!("task-{}", (t + i) % 8);
+                    let content = ((t * 31 + i) % 6) as u8;
+                    let traj: Vec<(ToolCall, ToolResult)> = (0..1 + i % 3)
+                        .map(|d| {
+                            (call(format!("s{content}-{d}")), ToolResult::new("r", 2.0))
+                        })
+                        .collect();
+                    let node = svc.insert(&task, &traj);
+                    let snap = SandboxSnapshot {
+                        bytes: vec![content; 100],
+                        serialize_cost: 0.1,
+                        restore_cost: 0.2,
+                    };
+                    svc.store_snapshot(&task, node, snap);
+                    // Fault path: a divergent lookup offers a (possibly
+                    // spilled) snapshot — while pinned it must fetch,
+                    // whether the bytes come from memory, the fault cache,
+                    // or disk.
+                    let mut q: Vec<ToolCall> =
+                        traj.iter().map(|(c, _)| c.clone()).collect();
+                    q.push(call(format!("d-{t}-{i}")));
+                    if let Lookup::Miss(m) = svc.lookup(&task, &q) {
+                        if let Some((rnode, sref, _)) = m.resume {
+                            assert!(
+                                svc.fetch_snapshot(&task, sref.id).is_some(),
+                                "pinned snapshot {} unfetchable under churn",
+                                sref.id
+                            );
+                            svc.release(&task, rnode);
+                        }
+                    }
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().expect("churn thread panicked");
+    }
+    svc.quiesce();
+    let stats = svc.service_stats();
+    assert!(stats.dedup_hits > 0, "a shared content pool must dedup");
+    let mut tcg_snapshots = 0usize;
+    for task in svc.task_ids() {
+        assert_eq!(svc.task(&task).pinned_node_count(), 0, "{task} leaked a pin");
+        for (_, sref) in svc.task(&task).snapshotted_nodes() {
+            tcg_snapshots += 1;
+            assert!(
+                svc.fetch_snapshot(&task, sref.id).is_some(),
+                "TCG references snapshot {} the store no longer has",
+                sref.id
+            );
+        }
+    }
+    assert_eq!(svc.snapshot_count(), tcg_snapshots, "store/TCG disagreement");
+    drop(svc);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
 /// 8 threads × mixed ops against a *destroy-mode* (no spill dir) background
 /// eviction service with a tiny byte budget: a resume offer's pin must keep
 /// its snapshot fetchable until released, no matter how hard the worker

@@ -388,6 +388,41 @@ fn backend_parity_warm_start_and_spill_stats() {
     let _ = std::fs::remove_dir_all(&dir_b);
 }
 
+/// The content-addressed payload tier is visible end-to-end: identical
+/// snapshots stored under different tasks collapse to one stored copy, and
+/// `dedup_hits` surfaces through `service_stats` on the in-process service
+/// and over HTTP alike.
+#[test]
+fn dedup_hits_visible_on_both_backends() {
+    fn store_twins(b: &dyn CacheBackend) -> BackendStats {
+        for t in ["twin-a", "twin-b", "twin-c"] {
+            let node = b.insert(t, &[(bash("make"), ToolResult::new("ok", 2.0))]);
+            let snap = SandboxSnapshot {
+                bytes: vec![0xCD; 512],
+                serialize_cost: 0.1,
+                restore_cost: 0.2,
+            };
+            assert!(b.store_snapshot(t, node, snap) > 0);
+        }
+        b.service_stats()
+    }
+
+    let svc = ShardedCacheService::new(4);
+    let stats_inproc = store_twins(&svc);
+
+    let (server, _svc2) = tvcache::server::serve_with("127.0.0.1:0", 2, 4).unwrap();
+    let remote = RemoteBinding::connect(server.addr());
+    let stats_http = store_twins(&remote);
+
+    for stats in [&stats_inproc, &stats_http] {
+        assert_eq!(stats.snapshots, 3);
+        assert_eq!(stats.dedup_hits, 2, "identical payloads must dedup");
+        assert_eq!(stats.dedup_resident_bytes_saved, 2 * 512);
+        assert_eq!(stats.snapshot_bytes, 512, "shared payload charged once");
+    }
+    assert_eq!(stats_inproc, stats_http, "payload-tier stats diverged");
+}
+
 /// A `CacheBackend` decorator that evicts the offered resume node right
 /// after every lookup returns — the narrowest possible reproduction of the
 /// resume-offer eviction race the server comment warns about (offers over
