@@ -66,7 +66,7 @@ fn store_states(svc: &ShardedCacheService, task: &str, size: usize) -> Vec<u64> 
         .map(|s| {
             let traj =
                 vec![(call(format!("derive state-{s}")), ToolResult::new("ok", 1.0))];
-            let node = svc.insert(task, &traj);
+            let node = svc.insert(task, &traj).expect("in-process insert cannot fail");
             let id = svc.store_snapshot(task, node, snap(s, size));
             assert!(id > 0, "store of state {s} for {task} rejected");
             id
@@ -146,7 +146,7 @@ fn main() {
     for t in 0..3 {
         let task = format!("twin-{t}");
         let traj = vec![(call("make".into()), ToolResult::new("ok", 1.0))];
-        let node = remote.insert(&task, &traj);
+        let node = remote.insert(&task, &traj).expect("insert over live server");
         assert!(remote.store_snapshot(&task, node, snap(0, size)) > 0);
     }
     let http_stats = remote.service_stats();

@@ -58,6 +58,20 @@ pub struct BackendStats {
     pub fault_cache_misses: u64,
     /// Fault-cache entries evicted to stay under its byte budget.
     pub fault_cache_evictions: u64,
+    /// Remote transport retries (client-side; 0 for in-process backends).
+    pub remote_retries: u64,
+    /// Circuit-breaker trips: closed/half-open → open transitions.
+    pub breaker_opens: u64,
+    /// Circuit-breaker recovery probes: open → half-open transitions.
+    pub breaker_half_opens: u64,
+    /// Circuit-breaker recoveries: half-open/open → closed transitions.
+    pub breaker_closes: u64,
+    /// The spill tier hit a disk I/O error and demoted itself to
+    /// resident-only mode (spilling disabled for the process lifetime).
+    pub spill_degraded: bool,
+    /// Faults injected by the deterministic fault harness (0 outside
+    /// fault-injection runs).
+    pub injected_faults: u64,
 }
 
 impl BackendStats {
@@ -85,6 +99,14 @@ impl BackendStats {
             ("fault_cache_hits", Json::num(self.fault_cache_hits as f64)),
             ("fault_cache_misses", Json::num(self.fault_cache_misses as f64)),
             ("fault_cache_evictions", Json::num(self.fault_cache_evictions as f64)),
+            // Degradation counters (PR 7) — appended last, same
+            // position-insensitive compatibility contract as above.
+            ("remote_retries", Json::num(self.remote_retries as f64)),
+            ("breaker_opens", Json::num(self.breaker_opens as f64)),
+            ("breaker_half_opens", Json::num(self.breaker_half_opens as f64)),
+            ("breaker_closes", Json::num(self.breaker_closes as f64)),
+            ("spill_degraded", Json::Bool(self.spill_degraded)),
+            ("injected_faults", Json::num(self.injected_faults as f64)),
         ])
     }
 
@@ -112,6 +134,16 @@ impl BackendStats {
             fault_cache_hits: g("fault_cache_hits"),
             fault_cache_misses: g("fault_cache_misses"),
             fault_cache_evictions: g("fault_cache_evictions"),
+            // Absent on pre-degradation-layer servers.
+            remote_retries: g("remote_retries"),
+            breaker_opens: g("breaker_opens"),
+            breaker_half_opens: g("breaker_half_opens"),
+            breaker_closes: g("breaker_closes"),
+            spill_degraded: v
+                .get("spill_degraded")
+                .and_then(Json::as_bool)
+                .unwrap_or(false),
+            injected_faults: g("injected_faults"),
         })
     }
 }
@@ -211,8 +243,11 @@ pub struct TurnReply {
     pub probes: Vec<Option<ToolResult>>,
     /// Outcome of a [`TurnOp::Step`], if the batch carried one.
     pub step: Option<CursorStep>,
-    /// Node id of a [`TurnOp::Record`], if the batch carried one (0 =
-    /// failed; fall back to a full insert).
+    /// Node id of a successful [`TurnOp::Record`]. `None` means the batch
+    /// carried no record op *or* the record failed — the caller knows
+    /// which op it sent, so `None` after sending a record means "fall
+    /// back to a full insert". (`Some(0)` from a legacy server is also a
+    /// refused record and takes the same fallback.)
     pub recorded: Option<NodeId>,
 }
 
@@ -226,10 +261,7 @@ impl TurnReply {
                 TurnOp::Step(_) => Some(CursorStep::Invalid),
                 _ => None,
             },
-            recorded: match batch.op {
-                TurnOp::Record(..) => Some(0),
-                _ => None,
-            },
+            recorded: None,
         }
     }
 }
@@ -255,8 +287,13 @@ pub trait CacheBackend: Send + Sync {
     fn lookup(&self, task: &str, q: &[ToolCall]) -> Lookup;
 
     /// Upsert an executed trajectory (`/put`); returns the id of the final
-    /// state-mutating node on the path.
-    fn insert(&self, task: &str, traj: &[(ToolCall, ToolResult)]) -> NodeId;
+    /// state-mutating node on the path. `None` means the backend was
+    /// unreachable (remote transport failure after retries) — *not* an
+    /// empty path: a trajectory with no state-mutating call reports
+    /// `Some(0)` (the ROOT id). Callers must never pin, release, or
+    /// snapshot-attach a failed insert, which is exactly why the failure
+    /// sentinel is a distinct variant instead of the old `0`.
+    fn insert(&self, task: &str, traj: &[(ToolCall, ToolResult)]) -> Option<NodeId>;
 
     /// Decrement `node`'s sandbox refcount (client done forking).
     fn release(&self, task: &str, node: NodeId);
@@ -292,6 +329,15 @@ pub trait CacheBackend: Send + Sync {
     /// (payloads stay on disk until a resume faults them in) — so epoch 0
     /// of a new run starts warm. Returns `true` on success.
     fn warm_start(&self, dir: &str) -> bool;
+
+    /// Is the backend currently degraded — e.g. the remote binding's
+    /// circuit breaker is open because the cache service stopped
+    /// answering? While this reports `true`, executors bypass the cache
+    /// entirely (execute tools directly, no lookups or records); the
+    /// implementation owns probing for recovery. Default: never degraded.
+    fn degraded(&self) -> bool {
+        false
+    }
 }
 
 /// The session extension of [`CacheBackend`]: rollout-scoped state the
@@ -344,16 +390,19 @@ pub trait SessionBackend: CacheBackend {
     /// Record the single executed delta at the cursor's position and
     /// advance it — the incremental counterpart of
     /// [`CacheBackend::insert`]. Returns the final state-mutating node id
-    /// (the new cursor position), or 0 when the cursor is invalid / the
-    /// transport failed (fall back to a full insert + seek).
+    /// (the new cursor position); `None` when the cursor is invalid, the
+    /// backend does not support cursors, or the transport failed — the
+    /// caller falls back to a full insert + seek. As with `insert`,
+    /// `Some(0)` is a *successful* record whose path carries no
+    /// state-mutating call, never a failure sentinel.
     fn cursor_record(
         &self,
         _task: &str,
         _cursor: u64,
         _call: &ToolCall,
         _result: &ToolResult,
-    ) -> NodeId {
-        0
+    ) -> Option<NodeId> {
+        None
     }
 
     /// Re-seat a cursor on `node` with `steps` calls consumed — used after
@@ -390,7 +439,7 @@ pub trait SessionBackend: CacheBackend {
             TurnOp::None => (None, None),
             TurnOp::Step(call) => (Some(self.cursor_step(task, cursor, call)), None),
             TurnOp::Record(call, result) => {
-                (None, Some(self.cursor_record(task, cursor, call, result)))
+                (None, self.cursor_record(task, cursor, call, result))
             }
         };
         TurnReply { cursor, probes: vec![None; batch.probes.len()], step, recorded }

@@ -40,6 +40,7 @@ use super::spill::{self, SpillStore};
 use super::store::{CacheStats, TaskCache};
 use super::tcg::{NodeId, SnapshotRef};
 use crate::sandbox::SandboxSnapshot;
+use crate::util::fault;
 use crate::util::json::{self, Json};
 
 /// Snapshot-lifecycle configuration for a sharded service.
@@ -73,6 +74,12 @@ pub struct ServiceConfig {
     /// abandoned sessions are reclaimed on a steadily busy shard long
     /// before its table ever hits the cap. 0 disables the op-count tick.
     pub session_sweep_every_ops: u64,
+    /// Period of the background idle-session sweep timer. On budgeted
+    /// `background: true` services this is the idle tick of each shard's
+    /// eviction worker; on unbudgeted ones a dedicated sweeper thread
+    /// ticks at this period, so idle sessions are reclaimed even with no
+    /// eviction workers and no op traffic.
+    pub session_sweep_tick: std::time::Duration,
     /// Byte budget of the LRU fault cache layered over spill fault-ins
     /// (shared across shards; a hot spilled payload is read from disk once
     /// and served from memory thereafter). 0 disables the cache. Only
@@ -83,9 +90,9 @@ pub struct ServiceConfig {
 /// Default [`ServiceConfig::session_idle_ttl`].
 pub const SESSION_IDLE_TTL: std::time::Duration = std::time::Duration::from_secs(900);
 
-/// How often an idle background worker wakes to sweep its shard's session
-/// table (the timer tick of the periodic sweep; workers exist only on
-/// budgeted `background: true` services — op-count ticks cover the rest).
+/// Default [`ServiceConfig::session_sweep_tick`]: how often the periodic
+/// idle-session sweep wakes (on an eviction worker or the dedicated
+/// sweeper thread, whichever the config spawns).
 const SESSION_SWEEP_TICK: std::time::Duration = std::time::Duration::from_secs(60);
 
 impl Default for ServiceConfig {
@@ -99,6 +106,7 @@ impl Default for ServiceConfig {
             max_sessions_per_shard: 8192,
             session_idle_ttl: SESSION_IDLE_TTL,
             session_sweep_every_ops: 4096,
+            session_sweep_tick: SESSION_SWEEP_TICK,
             fault_cache_bytes: DEFAULT_FAULT_CACHE_BYTES,
         }
     }
@@ -215,6 +223,11 @@ pub struct ShardedCacheService {
     shards: Vec<Arc<ShardSlot>>,
     cfg: ServiceConfig,
     workers: Vec<std::thread::JoinHandle<()>>,
+    /// Dedicated idle-session sweeper, spawned when `background` is set
+    /// but no byte budget exists (so no eviction workers run their timer
+    /// tick). Keeps the idle sweep independent of eviction.
+    sweeper: Option<std::thread::JoinHandle<()>>,
+    sweep_signal: Arc<WorkerSignal>,
     /// The live spill store (shared with every shard's snapshot store) —
     /// kept so `persist_to_dir` into the live spill directory reuses the
     /// *same* writer: two stores on one manifest would let the primary's
@@ -278,12 +291,23 @@ impl ShardedCacheService {
             shards,
             cfg,
             workers: Vec::new(),
+            sweeper: None,
+            sweep_signal: Arc::new(WorkerSignal::new()),
             spill,
             payloads,
             next_cursor: AtomicU64::new(1),
         };
-        if svc.cfg.background && svc.cfg.bounded() {
-            svc.spawn_workers();
+        if svc.cfg.background {
+            if svc.cfg.bounded() {
+                svc.spawn_workers();
+            } else {
+                // No byte budgets means no eviction workers, but the
+                // idle-session sweep must still tick: without it an
+                // unbudgeted service reclaims abandoned sessions only on
+                // op-count thresholds, so on a quiet shard they linger
+                // (and keep their resume pins) forever.
+                svc.spawn_sweeper();
+            }
         }
         Ok(svc)
     }
@@ -293,6 +317,7 @@ impl ShardedCacheService {
             let slot = Arc::clone(slot);
             let all: Vec<Arc<ShardSlot>> = self.shards.clone();
             let cfg = self.cfg.clone();
+            let spill = self.spill.clone();
             let handle = std::thread::Builder::new()
                 .name(format!("tvcache-evict-{i}"))
                 .spawn(move || loop {
@@ -307,11 +332,14 @@ impl ShardedCacheService {
                             let (next, timeout) = slot
                                 .signal
                                 .cv
-                                .wait_timeout(st, SESSION_SWEEP_TICK)
+                                .wait_timeout(st, cfg.session_sweep_tick)
                                 .unwrap();
                             st = next;
                             if timeout.timed_out() && !st.dirty && !st.shutdown {
                                 drop(st);
+                                if let Some(d) = fault::worker_stall() {
+                                    std::thread::sleep(d);
+                                }
                                 slot.sweep_idle_sessions(cfg.session_idle_ttl);
                                 st = slot.signal.state.lock().unwrap();
                             }
@@ -322,7 +350,10 @@ impl ShardedCacheService {
                         st.dirty = false;
                         st.busy = true;
                     }
-                    drain_slot(&slot, &all, &cfg);
+                    if let Some(d) = fault::worker_stall() {
+                        std::thread::sleep(d);
+                    }
+                    drain_slot(&slot, &all, &cfg, spill.as_deref());
                     let mut st = slot.signal.state.lock().unwrap();
                     st.busy = false;
                     slot.signal.cv.notify_all();
@@ -332,8 +363,45 @@ impl ShardedCacheService {
         }
     }
 
+    /// Spawn the dedicated idle-session sweeper: a single timer thread
+    /// that walks every shard at `session_sweep_tick`. Only used when no
+    /// eviction workers exist (they run the same sweep on their idle
+    /// tick); an injected worker stall delays a tick but never skips it.
+    fn spawn_sweeper(&mut self) {
+        let shards: Vec<Arc<ShardSlot>> = self.shards.clone();
+        let signal = Arc::clone(&self.sweep_signal);
+        let ttl = self.cfg.session_idle_ttl;
+        let tick = self.cfg.session_sweep_tick;
+        let handle = std::thread::Builder::new()
+            .name("tvcache-sweep".into())
+            .spawn(move || loop {
+                {
+                    let st = signal.state.lock().unwrap();
+                    let (st, _) = signal.cv.wait_timeout(st, tick).unwrap();
+                    if st.shutdown {
+                        break;
+                    }
+                }
+                if let Some(d) = fault::worker_stall() {
+                    std::thread::sleep(d);
+                }
+                for slot in &shards {
+                    slot.sweep_idle_sessions(ttl);
+                }
+            })
+            .expect("spawn session sweeper");
+        self.sweeper = Some(handle);
+    }
+
     pub fn shard_count(&self) -> usize {
         self.shards.len()
+    }
+
+    /// Whether the spill tier has tripped into resident-only mode (a disk
+    /// write fault disables further spilling; resident snapshots and
+    /// destroy-eviction keep working). `false` when no spill dir is set.
+    pub fn spill_degraded(&self) -> bool {
+        self.spill.as_ref().is_some_and(|s| s.degraded())
     }
 
     /// The shared content-addressed payload tier (white-box access for
@@ -411,7 +479,7 @@ impl ShardedCacheService {
     /// (deterministic; property tests and `background: false` configs).
     pub fn drain_over_budget(&self) {
         for slot in &self.shards {
-            drain_slot(slot, &self.shards, &self.cfg);
+            drain_slot(slot, &self.shards, &self.cfg, self.spill.as_deref());
         }
     }
 
@@ -748,7 +816,11 @@ impl Drop for ShardedCacheService {
         for slot in &self.shards {
             slot.signal.shutdown();
         }
+        self.sweep_signal.shutdown();
         for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+        if let Some(h) = self.sweeper.take() {
             let _ = h.join();
         }
     }
@@ -767,9 +839,19 @@ impl Drop for ShardedCacheService {
 /// [`EvictionPolicy::keep_score`](super::eviction::EvictionPolicy)).
 const MIB: f64 = 1048576.0;
 
-fn drain_slot(slot: &ShardSlot, all: &[Arc<ShardSlot>], cfg: &ServiceConfig) {
+fn drain_slot(
+    slot: &ShardSlot,
+    all: &[Arc<ShardSlot>],
+    cfg: &ServiceConfig,
+    spill: Option<&SpillStore>,
+) {
     let mut skip: HashSet<u64> = HashSet::new();
     loop {
+        // A degraded spill store (a write fault demoted it to
+        // resident-only mode) falls back to destroy-eviction: budgets
+        // still hold, at recreation cost instead of fault-in cost. The
+        // flag is re-read every iteration — it can flip mid-drain.
+        let spill_enabled = spill.is_some_and(|s| !s.degraded());
         let over_shard = cfg
             .shard_byte_budget
             .is_some_and(|b| slot.snapshots.resident_bytes() > b);
@@ -785,7 +867,7 @@ fn drain_slot(slot: &ShardSlot, all: &[Arc<ShardSlot>], cfg: &ServiceConfig) {
         // must be skipped, or the pinned snapshot's bytes would leave
         // memory out from under its holder. Recollected every iteration,
         // like the candidate scores: pins move while we drain.
-        let pinned_keys: HashSet<ContentKey> = if cfg.spill_dir.is_some() {
+        let pinned_keys: HashSet<ContentKey> = if spill_enabled {
             let mut keys = HashSet::new();
             for s in all {
                 for tid in s.tasks.task_ids() {
@@ -813,7 +895,7 @@ fn drain_slot(slot: &ShardSlot, all: &[Arc<ShardSlot>], cfg: &ServiceConfig) {
                 if skip.contains(&sref.id) || !slot.snapshots.is_resident(sref.id) {
                     continue;
                 }
-                if cfg.spill_dir.is_some()
+                if spill_enabled
                     && slot
                         .snapshots
                         .content_key(sref.id)
@@ -849,7 +931,7 @@ fn drain_slot(slot: &ShardSlot, all: &[Arc<ShardSlot>], cfg: &ServiceConfig) {
         let Some((_, tc, tid, node, sref)) = best else {
             break; // everything pinned / spilled / skipped: cannot enforce
         };
-        if cfg.spill_dir.is_some() {
+        if spill_enabled {
             // Demote to disk: the TCG ref stays, resumes fault back in.
             if !slot.snapshots.spill(&tid, sref.id, sref.restore_cost) {
                 skip.insert(sref.id);
@@ -868,8 +950,8 @@ impl CacheBackend for ShardedCacheService {
         self.task(task).lookup(q)
     }
 
-    fn insert(&self, task: &str, traj: &[(ToolCall, ToolResult)]) -> NodeId {
-        self.task(task).record_trajectory(traj)
+    fn insert(&self, task: &str, traj: &[(ToolCall, ToolResult)]) -> Option<NodeId> {
+        Some(self.task(task).record_trajectory(traj))
     }
 
     fn release(&self, task: &str, node: NodeId) {
@@ -954,6 +1036,11 @@ impl CacheBackend for ShardedCacheService {
         agg.fault_cache_hits = self.payloads.fault_cache_hits();
         agg.fault_cache_misses = self.payloads.fault_cache_misses();
         agg.fault_cache_evictions = self.payloads.fault_cache_evictions();
+        // Degradation health: whether the spill tier has demoted itself to
+        // resident-only mode, and how many faults the (test/chaos-only)
+        // injector has fired process-wide.
+        agg.spill_degraded = self.spill_degraded();
+        agg.injected_faults = fault::injected_total();
         agg
     }
 
@@ -1013,16 +1100,17 @@ impl SessionBackend for ShardedCacheService {
         cursor: u64,
         call: &ToolCall,
         result: &ToolResult,
-    ) -> NodeId {
+    ) -> Option<NodeId> {
         let slot = self.slot(task);
         self.session_op_tick(slot);
         let snapshot = {
             let sessions = slot.sessions.lock().unwrap();
             sessions.get(&cursor).map(|e| (Arc::clone(&e.cache), e.node))
         };
-        let Some((cache, node)) = snapshot else {
-            return 0;
-        };
+        // Unknown cursor or a record conflict is `None` — a *failed*
+        // record, distinct from `Some(0)` (a successful no-op record at
+        // ROOT): callers must never pin or snapshot-attach a failure.
+        let (cache, node) = snapshot?;
         match cache.cursor_record_at(node, call, result) {
             Some((new_node, gen)) => {
                 let mut sessions = slot.sessions.lock().unwrap();
@@ -1031,9 +1119,9 @@ impl SessionBackend for ShardedCacheService {
                     e.gen = gen;
                     e.last_used = std::time::Instant::now();
                 }
-                new_node
+                Some(new_node)
             }
-            None => 0,
+            None => None,
         }
     }
 
@@ -1117,7 +1205,7 @@ impl SessionBackend for ShardedCacheService {
                 (Some(self.step_session(task, cursor, call, true)), None)
             }
             TurnOp::Record(call, result) => {
-                (None, Some(self.cursor_record(task, cursor, call, result)))
+                (None, self.cursor_record(task, cursor, call, result))
             }
         };
         // Probes run at the position *after* the op, so they predict the
@@ -1184,7 +1272,7 @@ mod tests {
         let mut ids = std::collections::HashSet::new();
         for i in 0..32 {
             let task = format!("task-{i}");
-            let node = svc.insert(&task, &traj(&["a"]));
+            let node = svc.insert(&task, &traj(&["a"])).unwrap();
             let id = svc.store_snapshot(&task, node, snap(10 + i));
             assert!(id >= 1);
             assert!(ids.insert(id), "snapshot id {id} reused across shards");
@@ -1207,7 +1295,7 @@ mod tests {
         });
         let svc = ShardedCacheService::with_factory(1, factory);
         for i in 0..5 {
-            let node = svc.insert("t", &traj(&["p", &format!("leaf{i}")]));
+            let node = svc.insert("t", &traj(&["p", &format!("leaf{i}")])).unwrap();
             svc.store_snapshot("t", node, snapf(i as u8, 100));
         }
         // Budget 2 ⇒ 3 evicted; evicted bytes must leave the shard store.
@@ -1227,7 +1315,7 @@ mod tests {
     #[test]
     fn resume_offer_pins_until_release() {
         let svc = ShardedCacheService::new(2);
-        let node = svc.insert("t", &traj(&["a", "b"]));
+        let node = svc.insert("t", &traj(&["a", "b"])).unwrap();
         svc.store_snapshot("t", node, snap(8));
         let Lookup::Miss(m) = svc.lookup("t", &[sf("a"), sf("b"), sf("z")]) else {
             panic!("expected miss")
@@ -1241,7 +1329,7 @@ mod tests {
     #[test]
     fn warm_fork_roundtrip() {
         let svc = ShardedCacheService::new(3);
-        let node = svc.insert("t", &traj(&["a"]));
+        let node = svc.insert("t", &traj(&["a"])).unwrap();
         assert!(!svc.has_warm_fork("t", node));
         svc.set_warm_fork("t", node, true);
         assert!(svc.has_warm_fork("t", node));
@@ -1276,7 +1364,7 @@ mod tests {
             .unwrap();
         let mut nodes = Vec::new();
         for i in 0..5 {
-            let node = svc.insert("t", &traj(&["p", &format!("leaf{i}")]));
+            let node = svc.insert("t", &traj(&["p", &format!("leaf{i}")])).unwrap();
             assert!(svc.store_snapshot("t", node, snapf(i as u8, 100)) > 0);
             nodes.push(node);
         }
@@ -1321,7 +1409,7 @@ mod tests {
         );
         for i in 0..24 {
             let task = format!("task-{i}");
-            let node = svc.insert(&task, &traj(&["a", "b"]));
+            let node = svc.insert(&task, &traj(&["a", "b"])).unwrap();
             svc.store_snapshot(&task, node, snapf(i as u8, 100));
         }
         // The worker runs asynchronously; wait for it to go idle, then
@@ -1348,7 +1436,7 @@ mod tests {
         let svc = ShardedCacheService::with_config(cfg, Arc::new(TaskCache::with_defaults))
             .unwrap();
         for i in 0..4 {
-            let node = svc.insert("t", &traj(&["p", &format!("leaf{i}")]));
+            let node = svc.insert("t", &traj(&["p", &format!("leaf{i}")])).unwrap();
             svc.store_snapshot("t", node, snapf(i as u8, 100));
         }
         svc.drain_over_budget();
@@ -1369,7 +1457,7 @@ mod tests {
             .unwrap();
         for i in 0..8 {
             let task = format!("task-{i}");
-            let node = svc.insert(&task, &traj(&["a"]));
+            let node = svc.insert(&task, &traj(&["a"])).unwrap();
             svc.store_snapshot(&task, node, snapf(i as u8, 100));
         }
         assert_eq!(svc.resident_bytes(), 800);
@@ -1381,7 +1469,7 @@ mod tests {
     fn persist_and_warm_start_roundtrip() {
         let dir = tmpdir("persist");
         let svc = ShardedCacheService::new(4);
-        let node = svc.insert("t1", &traj(&["a", "b"]));
+        let node = svc.insert("t1", &traj(&["a", "b"])).unwrap();
         let id = svc.store_snapshot("t1", node, snap(64));
         svc.insert("t2", &traj(&["x"]));
         assert!(svc.lookup("t1", &[sf("a"), sf("b")]).is_hit());
@@ -1397,7 +1485,7 @@ mod tests {
         assert_eq!(got.size(), 64);
         assert_eq!(fresh.fetch_snapshot_any(id).unwrap().size(), 64);
         // New snapshot ids never collide with reloaded ones.
-        let n2 = fresh.insert("t9", &traj(&["q"]));
+        let n2 = fresh.insert("t9", &traj(&["q"])).unwrap();
         let id2 = fresh.store_snapshot("t9", n2, snap(8));
         assert!(id2 > id, "fresh id {id2} collides with reloaded space ≤ {id}");
         std::fs::remove_dir_all(&dir).unwrap();
@@ -1443,11 +1531,13 @@ mod tests {
                 crate::cache::CursorStep::Miss(_) => {}
                 s => panic!("cold cache must miss: {s:?}"),
             }
-            node = svc.cursor_record("t", cur, &call, &ToolResult::new(format!("out-{c}"), 1.0));
-            assert!(node != 0, "record at a live cursor must succeed");
+            node = svc
+                .cursor_record("t", cur, &call, &ToolResult::new(format!("out-{c}"), 1.0))
+                .expect("record at a live cursor must succeed");
+            assert!(node != 0);
         }
         // The incrementally recorded chain equals a full insert.
-        assert_eq!(svc.insert("t", &traj(&["x", "y", "z"])), node);
+        assert_eq!(svc.insert("t", &traj(&["x", "y", "z"])), Some(node));
         assert!(svc.lookup("t", &[sf("x"), sf("y"), sf("z")]).is_hit());
         assert_eq!(svc.stats("t").inserts, 3);
     }
@@ -1455,7 +1545,7 @@ mod tests {
     #[test]
     fn cursor_miss_pins_resume_until_release() {
         let svc = ShardedCacheService::new(2);
-        let node = svc.insert("t", &traj(&["a", "b"]));
+        let node = svc.insert("t", &traj(&["a", "b"])).unwrap();
         svc.store_snapshot("t", node, snap(8));
         let cur = svc.cursor_open("t");
         assert!(svc.cursor_step("t", cur, &sf("a")).is_hit());
@@ -1524,7 +1614,10 @@ mod tests {
         let svc = ShardedCacheService::new(2);
         svc.insert("t", &traj(&["a"]));
         assert_eq!(svc.cursor_step("t", 999, &sf("a")), crate::cache::CursorStep::Invalid);
-        assert_eq!(svc.cursor_record("t", 999, &sf("a"), &ToolResult::new("r", 1.0)), 0);
+        assert!(
+            svc.cursor_record("t", 999, &sf("a"), &ToolResult::new("r", 1.0)).is_none(),
+            "an unknown cursor is a *failed* record, not a ROOT record"
+        );
         assert!(!svc.cursor_seek("t", 999, 1, 1));
         svc.cursor_close("t", 999); // no-op, no panic
         let batch = TurnBatch { probes: vec![sf("a")], op: TurnOp::Step(sf("a")) };
@@ -1585,13 +1678,15 @@ mod tests {
     #[test]
     fn probes_do_not_touch_stats_or_pins() {
         let svc = ShardedCacheService::new(2);
-        let node = svc.insert(
-            "t",
-            &[
-                (sf("a"), ToolResult::new("out-a", 1.0)),
-                (ToolCall::stateless("t", "peek"), ToolResult::new("peeked", 0.1)),
-            ],
-        );
+        let node = svc
+            .insert(
+                "t",
+                &[
+                    (sf("a"), ToolResult::new("out-a", 1.0)),
+                    (ToolCall::stateless("t", "peek"), ToolResult::new("peeked", 0.1)),
+                ],
+            )
+            .unwrap();
         svc.store_snapshot("t", node, snap(8));
         let r1 = svc.session_turn(
             "t",
@@ -1619,7 +1714,7 @@ mod tests {
         };
         let svc = ShardedCacheService::with_config(cfg, Arc::new(TaskCache::with_defaults))
             .unwrap();
-        let node = svc.insert("t", &traj(&["a", "b"]));
+        let node = svc.insert("t", &traj(&["a", "b"])).unwrap();
         svc.store_snapshot("t", node, snap(8));
 
         // An abandoned session holding a pin: walk to the snapshotted node,
@@ -1650,6 +1745,37 @@ mod tests {
         assert_eq!(svc.task("t").pinned_node_count(), 0, "sweep must release its pins");
     }
 
+    /// Regression: the periodic idle-session sweep used to run only on the
+    /// eviction workers' timer tick, so a `background: true` service with
+    /// no byte budgets (⇒ no eviction workers) reclaimed idle sessions
+    /// only on op-count ticks — on a quiet shard, never. The dedicated
+    /// sweeper thread must reclaim them with zero op traffic.
+    #[test]
+    fn idle_sessions_swept_without_eviction_workers() {
+        let cfg = ServiceConfig {
+            shards: 2,
+            background: true, // but no byte budget: no eviction workers
+            session_idle_ttl: std::time::Duration::from_millis(30),
+            session_sweep_tick: std::time::Duration::from_millis(20),
+            session_sweep_every_ops: 0, // op-count tick off: timer or bust
+            ..Default::default()
+        };
+        let svc = ShardedCacheService::with_config(cfg, Arc::new(TaskCache::with_defaults))
+            .unwrap();
+        assert!(svc.workers.is_empty(), "unbudgeted service must spawn no workers");
+        assert!(svc.sweeper.is_some(), "unbudgeted background service needs a sweeper");
+        let cur = svc.cursor_open("t");
+        assert!(cur != 0);
+        assert_eq!(svc.session_count(), 1);
+        // No further ops at all: only the dedicated timer can sweep.
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
+        while svc.session_count() != 0 && std::time::Instant::now() < deadline {
+            std::thread::sleep(std::time::Duration::from_millis(10));
+        }
+        assert_eq!(svc.session_count(), 0, "sweeper must reclaim the idle session");
+        drop(svc); // Drop joins the sweeper: must not hang.
+    }
+
     #[test]
     fn capabilities_advertise_everything_in_process() {
         let svc = ShardedCacheService::new(1);
@@ -1673,7 +1799,7 @@ mod tests {
         let svc = ShardedCacheService::with_config(cfg, Arc::new(TaskCache::with_defaults))
             .unwrap();
         for i in 0..3 {
-            let node = svc.insert("t", &traj(&["p", &format!("leaf{i}")]));
+            let node = svc.insert("t", &traj(&["p", &format!("leaf{i}")])).unwrap();
             assert!(svc.store_snapshot("t", node, snapf(i as u8, 100)) > 0);
         }
         svc.drain_over_budget(); // spills into `dir`
@@ -1683,7 +1809,7 @@ mod tests {
         // Post-persist spills still reach the same manifest (the writer
         // was never replaced or stranded), and a warm start sees every
         // payload.
-        let node = svc.insert("t", &traj(&["p", "leaf-late"]));
+        let node = svc.insert("t", &traj(&["p", "leaf-late"])).unwrap();
         assert!(svc.store_snapshot("t", node, snapf(9, 100)) > 0);
         svc.drain_over_budget();
         // Persist recorded every snapshot (both tiers) and the post-persist
@@ -1701,7 +1827,7 @@ mod tests {
         let mut ids = Vec::new();
         for i in 0..6 {
             let task = format!("task-{i}");
-            let node = svc.insert(&task, &traj(&["a"]));
+            let node = svc.insert(&task, &traj(&["a"])).unwrap();
             let id = svc.store_snapshot(&task, node, snap(256));
             assert!(id > 0);
             ids.push((task, id));
@@ -1733,9 +1859,9 @@ mod tests {
             .unwrap();
         // Task A pins its snapshot through a resume offer; task B holds an
         // unpinned handle of the *same content*.
-        let a = svc.insert("task-a", &traj(&["a", "b"]));
+        let a = svc.insert("task-a", &traj(&["a", "b"])).unwrap();
         assert!(svc.store_snapshot("task-a", a, snap(100)) > 0);
-        let b = svc.insert("task-b", &traj(&["x"]));
+        let b = svc.insert("task-b", &traj(&["x"])).unwrap();
         assert!(svc.store_snapshot("task-b", b, snap(100)) > 0);
         let Lookup::Miss(m) = svc.lookup("task-a", &[sf("a"), sf("b"), sf("z")]) else {
             panic!("expected miss")
@@ -1760,7 +1886,7 @@ mod tests {
     fn warm_start_sweeps_crash_leftovers() {
         let dir = tmpdir("sweep");
         let svc = ShardedCacheService::new(1);
-        let node = svc.insert("t", &traj(&["a"]));
+        let node = svc.insert("t", &traj(&["a"])).unwrap();
         let id = svc.store_snapshot("t", node, snap(32));
         svc.persist_to_dir(&dir).unwrap();
         // Simulate a crash mid-compaction: a half-written manifest rewrite

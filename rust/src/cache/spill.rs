@@ -36,10 +36,12 @@ use std::collections::HashMap;
 use std::fs;
 use std::io::Write;
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Mutex;
 
 use super::payload::ContentKey;
 use crate::sandbox::SandboxSnapshot;
+use crate::util::fault;
 use crate::util::json::{self, Json};
 
 /// Seconds charged on top of a spilled snapshot's `restore_cost` when it is
@@ -61,6 +63,9 @@ impl SpillSlot {
     /// Read the payload back (the fault-in path). `None` if the file is
     /// gone or shorter than recorded — callers degrade to replay.
     pub fn fault(&self) -> Option<SandboxSnapshot> {
+        if fault::spill_read_fails() {
+            return None; // injected read fault: degrade to replay
+        }
         let bytes = fs::read(&self.path).ok()?;
         if bytes.len() as u64 != self.bytes {
             return None;
@@ -169,6 +174,12 @@ pub struct SpillStore {
     /// into a live spill directory) — a rewrite under an aliased append
     /// handle would strand the other writer's fd on the unlinked inode.
     compact: bool,
+    /// Resident-only mode: set (and never cleared for the store's
+    /// lifetime) when a payload write or manifest append fails — ENOSPC,
+    /// a torn rename, an injected fault. New writes refuse immediately so
+    /// eviction falls back to destroying snapshots; payloads already on
+    /// disk keep faulting in.
+    degraded: AtomicBool,
 }
 
 impl SpillStore {
@@ -203,7 +214,21 @@ impl SpillStore {
             dir,
             manifest: Mutex::new(ManifestState { file, lines, live, compactions: 0 }),
             compact,
+            degraded: AtomicBool::new(false),
         })
+    }
+
+    /// Whether the store has tripped into resident-only mode (a write
+    /// failure disables further spilling; fault-ins keep working).
+    pub fn degraded(&self) -> bool {
+        self.degraded.load(Ordering::Relaxed)
+    }
+
+    /// Record a write-path failure and demote the store to resident-only
+    /// mode; returns the error for propagation.
+    fn demote(&self, e: std::io::Error) -> std::io::Error {
+        self.degraded.store(true, Ordering::Relaxed);
+        e
     }
 
     pub fn dir(&self) -> &Path {
@@ -259,6 +284,12 @@ impl SpillStore {
         serialize_cost: f64,
         restore_cost: f64,
     ) -> std::io::Result<SpillSlot> {
+        if self.degraded() {
+            return Err(std::io::Error::other("spill tier degraded (resident-only mode)"));
+        }
+        if let Some(e) = fault::spill_write_error() {
+            return Err(self.demote(e));
+        }
         let path = match &key {
             Some(k) => payload_path_keyed(&self.dir, k),
             None => payload_path(&self.dir, id),
@@ -269,8 +300,12 @@ impl SpillStore {
             && fs::metadata(&path).map(|m| m.len() == bytes.len() as u64).unwrap_or(false);
         if !already {
             let tmp = self.dir.join(format!("snap-{id}.tmp"));
-            fs::write(&tmp, bytes)?;
-            fs::rename(&tmp, &path)?;
+            if let Err(e) = fs::write(&tmp, bytes).and_then(|()| fs::rename(&tmp, &path)) {
+                // A short write or torn rename leaves at most a stray tmp
+                // (swept on the next warm start); nothing references it.
+                let _ = fs::remove_file(&tmp);
+                return Err(self.demote(e));
+            }
         }
         self.append_spill(ManifestRecord {
             task: task.to_string(),
@@ -279,7 +314,8 @@ impl SpillStore {
             bytes: bytes.len() as u64,
             serialize_cost,
             restore_cost,
-        })?;
+        })
+        .map_err(|e| self.demote(e))?;
         Ok(SpillSlot { path, key, bytes: bytes.len() as u64, serialize_cost, restore_cost })
     }
 
@@ -719,6 +755,51 @@ mod tests {
             }
             assert!(records.len() <= 10);
         }
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    // ---- resident-only degradation ----
+
+    #[test]
+    fn injected_write_fault_trips_resident_only_mode() {
+        let dir = tmpdir("degrade");
+        let store = SpillStore::open(&dir).unwrap();
+        store.write("t", 1, &snap(1, 8), 0.5).unwrap();
+        assert!(!store.degraded());
+        {
+            let plan = fault::FaultPlan {
+                p_spill_write_fail: 1.0,
+                ..fault::FaultPlan::quiet_local(7)
+            };
+            let _scope = fault::install(plan);
+            assert!(store.write("t", 2, &snap(2, 8), 0.5).is_err());
+        }
+        assert!(store.degraded(), "a write fault must demote to resident-only");
+        // Degraded: further writes refuse without touching the disk (no
+        // injector armed any more — the mode itself rejects them)…
+        assert!(store.write("t", 3, &snap(3, 8), 0.5).is_err());
+        // …but fault-ins of what already spilled keep working.
+        let records = load_manifest(&dir);
+        assert_eq!(records.len(), 1);
+        assert!(records[&1].slot(&dir).fault().is_some());
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn injected_read_fault_degrades_fault_in_to_none() {
+        let dir = tmpdir("read-fault");
+        let store = SpillStore::open(&dir).unwrap();
+        let slot = store.write("t", 1, &snap(4, 16), 0.5).unwrap();
+        {
+            let plan = fault::FaultPlan {
+                p_spill_read_fail: 1.0,
+                ..fault::FaultPlan::quiet_local(7)
+            };
+            let _scope = fault::install(plan);
+            assert!(slot.fault().is_none(), "read fault must degrade to replay");
+        }
+        assert!(slot.fault().is_some(), "disarmed: the payload is intact");
+        assert!(!store.degraded(), "read faults must not disable spilling");
         fs::remove_dir_all(&dir).unwrap();
     }
 

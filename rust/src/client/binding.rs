@@ -13,10 +13,25 @@
 //! JSON endpoints.
 //!
 //! Network failures degrade to cache misses / no-ops: caching is an
-//! optimization, never a correctness dependency.
+//! optimization, never a correctness dependency. Three mechanisms bound
+//! the cost of a sick server (all tunable via [`BindingConfig`]):
+//!
+//! * **Deadlines** — every dial uses a connect timeout and every response
+//!   read a socket read deadline, so a hung or blackholed server costs at
+//!   most one deadline per attempt, never an indefinite block.
+//! * **Bounded retries** — idempotent requests retry with exponential
+//!   backoff + jitter; non-idempotent ones (cursor steps/records, turn
+//!   frames) never retry and degrade through their documented ladders.
+//! * **A circuit breaker** — after `breaker_threshold` consecutive failed
+//!   requests the binding stops sending entirely ([`CacheBackend::degraded`]
+//!   reports `true`, executors bypass the cache); after
+//!   `breaker_cooldown` a single half-open probe tests recovery and one
+//!   success closes the breaker again.
 
 use std::cell::RefCell;
+use std::sync::atomic::{AtomicU32, AtomicU64, AtomicU8, Ordering};
 use std::sync::Mutex;
+use std::time::{Duration, Instant};
 
 use crate::cache::{
     BackendStats, CacheBackend, CacheStats, Capabilities, CursorStep, Lookup, Miss, NodeId,
@@ -26,6 +41,7 @@ use crate::sandbox::SandboxSnapshot;
 use crate::server::{hex_decode, hex_encode};
 use crate::util::http::{url_encode, HttpClient};
 use crate::util::json::{self, Json};
+use crate::util::rng::Rng;
 use crate::wire;
 
 /// Idle keep-alive connections retained per binding. One `RemoteBinding` is
@@ -36,26 +52,113 @@ use crate::wire;
 /// cannot camp every server thread.
 const MAX_IDLE_CONNECTIONS: usize = 6;
 
-/// The server closes keep-alive connections after its 30 s idle read
-/// timeout; a pooled connection older than this is presumed dead and is
+/// A pooled connection idle longer than this is presumed dead and is
 /// redialed rather than reused (avoids a wasted round trip per request
-/// after an idle gap).
-const MAX_IDLE_AGE: std::time::Duration = std::time::Duration::from_secs(10);
+/// after an idle gap). Deliberately far below the server's 30 s idle read
+/// timeout, so the binding never races the server's close of a connection
+/// it is about to reuse.
+const MAX_IDLE_AGE: Duration = Duration::from_secs(10);
+
+/// Circuit-breaker state encoding (an `AtomicU8` on the binding).
+const BREAKER_CLOSED: u8 = 0;
+const BREAKER_OPEN: u8 = 1;
+const BREAKER_HALF_OPEN: u8 = 2;
+
+/// Transport robustness knobs for a [`RemoteBinding`].
+#[derive(Debug, Clone)]
+pub struct BindingConfig {
+    /// Per-attempt dial deadline.
+    pub connect_timeout: Duration,
+    /// Per-response socket read deadline.
+    pub read_timeout: Duration,
+    /// Extra attempts after the first, for idempotent requests only.
+    pub retries: u32,
+    /// Backoff before retry *n* is `backoff_base × 2^(n−1)` (then jitter).
+    pub backoff_base: Duration,
+    /// Ceiling on the exponential backoff (pre-jitter).
+    pub backoff_max: Duration,
+    /// Consecutive failed requests that trip the breaker open.
+    pub breaker_threshold: u32,
+    /// How long an open breaker waits before a half-open recovery probe.
+    pub breaker_cooldown: Duration,
+    /// Seed for backoff jitter (deterministic tests).
+    pub seed: u64,
+}
+
+impl Default for BindingConfig {
+    fn default() -> BindingConfig {
+        BindingConfig {
+            connect_timeout: Duration::from_secs(2),
+            read_timeout: Duration::from_secs(30),
+            retries: 2,
+            backoff_base: Duration::from_millis(25),
+            backoff_max: Duration::from_millis(400),
+            breaker_threshold: 5,
+            breaker_cooldown: Duration::from_secs(2),
+            seed: 0x7C1E,
+        }
+    }
+}
 
 /// HTTP binding to a TVCACHE server.
 pub struct RemoteBinding {
     addr: std::net::SocketAddr,
-    pool: Mutex<Vec<(HttpClient, std::time::Instant)>>,
+    cfg: BindingConfig,
+    pool: Mutex<Vec<(HttpClient, Instant)>>,
     /// Negotiated server capabilities (`/capabilities` handshake), resolved
     /// once on first session open and cached for the binding's lifetime —
     /// the per-request magic-byte guessing game this replaces is exactly
-    /// what the handshake exists to avoid.
+    /// what the handshake exists to avoid. Left unset after a *transport*
+    /// failure (the next open re-probes); only a definitive server answer
+    /// is cached.
     caps: Mutex<Option<Capabilities>>,
+    /// Circuit breaker: CLOSED (traffic flows) / OPEN (fast-fail
+    /// everything) / HALF_OPEN (exactly one probe in flight).
+    breaker: AtomicU8,
+    consecutive_failures: AtomicU32,
+    /// When the breaker last opened (gates the half-open cooldown).
+    opened_at: Mutex<Instant>,
+    /// Jitter source for retry backoff.
+    jitter: Mutex<Rng>,
+    // ---- client-side degradation counters (merged into service_stats) ----
+    retries_counter: AtomicU64,
+    breaker_opens: AtomicU64,
+    breaker_half_opens: AtomicU64,
+    breaker_closes: AtomicU64,
 }
 
 impl RemoteBinding {
     pub fn connect(addr: std::net::SocketAddr) -> RemoteBinding {
-        RemoteBinding { addr, pool: Mutex::new(Vec::new()), caps: Mutex::new(None) }
+        Self::connect_with(addr, BindingConfig::default())
+    }
+
+    /// Connect with explicit deadline/retry/breaker configuration.
+    pub fn connect_with(addr: std::net::SocketAddr, cfg: BindingConfig) -> RemoteBinding {
+        let jitter = Rng::new(cfg.seed ^ 0xB1D1_76AD);
+        RemoteBinding {
+            addr,
+            cfg,
+            pool: Mutex::new(Vec::new()),
+            caps: Mutex::new(None),
+            breaker: AtomicU8::new(BREAKER_CLOSED),
+            consecutive_failures: AtomicU32::new(0),
+            opened_at: Mutex::new(Instant::now()),
+            jitter: Mutex::new(jitter),
+            retries_counter: AtomicU64::new(0),
+            breaker_opens: AtomicU64::new(0),
+            breaker_half_opens: AtomicU64::new(0),
+            breaker_closes: AtomicU64::new(0),
+        }
+    }
+
+    /// Current breaker state, for tests and debug surfaces:
+    /// `"closed" | "open" | "half-open"`.
+    pub fn breaker_state(&self) -> &'static str {
+        match self.breaker.load(Ordering::Acquire) {
+            BREAKER_OPEN => "open",
+            BREAKER_HALF_OPEN => "half-open",
+            _ => "closed",
+        }
     }
 
     /// Run `f` with a pooled connection; I/O happens outside the pool lock.
@@ -77,19 +180,140 @@ impl RemoteBinding {
                 }
             }
         };
-        let mut client = pooled.unwrap_or_else(|| HttpClient::connect(self.addr));
+        let mut client = pooled.unwrap_or_else(|| {
+            HttpClient::with_deadlines(self.addr, self.cfg.connect_timeout, self.cfg.read_timeout)
+        });
         let out = f(&mut client);
         if out.is_ok() {
             let mut pool = self.pool.lock().unwrap();
             if pool.len() < MAX_IDLE_CONNECTIONS {
-                pool.push((client, std::time::Instant::now()));
+                pool.push((client, Instant::now()));
             }
         }
         out
     }
 
+    /// One logical request through the breaker + bounded-retry policy.
+    ///
+    /// *Any* HTTP response — 200, 404, 500 — counts as transport success
+    /// (the server is alive and answering); only an `io::Error` after all
+    /// attempts counts against the breaker. `retry` must be `true` only
+    /// for idempotent requests: every attempt re-sends the frame, so a
+    /// replayed non-idempotent op (cursor step/record, turn frame) would
+    /// double-apply.
+    fn transport(
+        &self,
+        retry: bool,
+        mut send: impl FnMut(&mut HttpClient) -> std::io::Result<(u16, Vec<u8>)>,
+    ) -> std::io::Result<(u16, Vec<u8>)> {
+        if !self.breaker_allows() {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::ConnectionRefused,
+                "circuit breaker open: cache traffic bypassed",
+            ));
+        }
+        let attempts = if retry { 1 + self.cfg.retries } else { 1 };
+        let mut last_err = None;
+        for attempt in 0..attempts {
+            if attempt > 0 {
+                self.retries_counter.fetch_add(1, Ordering::Relaxed);
+                std::thread::sleep(self.backoff(attempt));
+            }
+            match self.with_client(&mut send) {
+                Ok(resp) => {
+                    self.note_success();
+                    return Ok(resp);
+                }
+                Err(e) => last_err = Some(e),
+            }
+        }
+        self.note_transport_failure();
+        Err(last_err.unwrap_or_else(|| std::io::Error::other("transport failed")))
+    }
+
+    /// Backoff before retry `attempt` (≥ 1): exponential from
+    /// `backoff_base`, capped at `backoff_max`, jittered to 50–100 % so
+    /// concurrent rollout threads don't retry in lockstep.
+    fn backoff(&self, attempt: u32) -> Duration {
+        let exp = self
+            .cfg
+            .backoff_base
+            .saturating_mul(1u32 << (attempt - 1).min(16));
+        let capped = exp.min(self.cfg.backoff_max);
+        let jitter = 0.5 + 0.5 * self.jitter.lock().unwrap().f64();
+        capped.mul_f64(jitter)
+    }
+
+    /// May a request go out right now? In HALF_OPEN exactly one caller —
+    /// the one whose compare-exchange moved OPEN → HALF_OPEN — gets
+    /// through as the recovery probe; everyone else fast-fails.
+    fn breaker_allows(&self) -> bool {
+        match self.breaker.load(Ordering::Acquire) {
+            BREAKER_CLOSED => true,
+            BREAKER_HALF_OPEN => false, // a probe is already in flight
+            _ => {
+                self.opened_at.lock().unwrap().elapsed() >= self.cfg.breaker_cooldown
+                    && self.try_half_open()
+            }
+        }
+    }
+
+    fn try_half_open(&self) -> bool {
+        let won = self
+            .breaker
+            .compare_exchange(
+                BREAKER_OPEN,
+                BREAKER_HALF_OPEN,
+                Ordering::AcqRel,
+                Ordering::Acquire,
+            )
+            .is_ok();
+        if won {
+            self.breaker_half_opens.fetch_add(1, Ordering::Relaxed);
+        }
+        won
+    }
+
+    fn note_success(&self) {
+        self.consecutive_failures.store(0, Ordering::Relaxed);
+        if self.breaker.swap(BREAKER_CLOSED, Ordering::AcqRel) != BREAKER_CLOSED {
+            self.breaker_closes.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    fn note_transport_failure(&self) {
+        if self.breaker.load(Ordering::Acquire) == BREAKER_HALF_OPEN {
+            // Failed recovery probe: reopen and restart the cooldown clock.
+            *self.opened_at.lock().unwrap() = Instant::now();
+            if self.breaker.swap(BREAKER_OPEN, Ordering::AcqRel) == BREAKER_HALF_OPEN {
+                self.breaker_opens.fetch_add(1, Ordering::Relaxed);
+            }
+            return;
+        }
+        let fails = self.consecutive_failures.fetch_add(1, Ordering::AcqRel) + 1;
+        if fails >= self.cfg.breaker_threshold {
+            // Stamp the clock before flipping the state so no reader of
+            // OPEN can observe a stale cooldown start.
+            *self.opened_at.lock().unwrap() = Instant::now();
+            if self
+                .breaker
+                .compare_exchange(
+                    BREAKER_CLOSED,
+                    BREAKER_OPEN,
+                    Ordering::AcqRel,
+                    Ordering::Acquire,
+                )
+                .is_ok()
+            {
+                self.breaker_opens.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
     fn post(&self, path: &str, body: String) -> Option<Json> {
-        let (status, resp) = self.with_client(|c| c.post(path, body.as_bytes())).ok()?;
+        let (status, resp) = self
+            .transport(true, |c| c.post_once(path, body.as_bytes()))
+            .ok()?;
         if status != 200 {
             return None;
         }
@@ -97,19 +321,21 @@ impl RemoteBinding {
     }
 
     /// POST a binary frame built by `encode` into the thread-local reuse
-    /// buffer (cleared, not reallocated, between calls); returns the raw
-    /// response body on a 200. `retry` enables the one-shot transparent
-    /// retry on a stale keep-alive connection — safe only for idempotent
-    /// requests: a replayed `cursor_step`/`cursor_record`/`cursor_open`
-    /// would apply its effect twice (double-advancing the server-side
-    /// cursor or leaking an orphan one), so those pass `retry = false`
-    /// and let a lost response degrade to the `Invalid`-fallback ladder.
-    fn post_bin(
+    /// buffer (cleared, not reallocated, between calls); returns the
+    /// status and raw response body, or the transport error after the
+    /// retry policy is exhausted. `retry` routes through the bounded
+    /// idempotent-retry policy — safe only for requests whose replay has
+    /// no side effect: a replayed `cursor_step`/`cursor_record`/
+    /// `cursor_open` would apply its effect twice (double-advancing the
+    /// server-side cursor or leaking an orphan one), so those pass
+    /// `retry = false` and let a lost response degrade to the
+    /// `Invalid`-fallback ladder.
+    fn post_bin_status(
         &self,
         path: &str,
         retry: bool,
         encode: impl FnOnce(&mut Vec<u8>),
-    ) -> Option<Vec<u8>> {
+    ) -> std::io::Result<(u16, Vec<u8>)> {
         thread_local! {
             static WIRE_BUF: RefCell<Vec<u8>> = RefCell::new(Vec::with_capacity(256));
         }
@@ -117,24 +343,25 @@ impl RemoteBinding {
             let mut buf = cell.borrow_mut();
             buf.clear();
             encode(&mut buf);
-            let (status, resp) = self
-                .with_client(|c| {
-                    if retry {
-                        c.post(path, &buf)
-                    } else {
-                        c.post_once(path, &buf)
-                    }
-                })
-                .ok()?;
-            if status != 200 {
-                return None;
-            }
-            Some(resp)
+            self.transport(retry, |c| c.post_once(path, &buf))
         })
     }
 
+    /// [`Self::post_bin_status`] collapsed to `Some(body)` on a 200.
+    fn post_bin(
+        &self,
+        path: &str,
+        retry: bool,
+        encode: impl FnOnce(&mut Vec<u8>),
+    ) -> Option<Vec<u8>> {
+        match self.post_bin_status(path, retry, encode) {
+            Ok((200, body)) => Some(body),
+            _ => None,
+        }
+    }
+
     fn get(&self, path_and_query: &str) -> Option<Json> {
-        let (status, resp) = self.with_client(|c| c.get(path_and_query)).ok()?;
+        let (status, resp) = self.transport(true, |c| c.get(path_and_query)).ok()?;
         if status != 200 {
             return None;
         }
@@ -156,11 +383,14 @@ impl CacheBackend for RemoteBinding {
             })
     }
 
-    fn insert(&self, task: &str, traj: &[(ToolCall, ToolResult)]) -> NodeId {
+    fn insert(&self, task: &str, traj: &[(ToolCall, ToolResult)]) -> Option<NodeId> {
+        // `None` (transport failure) is distinct from `Some(0)` (the
+        // server answered: final node is ROOT) — a failed insert must
+        // never be released, pinned, or snapshot-attached as ROOT.
         self.post_bin("/put", true, |buf| wire::enc_insert(buf, task, traj))
             .as_deref()
             .and_then(wire::dec_u64_resp)
-            .unwrap_or(0) as usize
+            .map(|n| n as usize)
     }
 
     fn release(&self, task: &str, node: NodeId) {
@@ -218,9 +448,18 @@ impl CacheBackend for RemoteBinding {
     }
 
     fn service_stats(&self) -> BackendStats {
-        self.get("/stats")
+        // Server-side aggregate, merged with the client-side degradation
+        // counters (the server reports zeros for these — retries and
+        // breaker transitions are a property of *this* binding).
+        let mut stats = self
+            .get("/stats")
             .and_then(|v| BackendStats::from_json(&v))
-            .unwrap_or_default()
+            .unwrap_or_default();
+        stats.remote_retries += self.retries_counter.load(Ordering::Relaxed);
+        stats.breaker_opens += self.breaker_opens.load(Ordering::Relaxed);
+        stats.breaker_half_opens += self.breaker_half_opens.load(Ordering::Relaxed);
+        stats.breaker_closes += self.breaker_closes.load(Ordering::Relaxed);
+        stats
     }
 
     fn persist(&self, dir: &str) -> bool {
@@ -237,29 +476,76 @@ impl CacheBackend for RemoteBinding {
             .and_then(|v| v.get("ok").and_then(|o| o.as_bool()))
             .unwrap_or(false)
     }
+
+    /// `true` while the circuit breaker is open: executors bypass the
+    /// cache entirely, which means no organic traffic would ever probe
+    /// for recovery — so once the cooldown elapses, *this* call performs
+    /// the half-open probe inline (a single bounded `/ping` round trip;
+    /// any HTTP answer closes the breaker).
+    fn degraded(&self) -> bool {
+        match self.breaker.load(Ordering::Acquire) {
+            BREAKER_CLOSED => false,
+            BREAKER_HALF_OPEN => true, // someone else's probe is in flight
+            _ => {
+                if self.opened_at.lock().unwrap().elapsed() >= self.cfg.breaker_cooldown
+                    && self.try_half_open()
+                {
+                    match self.with_client(|c| c.get("/ping")) {
+                        Ok(_) => {
+                            self.note_success();
+                            false
+                        }
+                        Err(_) => {
+                            self.note_transport_failure();
+                            true
+                        }
+                    }
+                } else {
+                    true
+                }
+            }
+        }
+    }
 }
 
 impl SessionBackend for RemoteBinding {
     /// One `/capabilities` round trip, once per binding (not per session,
-    /// not per request). A server that 404s the handshake — or a network
-    /// hiccup — negotiates down to [`Capabilities::LEGACY`]: the magic-byte
-    /// sniffed binary + cursor protocol every pre-v2 server speaks, with
-    /// turn batching off. The decision is cached so a flaky handshake can
-    /// never flap the protocol mid-run.
+    /// not per request). Only a *definitive* server answer is cached for
+    /// the binding's lifetime: a v2 handshake caches the advertised set,
+    /// and a sub-5xx non-200 answer (a pre-v2 server 404s the endpoint)
+    /// caches [`Capabilities::LEGACY`]. A transport failure or 5xx also
+    /// reports `LEGACY` — the session opening right now still degrades
+    /// safely — but leaves the cache unset, so the *next* session open
+    /// re-probes instead of pinning the whole run to the degraded
+    /// protocol. An already-negotiated binding never flaps: the cached
+    /// answer wins.
     fn capabilities(&self) -> Capabilities {
         if let Some(c) = *self.caps.lock().unwrap() {
             return c;
         }
-        let negotiated = self
-            .post_bin("/capabilities", true, |buf| {
-                wire::enc_hello(buf, Capabilities::PROTO_V2)
-            })
-            .as_deref()
-            .and_then(wire::dec_caps_resp)
-            .map(|(_proto, caps)| caps)
-            .unwrap_or(Capabilities::LEGACY);
-        *self.caps.lock().unwrap() = Some(negotiated);
-        negotiated
+        match self.post_bin_status("/capabilities", true, |buf| {
+            wire::enc_hello(buf, Capabilities::PROTO_V2)
+        }) {
+            Ok((200, body)) => match wire::dec_caps_resp(&body) {
+                Some((_proto, caps)) => {
+                    *self.caps.lock().unwrap() = Some(caps);
+                    caps
+                }
+                // A 200 that doesn't decode is a garbled frame, not a
+                // definitive answer — degrade now, re-probe next open.
+                None => Capabilities::LEGACY,
+            },
+            Ok((status, _)) if status < 500 => {
+                // Definitive: the server answered and it has no v2
+                // handshake (a pre-v2 server 404s the endpoint). Cache
+                // the downgrade.
+                *self.caps.lock().unwrap() = Some(Capabilities::LEGACY);
+                Capabilities::LEGACY
+            }
+            // A 5xx is the server having a bad moment, not a protocol
+            // answer — degrade this open, re-probe on the next.
+            Ok(_) | Err(_) => Capabilities::LEGACY,
+        }
     }
 
     fn cursor_open(&self, task: &str) -> u64 {
@@ -288,13 +574,13 @@ impl SessionBackend for RemoteBinding {
         cursor: u64,
         call: &ToolCall,
         result: &ToolResult,
-    ) -> NodeId {
+    ) -> Option<NodeId> {
         self.post_bin("/cursor_record", false, |buf| {
             wire::enc_cursor_record(buf, task, cursor, call, result)
         })
         .as_deref()
         .and_then(wire::dec_u64_resp)
-        .unwrap_or(0) as usize
+        .map(|n| n as usize)
     }
 
     fn cursor_seek(&self, task: &str, cursor: u64, node: NodeId, steps: usize) -> bool {
@@ -333,5 +619,85 @@ impl SessionBackend for RemoteBinding {
         .as_deref()
         .and_then(wire::dec_turn_resp)
         .unwrap_or_else(|| TurnReply::refused(batch))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A localhost port with nothing listening: dials get an immediate
+    /// ECONNREFUSED (no fault plan needed, so safe in concurrent tests).
+    fn dead_addr() -> std::net::SocketAddr {
+        let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = l.local_addr().unwrap();
+        drop(l);
+        addr
+    }
+
+    fn fast_cfg() -> BindingConfig {
+        BindingConfig {
+            connect_timeout: Duration::from_millis(200),
+            read_timeout: Duration::from_millis(500),
+            retries: 1,
+            backoff_base: Duration::from_millis(1),
+            backoff_max: Duration::from_millis(2),
+            breaker_threshold: 3,
+            // Large enough that no half-open probe fires mid-test (the
+            // recovery path is covered by the fault-injection suite).
+            breaker_cooldown: Duration::from_secs(60),
+            seed: 1,
+        }
+    }
+
+    #[test]
+    fn breaker_trips_after_consecutive_failures_and_fast_fails() {
+        let b = RemoteBinding::connect_with(dead_addr(), fast_cfg());
+        assert_eq!(b.breaker_state(), "closed");
+        for _ in 0..3 {
+            assert!(b.insert("t", &[]).is_none());
+        }
+        assert_eq!(b.breaker_state(), "open");
+        assert!(b.degraded());
+        // Open breaker: requests fast-fail without touching the network.
+        let t0 = Instant::now();
+        for _ in 0..50 {
+            assert!(b.insert("t", &[]).is_none());
+        }
+        assert!(
+            t0.elapsed() < Duration::from_millis(100),
+            "open breaker must fast-fail, took {:?}",
+            t0.elapsed()
+        );
+        let stats = b.service_stats();
+        assert_eq!(stats.breaker_opens, 1);
+        assert!(stats.remote_retries >= 3, "{}", stats.remote_retries);
+    }
+
+    #[test]
+    fn failed_insert_is_none_not_root() {
+        let b = RemoteBinding::connect_with(dead_addr(), fast_cfg());
+        assert_eq!(b.insert("t", &[]), None);
+        let call = ToolCall::stateless("x", "1");
+        let result = ToolResult::new("out", 0.0);
+        assert_eq!(b.cursor_record("t", 1, &call, &result), None);
+    }
+
+    #[test]
+    fn transport_failure_does_not_cache_legacy_capabilities() {
+        let b = RemoteBinding::connect_with(dead_addr(), fast_cfg());
+        assert_eq!(b.capabilities(), Capabilities::LEGACY);
+        // Not cached: a later probe (server now reachable) may upgrade.
+        assert!(b.caps.lock().unwrap().is_none());
+    }
+
+    #[test]
+    fn backoff_is_bounded_and_jittered() {
+        let b = RemoteBinding::connect_with(dead_addr(), fast_cfg());
+        for attempt in 1..8 {
+            let d = b.backoff(attempt);
+            assert!(d <= b.cfg.backoff_max, "attempt {attempt}: {d:?}");
+            assert!(d >= b.cfg.backoff_base / 2, "attempt {attempt}: {d:?}");
+        }
     }
 }

@@ -151,11 +151,17 @@ impl ToolCallExecutor {
     /// calls; probe misses are ignored, so hit/miss decisions are
     /// identical with or without probes.
     pub fn call_with_probes(&mut self, call: ToolCall, probes: &[ToolCall]) -> CallOutcome {
-        let outcome = if self.cfg.enabled {
+        let outcome = if !self.cfg.enabled {
+            self.call_direct(call)
+        } else if self.session.degraded() {
+            // Circuit breaker open (cache unreachable): bypass all cache
+            // traffic for this call. Not `call_direct` — earlier cache hits
+            // may have left the live sandbox behind the history, so the
+            // degraded path still runs the state-reconstruction machinery.
+            self.call_degraded(call)
+        } else {
             self.session.queue_probes(probes);
             self.call_cached(call)
-        } else {
-            self.call_direct(call)
         };
         self.total_charged += outcome.charged;
         outcome
@@ -192,6 +198,30 @@ impl ToolCallExecutor {
             self.sandbox = Some(sb);
         }
         let result = self.sandbox.as_mut().unwrap().execute(&call);
+        charged += result.exec_time;
+        self.history.push((call, result.clone()));
+        self.valid_upto = self.history.len();
+        CallOutcome { result, charged, hit: false }
+    }
+
+    // -- degraded path (breaker open) ----------------------------------------
+
+    /// Execute with zero cache traffic but full state reconstruction:
+    /// catch-up replay brings the live (or a fresh) sandbox to the state
+    /// implied by the history — which may contain cache hits from before
+    /// the breaker opened — then the call runs for real. Nothing is
+    /// looked up, recorded, or snapshotted; the rollout's outputs are
+    /// identical to a cacheless run of the same trajectory.
+    fn call_degraded(&mut self, call: ToolCall) -> CallOutcome {
+        self.misses += 1;
+        let synthetic = Miss {
+            matched_node: 0,
+            matched_calls: self.history.len(),
+            resume: None,
+        };
+        let mut charged = self.ensure_state(&synthetic);
+        let sb = self.sandbox.as_mut().expect("ensure_state built a sandbox");
+        let result = sb.execute(&call);
         charged += result.exec_time;
         self.history.push((call, result.clone()));
         self.valid_upto = self.history.len();
@@ -262,46 +292,51 @@ impl ToolCallExecutor {
         self.valid_upto = self.history.len();
 
         // Record the extended trajectory (the /put of Figure 4). With an
-        // in-sync cursor only the delta crosses the wire; a failed delta
-        // record (cursor invalidated between step and record) falls back
-        // to the full-trajectory insert and re-seeks. Caveat: 0 is also
-        // the *legitimate* return for a stateless delta recorded at the
-        // TCG root (an all-stateless history pins the cursor at ROOT), so
-        // only treat it as a failure when the position cannot be ROOT.
+        // in-sync cursor only the delta crosses the wire; a *failed* delta
+        // record (`None`: cursor invalidated between step and record, or
+        // the transport died) falls back to the full-trajectory insert and
+        // re-seeks. Caveat: `Some(0)` is the *legitimate* return for a
+        // stateless delta recorded at the TCG root (an all-stateless
+        // history pins the cursor at ROOT) — but a legacy remote server
+        // also encodes failure as 0 on the wire, so `Some(0)` is only
+        // trusted when the position can actually be ROOT.
         let root_legal = !call.mutates_state
             && !self.history[..self.history.len() - 1]
                 .iter()
                 .any(|(c, _)| c.mutates_state);
         let node = if record_delta {
             match self.session.record(&call, &result) {
-                0 if !root_legal => self.insert_full_and_reseek(),
-                n => n,
+                None => self.insert_full_and_reseek(),
+                Some(0) if !root_legal => self.insert_full_and_reseek(),
+                some => some,
             }
         } else {
             self.insert_full_and_reseek()
         };
 
-        // §3.3 selective snapshotting, on the critical path; the
-        // fork instantiation happens in the background. node 0 is
-        // the ROOT/failure sentinel (a remote insert that lost the
-        // network degrades to 0): attaching this sandbox's deep
+        // §3.3 selective snapshotting, on the critical path; the fork
+        // instantiation happens in the background. A failed record/insert
+        // (`None` — the remote lost the network) or the ROOT sentinel (0)
+        // must never be snapshot-attached: attaching this sandbox's deep
         // state there would let later rollouts resume wrong state.
-        if call.mutates_state && node != 0 {
-            let sb = self.sandbox.as_ref().unwrap();
-            let snap = sb.snapshot();
-            let costs = SnapshotCosts {
-                exec_time: result.exec_time,
-                serialize_cost: snap.serialize_cost,
-                restore_cost: snap.restore_cost,
-            };
-            if self.session.should_snapshot(costs) {
-                charged += snap.serialize_cost;
-                // id 0 = the store rejected the attach (node pinned
-                // or evicted concurrently): no snapshot was kept,
-                // so there is nothing to background-fork.
-                let id = self.session.store_snapshot(node, snap);
-                if id != 0 && self.cfg.background_forks {
-                    self.session.set_warm_fork(node, true);
+        if call.mutates_state {
+            if let Some(node) = node.filter(|&n| n != 0) {
+                let sb = self.sandbox.as_ref().unwrap();
+                let snap = sb.snapshot();
+                let costs = SnapshotCosts {
+                    exec_time: result.exec_time,
+                    serialize_cost: snap.serialize_cost,
+                    restore_cost: snap.restore_cost,
+                };
+                if self.session.should_snapshot(costs) {
+                    charged += snap.serialize_cost;
+                    // id 0 = the store rejected the attach (node pinned
+                    // or evicted concurrently): no snapshot was kept,
+                    // so there is nothing to background-fork.
+                    let id = self.session.store_snapshot(node, snap);
+                    if id != 0 && self.cfg.background_forks {
+                        self.session.set_warm_fork(node, true);
+                    }
                 }
             }
         }
@@ -309,9 +344,9 @@ impl ToolCallExecutor {
     }
 
     /// Full-trajectory insert through the session, which re-seats the
-    /// cursor on the returned node. Returns it (0 = remote failure
-    /// sentinel).
-    fn insert_full_and_reseek(&mut self) -> usize {
+    /// cursor on the returned node. `None` = the insert never reached the
+    /// backend (transport failure).
+    fn insert_full_and_reseek(&mut self) -> Option<usize> {
         self.session.insert_full(&self.history)
     }
 
@@ -665,10 +700,15 @@ mod tests {
         // deep-spilled payload) costs more than the replay it skips is not
         // adopted — the executor replays and still returns the pin.
         let cache = svc();
-        let node = cache.insert(
-            TASK,
-            &[(bash("make"), ToolResult { output: "built".into(), exec_time: 9.0, api_tokens: 0 })],
-        );
+        let node = cache
+            .insert(
+                TASK,
+                &[(
+                    bash("make"),
+                    ToolResult { output: "built".into(), exec_time: 9.0, api_tokens: 0 },
+                )],
+            )
+            .unwrap();
         let huge = crate::sandbox::SandboxSnapshot {
             bytes: vec![0u8; 8],
             serialize_cost: 0.1,

@@ -255,19 +255,21 @@ impl RolloutSession {
     }
 
     /// Record the executed delta at the cursor and advance it. Returns the
-    /// new position's node id, 0 on failure (fall back to
-    /// [`RolloutSession::insert_full`]).
-    pub fn record(&mut self, call: &ToolCall, result: &ToolResult) -> NodeId {
+    /// new position's node id; `None` means the record *failed* (no
+    /// cursor, session refused, transport failure) and the caller should
+    /// fall back to [`RolloutSession::insert_full`]. A failed record must
+    /// never be released, pinned, or snapshot-attached.
+    pub fn record(&mut self, call: &ToolCall, result: &ToolResult) -> Option<NodeId> {
         if self.cursor == 0 {
-            return 0;
+            return None;
         }
-        let node = if self.batched() {
+        if self.batched() {
             let batch = TurnBatch {
                 probes: std::mem::take(&mut self.queued_probes),
                 op: TurnOp::Record(call.clone(), result.clone()),
             };
             let reply = self.backend.session_turn(&self.task, self.cursor, &batch);
-            let node = reply.recorded.unwrap_or(0);
+            let node = reply.recorded;
             if call.mutates_state {
                 self.invalidate_probes();
             }
@@ -281,8 +283,7 @@ impl RolloutSession {
                 self.invalidate_probes();
             }
             node
-        };
-        node
+        }
     }
 
     fn apply_turn_reply(
@@ -341,14 +342,23 @@ impl RolloutSession {
     }
 
     /// Full-trajectory insert, then re-seat the cursor on the returned
-    /// node. Returns the node (0 = remote failure sentinel).
-    pub fn insert_full(&mut self, traj: &[(ToolCall, ToolResult)]) -> NodeId {
+    /// node. `None` means the insert never reached the backend (transport
+    /// failure): the rollout's output is unaffected, the trajectory is
+    /// just not cached.
+    pub fn insert_full(&mut self, traj: &[(ToolCall, ToolResult)]) -> Option<NodeId> {
         self.touched = true;
-        let node = self.backend.insert(&self.task, traj);
+        let node = self.backend.insert(&self.task, traj)?;
         if node != 0 {
             self.seek(node, traj.len());
         }
-        node
+        Some(node)
+    }
+
+    /// Whether the backend is currently degraded (circuit breaker open on
+    /// a remote binding): the executor short-circuits cache traffic to
+    /// plain execution while this holds.
+    pub fn degraded(&self) -> bool {
+        self.backend.degraded()
     }
 
     /// Re-seat the cursor after a fallback re-established the position.
@@ -472,7 +482,7 @@ mod tests {
             .iter()
             .map(|c| (sf(c), ToolResult::new(format!("out-{c}"), 1.0)))
             .collect();
-        let node = svc.insert(TASK, &traj);
+        let node = svc.insert(TASK, &traj).unwrap();
         let snap =
             SandboxSnapshot { bytes: vec![1u8; 16], serialize_cost: 0.1, restore_cost: 0.2 };
         assert!(svc.store_snapshot(TASK, node, snap) > 0);

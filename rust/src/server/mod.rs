@@ -215,7 +215,9 @@ impl CacheService {
         let Some((task, traj)) = decoded else {
             return Response::bad_request_static("bad put frame");
         };
-        let node = self.backend().insert(&task, &traj);
+        // In-process inserts cannot fail; 0 is the wire's ROOT/failure
+        // sentinel either way.
+        let node = self.backend().insert(&task, &traj).unwrap_or(0);
         let mut buf = Vec::with_capacity(9);
         wire::enc_u64_resp(&mut buf, node as u64);
         Response::binary(buf)
@@ -283,7 +285,13 @@ impl CacheService {
         let Some((task, cursor, call, result)) = decoded else {
             return Response::bad_request_static("bad cursor_record frame");
         };
-        let node = self.session_backend().cursor_record(&task, cursor, &call, &result);
+        // A failed record (unknown cursor / conflict) encodes as the wire's
+        // 0 sentinel — v2 clients treat it as refused unless the position
+        // can legally be ROOT.
+        let node = self
+            .session_backend()
+            .cursor_record(&task, cursor, &call, &result)
+            .unwrap_or(0);
         let mut buf = Vec::with_capacity(9);
         wire::enc_u64_resp(&mut buf, node as u64);
         Response::binary(buf)
@@ -337,7 +345,9 @@ impl CacheService {
         Response::binary(buf)
     }
 
-    /// Human-debuggable view of the handshake (`GET /capabilities`).
+    /// Human-debuggable view of the handshake (`GET /capabilities`),
+    /// including the degradation health bits operators check first when a
+    /// cache misbehaves.
     fn capabilities_json(&self) -> Response {
         let caps = self.session_backend().capabilities();
         Response::json(
@@ -347,6 +357,11 @@ impl CacheService {
                 ("cursors", Json::Bool(caps.cursors)),
                 ("turn_batch", Json::Bool(caps.turn_batch)),
                 ("payload_dedup", Json::Bool(caps.payload_dedup)),
+                ("spill_degraded", Json::Bool(self.sharded.spill_degraded())),
+                (
+                    "injected_faults",
+                    Json::num(crate::util::fault::injected_total() as f64),
+                ),
             ])
             .to_string(),
         )
@@ -472,7 +487,7 @@ impl CacheService {
             };
             traj.push((call, result));
         }
-        let node = self.backend().insert(task, &traj);
+        let node = self.backend().insert(task, &traj).unwrap_or(0);
         Response::json(Json::obj(vec![("node", Json::num(node as f64))]).to_string())
     }
 

@@ -12,6 +12,7 @@ pub mod sim_loop;
 
 pub use grpo::{advantages, pack_batch, PackedBatch};
 pub use sim_loop::{
-    run_concurrent, run_workload, BatchMetrics, CallSample, ConcurrentOptions,
-    ConcurrentReport, RolloutMetrics, RunMetrics, SimOptions,
+    run_concurrent, run_concurrent_on, run_workload, run_workload_on, BatchMetrics,
+    CallSample, ConcurrentOptions, ConcurrentReport, RolloutMetrics, RunMetrics,
+    SimOptions,
 };

@@ -204,12 +204,22 @@ struct RolloutProc {
 
 /// Run one workload end-to-end under the simulator.
 pub fn run_workload(cfg: &WorkloadConfig, opts: &SimOptions) -> RunMetrics {
-    let mut metrics = RunMetrics::default();
-    let factory = cfg.factory();
-
     // One sharded cache service for the whole run; per-task caches are
     // created on first touch and persist across epochs.
     let backend = sharded_backend(cfg, opts.lpm, opts.max_snapshots, opts.shards);
+    run_workload_on(cfg, opts, backend as Arc<dyn SessionBackend>)
+}
+
+/// As [`run_workload`] but against a caller-supplied backend — the
+/// fault-injection tests wrap the sharded service in flaky decorators and
+/// assert the rollout rewards still match a cacheless run.
+pub fn run_workload_on(
+    cfg: &WorkloadConfig,
+    opts: &SimOptions,
+    backend: Arc<dyn SessionBackend>,
+) -> RunMetrics {
+    let mut metrics = RunMetrics::default();
+    let factory = cfg.factory();
 
     for epoch in 0..opts.epochs {
         let mut epoch_hits = 0u64;
@@ -244,7 +254,7 @@ pub fn run_workload(cfg: &WorkloadConfig, opts: &SimOptions) -> RunMetrics {
                     RolloutProc {
                         agent: cfg.agent(task_seed, rollout_seed),
                         executor: ToolCallExecutor::new(
-                            Arc::clone(&backend) as Arc<dyn SessionBackend>,
+                            Arc::clone(&backend),
                             task_name.clone(),
                             Arc::clone(&factory),
                             task_seed,
@@ -351,6 +361,9 @@ pub fn run_workload(cfg: &WorkloadConfig, opts: &SimOptions) -> RunMetrics {
 /// Options for the real-thread concurrent driver.
 #[derive(Debug, Clone)]
 pub struct ConcurrentOptions {
+    /// TVCACHE on or off (the paper's with/without comparison; `false`
+    /// runs every rollout through the plain direct-execution path).
+    pub cached: bool,
     pub n_tasks: usize,
     pub rollouts: usize,
     pub epochs: usize,
@@ -382,6 +395,7 @@ pub struct ConcurrentOptions {
 impl ConcurrentOptions {
     pub fn from_config(cfg: &WorkloadConfig, n_tasks: usize) -> ConcurrentOptions {
         ConcurrentOptions {
+            cached: true,
             n_tasks: n_tasks.min(cfg.n_tasks),
             rollouts: cfg.rollouts,
             epochs: cfg.epochs,
@@ -412,6 +426,11 @@ pub struct ConcurrentReport {
     pub wall_secs: f64,
     /// (epoch, hit_rate) series, as in Figure 5.
     pub epoch_hit_rates: Vec<(usize, f64)>,
+    /// Per-rollout rewards in deterministic (epoch, task, rollout) order —
+    /// thread scheduling never reorders them, so two runs with identical
+    /// seeds are comparable element-wise (the Figure 6 invariant under
+    /// fault injection).
+    pub rewards: Vec<f64>,
 }
 
 impl ConcurrentReport {
@@ -439,7 +458,6 @@ impl ConcurrentReport {
 /// rollout interleaving is whatever the scheduler does, exactly as on real
 /// training infrastructure.
 pub fn run_concurrent(cfg: &WorkloadConfig, opts: &ConcurrentOptions) -> ConcurrentReport {
-    let factory = cfg.factory();
     let backend = sharded_backend_with(
         cfg,
         opts.lpm,
@@ -459,28 +477,54 @@ pub fn run_concurrent(cfg: &WorkloadConfig, opts: &ConcurrentOptions) -> Concurr
             "warm-start requested but {dir} did not load"
         );
     }
+    let report =
+        run_concurrent_on(cfg, opts, Arc::clone(&backend) as Arc<dyn SessionBackend>);
+    if let Some(dir) = &opts.persist_to {
+        // Let the background eviction workers finish any in-flight spill
+        // before persisting, so the manifest has a single writer.
+        backend.quiesce();
+        assert!(backend.persist(dir), "persist requested but {dir} was not writable");
+    }
+    report
+}
+
+/// As [`run_concurrent`] but against a caller-supplied backend (a
+/// [`RemoteBinding`](crate::client::RemoteBinding) to a killable server,
+/// a fault-wrapped service, …). Warm-start/persist stay with
+/// [`run_concurrent`], which owns the concrete sharded service.
+pub fn run_concurrent_on(
+    cfg: &WorkloadConfig,
+    opts: &ConcurrentOptions,
+    backend: Arc<dyn SessionBackend>,
+) -> ConcurrentReport {
+    let factory = cfg.factory();
     let pool = ThreadPool::new(opts.threads);
     let mut report = ConcurrentReport::default();
     let t0 = std::time::Instant::now();
 
     for epoch in 0..opts.epochs {
-        let (tx, rx) = mpsc::channel::<(u64, u64, f64)>();
+        let (tx, rx) = mpsc::channel::<(usize, usize, u64, u64, f64, f64)>();
         let mut scheduled = 0usize;
         for task in 0..opts.n_tasks {
             let task_seed = opts.seed ^ (task as u64).wrapping_mul(0x9E37_79B9);
             for r in 0..opts.rollouts {
                 let rollout_seed = (epoch * opts.rollouts + r) as u64;
                 let mut agent = cfg.agent(task_seed, rollout_seed);
-                let backend = Arc::clone(&backend) as Arc<dyn SessionBackend>;
+                let backend = Arc::clone(&backend);
                 let factory = Arc::clone(&factory);
                 let task_name = format!("task-{task}");
-                let exec_cfg = ExecutorConfig {
-                    stateful_filtering: opts.lpm.stateful_filtering,
-                    use_cursor: opts.use_cursor,
-                    batch_turns: opts.batch_turns,
-                    ..ExecutorConfig::default()
+                let exec_cfg = if opts.cached {
+                    ExecutorConfig {
+                        stateful_filtering: opts.lpm.stateful_filtering,
+                        use_cursor: opts.use_cursor,
+                        batch_turns: opts.batch_turns,
+                        ..ExecutorConfig::default()
+                    }
+                } else {
+                    ExecutorConfig::cacheless()
                 };
                 let tx = tx.clone();
+                let reward_cfg = cfg.clone();
                 scheduled += 1;
                 pool.execute(move || {
                     let mut exec = ToolCallExecutor::new(
@@ -494,7 +538,9 @@ pub fn run_concurrent(cfg: &WorkloadConfig, opts: &ConcurrentOptions) -> Concurr
                         trajectory.push((call, outcome.result.output));
                     }
                     tool_time += exec.finish();
-                    let _ = tx.send((exec.hits, exec.misses, tool_time));
+                    let reward =
+                        reward_cfg.reward(task_seed, &trajectory, &agent.final_answer());
+                    let _ = tx.send((task, r, exec.hits, exec.misses, tool_time, reward));
                 });
             }
         }
@@ -502,17 +548,23 @@ pub fn run_concurrent(cfg: &WorkloadConfig, opts: &ConcurrentOptions) -> Concurr
         // Epoch barrier: wait for every rollout before the next epoch.
         let mut epoch_hits = 0u64;
         let mut epoch_misses = 0u64;
-        for (hits, misses, tool_time) in rx.iter() {
+        let mut epoch_rewards: Vec<(usize, usize, f64)> = Vec::with_capacity(scheduled);
+        for (task, rollout, hits, misses, tool_time, reward) in rx.iter() {
             epoch_hits += hits;
             epoch_misses += misses;
             report.tool_time += tool_time;
             report.rollouts_run += 1;
+            epoch_rewards.push((task, rollout, reward));
         }
         assert_eq!(
             report.rollouts_run,
             (epoch + 1) * scheduled,
             "a rollout thread died without reporting"
         );
+        // Arrival order is whatever the scheduler did; re-sort so the
+        // rewards vector is deterministic and comparable across runs.
+        epoch_rewards.sort_by_key(|&(task, rollout, _)| (task, rollout));
+        report.rewards.extend(epoch_rewards.into_iter().map(|(_, _, rw)| rw));
         report.hits += epoch_hits;
         report.misses += epoch_misses;
         let denom = (epoch_hits + epoch_misses).max(1);
@@ -521,12 +573,6 @@ pub fn run_concurrent(cfg: &WorkloadConfig, opts: &ConcurrentOptions) -> Concurr
             .push((epoch, epoch_hits as f64 / denom as f64));
     }
     report.wall_secs = t0.elapsed().as_secs_f64();
-    if let Some(dir) = &opts.persist_to {
-        // Let the background eviction workers finish any in-flight spill
-        // before persisting, so the manifest has a single writer.
-        backend.quiesce();
-        assert!(backend.persist(dir), "persist requested but {dir} was not writable");
-    }
     report
 }
 

@@ -1,0 +1,446 @@
+//! Deterministic, seeded fault injection for the transport and spill seams.
+//!
+//! The cache is an *optimization, never a correctness dependency*: a flaky
+//! or dead cache service must degrade rollouts to plain tool execution, not
+//! stall or corrupt them. This module makes that claim continuously
+//! testable: a [`FaultPlan`] installed via [`install`] arms probabilistic
+//! faults at three seams —
+//!
+//! * the **HTTP transport** ([`connect_error`], [`send_error`],
+//!   [`recv_fault`] on the client; [`server_reply`] in the server's
+//!   connection loop): connection drops, delays past the read deadline,
+//!   partial writes, garbled frames, injected 5xx;
+//! * **spill-tier filesystem I/O** ([`spill_write_error`],
+//!   [`spill_read_fails`]): short writes / ENOSPC on the write path, read
+//!   errors on fault-in;
+//! * **background workers** ([`worker_stall`]): stalled eviction/sweep
+//!   ticks.
+//!
+//! Faults are drawn from one seeded [`Rng`], so a single-threaded driver
+//! replays the exact same fault sequence for a given seed; concurrent
+//! drivers get a reproducible *distribution* (draw order then depends on
+//! thread interleaving). Every injected fault is counted per seam
+//! ([`injected`], [`injected_total`]) and surfaced through
+//! `BackendStats::injected_faults`.
+//!
+//! The hooks are compiled into release builds (the chaos CI job runs the
+//! suite under `--release`) but cost a single relaxed atomic load when no
+//! plan is installed. Installation is process-global, so [`install`] also
+//! serializes: the returned [`FaultScope`] holds a global lock for its
+//! lifetime, which keeps concurrently-running fault tests from arming each
+//! other's faults.
+
+use std::io;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, MutexGuard};
+use std::time::Duration;
+
+use super::rng::Rng;
+
+/// Where a fault was injected (indexes the per-seam counters).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Seam {
+    /// Client `TcpStream::connect` refused/failed.
+    Connect = 0,
+    /// Client-side connection drop while sending the request.
+    ClientSend = 1,
+    /// Client-side drop or garble while receiving the response.
+    ClientRecv = 2,
+    /// Server-side reply fault (drop / partial write / 5xx / garble /
+    /// stall past the client deadline).
+    ServerReply = 3,
+    /// Spill-tier write failure (short write / ENOSPC / torn rename).
+    SpillWrite = 4,
+    /// Spill-tier read failure on fault-in.
+    SpillRead = 5,
+    /// Background eviction/sweep worker tick stalled.
+    WorkerTick = 6,
+}
+
+/// Number of [`Seam`] variants (length of the counter table).
+pub const SEAM_COUNT: usize = 7;
+
+/// Per-seam fault probabilities plus the PRNG seed. All probabilities
+/// default to zero; a test arms only the seams it is exercising.
+#[derive(Debug, Clone)]
+pub struct FaultPlan {
+    /// Seed for the injector's PRNG (fault decisions replay per seed).
+    pub seed: u64,
+    /// P(client connect attempt fails outright).
+    pub p_connect_fail: f64,
+    /// P(connection drops while the client writes the request).
+    pub p_send_drop: f64,
+    /// P(connection drops while the client reads the response).
+    pub p_recv_drop: f64,
+    /// P(the received response body is corrupted in flight).
+    pub p_recv_garble: f64,
+    /// P(server closes the connection without replying).
+    pub p_server_drop: f64,
+    /// P(server writes only part of the response, then closes).
+    pub p_server_partial: f64,
+    /// P(server answers 500 instead of the real response).
+    pub p_server_500: f64,
+    /// P(server corrupts the response body).
+    pub p_server_garble: f64,
+    /// P(server stalls for [`FaultPlan::server_stall`] before replying —
+    /// push this past the client read deadline to exercise timeouts).
+    pub p_server_stall: f64,
+    /// How long a stalled server reply sleeps.
+    pub server_stall: Duration,
+    /// P(a spill-tier payload/manifest write fails — simulated ENOSPC).
+    pub p_spill_write_fail: f64,
+    /// P(a spill-tier payload read fails on fault-in).
+    pub p_spill_read_fail: f64,
+    /// P(a background worker tick stalls for [`FaultPlan::worker_stall`]).
+    pub p_worker_stall: f64,
+    /// How long a stalled worker tick sleeps.
+    pub worker_stall: Duration,
+    /// Restrict injection to the installing thread. Lib unit tests set
+    /// this so a scope can never leak faults into unrelated tests running
+    /// concurrently in the same process; the dedicated fault-injection
+    /// integration binary leaves it `false` because server pool threads
+    /// and background workers must see the faults too (there, every test
+    /// installs a scope, which serializes the whole binary).
+    pub thread_scoped: bool,
+}
+
+impl FaultPlan {
+    /// A plan with every probability at zero (arm seams field-by-field).
+    pub fn quiet(seed: u64) -> FaultPlan {
+        FaultPlan {
+            seed,
+            p_connect_fail: 0.0,
+            p_send_drop: 0.0,
+            p_recv_drop: 0.0,
+            p_recv_garble: 0.0,
+            p_server_drop: 0.0,
+            p_server_partial: 0.0,
+            p_server_500: 0.0,
+            p_server_garble: 0.0,
+            p_server_stall: 0.0,
+            server_stall: Duration::from_millis(100),
+            p_spill_write_fail: 0.0,
+            p_spill_read_fail: 0.0,
+            p_worker_stall: 0.0,
+            worker_stall: Duration::from_millis(50),
+            thread_scoped: false,
+        }
+    }
+
+    /// Like [`FaultPlan::quiet`], but injection is limited to the calling
+    /// thread — safe to arm inside concurrently-running unit tests.
+    pub fn quiet_local(seed: u64) -> FaultPlan {
+        FaultPlan { thread_scoped: true, ..FaultPlan::quiet(seed) }
+    }
+}
+
+impl Default for FaultPlan {
+    fn default() -> FaultPlan {
+        FaultPlan::quiet(0)
+    }
+}
+
+/// What a server-side reply fault does to the response.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ServerFault {
+    /// Close the connection without writing anything.
+    Drop,
+    /// Write the head and a truncated body, then close.
+    Partial,
+    /// Replace the response with a 500.
+    Error500,
+    /// Corrupt the response body bytes.
+    Garble,
+    /// Sleep before replying (exceeds the client deadline when armed so).
+    Stall(Duration),
+}
+
+struct FaultState {
+    plan: FaultPlan,
+    rng: Rng,
+    owner: std::thread::ThreadId,
+}
+
+/// Fast-path gate: a single relaxed load when no plan is installed.
+static ACTIVE: AtomicBool = AtomicBool::new(false);
+static STATE: Mutex<Option<FaultState>> = Mutex::new(None);
+/// Serializes fault-test scopes process-wide (held by [`FaultScope`]).
+static SCOPE: Mutex<()> = Mutex::new(());
+/// Cumulative per-seam injection counts; monotonic for the process
+/// lifetime so statistics never run backwards between scopes.
+static COUNTS: [AtomicU64; SEAM_COUNT] = [
+    AtomicU64::new(0),
+    AtomicU64::new(0),
+    AtomicU64::new(0),
+    AtomicU64::new(0),
+    AtomicU64::new(0),
+    AtomicU64::new(0),
+    AtomicU64::new(0),
+];
+
+/// Active fault installation; dropping it disarms every seam. Holds the
+/// process-global scope lock, so concurrent fault tests serialize instead
+/// of arming each other's faults.
+pub struct FaultScope {
+    _serial: MutexGuard<'static, ()>,
+}
+
+impl Drop for FaultScope {
+    fn drop(&mut self) {
+        ACTIVE.store(false, Ordering::SeqCst);
+        *lock_state() = None;
+    }
+}
+
+fn lock_state() -> MutexGuard<'static, Option<FaultState>> {
+    // A panic inside a fault test poisons at worst a consistent state.
+    STATE.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Arm `plan` process-wide until the returned scope drops.
+pub fn install(plan: FaultPlan) -> FaultScope {
+    let serial = SCOPE.lock().unwrap_or_else(|e| e.into_inner());
+    let rng = Rng::new(plan.seed ^ 0xFA17_FA17_FA17_FA17);
+    let owner = std::thread::current().id();
+    *lock_state() = Some(FaultState { plan, rng, owner });
+    ACTIVE.store(true, Ordering::SeqCst);
+    FaultScope { _serial: serial }
+}
+
+/// Is any fault plan currently installed?
+pub fn active() -> bool {
+    ACTIVE.load(Ordering::Relaxed)
+}
+
+/// Injected-fault count for one seam (cumulative for the process).
+pub fn injected(seam: Seam) -> u64 {
+    COUNTS[seam as usize].load(Ordering::Relaxed)
+}
+
+/// Total injected faults across all seams (cumulative for the process).
+pub fn injected_total() -> u64 {
+    COUNTS.iter().map(|c| c.load(Ordering::Relaxed)).sum()
+}
+
+fn note(seam: Seam) {
+    COUNTS[seam as usize].fetch_add(1, Ordering::Relaxed);
+}
+
+/// Run `f` against the installed plan, if any. Probability rolls happen
+/// under the state lock so the draw sequence is seed-deterministic.
+fn with_plan<T>(f: impl FnOnce(&FaultPlan, &mut Rng) -> Option<T>) -> Option<T> {
+    if !ACTIVE.load(Ordering::Relaxed) {
+        return None;
+    }
+    let mut guard = lock_state();
+    let state = guard.as_mut()?;
+    if state.plan.thread_scoped && std::thread::current().id() != state.owner {
+        return None;
+    }
+    f(&state.plan, &mut state.rng)
+}
+
+fn roll(rng: &mut Rng, p: f64) -> bool {
+    p > 0.0 && rng.f64() < p
+}
+
+/// Client connect seam: `Some(err)` aborts the dial.
+pub fn connect_error() -> Option<io::Error> {
+    with_plan(|plan, rng| roll(rng, plan.p_connect_fail).then_some(()))?;
+    note(Seam::Connect);
+    Some(io::Error::new(
+        io::ErrorKind::ConnectionRefused,
+        "injected connect failure",
+    ))
+}
+
+/// Client send seam: `Some(err)` simulates the connection dropping before
+/// the request is written.
+pub fn send_error() -> Option<io::Error> {
+    with_plan(|plan, rng| roll(rng, plan.p_send_drop).then_some(()))?;
+    note(Seam::ClientSend);
+    Some(io::Error::new(
+        io::ErrorKind::ConnectionReset,
+        "injected send drop",
+    ))
+}
+
+/// Client receive seam, applied to a fully-read response body: may drop
+/// the connection (`Err`) or garble the body in place.
+pub fn recv_fault(body: &mut [u8]) -> io::Result<()> {
+    enum RecvFault {
+        Drop,
+        Garble,
+    }
+    let fault = with_plan(|plan, rng| {
+        if roll(rng, plan.p_recv_drop) {
+            Some(RecvFault::Drop)
+        } else if roll(rng, plan.p_recv_garble) {
+            Some(RecvFault::Garble)
+        } else {
+            None
+        }
+    });
+    match fault {
+        Some(RecvFault::Drop) => {
+            note(Seam::ClientRecv);
+            Err(io::Error::new(
+                io::ErrorKind::ConnectionReset,
+                "injected recv drop",
+            ))
+        }
+        Some(RecvFault::Garble) => {
+            note(Seam::ClientRecv);
+            garble(body);
+            Ok(())
+        }
+        None => Ok(()),
+    }
+}
+
+/// Server reply seam: the connection loop applies the returned fault to
+/// the response it was about to write.
+pub fn server_reply() -> Option<ServerFault> {
+    let fault = with_plan(|plan, rng| {
+        if roll(rng, plan.p_server_drop) {
+            Some(ServerFault::Drop)
+        } else if roll(rng, plan.p_server_partial) {
+            Some(ServerFault::Partial)
+        } else if roll(rng, plan.p_server_500) {
+            Some(ServerFault::Error500)
+        } else if roll(rng, plan.p_server_garble) {
+            Some(ServerFault::Garble)
+        } else if roll(rng, plan.p_server_stall) {
+            Some(ServerFault::Stall(plan.server_stall))
+        } else {
+            None
+        }
+    })?;
+    note(Seam::ServerReply);
+    Some(fault)
+}
+
+/// Spill write seam: `Some(err)` fails the payload/manifest write (the
+/// store treats it exactly like a real ENOSPC).
+pub fn spill_write_error() -> Option<io::Error> {
+    with_plan(|plan, rng| roll(rng, plan.p_spill_write_fail).then_some(()))?;
+    note(Seam::SpillWrite);
+    Some(io::Error::other("injected spill write failure (ENOSPC)"))
+}
+
+/// Spill read seam: `true` fails this fault-in (degrades to replay).
+pub fn spill_read_fails() -> bool {
+    if with_plan(|plan, rng| roll(rng, plan.p_spill_read_fail).then_some(())).is_some() {
+        note(Seam::SpillRead);
+        return true;
+    }
+    false
+}
+
+/// Worker tick seam: `Some(d)` stalls this background tick for `d`.
+pub fn worker_stall() -> Option<Duration> {
+    let d = with_plan(|plan, rng| roll(rng, plan.p_worker_stall).then_some(plan.worker_stall))?;
+    note(Seam::WorkerTick);
+    Some(d)
+}
+
+/// Deterministic body corruption: enough to break any framed decode while
+/// keeping the transport-visible length unchanged.
+pub fn garble(body: &mut [u8]) {
+    if body.is_empty() {
+        return;
+    }
+    let last = body.len() - 1;
+    body[0] ^= 0xA5;
+    body[last / 2] ^= 0x5A;
+    body[last] = body[last].wrapping_add(0x77);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // NOTE: these tests avoid asserting on `active()` outside a held
+    // scope — a sibling test may hold one concurrently. All plans here
+    // are thread-scoped, so sibling scopes can never inject into us.
+
+    #[test]
+    fn disabled_injector_is_inert() {
+        assert!(connect_error().is_none());
+        assert!(send_error().is_none());
+        assert!(server_reply().is_none());
+        assert!(spill_write_error().is_none());
+        assert!(!spill_read_fails());
+        assert!(worker_stall().is_none());
+        let mut body = vec![1, 2, 3];
+        assert!(recv_fault(&mut body).is_ok());
+        assert_eq!(body, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn scoped_install_arms_and_disarms() {
+        {
+            let mut plan = FaultPlan::quiet_local(7);
+            plan.p_connect_fail = 1.0;
+            let _scope = install(plan);
+            assert!(active());
+            let before = injected(Seam::Connect);
+            assert!(connect_error().is_some());
+            assert_eq!(injected(Seam::Connect), before + 1);
+        }
+        assert!(connect_error().is_none());
+    }
+
+    #[test]
+    fn fault_sequence_replays_per_seed() {
+        let drive = |seed: u64| -> Vec<bool> {
+            let mut plan = FaultPlan::quiet_local(seed);
+            plan.p_recv_drop = 0.5;
+            let _scope = install(plan);
+            (0..64)
+                .map(|_| {
+                    let mut body = vec![0u8; 4];
+                    recv_fault(&mut body).is_err()
+                })
+                .collect()
+        };
+        let a = drive(42);
+        let b = drive(42);
+        let c = drive(43);
+        assert_eq!(a, b, "same seed must replay the same fault sequence");
+        assert_ne!(a, c, "different seeds must explore different sequences");
+        assert!(a.iter().any(|&x| x) && !a.iter().all(|&x| x));
+    }
+
+    #[test]
+    fn garble_always_changes_nonempty_bodies() {
+        for n in 1..16 {
+            let body: Vec<u8> = (0..n).collect();
+            let mut garbled = body.clone();
+            garble(&mut garbled);
+            assert_eq!(garbled.len(), body.len());
+            assert_ne!(garbled, body, "len {n}");
+        }
+        let mut empty: Vec<u8> = Vec::new();
+        garble(&mut empty);
+        assert!(empty.is_empty());
+    }
+
+    #[test]
+    fn server_fault_kinds_all_reachable() {
+        let mut seen_500 = false;
+        let mut seen_drop = false;
+        let mut plan = FaultPlan::quiet_local(9);
+        plan.p_server_drop = 0.3;
+        plan.p_server_500 = 0.3;
+        let _scope = install(plan);
+        for _ in 0..256 {
+            match server_reply() {
+                Some(ServerFault::Drop) => seen_drop = true,
+                Some(ServerFault::Error500) => seen_500 = true,
+                _ => {}
+            }
+        }
+        assert!(seen_drop && seen_500);
+    }
+}

@@ -13,7 +13,15 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
+use super::fault;
 use super::threadpool::ThreadPool;
+
+/// Default client connect deadline: localhost dials either succeed or get
+/// ECONNREFUSED within microseconds, so 2 s only matters when the peer is
+/// genuinely unreachable (blackholed route, dead host).
+pub const DEFAULT_CONNECT_TIMEOUT: Duration = Duration::from_secs(2);
+/// Default client read deadline per response.
+pub const DEFAULT_READ_TIMEOUT: Duration = Duration::from_secs(30);
 
 /// A parsed HTTP request.
 #[derive(Debug, Clone)]
@@ -184,7 +192,23 @@ fn serve_connection(stream: TcpStream, handler: Handler) {
             .get("connection")
             .map(|v| !v.eq_ignore_ascii_case("close"))
             .unwrap_or(true);
-        let resp = handler(&req);
+        let mut resp = handler(&req);
+        // Fault-injection seam: the handler has fully run (state mutations
+        // committed), but the reply may be dropped, truncated, replaced
+        // with a 5xx, corrupted, or stalled past the client deadline.
+        match fault::server_reply() {
+            Some(fault::ServerFault::Drop) => return,
+            Some(fault::ServerFault::Partial) => {
+                let _ = write_partial_response(&mut writer, &resp);
+                return;
+            }
+            Some(fault::ServerFault::Error500) => {
+                resp = Response::text_static(500, "injected server error");
+            }
+            Some(fault::ServerFault::Garble) => fault::garble(resp.body.to_mut()),
+            Some(fault::ServerFault::Stall(d)) => std::thread::sleep(d),
+            None => {}
+        }
         if write_response(&mut writer, &resp, keep_alive).is_err() || !keep_alive {
             return;
         }
@@ -308,25 +332,59 @@ fn write_response(w: &mut TcpStream, resp: &Response, keep_alive: bool) -> std::
     w.flush()
 }
 
+/// Injected-fault variant of [`write_response`]: advertise the full
+/// `Content-Length` but write only half the body, then close — the client
+/// observes an `UnexpectedEof` mid-body.
+fn write_partial_response(w: &mut TcpStream, resp: &Response) -> std::io::Result<()> {
+    let head = format!(
+        "HTTP/1.1 {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        resp.status_line(),
+        resp.content_type,
+        resp.body.len().max(2),
+    );
+    w.write_all(head.as_bytes())?;
+    w.write_all(&resp.body[..resp.body.len() / 2])?;
+    w.flush()
+}
+
 /// A blocking HTTP client with a persistent (keep-alive) connection. The
 /// request-head buffer is reused across requests, so the steady-state
 /// request path allocates nothing beyond what the caller's body needs.
+///
+/// Every request is bounded: dials use `TcpStream::connect_timeout` and
+/// reads carry a socket read deadline, so a hung or blackholed server can
+/// never block a caller indefinitely — the worst case is one deadline per
+/// attempt, after which the caller sees an `io::Error` and degrades.
 pub struct HttpClient {
     addr: SocketAddr,
     conn: Option<BufReader<TcpStream>>,
     head: String,
+    connect_timeout: Duration,
+    read_timeout: Duration,
 }
 
 impl HttpClient {
     pub fn connect(addr: SocketAddr) -> HttpClient {
-        HttpClient { addr, conn: None, head: String::new() }
+        Self::with_deadlines(addr, DEFAULT_CONNECT_TIMEOUT, DEFAULT_READ_TIMEOUT)
+    }
+
+    /// Connect with explicit per-request connect/read deadlines.
+    pub fn with_deadlines(
+        addr: SocketAddr,
+        connect_timeout: Duration,
+        read_timeout: Duration,
+    ) -> HttpClient {
+        HttpClient { addr, conn: None, head: String::new(), connect_timeout, read_timeout }
     }
 
     fn ensure(&mut self) -> std::io::Result<&mut BufReader<TcpStream>> {
         if self.conn.is_none() {
-            let stream = TcpStream::connect(self.addr)?;
+            if let Some(e) = fault::connect_error() {
+                return Err(e);
+            }
+            let stream = TcpStream::connect_timeout(&self.addr, self.connect_timeout)?;
             stream.set_nodelay(true)?;
-            stream.set_read_timeout(Some(Duration::from_secs(30)))?;
+            stream.set_read_timeout(Some(self.read_timeout))?;
             self.conn = Some(BufReader::new(stream));
         }
         Ok(self.conn.as_mut().unwrap())
@@ -380,6 +438,10 @@ impl HttpClient {
         head: &str,
         body: &[u8],
     ) -> std::io::Result<(u16, Vec<u8>)> {
+        if let Some(e) = fault::send_error() {
+            self.conn = None;
+            return Err(e);
+        }
         let reader = self.ensure()?;
         {
             let stream = reader.get_mut();
@@ -417,6 +479,10 @@ impl HttpClient {
         }
         let mut body = vec![0u8; len];
         reader.read_exact(&mut body)?;
+        if let Err(e) = fault::recv_fault(&mut body) {
+            self.conn = None;
+            return Err(e);
+        }
         if close {
             self.conn = None;
         }

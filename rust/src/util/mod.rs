@@ -3,6 +3,7 @@
 //! clap / rand / criterion), so TVCACHE builds its own — see DESIGN.md §4.
 
 pub mod cli;
+pub mod fault;
 pub mod hist;
 pub mod http;
 pub mod json;

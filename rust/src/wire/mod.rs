@@ -24,10 +24,16 @@
 //! * a [`ToolResult`] is `output, exec_time(f64), api_tokens(varint)`.
 //!
 //! Responses are binary only on binary requests (no magic byte — content
-//! is negotiated by the request). The cold admin endpoints (`/stats`,
-//! `/persist`, `/warm_start`, `/viz`, `/snapshot`) stay JSON: they run
-//! once per epoch or per incident, and human-debuggable output there is
-//! worth more than bytes.
+//! is negotiated by the request), and every binary response carries a
+//! trailing FNV-1a-32 checksum ([`seal_resp`], verified and stripped by
+//! [`Reader::response`]): a frame corrupted in flight fails the checksum
+//! and degrades to a miss/fallback at the client instead of decoding to a
+//! plausible-but-wrong value (varints have no redundancy of their own — a
+//! bit-flipped node-id frame would otherwise decode cleanly to a different
+//! node). The cold admin endpoints (`/stats`, `/persist`, `/warm_start`,
+//! `/viz`, `/snapshot`) stay JSON: they run once per epoch or per
+//! incident, human-debuggable output there is worth more than bytes, and
+//! a JSON object truncated or corrupted in flight fails to parse.
 
 use crate::cache::backend::{Capabilities, TurnBatch, TurnOp, TurnReply};
 use crate::cache::key::{ToolCall, ToolResult};
@@ -46,6 +52,26 @@ const TAG_INVALID: u8 = 2;
 /// Does this request body use the binary codec?
 pub fn is_binary(body: &[u8]) -> bool {
     body.first() == Some(&MAGIC)
+}
+
+/// FNV-1a over a frame body (32-bit: 4 bytes of trailer buys a ~2⁻³² false
+/// accept on corrupted frames, which is beyond what the fault harness can
+/// hit).
+fn fnv1a32(bytes: &[u8]) -> u32 {
+    let mut h: u32 = 0x811C_9DC5;
+    for &b in bytes {
+        h ^= b as u32;
+        h = h.wrapping_mul(0x0100_0193);
+    }
+    h
+}
+
+/// Seal a complete binary *response* frame: append the FNV-1a-32 of the
+/// bytes written so far. Every top-level `enc_*_resp` ends with this;
+/// [`Reader::response`] is the matching verifier.
+pub fn seal_resp(buf: &mut Vec<u8>) {
+    let sum = fnv1a32(buf);
+    buf.extend_from_slice(&sum.to_le_bytes());
 }
 
 // ---- primitive writers -------------------------------------------------
@@ -102,9 +128,16 @@ impl<'a> Reader<'a> {
         }
     }
 
-    /// Open a *response* frame (no magic byte).
+    /// Open a *response* frame (no magic byte): verifies and strips the
+    /// trailing [`seal_resp`] checksum. A truncated or corrupted frame
+    /// fails here, so response decoders only ever see intact bytes.
     pub fn response(body: &'a [u8]) -> Option<Reader<'a>> {
-        Some(Reader { b: body })
+        if body.len() < 4 {
+            return None;
+        }
+        let (payload, trailer) = body.split_at(body.len() - 4);
+        let want = u32::from_le_bytes([trailer[0], trailer[1], trailer[2], trailer[3]]);
+        (fnv1a32(payload) == want).then_some(Reader { b: payload })
     }
 
     pub fn u8(&mut self) -> Option<u8> {
@@ -283,6 +316,7 @@ pub fn enc_caps_resp(buf: &mut Vec<u8>, proto: u64, caps: &Capabilities) {
         | ((caps.turn_batch as u8) << 2)
         | ((caps.payload_dedup as u8) << 3);
     buf.push(flags);
+    seal_resp(buf);
 }
 
 pub fn dec_caps_resp(body: &[u8]) -> Option<(u64, Capabilities)> {
@@ -366,7 +400,7 @@ pub fn enc_turn_resp(buf: &mut Vec<u8>, reply: &TurnReply) {
     match (&reply.step, &reply.recorded) {
         (Some(step), _) => {
             buf.push(OP_STEP);
-            enc_step_resp(buf, step);
+            put_step(buf, step);
         }
         (None, Some(node)) => {
             buf.push(OP_RECORD);
@@ -374,6 +408,7 @@ pub fn enc_turn_resp(buf: &mut Vec<u8>, reply: &TurnReply) {
         }
         (None, None) => buf.push(OP_NONE),
     }
+    seal_resp(buf);
 }
 
 pub fn dec_turn_resp(body: &[u8]) -> Option<TurnReply> {
@@ -452,6 +487,7 @@ pub fn enc_lookup_resp(buf: &mut Vec<u8>, out: &Lookup) {
         }
         Lookup::Miss(m) => put_miss(buf, m),
     }
+    seal_resp(buf);
 }
 
 pub fn dec_lookup_resp(body: &[u8]) -> Option<Lookup> {
@@ -464,8 +500,9 @@ pub fn dec_lookup_resp(body: &[u8]) -> Option<Lookup> {
     r.done().then_some(out)
 }
 
-/// Cursor-step response: a lookup frame plus the `2` (invalid) tag.
-pub fn enc_step_resp(buf: &mut Vec<u8>, out: &CursorStep) {
+/// Write one step-outcome frame body (unsealed: shared by `/cursor_step`
+/// responses and the step slot of a turn response).
+fn put_step(buf: &mut Vec<u8>, out: &CursorStep) {
     match out {
         CursorStep::Hit { node, result } => {
             buf.push(TAG_HIT);
@@ -475,6 +512,12 @@ pub fn enc_step_resp(buf: &mut Vec<u8>, out: &CursorStep) {
         CursorStep::Miss(m) => put_miss(buf, m),
         CursorStep::Invalid => buf.push(TAG_INVALID),
     }
+}
+
+/// Cursor-step response: a lookup frame plus the `2` (invalid) tag.
+pub fn enc_step_resp(buf: &mut Vec<u8>, out: &CursorStep) {
+    put_step(buf, out);
+    seal_resp(buf);
 }
 
 /// Read one step-outcome frame body (shared by `/cursor_step` responses
@@ -497,6 +540,7 @@ pub fn dec_step_resp(body: &[u8]) -> Option<CursorStep> {
 /// Node-id response (`/put`, `/cursor_record`, `/cursor_open`'s cursor id).
 pub fn enc_u64_resp(buf: &mut Vec<u8>, v: u64) {
     put_varint(buf, v);
+    seal_resp(buf);
 }
 
 pub fn dec_u64_resp(body: &[u8]) -> Option<u64> {
@@ -508,6 +552,7 @@ pub fn dec_u64_resp(body: &[u8]) -> Option<u64> {
 /// Boolean response (`/cursor_seek`).
 pub fn enc_bool_resp(buf: &mut Vec<u8>, ok: bool) {
     buf.push(ok as u8);
+    seal_resp(buf);
 }
 
 pub fn dec_bool_resp(body: &[u8]) -> Option<bool> {
@@ -533,6 +578,7 @@ mod tests {
         for v in [0u64, 1, 127, 128, 300, u32::MAX as u64, u64::MAX] {
             let mut buf = Vec::new();
             put_varint(&mut buf, v);
+            seal_resp(&mut buf);
             let mut r = Reader::response(&buf).unwrap();
             assert_eq!(r.varint(), Some(v));
             assert!(r.done());
@@ -652,6 +698,30 @@ mod tests {
         enc_bool_resp(&mut buf, true);
         buf.push(0);
         assert_eq!(dec_bool_resp(&buf), None);
+    }
+
+    #[test]
+    fn garbled_sealed_responses_never_decode() {
+        // A bare varint frame would absorb the fault harness's bit flips
+        // and decode to a *different valid node id*; the seal must turn
+        // every such corruption into a decode failure.
+        for v in [0u64, 1, 5, 127, 128, 300, 99_999] {
+            let mut buf = Vec::new();
+            enc_u64_resp(&mut buf, v);
+            crate::util::fault::garble(&mut buf);
+            assert_eq!(dec_u64_resp(&buf), None, "node id {v}");
+        }
+        for ok in [false, true] {
+            let mut buf = Vec::new();
+            enc_bool_resp(&mut buf, ok);
+            crate::util::fault::garble(&mut buf);
+            assert_eq!(dec_bool_resp(&buf), None, "bool {ok}");
+        }
+        let hit = Lookup::Hit { node: 7, result: ToolResult::new("12 passed", 1.0) };
+        let mut buf = Vec::new();
+        enc_lookup_resp(&mut buf, &hit);
+        crate::util::fault::garble(&mut buf);
+        assert_eq!(dec_lookup_resp(&buf), None, "garbled hit must not decode");
     }
 
     fn turn_batches() -> Vec<TurnBatch> {

@@ -53,7 +53,9 @@ fn sharded_service_stress_8x1000_mixed_ops() {
                     match i % 3 {
                         0 => {
                             // Insert a trajectory, occasionally snapshot it.
-                            let node = svc.insert(&task, &traj(&calls));
+                            let node = svc
+                                .insert(&task, &traj(&calls))
+                                .expect("in-process insert cannot fail");
                             if i % 9 == 0 {
                                 let snap = SandboxSnapshot {
                                     bytes: vec![t as u8; 32],

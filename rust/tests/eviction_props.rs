@@ -176,7 +176,7 @@ fn populated_spill_service(
                     )
                 })
                 .collect();
-            let node = svc.insert(&task, &traj);
+            let node = svc.insert(&task, &traj).expect("in-process insert cannot fail");
             if node != ROOT && rng.chance(0.8) {
                 svc.store_snapshot(&task, node, snap_bytes(100));
             }
@@ -317,7 +317,7 @@ fn cursor_survives_spill_and_matches_full_lookup() {
         .iter()
         .map(|c| (c.clone(), ToolResult::new(format!("r-{}", c.args), 2.0)))
         .collect();
-    let node = svc.insert("t", &traj);
+    let node = svc.insert("t", &traj).expect("in-process insert cannot fail");
     assert!(svc.store_snapshot("t", node, snap_bytes(100)) > 0);
 
     let cur = svc.cursor_open("t");
@@ -421,7 +421,8 @@ fn stress_cursors_under_background_eviction_and_removal() {
                         .iter()
                         .map(|c| (c.clone(), ToolResult::new("r", 2.0)))
                         .collect();
-                    let node = svc.insert(&task, &traj);
+                    let node =
+                        svc.insert(&task, &traj).expect("in-process insert cannot fail");
                     if i % 2 == 0 {
                         svc.store_snapshot(&task, node, snap_bytes(100));
                     }
@@ -436,9 +437,10 @@ fn stress_cursors_under_background_eviction_and_removal() {
                                 if let Some((rnode, _, _)) = m.resume {
                                     svc.release(&task, rnode);
                                 }
-                                if svc.cursor_record(&task, cur, c, &ToolResult::new("r", 2.0))
-                                    == 0
-                                {
+                                let recorded = svc
+                                    .cursor_record(&task, cur, c, &ToolResult::new("r", 2.0))
+                                    .unwrap_or(0);
+                                if recorded == 0 {
                                     break; // invalidated mid-walk: a real
                                            // executor would fall back
                                 }
@@ -503,7 +505,7 @@ fn prop_shared_payload_respects_pins_across_tasks() {
             let traj: Vec<(ToolCall, ToolResult)> = (0..2)
                 .map(|d| (call(format!("s{content}-{d}")), ToolResult::new("r", 2.0)))
                 .collect();
-            let node = svc.insert(&task, &traj);
+            let node = svc.insert(&task, &traj).expect("in-process insert cannot fail");
             let snap = SandboxSnapshot {
                 bytes: vec![content; 100],
                 serialize_cost: 0.1,
@@ -576,7 +578,8 @@ fn stress_shared_payload_insert_evict_fault_churn() {
                             (call(format!("s{content}-{d}")), ToolResult::new("r", 2.0))
                         })
                         .collect();
-                    let node = svc.insert(&task, &traj);
+                    let node =
+                        svc.insert(&task, &traj).expect("in-process insert cannot fail");
                     let snap = SandboxSnapshot {
                         bytes: vec![content; 100],
                         serialize_cost: 0.1,
@@ -655,7 +658,8 @@ fn stress_background_eviction_never_frees_pinned() {
                         .iter()
                         .map(|c| (call(c.clone()), ToolResult::new("r", 2.0)))
                         .collect();
-                    let node = svc.insert(&task, &traj);
+                    let node =
+                        svc.insert(&task, &traj).expect("in-process insert cannot fail");
                     if i % 2 == 0 {
                         svc.store_snapshot(&task, node, snap_bytes(100));
                     }

@@ -1,0 +1,642 @@
+//! Deterministic fault-injection regression suite (the chaos CI job runs
+//! this binary in release mode across several `TVCACHE_FAULT_SEED`s).
+//!
+//! Every test that performs I/O installs a [`fault::FaultScope`] — even a
+//! quiet one — because installation holds a process-global lock: fault
+//! tests serialize instead of arming each other's seams. The suite proves
+//! the cache-as-optimization invariant end to end: each degradation ladder
+//! on both the in-process `ShardedCacheService` and the HTTP
+//! `RemoteBinding`, breaker trip + recovery, spill resident-only mode, and
+//! — the acceptance bar — rollout rewards under a faulty or dead backend
+//! identical to a cacheless run.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use tvcache::cache::{
+    BackendStats, CacheBackend, CacheStats, Capabilities, CursorStep, Lookup, Miss, NodeId,
+    ServiceConfig, SessionBackend, ShardedCacheService, SnapshotCosts, TaskCache, ToolCall,
+    ToolResult, TurnBatch, TurnReply,
+};
+use tvcache::client::{BindingConfig, RemoteBinding};
+use tvcache::sandbox::SandboxSnapshot;
+use tvcache::server::{serve, serve_service};
+use tvcache::train::{
+    run_concurrent, run_concurrent_on, run_workload, run_workload_on, ConcurrentOptions,
+    SimOptions,
+};
+use tvcache::util::fault;
+use tvcache::util::http::HttpClient;
+use tvcache::workloads::{Workload, WorkloadConfig};
+
+fn bash(cmd: &str) -> ToolCall {
+    ToolCall::with_flag("bash", cmd, true)
+}
+
+fn traj(cmds: &[&str]) -> Vec<(ToolCall, ToolResult)> {
+    cmds.iter().map(|c| (bash(c), ToolResult::new(format!("out-{c}"), 3.0))).collect()
+}
+
+fn snap(fill: u8, n: usize) -> SandboxSnapshot {
+    SandboxSnapshot { bytes: vec![fill; n], serialize_cost: 0.1, restore_cost: 0.2 }
+}
+
+/// A binding config with short deadlines and a breaker that cannot
+/// half-open mid-test (recovery is exercised explicitly where wanted).
+fn fast_cfg() -> BindingConfig {
+    BindingConfig {
+        connect_timeout: Duration::from_millis(500),
+        read_timeout: Duration::from_secs(2),
+        retries: 1,
+        backoff_base: Duration::from_millis(1),
+        backoff_max: Duration::from_millis(4),
+        breaker_threshold: 1000,
+        breaker_cooldown: Duration::from_secs(60),
+        seed: 0x5EED,
+    }
+}
+
+fn tmpdir(tag: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!("tvcache-faults-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+// ───────────────────────── transport seam ladders ──────────────────────────
+
+/// Client-side transport faults (connection drops while sending): every
+/// remote op degrades along its documented ladder — lookup to a full miss,
+/// insert/record to the `None` failure sentinel — and the injection is
+/// visible in the seam counters.
+#[test]
+fn client_transport_faults_degrade_to_miss_and_none() {
+    let (server, _svc) = serve("127.0.0.1:0", 2).unwrap();
+    let binding = RemoteBinding::connect_with(server.addr(), fast_cfg());
+    // Healthy first: the warm entry the faulty lookups must NOT corrupt.
+    let node = binding.insert("ft", &traj(&["make"])).expect("healthy insert");
+    assert!(node > 0);
+    assert!(binding.lookup("ft", &[bash("make")]).is_hit());
+
+    let sends_before = fault::injected(fault::Seam::ClientSend);
+    {
+        let mut plan = fault::FaultPlan::quiet(11);
+        plan.p_send_drop = 1.0;
+        let _scope = fault::install(plan);
+        match binding.lookup("ft", &[bash("make")]) {
+            Lookup::Miss(m) => {
+                assert_eq!(m.matched_calls, 0, "degraded lookup must be a full miss");
+                assert!(m.resume.is_none());
+            }
+            h => panic!("transport fault must degrade to a miss, got {h:?}"),
+        }
+        assert_eq!(binding.insert("ft", &traj(&["make", "x"])), None);
+        assert_eq!(
+            binding.cursor_record("ft", 1, &bash("y"), &ToolResult::new("r", 1.0)),
+            None
+        );
+        assert!(fault::injected(fault::Seam::ClientSend) > sends_before);
+    }
+    // Disarmed: the warm entry still hits — degradation never corrupted it.
+    assert!(binding.lookup("ft", &[bash("make")]).is_hit());
+}
+
+/// Server-side reply faults that still produce *an* HTTP answer (500s,
+/// garbled bodies) degrade every op without tripping the breaker: the
+/// server is alive, just unwell, and cutting it off would turn a partial
+/// outage into a total one.
+#[test]
+fn server_reply_faults_degrade_without_tripping_breaker() {
+    let (server, _svc) = serve("127.0.0.1:0", 2).unwrap();
+    let binding = RemoteBinding::connect_with(server.addr(), fast_cfg());
+    binding.insert("sf", &traj(&["make"])).expect("healthy insert");
+    {
+        let mut plan = fault::FaultPlan::quiet(12);
+        plan.p_server_500 = 1.0;
+        let _scope = fault::install(plan);
+        assert!(!binding.lookup("sf", &[bash("make")]).is_hit());
+        assert_eq!(binding.insert("sf", &traj(&["make", "t"])), None);
+        // A 5xx is transient, not a protocol downgrade: LEGACY now…
+        assert_eq!(binding.capabilities(), Capabilities::LEGACY);
+        assert_eq!(binding.breaker_state(), "closed");
+    }
+    // …and a clean re-probe (plus full protocol) once the server recovers.
+    assert_eq!(binding.capabilities(), Capabilities::V2);
+    assert!(binding.lookup("sf", &[bash("make")]).is_hit());
+}
+
+/// Garbled response frames (bit flips in flight) are indistinguishable
+/// from a miss to the caller — never a panic, never a bogus hit.
+#[test]
+fn garbled_frames_degrade_to_miss_not_panic() {
+    let (server, _svc) = serve("127.0.0.1:0", 2).unwrap();
+    let binding = RemoteBinding::connect_with(server.addr(), fast_cfg());
+    binding.insert("gf", &traj(&["make"])).expect("healthy insert");
+    let mut plan = fault::FaultPlan::quiet(13);
+    plan.p_recv_garble = 1.0;
+    let _scope = fault::install(plan);
+    for _ in 0..16 {
+        assert!(!binding.lookup("gf", &[bash("make")]).is_hit());
+        assert_eq!(binding.insert("gf", &traj(&["make", "q"])), None);
+    }
+    assert!(fault::injected(fault::Seam::ClientRecv) >= 32);
+}
+
+/// The failure sentinel is not the ROOT sentinel: a *transport* failure
+/// records as `None`, while a server that definitively answered "that
+/// record failed" (unknown cursor) travels the wire as 0.
+#[test]
+fn record_failure_sentinel_distinct_from_root() {
+    let (server, _svc) = serve("127.0.0.1:0", 2).unwrap();
+    let binding = RemoteBinding::connect_with(server.addr(), fast_cfg());
+    let _scope = fault::install(fault::FaultPlan::quiet(14)); // quiet: serialize only
+    // Definitive server-side refusal: unknown cursor → wire 0 → Some(0).
+    assert_eq!(
+        binding.cursor_record("rs", 9999, &bash("a"), &ToolResult::new("r", 1.0)),
+        Some(0),
+        "a server-side refusal is an answer, not a transport failure"
+    );
+    drop(server);
+    // Dead server: transport failure → None, never confusable with ROOT.
+    assert_eq!(
+        binding.cursor_record("rs", 9999, &bash("a"), &ToolResult::new("r", 1.0)),
+        None
+    );
+}
+
+// ─────────────────────── breaker trip and recovery ──────────────────────────
+
+/// The full breaker lifecycle under injected faults: consecutive transport
+/// failures trip it open, `degraded()` stays true while the server is
+/// still sick (failed half-open probes), and once the faults clear a
+/// half-open probe closes it — with every transition counted.
+#[test]
+fn breaker_trips_under_faults_and_recovers_after() {
+    let (server, _svc) = serve("127.0.0.1:0", 2).unwrap();
+    let cfg = BindingConfig {
+        retries: 0,
+        breaker_threshold: 3,
+        breaker_cooldown: Duration::from_millis(100),
+        ..fast_cfg()
+    };
+    let binding = RemoteBinding::connect_with(server.addr(), cfg);
+    binding.insert("bt", &traj(&["make"])).expect("healthy insert");
+    {
+        let mut plan = fault::FaultPlan::quiet(15);
+        plan.p_send_drop = 1.0;
+        plan.p_connect_fail = 1.0;
+        let _scope = fault::install(plan);
+        for _ in 0..3 {
+            assert_eq!(binding.insert("bt", &traj(&["make", "z"])), None);
+        }
+        assert_eq!(binding.breaker_state(), "open");
+        // Cooldown elapses but the server is still faulty: the inline
+        // half-open probe fails and the breaker re-opens.
+        std::thread::sleep(Duration::from_millis(120));
+        assert!(binding.degraded(), "probe against a faulty server must fail");
+        assert_eq!(binding.breaker_state(), "open");
+    }
+    // Faults cleared: the next post-cooldown probe closes the breaker.
+    std::thread::sleep(Duration::from_millis(120));
+    assert!(!binding.degraded(), "probe against a healthy server must close");
+    assert_eq!(binding.breaker_state(), "closed");
+    assert!(binding.insert("bt", &traj(&["make", "w"])).is_some());
+
+    let stats = binding.service_stats();
+    assert!(stats.breaker_opens >= 2, "open + failed-probe reopen: {}", stats.breaker_opens);
+    assert!(stats.breaker_half_opens >= 2, "{}", stats.breaker_half_opens);
+    assert!(stats.breaker_closes >= 1, "{}", stats.breaker_closes);
+}
+
+// ───────────────────────── spill seam ladders ───────────────────────────────
+
+/// An injected spill-write failure (ENOSPC) trips the store into
+/// resident-only mode: no further spill attempts, background eviction
+/// degrades from demote-to-disk to destroy, budgets still enforce, and the
+/// flag is visible in `service_stats`.
+#[test]
+fn spill_write_fault_trips_resident_only_mode() {
+    let dir = tmpdir("wfault");
+    let svc = ShardedCacheService::with_config(
+        ServiceConfig {
+            shards: 1,
+            shard_byte_budget: Some(64),
+            spill_dir: Some(dir.clone()),
+            background: false,
+            fault_cache_bytes: 0,
+            ..Default::default()
+        },
+        Arc::new(TaskCache::with_defaults),
+    )
+    .unwrap();
+    for i in 0..4 {
+        let node = svc
+            .insert("sw", &traj(&["p", &format!("leaf{i}")]))
+            .expect("in-process insert cannot fail");
+        assert!(svc.store_snapshot("sw", node, snap(i as u8, 200)) > 0);
+    }
+    assert!(!svc.spill_degraded());
+
+    let mut plan = fault::FaultPlan::quiet(16);
+    plan.p_spill_write_fail = 1.0;
+    let _scope = fault::install(plan);
+    svc.drain_over_budget();
+    assert!(svc.spill_degraded(), "write fault must trip resident-only mode");
+    let stats = svc.service_stats();
+    assert!(stats.spill_degraded);
+    assert!(stats.injected_faults > 0);
+    assert_eq!(stats.spilled_snapshots, 0, "nothing may claim to be spilled");
+    // Destroy-eviction replaced demotion: the budget still holds.
+    assert!(
+        svc.resident_bytes() <= 64 + 200,
+        "budget unenforced in resident-only mode: {}",
+        svc.resident_bytes()
+    );
+    // The cache stays correct, just snapshot-poorer.
+    assert!(svc.lookup("sw", &[bash("p"), bash("leaf0")]).is_hit());
+}
+
+/// An injected spill-read failure on fault-in degrades `fetch_snapshot` to
+/// `None` — the executor replays instead of restoring — and clears once
+/// the faults do.
+#[test]
+fn spill_read_fault_degrades_fault_in_to_replay() {
+    let dir = tmpdir("rfault");
+    let svc = ShardedCacheService::with_config(
+        ServiceConfig {
+            shards: 1,
+            shard_byte_budget: Some(10),
+            spill_dir: Some(dir.clone()),
+            background: false,
+            fault_cache_bytes: 0,
+            ..Default::default()
+        },
+        Arc::new(TaskCache::with_defaults),
+    )
+    .unwrap();
+    let node = svc.insert("sr", &traj(&["make"])).expect("in-process insert");
+    let id = svc.store_snapshot("sr", node, snap(7, 300));
+    assert!(id > 0);
+    svc.drain_over_budget();
+    assert_eq!(svc.service_stats().spilled_snapshots, 1, "payload must spill");
+    {
+        let mut plan = fault::FaultPlan::quiet(17);
+        plan.p_spill_read_fail = 1.0;
+        let _scope = fault::install(plan);
+        assert!(
+            svc.fetch_snapshot("sr", id).is_none(),
+            "read fault must degrade fault-in to a replay"
+        );
+        assert!(!svc.spill_degraded(), "read faults are per-fetch, not mode-tripping");
+    }
+    let back = svc.fetch_snapshot("sr", id).expect("healthy fault-in");
+    assert_eq!(back.bytes, vec![7u8; 300]);
+}
+
+// ────────────────── degradation counters over the wire ──────────────────────
+
+/// Every degradation counter is visible through HTTP: `/stats` carries
+/// `spill_degraded` and `injected_faults` (server side) merged with the
+/// binding's retry/breaker counters, and the `/capabilities` debug view
+/// carries the health bits.
+#[test]
+fn degradation_counters_visible_over_http() {
+    let dir = tmpdir("stats");
+    let svc = ShardedCacheService::with_config(
+        ServiceConfig {
+            shards: 1,
+            shard_byte_budget: Some(32),
+            spill_dir: Some(dir.clone()),
+            background: false,
+            fault_cache_bytes: 0,
+            ..Default::default()
+        },
+        Arc::new(TaskCache::with_defaults),
+    )
+    .unwrap();
+    // Trip resident-only mode before serving.
+    {
+        let mut plan = fault::FaultPlan::quiet(18);
+        plan.p_spill_write_fail = 1.0;
+        let _scope = fault::install(plan);
+        let node = svc.insert("hs", &traj(&["make"])).expect("insert");
+        assert!(svc.store_snapshot("hs", node, snap(1, 200)) > 0);
+        svc.drain_over_budget();
+        assert!(svc.spill_degraded());
+    }
+    let (server, _svc) = serve_service("127.0.0.1:0", 2, svc).unwrap();
+    let binding = RemoteBinding::connect_with(server.addr(), fast_cfg());
+
+    let stats = binding.service_stats();
+    assert!(stats.spill_degraded, "spill_degraded must survive the JSON round trip");
+    assert!(stats.injected_faults > 0, "injected_faults must be visible over /stats");
+
+    // The JSON capabilities debug view carries the same health bits.
+    let mut c = HttpClient::with_deadlines(
+        server.addr(),
+        Duration::from_millis(500),
+        Duration::from_secs(2),
+    );
+    let (status, body) = c.get("/capabilities").unwrap();
+    assert_eq!(status, 200);
+    let v = tvcache::util::json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+    assert_eq!(v.get("spill_degraded").and_then(|b| b.as_bool()), Some(true));
+    assert!(v.get("injected_faults").and_then(|n| n.as_f64()).unwrap_or(0.0) > 0.0);
+}
+
+// ─────────────────── reward invariance under faults ─────────────────────────
+
+/// A deterministic flaky decorator over the in-process service: every
+/// third backend op fails along its documented ladder. Used by the DES
+/// reward-equality test — no transport, no fault plan, fully portable.
+struct FlakyBackend {
+    inner: ShardedCacheService,
+    ops: AtomicU64,
+}
+
+impl FlakyBackend {
+    fn new() -> FlakyBackend {
+        FlakyBackend { inner: ShardedCacheService::new(4), ops: AtomicU64::new(0) }
+    }
+
+    fn flake(&self) -> bool {
+        self.ops.fetch_add(1, Ordering::Relaxed) % 3 == 2
+    }
+}
+
+impl CacheBackend for FlakyBackend {
+    fn lookup(&self, task: &str, q: &[ToolCall]) -> Lookup {
+        if self.flake() {
+            return Lookup::Miss(Miss { matched_node: 0, matched_calls: 0, resume: None });
+        }
+        self.inner.lookup(task, q)
+    }
+
+    fn insert(&self, task: &str, traj: &[(ToolCall, ToolResult)]) -> Option<NodeId> {
+        if self.flake() {
+            return None;
+        }
+        self.inner.insert(task, traj)
+    }
+
+    fn release(&self, task: &str, node: NodeId) {
+        self.inner.release(task, node);
+    }
+
+    fn should_snapshot(&self, task: &str, costs: SnapshotCosts) -> bool {
+        self.inner.should_snapshot(task, costs)
+    }
+
+    fn store_snapshot(&self, task: &str, node: NodeId, snap: SandboxSnapshot) -> u64 {
+        if self.flake() {
+            return 0;
+        }
+        self.inner.store_snapshot(task, node, snap)
+    }
+
+    fn fetch_snapshot(&self, task: &str, id: u64) -> Option<SandboxSnapshot> {
+        if self.flake() {
+            return None;
+        }
+        self.inner.fetch_snapshot(task, id)
+    }
+
+    fn set_warm_fork(&self, task: &str, node: NodeId, warm: bool) {
+        self.inner.set_warm_fork(task, node, warm);
+    }
+
+    fn has_warm_fork(&self, task: &str, node: NodeId) -> bool {
+        self.inner.has_warm_fork(task, node)
+    }
+
+    fn stats(&self, task: &str) -> CacheStats {
+        self.inner.stats(task)
+    }
+
+    fn service_stats(&self) -> BackendStats {
+        self.inner.service_stats()
+    }
+
+    fn persist(&self, dir: &str) -> bool {
+        self.inner.persist(dir)
+    }
+
+    fn warm_start(&self, dir: &str) -> bool {
+        self.inner.warm_start(dir)
+    }
+}
+
+impl SessionBackend for FlakyBackend {
+    fn capabilities(&self) -> Capabilities {
+        self.inner.capabilities()
+    }
+
+    fn cursor_open(&self, task: &str) -> u64 {
+        if self.flake() {
+            return 0;
+        }
+        self.inner.cursor_open(task)
+    }
+
+    fn cursor_step(&self, task: &str, cursor: u64, call: &ToolCall) -> CursorStep {
+        if self.flake() {
+            return CursorStep::Invalid;
+        }
+        self.inner.cursor_step(task, cursor, call)
+    }
+
+    fn cursor_record(
+        &self,
+        task: &str,
+        cursor: u64,
+        call: &ToolCall,
+        result: &ToolResult,
+    ) -> Option<NodeId> {
+        if self.flake() {
+            return None;
+        }
+        self.inner.cursor_record(task, cursor, call, result)
+    }
+
+    fn cursor_seek(&self, task: &str, cursor: u64, node: NodeId, steps: usize) -> bool {
+        if self.flake() {
+            return false;
+        }
+        self.inner.cursor_seek(task, cursor, node, steps)
+    }
+
+    fn cursor_close(&self, task: &str, cursor: u64) {
+        self.inner.cursor_close(task, cursor);
+    }
+
+    fn session_release(&self, task: &str, cursor: u64, node: NodeId) {
+        self.inner.session_release(task, cursor, node);
+    }
+
+    fn session_turn(&self, task: &str, cursor: u64, batch: &TurnBatch) -> TurnReply {
+        if self.flake() {
+            return TurnReply::refused(batch);
+        }
+        self.inner.session_turn(task, cursor, batch)
+    }
+}
+
+/// The Figure 6 invariant under failure: a DES run whose backend flakes on
+/// every third op produces rollout rewards *identical* to a cacheless run
+/// — every degradation ladder lands on plain execution, never on wrong
+/// output. (In-process and deterministic: no fault scope needed.)
+#[test]
+fn des_rewards_with_flaky_backend_match_cacheless() {
+    let cfg = WorkloadConfig::config_for(Workload::TerminalEasy);
+    let mut opts = SimOptions::from_config(&cfg, 3, true);
+    opts.epochs = 3;
+    let flaky = run_workload_on(&cfg, &opts, Arc::new(FlakyBackend::new()));
+    let mut base_opts = opts.clone();
+    base_opts.cached = false;
+    let baseline = run_workload(&cfg, &base_opts);
+
+    let rf: Vec<f64> = flaky.rollouts.iter().map(|r| r.reward).collect();
+    let rb: Vec<f64> = baseline.rollouts.iter().map(|r| r.reward).collect();
+    assert_eq!(rf, rb, "a flaky backend changed rewards");
+    // The flaky run still cached *something* between its failures.
+    assert!(flaky.overall_hit_rate() > 0.0, "flaky cache should still hit sometimes");
+}
+
+/// The acceptance bar: a real-thread `run_concurrent` drive against a dead
+/// cache server. The breaker trips open within the first rollouts (mid-run
+/// by construction), every executor bypasses into degraded direct
+/// execution, the run completes with rewards identical to the no-cache
+/// run, and no thread ever blocks past the configured deadlines.
+#[test]
+fn concurrent_rollouts_with_dead_server_match_cacheless() {
+    let cfg = WorkloadConfig::config_for(Workload::TerminalEasy);
+    let mut opts = ConcurrentOptions::from_config(&cfg, 3);
+    opts.epochs = 2;
+    opts.threads = 4;
+    let mut base_opts = opts.clone();
+    base_opts.cached = false;
+    let baseline = run_concurrent(&cfg, &base_opts);
+
+    // A port with nothing listening: every dial fails fast.
+    let dead = {
+        let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let a = l.local_addr().unwrap();
+        drop(l);
+        a
+    };
+    let binding = Arc::new(RemoteBinding::connect_with(
+        dead,
+        BindingConfig {
+            retries: 1,
+            breaker_threshold: 3,
+            breaker_cooldown: Duration::from_secs(60),
+            ..fast_cfg()
+        },
+    ));
+    let t0 = std::time::Instant::now();
+    let report =
+        run_concurrent_on(&cfg, &opts, Arc::clone(&binding) as Arc<dyn SessionBackend>);
+    let wall = t0.elapsed();
+
+    assert_eq!(report.rollouts_run, 3 * cfg.rollouts * 2, "every rollout must finish");
+    assert_eq!(report.rewards, baseline.rewards, "a dead cache changed rewards");
+    assert_eq!(report.hits, 0, "nothing can hit against a dead server");
+    assert_eq!(binding.breaker_state(), "open", "the breaker must have tripped mid-run");
+    let stats = binding.service_stats();
+    assert_eq!(stats.breaker_opens, 1);
+    assert!(
+        wall < Duration::from_secs(30),
+        "degraded run must stay deadline-bounded, took {wall:?}"
+    );
+}
+
+// ─────────────────────────── seeded chaos run ───────────────────────────────
+
+/// The chaos CI entry point: every seam armed at once with moderate
+/// probabilities, seed taken from `TVCACHE_FAULT_SEED`, a live server with
+/// budgets + spill + background workers behind a retrying/breaking
+/// binding — and the run must complete with rewards identical to a
+/// cacheless run. Failures print the seed for local replay.
+#[test]
+fn chaos_run_rewards_match_cacheless_for_seed() {
+    let seed: u64 = std::env::var("TVCACHE_FAULT_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1);
+    let cfg = WorkloadConfig::config_for(Workload::TerminalEasy);
+    let mut opts = ConcurrentOptions::from_config(&cfg, 3);
+    opts.epochs = 2;
+    opts.threads = 4;
+    let mut base_opts = opts.clone();
+    base_opts.cached = false;
+    let baseline = run_concurrent(&cfg, &base_opts);
+
+    let dir = tmpdir(&format!("chaos-{seed}"));
+    let svc = ShardedCacheService::with_config(
+        ServiceConfig {
+            shards: 2,
+            shard_byte_budget: Some(16 * 1024),
+            spill_dir: Some(dir.clone()),
+            background: true,
+            session_sweep_tick: Duration::from_millis(25),
+            ..Default::default()
+        },
+        Arc::new(TaskCache::with_defaults),
+    )
+    .unwrap();
+    let (server, _svc) = serve_service("127.0.0.1:0", 4, svc).unwrap();
+    let binding = Arc::new(RemoteBinding::connect_with(
+        server.addr(),
+        BindingConfig {
+            connect_timeout: Duration::from_millis(500),
+            read_timeout: Duration::from_secs(2),
+            retries: 2,
+            backoff_base: Duration::from_millis(1),
+            backoff_max: Duration::from_millis(8),
+            breaker_threshold: 4,
+            breaker_cooldown: Duration::from_millis(50),
+            seed,
+        },
+    ));
+
+    let plan = fault::FaultPlan {
+        p_connect_fail: 0.05,
+        p_send_drop: 0.05,
+        p_recv_drop: 0.05,
+        p_recv_garble: 0.05,
+        p_server_drop: 0.05,
+        p_server_partial: 0.03,
+        p_server_500: 0.05,
+        p_server_garble: 0.05,
+        p_server_stall: 0.02,
+        server_stall: Duration::from_millis(50),
+        p_spill_write_fail: 0.2,
+        p_spill_read_fail: 0.2,
+        p_worker_stall: 0.2,
+        worker_stall: Duration::from_millis(10),
+        ..fault::FaultPlan::quiet(seed)
+    };
+    let t0 = std::time::Instant::now();
+    let report = {
+        let _scope = fault::install(plan);
+        run_concurrent_on(&cfg, &opts, Arc::clone(&binding) as Arc<dyn SessionBackend>)
+    };
+    let wall = t0.elapsed();
+
+    assert_eq!(
+        report.rollouts_run,
+        3 * cfg.rollouts * 2,
+        "a rollout died under chaos (TVCACHE_FAULT_SEED={seed})"
+    );
+    assert_eq!(
+        report.rewards, baseline.rewards,
+        "chaos changed rollout rewards (TVCACHE_FAULT_SEED={seed})"
+    );
+    assert!(
+        wall < Duration::from_secs(60),
+        "chaos run not deadline-bounded: {wall:?} (TVCACHE_FAULT_SEED={seed})"
+    );
+    // The counters tell the story: faults were actually injected.
+    assert!(fault::injected_total() > 0, "chaos plan injected nothing (seed {seed})");
+    let _ = std::fs::remove_dir_all(&dir);
+}

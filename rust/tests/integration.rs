@@ -74,7 +74,7 @@ fn exercise_backend(backend: &dyn CacheBackend, task: &str) {
 
     // Cold miss, insert, warm hit.
     assert!(!backend.lookup(task, &q).is_hit());
-    let node = backend.insert(task, &traj);
+    let node = backend.insert(task, &traj).expect("insert over healthy backend");
     assert!(node > 0);
     match backend.lookup(task, &q) {
         Lookup::Hit { result, .. } => assert_eq!(result.output, "build OK"),
@@ -144,7 +144,7 @@ fn exercise_cursor_backend(backend: &dyn SessionBackend, task: &str) {
         .iter()
         .map(|(c, r)| (bash(c), ToolResult::new(*r, 5.0)))
         .collect();
-    let node = backend.insert(task, &traj);
+    let node = backend.insert(task, &traj).expect("insert over healthy backend");
     let snap = SandboxSnapshot {
         bytes: b"cursor-state".to_vec(),
         serialize_cost: 0.2,
@@ -183,8 +183,9 @@ fn exercise_cursor_backend(backend: &dyn SessionBackend, task: &str) {
     }
 
     // Record the executed delta; the extended chain is immediately live.
-    let n2 =
-        backend.cursor_record(task, cur, &bash("make test"), &ToolResult::new("12 passed", 7.0));
+    let n2 = backend
+        .cursor_record(task, cur, &bash("make test"), &ToolResult::new("12 passed", 7.0))
+        .expect("record over healthy backend");
     assert!(n2 != 0 && n2 != node, "record must create the new node");
 
     // Next divergent step misses at the *new* node, with the ancestor's
@@ -330,7 +331,7 @@ fn exercise_warm_start(
         .map(|(c, r)| (bash(c), ToolResult::new(*r, 5.0)))
         .collect();
     let q: Vec<ToolCall> = traj.iter().map(|(c, _)| c.clone()).collect();
-    let node = src.insert("ws-task", &traj);
+    let node = src.insert("ws-task", &traj).expect("insert over healthy backend");
     let snap = SandboxSnapshot {
         bytes: vec![5u8; 96],
         serialize_cost: 0.2,
@@ -396,7 +397,9 @@ fn backend_parity_warm_start_and_spill_stats() {
 fn dedup_hits_visible_on_both_backends() {
     fn store_twins(b: &dyn CacheBackend) -> BackendStats {
         for t in ["twin-a", "twin-b", "twin-c"] {
-            let node = b.insert(t, &[(bash("make"), ToolResult::new("ok", 2.0))]);
+            let node = b
+                .insert(t, &[(bash("make"), ToolResult::new("ok", 2.0))])
+                .expect("insert over healthy backend");
             let snap = SandboxSnapshot {
                 bytes: vec![0xCD; 512],
                 serialize_cost: 0.1,
@@ -445,7 +448,7 @@ impl CacheBackend for EvictAfterLookup {
         out
     }
 
-    fn insert(&self, task: &str, traj: &[(ToolCall, ToolResult)]) -> NodeId {
+    fn insert(&self, task: &str, traj: &[(ToolCall, ToolResult)]) -> Option<NodeId> {
         self.inner.insert(task, traj)
     }
 
@@ -507,7 +510,7 @@ fn resume_offer_eviction_race_degrades_to_replay() {
     // Wire-level shape first: offer → evict → fetch misses → release no-ops.
     let traj: Vec<(ToolCall, ToolResult)> =
         vec![(bash("make"), ToolResult::new("built", 9.0))];
-    let node = binding.insert("race-task", &traj);
+    let node = binding.insert("race-task", &traj).expect("insert over live server");
     let id = binding.store_snapshot(
         "race-task",
         node,
@@ -834,7 +837,7 @@ fn turn_step_miss_pin_owned_by_session_until_close() {
     let task = "turn-pin";
 
     let traj = vec![(bash("make"), ToolResult::new("built", 9.0))];
-    let node = binding.insert(task, &traj);
+    let node = binding.insert(task, &traj).expect("insert over live server");
     let id = binding.store_snapshot(
         task,
         node,
