@@ -1,0 +1,180 @@
+//! Failover figure (extension): op-log replication keeps the hit rate
+//! through a primary outage.
+//!
+//! Since PR 6 the circuit breaker answers a dead primary with "bypass the
+//! cache" — correct, but every rollout pays cold-path tool latency for the
+//! rest of the run. This PR's replication stack keeps a warm follower
+//! tailing the primary's op-log; when the primary dies, the binding
+//! promotes the follower (epoch-fenced against the revived original) and
+//! the fleet keeps hitting.
+//!
+//! Three measured sections, exact accounting plus wall-clock:
+//!
+//! 1. **No-fault reference**: warm epoch + measured epoch against one
+//!    healthy primary — the hit count every other section is judged by.
+//! 2. **Replication lag**: a concurrent epoch runs against the primary
+//!    while a follower tails it; measures how long the follower takes to
+//!    serve the log's newest entry after the epoch ends.
+//! 3. **Kill-primary failover**: the primary dies, the next epoch's
+//!    rollouts trip the breaker, promote the follower mid-run, re-seed
+//!    their sessions, and finish. Asserted: rewards bit-identical to the
+//!    reference, exactly one failover, promotion bumped the epoch, and the
+//!    post-failover hit count holds ≥ 80% of the no-fault run's.
+//!
+//! Results are appended as one JSON line to `BENCH_8.json` (override with
+//! `TVCACHE_BENCH_OUT`).
+
+use std::io::Write as _;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use tvcache::bench::print_table;
+use tvcache::cache::{
+    CacheBackend, ServiceConfig, SessionBackend, ShardedCacheService, TaskCache, ToolCall,
+    ToolResult,
+};
+use tvcache::client::{BindingConfig, RemoteBinding};
+use tvcache::metrics::CsvWriter;
+use tvcache::server::{serve_follower, serve_service};
+use tvcache::train::{run_concurrent_on, ConcurrentOptions};
+use tvcache::workloads::{Workload, WorkloadConfig};
+
+fn replicated_svc() -> ShardedCacheService {
+    ShardedCacheService::with_config(
+        ServiceConfig { shards: 2, replicate_window: Some(1 << 16), ..Default::default() },
+        Arc::new(TaskCache::with_defaults),
+    )
+    .unwrap()
+}
+
+fn binding_cfg(follower: Option<std::net::SocketAddr>) -> BindingConfig {
+    BindingConfig {
+        connect_timeout: Duration::from_millis(500),
+        read_timeout: Duration::from_secs(2),
+        retries: 0,
+        backoff_base: Duration::from_millis(1),
+        backoff_max: Duration::from_millis(4),
+        // Above the thread count, so stale in-flight dials against the
+        // dead endpoint cannot re-trip the breaker post-failover.
+        breaker_threshold: 6,
+        breaker_cooldown: Duration::from_millis(200),
+        seed: 0x8EED,
+        endpoints: follower.into_iter().collect(),
+    }
+}
+
+fn main() {
+    let smoke = std::env::var("TVCACHE_BENCH_SMOKE").is_ok();
+    let cfg = WorkloadConfig::config_for(Workload::TerminalEasy);
+    let mut opts = ConcurrentOptions::from_config(&cfg, 3);
+    opts.epochs = 1;
+    opts.threads = 4;
+
+    // ── 1. No-fault reference: warm + measured epoch, one primary ───────
+    let (ref_server, _ref_svc) = serve_service("127.0.0.1:0", 4, replicated_svc()).unwrap();
+    let ref_binding = Arc::new(RemoteBinding::connect_with(ref_server.addr(), binding_cfg(None)));
+    let _warm = run_concurrent_on(&cfg, &opts, Arc::clone(&ref_binding) as Arc<dyn SessionBackend>);
+    let nofault = run_concurrent_on(&cfg, &opts, Arc::clone(&ref_binding) as Arc<dyn SessionBackend>);
+    assert!(nofault.hits > 0, "reference run must be warm");
+    drop(ref_server);
+
+    // ── 2. Replicated pair: warm epoch + follower catch-up lag ──────────
+    let (p_server, _p_svc) = serve_service("127.0.0.1:0", 4, replicated_svc()).unwrap();
+    let (f_server, f_svc) =
+        serve_follower("127.0.0.1:0", 4, replicated_svc(), p_server.addr()).unwrap();
+    let binding = Arc::new(RemoteBinding::connect_with(
+        p_server.addr(),
+        binding_cfg(Some(f_server.addr())),
+    ));
+    let warm = run_concurrent_on(&cfg, &opts, Arc::clone(&binding) as Arc<dyn SessionBackend>);
+    assert_eq!(warm.rewards, nofault.rewards, "warm epoch changed rewards");
+
+    // The sentinel is the newest op in the log: the moment the follower
+    // serves it, everything the epoch wrote has been replicated.
+    let sentinel = vec![(ToolCall::new("bash", "sentinel"), ToolResult::new("ok", 1.0))];
+    binding.insert("failover-sentinel", &sentinel).expect("sentinel insert");
+    let probe = RemoteBinding::connect_with(f_server.addr(), binding_cfg(None));
+    let t_catchup = Instant::now();
+    let deadline = t_catchup + Duration::from_secs(10);
+    while !probe.lookup("failover-sentinel", &[sentinel[0].0.clone()]).is_hit() {
+        assert!(Instant::now() < deadline, "follower never caught up");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    let catchup_ms = t_catchup.elapsed().as_secs_f64() * 1e3;
+    let lag_at_catchup = f_svc.replica_lag_ops();
+    assert_eq!(lag_at_catchup, 0, "caught-up follower must report zero lag");
+    let epoch_before = f_svc.epoch();
+
+    // ── 3. Kill the primary; the next epoch fails over mid-run ──────────
+    drop(p_server);
+    let t_run = Instant::now();
+    let failed_over =
+        run_concurrent_on(&cfg, &opts, Arc::clone(&binding) as Arc<dyn SessionBackend>);
+    let failover_run_ms = t_run.elapsed().as_secs_f64() * 1e3;
+
+    assert_eq!(failed_over.rewards, nofault.rewards, "failover changed rollout rewards");
+    assert_eq!(binding.failovers(), 1, "exactly one promote-and-switch");
+    assert!(!f_svc.is_follower(), "follower must have been promoted");
+    let epoch_after = f_svc.epoch();
+    assert!(epoch_after > epoch_before, "promotion must bump the fencing epoch");
+    let retention = failed_over.hits as f64 / nofault.hits as f64;
+    let stats = binding.service_stats();
+
+    // ── Report ──────────────────────────────────────────────────────────
+    let rows = vec![
+        vec!["no-fault hits".into(), format!("{}", nofault.hits)],
+        vec!["post-failover hits".into(), format!("{}", failed_over.hits)],
+        vec!["hit retention".into(), format!("{retention:.3}")],
+        vec!["follower catch-up (ms)".into(), format!("{catchup_ms:.1}")],
+        vec!["replica lag at catch-up (ops)".into(), format!("{lag_at_catchup}")],
+        vec!["failovers".into(), format!("{}", stats.failovers)],
+        vec!["epoch before -> after".into(), format!("{epoch_before} -> {epoch_after}")],
+        vec!["failed-over epoch wall (ms)".into(), format!("{failover_run_ms:.1}")],
+    ];
+    print_table(
+        "Failover (ext): hit retention through a kill-primary outage",
+        &["metric", "value"],
+        &rows,
+    );
+    let mut csv = CsvWriter::new(&["metric", "value"]);
+    for r in &rows {
+        csv.rowf(&[&r[0], &r[1]]);
+    }
+    csv.write("results/fig_failover.csv").unwrap();
+    println!("series -> results/fig_failover.csv");
+
+    // Machine-readable perf trajectory for future PRs.
+    let out = std::env::var("TVCACHE_BENCH_OUT").unwrap_or_else(|_| "../BENCH_8.json".into());
+    let line = format!(
+        "{{\"bench\":\"fig_failover\",\"mode\":\"{}\",\
+         \"nofault_hits\":{},\"failover_hits\":{},\"hit_retention\":{retention:.4},\
+         \"catchup_ms\":{catchup_ms:.2},\"replica_lag_at_catchup\":{lag_at_catchup},\
+         \"failovers\":{},\"epoch_rejects\":{},\
+         \"epoch_before\":{epoch_before},\"epoch_after\":{epoch_after},\
+         \"failover_run_ms\":{failover_run_ms:.1}}}",
+        if smoke { "smoke" } else { "full" },
+        nofault.hits,
+        failed_over.hits,
+        stats.failovers,
+        stats.epoch_rejects,
+    );
+    match std::fs::OpenOptions::new().create(true).append(true).open(&out) {
+        Ok(mut f) => {
+            let _ = writeln!(f, "{line}");
+            println!("appended -> {out}");
+        }
+        Err(e) => println!("could not append to {out}: {e}"),
+    }
+
+    // Acceptance: rewards bit-identical (asserted above), exactly one
+    // failover, epoch bumped, and the hit rate survives the outage.
+    assert!(
+        retention >= 0.8,
+        "post-failover hit rate must hold >= 80% of no-fault: {retention:.3}"
+    );
+    println!(
+        "fig_failover OK: primary death cost {:.0}% of the hit rate (>= 80% retained), \
+         one failover, epoch {epoch_before} -> {epoch_after}",
+        (1.0 - retention) * 100.0
+    );
+}

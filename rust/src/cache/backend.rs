@@ -72,6 +72,21 @@ pub struct BackendStats {
     /// Faults injected by the deterministic fault harness (0 outside
     /// fault-injection runs).
     pub injected_faults: u64,
+    /// Client-side endpoint failovers: breaker-open → promote-a-follower
+    /// transitions (0 for in-process backends and single-endpoint
+    /// bindings).
+    pub failovers: u64,
+    /// Answers (or promotion offers) rejected by the epoch fence because
+    /// they carried an epoch below the highest one this client has seen —
+    /// the split-brain guard firing against a revived stale primary.
+    pub epoch_rejects: u64,
+    /// How many ops this server still trails its primary by (0 on a
+    /// primary; grows without bound on a follower that froze on a
+    /// replication gap).
+    pub replica_lag_ops: u64,
+    /// The server's fencing epoch (1 for a fresh primary; promotion bumps
+    /// past every epoch the old primary could have stamped).
+    pub epoch: u64,
 }
 
 impl BackendStats {
@@ -107,6 +122,12 @@ impl BackendStats {
             ("breaker_closes", Json::num(self.breaker_closes as f64)),
             ("spill_degraded", Json::Bool(self.spill_degraded)),
             ("injected_faults", Json::num(self.injected_faults as f64)),
+            // Replication + failover counters (PR 8) — appended last,
+            // same position-insensitive compatibility contract as above.
+            ("failovers", Json::num(self.failovers as f64)),
+            ("epoch_rejects", Json::num(self.epoch_rejects as f64)),
+            ("replica_lag_ops", Json::num(self.replica_lag_ops as f64)),
+            ("epoch", Json::num(self.epoch as f64)),
         ])
     }
 
@@ -144,6 +165,11 @@ impl BackendStats {
                 .and_then(Json::as_bool)
                 .unwrap_or(false),
             injected_faults: g("injected_faults"),
+            // Absent on pre-replication servers.
+            failovers: g("failovers"),
+            epoch_rejects: g("epoch_rejects"),
+            replica_lag_ops: g("replica_lag_ops"),
+            epoch: g("epoch"),
         })
     }
 }
@@ -359,6 +385,17 @@ pub trait SessionBackend: CacheBackend {
     /// and caches the answer), never per request.
     fn capabilities(&self) -> Capabilities {
         Capabilities::CORE
+    }
+
+    /// Monotonic backend identity. A multi-endpoint binding bumps this on
+    /// every failover: cursor ids are allocated per *server*, so after a
+    /// failover a session's cached id may name (or collide with) a
+    /// different rollout's session on the new server. Sessions compare
+    /// this against the generation they opened under and silently drop a
+    /// cursor from an older one — never step, seek, or close it. Backends
+    /// that can't change identity mid-run keep the default 0.
+    fn backend_generation(&self) -> u64 {
+        0
     }
 
     // ---- stateful lookup cursors (the O(1)-per-call hot path) ----

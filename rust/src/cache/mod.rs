@@ -8,6 +8,7 @@ pub mod backend;
 pub mod eviction;
 pub mod key;
 pub mod lpm;
+pub mod oplog;
 pub mod payload;
 pub mod service;
 pub mod shard;
@@ -22,6 +23,7 @@ pub use backend::{
 pub use eviction::{enforce_budget, recreation_cost, EvictionPolicy};
 pub use key::{ToolCall, ToolResult};
 pub use lpm::{CursorStep, Lookup, LpmConfig, Miss};
+pub use oplog::{Op, OpLog, DEFAULT_OPLOG_WINDOW};
 pub use payload::{ContentKey, FetchSource, PayloadStore, DEFAULT_FAULT_CACHE_BYTES};
 pub use service::{ServiceConfig, ShardedCacheService};
 pub use shard::{CacheFactory, Shard, ShardRouter};

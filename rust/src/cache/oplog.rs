@@ -1,0 +1,276 @@
+//! Sequence-numbered op-log for primary → follower replication.
+//!
+//! Every state mutation a [`super::ShardedCacheService`] applies — TCG
+//! inserts and records, snapshot attaches, releases, warm-fork marks, and
+//! evictions — is appended here under the same lock that applied it, so
+//! the log order *is* the apply order. A follower that replays the ops
+//! from sequence 0 builds bit-identical TCGs: node ids are allocated from
+//! a tombstoned arena and never reused, so the node-addressed ops
+//! (`Record` at a position, `Attach`, `Release`, `Evict*`) land on exactly
+//! the nodes they named on the primary.
+//!
+//! Snapshot payload bytes are content-addressed ([`ContentKey`], PR 5) and
+//! expensive, so an [`Op::Attach`] carries them **once per key per log
+//! window**: the first attach of a key ships the bytes, later attaches of
+//! the same key ship the key alone and the follower re-references its
+//! already-stored payload. When the bytes-carrying op falls off the
+//! bounded window the key is forgotten and the next attach re-ships.
+//!
+//! The window is bounded (default [`DEFAULT_OPLOG_WINDOW`] ops): a
+//! follower that falls further behind than the window reaches observes a
+//! *gap* — `read_from` returns a `start` above the requested `from` — and
+//! must stop applying rather than replay node-addressed ops against a
+//! divergent tree (see the follower loop in `server`).
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, MutexGuard};
+
+use super::key::{ToolCall, ToolResult};
+use super::payload::ContentKey;
+use super::tcg::NodeId;
+
+/// Default bounded window: plenty for a follower polling every few tens of
+/// milliseconds, small enough that a wedged follower cannot balloon the
+/// primary's memory.
+pub const DEFAULT_OPLOG_WINDOW: usize = 65_536;
+
+/// One replicated state mutation. Node fields name primary-side TCG node
+/// ids, which replay identically on the follower (never-reused arena ids).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Op {
+    /// Full-trajectory upsert (`CacheBackend::insert`).
+    Insert { task: String, traj: Vec<(ToolCall, ToolResult)> },
+    /// Single-delta record at position `node` (`cursor_record`); the
+    /// follower replays it position-addressed — it has no session table.
+    Record { task: String, node: NodeId, call: ToolCall, result: ToolResult },
+    /// Snapshot attach. `bytes` carries the payload for the first attach
+    /// of `key` in the window; `None` references an already-shipped
+    /// payload. `byte_len` is always the payload length (the follower
+    /// needs it for the `SnapshotRef` even when the bytes ride earlier).
+    Attach {
+        task: String,
+        node: NodeId,
+        id: u64,
+        key: ContentKey,
+        bytes: Option<Vec<u8>>,
+        byte_len: u64,
+        serialize_cost: f64,
+        restore_cost: f64,
+    },
+    /// Sandbox refcount decrement (`CacheBackend::release`). Pins are not
+    /// replicated, so the follower's replay is a saturating no-op — kept
+    /// in the log so a promoted follower starts from released state.
+    Release { task: String, node: NodeId },
+    /// Warm background-fork mark (`set_warm_fork`).
+    WarmFork { task: String, node: NodeId, warm: bool },
+    /// A snapshot detached and destroyed (explicit or background
+    /// destroy-eviction). Spill *demotions* are residency changes, not
+    /// state mutations, and are deliberately not replicated.
+    EvictSnapshot { task: String, node: NodeId },
+    /// A subtree eviction (`evict_node`).
+    EvictNode { task: String, node: NodeId },
+}
+
+struct LogInner {
+    /// Sequence number the next appended op receives.
+    next_seq: u64,
+    /// Sequence number of `ops.front()` (== `next_seq` when empty).
+    start_seq: u64,
+    ops: VecDeque<Op>,
+    window: usize,
+    /// Content keys whose payload bytes ride an op still in the window,
+    /// mapped to that op's sequence number (for window-eviction cleanup).
+    logged_keys: HashMap<ContentKey, u64>,
+}
+
+/// The primary's replication log. `begin()` hands out a guard that holds
+/// the log lock; the caller applies its mutation and appends the matching
+/// op under the same guard, so no two mutations can interleave between
+/// apply and append — log order is apply order, which is what makes the
+/// follower's sequential replay faithful.
+pub struct OpLog {
+    inner: Mutex<LogInner>,
+    /// Highest `from` any follower pull acknowledged (a pull at `from`
+    /// proves everything below `from` was applied). Drives `/drain`.
+    acked: AtomicU64,
+}
+
+impl OpLog {
+    pub fn new(window: usize) -> OpLog {
+        OpLog {
+            inner: Mutex::new(LogInner {
+                next_seq: 0,
+                start_seq: 0,
+                ops: VecDeque::new(),
+                window: window.max(1),
+                logged_keys: HashMap::new(),
+            }),
+            acked: AtomicU64::new(0),
+        }
+    }
+
+    /// Lock the log around a mutation. Hold the guard across the state
+    /// change *and* the [`LogGuard::push`] of its op.
+    pub fn begin(&self) -> LogGuard<'_> {
+        LogGuard { inner: self.inner.lock().unwrap() }
+    }
+
+    /// Ops from `from` (capped at `max_ops`), plus the window's reach.
+    /// Returns `(start, next, ops)`: `start` is the sequence of `ops[0]`
+    /// — above the requested `from` exactly when the window no longer
+    /// reaches back that far (the follower's gap signal) — and `next` is
+    /// the primary's next sequence number (for lag accounting).
+    pub fn read_from(&self, from: u64, max_ops: usize) -> (u64, u64, Vec<Op>) {
+        let inner = self.inner.lock().unwrap();
+        let start = from.max(inner.start_seq);
+        let skip = (start - inner.start_seq) as usize;
+        let ops: Vec<Op> = inner.ops.iter().skip(skip).take(max_ops).cloned().collect();
+        (start, inner.next_seq, ops)
+    }
+
+    /// A follower pulled at `from`: everything below `from` is applied.
+    pub fn note_ack(&self, from: u64) {
+        self.acked.fetch_max(from, Ordering::AcqRel);
+    }
+
+    pub fn acked(&self) -> u64 {
+        self.acked.load(Ordering::Acquire)
+    }
+
+    pub fn next_seq(&self) -> u64 {
+        self.inner.lock().unwrap().next_seq
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().ops.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Lock guard over the log (see [`OpLog::begin`]).
+pub struct LogGuard<'a> {
+    inner: MutexGuard<'a, LogInner>,
+}
+
+impl LogGuard<'_> {
+    /// Should an [`Op::Attach`] of `key` ship payload bytes? `true` until
+    /// a bytes-carrying attach of the key is pushed (and again after that
+    /// op ages off the window).
+    pub fn wants_bytes(&self, key: &ContentKey) -> bool {
+        !self.inner.logged_keys.contains_key(key)
+    }
+
+    /// Append `op`, returning its sequence number. Trims the window and
+    /// forgets content keys whose payload-carrying op aged out.
+    pub fn push(&mut self, op: Op) -> u64 {
+        let inner = &mut *self.inner;
+        let seq = inner.next_seq;
+        if let Op::Attach { key, bytes: Some(_), .. } = &op {
+            inner.logged_keys.insert(*key, seq);
+        }
+        inner.ops.push_back(op);
+        inner.next_seq += 1;
+        while inner.ops.len() > inner.window {
+            let evicted = inner.ops.pop_front();
+            let evicted_seq = inner.start_seq;
+            inner.start_seq += 1;
+            if let Some(Op::Attach { key, bytes: Some(_), .. }) = evicted {
+                if inner.logged_keys.get(&key) == Some(&evicted_seq) {
+                    inner.logged_keys.remove(&key);
+                }
+            }
+        }
+        seq
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rel(task: &str, node: NodeId) -> Op {
+        Op::Release { task: task.to_string(), node }
+    }
+
+    fn attach(key: ContentKey, bytes: Option<Vec<u8>>) -> Op {
+        Op::Attach {
+            task: "t".to_string(),
+            node: 1,
+            id: 7,
+            key,
+            byte_len: bytes.as_ref().map(|b| b.len() as u64).unwrap_or(3),
+            bytes,
+            serialize_cost: 0.1,
+            restore_cost: 0.2,
+        }
+    }
+
+    #[test]
+    fn sequences_are_dense_and_read_back_in_order() {
+        let log = OpLog::new(16);
+        for i in 0..5 {
+            let mut g = log.begin();
+            assert_eq!(g.push(rel("t", i)), i as u64);
+        }
+        let (start, next, ops) = log.read_from(2, 100);
+        assert_eq!((start, next), (2, 5));
+        assert_eq!(ops, vec![rel("t", 2), rel("t", 3), rel("t", 4)]);
+        // A capped read returns a prefix, not a sample.
+        let (start, _, ops) = log.read_from(0, 2);
+        assert_eq!(start, 0);
+        assert_eq!(ops.len(), 2);
+    }
+
+    #[test]
+    fn window_eviction_reports_gap_via_start() {
+        let log = OpLog::new(4);
+        for i in 0..10 {
+            log.begin().push(rel("t", i));
+        }
+        // Seqs 0..6 aged off: a follower at 3 sees start jump to 6.
+        let (start, next, ops) = log.read_from(3, 100);
+        assert_eq!((start, next), (6, 10));
+        assert_eq!(ops.len(), 4);
+    }
+
+    #[test]
+    fn payload_bytes_ship_once_per_key_until_window_forgets() {
+        let log = OpLog::new(3);
+        let key = ContentKey::of(b"payload");
+        {
+            let mut g = log.begin();
+            assert!(g.wants_bytes(&key));
+            g.push(attach(key, Some(b"payload".to_vec())));
+            assert!(!g.wants_bytes(&key), "second attach must not re-ship");
+        }
+        // Push the bytes-carrying op off the window…
+        for i in 0..3 {
+            log.begin().push(rel("t", i));
+        }
+        // …and the key must be re-shippable again.
+        assert!(log.begin().wants_bytes(&key));
+    }
+
+    #[test]
+    fn key_only_attach_does_not_mark_the_key_shipped() {
+        let log = OpLog::new(8);
+        let key = ContentKey::of(b"x");
+        let mut g = log.begin();
+        g.push(attach(key, None));
+        assert!(g.wants_bytes(&key), "a key-only attach never shipped the bytes");
+    }
+
+    #[test]
+    fn ack_is_monotonic() {
+        let log = OpLog::new(8);
+        log.note_ack(5);
+        log.note_ack(3);
+        assert_eq!(log.acked(), 5);
+        log.note_ack(9);
+        assert_eq!(log.acked(), 9);
+    }
+}

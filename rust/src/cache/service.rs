@@ -33,6 +33,7 @@ use super::backend::{
 };
 use super::key::{ToolCall, ToolResult};
 use super::lpm::{CursorStep, Lookup};
+use super::oplog::{LogGuard, Op, OpLog};
 use super::payload::{ContentKey, PayloadStore, DEFAULT_FAULT_CACHE_BYTES};
 use super::shard::{CacheFactory, Shard, ShardRouter};
 use super::snapshot::{SnapshotCosts, SnapshotStore};
@@ -85,6 +86,13 @@ pub struct ServiceConfig {
     /// and served from memory thereafter). 0 disables the cache. Only
     /// meaningful with a `spill_dir`.
     pub fault_cache_bytes: u64,
+    /// Maintain a replication op-log with this bounded window (PR 8): every
+    /// state mutation is appended, under the same lock that applied it, for
+    /// followers to pull via `/replicate`. `None` (the default) disables
+    /// logging entirely — no lock, no clone, no memory cost. The window
+    /// bounds primary memory; a follower that falls behind it observes a
+    /// gap and freezes (see `read_from`).
+    pub replicate_window: Option<usize>,
 }
 
 /// Default [`ServiceConfig::session_idle_ttl`].
@@ -108,6 +116,7 @@ impl Default for ServiceConfig {
             session_sweep_every_ops: 4096,
             session_sweep_tick: SESSION_SWEEP_TICK,
             fault_cache_bytes: DEFAULT_FAULT_CACHE_BYTES,
+            replicate_window: None,
         }
     }
 }
@@ -239,6 +248,12 @@ pub struct ShardedCacheService {
     payloads: Arc<PayloadStore>,
     /// Cursor id allocator (0 is the "unsupported/failed" sentinel).
     next_cursor: AtomicU64,
+    /// Replication op-log (PR 8), present when
+    /// [`ServiceConfig::replicate_window`] is set. Every mutating entry
+    /// point appends its op under the log guard taken *before* the
+    /// mutation, so log order is apply order and a follower's sequential
+    /// replay rebuilds bit-identical TCGs.
+    oplog: Option<Arc<OpLog>>,
 }
 
 impl ShardedCacheService {
@@ -296,7 +311,9 @@ impl ShardedCacheService {
             spill,
             payloads,
             next_cursor: AtomicU64::new(1),
+            oplog: None,
         };
+        svc.oplog = svc.cfg.replicate_window.map(|w| Arc::new(OpLog::new(w)));
         if svc.cfg.background {
             if svc.cfg.bounded() {
                 svc.spawn_workers();
@@ -318,6 +335,7 @@ impl ShardedCacheService {
             let all: Vec<Arc<ShardSlot>> = self.shards.clone();
             let cfg = self.cfg.clone();
             let spill = self.spill.clone();
+            let oplog = self.oplog.clone();
             let handle = std::thread::Builder::new()
                 .name(format!("tvcache-evict-{i}"))
                 .spawn(move || loop {
@@ -353,7 +371,7 @@ impl ShardedCacheService {
                     if let Some(d) = fault::worker_stall() {
                         std::thread::sleep(d);
                     }
-                    drain_slot(&slot, &all, &cfg, spill.as_deref());
+                    drain_slot(&slot, &all, &cfg, spill.as_deref(), oplog.as_deref());
                     let mut st = slot.signal.state.lock().unwrap();
                     st.busy = false;
                     slot.signal.cv.notify_all();
@@ -408,6 +426,96 @@ impl ShardedCacheService {
     /// tests and benches: dedup/fault-cache counters, payload counts).
     pub fn payload_store(&self) -> &Arc<PayloadStore> {
         &self.payloads
+    }
+
+    /// The replication op-log, when this service is a primary
+    /// ([`ServiceConfig::replicate_window`] set).
+    pub fn oplog(&self) -> Option<&Arc<OpLog>> {
+        self.oplog.as_ref()
+    }
+
+    /// Lock the op-log around a mutation (no-op `None` when replication is
+    /// off). Held across apply + append so log order is apply order.
+    fn log_guard(&self) -> Option<LogGuard<'_>> {
+        self.oplog.as_ref().map(|l| l.begin())
+    }
+
+    /// Apply one replicated op pulled from a primary's log (follower
+    /// replay). Ops must be applied in sequence order with no gaps — node
+    /// ids replay identically because the TCG arena never reuses them.
+    /// Returns `false` for an op that could not take effect here (e.g. a
+    /// key-only attach whose payload bytes aged off the primary's window
+    /// before this follower pulled them); callers count those — they
+    /// degrade a snapshot, never correctness.
+    pub fn apply_op(&self, op: Op) -> bool {
+        match op {
+            Op::Insert { task, traj } => {
+                self.task(&task).record_trajectory(&traj);
+                true
+            }
+            Op::Record { task, node, call, result } => {
+                self.task(&task).cursor_record_at(node, &call, &result).is_some()
+            }
+            Op::Attach {
+                task,
+                node,
+                id,
+                key,
+                bytes,
+                byte_len,
+                serialize_cost,
+                restore_cost,
+            } => {
+                let slot = self.slot(&task);
+                if !slot.snapshots.adopt_replicated(
+                    id,
+                    key,
+                    bytes,
+                    byte_len,
+                    serialize_cost,
+                    restore_cost,
+                ) {
+                    return false;
+                }
+                let freed = slot
+                    .tasks
+                    .task(&task)
+                    .attach_snapshot(node, SnapshotRef { id, bytes: byte_len, restore_cost });
+                // Mirror `store_snapshot`: a count-budget prune (or an
+                // attach to a vanished node) hands refs back — drop them.
+                for f in freed {
+                    slot.snapshots.remove(f.id);
+                }
+                true
+            }
+            Op::Release { task, node } => {
+                // Pins are not replicated, so this is a saturating no-op on
+                // a fresh follower — kept so a promoted follower starts
+                // from released state.
+                self.task(&task).release(node);
+                true
+            }
+            Op::WarmFork { task, node, warm } => {
+                self.task(&task).set_warm_fork(node, warm);
+                true
+            }
+            Op::EvictSnapshot { task, node } => {
+                let slot = self.slot(&task);
+                if let Some(sref) = slot.tasks.task(&task).detach_snapshot_if_unpinned(node) {
+                    slot.snapshots.remove(sref.id);
+                }
+                true
+            }
+            Op::EvictNode { task, node } => {
+                let slot = self.slot(&task);
+                if let Some(freed) = slot.tasks.task(&task).remove_subtree_if_unpinned(node) {
+                    for sref in freed {
+                        slot.snapshots.remove(sref.id);
+                    }
+                }
+                true
+            }
+        }
     }
 
     fn slot(&self, task: &str) -> &ShardSlot {
@@ -479,7 +587,7 @@ impl ShardedCacheService {
     /// (deterministic; property tests and `background: false` configs).
     pub fn drain_over_budget(&self) {
         for slot in &self.shards {
-            drain_slot(slot, &self.shards, &self.cfg, self.spill.as_deref());
+            drain_slot(slot, &self.shards, &self.cfg, self.spill.as_deref(), self.oplog.as_deref());
         }
     }
 
@@ -502,9 +610,13 @@ impl ShardedCacheService {
     /// eviction race). Returns `true` if a snapshot was detached + dropped.
     pub fn evict_snapshot(&self, task: &str, node: NodeId) -> bool {
         let slot = self.slot(task);
+        let mut log = self.log_guard();
         match slot.tasks.task(task).detach_snapshot_if_unpinned(node) {
             Some(sref) => {
                 slot.snapshots.remove(sref.id);
+                if let Some(g) = log.as_mut() {
+                    g.push(Op::EvictSnapshot { task: task.to_string(), node });
+                }
                 true
             }
             None => false,
@@ -517,10 +629,14 @@ impl ShardedCacheService {
     /// Refuses when the subtree is refcount-pinned.
     pub fn evict_node(&self, task: &str, node: NodeId) -> bool {
         let slot = self.slot(task);
+        let mut log = self.log_guard();
         match slot.tasks.task(task).remove_subtree_if_unpinned(node) {
             Some(freed) => {
                 for sref in freed {
                     slot.snapshots.remove(sref.id);
+                }
+                if let Some(g) = log.as_mut() {
+                    g.push(Op::EvictNode { task: task.to_string(), node });
                 }
                 true
             }
@@ -749,7 +865,12 @@ impl ShardedCacheService {
         let doc = Json::obj(vec![("tasks", Json::Arr(tasks_json))]).to_string();
         let tmp = dir.join("tcgs.json.tmp");
         std::fs::write(&tmp, doc)?;
-        std::fs::rename(tmp, dir.join("tcgs.json"))
+        // Durability, not just atomicity: fsync the tmp file before the
+        // rename (so the rename never publishes a hole after a crash) and
+        // the directory after it (so the rename itself survives).
+        std::fs::File::open(&tmp)?.sync_all()?;
+        std::fs::rename(tmp, dir.join("tcgs.json"))?;
+        std::fs::File::open(dir)?.sync_all()
     }
 
     /// Warm-start: merge a persisted cache state from `dir` into this
@@ -844,6 +965,7 @@ fn drain_slot(
     all: &[Arc<ShardSlot>],
     cfg: &ServiceConfig,
     spill: Option<&SpillStore>,
+    oplog: Option<&OpLog>,
 ) {
     let mut skip: HashSet<u64> = HashSet::new();
     loop {
@@ -936,11 +1058,20 @@ fn drain_slot(
             if !slot.snapshots.spill(&tid, sref.id, sref.restore_cost) {
                 skip.insert(sref.id);
             }
-        } else if tc.detach_snapshot_if_unpinned(node).is_some() {
-            slot.snapshots.remove(sref.id);
-            slot.bg_evicted.fetch_add(1, Ordering::Relaxed);
         } else {
-            skip.insert(sref.id); // pinned since candidate listing
+            // Destroy-eviction mutates the TCG, so it rides the op-log:
+            // followers replay the exact same evictions instead of running
+            // their own budget sweeps.
+            let mut log = oplog.map(|l| l.begin());
+            if tc.detach_snapshot_if_unpinned(node).is_some() {
+                slot.snapshots.remove(sref.id);
+                slot.bg_evicted.fetch_add(1, Ordering::Relaxed);
+                if let Some(g) = log.as_mut() {
+                    g.push(Op::EvictSnapshot { task: tid.clone(), node });
+                }
+            } else {
+                skip.insert(sref.id); // pinned since candidate listing
+            }
         }
     }
 }
@@ -951,11 +1082,20 @@ impl CacheBackend for ShardedCacheService {
     }
 
     fn insert(&self, task: &str, traj: &[(ToolCall, ToolResult)]) -> Option<NodeId> {
-        Some(self.task(task).record_trajectory(traj))
+        let mut log = self.log_guard();
+        let node = self.task(task).record_trajectory(traj);
+        if let Some(g) = log.as_mut() {
+            g.push(Op::Insert { task: task.to_string(), traj: traj.to_vec() });
+        }
+        Some(node)
     }
 
     fn release(&self, task: &str, node: NodeId) {
+        let mut log = self.log_guard();
         self.task(task).release(node);
+        if let Some(g) = log.as_mut() {
+            g.push(Op::Release { task: task.to_string(), node });
+        }
     }
 
     fn should_snapshot(&self, task: &str, costs: SnapshotCosts) -> bool {
@@ -967,6 +1107,17 @@ impl CacheBackend for ShardedCacheService {
         let slot = &self.shards[shard];
         let bytes = snap.size();
         let restore_cost = snap.restore_cost;
+        let serialize_cost = snap.serialize_cost;
+        let mut log = self.log_guard();
+        // Payload bytes ride the log once per content key per window; the
+        // key is marked shipped at push time, so a *failed* attach below
+        // never poisons it. Cloning happens only when replication is on
+        // and this is the key's first ride.
+        let logged = log.as_ref().map(|g| {
+            let key = ContentKey::of(&snap.bytes);
+            let payload = g.wants_bytes(&key).then(|| snap.bytes.clone());
+            (key, payload)
+        });
         let id = slot.snapshots.insert(snap);
         let freed = slot
             .tasks
@@ -984,6 +1135,18 @@ impl CacheBackend for ShardedCacheService {
             slot.snapshots.remove(f.id);
         }
         if attached {
+            if let (Some(g), Some((key, payload))) = (log.as_mut(), logged) {
+                g.push(Op::Attach {
+                    task: task.to_string(),
+                    node,
+                    id,
+                    key,
+                    bytes: payload,
+                    byte_len: bytes,
+                    serialize_cost,
+                    restore_cost,
+                });
+            }
             // Byte budgets are enforced off this hot path: flag the
             // background worker and return immediately.
             self.kick_if_over_budget(shard);
@@ -998,7 +1161,11 @@ impl CacheBackend for ShardedCacheService {
     }
 
     fn set_warm_fork(&self, task: &str, node: NodeId, warm: bool) {
+        let mut log = self.log_guard();
         self.task(task).set_warm_fork(node, warm);
+        if let Some(g) = log.as_mut() {
+            g.push(Op::WarmFork { task: task.to_string(), node, warm });
+        }
     }
 
     fn has_warm_fork(&self, task: &str, node: NodeId) -> bool {
@@ -1111,8 +1278,21 @@ impl SessionBackend for ShardedCacheService {
         // record, distinct from `Some(0)` (a successful no-op record at
         // ROOT): callers must never pin or snapshot-attach a failure.
         let (cache, node) = snapshot?;
+        let mut log = self.log_guard();
         match cache.cursor_record_at(node, call, result) {
             Some((new_node, gen)) => {
+                // The op carries the *pre*-record position: replaying it
+                // re-derives `new_node` deterministically (ids are never
+                // reused), so followers need no cursor table at all.
+                if let Some(g) = log.as_mut() {
+                    g.push(Op::Record {
+                        task: task.to_string(),
+                        node,
+                        call: call.clone(),
+                        result: result.clone(),
+                    });
+                }
+                drop(log);
                 let mut sessions = slot.sessions.lock().unwrap();
                 if let Some(e) = sessions.get_mut(&cursor) {
                     e.node = new_node;
@@ -1183,7 +1363,11 @@ impl SessionBackend for ShardedCacheService {
                 }
             }
         }
+        let mut log = self.log_guard();
         slot.tasks.task(task).release(node);
+        if let Some(g) = log.as_mut() {
+            g.push(Op::Release { task: task.to_string(), node });
+        }
     }
 
     fn session_turn(&self, task: &str, cursor: u64, batch: &TurnBatch) -> TurnReply {
@@ -1902,5 +2086,62 @@ mod tests {
         // The live payload survived the sweep and still faults in.
         assert_eq!(fresh.fetch_snapshot("t", id).unwrap().size(), 32);
         std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn oplog_replay_builds_identical_state_on_a_follower() {
+        let primary = ShardedCacheService::with_config(
+            ServiceConfig {
+                shards: 2,
+                replicate_window: Some(1024),
+                ..Default::default()
+            },
+            Arc::new(TaskCache::with_defaults),
+        )
+        .unwrap();
+        // Bulk insert + snapshot on one task…
+        let n1 = primary.insert("t1", &traj(&["a", "b"])).unwrap();
+        assert!(primary.store_snapshot("t1", n1, snap(64)) >= 1);
+        // …a cursor-session record chain on another…
+        let c = primary.cursor_open("t2");
+        assert!(c != 0);
+        let r1 = ToolResult::new("out-x", 1.0);
+        let r2 = ToolResult::new("out-y", 1.0);
+        primary.cursor_record("t2", c, &sf("x"), &r1).unwrap();
+        primary.cursor_record("t2", c, &sf("y"), &r2).unwrap();
+        // …a warm-fork mark, and a second snapshot with *identical* bytes
+        // (its payload must ride the log only once).
+        primary.set_warm_fork("t1", n1, true);
+        let n2 = primary.insert("t1", &traj(&["a", "c"])).unwrap();
+        assert!(primary.store_snapshot("t1", n2, snap(64)) >= 1);
+
+        let log = primary.oplog().expect("replicate_window set");
+        let (start, _next, ops) = log.read_from(0, 10_000);
+        assert_eq!(start, 0);
+        let with_bytes = ops
+            .iter()
+            .filter(|o| matches!(o, Op::Attach { bytes: Some(_), .. }))
+            .count();
+        let key_only = ops
+            .iter()
+            .filter(|o| matches!(o, Op::Attach { bytes: None, .. }))
+            .count();
+        assert_eq!((with_bytes, key_only), (1, 1), "payload ships once per key");
+
+        // A fresh follower replays the log in order and converges.
+        let follower = ShardedCacheService::new(2);
+        for op in ops {
+            assert!(follower.apply_op(op), "every op must apply on a gapless replay");
+        }
+        assert!(follower.lookup("t1", &[sf("a"), sf("b")]).is_hit());
+        assert!(follower.lookup("t2", &[sf("x"), sf("y")]).is_hit());
+        assert!(follower.has_warm_fork("t1", n1));
+        assert_eq!(follower.snapshot_count(), primary.snapshot_count());
+        assert_eq!(
+            follower.payload_store().payload_count(),
+            1,
+            "identical bytes must dedup into one payload on the follower too"
+        );
+        assert_eq!(follower.session_count(), 0, "cursor tables are not replicated");
     }
 }

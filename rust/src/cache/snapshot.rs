@@ -22,7 +22,8 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
 use super::payload::{
-    ContentKey, FetchSource, PayloadStore, SpillOutcome, DEFAULT_FAULT_CACHE_BYTES,
+    ContentKey, FetchSource, InsertOutcome, PayloadStore, SpillOutcome,
+    DEFAULT_FAULT_CACHE_BYTES,
 };
 use super::spill::{SpillSlot, SpillStore, SPILL_FAULT_PENALTY};
 use crate::sandbox::SandboxSnapshot;
@@ -245,6 +246,52 @@ impl SnapshotStore {
         };
         self.payloads.adopt(self.tag, key, slot);
         snaps.insert(id, handle);
+    }
+
+    /// Register a snapshot replicated from a primary's op-log under the
+    /// *primary's* id (follower replay, PR 8). The first attach of a
+    /// content key in the log window carries the bytes; later attaches
+    /// ship the key alone and share the already-stored payload. Returns
+    /// `false` when a key-only attach references content this store has
+    /// never seen (its bytes-carrying op aged off the primary's window
+    /// before this follower pulled it) — the caller skips the attach and
+    /// the node simply has no snapshot on this replica.
+    pub fn adopt_replicated(
+        &self,
+        id: u64,
+        key: ContentKey,
+        bytes: Option<Vec<u8>>,
+        byte_len: u64,
+        serialize_cost: f64,
+        restore_cost: f64,
+    ) -> bool {
+        let mut snaps = self.snaps.lock().unwrap();
+        if snaps.contains_key(&id) {
+            return true; // idempotent re-apply (follower re-pull)
+        }
+        match bytes {
+            Some(b) => {
+                self.payloads.insert(self.tag, key, b);
+            }
+            None => {
+                if self.payloads.ref_total(&key) == 0 {
+                    return false;
+                }
+                // Dedup path: the placeholder vec is dropped, the
+                // reference shared with the bytes-carrying handle.
+                if self.payloads.insert(self.tag, key, Vec::new()) == InsertOutcome::New {
+                    // The payload vanished between check and insert; roll
+                    // back the bogus empty payload rather than serve it.
+                    self.payloads.release(self.tag, key, id);
+                    return false;
+                }
+            }
+        }
+        snaps.insert(id, Handle { key, bytes: byte_len, serialize_cost, restore_cost });
+        // Keep the local allocator ahead of every adopted id, so the ids
+        // this store hands out after a promotion never collide.
+        self.reserve_through(id);
+        true
     }
 
     /// Advance the id allocator past `max_id` (same stride), so ids handed
@@ -495,6 +542,29 @@ mod tests {
         let unique: std::collections::HashSet<u64> = all.iter().copied().collect();
         assert_eq!(unique.len(), 200, "every insert got a distinct key");
         assert_eq!(store.len(), 200);
+    }
+
+    #[test]
+    fn adopt_replicated_shares_bytes_once_per_key() {
+        let store = SnapshotStore::default();
+        let bytes = vec![6u8; 48];
+        let key = ContentKey::of(&bytes);
+        assert!(store.adopt_replicated(11, key, Some(bytes.clone()), 48, 0.1, 0.2));
+        // A key-only attach of the same content shares the stored payload.
+        assert!(store.adopt_replicated(13, key, None, 48, 0.1, 0.2));
+        assert_eq!(store.payloads().payload_count(), 1, "one resident copy");
+        assert_eq!(store.get(13).unwrap().bytes, bytes);
+        // Re-applying the same op (follower re-pull) is idempotent.
+        assert!(store.adopt_replicated(11, key, Some(bytes.clone()), 48, 0.1, 0.2));
+        assert_eq!(store.payloads().ref_total(&key), 2);
+        // A key-only attach of content never shipped is refused, not
+        // fabricated from thin air.
+        let unseen = ContentKey::of(b"never shipped");
+        assert!(!store.adopt_replicated(15, unseen, None, 9, 0.1, 0.2));
+        assert!(!store.contains(15));
+        // Ids handed out locally after adoption never collide.
+        let fresh = store.insert(snap(4));
+        assert!(fresh > 13, "allocator advanced past adopted ids, got {fresh}");
     }
 
     // ---- content dedup + fault cache ----

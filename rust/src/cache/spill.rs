@@ -48,6 +48,24 @@ use crate::util::json::{self, Json};
 /// faulted back in from disk (models the payload read; NVMe-scale).
 pub const SPILL_FAULT_PENALTY: f64 = 0.02;
 
+/// Flush `tmp`'s data blocks, atomically rename it over `dst`, then flush
+/// the parent directory entry. Without the first fsync, a power cut after
+/// the rename can leave the *name* pointing at unwritten blocks — an
+/// atomic rename only orders metadata, not data. The directory flush is
+/// best-effort (not every filesystem supports fsync on a directory fd):
+/// losing it re-exposes only the old name, which every caller here
+/// tolerates by design.
+fn durable_rename(tmp: &Path, dst: &Path) -> std::io::Result<()> {
+    fs::File::open(tmp)?.sync_all()?;
+    fs::rename(tmp, dst)?;
+    if let Some(parent) = dst.parent() {
+        if let Ok(d) = fs::File::open(parent) {
+            let _ = d.sync_all();
+        }
+    }
+    Ok(())
+}
+
 /// A snapshot whose payload lives on disk rather than in memory.
 #[derive(Debug, Clone, PartialEq)]
 pub struct SpillSlot {
@@ -300,7 +318,7 @@ impl SpillStore {
             && fs::metadata(&path).map(|m| m.len() == bytes.len() as u64).unwrap_or(false);
         if !already {
             let tmp = self.dir.join(format!("snap-{id}.tmp"));
-            if let Err(e) = fs::write(&tmp, bytes).and_then(|()| fs::rename(&tmp, &path)) {
+            if let Err(e) = fs::write(&tmp, bytes).and_then(|()| durable_rename(&tmp, &path)) {
                 // A short write or torn rename leaves at most a stray tmp
                 // (swept on the next warm start); nothing references it.
                 let _ = fs::remove_file(&tmp);
@@ -448,7 +466,7 @@ impl SpillStore {
         let tmp = self.dir.join("manifest.jsonl.tmp");
         let rewrite = || -> std::io::Result<fs::File> {
             fs::write(&tmp, &out)?;
-            fs::rename(&tmp, manifest_path(&self.dir))?;
+            durable_rename(&tmp, &manifest_path(&self.dir))?;
             // The old append handle points at the unlinked inode: reopen.
             fs::OpenOptions::new().append(true).open(manifest_path(&self.dir))
         };

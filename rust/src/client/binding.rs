@@ -27,9 +27,22 @@
 //!   reports `true`, executors bypass the cache); after
 //!   `breaker_cooldown` a single half-open probe tests recovery and one
 //!   success closes the breaker again.
+//!
+//! With [`BindingConfig::endpoints`] listing one or more warm followers, an
+//! opening breaker additionally attempts a **failover**: it POSTs
+//! `/promote` to each other endpoint and switches to the first whose
+//! returned fencing epoch is at least the highest epoch this binding has
+//! ever seen — so a revived stale primary can never win the promotion.
+//! After the switch, the binding's generation counter bumps; rollout
+//! sessions observe it and re-seed their cursors on the new server (cursor
+//! tables are per-server state). Every sealed binary reply is epoch-checked
+//! too: frames stamped below the high-water epoch are rejected
+//! (`epoch_rejects`), which is what fences a stale primary that comes back
+//! mid-conversation. The cache is bypassed only while *no* endpoint is
+//! healthy.
 
 use std::cell::RefCell;
-use std::sync::atomic::{AtomicU32, AtomicU64, AtomicU8, Ordering};
+use std::sync::atomic::{AtomicU32, AtomicU64, AtomicU8, AtomicUsize, Ordering};
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
@@ -83,6 +96,11 @@ pub struct BindingConfig {
     pub breaker_cooldown: Duration,
     /// Seed for backoff jitter (deterministic tests).
     pub seed: u64,
+    /// Additional endpoints (warm followers) beyond the primary address the
+    /// binding was connected to. When the breaker opens, the binding tries
+    /// to promote-and-fail-over to one of these before giving up on the
+    /// cache entirely.
+    pub endpoints: Vec<std::net::SocketAddr>,
 }
 
 impl Default for BindingConfig {
@@ -96,15 +114,22 @@ impl Default for BindingConfig {
             breaker_threshold: 5,
             breaker_cooldown: Duration::from_secs(2),
             seed: 0x7C1E,
+            endpoints: Vec::new(),
         }
     }
 }
 
 /// HTTP binding to a TVCACHE server.
 pub struct RemoteBinding {
-    addr: std::net::SocketAddr,
+    /// All known endpoints: the connect address first, then
+    /// [`BindingConfig::endpoints`]. `active` indexes into this.
+    endpoints: Vec<std::net::SocketAddr>,
+    active: AtomicUsize,
     cfg: BindingConfig,
-    pool: Mutex<Vec<(HttpClient, Instant)>>,
+    /// Idle keep-alive connections, each tagged with the endpoint index it
+    /// was dialed against — a failover must never reuse a connection to
+    /// the old primary.
+    pool: Mutex<Vec<(HttpClient, Instant, usize)>>,
     /// Negotiated server capabilities (`/capabilities` handshake), resolved
     /// once on first session open and cached for the binding's lifetime —
     /// the per-request magic-byte guessing game this replaces is exactly
@@ -120,11 +145,19 @@ pub struct RemoteBinding {
     opened_at: Mutex<Instant>,
     /// Jitter source for retry backoff.
     jitter: Mutex<Rng>,
+    /// Highest fencing epoch observed in any sealed reply or promotion
+    /// answer. Replies (and promotion offers) below it are rejected.
+    max_epoch: AtomicU64,
+    /// Bumped on every endpoint switch; sessions watch it (via
+    /// `backend_generation`) and re-seed their cursors on the new server.
+    generation: AtomicU64,
     // ---- client-side degradation counters (merged into service_stats) ----
     retries_counter: AtomicU64,
     breaker_opens: AtomicU64,
     breaker_half_opens: AtomicU64,
     breaker_closes: AtomicU64,
+    failovers_counter: AtomicU64,
+    epoch_rejects_counter: AtomicU64,
 }
 
 impl RemoteBinding {
@@ -135,8 +168,11 @@ impl RemoteBinding {
     /// Connect with explicit deadline/retry/breaker configuration.
     pub fn connect_with(addr: std::net::SocketAddr, cfg: BindingConfig) -> RemoteBinding {
         let jitter = Rng::new(cfg.seed ^ 0xB1D1_76AD);
+        let mut endpoints = vec![addr];
+        endpoints.extend(cfg.endpoints.iter().copied().filter(|e| *e != addr));
         RemoteBinding {
-            addr,
+            endpoints,
+            active: AtomicUsize::new(0),
             cfg,
             pool: Mutex::new(Vec::new()),
             caps: Mutex::new(None),
@@ -144,11 +180,35 @@ impl RemoteBinding {
             consecutive_failures: AtomicU32::new(0),
             opened_at: Mutex::new(Instant::now()),
             jitter: Mutex::new(jitter),
+            max_epoch: AtomicU64::new(0),
+            generation: AtomicU64::new(0),
             retries_counter: AtomicU64::new(0),
             breaker_opens: AtomicU64::new(0),
             breaker_half_opens: AtomicU64::new(0),
             breaker_closes: AtomicU64::new(0),
+            failovers_counter: AtomicU64::new(0),
+            epoch_rejects_counter: AtomicU64::new(0),
         }
+    }
+
+    /// The endpoint requests currently go to.
+    pub fn active_endpoint(&self) -> std::net::SocketAddr {
+        self.endpoints[self.active.load(Ordering::Acquire)]
+    }
+
+    /// Completed endpoint failovers.
+    pub fn failovers(&self) -> u64 {
+        self.failovers_counter.load(Ordering::Relaxed)
+    }
+
+    /// Replies or promotion offers rejected by the epoch fence.
+    pub fn epoch_rejects(&self) -> u64 {
+        self.epoch_rejects_counter.load(Ordering::Relaxed)
+    }
+
+    /// Highest fencing epoch this binding has observed.
+    pub fn max_epoch_seen(&self) -> u64 {
+        self.max_epoch.load(Ordering::Acquire)
     }
 
     /// Current breaker state, for tests and debug surfaces:
@@ -170,24 +230,35 @@ impl RemoteBinding {
         &self,
         f: impl FnOnce(&mut HttpClient) -> std::io::Result<(u16, Vec<u8>)>,
     ) -> std::io::Result<(u16, Vec<u8>)> {
+        let active = self.active.load(Ordering::Acquire);
         let pooled = {
             let mut pool = self.pool.lock().unwrap();
             loop {
                 match pool.pop() {
-                    Some((c, last)) if last.elapsed() < MAX_IDLE_AGE => break Some(c),
+                    // A connection to another endpoint (pre-failover
+                    // leftover) is dropped like a dead one.
+                    Some((c, last, idx)) if idx == active && last.elapsed() < MAX_IDLE_AGE => {
+                        break Some(c)
+                    }
                     Some(_) => continue, // presumed dead: drop, try the next
                     None => break None,
                 }
             }
         };
         let mut client = pooled.unwrap_or_else(|| {
-            HttpClient::with_deadlines(self.addr, self.cfg.connect_timeout, self.cfg.read_timeout)
+            HttpClient::with_deadlines(
+                self.endpoints[active],
+                self.cfg.connect_timeout,
+                self.cfg.read_timeout,
+            )
         });
         let out = f(&mut client);
         if out.is_ok() {
             let mut pool = self.pool.lock().unwrap();
-            if pool.len() < MAX_IDLE_CONNECTIONS {
-                pool.push((client, Instant::now()));
+            if pool.len() < MAX_IDLE_CONNECTIONS
+                && self.active.load(Ordering::Acquire) == active
+            {
+                pool.push((client, Instant::now(), active));
             }
         }
         out
@@ -287,6 +358,9 @@ impl RemoteBinding {
             *self.opened_at.lock().unwrap() = Instant::now();
             if self.breaker.swap(BREAKER_OPEN, Ordering::AcqRel) == BREAKER_HALF_OPEN {
                 self.breaker_opens.fetch_add(1, Ordering::Relaxed);
+                // The active endpoint is still sick after a cooldown:
+                // another chance for a warm follower to take over.
+                self.try_failover();
             }
             return;
         }
@@ -306,7 +380,54 @@ impl RemoteBinding {
                 .is_ok()
             {
                 self.breaker_opens.fetch_add(1, Ordering::Relaxed);
+                self.try_failover();
             }
+        }
+    }
+
+    /// The breaker just opened against the active endpoint: try to promote
+    /// one of the other endpoints and switch to it. Accepts a candidate
+    /// only when its `/promote` answer carries an epoch at least the
+    /// highest this binding has ever seen — a revived stale primary
+    /// (which reports its old epoch without bumping) is rejected and
+    /// counted in `epoch_rejects`. On success the breaker closes, the
+    /// connection pool and cached capabilities reset, and the generation
+    /// counter bumps so sessions re-seed on the new server. When every
+    /// candidate fails, the breaker stays open: only then is the cache
+    /// actually bypassed.
+    fn try_failover(&self) {
+        if self.endpoints.len() < 2 {
+            return;
+        }
+        let active = self.active.load(Ordering::Acquire);
+        for off in 1..self.endpoints.len() {
+            let idx = (active + off) % self.endpoints.len();
+            let mut probe = HttpClient::with_deadlines(
+                self.endpoints[idx],
+                self.cfg.connect_timeout,
+                self.cfg.read_timeout,
+            );
+            let Ok((200, body)) = probe.post("/promote", b"") else {
+                continue;
+            };
+            let epoch = std::str::from_utf8(&body)
+                .ok()
+                .and_then(|s| json::parse(s).ok())
+                .and_then(|v| v.get("epoch").and_then(|e| e.as_u64()));
+            let Some(epoch) = epoch else { continue };
+            let prev = self.max_epoch.fetch_max(epoch, Ordering::AcqRel);
+            if epoch < prev {
+                self.epoch_rejects_counter.fetch_add(1, Ordering::Relaxed);
+                continue;
+            }
+            self.active.store(idx, Ordering::Release);
+            self.pool.lock().unwrap().clear();
+            // The new server gets a fresh handshake on the next open.
+            *self.caps.lock().unwrap() = None;
+            self.generation.fetch_add(1, Ordering::AcqRel);
+            self.failovers_counter.fetch_add(1, Ordering::Relaxed);
+            self.note_success();
+            return;
         }
     }
 
@@ -339,12 +460,30 @@ impl RemoteBinding {
         thread_local! {
             static WIRE_BUF: RefCell<Vec<u8>> = RefCell::new(Vec::with_capacity(256));
         }
-        WIRE_BUF.with(|cell| {
+        let out = WIRE_BUF.with(|cell| {
             let mut buf = cell.borrow_mut();
             buf.clear();
             encode(&mut buf);
             self.transport(retry, |c| c.post_once(path, &buf))
-        })
+        });
+        // Epoch fence on every sealed binary reply: a frame stamped below
+        // the highest epoch this binding has seen can only come from a
+        // stale primary answering after a failover — its state diverged
+        // from the promoted line, so the answer must not be trusted.
+        if let Ok((200, body)) = &out {
+            if let Some(epoch) = wire::resp_epoch(body) {
+                let prev = self.max_epoch.fetch_max(epoch, Ordering::AcqRel);
+                if epoch < prev {
+                    self.epoch_rejects_counter.fetch_add(1, Ordering::Relaxed);
+                    self.note_transport_failure();
+                    return Err(std::io::Error::new(
+                        std::io::ErrorKind::InvalidData,
+                        "reply fenced: stale epoch",
+                    ));
+                }
+            }
+        }
+        out
     }
 
     /// [`Self::post_bin_status`] collapsed to `Some(body)` on a 200.
@@ -459,6 +598,8 @@ impl CacheBackend for RemoteBinding {
         stats.breaker_opens += self.breaker_opens.load(Ordering::Relaxed);
         stats.breaker_half_opens += self.breaker_half_opens.load(Ordering::Relaxed);
         stats.breaker_closes += self.breaker_closes.load(Ordering::Relaxed);
+        stats.failovers += self.failovers_counter.load(Ordering::Relaxed);
+        stats.epoch_rejects += self.epoch_rejects_counter.load(Ordering::Relaxed);
         stats
     }
 
@@ -546,6 +687,13 @@ impl SessionBackend for RemoteBinding {
             // answer — degrade this open, re-probe on the next.
             Ok(_) | Err(_) => Capabilities::LEGACY,
         }
+    }
+
+    /// Bumped on every failover. Sessions holding cursors seeded on the
+    /// old server observe the change and re-seed on the new one — cursor
+    /// tables are per-server state and do not survive promotion.
+    fn backend_generation(&self) -> u64 {
+        self.generation.load(Ordering::Acquire)
     }
 
     fn cursor_open(&self, task: &str) -> u64 {
@@ -647,6 +795,7 @@ mod tests {
             // recovery path is covered by the fault-injection suite).
             breaker_cooldown: Duration::from_secs(60),
             seed: 1,
+            endpoints: Vec::new(),
         }
     }
 

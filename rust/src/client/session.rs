@@ -60,12 +60,14 @@ pub fn open_session(
     task: impl Into<String>,
     cfg: SessionConfig,
 ) -> RolloutSession {
+    let generation = backend.backend_generation();
     RolloutSession {
         backend,
         task: task.into(),
         cfg,
         caps: None,
         cursor: 0,
+        generation,
         unsupported: false,
         touched: false,
         consumed: 0,
@@ -90,6 +92,11 @@ pub struct RolloutSession {
     caps: Option<Capabilities>,
     /// Server-side session / cursor id (0 = none).
     cursor: u64,
+    /// [`SessionBackend::backend_generation`] observed when the cursor was
+    /// obtained. A mismatch means the binding failed over to a different
+    /// server: the cursor id is meaningless there (and may collide with
+    /// another rollout's), so the session drops it without closing it.
+    generation: u64,
     /// Set when the backend refused a cursor (or lost one turn-open): the
     /// rollout stays on full-prefix lookups, never re-probing per call.
     unsupported: bool,
@@ -183,12 +190,29 @@ impl RolloutSession {
         self.probe_cache.clear();
     }
 
+    /// Drop the cursor — without closing it — when the backend failed over
+    /// to a different server since the cursor was obtained. The id was
+    /// allocated by the old server; on the new one it is unknown at best
+    /// and another rollout's session at worst, so stepping or closing it
+    /// could hijack a stranger. The rollout continues on full-prefix
+    /// lookups (new rollouts open fresh cursors on the new server).
+    fn check_generation(&mut self) {
+        let g = self.backend.backend_generation();
+        if g != self.generation {
+            self.generation = g;
+            self.cursor = 0;
+            self.invalidate_probes();
+            self.queued_probes.clear();
+        }
+    }
+
     /// Incremental lookup of the rollout's next call — the hot path. Opens
     /// the cursor lazily on the first call (piggybacked on the turn frame
     /// when batching). `Invalid` means "use [`RolloutSession::lookup_full`]
     /// for this call"; the session re-arms itself on the follow-up
     /// [`RolloutSession::seek`].
     pub fn step(&mut self, call: &ToolCall) -> CursorStep {
+        self.check_generation();
         if let Some(result) = self.probe_hit(call) {
             self.touched = true;
             self.consumed += 1;
@@ -260,6 +284,7 @@ impl RolloutSession {
     /// fall back to [`RolloutSession::insert_full`]. A failed record must
     /// never be released, pinned, or snapshot-attached.
     pub fn record(&mut self, call: &ToolCall, result: &ToolResult) -> Option<NodeId> {
+        self.check_generation();
         if self.cursor == 0 {
             return None;
         }
@@ -373,6 +398,7 @@ impl RolloutSession {
     /// stepped mid-rollout — and the rollout stays on full-prefix lookups.
     /// Correctness never depends on the seek.
     pub fn seek(&mut self, node: NodeId, steps: usize) {
+        self.check_generation();
         self.invalidate_probes();
         if self.cursor == 0 {
             return;
@@ -401,6 +427,7 @@ impl RolloutSession {
 
     /// Hand back one resume pin (the rollout is done with the offer).
     pub fn release(&mut self, node: NodeId) {
+        self.check_generation();
         if let Some(i) = self.pins.iter().position(|&p| p == node) {
             self.pins.swap_remove(i);
         }
@@ -442,6 +469,9 @@ impl RolloutSession {
             return;
         }
         self.finished = true;
+        // A failover since the cursor was obtained makes its id unsafe to
+        // close (it may be another rollout's session on the new server).
+        self.check_generation();
         for node in std::mem::take(&mut self.pins) {
             self.backend.session_release(&self.task, self.cursor, node);
         }

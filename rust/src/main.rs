@@ -2,12 +2,17 @@
 //!
 //! ```text
 //! tvcache serve    --addr 127.0.0.1:8117 --workers 8 --shards 8
+//!                  [--replicate-window N]          # keep an op-log for followers
+//!                  [--follow HOST:PORT]            # tail a primary as a warm follower
 //! tvcache workload --name terminal-easy|terminal-medium|sql|ego
 //!                  [--tasks N] [--epochs N] [--shards N] [--no-cache]
 //! ```
 
+use std::sync::Arc;
+
 use tvcache::bench::print_table;
-use tvcache::server::{serve_with, DEFAULT_SHARDS};
+use tvcache::cache::{ServiceConfig, ShardedCacheService, TaskCache};
+use tvcache::server::{serve_follower, serve_service, DEFAULT_SHARDS};
 use tvcache::train::{run_workload, SimOptions};
 use tvcache::util::cli::Args;
 use tvcache::workloads::{Workload, WorkloadConfig};
@@ -19,15 +24,33 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
             let addr = args.str_or("addr", "127.0.0.1:8117");
             let workers = args.usize_or("workers", 8);
             let shards = args.usize_or("shards", DEFAULT_SHARDS);
-            let (server, svc) = serve_with(&addr, workers, shards)?;
+            let window = match args.get("replicate-window") {
+                Some(w) => Some(w.parse::<usize>()?),
+                None => None,
+            };
+            let sharded = ShardedCacheService::with_config(
+                ServiceConfig { shards, replicate_window: window, ..Default::default() },
+                Arc::new(TaskCache::with_defaults),
+            )?;
+            let (server, svc) = match args.get("follow") {
+                Some(primary) => {
+                    let primary: std::net::SocketAddr = primary.parse()?;
+                    serve_follower(&addr, workers, sharded, primary)?
+                }
+                None => serve_service(&addr, workers, sharded)?,
+            };
             println!(
-                "tvcache server listening on {} ({} shards)",
+                "tvcache {} listening on {} ({} shards, epoch {})",
+                if svc.is_follower() { "follower" } else { "server" },
                 server.addr(),
-                svc.shard_count()
+                svc.shard_count(),
+                svc.epoch()
             );
             println!(
                 "endpoints: /get /prefix_match /put /release /cursor_open /cursor_step \
-                 /cursor_record /cursor_seek /cursor_close /snapshot /warm /stats /viz /ping"
+                 /cursor_record /cursor_seek /cursor_close /capabilities /session_turn \
+                 /session_release /snapshot /warm /persist /warm_start /stats /viz /ping \
+                 /replicate /promote /drain"
             );
             loop {
                 std::thread::sleep(std::time::Duration::from_secs(3600));

@@ -33,6 +33,24 @@
 //!   (service-wide includes spill-tier occupancy / fault / eviction counters)
 //! * `GET  /viz`           — TCG structure as JSON (Figure 9)
 //! * `GET  /ping`          — liveness
+//! * `GET  /replicate`     — pull a batch of op-log entries (`?from=<seq>`,
+//!   binary; primaries only — see below)
+//! * `POST /promote`       — promote a follower to primary (bumps the
+//!   fencing epoch); idempotent no-op on a server that is already primary
+//! * `POST /drain`         — graceful shutdown: stop admitting sessions,
+//!   wait (bounded) for the follower to catch up, optionally persist
+//!
+//! # Replication
+//!
+//! A primary built with [`crate::cache::ServiceConfig::replicate_window`]
+//! records every state mutation in a sequence-numbered op-log. A warm
+//! follower ([`serve_follower`]) tails that log over `GET /replicate` on a
+//! background thread and applies the ops into its own service, staying
+//! read-only (mutating endpoints answer `503`) until `POST /promote` flips
+//! it. Every sealed binary response carries the server's fencing epoch in
+//! its trailer; promotion bumps the epoch past anything the old primary
+//! could have stamped, so clients that already failed over reject a revived
+//! stale primary's answers (split-brain guard).
 //!
 //! The hot endpoints speak the length-prefixed binary codec of
 //! [`crate::wire`]; the cold admin endpoints (`/stats`, `/persist`,
@@ -41,24 +59,64 @@
 //! the [`CacheBackend`] trait — the same surface the executor and the
 //! training loops use in-process.
 
-use std::sync::Arc;
+use std::net::SocketAddr;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
 use crate::cache::key::{trajectory_from_json, trajectory_json_into, ToolCall};
 use crate::cache::{
     CacheBackend, CacheFactory, Capabilities, CursorStep, Lookup, SessionBackend,
-    ShardedCacheService, TaskCache, ToolResult,
+    ShardedCacheService, TaskCache, ToolResult, TurnReply,
 };
 use crate::sandbox::SandboxSnapshot;
-use crate::util::http::{Handler, Request, Response, Server};
+use crate::util::fault;
+use crate::util::http::{Handler, HttpClient, Request, Response, Server};
 use crate::util::json::{self, Json};
 use crate::wire;
 
 /// Default shard count for a served cache (Figure 8a's scaling knob).
 pub const DEFAULT_SHARDS: usize = 8;
 
+/// Largest number of ops one `GET /replicate` reply carries. Bounds the
+/// reply frame; a far-behind follower simply pulls again.
+pub const REPLICATE_BATCH_MAX: usize = 512;
+
+/// How long `POST /drain` waits for the follower to acknowledge the whole
+/// log before giving up and reporting `caught_up: false`.
+const DRAIN_DEADLINE: Duration = Duration::from_secs(2);
+
 /// Shared server state: the sharded cache service plus HTTP plumbing.
 pub struct CacheService {
     sharded: ShardedCacheService,
+    /// Fencing epoch stamped into every sealed binary response. Fresh
+    /// primaries (and unpromoted followers, which echo what they will bump
+    /// past) start at 1; `POST /promote` sets it above every epoch the old
+    /// primary could have used.
+    epoch: AtomicU64,
+    /// Read-only warm follower until `/promote` flips it.
+    follower: AtomicBool,
+    /// `/drain` was called: no new sessions are admitted.
+    draining: AtomicBool,
+    /// Follower tail state: next op-log sequence to apply.
+    applied: AtomicU64,
+    /// The primary's `next` sequence as of the last successful pull — the
+    /// lag gauge's other leg.
+    primary_next: AtomicU64,
+    /// Highest epoch seen from the primary while tailing; promotion bumps
+    /// past it.
+    primary_epoch: AtomicU64,
+    /// Set when replay can never be trusted again (the primary's window
+    /// slid past our position, or its shard count differs): application
+    /// stops permanently, lag keeps growing, promotion still works but the
+    /// operator sees `replica_frozen` in `/stats`.
+    frozen: AtomicBool,
+    /// Replicated ops that could not take effect here (e.g. a key-only
+    /// attach whose payload bytes this follower never saw). Snapshot
+    /// availability degrades; correctness does not.
+    skipped_ops: AtomicU64,
+    tail_stop: Arc<AtomicBool>,
+    tail_thread: Mutex<Option<std::thread::JoinHandle<()>>>,
 }
 
 impl CacheService {
@@ -67,19 +125,68 @@ impl CacheService {
     }
 
     pub fn with_shards(shards: usize) -> Arc<CacheService> {
-        Arc::new(CacheService { sharded: ShardedCacheService::new(shards) })
+        Self::with_service(ShardedCacheService::new(shards))
     }
 
     /// Custom per-task cache policies (used by benches).
     pub fn with_factory(shards: usize, factory: CacheFactory) -> Arc<CacheService> {
-        Arc::new(CacheService {
-            sharded: ShardedCacheService::with_factory(shards, factory),
-        })
+        Self::with_service(ShardedCacheService::with_factory(shards, factory))
     }
 
     /// Front an already-built sharded service (spill/budget-configured).
     pub fn with_service(sharded: ShardedCacheService) -> Arc<CacheService> {
-        Arc::new(CacheService { sharded })
+        Arc::new(CacheService {
+            sharded,
+            epoch: AtomicU64::new(1),
+            follower: AtomicBool::new(false),
+            draining: AtomicBool::new(false),
+            applied: AtomicU64::new(0),
+            primary_next: AtomicU64::new(0),
+            primary_epoch: AtomicU64::new(0),
+            frozen: AtomicBool::new(false),
+            skipped_ops: AtomicU64::new(0),
+            tail_stop: Arc::new(AtomicBool::new(false)),
+            tail_thread: Mutex::new(None),
+        })
+    }
+
+    /// The current fencing epoch.
+    pub fn epoch(&self) -> u64 {
+        self.epoch.load(Ordering::Acquire)
+    }
+
+    /// Whether this server is still an unpromoted (read-only) follower.
+    pub fn is_follower(&self) -> bool {
+        self.follower.load(Ordering::Acquire)
+    }
+
+    /// Follower lag in ops: how far the primary's log tip is ahead of what
+    /// this server has applied (0 on a primary; on a primary *with* a log,
+    /// how far its own follower's acks trail the tip).
+    pub fn replica_lag_ops(&self) -> u64 {
+        if self.follower.load(Ordering::Acquire) {
+            self.primary_next
+                .load(Ordering::Acquire)
+                .saturating_sub(self.applied.load(Ordering::Acquire))
+        } else {
+            match self.sharded.oplog() {
+                Some(log) => log.next_seq().saturating_sub(log.acked()),
+                None => 0,
+            }
+        }
+    }
+
+    /// Ops this follower had to skip during replay (payload aged off the
+    /// primary's window before we pulled it).
+    pub fn skipped_ops(&self) -> u64 {
+        self.skipped_ops.load(Ordering::Relaxed)
+    }
+
+    fn stop_tail(&self) {
+        self.tail_stop.store(true, Ordering::Release);
+        if let Some(t) = self.tail_thread.lock().unwrap().take() {
+            let _ = t.join();
+        }
     }
 
     /// The trait surface every handler dispatches through.
@@ -130,8 +237,25 @@ impl CacheService {
     }
 
     fn handle(&self, req: &Request) -> Response {
+        // Unpromoted followers are read-only replicas: every mutating
+        // endpoint answers 503 until `/promote`. Reads (`/get`, `/stats`,
+        // `/snapshot` fetches, …) stay available for warm-up checks.
+        if self.follower.load(Ordering::Acquire) && req.method == "POST" {
+            // `/get` and `/prefix_match` are reads that arrive as POSTs
+            // (their transient offer pin is returned before replying).
+            let mutating = !matches!(
+                req.path.as_str(),
+                "/get" | "/prefix_match" | "/capabilities" | "/promote" | "/drain" | "/persist"
+            );
+            if mutating {
+                return Response::text_static(503, "follower (read-only until promoted)");
+            }
+        }
         match (req.method.as_str(), req.path.as_str()) {
             ("GET", "/ping") => Response::text_static(200, "pong"),
+            ("GET", "/replicate") => self.replicate(req),
+            ("POST", "/promote") => self.promote(),
+            ("POST", "/drain") => self.drain(req),
             // Hot endpoints sniff the first body byte: the binary codec's
             // magic never collides with JSON's `{`.
             ("POST", "/get") if wire::is_binary(&req.body) => self.lookup_bin(req),
@@ -159,6 +283,99 @@ impl CacheService {
             ("GET", "/viz") => self.viz(req),
             _ => Response::not_found(),
         }
+    }
+
+    // ---- replication & failover ------------------------------------------
+
+    /// `GET /replicate?from=<seq>`: one batch of op-log entries starting at
+    /// `from` (≤ [`REPLICATE_BATCH_MAX`] ops). A request at `from` also
+    /// acknowledges every op below it — the follower only advances its pull
+    /// position past ops it has applied — which is what `/drain` waits on.
+    fn replicate(&self, req: &Request) -> Response {
+        let Some(log) = self.sharded.oplog() else {
+            return Response::bad_request_static("replication is not enabled (no op-log)");
+        };
+        let Some(from) = req.query.get("from").and_then(|s| s.parse::<u64>().ok()) else {
+            return Response::bad_request_static("missing from");
+        };
+        log.note_ack(from);
+        let (start, next, ops) = log.read_from(from, REPLICATE_BATCH_MAX);
+        let mut buf = Vec::with_capacity(64);
+        wire::enc_replicate_resp(
+            &mut buf,
+            start,
+            next,
+            self.sharded.shard_count() as u64,
+            &ops,
+            self.epoch(),
+        );
+        Response::binary(buf)
+    }
+
+    /// `POST /promote`: flip a follower into a writable primary. The new
+    /// epoch is one past everything this server has seen — its own and the
+    /// old primary's — so no response the old primary ever sealed can
+    /// outrank the new line. A server that is *already* primary reports its
+    /// current epoch without bumping: a revived stale primary answering
+    /// `/promote` therefore keeps its old (fenced) epoch instead of
+    /// hijacking the promotion.
+    fn promote(&self) -> Response {
+        let promoted = self.follower.swap(false, Ordering::AcqRel);
+        if promoted {
+            self.stop_tail();
+            let new = self
+                .primary_epoch
+                .load(Ordering::Acquire)
+                .max(self.epoch.load(Ordering::Acquire))
+                + 1;
+            self.epoch.store(new, Ordering::Release);
+        }
+        Response::json(
+            Json::obj(vec![
+                ("epoch", Json::num(self.epoch() as f64)),
+                ("promoted", Json::Bool(promoted)),
+            ])
+            .to_string(),
+        )
+    }
+
+    /// `POST /drain`: graceful shutdown. Stops admitting sessions, waits
+    /// (bounded) for the follower's pulls to acknowledge the whole op-log,
+    /// then optionally persists (`{"dir": …}` body). The caller stops the
+    /// process afterwards; existing sessions keep answering meanwhile.
+    fn drain(&self, req: &Request) -> Response {
+        self.draining.store(true, Ordering::Release);
+        let (caught_up, final_seq) = match self.sharded.oplog() {
+            Some(log) => {
+                let target = log.next_seq();
+                let deadline = Instant::now() + DRAIN_DEADLINE;
+                loop {
+                    if log.acked() >= target {
+                        break (true, target);
+                    }
+                    if Instant::now() >= deadline {
+                        break (false, target);
+                    }
+                    std::thread::sleep(Duration::from_millis(2));
+                }
+            }
+            None => (true, 0),
+        };
+        let persisted = match json::parse(req.body_str()) {
+            Ok(body) => body
+                .get("dir")
+                .and_then(|d| d.as_str())
+                .map(|dir| self.backend().persist(dir)),
+            Err(_) => None, // empty/absent body: drain without persisting
+        };
+        let mut fields = vec![
+            ("caught_up", Json::Bool(caught_up)),
+            ("final_seq", Json::num(final_seq as f64)),
+        ];
+        if let Some(ok) = persisted {
+            fields.push(("persisted", Json::Bool(ok)));
+        }
+        Response::json(Json::obj(fields).to_string())
     }
 
     // ---- binary hot path -------------------------------------------------
@@ -195,7 +412,7 @@ impl CacheService {
             self.unpin_offer(&task, &m.resume);
         }
         let mut buf = Vec::with_capacity(64);
-        wire::enc_lookup_resp(&mut buf, &out);
+        wire::enc_lookup_resp(&mut buf, &out, self.epoch());
         Response::binary(buf)
     }
 
@@ -218,8 +435,8 @@ impl CacheService {
         // In-process inserts cannot fail; 0 is the wire's ROOT/failure
         // sentinel either way.
         let node = self.backend().insert(&task, &traj).unwrap_or(0);
-        let mut buf = Vec::with_capacity(9);
-        wire::enc_u64_resp(&mut buf, node as u64);
+        let mut buf = Vec::with_capacity(21);
+        wire::enc_u64_resp(&mut buf, node as u64, self.epoch());
         Response::binary(buf)
     }
 
@@ -234,7 +451,15 @@ impl CacheService {
             return Response::bad_request_static("bad release frame");
         };
         self.backend().release(&task, node);
-        Response::binary(Vec::new())
+        self.empty_sealed()
+    }
+
+    /// An empty binary reply still gets the epoch trailer, so every sealed
+    /// response a v2 client reads carries the fence.
+    fn empty_sealed(&self) -> Response {
+        let mut buf = Vec::with_capacity(wire::RESP_TRAILER);
+        wire::seal_resp(&mut buf, self.epoch());
+        Response::binary(buf)
     }
 
     fn cursor_open(&self, req: &Request) -> Response {
@@ -246,9 +471,15 @@ impl CacheService {
         let Some(task) = decoded else {
             return Response::bad_request_static("bad cursor_open frame");
         };
-        let id = self.session_backend().cursor_open(&task);
-        let mut buf = Vec::with_capacity(9);
-        wire::enc_u64_resp(&mut buf, id);
+        // A draining server admits no new sessions; 0 is the wire's
+        // refusal sentinel and clients fall back to stateless lookups.
+        let id = if self.draining.load(Ordering::Acquire) {
+            0
+        } else {
+            self.session_backend().cursor_open(&task)
+        };
+        let mut buf = Vec::with_capacity(21);
+        wire::enc_u64_resp(&mut buf, id, self.epoch());
         Response::binary(buf)
     }
 
@@ -269,7 +500,7 @@ impl CacheService {
             self.unpin_offer(&task, &m.resume);
         }
         let mut buf = Vec::with_capacity(64);
-        wire::enc_step_resp(&mut buf, &out);
+        wire::enc_step_resp(&mut buf, &out, self.epoch());
         Response::binary(buf)
     }
 
@@ -292,8 +523,8 @@ impl CacheService {
             .session_backend()
             .cursor_record(&task, cursor, &call, &result)
             .unwrap_or(0);
-        let mut buf = Vec::with_capacity(9);
-        wire::enc_u64_resp(&mut buf, node as u64);
+        let mut buf = Vec::with_capacity(21);
+        wire::enc_u64_resp(&mut buf, node as u64, self.epoch());
         Response::binary(buf)
     }
 
@@ -310,8 +541,8 @@ impl CacheService {
             return Response::bad_request_static("bad cursor_seek frame");
         };
         let ok = self.session_backend().cursor_seek(&task, cursor, node, steps);
-        let mut buf = Vec::with_capacity(1);
-        wire::enc_bool_resp(&mut buf, ok);
+        let mut buf = Vec::with_capacity(13);
+        wire::enc_bool_resp(&mut buf, ok, self.epoch());
         Response::binary(buf)
     }
 
@@ -326,7 +557,7 @@ impl CacheService {
             return Response::bad_request_static("bad cursor_close frame");
         };
         self.session_backend().cursor_close(&task, cursor);
-        Response::binary(Vec::new())
+        self.empty_sealed()
     }
 
     // ---- session API v2 --------------------------------------------------
@@ -340,8 +571,8 @@ impl CacheService {
             return Response::bad_request_static("bad hello frame");
         };
         let proto = client_proto.min(Capabilities::PROTO_V2);
-        let mut buf = Vec::with_capacity(4);
-        wire::enc_caps_resp(&mut buf, proto, &self.session_backend().capabilities());
+        let mut buf = Vec::with_capacity(16);
+        wire::enc_caps_resp(&mut buf, proto, &self.session_backend().capabilities(), self.epoch());
         Response::binary(buf)
     }
 
@@ -362,6 +593,11 @@ impl CacheService {
                     "injected_faults",
                     Json::num(crate::util::fault::injected_total() as f64),
                 ),
+                ("epoch", Json::num(self.epoch() as f64)),
+                (
+                    "role",
+                    Json::str(if self.is_follower() { "follower" } else { "primary" }),
+                ),
             ])
             .to_string(),
         )
@@ -376,9 +612,15 @@ impl CacheService {
         let Some((task, cursor, batch)) = wire::dec_turn_req(&req.body) else {
             return Response::bad_request_static("bad turn frame");
         };
-        let reply = self.session_backend().session_turn(&task, cursor, &batch);
+        // Draining: a turn that would open a new session is refused; turns
+        // on existing sessions keep completing until the caller shuts down.
+        let reply = if cursor == 0 && self.draining.load(Ordering::Acquire) {
+            TurnReply::refused(&batch)
+        } else {
+            self.session_backend().session_turn(&task, cursor, &batch)
+        };
         let mut buf = Vec::with_capacity(64);
-        wire::enc_turn_resp(&mut buf, &reply);
+        wire::enc_turn_resp(&mut buf, &reply, self.epoch());
         Response::binary(buf)
     }
 
@@ -395,7 +637,7 @@ impl CacheService {
             return Response::bad_request_static("bad session_release frame");
         };
         self.session_backend().session_release(&task, cursor, node);
-        Response::binary(Vec::new())
+        self.empty_sealed()
     }
 
     // ---- legacy JSON path ------------------------------------------------
@@ -623,7 +865,29 @@ impl CacheService {
     fn stats(&self, req: &Request) -> Response {
         match req.query.get("task") {
             Some(task) => Response::json(self.backend().stats(task).to_json().to_string()),
-            None => Response::json(self.backend().service_stats().to_json().to_string()),
+            None => {
+                let mut s = self.backend().service_stats();
+                s.epoch = self.epoch();
+                s.replica_lag_ops = self.replica_lag_ops();
+                let mut v = s.to_json();
+                if let Json::Obj(fields) = &mut v {
+                    let role = if self.is_follower() { "follower" } else { "primary" };
+                    fields.push(("role".to_string(), Json::str(role)));
+                    fields.push((
+                        "replica_frozen".to_string(),
+                        Json::Bool(self.frozen.load(Ordering::Acquire)),
+                    ));
+                    fields.push((
+                        "replica_skipped_ops".to_string(),
+                        Json::num(self.skipped_ops() as f64),
+                    ));
+                    fields.push((
+                        "draining".to_string(),
+                        Json::Bool(self.draining.load(Ordering::Acquire)),
+                    ));
+                }
+                Response::json(v.to_string())
+            }
         }
     }
 
@@ -662,6 +926,111 @@ pub fn serve_service(
     let handler: Handler = Arc::new(move |req: &Request| svc.handle(req));
     let server = Server::bind(addr, workers, handler)?;
     Ok((server, service))
+}
+
+/// Start a warm follower on `addr`: a background thread tails `primary`'s
+/// op-log over `GET /replicate` and applies every op into `sharded` (which
+/// must have the primary's shard count — replay is topology-faithful).
+/// Mutating endpoints answer 503 until `POST /promote` flips the server
+/// into a writable primary with a bumped fencing epoch.
+pub fn serve_follower(
+    addr: &str,
+    workers: usize,
+    sharded: ShardedCacheService,
+    primary: SocketAddr,
+) -> std::io::Result<(Server, Arc<CacheService>)> {
+    let service = CacheService::with_service(sharded);
+    service.follower.store(true, Ordering::Release);
+    spawn_tail(&service, primary);
+    let svc = Arc::clone(&service);
+    let handler: Handler = Arc::new(move |req: &Request| svc.handle(req));
+    let server = Server::bind(addr, workers, handler)?;
+    Ok((server, service))
+}
+
+fn spawn_tail(service: &Arc<CacheService>, primary: SocketAddr) {
+    let stop = Arc::clone(&service.tail_stop);
+    // The thread holds only a Weak: a dropped service ends the tail rather
+    // than the tail keeping the service alive forever.
+    let weak = Arc::downgrade(service);
+    let handle = std::thread::Builder::new()
+        .name("tvcache-replica-tail".into())
+        .spawn(move || {
+            // Tight deadlines: a dead primary must not wedge a pull (or a
+            // later promotion, which joins this thread) behind long waits.
+            let mut client = HttpClient::with_deadlines(
+                primary,
+                Duration::from_millis(500),
+                Duration::from_secs(1),
+            );
+            while !stop.load(Ordering::Acquire) {
+                let Some(svc) = weak.upgrade() else { break };
+                let idle = tail_once(&svc, &mut client);
+                drop(svc);
+                if idle {
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+            }
+        })
+        .expect("spawn replica tail thread");
+    *service.tail_thread.lock().unwrap() = Some(handle);
+}
+
+/// One replication pull. Returns `true` when the loop should idle before
+/// the next pull (caught up, transport error, or frozen).
+fn tail_once(svc: &CacheService, client: &mut HttpClient) -> bool {
+    if svc.frozen.load(Ordering::Acquire) {
+        return true;
+    }
+    // Deterministic chaos seam: a dropped pull is only ever a retry.
+    if fault::replicate_fails() {
+        return true;
+    }
+    let from = svc.applied.load(Ordering::Acquire);
+    let body = match client.get(&format!("/replicate?from={from}")) {
+        Ok((200, body)) => body,
+        // A dead or erroring primary: keep polling — the client side
+        // decides when to promote us, not the replica itself.
+        _ => return true,
+    };
+    let Some(batch) = wire::dec_replicate_resp(&body) else {
+        return true; // garbled frame: drop it and re-pull
+    };
+    // Epoch fence: never apply ops from a primary older than one already
+    // seen (a revived stale primary on a reused address).
+    if batch.epoch < svc.primary_epoch.load(Ordering::Acquire) {
+        return true;
+    }
+    svc.primary_epoch.fetch_max(batch.epoch, Ordering::AcqRel);
+    if batch.shards != svc.sharded.shard_count() as u64 {
+        // Replay is only faithful on an identical shard topology.
+        svc.frozen.store(true, Ordering::Release);
+        return true;
+    }
+    svc.primary_next.store(batch.next, Ordering::Release);
+    if batch.start > from {
+        // The primary's window slid past our position: replay would skip
+        // mutations, so this replica's state can never be trusted again.
+        svc.frozen.store(true, Ordering::Release);
+        return true;
+    }
+    let mut seq = batch.start;
+    for op in batch.ops {
+        if seq >= from {
+            if !svc.sharded.apply_op(op) {
+                svc.skipped_ops.fetch_add(1, Ordering::Relaxed);
+            }
+            svc.applied.store(seq + 1, Ordering::Release);
+        }
+        seq += 1;
+    }
+    svc.applied.load(Ordering::Acquire) >= batch.next
+}
+
+impl Drop for CacheService {
+    fn drop(&mut self) {
+        self.stop_tail();
+    }
 }
 
 pub fn hex_encode(bytes: &[u8]) -> String {
@@ -959,6 +1328,110 @@ mod tests {
         // Stats flowed through the cursor path like any lookup.
         assert_eq!(svc.task("ct").stats().lookups, 4);
         assert_eq!(svc.task("ct").stats().hits, 2);
+    }
+
+    fn replicated_pair() -> (Server, Arc<CacheService>, Server, Arc<CacheService>) {
+        let cfg = crate::cache::ServiceConfig {
+            shards: 2,
+            replicate_window: Some(4096),
+            ..Default::default()
+        };
+        let primary = ShardedCacheService::with_config(cfg, Arc::new(TaskCache::with_defaults))
+            .unwrap();
+        let (psrv, psvc) = serve_service("127.0.0.1:0", 2, primary).unwrap();
+        let follower = ShardedCacheService::with_factory(2, Arc::new(TaskCache::with_defaults));
+        let (fsrv, fsvc) = serve_follower("127.0.0.1:0", 2, follower, psrv.addr()).unwrap();
+        (psrv, psvc, fsrv, fsvc)
+    }
+
+    /// Poll the follower (over HTTP, so offer pins are returned) until a
+    /// lookup hits or the deadline passes.
+    fn await_hit(c: &mut HttpClient, task: &str, traj: &[ToolCall]) {
+        let deadline = Instant::now() + Duration::from_secs(10);
+        loop {
+            let (_, body) = c.post("/get", lookup_body(task, traj).as_bytes()).unwrap();
+            let v = json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+            if v.get("hit").and_then(|h| h.as_bool()) == Some(true) {
+                return;
+            }
+            assert!(Instant::now() < deadline, "follower never replicated {task}");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+    }
+
+    #[test]
+    fn follower_tails_the_primary_and_promotion_fences_the_epoch() {
+        let (psrv, _psvc, fsrv, fsvc) = replicated_pair();
+        let mut pc = HttpClient::connect(psrv.addr());
+        let mut fc = HttpClient::connect(fsrv.addr());
+        pc.post("/put", put_body("t", &[("a", "ra"), ("b", "rb")]).as_bytes()).unwrap();
+        await_hit(&mut fc, "t", &[call("a"), call("b")]);
+
+        // Pre-promotion the follower is read-only…
+        let (status, _) = fc.post("/put", put_body("x", &[("q", "r")]).as_bytes()).unwrap();
+        assert_eq!(status, 503);
+        // …and reports its role.
+        let (_, body) = fc.get("/stats").unwrap();
+        let v = json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+        assert_eq!(v.get("role").unwrap().as_str(), Some("follower"));
+
+        let (status, body) = fc.post("/promote", b"").unwrap();
+        assert_eq!(status, 200);
+        let v = json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+        assert_eq!(v.get("promoted").unwrap().as_bool(), Some(true));
+        let epoch = v.get("epoch").unwrap().as_u64().unwrap();
+        assert!(epoch >= 2, "promotion must bump past the primary's epoch");
+        assert!(!fsvc.is_follower());
+
+        // Idempotent: promoting a primary reports, never re-bumps.
+        let (_, body) = fc.post("/promote", b"").unwrap();
+        let v = json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+        assert_eq!(v.get("promoted").unwrap().as_bool(), Some(false));
+        assert_eq!(v.get("epoch").unwrap().as_u64(), Some(epoch));
+
+        // Writable now, and sealed replies carry the bumped epoch.
+        let traj = vec![(call("c"), ToolResult::new("rc", 1.0))];
+        let mut buf = Vec::new();
+        wire::enc_insert(&mut buf, "t2", &traj);
+        let (status, body) = fc.post("/put", &buf).unwrap();
+        assert_eq!(status, 200);
+        assert_eq!(wire::resp_epoch(&body), Some(epoch));
+        assert!(wire::dec_u64_resp(&body).unwrap() > 0);
+    }
+
+    #[test]
+    fn drain_waits_for_the_follower_and_refuses_new_sessions() {
+        let (psrv, _psvc, _fsrv, fsvc) = replicated_pair();
+        let mut pc = HttpClient::connect(psrv.addr());
+        pc.post("/put", put_body("t", &[("a", "ra")]).as_bytes()).unwrap();
+
+        let (status, body) = pc.post("/drain", b"").unwrap();
+        assert_eq!(status, 200);
+        let v = json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+        assert_eq!(v.get("caught_up").unwrap().as_bool(), Some(true));
+        assert!(v.get("final_seq").unwrap().as_u64().unwrap() >= 1);
+
+        // New sessions are refused after drain…
+        let mut buf = Vec::new();
+        wire::enc_cursor_open(&mut buf, "t");
+        let (_, body) = pc.post("/cursor_open", &buf).unwrap();
+        assert_eq!(wire::dec_u64_resp(&body), Some(0));
+        // …while plain reads keep answering.
+        let (_, body) =
+            pc.post("/get", lookup_body("t", &[call("a")]).as_bytes()).unwrap();
+        let v = json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+        assert_eq!(v.get("hit").unwrap().as_bool(), Some(true));
+        // The follower acknowledged the whole log before drain returned.
+        assert_eq!(fsvc.replica_lag_ops(), 0);
+        assert_eq!(fsvc.skipped_ops(), 0);
+    }
+
+    #[test]
+    fn replicate_without_an_oplog_is_rejected() {
+        let (server, _svc) = serve("127.0.0.1:0", 2).unwrap();
+        let mut c = HttpClient::connect(server.addr());
+        let (status, _) = c.get("/replicate?from=0").unwrap();
+        assert_eq!(status, 400);
     }
 
     #[test]

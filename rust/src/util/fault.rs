@@ -14,7 +14,9 @@
 //!   [`spill_read_fails`]): short writes / ENOSPC on the write path, read
 //!   errors on fault-in;
 //! * **background workers** ([`worker_stall`]): stalled eviction/sweep
-//!   ticks.
+//!   ticks;
+//! * the **replication seam** ([`replicate_fails`]): failed follower
+//!   pulls of the primary's op-log.
 //!
 //! Faults are drawn from one seeded [`Rng`], so a single-threaded driver
 //! replays the exact same fault sequence for a given seed; concurrent
@@ -55,10 +57,12 @@ pub enum Seam {
     SpillRead = 5,
     /// Background eviction/sweep worker tick stalled.
     WorkerTick = 6,
+    /// Follower replication pull failed (tail loop retries next tick).
+    Replicate = 7,
 }
 
 /// Number of [`Seam`] variants (length of the counter table).
-pub const SEAM_COUNT: usize = 7;
+pub const SEAM_COUNT: usize = 8;
 
 /// Per-seam fault probabilities plus the PRNG seed. All probabilities
 /// default to zero; a test arms only the seams it is exercising.
@@ -95,6 +99,9 @@ pub struct FaultPlan {
     pub p_worker_stall: f64,
     /// How long a stalled worker tick sleeps.
     pub worker_stall: Duration,
+    /// P(a follower's `/replicate` pull fails — the tail loop skips the
+    /// tick and retries, so lag grows until a pull lands).
+    pub p_replicate_fail: f64,
     /// Restrict injection to the installing thread. Lib unit tests set
     /// this so a scope can never leak faults into unrelated tests running
     /// concurrently in the same process; the dedicated fault-injection
@@ -123,6 +130,7 @@ impl FaultPlan {
             p_spill_read_fail: 0.0,
             p_worker_stall: 0.0,
             worker_stall: Duration::from_millis(50),
+            p_replicate_fail: 0.0,
             thread_scoped: false,
         }
     }
@@ -169,6 +177,7 @@ static SCOPE: Mutex<()> = Mutex::new(());
 /// Cumulative per-seam injection counts; monotonic for the process
 /// lifetime so statistics never run backwards between scopes.
 static COUNTS: [AtomicU64; SEAM_COUNT] = [
+    AtomicU64::new(0),
     AtomicU64::new(0),
     AtomicU64::new(0),
     AtomicU64::new(0),
@@ -344,6 +353,16 @@ pub fn worker_stall() -> Option<Duration> {
     Some(d)
 }
 
+/// Replication seam: `true` fails this follower pull of the primary's
+/// op-log (the tail loop retries next tick; lag grows until one lands).
+pub fn replicate_fails() -> bool {
+    if with_plan(|plan, rng| roll(rng, plan.p_replicate_fail).then_some(())).is_some() {
+        note(Seam::Replicate);
+        return true;
+    }
+    false
+}
+
 /// Deterministic body corruption: enough to break any framed decode while
 /// keeping the transport-visible length unchanged.
 pub fn garble(body: &mut [u8]) {
@@ -372,6 +391,7 @@ mod tests {
         assert!(spill_write_error().is_none());
         assert!(!spill_read_fails());
         assert!(worker_stall().is_none());
+        assert!(!replicate_fails());
         let mut body = vec![1, 2, 3];
         assert!(recv_fault(&mut body).is_ok());
         assert_eq!(body, vec![1, 2, 3]);

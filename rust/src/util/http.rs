@@ -22,6 +22,10 @@ use super::threadpool::ThreadPool;
 pub const DEFAULT_CONNECT_TIMEOUT: Duration = Duration::from_secs(2);
 /// Default client read deadline per response.
 pub const DEFAULT_READ_TIMEOUT: Duration = Duration::from_secs(30);
+/// Default per-connection server read deadline: a peer that connects and
+/// then trickles (or never finishes) a request — the slowloris pattern —
+/// is dropped after this long, freeing its pool worker.
+pub const DEFAULT_SERVER_READ_DEADLINE: Duration = Duration::from_secs(30);
 
 /// A parsed HTTP request.
 #[derive(Debug, Clone)]
@@ -109,6 +113,7 @@ impl Response {
             404 => "404 Not Found",
             409 => "409 Conflict",
             500 => "500 Internal Server Error",
+            503 => "503 Service Unavailable",
             _ => "200 OK",
         }
     }
@@ -125,8 +130,22 @@ pub struct Server {
 
 impl Server {
     /// Bind to `addr` (use port 0 for an ephemeral port) and serve `handler`
-    /// on a pool of `workers` threads.
+    /// on a pool of `workers` threads, with the default per-connection read
+    /// deadline ([`DEFAULT_SERVER_READ_DEADLINE`]).
     pub fn bind(addr: &str, workers: usize, handler: Handler) -> std::io::Result<Server> {
+        Self::bind_with(addr, workers, handler, DEFAULT_SERVER_READ_DEADLINE)
+    }
+
+    /// [`Server::bind`] with an explicit per-connection read deadline: any
+    /// single blocking read (request line, header line, body chunk) that
+    /// stalls past `read_deadline` drops the connection, so a slowloris
+    /// peer can hold a pool worker for at most one deadline.
+    pub fn bind_with(
+        addr: &str,
+        workers: usize,
+        handler: Handler,
+        read_deadline: Duration,
+    ) -> std::io::Result<Server> {
         let listener = TcpListener::bind(addr)?;
         let local = listener.local_addr()?;
         listener.set_nonblocking(true)?;
@@ -143,7 +162,7 @@ impl Server {
                     match listener.accept() {
                         Ok((stream, _)) => {
                             let h = Arc::clone(&handler);
-                            pool.execute(move || serve_connection(stream, h));
+                            pool.execute(move || serve_connection(stream, h, read_deadline));
                         }
                         Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                             std::thread::sleep(Duration::from_micros(200));
@@ -173,9 +192,9 @@ impl Drop for Server {
     }
 }
 
-fn serve_connection(stream: TcpStream, handler: Handler) {
+fn serve_connection(stream: TcpStream, handler: Handler, read_deadline: Duration) {
     let _ = stream.set_nodelay(true);
-    let _ = stream.set_read_timeout(Some(Duration::from_secs(30)));
+    let _ = stream.set_read_timeout(Some(read_deadline));
     let mut reader = BufReader::new(match stream.try_clone() {
         Ok(s) => s,
         Err(_) => return,
@@ -581,6 +600,28 @@ mod tests {
         for h in handles {
             h.join().unwrap();
         }
+    }
+
+    #[test]
+    fn slowloris_connection_cannot_starve_the_pool() {
+        // One worker, a 100 ms read deadline, and a peer that sends half a
+        // request line then stalls forever: the deadline must free the
+        // worker, so a well-formed request completes right after.
+        let handler: Handler = Arc::new(|_req: &Request| Response::text(200, "ok"));
+        let server =
+            Server::bind_with("127.0.0.1:0", 1, handler, Duration::from_millis(100)).unwrap();
+        let mut slow = TcpStream::connect(server.addr()).unwrap();
+        slow.write_all(b"GET /pi").unwrap(); // never finished
+        slow.flush().unwrap();
+        let start = std::time::Instant::now();
+        let mut c = HttpClient::connect(server.addr());
+        let (status, body) = c.get("/anything").unwrap();
+        assert_eq!((status, body.as_slice()), (200, b"ok".as_slice()));
+        assert!(
+            start.elapsed() < Duration::from_secs(5),
+            "stalled peer held the only worker past its read deadline"
+        );
+        drop(slow);
     }
 
     #[test]

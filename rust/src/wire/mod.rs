@@ -25,19 +25,31 @@
 //!
 //! Responses are binary only on binary requests (no magic byte — content
 //! is negotiated by the request), and every binary response carries a
-//! trailing FNV-1a-32 checksum ([`seal_resp`], verified and stripped by
-//! [`Reader::response`]): a frame corrupted in flight fails the checksum
-//! and degrades to a miss/fallback at the client instead of decoding to a
+//! 12-byte trailer ([`seal_resp`], verified and stripped by
+//! [`Reader::response`]): the server's **fencing epoch** (8 bytes LE, PR
+//! 8) followed by an FNV-1a-32 checksum over payload + epoch. The
+//! checksum turns a frame corrupted in flight into a decode failure that
+//! degrades to a miss/fallback at the client instead of decoding to a
 //! plausible-but-wrong value (varints have no redundancy of their own — a
-//! bit-flipped node-id frame would otherwise decode cleanly to a different
-//! node). The cold admin endpoints (`/stats`, `/persist`, `/warm_start`,
-//! `/viz`, `/snapshot`) stay JSON: they run once per epoch or per
-//! incident, human-debuggable output there is worth more than bytes, and
-//! a JSON object truncated or corrupted in flight fails to parse.
+//! bit-flipped node-id frame would otherwise decode cleanly to a
+//! different node). The epoch rides *every* sealed frame — including the
+//! `/capabilities` handshake — so a client that has seen a promotion can
+//! reject answers from a revived stale primary ([`resp_epoch`]) without a
+//! round trip of its own. The cold admin endpoints (`/stats`, `/persist`,
+//! `/warm_start`, `/viz`, `/snapshot`) stay JSON: they run once per epoch
+//! or per incident, human-debuggable output there is worth more than
+//! bytes, and a JSON object truncated or corrupted in flight fails to
+//! parse.
+//!
+//! The replication pull (`/replicate?from=`) is binary too: a
+//! [`ReplicateBatch`] of tagged [`Op`] frames ([`enc_replicate_resp`] /
+//! [`dec_replicate_resp`]), sealed like every other response so a garbled
+//! batch can never replay into a follower.
 
 use crate::cache::backend::{Capabilities, TurnBatch, TurnOp, TurnReply};
 use crate::cache::key::{ToolCall, ToolResult};
 use crate::cache::lpm::{CursorStep, Lookup, Miss};
+use crate::cache::oplog::Op;
 use crate::cache::tcg::{NodeId, SnapshotRef};
 
 /// First byte of every binary request body (never `{`, so JSON sniffing
@@ -66,12 +78,35 @@ fn fnv1a32(bytes: &[u8]) -> u32 {
     h
 }
 
-/// Seal a complete binary *response* frame: append the FNV-1a-32 of the
-/// bytes written so far. Every top-level `enc_*_resp` ends with this;
-/// [`Reader::response`] is the matching verifier.
-pub fn seal_resp(buf: &mut Vec<u8>) {
+/// Size of the sealed-response trailer: 8-byte epoch + 4-byte checksum.
+pub const RESP_TRAILER: usize = 12;
+
+/// Seal a complete binary *response* frame: append the server's fencing
+/// epoch (8 bytes LE) and the FNV-1a-32 of everything written so far
+/// (payload + epoch, so a flipped epoch fails the checksum too). Every
+/// top-level `enc_*_resp` ends with this; [`Reader::response`] is the
+/// matching verifier and [`resp_epoch`] the fence-side extractor.
+pub fn seal_resp(buf: &mut Vec<u8>, epoch: u64) {
+    buf.extend_from_slice(&epoch.to_le_bytes());
     let sum = fnv1a32(buf);
     buf.extend_from_slice(&sum.to_le_bytes());
+}
+
+/// Verify a sealed response frame and extract its fencing epoch. Returns
+/// `None` on truncation or checksum failure — exactly when
+/// [`Reader::response`] would. Clients compare this against the highest
+/// epoch they have seen and reject lower ones (split-brain guard).
+pub fn resp_epoch(body: &[u8]) -> Option<u64> {
+    if body.len() < RESP_TRAILER {
+        return None;
+    }
+    let (sealed, trailer) = body.split_at(body.len() - 4);
+    let want = u32::from_le_bytes([trailer[0], trailer[1], trailer[2], trailer[3]]);
+    if fnv1a32(sealed) != want {
+        return None;
+    }
+    let epoch = &sealed[sealed.len() - 8..];
+    Some(u64::from_le_bytes(epoch.try_into().ok()?))
 }
 
 // ---- primitive writers -------------------------------------------------
@@ -129,15 +164,17 @@ impl<'a> Reader<'a> {
     }
 
     /// Open a *response* frame (no magic byte): verifies and strips the
-    /// trailing [`seal_resp`] checksum. A truncated or corrupted frame
-    /// fails here, so response decoders only ever see intact bytes.
+    /// [`seal_resp`] trailer (epoch + checksum). A truncated or corrupted
+    /// frame fails here, so response decoders only ever see intact bytes.
+    /// The epoch is policy, not framing — callers that fence read it
+    /// separately via [`resp_epoch`] before decoding.
     pub fn response(body: &'a [u8]) -> Option<Reader<'a>> {
-        if body.len() < 4 {
+        if body.len() < RESP_TRAILER {
             return None;
         }
-        let (payload, trailer) = body.split_at(body.len() - 4);
+        let (sealed, trailer) = body.split_at(body.len() - 4);
         let want = u32::from_le_bytes([trailer[0], trailer[1], trailer[2], trailer[3]]);
-        (fnv1a32(payload) == want).then_some(Reader { b: payload })
+        (fnv1a32(sealed) == want).then_some(Reader { b: &sealed[..sealed.len() - 8] })
     }
 
     pub fn u8(&mut self) -> Option<u8> {
@@ -169,6 +206,11 @@ impl<'a> Reader<'a> {
         let (head, rest) = self.b.split_at(n);
         self.b = rest;
         Some(head)
+    }
+
+    /// Raw bytes of a known length (callers read the varint length first).
+    pub fn take_bytes(&mut self, n: usize) -> Option<&'a [u8]> {
+        self.take(n)
     }
 
     pub fn f64(&mut self) -> Option<f64> {
@@ -309,14 +351,14 @@ pub fn dec_hello(body: &[u8]) -> Option<u64> {
 /// bit2 turn_batch, bit3 payload_dedup)`. New capabilities claim further
 /// bits of the *same* flags byte, so the PR 4 frame layout is unchanged —
 /// old clients mask the bits they know, old servers leave bit3 clear.
-pub fn enc_caps_resp(buf: &mut Vec<u8>, proto: u64, caps: &Capabilities) {
+pub fn enc_caps_resp(buf: &mut Vec<u8>, proto: u64, caps: &Capabilities, epoch: u64) {
     put_varint(buf, proto);
     let flags = (caps.binary as u8)
         | ((caps.cursors as u8) << 1)
         | ((caps.turn_batch as u8) << 2)
         | ((caps.payload_dedup as u8) << 3);
     buf.push(flags);
-    seal_resp(buf);
+    seal_resp(buf, epoch);
 }
 
 pub fn dec_caps_resp(body: &[u8]) -> Option<(u64, Capabilities)> {
@@ -385,7 +427,7 @@ pub fn dec_turn_req(body: &[u8]) -> Option<(String, u64, TurnBatch)> {
 /// Turn response: `cursor (0 = refused), n_probes, n × (0 | 1 + result),
 /// op_tag, [step_resp | node]`. Self-describing, so the decoder needs no
 /// request context.
-pub fn enc_turn_resp(buf: &mut Vec<u8>, reply: &TurnReply) {
+pub fn enc_turn_resp(buf: &mut Vec<u8>, reply: &TurnReply, epoch: u64) {
     put_varint(buf, reply.cursor);
     put_varint(buf, reply.probes.len() as u64);
     for p in &reply.probes {
@@ -408,7 +450,7 @@ pub fn enc_turn_resp(buf: &mut Vec<u8>, reply: &TurnReply) {
         }
         (None, None) => buf.push(OP_NONE),
     }
-    seal_resp(buf);
+    seal_resp(buf, epoch);
 }
 
 pub fn dec_turn_resp(body: &[u8]) -> Option<TurnReply> {
@@ -478,7 +520,7 @@ fn read_miss(r: &mut Reader) -> Option<Miss> {
 }
 
 /// Lookup response: `tag, …` (`1` hit: `node, result`; `0` miss).
-pub fn enc_lookup_resp(buf: &mut Vec<u8>, out: &Lookup) {
+pub fn enc_lookup_resp(buf: &mut Vec<u8>, out: &Lookup, epoch: u64) {
     match out {
         Lookup::Hit { node, result } => {
             buf.push(TAG_HIT);
@@ -487,7 +529,7 @@ pub fn enc_lookup_resp(buf: &mut Vec<u8>, out: &Lookup) {
         }
         Lookup::Miss(m) => put_miss(buf, m),
     }
-    seal_resp(buf);
+    seal_resp(buf, epoch);
 }
 
 pub fn dec_lookup_resp(body: &[u8]) -> Option<Lookup> {
@@ -515,9 +557,9 @@ fn put_step(buf: &mut Vec<u8>, out: &CursorStep) {
 }
 
 /// Cursor-step response: a lookup frame plus the `2` (invalid) tag.
-pub fn enc_step_resp(buf: &mut Vec<u8>, out: &CursorStep) {
+pub fn enc_step_resp(buf: &mut Vec<u8>, out: &CursorStep, epoch: u64) {
     put_step(buf, out);
-    seal_resp(buf);
+    seal_resp(buf, epoch);
 }
 
 /// Read one step-outcome frame body (shared by `/cursor_step` responses
@@ -538,9 +580,9 @@ pub fn dec_step_resp(body: &[u8]) -> Option<CursorStep> {
 }
 
 /// Node-id response (`/put`, `/cursor_record`, `/cursor_open`'s cursor id).
-pub fn enc_u64_resp(buf: &mut Vec<u8>, v: u64) {
+pub fn enc_u64_resp(buf: &mut Vec<u8>, v: u64, epoch: u64) {
     put_varint(buf, v);
-    seal_resp(buf);
+    seal_resp(buf, epoch);
 }
 
 pub fn dec_u64_resp(body: &[u8]) -> Option<u64> {
@@ -550,15 +592,200 @@ pub fn dec_u64_resp(body: &[u8]) -> Option<u64> {
 }
 
 /// Boolean response (`/cursor_seek`).
-pub fn enc_bool_resp(buf: &mut Vec<u8>, ok: bool) {
+pub fn enc_bool_resp(buf: &mut Vec<u8>, ok: bool, epoch: u64) {
     buf.push(ok as u8);
-    seal_resp(buf);
+    seal_resp(buf, epoch);
 }
 
 pub fn dec_bool_resp(body: &[u8]) -> Option<bool> {
     let mut r = Reader::response(body)?;
     let v = r.u8()?;
     r.done().then_some(v != 0)
+}
+
+// ---- replication frames (PR 8) -----------------------------------------
+
+/// [`Op`] tags in a `/replicate` batch.
+const OPR_INSERT: u8 = 1;
+const OPR_RECORD: u8 = 2;
+const OPR_ATTACH: u8 = 3;
+const OPR_RELEASE: u8 = 4;
+const OPR_WARM_FORK: u8 = 5;
+const OPR_EVICT_SNAPSHOT: u8 = 6;
+const OPR_EVICT_NODE: u8 = 7;
+
+/// One `/replicate?from=` pull's worth of op-log, decoded. The epoch is
+/// lifted out of the sealed trailer so the follower can fence its primary.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ReplicateBatch {
+    /// Sequence number of `ops[0]` — above the requested `from` exactly
+    /// when the primary's window no longer reaches back that far (the
+    /// follower must freeze rather than replay across the gap).
+    pub start: u64,
+    /// The primary's next sequence number (lag = `next − applied`).
+    pub next: u64,
+    /// The primary's shard count: replay is only faithful on a follower
+    /// with an identical shard topology (same router, same id strides).
+    pub shards: u64,
+    /// The primary's fencing epoch (from the sealed trailer).
+    pub epoch: u64,
+    pub ops: Vec<Op>,
+}
+
+fn put_op(buf: &mut Vec<u8>, op: &Op) {
+    match op {
+        Op::Insert { task, traj } => {
+            buf.push(OPR_INSERT);
+            put_str(buf, task);
+            put_varint(buf, traj.len() as u64);
+            for (c, r) in traj {
+                put_call(buf, c);
+                put_result(buf, r);
+            }
+        }
+        Op::Record { task, node, call, result } => {
+            buf.push(OPR_RECORD);
+            put_str(buf, task);
+            put_varint(buf, *node as u64);
+            put_call(buf, call);
+            put_result(buf, result);
+        }
+        Op::Attach { task, node, id, key, bytes, byte_len, serialize_cost, restore_cost } => {
+            buf.push(OPR_ATTACH);
+            put_str(buf, task);
+            put_varint(buf, *node as u64);
+            put_varint(buf, *id);
+            for lane in key.0 {
+                buf.extend_from_slice(&lane.to_le_bytes());
+            }
+            match bytes {
+                Some(b) => {
+                    buf.push(1);
+                    put_varint(buf, b.len() as u64);
+                    buf.extend_from_slice(b);
+                }
+                None => buf.push(0),
+            }
+            put_varint(buf, *byte_len);
+            put_f64(buf, *serialize_cost);
+            put_f64(buf, *restore_cost);
+        }
+        Op::Release { task, node } => {
+            buf.push(OPR_RELEASE);
+            put_str(buf, task);
+            put_varint(buf, *node as u64);
+        }
+        Op::WarmFork { task, node, warm } => {
+            buf.push(OPR_WARM_FORK);
+            put_str(buf, task);
+            put_varint(buf, *node as u64);
+            buf.push(*warm as u8);
+        }
+        Op::EvictSnapshot { task, node } => {
+            buf.push(OPR_EVICT_SNAPSHOT);
+            put_str(buf, task);
+            put_varint(buf, *node as u64);
+        }
+        Op::EvictNode { task, node } => {
+            buf.push(OPR_EVICT_NODE);
+            put_str(buf, task);
+            put_varint(buf, *node as u64);
+        }
+    }
+}
+
+fn read_op(r: &mut Reader) -> Option<Op> {
+    let tag = r.u8()?;
+    let task = r.str()?.to_string();
+    Some(match tag {
+        OPR_INSERT => {
+            let n = r.varint()? as usize;
+            let mut traj = Vec::with_capacity(n.min(1024));
+            for _ in 0..n {
+                let call = r.call()?;
+                let result = r.result()?;
+                traj.push((call, result));
+            }
+            Op::Insert { task, traj }
+        }
+        OPR_RECORD => {
+            let node = r.varint()? as NodeId;
+            let call = r.call()?;
+            let result = r.result()?;
+            Op::Record { task, node, call, result }
+        }
+        OPR_ATTACH => {
+            let node = r.varint()? as NodeId;
+            let id = r.varint()?;
+            let key = crate::cache::payload::ContentKey([
+                r.u64_le()?,
+                r.u64_le()?,
+                r.u64_le()?,
+                r.u64_le()?,
+            ]);
+            let bytes = match r.u8()? {
+                0 => None,
+                1 => {
+                    let len = r.varint()?;
+                    if len > usize::MAX as u64 {
+                        return None;
+                    }
+                    Some(r.take_bytes(len as usize)?.to_vec())
+                }
+                _ => return None,
+            };
+            let byte_len = r.varint()?;
+            let serialize_cost = r.f64()?;
+            let restore_cost = r.f64()?;
+            Op::Attach { task, node, id, key, bytes, byte_len, serialize_cost, restore_cost }
+        }
+        OPR_RELEASE => Op::Release { task, node: r.varint()? as NodeId },
+        OPR_WARM_FORK => {
+            let node = r.varint()? as NodeId;
+            let warm = r.u8()? != 0;
+            Op::WarmFork { task, node, warm }
+        }
+        OPR_EVICT_SNAPSHOT => Op::EvictSnapshot { task, node: r.varint()? as NodeId },
+        OPR_EVICT_NODE => Op::EvictNode { task, node: r.varint()? as NodeId },
+        _ => return None,
+    })
+}
+
+/// `/replicate` response: `start, next, shards, n, n × op`, sealed with
+/// the primary's epoch like every binary response.
+pub fn enc_replicate_resp(
+    buf: &mut Vec<u8>,
+    start: u64,
+    next: u64,
+    shards: u64,
+    ops: &[Op],
+    epoch: u64,
+) {
+    put_varint(buf, start);
+    put_varint(buf, next);
+    put_varint(buf, shards);
+    put_varint(buf, ops.len() as u64);
+    for op in ops {
+        put_op(buf, op);
+    }
+    seal_resp(buf, epoch);
+}
+
+/// Follower side of the pull. `None` on truncation, corruption, or any
+/// unknown op tag — a batch that fails to decode is skipped whole (the
+/// follower re-pulls), never half-applied.
+pub fn dec_replicate_resp(body: &[u8]) -> Option<ReplicateBatch> {
+    let epoch = resp_epoch(body)?;
+    let mut r = Reader::response(body)?;
+    let start = r.varint()?;
+    let next = r.varint()?;
+    let shards = r.varint()?;
+    let n = r.varint()? as usize;
+    let mut ops = Vec::with_capacity(n.min(512));
+    for _ in 0..n {
+        ops.push(read_op(&mut r)?);
+    }
+    r.done().then_some(ReplicateBatch { start, next, shards, epoch, ops })
 }
 
 #[cfg(test)]
@@ -578,7 +805,7 @@ mod tests {
         for v in [0u64, 1, 127, 128, 300, u32::MAX as u64, u64::MAX] {
             let mut buf = Vec::new();
             put_varint(&mut buf, v);
-            seal_resp(&mut buf);
+            seal_resp(&mut buf, 7);
             let mut r = Reader::response(&buf).unwrap();
             assert_eq!(r.varint(), Some(v));
             assert!(r.done());
@@ -643,7 +870,7 @@ mod tests {
             Lookup::Miss(Miss { matched_node: 0, matched_calls: 0, resume: None });
         for want in [hit, miss_with_resume, plain_miss] {
             let mut buf = Vec::new();
-            enc_lookup_resp(&mut buf, &want);
+            enc_lookup_resp(&mut buf, &want, 7);
             assert_eq!(dec_lookup_resp(&buf), Some(want));
         }
     }
@@ -656,7 +883,7 @@ mod tests {
             CursorStep::Invalid,
         ] {
             let mut buf = Vec::new();
-            enc_step_resp(&mut buf, &want);
+            enc_step_resp(&mut buf, &want, 7);
             assert_eq!(dec_step_resp(&buf), Some(want));
         }
     }
@@ -695,7 +922,7 @@ mod tests {
         assert_eq!(dec_u64_resp(&[0x80]), None);
         // Trailing garbage is rejected by strict decoders.
         let mut buf = Vec::new();
-        enc_bool_resp(&mut buf, true);
+        enc_bool_resp(&mut buf, true, 7);
         buf.push(0);
         assert_eq!(dec_bool_resp(&buf), None);
     }
@@ -707,19 +934,19 @@ mod tests {
         // every such corruption into a decode failure.
         for v in [0u64, 1, 5, 127, 128, 300, 99_999] {
             let mut buf = Vec::new();
-            enc_u64_resp(&mut buf, v);
+            enc_u64_resp(&mut buf, v, 7);
             crate::util::fault::garble(&mut buf);
             assert_eq!(dec_u64_resp(&buf), None, "node id {v}");
         }
         for ok in [false, true] {
             let mut buf = Vec::new();
-            enc_bool_resp(&mut buf, ok);
+            enc_bool_resp(&mut buf, ok, 7);
             crate::util::fault::garble(&mut buf);
             assert_eq!(dec_bool_resp(&buf), None, "bool {ok}");
         }
         let hit = Lookup::Hit { node: 7, result: ToolResult::new("12 passed", 1.0) };
         let mut buf = Vec::new();
-        enc_lookup_resp(&mut buf, &hit);
+        enc_lookup_resp(&mut buf, &hit, 7);
         crate::util::fault::garble(&mut buf);
         assert_eq!(dec_lookup_resp(&buf), None, "garbled hit must not decode");
     }
@@ -785,7 +1012,7 @@ mod tests {
         ];
         for want in replies {
             let mut buf = Vec::new();
-            enc_turn_resp(&mut buf, &want);
+            enc_turn_resp(&mut buf, &want, 7);
             assert_eq!(dec_turn_resp(&buf), Some(want));
         }
     }
@@ -799,7 +1026,7 @@ mod tests {
 
         for caps in [Capabilities::V2, Capabilities::LEGACY, Capabilities::CORE] {
             let mut buf = Vec::new();
-            enc_caps_resp(&mut buf, Capabilities::PROTO_V2, &caps);
+            enc_caps_resp(&mut buf, Capabilities::PROTO_V2, &caps, 7);
             assert_eq!(dec_caps_resp(&buf), Some((Capabilities::PROTO_V2, caps)));
         }
     }
@@ -817,15 +1044,17 @@ mod tests {
                 payload_dedup: flags & 8 != 0,
             };
             let mut buf = Vec::new();
-            enc_caps_resp(&mut buf, Capabilities::PROTO_V2, &caps);
+            enc_caps_resp(&mut buf, Capabilities::PROTO_V2, &caps, 7);
             assert_eq!(dec_caps_resp(&buf), Some((Capabilities::PROTO_V2, caps)));
             buf.push(0xAB);
             assert_eq!(dec_caps_resp(&buf), None, "trailing byte at flags {flags}");
         }
         // A future server may claim bits this client does not know: the
         // unknown high bits are masked off, never a parse failure.
+        let mut raw = vec![2u8, 0xFF];
+        seal_resp(&mut raw, 1);
         assert_eq!(
-            dec_caps_resp(&[2, 0xFF]),
+            dec_caps_resp(&raw),
             Some((2, Capabilities::V2)),
             "unknown capability bits must be ignored"
         );
@@ -866,12 +1095,13 @@ mod tests {
                 })),
                 recorded: None,
             },
+            7,
         );
         for cut in 0..resp.len() {
             assert_eq!(dec_turn_resp(&resp[..cut]), None, "truncated resp at {cut}");
         }
         let mut caps = Vec::new();
-        enc_caps_resp(&mut caps, Capabilities::PROTO_V2, &Capabilities::V2);
+        enc_caps_resp(&mut caps, Capabilities::PROTO_V2, &Capabilities::V2, 7);
         for cut in 0..caps.len() {
             assert_eq!(dec_caps_resp(&caps[..cut]), None, "truncated caps at {cut}");
         }
@@ -906,5 +1136,127 @@ mod tests {
         let mut buf = Vec::new();
         enc_release(&mut buf, "t", 3);
         assert!(is_binary(&buf));
+    }
+
+    fn sample_ops() -> Vec<Op> {
+        use crate::cache::payload::ContentKey;
+        vec![
+            Op::Insert {
+                task: "t".into(),
+                traj: vec![(ToolCall::new("bash", "make"), ToolResult::new("ok", 1.0))],
+            },
+            Op::Record {
+                task: "t".into(),
+                node: 3,
+                call: ToolCall::stateless("bash", "ls"),
+                result: ToolResult { output: "a\nb".into(), exec_time: 0.25, api_tokens: 4 },
+            },
+            Op::Attach {
+                task: "t".into(),
+                node: 3,
+                id: 9,
+                key: ContentKey([1, 2, 3, u64::MAX]),
+                bytes: Some(vec![0xDE, 0xAD, 0xBE, 0xEF]),
+                byte_len: 4,
+                serialize_cost: 0.5,
+                restore_cost: 0.75,
+            },
+            // Dedup'd attach: content already shipped, bytes elided.
+            Op::Attach {
+                task: "t2".into(),
+                node: 4,
+                id: 10,
+                key: ContentKey([5, 6, 7, 8]),
+                bytes: None,
+                byte_len: 1024,
+                serialize_cost: 0.5,
+                restore_cost: 0.75,
+            },
+            Op::Release { task: "t".into(), node: 5 },
+            Op::WarmFork { task: "t".into(), node: 6, warm: true },
+            Op::EvictSnapshot { task: "t".into(), node: 7 },
+            Op::EvictNode { task: "other-task".into(), node: 8 },
+        ]
+    }
+
+    #[test]
+    fn replicate_batch_roundtrip_every_op_variant() {
+        let ops = sample_ops();
+        let mut buf = Vec::new();
+        enc_replicate_resp(&mut buf, 40, 48, 4, &ops, 3);
+        let got = dec_replicate_resp(&buf).unwrap();
+        assert_eq!(got.start, 40);
+        assert_eq!(got.next, 48);
+        assert_eq!(got.shards, 4);
+        assert_eq!(got.epoch, 3, "epoch rides the sealed trailer");
+        assert_eq!(got.ops, ops);
+        // Empty batch (follower caught up) roundtrips too.
+        let mut buf = Vec::new();
+        enc_replicate_resp(&mut buf, 48, 48, 4, &[], 3);
+        let got = dec_replicate_resp(&buf).unwrap();
+        assert!(got.ops.is_empty());
+        assert_eq!((got.start, got.next), (48, 48));
+    }
+
+    #[test]
+    fn replicate_frames_survive_truncation_and_garble_fuzz() {
+        let mut buf = Vec::new();
+        enc_replicate_resp(&mut buf, 0, 8, 1, &sample_ops(), 1);
+        // Truncation at every offset: the checksum trailer makes every
+        // prefix fail verification, so a half-received batch can never
+        // half-apply into a follower.
+        for cut in 0..buf.len() {
+            assert_eq!(dec_replicate_resp(&buf[..cut]), None, "truncated at {cut}");
+        }
+        let mut garbled = buf.clone();
+        crate::util::fault::garble(&mut garbled);
+        assert_eq!(dec_replicate_resp(&garbled), None, "garbled batch must not decode");
+    }
+
+    #[test]
+    fn replicate_rejects_unknown_op_tags() {
+        // A frame from a newer primary with op kinds this follower does
+        // not know must be rejected whole, never partially applied.
+        let mut buf = Vec::new();
+        put_varint(&mut buf, 0); // start
+        put_varint(&mut buf, 1); // next
+        put_varint(&mut buf, 1); // shards
+        put_varint(&mut buf, 1); // n
+        let tag_at = buf.len();
+        put_op(&mut buf, &Op::Release { task: "t".into(), node: 1 });
+        buf[tag_at] = 0xEE;
+        seal_resp(&mut buf, 1);
+        assert_eq!(dec_replicate_resp(&buf), None);
+    }
+
+    #[test]
+    fn resp_epoch_extracts_and_fences() {
+        // Every sealed frame carries its server's epoch...
+        let mut buf = Vec::new();
+        enc_u64_resp(&mut buf, 42, 6);
+        assert_eq!(resp_epoch(&buf), Some(6));
+        assert_eq!(dec_u64_resp(&buf), Some(42));
+        // ...including the handshake, so a client fences a stale primary
+        // without an extra round trip.
+        let mut caps = Vec::new();
+        enc_caps_resp(&mut caps, Capabilities::PROTO_V2, &Capabilities::V2, 9);
+        assert_eq!(resp_epoch(&caps), Some(9));
+        // A frame from a revived stale primary still *verifies* — the seal
+        // is integrity, not policy — but reports its lower epoch, which is
+        // what the client compares against the highest epoch it has seen.
+        let mut stale = Vec::new();
+        enc_u64_resp(&mut stale, 42, 1);
+        assert_eq!(resp_epoch(&stale), Some(1));
+        assert!(resp_epoch(&stale).unwrap() < resp_epoch(&buf).unwrap());
+        // Corruption anywhere — payload, epoch bytes, or checksum — kills
+        // extraction (FNV-1a over payload+epoch: any single-byte flip
+        // changes the sum).
+        for i in 0..buf.len() {
+            let mut bad = buf.clone();
+            bad[i] ^= 0x40;
+            assert_eq!(resp_epoch(&bad), None, "flipped byte {i}");
+        }
+        assert_eq!(resp_epoch(&[]), None);
+        assert_eq!(resp_epoch(&buf[..RESP_TRAILER - 1]), None);
     }
 }

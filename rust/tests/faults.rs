@@ -21,7 +21,7 @@ use tvcache::cache::{
 };
 use tvcache::client::{BindingConfig, RemoteBinding};
 use tvcache::sandbox::SandboxSnapshot;
-use tvcache::server::{serve, serve_service};
+use tvcache::server::{serve, serve_follower, serve_service};
 use tvcache::train::{
     run_concurrent, run_concurrent_on, run_workload, run_workload_on, ConcurrentOptions,
     SimOptions,
@@ -54,6 +54,7 @@ fn fast_cfg() -> BindingConfig {
         breaker_threshold: 1000,
         breaker_cooldown: Duration::from_secs(60),
         seed: 0x5EED,
+        endpoints: Vec::new(),
     }
 }
 
@@ -552,6 +553,199 @@ fn concurrent_rollouts_with_dead_server_match_cacheless() {
 
 // ─────────────────────────── seeded chaos run ───────────────────────────────
 
+// ──────────────────── replication, failover, fencing ────────────────────────
+
+/// Poll a remote lookup until it hits (the follower tails on a 5 ms tick,
+/// so convergence is quick). HTTP on purpose: resume offers over the wire
+/// are unpinned server-side, so polling cannot leak pins the way an
+/// in-process lookup would.
+fn await_remote_hit(probe: &RemoteBinding, task: &str, call: &ToolCall) {
+    let deadline = std::time::Instant::now() + Duration::from_secs(5);
+    while !probe.lookup(task, std::slice::from_ref(call)).is_hit() {
+        assert!(
+            std::time::Instant::now() < deadline,
+            "follower never served {task:?} — replication stalled"
+        );
+        std::thread::sleep(Duration::from_millis(5));
+    }
+}
+
+/// A 2-shard service with an op-log, optionally with the spill tier armed
+/// (budget small enough that background eviction actually demotes to disk).
+fn replicated_svc(tag: &str, spill: bool) -> ShardedCacheService {
+    ShardedCacheService::with_config(
+        ServiceConfig {
+            shards: 2,
+            replicate_window: Some(1 << 16),
+            shard_byte_budget: spill.then_some(64 * 1024),
+            spill_dir: spill.then(|| tmpdir(tag)),
+            background: spill,
+            session_sweep_tick: Duration::from_millis(25),
+            ..Default::default()
+        },
+        Arc::new(TaskCache::with_defaults),
+    )
+    .unwrap()
+}
+
+/// The acceptance bar for this PR, run against one backend flavor: primary
+/// + warm follower, a concurrent run warms the pair, the primary dies, and
+/// the next epoch's rollouts fail over mid-run. Rewards must be
+/// bit-identical to the no-fault reference, the failover must be exactly
+/// one promote-and-switch, and the post-failover hit count must recover to
+/// ≥ 80% of the no-fault run's.
+fn kill_primary_scenario(tag: &str, spill: bool) {
+    let _scope = fault::install(fault::FaultPlan::quiet(22)); // serialize I/O tests
+    let cfg = WorkloadConfig::config_for(Workload::TerminalEasy);
+    let mut opts = ConcurrentOptions::from_config(&cfg, 3);
+    opts.epochs = 1;
+    opts.threads = 4;
+
+    // No-fault reference: warm epoch + measured epoch on one healthy server.
+    let (ref_server, _ref_svc) =
+        serve_service("127.0.0.1:0", 4, replicated_svc(&format!("{tag}-ref"), spill)).unwrap();
+    let ref_binding = Arc::new(RemoteBinding::connect_with(ref_server.addr(), fast_cfg()));
+    let warm_ref =
+        run_concurrent_on(&cfg, &opts, Arc::clone(&ref_binding) as Arc<dyn SessionBackend>);
+    let nofault =
+        run_concurrent_on(&cfg, &opts, Arc::clone(&ref_binding) as Arc<dyn SessionBackend>);
+    assert!(nofault.hits > 0, "the no-fault reference must run warm");
+
+    // Replicated pair: the follower tails the primary from sequence 0.
+    let (p_server, _p_svc) =
+        serve_service("127.0.0.1:0", 4, replicated_svc(&format!("{tag}-p"), spill)).unwrap();
+    let (f_server, f_svc) = serve_follower(
+        "127.0.0.1:0",
+        4,
+        replicated_svc(&format!("{tag}-f"), spill),
+        p_server.addr(),
+    )
+    .unwrap();
+    assert!(f_svc.is_follower());
+
+    // Threshold 6 > the 4 worker threads: stale in-flight dials against the
+    // just-dead endpoint can never re-trip the breaker after the failover
+    // resets it. Cooldown short so even a surprise re-open self-heals.
+    let binding = Arc::new(RemoteBinding::connect_with(
+        p_server.addr(),
+        BindingConfig {
+            retries: 0,
+            breaker_threshold: 6,
+            breaker_cooldown: Duration::from_millis(200),
+            endpoints: vec![f_server.addr()],
+            ..fast_cfg()
+        },
+    ));
+
+    // Warm epoch on the primary (rewards already match the reference).
+    let warm = run_concurrent_on(&cfg, &opts, Arc::clone(&binding) as Arc<dyn SessionBackend>);
+    assert_eq!(warm.rewards, warm_ref.rewards, "cold-cache epoch changed rewards");
+    // The op-log is ordered, so once this sentinel — the newest entry —
+    // is served by the follower, everything the warm epoch wrote is too.
+    binding.insert(tag, &traj(&["sentinel"])).expect("sentinel insert on the primary");
+    let probe = RemoteBinding::connect_with(f_server.addr(), fast_cfg());
+    await_remote_hit(&probe, tag, &bash("sentinel"));
+    assert_eq!(f_svc.replica_lag_ops(), 0, "caught-up follower must report zero lag");
+    assert_eq!(f_svc.skipped_ops(), 0);
+
+    // Kill the primary. The next epoch starts against a dead endpoint:
+    // the breaker trips within the first rollouts, the binding promotes
+    // the follower mid-run, and sessions re-seed there.
+    drop(p_server);
+    let t0 = std::time::Instant::now();
+    let failed_over =
+        run_concurrent_on(&cfg, &opts, Arc::clone(&binding) as Arc<dyn SessionBackend>);
+
+    assert_eq!(
+        failed_over.rollouts_run, nofault.rollouts_run,
+        "every rollout must finish through the failover"
+    );
+    assert_eq!(failed_over.rewards, nofault.rewards, "failover changed rollout rewards");
+    assert_eq!(binding.failovers(), 1, "exactly one promote-and-switch");
+    assert!(!f_svc.is_follower(), "the follower must have been promoted");
+    assert!(f_svc.epoch() >= 2, "promotion must bump the fencing epoch");
+    assert!(binding.max_epoch_seen() >= 2);
+    assert!(
+        failed_over.hits as f64 >= 0.8 * nofault.hits as f64,
+        "post-failover hit count must recover to ≥ 80% of no-fault: {} vs {}",
+        failed_over.hits,
+        nofault.hits
+    );
+    assert!(
+        t0.elapsed() < Duration::from_secs(30),
+        "failed-over run must stay deadline-bounded"
+    );
+}
+
+#[test]
+fn kill_primary_fails_over_memory_backend() {
+    kill_primary_scenario("kp-mem", false);
+}
+
+#[test]
+fn kill_primary_fails_over_spill_backend() {
+    kill_primary_scenario("kp-spill", true);
+}
+
+/// The split-brain guard, client side: after the world has moved to epoch
+/// 2, a still-alive epoch-1 primary (deposed, but never told) answers
+/// `/promote` probes with its stale epoch — the binding must refuse to
+/// fail over to it and bypass the cache instead.
+#[test]
+fn revived_stale_primary_is_fenced_not_failed_over_to() {
+    let _scope = fault::install(fault::FaultPlan::quiet(23)); // serialize I/O tests
+    let (a_server, a_svc) =
+        serve_service("127.0.0.1:0", 2, replicated_svc("fence-a", false)).unwrap();
+    let (b_server, b_svc) =
+        serve_follower("127.0.0.1:0", 2, ShardedCacheService::new(2), a_server.addr()).unwrap();
+    let b_addr = b_server.addr();
+
+    // Warm A; B replicates the entry.
+    let seeder = RemoteBinding::connect_with(a_server.addr(), fast_cfg());
+    seeder.insert("fence", &traj(&["make"])).expect("insert on the primary");
+    let b_probe = RemoteBinding::connect_with(b_addr, fast_cfg());
+    await_remote_hit(&b_probe, "fence", &bash("make"));
+
+    // B is promoted out-of-band (some other client's failover): epoch 2.
+    // A keeps running at epoch 1 — it is the revived stale primary.
+    let mut c =
+        HttpClient::with_deadlines(b_addr, Duration::from_millis(500), Duration::from_secs(2));
+    assert_eq!(c.post("/promote", b"").unwrap().0, 200);
+    assert!(!b_svc.is_follower());
+    assert_eq!(b_svc.epoch(), 2);
+    assert_eq!(a_svc.epoch(), 1, "the deposed primary never learns it was deposed");
+
+    // A client lands on B and learns epoch 2 from its sealed frames.
+    let binding = RemoteBinding::connect_with(
+        b_addr,
+        BindingConfig {
+            retries: 0,
+            breaker_threshold: 2,
+            endpoints: vec![a_server.addr()],
+            ..fast_cfg()
+        },
+    );
+    assert!(binding.lookup("fence", &[bash("make")]).is_hit());
+    assert_eq!(binding.max_epoch_seen(), 2);
+
+    // B dies. The breaker opens and the failover probe reaches A — whose
+    // promote answer still says epoch 1. The fence rejects it: bypassing
+    // the cache entirely beats trusting a server with forked state.
+    drop(b_server);
+    for _ in 0..2 {
+        assert!(!binding.lookup("fence", &[bash("make")]).is_hit());
+    }
+    assert_eq!(binding.breaker_state(), "open");
+    assert_eq!(binding.failovers(), 0, "a stale primary must never win a failover");
+    assert!(binding.epoch_rejects() >= 1, "the rejection must be counted");
+    assert_eq!(binding.active_endpoint(), b_addr, "the binding must not have switched");
+    // Degraded, not wrong: ops fast-fail along the usual ladders.
+    assert_eq!(binding.insert("fence", &traj(&["make", "x"])), None);
+    let stats = binding.service_stats();
+    assert_eq!(stats.failovers, 0);
+    assert!(stats.epoch_rejects >= 1);
+}
+
 /// The chaos CI entry point: every seam armed at once with moderate
 /// probabilities, seed taken from `TVCACHE_FAULT_SEED`, a live server with
 /// budgets + spill + background workers behind a retrying/breaking
@@ -579,12 +773,19 @@ fn chaos_run_rewards_match_cacheless_for_seed() {
             spill_dir: Some(dir.clone()),
             background: true,
             session_sweep_tick: Duration::from_millis(25),
+            replicate_window: Some(1 << 16),
             ..Default::default()
         },
         Arc::new(TaskCache::with_defaults),
     )
     .unwrap();
     let (server, _svc) = serve_service("127.0.0.1:0", 4, svc).unwrap();
+    // A warm follower tails the chaos primary throughout the run — the
+    // replication seam is armed below, so its pull loop sees dropped and
+    // garbled batches too. If the breaker trips mid-chaos the binding may
+    // legitimately promote it and finish the run there.
+    let (f_server, f_svc) =
+        serve_follower("127.0.0.1:0", 2, ShardedCacheService::new(2), server.addr()).unwrap();
     let binding = Arc::new(RemoteBinding::connect_with(
         server.addr(),
         BindingConfig {
@@ -596,6 +797,7 @@ fn chaos_run_rewards_match_cacheless_for_seed() {
             breaker_threshold: 4,
             breaker_cooldown: Duration::from_millis(50),
             seed,
+            endpoints: vec![f_server.addr()],
         },
     ));
 
@@ -614,6 +816,7 @@ fn chaos_run_rewards_match_cacheless_for_seed() {
         p_spill_read_fail: 0.2,
         p_worker_stall: 0.2,
         worker_stall: Duration::from_millis(10),
+        p_replicate_fail: 0.2,
         ..fault::FaultPlan::quiet(seed)
     };
     let t0 = std::time::Instant::now();
@@ -638,5 +841,22 @@ fn chaos_run_rewards_match_cacheless_for_seed() {
     );
     // The counters tell the story: faults were actually injected.
     assert!(fault::injected_total() > 0, "chaos plan injected nothing (seed {seed})");
+
+    // Replication converges once the chaos clears: a sentinel inserted now
+    // (through the binding — which may by now point at the primary or a
+    // mid-run-promoted follower) becomes visible on the follower. Dropped
+    // and garbled replication batches may only ever delay the tail, never
+    // corrupt or freeze it.
+    let deadline = std::time::Instant::now() + Duration::from_secs(10);
+    while binding.insert("chaos-sentinel", &traj(&["sentinel"])).is_none() {
+        assert!(
+            std::time::Instant::now() < deadline,
+            "binding never recovered after chaos (TVCACHE_FAULT_SEED={seed})"
+        );
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    let probe = RemoteBinding::connect_with(f_server.addr(), fast_cfg());
+    await_remote_hit(&probe, "chaos-sentinel", &bash("sentinel"));
+    drop(f_svc);
     let _ = std::fs::remove_dir_all(&dir);
 }
