@@ -87,6 +87,23 @@ pub struct BackendStats {
     /// The server's fencing epoch (1 for a fresh primary; promotion bumps
     /// past every epoch the old primary could have stamped).
     pub epoch: u64,
+    /// Ops appended to the in-memory op-log (and, when a WAL is attached,
+    /// to the durable log — the two never diverge by construction).
+    pub oplog_appended: u64,
+    /// Response bytes shipped over `/replicate` to tailing followers.
+    pub replicate_bytes_shipped: u64,
+    /// WAL segment files currently on disk (0 without `--wal-dir`).
+    pub wal_segments: u64,
+    /// Group fsyncs the WAL flusher has issued.
+    pub wal_fsyncs: u64,
+    /// Lifetime bytes framed into the WAL (record payloads + headers).
+    pub wal_appended_bytes: u64,
+    /// Whether the WAL tripped into sticky degraded mode (a write fault):
+    /// the service keeps serving, but appends stopped reaching disk.
+    pub wal_degraded: bool,
+    /// Crash recoveries this process performed at startup: checkpoint
+    /// warm-starts plus WAL replays that restored at least one op.
+    pub recoveries: u64,
 }
 
 impl BackendStats {
@@ -128,6 +145,18 @@ impl BackendStats {
             ("epoch_rejects", Json::num(self.epoch_rejects as f64)),
             ("replica_lag_ops", Json::num(self.replica_lag_ops as f64)),
             ("epoch", Json::num(self.epoch as f64)),
+            // Durability counters (PR 9) — appended last, same
+            // position-insensitive compatibility contract as above.
+            ("oplog_appended", Json::num(self.oplog_appended as f64)),
+            (
+                "replicate_bytes_shipped",
+                Json::num(self.replicate_bytes_shipped as f64),
+            ),
+            ("wal_segments", Json::num(self.wal_segments as f64)),
+            ("wal_fsyncs", Json::num(self.wal_fsyncs as f64)),
+            ("wal_appended_bytes", Json::num(self.wal_appended_bytes as f64)),
+            ("wal_degraded", Json::Bool(self.wal_degraded)),
+            ("recoveries", Json::num(self.recoveries as f64)),
         ])
     }
 
@@ -170,6 +199,14 @@ impl BackendStats {
             epoch_rejects: g("epoch_rejects"),
             replica_lag_ops: g("replica_lag_ops"),
             epoch: g("epoch"),
+            // Absent on pre-WAL servers.
+            oplog_appended: g("oplog_appended"),
+            replicate_bytes_shipped: g("replicate_bytes_shipped"),
+            wal_segments: g("wal_segments"),
+            wal_fsyncs: g("wal_fsyncs"),
+            wal_appended_bytes: g("wal_appended_bytes"),
+            wal_degraded: v.get("wal_degraded").and_then(Json::as_bool).unwrap_or(false),
+            recoveries: g("recoveries"),
         })
     }
 }

@@ -16,6 +16,7 @@ pub mod snapshot;
 pub mod spill;
 pub mod store;
 pub mod tcg;
+pub mod wal;
 
 pub use backend::{
     BackendStats, CacheBackend, Capabilities, SessionBackend, TurnBatch, TurnOp, TurnReply,
@@ -31,3 +32,4 @@ pub use snapshot::{SnapshotCosts, SnapshotPolicy, SnapshotStore};
 pub use spill::{SpillSlot, SpillStore, SPILL_FAULT_PENALTY};
 pub use store::{CacheStats, TaskCache};
 pub use tcg::{NodeId, SnapshotRef, Tcg, ROOT};
+pub use wal::{Wal, WalOptions, DEFAULT_FSYNC_EVERY, DEFAULT_SEGMENT_BYTES};

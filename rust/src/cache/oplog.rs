@@ -20,11 +20,20 @@
 //! follower that falls further behind than the window reaches observes a
 //! *gap* — `read_from` returns a `start` above the requested `from` — and
 //! must stop applying rather than replay node-addressed ops against a
-//! divergent tree (see the follower loop in `server`).
+//! divergent tree. Since PR 9 a gapped follower *bootstraps* from the
+//! primary's `GET /bootstrap` checkpoint instead of freezing (see the
+//! follower loop in `server`).
+//!
+//! With a [`Wal`] attached ([`OpLog::with_wal`]), every push is also
+//! encoded into a CRC32-framed record in an on-disk segment — under the
+//! same guard, so the durable order is the apply order and a restarted
+//! primary replays back to the exact pre-crash state (`cache/wal.rs`).
 
 use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Mutex, MutexGuard};
+use std::sync::{Arc, Mutex, MutexGuard};
+
+use super::wal::Wal;
 
 use super::key::{ToolCall, ToolResult};
 use super::payload::ContentKey;
@@ -48,12 +57,15 @@ pub enum Op {
     /// of `key` in the window; `None` references an already-shipped
     /// payload. `byte_len` is always the payload length (the follower
     /// needs it for the `SnapshotRef` even when the bytes ride earlier).
+    /// The payload is an `Arc<[u8]>` so `/replicate` reads and window
+    /// trims share the one allocation instead of deep-cloning it under
+    /// the log mutex.
     Attach {
         task: String,
         node: NodeId,
         id: u64,
         key: ContentKey,
-        bytes: Option<Vec<u8>>,
+        bytes: Option<Arc<[u8]>>,
         byte_len: u64,
         serialize_cost: f64,
         restore_cost: f64,
@@ -82,6 +94,8 @@ struct LogInner {
     /// Content keys whose payload bytes ride an op still in the window,
     /// mapped to that op's sequence number (for window-eviction cleanup).
     logged_keys: HashMap<ContentKey, u64>,
+    /// Total ops ever pushed (stats counter; survives window trims).
+    appended: u64,
 }
 
 /// The primary's replication log. `begin()` hands out a guard that holds
@@ -94,26 +108,50 @@ pub struct OpLog {
     /// Highest `from` any follower pull acknowledged (a pull at `from`
     /// proves everything below `from` was applied). Drives `/drain`.
     acked: AtomicU64,
+    /// Durable tier: every pushed op is also appended here, under the
+    /// same guard (PR 9). `None` = in-memory-only log (PR 8 behavior).
+    wal: Option<Arc<Wal>>,
 }
 
 impl OpLog {
     pub fn new(window: usize) -> OpLog {
+        OpLog::with_wal(window, None, 0)
+    }
+
+    /// A log whose pushes are also appended to `wal`, numbering from
+    /// `start_seq` — the WAL's recovered `next_seq` on a restarted
+    /// primary, so the durable log stays dense across restarts (the
+    /// in-memory window restarts empty; followers below `start_seq`
+    /// observe a gap and bootstrap).
+    pub fn with_wal(window: usize, wal: Option<Arc<Wal>>, start_seq: u64) -> OpLog {
         OpLog {
             inner: Mutex::new(LogInner {
-                next_seq: 0,
-                start_seq: 0,
+                next_seq: start_seq,
+                start_seq,
                 ops: VecDeque::new(),
                 window: window.max(1),
                 logged_keys: HashMap::new(),
+                appended: 0,
             }),
             acked: AtomicU64::new(0),
+            wal,
         }
     }
 
     /// Lock the log around a mutation. Hold the guard across the state
     /// change *and* the [`LogGuard::push`] of its op.
     pub fn begin(&self) -> LogGuard<'_> {
-        LogGuard { inner: self.inner.lock().unwrap() }
+        LogGuard { inner: self.inner.lock().unwrap(), wal: self.wal.as_deref() }
+    }
+
+    /// The durable tier, when configured.
+    pub fn wal(&self) -> Option<&Arc<Wal>> {
+        self.wal.as_ref()
+    }
+
+    /// Total ops ever pushed (window trims do not decrement).
+    pub fn appended(&self) -> u64 {
+        self.inner.lock().unwrap().appended
     }
 
     /// Ops from `from` (capped at `max_ops`), plus the window's reach.
@@ -154,6 +192,7 @@ impl OpLog {
 /// Lock guard over the log (see [`OpLog::begin`]).
 pub struct LogGuard<'a> {
     inner: MutexGuard<'a, LogInner>,
+    wal: Option<&'a Wal>,
 }
 
 impl LogGuard<'_> {
@@ -164,16 +203,29 @@ impl LogGuard<'_> {
         !self.inner.logged_keys.contains_key(key)
     }
 
+    /// Sequence number the next [`LogGuard::push`] receives. Stable while
+    /// the guard is held — what `persist_to_dir` stamps its checkpoint
+    /// with.
+    pub fn next_seq(&self) -> u64 {
+        self.inner.next_seq
+    }
+
     /// Append `op`, returning its sequence number. Trims the window and
-    /// forgets content keys whose payload-carrying op aged out.
+    /// forgets content keys whose payload-carrying op aged out. With a
+    /// durable tier attached, the op is also appended to the WAL here —
+    /// same guard, so disk order == log order == apply order.
     pub fn push(&mut self, op: Op) -> u64 {
         let inner = &mut *self.inner;
         let seq = inner.next_seq;
         if let Op::Attach { key, bytes: Some(_), .. } = &op {
             inner.logged_keys.insert(*key, seq);
         }
+        if let Some(wal) = self.wal {
+            wal.append(seq, &op);
+        }
         inner.ops.push_back(op);
         inner.next_seq += 1;
+        inner.appended += 1;
         while inner.ops.len() > inner.window {
             let evicted = inner.ops.pop_front();
             let evicted_seq = inner.start_seq;
@@ -203,7 +255,7 @@ mod tests {
             id: 7,
             key,
             byte_len: bytes.as_ref().map(|b| b.len() as u64).unwrap_or(3),
-            bytes,
+            bytes: bytes.map(Into::into),
             serialize_cost: 0.1,
             restore_cost: 0.2,
         }
@@ -262,6 +314,33 @@ mod tests {
         let mut g = log.begin();
         g.push(attach(key, None));
         assert!(g.wants_bytes(&key), "a key-only attach never shipped the bytes");
+    }
+
+    #[test]
+    fn wal_attached_log_appends_every_push_durably() {
+        use crate::cache::wal::WalOptions;
+        let dir = std::env::temp_dir().join(format!(
+            "tvcache-oplog-wal-{}-{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let (wal, rec) = Wal::open(&dir, WalOptions::default()).unwrap();
+        let log = OpLog::with_wal(8, Some(Arc::new(wal)), rec.next_seq());
+        for i in 0..12 {
+            log.begin().push(rel("t", i));
+        }
+        assert_eq!(log.appended(), 12);
+        assert_eq!(log.next_seq(), 12);
+        drop(log);
+        // The durable log holds the full history, beyond the window of 8.
+        let (_, rec) = Wal::open(&dir, WalOptions::default()).unwrap();
+        assert_eq!(rec.ops.len(), 12);
+        assert_eq!(rec.ops[0], rel("t", 0));
+        // A restarted log resumes dense numbering from the WAL's tip.
+        let resumed = OpLog::with_wal(8, None, rec.next_seq());
+        assert_eq!(resumed.begin().push(rel("t", 99)), 12);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -33,13 +33,14 @@ use super::backend::{
 };
 use super::key::{ToolCall, ToolResult};
 use super::lpm::{CursorStep, Lookup};
-use super::oplog::{LogGuard, Op, OpLog};
+use super::oplog::{LogGuard, Op, OpLog, DEFAULT_OPLOG_WINDOW};
 use super::payload::{ContentKey, PayloadStore, DEFAULT_FAULT_CACHE_BYTES};
 use super::shard::{CacheFactory, Shard, ShardRouter};
 use super::snapshot::{SnapshotCosts, SnapshotStore};
 use super::spill::{self, SpillStore};
 use super::store::{CacheStats, TaskCache};
 use super::tcg::{NodeId, SnapshotRef};
+use super::wal::{Wal, WalOptions};
 use crate::sandbox::SandboxSnapshot;
 use crate::util::fault;
 use crate::util::json::{self, Json};
@@ -93,6 +94,20 @@ pub struct ServiceConfig {
     /// bounds primary memory; a follower that falls behind it observes a
     /// gap and freezes (see `read_from`).
     pub replicate_window: Option<usize>,
+    /// Durable write-ahead log directory (PR 9): every op-log append is
+    /// also CRC32-framed into append-only segment files here, and
+    /// `wal_dir/checkpoint` anchors crash recovery — construction
+    /// warm-starts the checkpoint and replays the WAL tail, so a restarted
+    /// primary is bit-identical to a never-crashed run up to the last
+    /// fsynced record. Implies an op-log even when `replicate_window` is
+    /// unset (the default window is used).
+    pub wal_dir: Option<PathBuf>,
+    /// WAL segment rotation threshold in bytes.
+    pub wal_segment_bytes: u64,
+    /// Group-fsync the WAL once this many records are unsynced (the
+    /// flusher also syncs on a timer, so the bound is records *or* time,
+    /// whichever comes first — the append hot path never fsyncs inline).
+    pub wal_fsync_every: u64,
 }
 
 /// Default [`ServiceConfig::session_idle_ttl`].
@@ -117,6 +132,9 @@ impl Default for ServiceConfig {
             session_sweep_tick: SESSION_SWEEP_TICK,
             fault_cache_bytes: DEFAULT_FAULT_CACHE_BYTES,
             replicate_window: None,
+            wal_dir: None,
+            wal_segment_bytes: super::wal::DEFAULT_SEGMENT_BYTES,
+            wal_fsync_every: super::wal::DEFAULT_FSYNC_EVERY,
         }
     }
 }
@@ -254,6 +272,12 @@ pub struct ShardedCacheService {
     /// mutation, so log order is apply order and a follower's sequential
     /// replay rebuilds bit-identical TCGs.
     oplog: Option<Arc<OpLog>>,
+    /// Last op sequence a checkpoint into `wal_dir/checkpoint` covered —
+    /// the checkpoint half of the WAL retention floor.
+    checkpoint_seq: AtomicU64,
+    /// Crash recoveries performed at construction (0 or 1: a checkpoint
+    /// warm-start and/or a WAL replay that restored state).
+    recoveries: AtomicU64,
 }
 
 impl ShardedCacheService {
@@ -312,8 +336,48 @@ impl ShardedCacheService {
             payloads,
             next_cursor: AtomicU64::new(1),
             oplog: None,
+            checkpoint_seq: AtomicU64::new(0),
+            recoveries: AtomicU64::new(0),
         };
-        svc.oplog = svc.cfg.replicate_window.map(|w| Arc::new(OpLog::new(w)));
+        if let Some(wdir) = svc.cfg.wal_dir.clone() {
+            let opts = WalOptions {
+                segment_bytes: svc.cfg.wal_segment_bytes,
+                fsync_every: svc.cfg.wal_fsync_every,
+                ..WalOptions::default()
+            };
+            let (wal, recovered) = Wal::open(&wdir, opts)?;
+            // Recovery ladder: warm-start the anchored checkpoint first
+            // (its `wal_seq` stamp names the op sequence it covers), then
+            // replay every durable WAL record at or past that sequence.
+            // Together they rebuild the exact pre-crash state up to the
+            // last fsynced record — nothing double-applied, nothing lost.
+            let ckpt = wdir.join("checkpoint");
+            let mut ckpt_seq = 0u64;
+            let mut recovered_any = false;
+            if ckpt.join("tcgs.json").is_file() {
+                let (loaded, seq) = svc.warm_start_with_seq(&ckpt)?;
+                ckpt_seq = seq;
+                recovered_any = loaded > 0 || seq > 0;
+            }
+            for (i, op) in recovered.ops.iter().enumerate() {
+                if recovered.start_seq + i as u64 >= ckpt_seq {
+                    svc.apply_op(op.clone());
+                    recovered_any = true;
+                }
+            }
+            if recovered_any {
+                svc.recoveries.store(1, Ordering::Relaxed);
+            }
+            svc.checkpoint_seq.store(ckpt_seq, Ordering::Relaxed);
+            // A WAL implies an op-log even without replication: the log
+            // guard is what serializes append order with apply order.
+            let window = svc.cfg.replicate_window.unwrap_or(DEFAULT_OPLOG_WINDOW);
+            let start = recovered.next_seq().max(ckpt_seq);
+            svc.oplog =
+                Some(Arc::new(OpLog::with_wal(window, Some(Arc::new(wal)), start)));
+        } else {
+            svc.oplog = svc.cfg.replicate_window.map(|w| Arc::new(OpLog::new(w)));
+        }
         if svc.cfg.background {
             if svc.cfg.bounded() {
                 svc.spawn_workers();
@@ -434,6 +498,14 @@ impl ShardedCacheService {
         self.oplog.as_ref()
     }
 
+    /// Whether follower replication was requested. A WAL-only primary
+    /// keeps an op-log too (durability needs the same sequence
+    /// discipline), but nothing tails it — `/drain` must not wait for
+    /// follower acks then.
+    pub fn replication_enabled(&self) -> bool {
+        self.cfg.replicate_window.is_some()
+    }
+
     /// Lock the op-log around a mutation (no-op `None` when replication is
     /// off). Held across apply + append so log order is apply order.
     fn log_guard(&self) -> Option<LogGuard<'_>> {
@@ -470,7 +542,7 @@ impl ShardedCacheService {
                 if !slot.snapshots.adopt_replicated(
                     id,
                     key,
-                    bytes,
+                    bytes.as_ref().map(|b| b.to_vec()),
                     byte_len,
                     serialize_cost,
                     restore_cost,
@@ -820,6 +892,13 @@ impl ShardedCacheService {
                 &opened
             }
         };
+        // A consistent cut (PR 9): hold the op-log guard across the whole
+        // state capture, so the stamped `wal_seq` names exactly the
+        // mutation boundary this snapshot reflects — recovery warm-starts
+        // it and replays the WAL from that sequence, with nothing
+        // double-applied and nothing lost in between.
+        let log = self.oplog.as_ref().map(|l| l.begin());
+        let wal_seq = log.as_ref().map(|g| g.next_seq());
         let mut tasks_json = Vec::new();
         for slot in &self.shards {
             let mut ids = slot.tasks.task_ids();
@@ -862,7 +941,13 @@ impl ShardedCacheService {
                 ]));
             }
         }
-        let doc = Json::obj(vec![("tasks", Json::Arr(tasks_json))]).to_string();
+        let mut fields = vec![("tasks", Json::Arr(tasks_json))];
+        if let Some(seq) = wal_seq {
+            // Anchor the checkpoint to the log: recovery replays the WAL
+            // from exactly this sequence.
+            fields.push(("wal_seq", Json::num(seq as f64)));
+        }
+        let doc = Json::obj(fields).to_string();
         let tmp = dir.join("tcgs.json.tmp");
         std::fs::write(&tmp, doc)?;
         // Durability, not just atomicity: fsync the tmp file before the
@@ -870,7 +955,39 @@ impl ShardedCacheService {
         // the directory after it (so the rename itself survives).
         std::fs::File::open(&tmp)?.sync_all()?;
         std::fs::rename(tmp, dir.join("tcgs.json"))?;
-        std::fs::File::open(dir)?.sync_all()
+        std::fs::File::open(dir)?.sync_all()?;
+        // A persist into the WAL's anchored checkpoint directory advances
+        // the retention floor: ops below min(checkpoint, follower acks)
+        // can never be needed again — recovery replays from the checkpoint
+        // and no follower will re-request acked ops. Any other destination
+        // is an ordinary export and retains nothing.
+        if let (Some(g), Some(oplog)) = (log.as_ref(), self.oplog.as_ref()) {
+            let is_ckpt = self
+                .cfg
+                .wal_dir
+                .as_ref()
+                .is_some_and(|w| canon(&w.join("checkpoint")) == dir_canon);
+            if let (true, Some(wal)) = (is_ckpt, oplog.wal()) {
+                let seq = g.next_seq();
+                // Everything below the cut becomes durable before the
+                // segments holding it become deletable.
+                wal.sync();
+                self.checkpoint_seq.store(seq, Ordering::Relaxed);
+                let acked = oplog.acked();
+                // acked == 0 means no follower ever pulled: the checkpoint
+                // alone sets the floor, or a replication-less primary
+                // would pin every segment forever.
+                let floor = if acked == 0 { seq } else { seq.min(acked) };
+                wal.retain_below(floor);
+            }
+        }
+        Ok(())
+    }
+
+    /// The op sequence the last checkpoint into `wal_dir/checkpoint`
+    /// covered (0 before the first one).
+    pub fn checkpoint_seq(&self) -> u64 {
+        self.checkpoint_seq.load(Ordering::Relaxed)
     }
 
     /// Warm-start: merge a persisted cache state from `dir` into this
@@ -880,6 +997,14 @@ impl ShardedCacheService {
     /// are attached, so a run killed mid-spill recovers consistently.
     /// Returns the number of tasks loaded.
     pub fn warm_start_from_dir(&self, dir: &Path) -> std::io::Result<usize> {
+        self.warm_start_with_seq(dir).map(|(loaded, _)| loaded)
+    }
+
+    /// [`ShardedCacheService::warm_start_from_dir`] plus the checkpoint's
+    /// stamped WAL sequence (`wal_seq`; 0 when absent — a pre-WAL or
+    /// replication-less persist): crash recovery replays the durable log
+    /// from exactly that sequence.
+    pub fn warm_start_with_seq(&self, dir: &Path) -> std::io::Result<(usize, u64)> {
         let records = spill::load_manifest(dir);
         let text = std::fs::read_to_string(dir.join("tcgs.json"))?;
         let doc = json::parse(&text)
@@ -928,8 +1053,151 @@ impl ShardedCacheService {
         for slot in &self.shards {
             slot.snapshots.reserve_through(max_id);
         }
-        Ok(loaded)
+        Ok((loaded, doc.get("wal_seq").and_then(Json::as_u64).unwrap_or(0)))
     }
+
+    /// Serialize this primary's full live state for a follower bootstrap
+    /// (`GET /bootstrap`): every task's TCG, every snapshot handle, and
+    /// each content payload exactly once — stamped with the op sequence
+    /// the capture reflects, all under one op-log guard, so the follower
+    /// can resume tailing `/replicate?from=<seq>` with no gap and no
+    /// overlap. `None` when this service keeps no op-log (nothing to
+    /// resume from).
+    pub fn bootstrap_doc(&self) -> Option<Json> {
+        let log = self.oplog.as_ref()?.begin();
+        let seq = log.next_seq();
+        let mut tasks_json = Vec::new();
+        let mut snaps_json = Vec::new();
+        let mut shipped: HashSet<ContentKey> = HashSet::new();
+        for slot in &self.shards {
+            let mut ids = slot.tasks.task_ids();
+            ids.sort();
+            for tid in ids {
+                let tc = slot.tasks.task(&tid);
+                for (_, sref) in tc.snapshotted_nodes() {
+                    let (Some(key), Some(snap)) =
+                        (slot.snapshots.content_key(sref.id), slot.snapshots.get(sref.id))
+                    else {
+                        continue;
+                    };
+                    // Payload bytes ship once per content key; the other
+                    // handles carry the key alone and re-bind on adoption.
+                    let bytes = if shipped.insert(key) {
+                        Json::str(hex_encode(&snap.bytes))
+                    } else {
+                        Json::Null
+                    };
+                    snaps_json.push(Json::obj(vec![
+                        ("task", Json::str(tid.as_str())),
+                        ("id", Json::num(sref.id as f64)),
+                        ("key", Json::str(key.to_hex())),
+                        ("bytes", bytes),
+                        ("byte_len", Json::num(sref.bytes as f64)),
+                        ("serialize_cost", Json::num(snap.serialize_cost)),
+                        ("restore_cost", Json::num(sref.restore_cost)),
+                    ]));
+                }
+                tasks_json.push(Json::obj(vec![
+                    ("task", Json::str(tid.as_str())),
+                    ("tcg", tc.to_persistent_json()),
+                ]));
+            }
+        }
+        Some(Json::obj(vec![
+            ("seq", Json::num(seq as f64)),
+            ("shards", Json::num(self.shards.len() as f64)),
+            ("tasks", Json::Arr(tasks_json)),
+            ("snaps", Json::Arr(snaps_json)),
+        ]))
+    }
+
+    /// Install a [`ShardedCacheService::bootstrap_doc`] onto this follower:
+    /// snapshot payloads are adopted first, then each task's cache is
+    /// *replaced* by the checkpointed graph with the primary's node ids
+    /// preserved verbatim (every replicated op about to be tailed names
+    /// them). Returns the op sequence to resume tailing from; `None` means
+    /// the doc is unusable here (malformed, or a shard-count mismatch —
+    /// snapshot id striding would diverge).
+    pub fn adopt_bootstrap(&self, doc: &Json) -> Option<u64> {
+        let seq = doc.get("seq").and_then(Json::as_u64)?;
+        let shards = doc.get("shards").and_then(Json::as_u64)? as usize;
+        if shards != self.shards.len() {
+            return None;
+        }
+        let tasks = doc.get("tasks").and_then(Json::as_arr)?;
+        // Payloads before graphs, so each TCG load's keep-check sees every
+        // adopted id.
+        let mut max_id = 0u64;
+        for s in doc.get("snaps").and_then(Json::as_arr).unwrap_or(&[]) {
+            let (Some(tid), Some(id), Some(key)) = (
+                s.get("task").and_then(Json::as_str),
+                s.get("id").and_then(Json::as_u64),
+                s.get("key").and_then(Json::as_str).and_then(ContentKey::from_hex),
+            ) else {
+                continue;
+            };
+            let bytes = s.get("bytes").and_then(Json::as_str).and_then(hex_decode);
+            let byte_len = s.get("byte_len").and_then(Json::as_u64).unwrap_or(0);
+            let ser = s.get("serialize_cost").and_then(Json::as_f64).unwrap_or(0.0);
+            let rc = s.get("restore_cost").and_then(Json::as_f64).unwrap_or(0.0);
+            if self.slot(tid).snapshots.adopt_replicated(id, key, bytes, byte_len, ser, rc)
+            {
+                max_id = max_id.max(id);
+            }
+        }
+        for entry in tasks {
+            let (Some(tid), Some(tcg_json)) =
+                (entry.get("task").and_then(Json::as_str), entry.get("tcg"))
+            else {
+                continue;
+            };
+            let slot = self.slot(tid);
+            // What the partial replay attached but the checkpoint no
+            // longer carries was evicted on the primary while this
+            // follower was gapped: its store entries must go too.
+            let stale: Vec<u64> = slot
+                .tasks
+                .task(tid)
+                .snapshotted_nodes()
+                .into_iter()
+                .map(|(_, s)| s.id)
+                .collect();
+            // Replace, never merge: the old graph may hold nodes the
+            // primary evicted, and ids must line up exactly for the tail.
+            let tc = slot.tasks.replace(tid);
+            let keep = |id: u64| slot.snapshots.contains(id);
+            let (attached, _) = tc.load_bootstrap_json(tcg_json, &keep);
+            let kept: HashSet<u64> = attached.iter().map(|(_, s)| s.id).collect();
+            for id in stale {
+                if !kept.contains(&id) {
+                    slot.snapshots.remove(id);
+                }
+            }
+        }
+        for slot in &self.shards {
+            slot.snapshots.reserve_through(max_id);
+        }
+        Some(seq)
+    }
+}
+
+/// Lowercase hex of `bytes` (bootstrap payload transport).
+fn hex_encode(bytes: &[u8]) -> String {
+    let mut s = String::with_capacity(bytes.len() * 2);
+    for b in bytes {
+        s.push_str(&format!("{b:02x}"));
+    }
+    s
+}
+
+/// Inverse of [`hex_encode`]; `None` on any malformation.
+fn hex_decode(s: &str) -> Option<Vec<u8>> {
+    if s.len() % 2 != 0 {
+        return None;
+    }
+    (0..s.len() / 2)
+        .map(|i| u8::from_str_radix(s.get(2 * i..2 * i + 2)?, 16).ok())
+        .collect()
 }
 
 impl Drop for ShardedCacheService {
@@ -1111,11 +1379,13 @@ impl CacheBackend for ShardedCacheService {
         let mut log = self.log_guard();
         // Payload bytes ride the log once per content key per window; the
         // key is marked shipped at push time, so a *failed* attach below
-        // never poisons it. Cloning happens only when replication is on
-        // and this is the key's first ride.
+        // never poisons it. The one copy is an `Arc<[u8]>`, shared by the
+        // WAL frame, every follower pull, and the window entry — nothing
+        // downstream deep-clones under the log mutex.
         let logged = log.as_ref().map(|g| {
             let key = ContentKey::of(&snap.bytes);
-            let payload = g.wants_bytes(&key).then(|| snap.bytes.clone());
+            let payload: Option<Arc<[u8]>> =
+                g.wants_bytes(&key).then(|| Arc::from(&snap.bytes[..]));
             (key, payload)
         });
         let id = slot.snapshots.insert(snap);
@@ -1208,6 +1478,19 @@ impl CacheBackend for ShardedCacheService {
         // injector has fired process-wide.
         agg.spill_degraded = self.spill_degraded();
         agg.injected_faults = fault::injected_total();
+        // Durability counters (PR 9): op-log append volume and the WAL's
+        // segment/fsync/byte meters. `replicate_bytes_shipped` is a wire
+        // counter the HTTP server fills in; in-process it stays 0.
+        if let Some(log) = &self.oplog {
+            agg.oplog_appended = log.appended();
+            if let Some(wal) = log.wal() {
+                agg.wal_segments = wal.segment_count();
+                agg.wal_fsyncs = wal.fsyncs();
+                agg.wal_appended_bytes = wal.appended_bytes();
+                agg.wal_degraded = wal.degraded();
+            }
+        }
+        agg.recoveries = self.recoveries.load(Ordering::Relaxed);
         agg
     }
 
@@ -2143,5 +2426,142 @@ mod tests {
             "identical bytes must dedup into one payload on the follower too"
         );
         assert_eq!(follower.session_count(), 0, "cursor tables are not replicated");
+    }
+
+    // ---- durable WAL + crash recovery (PR 9) ----
+
+    fn wal_cfg(wdir: &Path) -> ServiceConfig {
+        ServiceConfig {
+            shards: 2,
+            wal_dir: Some(wdir.to_path_buf()),
+            wal_segment_bytes: 512,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn wal_replay_restores_state_across_restart() {
+        let wdir = tmpdir("wal-restart");
+        let svc = ShardedCacheService::with_config(
+            wal_cfg(&wdir),
+            Arc::new(TaskCache::with_defaults),
+        )
+        .unwrap();
+        let n = svc.insert("t1", &traj(&["a", "b"])).unwrap();
+        let id = svc.store_snapshot("t1", n, snap(48));
+        assert!(id > 0);
+        svc.set_warm_fork("t1", n, true);
+        svc.insert("t2", &traj(&["x"]));
+        let seq = svc.oplog().unwrap().next_seq();
+        assert_eq!(seq, 4, "insert + attach + warm-fork + insert");
+        drop(svc);
+
+        let svc = ShardedCacheService::with_config(
+            wal_cfg(&wdir),
+            Arc::new(TaskCache::with_defaults),
+        )
+        .unwrap();
+        assert!(svc.lookup("t1", &[sf("a"), sf("b")]).is_hit());
+        assert!(svc.lookup("t2", &[sf("x")]).is_hit());
+        assert!(svc.has_warm_fork("t1", n));
+        assert_eq!(svc.fetch_snapshot("t1", id).unwrap().size(), 48);
+        let agg = svc.service_stats();
+        assert_eq!(agg.recoveries, 1);
+        assert!(agg.wal_appended_bytes > 0);
+        assert_eq!(
+            svc.oplog().unwrap().next_seq(),
+            seq,
+            "the log resumes at the recovered sequence, never at 0"
+        );
+        std::fs::remove_dir_all(&wdir).unwrap();
+    }
+
+    #[test]
+    fn checkpoint_anchors_recovery_and_advances_retention() {
+        let wdir = tmpdir("wal-ckpt");
+        let svc = ShardedCacheService::with_config(
+            wal_cfg(&wdir),
+            Arc::new(TaskCache::with_defaults),
+        )
+        .unwrap();
+        for i in 0..8 {
+            svc.insert("t", &traj(&["p", &format!("leaf{i}")])).unwrap();
+        }
+        let wal_segments_before =
+            svc.oplog().unwrap().wal().unwrap().segment_count();
+        assert!(wal_segments_before > 1, "512-byte segments must have rotated");
+        svc.persist_to_dir(&wdir.join("checkpoint")).unwrap();
+        assert_eq!(svc.checkpoint_seq(), 8);
+        assert!(
+            svc.oplog().unwrap().wal().unwrap().segment_count() < wal_segments_before,
+            "a checkpoint must let retention delete sealed segments"
+        );
+        svc.insert("t", &traj(&["p", "tail"])).unwrap();
+        drop(svc);
+
+        // Restart: checkpoint warm-start + WAL replay of the tail.
+        let svc = ShardedCacheService::with_config(
+            wal_cfg(&wdir),
+            Arc::new(TaskCache::with_defaults),
+        )
+        .unwrap();
+        for i in 0..8 {
+            assert!(
+                svc.lookup("t", &[sf("p"), sf(&format!("leaf{i}"))]).is_hit(),
+                "checkpointed leaf{i} must survive"
+            );
+        }
+        assert!(
+            svc.lookup("t", &[sf("p"), sf("tail")]).is_hit(),
+            "the post-checkpoint tail replays from the WAL"
+        );
+        assert_eq!(svc.oplog().unwrap().next_seq(), 9);
+        assert_eq!(svc.service_stats().recoveries, 1);
+        std::fs::remove_dir_all(&wdir).unwrap();
+    }
+
+    #[test]
+    fn bootstrap_doc_installs_on_a_follower_with_node_ids_preserved() {
+        let primary = ShardedCacheService::with_config(
+            ServiceConfig { shards: 2, replicate_window: Some(4), ..Default::default() },
+            Arc::new(TaskCache::with_defaults),
+        )
+        .unwrap();
+        // Enough history to overflow the tiny window, an eviction to punch
+        // a hole in the node-id space, and a snapshot to carry payloads.
+        for i in 0..6 {
+            primary.insert("t", &traj(&["p", &format!("leaf{i}")])).unwrap();
+        }
+        let doomed = match primary.lookup("t", &[sf("p"), sf("leaf0")]) {
+            Lookup::Hit { node, .. } => node,
+            m => panic!("{m:?}"),
+        };
+        assert!(primary.evict_node("t", doomed));
+        let n = primary.insert("t", &traj(&["p", "post-hole"])).unwrap();
+        assert!(primary.store_snapshot("t", n, snap(64)) > 0);
+
+        let doc = primary.bootstrap_doc().unwrap();
+        let follower = ShardedCacheService::new(2);
+        let seq = follower.adopt_bootstrap(&doc).unwrap();
+        assert_eq!(seq, primary.oplog().unwrap().next_seq());
+        for i in 1..6 {
+            assert!(follower.lookup("t", &[sf("p"), sf(&format!("leaf{i}"))]).is_hit());
+        }
+        assert!(!follower.lookup("t", &[sf("p"), sf("leaf0")]).is_hit());
+        assert_eq!(follower.snapshot_count(), 1, "payload adopted with the graph");
+
+        // The proof that ids survived verbatim: ops recorded *after* the
+        // bootstrap cut name primary node ids and must replay cleanly.
+        primary.set_warm_fork("t", n, true);
+        let (start, _, ops) = primary.oplog().unwrap().read_from(seq, 64);
+        assert_eq!(start, seq, "no gap at the resume point");
+        for op in ops {
+            assert!(follower.apply_op(op));
+        }
+        assert!(follower.has_warm_fork("t", n));
+
+        // A shard-count mismatch must refuse, not corrupt.
+        let odd = ShardedCacheService::new(3);
+        assert_eq!(odd.adopt_bootstrap(&doc), None);
     }
 }

@@ -58,6 +58,19 @@ impl Shard {
         )
     }
 
+    /// Swap in a fresh cache for `task_id` and return it (follower
+    /// bootstrap: the checkpoint state supersedes whatever a partial
+    /// replay built here). Existing `Arc` holders keep the orphaned old
+    /// cache; it simply stops being reachable through the shard.
+    pub fn replace(&self, task_id: &str) -> Arc<TaskCache> {
+        let fresh = Arc::new((self.factory)());
+        self.tasks
+            .write()
+            .unwrap()
+            .insert(task_id.to_string(), Arc::clone(&fresh));
+        fresh
+    }
+
     pub fn task_ids(&self) -> Vec<String> {
         self.tasks.read().unwrap().keys().cloned().collect()
     }

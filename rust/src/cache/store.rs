@@ -593,35 +593,83 @@ impl TaskCache {
             let result = ToolResult::from_json(entry.get("result")?)?;
             let parent = *id_map.get(&old_parent)?;
             let new_id = tcg.insert_child(parent, call, result);
-            if let Some(hits) = entry.get("hits").and_then(|h| h.as_u64()) {
-                if let Some(n) = tcg.node(new_id) {
-                    n.hits.store(hits, Ordering::Relaxed);
-                }
-            }
-            if let Some(s) = entry.get("snapshot") {
-                let (Some(sid), Some(bytes), Some(restore_cost)) = (
-                    s.get("id").and_then(|x| x.as_u64()),
-                    s.get("bytes").and_then(|x| x.as_u64()),
-                    s.get("restore_cost").and_then(|x| x.as_f64()),
-                ) else {
-                    return None;
-                };
-                if keep_snapshot(sid)
-                    && tcg.node(new_id).map(|n| n.snapshot.is_none()).unwrap_or(false)
-                {
-                    let sref = SnapshotRef { id: sid, bytes, restore_cost };
-                    tcg.set_snapshot(new_id, sref);
-                    attached.push((new_id, sref));
-                }
-            }
-            if let Some(stateless) = entry.get("stateless").and_then(|s| s.as_arr()) {
-                for s in stateless {
-                    let c = ToolCall::from_json(s.get("call")?)?;
-                    let r = ToolResult::from_json(s.get("result")?)?;
-                    tcg.insert_stateless(new_id, c, r);
-                }
-            }
+            Self::load_node_extras(&mut tcg, new_id, entry, keep_snapshot, attached)?;
             id_map.insert(old_id, new_id);
+        }
+        Some(())
+    }
+
+    /// Like [`TaskCache::load_persistent_json`] but with node ids preserved
+    /// **verbatim** — tombstone-padded holes included (follower bootstrap):
+    /// every replicated op the follower is about to tail names the
+    /// primary's ids, so a remapping load would corrupt the tail. Must run
+    /// against a fresh (empty) cache; an entry that cannot land on its
+    /// original id stops the load with `false`.
+    pub fn load_bootstrap_json(
+        &self,
+        v: &Json,
+        keep_snapshot: &dyn Fn(u64) -> bool,
+    ) -> (Vec<(NodeId, SnapshotRef)>, bool) {
+        let mut attached = Vec::new();
+        let ok = self.load_bootstrap_inner(v, keep_snapshot, &mut attached).is_some();
+        (attached, ok)
+    }
+
+    fn load_bootstrap_inner(
+        &self,
+        v: &Json,
+        keep_snapshot: &dyn Fn(u64) -> bool,
+        attached: &mut Vec<(NodeId, SnapshotRef)>,
+    ) -> Option<()> {
+        let mut tcg = self.tcg.write().unwrap();
+        let nodes = v.get("nodes")?.as_arr()?;
+        for entry in nodes {
+            let id = entry.get("id")?.as_u64()? as NodeId;
+            let parent = entry.get("parent")?.as_u64()? as NodeId;
+            let call = ToolCall::from_json(entry.get("call")?)?;
+            let result = ToolResult::from_json(entry.get("result")?)?;
+            let node = tcg.insert_child_at(id, parent, call, result)?;
+            Self::load_node_extras(&mut tcg, node, entry, keep_snapshot, attached)?;
+        }
+        Some(())
+    }
+
+    /// Shared tail of both persistent loads: hit counts, the snapshot ref
+    /// (gated on `keep_snapshot`), and the stateless index of one node.
+    fn load_node_extras(
+        tcg: &mut Tcg,
+        node: NodeId,
+        entry: &Json,
+        keep_snapshot: &dyn Fn(u64) -> bool,
+        attached: &mut Vec<(NodeId, SnapshotRef)>,
+    ) -> Option<()> {
+        if let Some(hits) = entry.get("hits").and_then(|h| h.as_u64()) {
+            if let Some(n) = tcg.node(node) {
+                n.hits.store(hits, Ordering::Relaxed);
+            }
+        }
+        if let Some(s) = entry.get("snapshot") {
+            let (Some(sid), Some(bytes), Some(restore_cost)) = (
+                s.get("id").and_then(|x| x.as_u64()),
+                s.get("bytes").and_then(|x| x.as_u64()),
+                s.get("restore_cost").and_then(|x| x.as_f64()),
+            ) else {
+                return None;
+            };
+            if keep_snapshot(sid)
+                && tcg.node(node).map(|n| n.snapshot.is_none()).unwrap_or(false)
+            {
+                let sref = SnapshotRef { id: sid, bytes, restore_cost };
+                tcg.set_snapshot(node, sref);
+                attached.push((node, sref));
+            }
+        }
+        if let Some(stateless) = entry.get("stateless").and_then(|s| s.as_arr()) {
+            for s in stateless {
+                let c = ToolCall::from_json(s.get("call")?)?;
+                let r = ToolResult::from_json(s.get("result")?)?;
+                tcg.insert_stateless(node, c, r);
+            }
         }
         Some(())
     }

@@ -166,6 +166,48 @@ impl Tcg {
         id
     }
 
+    /// Insert `call` under `parent` at exactly arena id `id`, padding any
+    /// skipped ids with tombstones. Follower bootstrap uses this to rebuild
+    /// a checkpointed graph with the primary's node ids *verbatim* — holes
+    /// from prior evictions included — because every later replicated op
+    /// names those ids. Refuses (`None`) when the edge already exists at a
+    /// different id, `id` is already allocated, or `parent` is not live.
+    pub fn insert_child_at(
+        &mut self,
+        id: NodeId,
+        parent: NodeId,
+        call: ToolCall,
+        result: ToolResult,
+    ) -> Option<NodeId> {
+        if let Some(existing) = self.child(parent, &call) {
+            return (existing == id).then_some(id);
+        }
+        if id < self.nodes.len() {
+            return None;
+        }
+        let depth = self.node(parent)?.depth + 1;
+        while self.nodes.len() < id {
+            self.nodes.push(None);
+        }
+        self.nodes.push(Some(Node {
+            call: call.clone(),
+            result,
+            snapshot: None,
+            parent,
+            depth,
+            children: HashMap::new(),
+            stateless: HashMap::new(),
+            hits: AtomicU64::new(0),
+            refcount: AtomicU32::new(0),
+            warm_fork: AtomicBool::new(false),
+        }));
+        if let Some(p) = self.node_mut(parent) {
+            p.children.insert(call.key(), id);
+        }
+        self.live += 1;
+        Some(id)
+    }
+
     /// Record a stateless tool result under a state-mutating node.
     pub fn insert_stateless(
         &mut self,

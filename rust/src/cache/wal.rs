@@ -1,0 +1,702 @@
+//! Durable segmented write-ahead log beneath the replication op-log.
+//!
+//! PR 8's [`super::oplog::OpLog`] is a bounded in-memory window: a primary
+//! crash loses every mutation since the last manual `/persist`, and a
+//! follower that falls behind the window can never catch up. This module
+//! makes the log durable. Every [`Op`] pushed through a
+//! [`super::oplog::LogGuard`] is also encoded — with the same binary wire
+//! codec the `/replicate` endpoint speaks — into CRC32-framed records in
+//! append-only segment files:
+//!
+//! ```text
+//! <wal-dir>/wal-00000000000000000000.seg      records for seqs [0, r0)
+//! <wal-dir>/wal-000000000000000000r0.seg      records for seqs [r0, r1)
+//! <wal-dir>/checkpoint/                       seq-stamped persist_to_dir
+//!
+//! record   = len(u32 LE) ++ crc32(u32 LE, over payload) ++ payload
+//! payload  = wire::put_op(op)          (sequence is implicit: the file
+//!                                       name carries the segment's first
+//!                                       seq, records are dense)
+//! ```
+//!
+//! Appends go to the page cache only; a background flusher thread group-
+//! fsyncs every [`WalOptions::fsync_every`] records or
+//! [`WalOptions::fsync_interval`], whichever comes first — the hot path
+//! never pays an inline fsync. Segments rotate at
+//! [`WalOptions::segment_bytes`]; [`Wal::retain_below`] deletes sealed
+//! segments wholly below `min(follower acks, last checkpoint seq)`.
+//!
+//! Recovery ([`Wal::open`]) scans the segments in sequence order and
+//! replays every record whose CRC verifies. The first short or
+//! CRC-mismatched record is a *torn tail* — the crash happened mid-write —
+//! and is physically truncated (plus any later segments deleted), never
+//! replayed as garbage. The recovered state is therefore bit-identical to
+//! a never-crashed run up to the last record that reached the disk.
+//!
+//! Any write failure (real, or injected through the
+//! [`crate::util::fault::Seam::WalWrite`] seam) trips the log into a
+//! sticky *degraded* mode: appends stop, the service keeps serving
+//! (availability over durability, like the spill tier's resident-only
+//! mode), and the already-written prefix stays recoverable.
+
+use std::fs::{self, File, OpenOptions};
+use std::io::{self, Read, Write};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread;
+use std::time::Duration;
+
+use super::oplog::Op;
+use crate::util::fault;
+use crate::wire;
+
+/// Default segment rotation size (4 MiB).
+pub const DEFAULT_SEGMENT_BYTES: u64 = 4 << 20;
+/// Default group-fsync record threshold.
+pub const DEFAULT_FSYNC_EVERY: u64 = 64;
+/// Default group-fsync time threshold.
+pub const DEFAULT_FSYNC_INTERVAL: Duration = Duration::from_millis(20);
+
+/// Bytes of framing per record (length + CRC32).
+const RECORD_HEADER: usize = 8;
+
+// ---- CRC32 (IEEE 802.3, reflected) -------------------------------------
+
+const fn crc_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+static CRC_TABLE: [u32; 256] = crc_table();
+
+/// CRC32 over a WAL record payload. One flipped bit anywhere in the
+/// payload fails verification, which is what turns a torn or garbled tail
+/// into a truncation instead of a replayed garbage op.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut c = !0u32;
+    for &b in bytes {
+        c = CRC_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    !c
+}
+
+/// Tuning knobs, all CLI-exposed except the flush interval.
+#[derive(Debug, Clone)]
+pub struct WalOptions {
+    /// Rotate to a fresh `wal-<seq>.seg` once the live segment exceeds
+    /// this many bytes.
+    pub segment_bytes: u64,
+    /// Group-fsync after this many un-synced records.
+    pub fsync_every: u64,
+    /// …or after this long with any un-synced record, whichever first.
+    pub fsync_interval: Duration,
+}
+
+impl Default for WalOptions {
+    fn default() -> WalOptions {
+        WalOptions {
+            segment_bytes: DEFAULT_SEGMENT_BYTES,
+            fsync_every: DEFAULT_FSYNC_EVERY,
+            fsync_interval: DEFAULT_FSYNC_INTERVAL,
+        }
+    }
+}
+
+/// What [`Wal::open`] found on disk: the contiguous run of CRC-verified
+/// ops starting at `start_seq` (`ops[i]` has sequence `start_seq + i`).
+/// The caller replays the suffix at or above its checkpoint seq.
+pub struct Recovered {
+    pub start_seq: u64,
+    pub ops: Vec<Op>,
+}
+
+impl Recovered {
+    /// Sequence number the next appended op receives.
+    pub fn next_seq(&self) -> u64 {
+        self.start_seq + self.ops.len() as u64
+    }
+}
+
+struct WalInner {
+    dir: PathBuf,
+    file: File,
+    /// Every live segment in seq order; the last entry is the one
+    /// `file` appends to.
+    segments: Vec<(u64, PathBuf)>,
+    /// First sequence of the live segment.
+    seg_start: u64,
+    /// Records appended to the live segment so far.
+    seg_records: u64,
+    /// Bytes appended to the live segment so far.
+    seg_len: u64,
+    /// Sequence the next appended record receives.
+    next_seq: u64,
+    /// Records appended since the last fsync.
+    unsynced: u64,
+    segment_bytes: u64,
+    fsync_every: u64,
+}
+
+struct WalShared {
+    inner: Mutex<WalInner>,
+    kick: Condvar,
+    stop: AtomicBool,
+    degraded: AtomicBool,
+    fsyncs: AtomicU64,
+    appended_bytes: AtomicU64,
+    appended_records: AtomicU64,
+}
+
+/// The durable log handle. Owned by the [`super::oplog::OpLog`] (appends
+/// happen inside `LogGuard::push`, under the log mutex, so the on-disk
+/// order is the apply order).
+pub struct Wal {
+    shared: Arc<WalShared>,
+    flusher: Mutex<Option<thread::JoinHandle<()>>>,
+}
+
+fn segment_path(dir: &Path, seq: u64) -> PathBuf {
+    dir.join(format!("wal-{seq:020}.seg"))
+}
+
+fn parse_segment_seq(name: &str) -> Option<u64> {
+    let digits = name.strip_prefix("wal-")?.strip_suffix(".seg")?;
+    if digits.is_empty() || !digits.bytes().all(|b| b.is_ascii_digit()) {
+        return None;
+    }
+    digits.parse().ok()
+}
+
+/// Scan one segment's bytes, returning the decoded ops and the byte
+/// offset of the valid prefix. A short header, short payload, CRC
+/// mismatch, or undecodable op ends the scan — everything from that
+/// offset on is the torn tail.
+fn scan_segment(bytes: &[u8]) -> (Vec<Op>, usize) {
+    let mut ops = Vec::new();
+    let mut at = 0usize;
+    while bytes.len() - at >= RECORD_HEADER {
+        let len = u32::from_le_bytes(bytes[at..at + 4].try_into().unwrap()) as usize;
+        let crc = u32::from_le_bytes(bytes[at + 4..at + 8].try_into().unwrap());
+        let Some(end) = at.checked_add(RECORD_HEADER + len) else { break };
+        if end > bytes.len() {
+            break; // payload torn mid-write
+        }
+        let payload = &bytes[at + RECORD_HEADER..end];
+        if crc32(payload) != crc {
+            break; // garbled record
+        }
+        let mut r = wire::Reader::raw(payload);
+        let Some(op) = wire::read_op(&mut r) else { break };
+        if !r.done() {
+            break; // trailing bytes inside a verified frame: malformed
+        }
+        ops.push(op);
+        at = end;
+    }
+    (ops, at)
+}
+
+impl Wal {
+    /// Open (creating if needed) the WAL at `dir`: recover the verified
+    /// prefix, truncate any torn tail, and return a handle appending at
+    /// the recovered `next_seq`.
+    pub fn open(dir: &Path, opts: WalOptions) -> io::Result<(Wal, Recovered)> {
+        fs::create_dir_all(dir)?;
+        let mut segments: Vec<(u64, PathBuf)> = Vec::new();
+        for entry in fs::read_dir(dir)? {
+            let entry = entry?;
+            let name = entry.file_name();
+            if let Some(seq) = name.to_str().and_then(parse_segment_seq) {
+                segments.push((seq, entry.path()));
+            }
+        }
+        segments.sort();
+
+        let mut recovered = Recovered { start_seq: 0, ops: Vec::new() };
+        let mut live: Vec<(u64, PathBuf)> = Vec::new();
+        let mut torn_from: Option<usize> = None;
+        for (i, (seg_seq, path)) in segments.iter().enumerate() {
+            if i == 0 {
+                recovered.start_seq = *seg_seq;
+            } else if *seg_seq != recovered.next_seq() {
+                // Non-contiguous successor: everything from here on is
+                // unreachable garbage (a half-deleted retention pass or a
+                // crash mid-rotation). Drop it.
+                torn_from = Some(i);
+                break;
+            }
+            let mut bytes = Vec::new();
+            File::open(path)?.read_to_end(&mut bytes)?;
+            let (ops, valid_end) = scan_segment(&bytes);
+            recovered.ops.extend(ops);
+            live.push((*seg_seq, path.clone()));
+            if valid_end < bytes.len() {
+                // Torn tail: physically truncate so the garbage is never
+                // rescanned, and drop every later segment (their seqs no
+                // longer connect).
+                let f = OpenOptions::new().write(true).open(path)?;
+                f.set_len(valid_end as u64)?;
+                f.sync_all()?;
+                torn_from = Some(i + 1);
+                break;
+            }
+        }
+        if let Some(from) = torn_from {
+            for (_, path) in &segments[from..] {
+                let _ = fs::remove_file(path);
+            }
+        }
+
+        let next_seq = recovered.next_seq();
+        // Continue the last live segment when it has room; otherwise start
+        // a fresh one at next_seq.
+        let (seg_start, path, reuse) = match live.last() {
+            Some((seg_seq, path)) => {
+                let len = fs::metadata(path).map(|m| m.len()).unwrap_or(0);
+                if len < opts.segment_bytes {
+                    (*seg_seq, path.clone(), true)
+                } else {
+                    (next_seq, segment_path(dir, next_seq), false)
+                }
+            }
+            None => (next_seq, segment_path(dir, next_seq), false),
+        };
+        let file = OpenOptions::new().create(true).append(true).open(&path)?;
+        let seg_len = file.metadata()?.len();
+        if !reuse {
+            live.push((seg_start, path));
+        }
+        let seg_records = next_seq - seg_start;
+
+        let shared = Arc::new(WalShared {
+            inner: Mutex::new(WalInner {
+                dir: dir.to_path_buf(),
+                file,
+                segments: live,
+                seg_start,
+                seg_records,
+                seg_len,
+                next_seq,
+                unsynced: 0,
+                segment_bytes: opts.segment_bytes.max(1),
+                fsync_every: opts.fsync_every.max(1),
+            }),
+            kick: Condvar::new(),
+            stop: AtomicBool::new(false),
+            degraded: AtomicBool::new(false),
+            fsyncs: AtomicU64::new(0),
+            appended_bytes: AtomicU64::new(0),
+            appended_records: AtomicU64::new(0),
+        });
+        let flusher = spawn_flusher(Arc::clone(&shared), opts.fsync_interval);
+        Ok((Wal { shared, flusher: Mutex::new(Some(flusher)) }, recovered))
+    }
+
+    /// Append `op` as the record for `seq`. Never fsyncs inline (the
+    /// flusher thread groups that); never fails the caller — a write
+    /// error trips sticky degraded mode instead.
+    pub fn append(&self, seq: u64, op: &Op) {
+        if self.shared.degraded.load(Ordering::Relaxed) {
+            return;
+        }
+        let mut frame = vec![0u8; RECORD_HEADER];
+        wire::put_op(&mut frame, op);
+        let payload_len = frame.len() - RECORD_HEADER;
+        frame[..4].copy_from_slice(&(payload_len as u32).to_le_bytes());
+        let crc = crc32(&frame[RECORD_HEADER..]);
+        frame[4..8].copy_from_slice(&crc.to_le_bytes());
+
+        // Fault seams: a garbled or torn write lands (corrupting the
+        // tail), then the log degrades so the corruption *stays* a tail —
+        // exactly the shape recovery knows how to truncate.
+        let mut poison = fault::wal_write_error().is_some();
+        if fault::wal_garble_write() {
+            fault::garble(&mut frame[RECORD_HEADER..]);
+            poison = true;
+        }
+        let torn_at = fault::wal_torn_write().then(|| frame.len() / 2);
+
+        let mut inner = self.shared.inner.lock().unwrap();
+        debug_assert_eq!(seq, inner.next_seq, "WAL appends must be dense");
+        let write = match torn_at {
+            Some(cut) => {
+                poison = true;
+                inner.file.write_all(&frame[..cut])
+            }
+            None if poison => Ok(()), // injected write error: nothing lands
+            None => inner.file.write_all(&frame),
+        };
+        if write.is_err() || poison {
+            self.shared.degraded.store(true, Ordering::Relaxed);
+            return;
+        }
+        inner.next_seq = seq + 1;
+        inner.seg_records += 1;
+        inner.seg_len += frame.len() as u64;
+        inner.unsynced += 1;
+        self.shared.appended_bytes.fetch_add(frame.len() as u64, Ordering::Relaxed);
+        self.shared.appended_records.fetch_add(1, Ordering::Relaxed);
+        if inner.seg_len >= inner.segment_bytes {
+            self.rotate_locked(&mut inner);
+        }
+        let kick = inner.unsynced >= inner.fsync_every;
+        drop(inner);
+        if kick {
+            self.shared.kick.notify_one();
+        }
+    }
+
+    /// Seal the live segment and start a fresh one at `next_seq`. The
+    /// sealed file is fsynced here (rotation is rare; this is not the
+    /// per-record hot path).
+    fn rotate_locked(&self, inner: &mut WalInner) {
+        let _ = inner.file.sync_data();
+        self.shared.fsyncs.fetch_add(1, Ordering::Relaxed);
+        inner.unsynced = 0;
+        let path = segment_path(&inner.dir, inner.next_seq);
+        match OpenOptions::new().create(true).append(true).open(&path) {
+            Ok(f) => {
+                inner.file = f;
+                inner.seg_start = inner.next_seq;
+                inner.seg_records = 0;
+                inner.seg_len = 0;
+                inner.segments.push((inner.seg_start, path));
+            }
+            Err(_) => {
+                self.shared.degraded.store(true, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Force an fsync now (drain, checkpoint, shutdown). Returns the
+    /// sequence everything below which is now durable.
+    pub fn sync(&self) -> u64 {
+        let mut inner = self.shared.inner.lock().unwrap();
+        if inner.unsynced > 0 {
+            let _ = inner.file.sync_data();
+            self.shared.fsyncs.fetch_add(1, Ordering::Relaxed);
+            inner.unsynced = 0;
+        }
+        inner.next_seq
+    }
+
+    /// Delete sealed segments that lie wholly below `floor` (= the
+    /// retention bound `min(follower acks, last checkpoint seq)`). The
+    /// live segment is never deleted.
+    pub fn retain_below(&self, floor: u64) {
+        let mut inner = self.shared.inner.lock().unwrap();
+        while inner.segments.len() >= 2 && inner.segments[1].0 <= floor {
+            let (_, path) = inner.segments.remove(0);
+            let _ = fs::remove_file(path);
+        }
+    }
+
+    /// Sequence the next appended record receives.
+    pub fn next_seq(&self) -> u64 {
+        self.shared.inner.lock().unwrap().next_seq
+    }
+
+    /// Live segment files (stats gauge).
+    pub fn segment_count(&self) -> u64 {
+        self.shared.inner.lock().unwrap().segments.len() as u64
+    }
+
+    pub fn fsyncs(&self) -> u64 {
+        self.shared.fsyncs.load(Ordering::Relaxed)
+    }
+
+    pub fn appended_bytes(&self) -> u64 {
+        self.shared.appended_bytes.load(Ordering::Relaxed)
+    }
+
+    pub fn appended_records(&self) -> u64 {
+        self.shared.appended_records.load(Ordering::Relaxed)
+    }
+
+    /// Did a write failure trip the sticky degraded mode?
+    pub fn degraded(&self) -> bool {
+        self.shared.degraded.load(Ordering::Relaxed)
+    }
+}
+
+impl Drop for Wal {
+    fn drop(&mut self) {
+        self.shared.stop.store(true, Ordering::Release);
+        self.shared.kick.notify_all();
+        if let Some(h) = self.flusher.lock().unwrap().take() {
+            let _ = h.join();
+        }
+        // Graceful-shutdown durability; a real crash skips this, which is
+        // exactly what the torn-tail recovery path covers.
+        self.sync();
+    }
+}
+
+fn spawn_flusher(shared: Arc<WalShared>, interval: Duration) -> thread::JoinHandle<()> {
+    thread::Builder::new()
+        .name("tvcache-wal-flush".into())
+        .spawn(move || loop {
+            let file = {
+                let inner = shared.inner.lock().unwrap();
+                let (mut inner, _) = shared
+                    .kick
+                    .wait_timeout_while(inner, interval, |i| {
+                        i.unsynced < i.fsync_every && !shared.stop.load(Ordering::Acquire)
+                    })
+                    .unwrap();
+                if inner.unsynced == 0 {
+                    None
+                } else {
+                    inner.unsynced = 0;
+                    inner.file.try_clone().ok()
+                }
+            };
+            // Sync outside the lock so appends never wait on the disk.
+            if let Some(f) = file {
+                let _ = f.sync_data();
+                shared.fsyncs.fetch_add(1, Ordering::Relaxed);
+            }
+            if shared.stop.load(Ordering::Acquire) {
+                return;
+            }
+        })
+        .expect("spawn wal flusher")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cache::key::{ToolCall, ToolResult};
+    use crate::cache::payload::ContentKey;
+    use crate::util::fault::{self, FaultPlan};
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "tvcache-wal-{tag}-{}-{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let _ = fs::remove_dir_all(&dir);
+        fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn ops(n: usize) -> Vec<Op> {
+        (0..n)
+            .map(|i| match i % 3 {
+                0 => Op::Insert {
+                    task: format!("t{i}"),
+                    traj: vec![(
+                        ToolCall::new("bash", &format!("cmd {i}")),
+                        ToolResult::new(&format!("out {i}"), 0.5),
+                    )],
+                },
+                1 => Op::Attach {
+                    task: format!("t{i}"),
+                    node: i,
+                    id: i as u64,
+                    key: ContentKey([i as u64, 2, 3, 4]),
+                    bytes: Some(vec![i as u8; 24].into()),
+                    byte_len: 24,
+                    serialize_cost: 0.1,
+                    restore_cost: 0.2,
+                },
+                _ => Op::Release { task: format!("t{i}"), node: i },
+            })
+            .collect()
+    }
+
+    fn append_all(wal: &Wal, from: u64, ops: &[Op]) {
+        for (i, op) in ops.iter().enumerate() {
+            wal.append(from + i as u64, op);
+        }
+    }
+
+    #[test]
+    fn reopen_recovers_every_record_across_rotations() {
+        let dir = tmpdir("rotate");
+        let want = ops(40);
+        {
+            let (wal, rec) = Wal::open(&dir, WalOptions {
+                segment_bytes: 256, // force several rotations
+                ..WalOptions::default()
+            })
+            .unwrap();
+            assert_eq!(rec.next_seq(), 0);
+            append_all(&wal, 0, &want);
+            assert!(wal.segment_count() > 1, "tiny segments must rotate");
+            assert_eq!(wal.appended_records(), 40);
+        }
+        let (wal, rec) = Wal::open(&dir, WalOptions::default()).unwrap();
+        assert_eq!(rec.start_seq, 0);
+        assert_eq!(rec.ops, want);
+        assert_eq!(wal.next_seq(), 40);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn truncation_at_every_offset_recovers_a_valid_prefix() {
+        let dir = tmpdir("trunc");
+        let want = ops(8);
+        let (wal, _) = Wal::open(&dir, WalOptions::default()).unwrap();
+        append_all(&wal, 0, &want);
+        drop(wal);
+        let seg = segment_path(&dir, 0);
+        let full = fs::read(&seg).unwrap();
+        // Record boundaries, for computing the expected surviving prefix.
+        let mut ends = Vec::new();
+        let mut at = 0usize;
+        while at < full.len() {
+            let len = u32::from_le_bytes(full[at..at + 4].try_into().unwrap()) as usize;
+            at += RECORD_HEADER + len;
+            ends.push(at);
+        }
+        for cut in 0..full.len() {
+            let case = tmpdir("trunc-case");
+            fs::write(segment_path(&case, 0), &full[..cut]).unwrap();
+            let (wal, rec) = Wal::open(&case, WalOptions::default()).unwrap();
+            let survive = ends.iter().filter(|&&e| e <= cut).count();
+            assert_eq!(rec.ops, want[..survive], "cut at {cut}");
+            // The torn tail is physically gone and appends continue clean.
+            assert_eq!(fs::metadata(segment_path(&case, 0)).unwrap().len() as usize, {
+                if survive == 0 {
+                    0
+                } else {
+                    ends[survive - 1]
+                }
+            });
+            wal.append(rec.next_seq(), &want[survive.min(want.len() - 1)]);
+            drop(wal);
+            let _ = fs::remove_dir_all(&case);
+        }
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn garbled_tail_record_is_dropped_not_replayed() {
+        let dir = tmpdir("garble");
+        let want = ops(5);
+        let (wal, _) = Wal::open(&dir, WalOptions::default()).unwrap();
+        append_all(&wal, 0, &want);
+        drop(wal);
+        let seg = segment_path(&dir, 0);
+        let full = fs::read(&seg).unwrap();
+        // Flip one byte inside the last record's payload.
+        let mut bad = full.clone();
+        let last = bad.len() - 3;
+        bad[last] ^= 0x41;
+        fs::write(&seg, &bad).unwrap();
+        let (_, rec) = Wal::open(&dir, WalOptions::default()).unwrap();
+        assert_eq!(rec.ops, want[..4], "CRC must reject the garbled record");
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn retention_deletes_sealed_segments_below_the_floor() {
+        let dir = tmpdir("retain");
+        let want = ops(40);
+        let (wal, _) =
+            Wal::open(&dir, WalOptions { segment_bytes: 256, ..WalOptions::default() }).unwrap();
+        append_all(&wal, 0, &want);
+        let before = wal.segment_count();
+        assert!(before > 2);
+        wal.retain_below(0); // nothing below seq 0: no-op
+        assert_eq!(wal.segment_count(), before);
+        wal.retain_below(u64::MAX);
+        assert_eq!(wal.segment_count(), 1, "only the live segment survives");
+        // Recovery after retention starts at the surviving segment.
+        drop(wal);
+        let (_, rec) = Wal::open(&dir, WalOptions::default()).unwrap();
+        assert!(rec.start_seq > 0);
+        assert_eq!(rec.ops[..], want[rec.start_seq as usize..]);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn injected_write_fault_trips_sticky_degraded_mode() {
+        let dir = tmpdir("fault");
+        let want = ops(6);
+        let (wal, _) = Wal::open(&dir, WalOptions::default()).unwrap();
+        append_all(&wal, 0, &want[..3]);
+        {
+            let _scope = fault::install(FaultPlan {
+                p_wal_write_fail: 1.0,
+                thread_scoped: true,
+                ..FaultPlan::quiet(7)
+            });
+            wal.append(3, &want[3]);
+        }
+        assert!(wal.degraded(), "a write fault must trip degraded mode");
+        wal.append(4, &want[4]); // silently dropped, no panic
+        assert_eq!(wal.appended_records(), 3);
+        drop(wal);
+        // The durable prefix is intact.
+        let (_, rec) = Wal::open(&dir, WalOptions::default()).unwrap();
+        assert_eq!(rec.ops, want[..3]);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn injected_torn_and_garbled_writes_recover_to_the_prefix() {
+        for (tag, plan) in [
+            ("torn", FaultPlan {
+                p_wal_torn_tail: 1.0,
+                thread_scoped: true,
+                ..FaultPlan::quiet(7)
+            }),
+            ("crc", FaultPlan {
+                p_wal_garble: 1.0,
+                thread_scoped: true,
+                ..FaultPlan::quiet(7)
+            }),
+        ] {
+            let dir = tmpdir(&format!("inj-{tag}"));
+            let want = ops(4);
+            let (wal, _) = Wal::open(&dir, WalOptions::default()).unwrap();
+            append_all(&wal, 0, &want[..2]);
+            {
+                let _scope = fault::install(plan);
+                wal.append(2, &want[2]); // lands corrupted, then degrades
+            }
+            assert!(wal.degraded());
+            drop(wal);
+            let (_, rec) = Wal::open(&dir, WalOptions::default()).unwrap();
+            assert_eq!(rec.ops, want[..2], "{tag}: corrupted tail must truncate");
+            let _ = fs::remove_dir_all(&dir);
+        }
+    }
+
+    #[test]
+    fn group_fsync_happens_off_the_append_path() {
+        let dir = tmpdir("fsync");
+        let (wal, _) = Wal::open(&dir, WalOptions {
+            fsync_every: 4,
+            fsync_interval: Duration::from_millis(5),
+            ..WalOptions::default()
+        })
+        .unwrap();
+        append_all(&wal, 0, &ops(16));
+        // The flusher groups the 16 appends into a handful of fsyncs.
+        let deadline = std::time::Instant::now() + Duration::from_secs(2);
+        while wal.fsyncs() == 0 && std::time::Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        let n = wal.fsyncs();
+        assert!(n >= 1, "flusher must have synced");
+        assert!(n <= 16, "appends must not each pay an fsync");
+        assert!(wal.sync() == 16);
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

@@ -119,6 +119,18 @@ impl Default for BindingConfig {
     }
 }
 
+/// Outcome of a [`RemoteBinding::drain`] call (`POST /drain`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DrainReport {
+    /// The follower acknowledged the whole op-log before the deadline
+    /// (vacuously `true` on a server with no follower to wait for).
+    pub caught_up: bool,
+    /// The primary's final op sequence at drain time.
+    pub final_seq: u64,
+    /// `Some(ok)` when a persist dir was requested in the drain.
+    pub persisted: Option<bool>,
+}
+
 /// HTTP binding to a TVCACHE server.
 pub struct RemoteBinding {
     /// All known endpoints: the connect address first, then
@@ -505,6 +517,24 @@ impl RemoteBinding {
             return None;
         }
         json::parse(std::str::from_utf8(&resp).ok()?).ok()
+    }
+
+    /// Gracefully drain the active server (`POST /drain`): it stops
+    /// admitting new sessions, waits (bounded) for its follower to catch
+    /// up, and — when `dir` is given — persists to that *server-local*
+    /// path. `None` on transport failure. Safe to retry: draining is
+    /// sticky and a re-run persist overwrites the same checkpoint.
+    pub fn drain(&self, dir: Option<&str>) -> Option<DrainReport> {
+        let body = match dir {
+            Some(d) => Json::obj(vec![("dir", Json::str(d))]).to_string(),
+            None => String::new(),
+        };
+        let v = self.post("/drain", body)?;
+        Some(DrainReport {
+            caught_up: v.get("caught_up")?.as_bool()?,
+            final_seq: v.get("final_seq")?.as_u64()?,
+            persisted: v.get("persisted").and_then(|p| p.as_bool()),
+        })
     }
 }
 

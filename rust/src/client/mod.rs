@@ -9,6 +9,6 @@ pub mod binding;
 pub mod executor;
 pub mod session;
 
-pub use binding::{BindingConfig, RemoteBinding};
+pub use binding::{BindingConfig, DrainReport, RemoteBinding};
 pub use executor::{CallOutcome, ExecutorConfig, ToolCallExecutor};
 pub use session::{open_session, RolloutSession, SessionConfig};

@@ -4,6 +4,10 @@
 //! tvcache serve    --addr 127.0.0.1:8117 --workers 8 --shards 8
 //!                  [--replicate-window N]          # keep an op-log for followers
 //!                  [--follow HOST:PORT]            # tail a primary as a warm follower
+//!                  [--follow-tick-ms N]            # follower idle tick (default 5)
+//!                  [--wal-dir PATH]                # durable op-log + crash recovery
+//!                  [--wal-segment-bytes N]         # WAL segment rotation size
+//!                  [--wal-fsync-every N]           # group-fsync record threshold
 //! tvcache workload --name terminal-easy|terminal-medium|sql|ego
 //!                  [--tasks N] [--epochs N] [--shards N] [--no-cache]
 //! ```
@@ -11,8 +15,10 @@
 use std::sync::Arc;
 
 use tvcache::bench::print_table;
-use tvcache::cache::{ServiceConfig, ShardedCacheService, TaskCache};
-use tvcache::server::{serve_follower, serve_service, DEFAULT_SHARDS};
+use tvcache::cache::{
+    ServiceConfig, ShardedCacheService, TaskCache, DEFAULT_FSYNC_EVERY, DEFAULT_SEGMENT_BYTES,
+};
+use tvcache::server::{serve_follower_with_tick, serve_service, DEFAULT_SHARDS};
 use tvcache::train::{run_workload, SimOptions};
 use tvcache::util::cli::Args;
 use tvcache::workloads::{Workload, WorkloadConfig};
@@ -29,13 +35,25 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
                 None => None,
             };
             let sharded = ShardedCacheService::with_config(
-                ServiceConfig { shards, replicate_window: window, ..Default::default() },
+                ServiceConfig {
+                    shards,
+                    replicate_window: window,
+                    wal_dir: args.get("wal-dir").map(std::path::PathBuf::from),
+                    wal_segment_bytes: args
+                        .usize_or("wal-segment-bytes", DEFAULT_SEGMENT_BYTES as usize)
+                        as u64,
+                    wal_fsync_every: args.usize_or("wal-fsync-every", DEFAULT_FSYNC_EVERY as usize)
+                        as u64,
+                    ..Default::default()
+                },
                 Arc::new(TaskCache::with_defaults),
             )?;
             let (server, svc) = match args.get("follow") {
                 Some(primary) => {
                     let primary: std::net::SocketAddr = primary.parse()?;
-                    serve_follower(&addr, workers, sharded, primary)?
+                    let tick =
+                        std::time::Duration::from_millis(args.usize_or("follow-tick-ms", 5) as u64);
+                    serve_follower_with_tick(&addr, workers, sharded, primary, tick)?
                 }
                 None => serve_service(&addr, workers, sharded)?,
             };
@@ -50,7 +68,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
                 "endpoints: /get /prefix_match /put /release /cursor_open /cursor_step \
                  /cursor_record /cursor_seek /cursor_close /capabilities /session_turn \
                  /session_release /snapshot /warm /persist /warm_start /stats /viz /ping \
-                 /replicate /promote /drain"
+                 /replicate /bootstrap /promote /drain"
             );
             loop {
                 std::thread::sleep(std::time::Duration::from_secs(3600));

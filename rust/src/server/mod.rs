@@ -35,6 +35,9 @@
 //! * `GET  /ping`          — liveness
 //! * `GET  /replicate`     — pull a batch of op-log entries (`?from=<seq>`,
 //!   binary; primaries only — see below)
+//! * `GET  /bootstrap`     — seq-stamped checkpoint of the whole service
+//!   state (JSON; primaries with an op-log only): a window-gapped follower
+//!   installs it and resumes tailing from its `seq` instead of freezing
 //! * `POST /promote`       — promote a follower to primary (bumps the
 //!   fencing epoch); idempotent no-op on a server that is already primary
 //! * `POST /drain`         — graceful shutdown: stop admitting sessions,
@@ -86,6 +89,11 @@ pub const REPLICATE_BATCH_MAX: usize = 512;
 /// log before giving up and reporting `caught_up: false`.
 const DRAIN_DEADLINE: Duration = Duration::from_secs(2);
 
+/// Default idle tick of a follower's tail thread: how long it sleeps when
+/// caught up (or the primary is unreachable) before the next pull
+/// (`--follow-tick-ms`).
+pub const DEFAULT_FOLLOW_TICK: Duration = Duration::from_millis(5);
+
 /// Shared server state: the sharded cache service plus HTTP plumbing.
 pub struct CacheService {
     sharded: ShardedCacheService,
@@ -106,11 +114,16 @@ pub struct CacheService {
     /// Highest epoch seen from the primary while tailing; promotion bumps
     /// past it.
     primary_epoch: AtomicU64,
-    /// Set when replay can never be trusted again (the primary's window
-    /// slid past our position, or its shard count differs): application
-    /// stops permanently, lag keeps growing, promotion still works but the
-    /// operator sees `replica_frozen` in `/stats`.
+    /// Set when replay can never be trusted again (the primary's shard
+    /// count differs, or a window gap could not be bootstrapped over):
+    /// application stops permanently, lag keeps growing, promotion still
+    /// works but the operator sees `replica_frozen` in `/stats`.
     frozen: AtomicBool,
+    /// Checkpoint installs this follower performed after a window gap
+    /// (`GET /bootstrap`). A PR 8 follower froze instead.
+    bootstraps: AtomicU64,
+    /// Bytes of `/replicate` reply frames this primary shipped.
+    replicate_bytes: AtomicU64,
     /// Replicated ops that could not take effect here (e.g. a key-only
     /// attach whose payload bytes this follower never saw). Snapshot
     /// availability degrades; correctness does not.
@@ -144,6 +157,8 @@ impl CacheService {
             primary_next: AtomicU64::new(0),
             primary_epoch: AtomicU64::new(0),
             frozen: AtomicBool::new(false),
+            bootstraps: AtomicU64::new(0),
+            replicate_bytes: AtomicU64::new(0),
             skipped_ops: AtomicU64::new(0),
             tail_stop: Arc::new(AtomicBool::new(false)),
             tail_thread: Mutex::new(None),
@@ -254,6 +269,7 @@ impl CacheService {
         match (req.method.as_str(), req.path.as_str()) {
             ("GET", "/ping") => Response::text_static(200, "pong"),
             ("GET", "/replicate") => self.replicate(req),
+            ("GET", "/bootstrap") => self.bootstrap(),
             ("POST", "/promote") => self.promote(),
             ("POST", "/drain") => self.drain(req),
             // Hot endpoints sniff the first body byte: the binary codec's
@@ -309,7 +325,20 @@ impl CacheService {
             &ops,
             self.epoch(),
         );
+        self.replicate_bytes.fetch_add(buf.len() as u64, Ordering::Relaxed);
         Response::binary(buf)
+    }
+
+    /// `GET /bootstrap`: a seq-stamped JSON checkpoint of the entire
+    /// service state (every TCG with primary node ids, every snapshot
+    /// handle, each content payload once). A follower whose pull position
+    /// fell off the op-log window installs it and resumes tailing
+    /// `/replicate?from=<seq>` — no gap, no overlap.
+    fn bootstrap(&self) -> Response {
+        match self.sharded.bootstrap_doc() {
+            Some(doc) => Response::json(doc.to_string()),
+            None => Response::bad_request_static("replication is not enabled (no op-log)"),
+        }
     }
 
     /// `POST /promote`: flip a follower into a writable primary. The new
@@ -348,16 +377,28 @@ impl CacheService {
         let (caught_up, final_seq) = match self.sharded.oplog() {
             Some(log) => {
                 let target = log.next_seq();
-                let deadline = Instant::now() + DRAIN_DEADLINE;
-                loop {
-                    if log.acked() >= target {
-                        break (true, target);
+                // A WAL-only primary has no follower to wait for; its
+                // drain duty is durability, not catch-up.
+                let caught_up = if self.sharded.replication_enabled() {
+                    let deadline = Instant::now() + DRAIN_DEADLINE;
+                    loop {
+                        if log.acked() >= target {
+                            break true;
+                        }
+                        if Instant::now() >= deadline {
+                            break false;
+                        }
+                        std::thread::sleep(Duration::from_millis(2));
                     }
-                    if Instant::now() >= deadline {
-                        break (false, target);
-                    }
-                    std::thread::sleep(Duration::from_millis(2));
+                } else {
+                    true
+                };
+                if let Some(wal) = log.wal() {
+                    // Everything appended so far reaches the disk before
+                    // the caller stops the process.
+                    wal.sync();
                 }
+                (caught_up, target)
             }
             None => (true, 0),
         };
@@ -869,6 +910,7 @@ impl CacheService {
                 let mut s = self.backend().service_stats();
                 s.epoch = self.epoch();
                 s.replica_lag_ops = self.replica_lag_ops();
+                s.replicate_bytes_shipped = self.replicate_bytes.load(Ordering::Relaxed);
                 let mut v = s.to_json();
                 if let Json::Obj(fields) = &mut v {
                     let role = if self.is_follower() { "follower" } else { "primary" };
@@ -876,6 +918,10 @@ impl CacheService {
                     fields.push((
                         "replica_frozen".to_string(),
                         Json::Bool(self.frozen.load(Ordering::Acquire)),
+                    ));
+                    fields.push((
+                        "replica_bootstraps".to_string(),
+                        Json::num(self.bootstraps.load(Ordering::Relaxed) as f64),
                     ));
                     fields.push((
                         "replica_skipped_ops".to_string(),
@@ -939,16 +985,30 @@ pub fn serve_follower(
     sharded: ShardedCacheService,
     primary: SocketAddr,
 ) -> std::io::Result<(Server, Arc<CacheService>)> {
+    serve_follower_with_tick(addr, workers, sharded, primary, DEFAULT_FOLLOW_TICK)
+}
+
+/// [`serve_follower`] with an explicit idle tick: how long the tail thread
+/// sleeps when it is caught up (or the primary is unreachable) before the
+/// next `GET /replicate` pull. Lower = fresher replica; higher = fewer
+/// idle pulls against the primary.
+pub fn serve_follower_with_tick(
+    addr: &str,
+    workers: usize,
+    sharded: ShardedCacheService,
+    primary: SocketAddr,
+    tick: Duration,
+) -> std::io::Result<(Server, Arc<CacheService>)> {
     let service = CacheService::with_service(sharded);
     service.follower.store(true, Ordering::Release);
-    spawn_tail(&service, primary);
+    spawn_tail(&service, primary, tick);
     let svc = Arc::clone(&service);
     let handler: Handler = Arc::new(move |req: &Request| svc.handle(req));
     let server = Server::bind(addr, workers, handler)?;
     Ok((server, service))
 }
 
-fn spawn_tail(service: &Arc<CacheService>, primary: SocketAddr) {
+fn spawn_tail(service: &Arc<CacheService>, primary: SocketAddr, tick: Duration) {
     let stop = Arc::clone(&service.tail_stop);
     // The thread holds only a Weak: a dropped service ends the tail rather
     // than the tail keeping the service alive forever.
@@ -968,7 +1028,7 @@ fn spawn_tail(service: &Arc<CacheService>, primary: SocketAddr) {
                 let idle = tail_once(&svc, &mut client);
                 drop(svc);
                 if idle {
-                    std::thread::sleep(Duration::from_millis(5));
+                    std::thread::sleep(tick);
                 }
             }
         })
@@ -1010,9 +1070,10 @@ fn tail_once(svc: &CacheService, client: &mut HttpClient) -> bool {
     svc.primary_next.store(batch.next, Ordering::Release);
     if batch.start > from {
         // The primary's window slid past our position: replay would skip
-        // mutations, so this replica's state can never be trusted again.
-        svc.frozen.store(true, Ordering::Release);
-        return true;
+        // mutations. Instead of freezing forever (the PR 8 behavior),
+        // install the primary's seq-stamped checkpoint and resume tailing
+        // from there.
+        return !bootstrap_once(svc, client);
     }
     let mut seq = batch.start;
     for op in batch.ops {
@@ -1025,6 +1086,44 @@ fn tail_once(svc: &CacheService, client: &mut HttpClient) -> bool {
         seq += 1;
     }
     svc.applied.load(Ordering::Acquire) >= batch.next
+}
+
+/// Install the primary's `GET /bootstrap` checkpoint: replace this
+/// follower's state with it and jump the apply position to its stamped
+/// sequence. Returns `true` on success (pull again immediately — the
+/// live tail resumes from the checkpoint's seq). A transport failure or
+/// garbled document is retried on the next tick; a document this replica
+/// cannot adopt (shard-count mismatch) freezes it — replay can never be
+/// faithful here.
+fn bootstrap_once(svc: &CacheService, client: &mut HttpClient) -> bool {
+    let doc = match client.get("/bootstrap") {
+        Ok((200, body)) => {
+            match std::str::from_utf8(&body).ok().and_then(|s| json::parse(s).ok()) {
+                Some(doc) => doc,
+                None => return false, // garbled: retry next tick
+            }
+        }
+        // The primary answered but has no checkpoint to give (no op-log —
+        // it cannot be the primary we were tailing): freeze.
+        Ok(_) => {
+            svc.frozen.store(true, Ordering::Release);
+            return false;
+        }
+        Err(_) => return false, // transport: retry next tick
+    };
+    match svc.sharded.adopt_bootstrap(&doc) {
+        Some(seq) => {
+            svc.applied.store(seq, Ordering::Release);
+            svc.bootstraps.fetch_add(1, Ordering::Relaxed);
+            true
+        }
+        None => {
+            // Topology mismatch (or a malformed doc from a well-formed
+            // frame): this replica's state can never be trusted again.
+            svc.frozen.store(true, Ordering::Release);
+            false
+        }
+    }
 }
 
 impl Drop for CacheService {
@@ -1440,5 +1539,143 @@ mod tests {
         assert_eq!(hex_decode(&hex_encode(&data)).unwrap(), data);
         assert!(hex_decode("abc").is_none());
         assert!(hex_decode("zz").is_none());
+    }
+
+    #[test]
+    fn bootstrap_endpoint_returns_a_seq_stamped_checkpoint() {
+        let (psrv, _psvc, _fsrv, _fsvc) = replicated_pair();
+        let mut pc = HttpClient::connect(psrv.addr());
+        pc.post("/put", put_body("t", &[("a", "ra")]).as_bytes()).unwrap();
+        let (status, body) = pc.get("/bootstrap").unwrap();
+        assert_eq!(status, 200);
+        let v = json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+        assert!(v.get("seq").unwrap().as_u64().unwrap() >= 1);
+        assert_eq!(v.get("shards").unwrap().as_u64(), Some(2));
+        assert_eq!(v.get("tasks").unwrap().as_arr().unwrap().len(), 1);
+
+        // A server without an op-log has nothing to bootstrap from.
+        let (server, _svc) = serve("127.0.0.1:0", 2).unwrap();
+        let mut c = HttpClient::connect(server.addr());
+        let (status, _) = c.get("/bootstrap").unwrap();
+        assert_eq!(status, 400);
+    }
+
+    #[test]
+    fn gapped_follower_bootstraps_to_zero_lag_instead_of_freezing() {
+        // A tiny op-log window, filled well past capacity before the
+        // follower exists: its first pull at from=0 observes a gap, which
+        // froze the replica permanently in PR 8.
+        let cfg = crate::cache::ServiceConfig {
+            shards: 2,
+            replicate_window: Some(4),
+            ..Default::default()
+        };
+        let primary =
+            ShardedCacheService::with_config(cfg, Arc::new(TaskCache::with_defaults)).unwrap();
+        let (psrv, _psvc) = serve_service("127.0.0.1:0", 2, primary).unwrap();
+        let mut pc = HttpClient::connect(psrv.addr());
+        for i in 0..16 {
+            let t = format!("t{i}");
+            pc.post("/put", put_body(&t, &[("a", "ra"), ("b", "rb")]).as_bytes()).unwrap();
+        }
+        let follower = ShardedCacheService::with_factory(2, Arc::new(TaskCache::with_defaults));
+        let (fsrv, fsvc) = serve_follower_with_tick(
+            "127.0.0.1:0",
+            2,
+            follower,
+            psrv.addr(),
+            Duration::from_millis(2),
+        )
+        .unwrap();
+        let mut fc = HttpClient::connect(fsrv.addr());
+
+        // State the window no longer covers arrives via the checkpoint…
+        await_hit(&mut fc, "t0", &[call("a"), call("b")]);
+        // …and the live tail resumed past it.
+        pc.post("/put", put_body("tail", &[("z", "rz")]).as_bytes()).unwrap();
+        await_hit(&mut fc, "tail", &[call("z")]);
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while fsvc.replica_lag_ops() != 0 {
+            assert!(Instant::now() < deadline, "follower never reached zero lag");
+            std::thread::sleep(Duration::from_millis(2));
+        }
+
+        let (_, body) = fc.get("/stats").unwrap();
+        let v = json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+        assert_eq!(v.get("replica_frozen").unwrap().as_bool(), Some(false));
+        assert!(v.get("replica_bootstraps").unwrap().as_u64().unwrap() >= 1);
+        assert_eq!(v.get("replica_skipped_ops").unwrap().as_u64(), Some(0));
+        // The primary accounted the bytes it shipped tailing.
+        let (_, body) = pc.get("/stats").unwrap();
+        let v = json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+        assert!(v.get("replicate_bytes_shipped").unwrap().as_u64().unwrap() > 0);
+    }
+
+    #[test]
+    fn shard_mismatched_bootstrap_still_freezes_the_follower() {
+        let cfg = crate::cache::ServiceConfig {
+            shards: 2,
+            replicate_window: Some(2),
+            ..Default::default()
+        };
+        let primary =
+            ShardedCacheService::with_config(cfg, Arc::new(TaskCache::with_defaults)).unwrap();
+        let (psrv, _psvc) = serve_service("127.0.0.1:0", 2, primary).unwrap();
+        let mut pc = HttpClient::connect(psrv.addr());
+        for i in 0..8 {
+            pc.post("/put", put_body(&format!("t{i}"), &[("a", "ra")]).as_bytes()).unwrap();
+        }
+        // Wrong shard count: the gap triggers a bootstrap attempt, whose
+        // adoption is refused — the replica freezes rather than diverge.
+        let follower = ShardedCacheService::with_factory(3, Arc::new(TaskCache::with_defaults));
+        let (fsrv, _fsvc) = serve_follower_with_tick(
+            "127.0.0.1:0",
+            2,
+            follower,
+            psrv.addr(),
+            Duration::from_millis(2),
+        )
+        .unwrap();
+        let mut fc = HttpClient::connect(fsrv.addr());
+        let deadline = Instant::now() + Duration::from_secs(5);
+        loop {
+            let (_, body) = fc.get("/stats").unwrap();
+            let v = json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+            if v.get("replica_frozen").unwrap().as_bool() == Some(true) {
+                break;
+            }
+            assert!(Instant::now() < deadline, "mismatched follower never froze");
+            std::thread::sleep(Duration::from_millis(2));
+        }
+    }
+
+    #[test]
+    fn drain_and_persist_drive_end_to_end_through_the_remote_binding() {
+        use crate::client::RemoteBinding;
+        let (psrv, _psvc, _fsrv, _fsvc) = replicated_pair();
+        let b = RemoteBinding::connect(psrv.addr());
+        let traj = vec![(call("a"), ToolResult::new("ra", 1.0))];
+        assert!(b.insert("t", &traj).unwrap() > 0);
+
+        let dir = std::env::temp_dir().join(format!(
+            "tvcache-drain-binding-{}-{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let report = b.drain(Some(dir.to_str().unwrap())).expect("drain must answer");
+        assert!(report.caught_up, "follower acks the whole log before drain returns");
+        assert!(report.final_seq >= 1);
+        assert_eq!(report.persisted, Some(true));
+
+        // The drained server refuses new sessions but still answers reads.
+        assert_eq!(b.cursor_open("t"), 0);
+        assert!(matches!(b.lookup("t", &[call("a")]), Lookup::Hit { .. }));
+
+        // The persisted state warm-starts a fresh service.
+        let fresh = ShardedCacheService::new(2);
+        assert!(fresh.warm_start(dir.to_str().unwrap()));
+        assert!(matches!(fresh.lookup("t", &[call("a")]), Lookup::Hit { .. }));
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -16,7 +16,11 @@
 //! * **background workers** ([`worker_stall`]): stalled eviction/sweep
 //!   ticks;
 //! * the **replication seam** ([`replicate_fails`]): failed follower
-//!   pulls of the primary's op-log.
+//!   pulls of the primary's op-log;
+//! * **WAL file I/O** ([`wal_write_error`], [`wal_torn_write`],
+//!   [`wal_garble_write`]): failed appends, records torn mid-write, and
+//!   garbled (CRC-failing) records — each trips the WAL's sticky degraded
+//!   mode so the corruption stays a recoverable tail.
 //!
 //! Faults are drawn from one seeded [`Rng`], so a single-threaded driver
 //! replays the exact same fault sequence for a given seed; concurrent
@@ -59,10 +63,13 @@ pub enum Seam {
     WorkerTick = 6,
     /// Follower replication pull failed (tail loop retries next tick).
     Replicate = 7,
+    /// WAL append fault: failed write, torn (partial) record, or garbled
+    /// CRC — all sticky-degrade the durable log.
+    WalWrite = 8,
 }
 
 /// Number of [`Seam`] variants (length of the counter table).
-pub const SEAM_COUNT: usize = 8;
+pub const SEAM_COUNT: usize = 9;
 
 /// Per-seam fault probabilities plus the PRNG seed. All probabilities
 /// default to zero; a test arms only the seams it is exercising.
@@ -102,6 +109,14 @@ pub struct FaultPlan {
     /// P(a follower's `/replicate` pull fails — the tail loop skips the
     /// tick and retries, so lag grows until a pull lands).
     pub p_replicate_fail: f64,
+    /// P(a WAL append's write fails outright — nothing lands on disk).
+    pub p_wal_write_fail: f64,
+    /// P(a WAL record is torn mid-write — only a prefix of the frame
+    /// lands, exactly what a crash between `write` calls leaves behind).
+    pub p_wal_torn_tail: f64,
+    /// P(a WAL record's payload is corrupted on the way to disk, so its
+    /// CRC fails on recovery).
+    pub p_wal_garble: f64,
     /// Restrict injection to the installing thread. Lib unit tests set
     /// this so a scope can never leak faults into unrelated tests running
     /// concurrently in the same process; the dedicated fault-injection
@@ -131,6 +146,9 @@ impl FaultPlan {
             p_worker_stall: 0.0,
             worker_stall: Duration::from_millis(50),
             p_replicate_fail: 0.0,
+            p_wal_write_fail: 0.0,
+            p_wal_torn_tail: 0.0,
+            p_wal_garble: 0.0,
             thread_scoped: false,
         }
     }
@@ -177,6 +195,7 @@ static SCOPE: Mutex<()> = Mutex::new(());
 /// Cumulative per-seam injection counts; monotonic for the process
 /// lifetime so statistics never run backwards between scopes.
 static COUNTS: [AtomicU64; SEAM_COUNT] = [
+    AtomicU64::new(0),
     AtomicU64::new(0),
     AtomicU64::new(0),
     AtomicU64::new(0),
@@ -363,6 +382,35 @@ pub fn replicate_fails() -> bool {
     false
 }
 
+/// WAL append seam: `Some(err)` fails the write outright (nothing lands;
+/// the WAL sticky-degrades, availability over durability).
+pub fn wal_write_error() -> Option<io::Error> {
+    with_plan(|plan, rng| roll(rng, plan.p_wal_write_fail).then_some(()))?;
+    note(Seam::WalWrite);
+    Some(io::Error::other("injected WAL write failure (ENOSPC)"))
+}
+
+/// WAL torn-write seam: `true` tears this record mid-write — only a
+/// prefix of the frame lands, the shape a crash between `write` calls
+/// leaves. Recovery must truncate it, never replay it.
+pub fn wal_torn_write() -> bool {
+    if with_plan(|plan, rng| roll(rng, plan.p_wal_torn_tail).then_some(())).is_some() {
+        note(Seam::WalWrite);
+        return true;
+    }
+    false
+}
+
+/// WAL garble seam: `true` corrupts this record's payload before it is
+/// written, so its CRC fails on recovery.
+pub fn wal_garble_write() -> bool {
+    if with_plan(|plan, rng| roll(rng, plan.p_wal_garble).then_some(())).is_some() {
+        note(Seam::WalWrite);
+        return true;
+    }
+    false
+}
+
 /// Deterministic body corruption: enough to break any framed decode while
 /// keeping the transport-visible length unchanged.
 pub fn garble(body: &mut [u8]) {
@@ -392,6 +440,9 @@ mod tests {
         assert!(!spill_read_fails());
         assert!(worker_stall().is_none());
         assert!(!replicate_fails());
+        assert!(wal_write_error().is_none());
+        assert!(!wal_torn_write());
+        assert!(!wal_garble_write());
         let mut body = vec![1, 2, 3];
         assert!(recv_fault(&mut body).is_ok());
         assert_eq!(body, vec![1, 2, 3]);

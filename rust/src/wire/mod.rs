@@ -163,6 +163,13 @@ impl<'a> Reader<'a> {
         }
     }
 
+    /// Open a bare frame body with no magic byte and no seal — for
+    /// payloads whose integrity is guarded by an outer framing layer,
+    /// like the CRC32-framed WAL records (`cache/wal.rs`).
+    pub fn raw(body: &'a [u8]) -> Reader<'a> {
+        Reader { b: body }
+    }
+
     /// Open a *response* frame (no magic byte): verifies and strips the
     /// [`seal_resp`] trailer (epoch + checksum). A truncated or corrupted
     /// frame fails here, so response decoders only ever see intact bytes.
@@ -632,7 +639,11 @@ pub struct ReplicateBatch {
     pub ops: Vec<Op>,
 }
 
-fn put_op(buf: &mut Vec<u8>, op: &Op) {
+/// Encode one [`Op`] (tag + body). Public because it is the durable
+/// record codec too: the WAL (`cache/wal.rs`) frames exactly these bytes
+/// under its own length + CRC32 header, so the on-disk log and the
+/// `/replicate` wire can never drift apart.
+pub fn put_op(buf: &mut Vec<u8>, op: &Op) {
     match op {
         Op::Insert { task, traj } => {
             buf.push(OPR_INSERT);
@@ -694,7 +705,10 @@ fn put_op(buf: &mut Vec<u8>, op: &Op) {
     }
 }
 
-fn read_op(r: &mut Reader) -> Option<Op> {
+/// Decode one [`Op`] — the inverse of [`put_op`], shared by
+/// [`dec_replicate_resp`] and WAL segment recovery. `None` on any
+/// truncation, malformed field, or unknown tag.
+pub fn read_op(r: &mut Reader) -> Option<Op> {
     let tag = r.u8()?;
     let task = r.str()?.to_string();
     Some(match tag {
@@ -730,7 +744,7 @@ fn read_op(r: &mut Reader) -> Option<Op> {
                     if len > usize::MAX as u64 {
                         return None;
                     }
-                    Some(r.take_bytes(len as usize)?.to_vec())
+                    Some(r.take_bytes(len as usize)?.into())
                 }
                 _ => return None,
             };
@@ -1156,7 +1170,7 @@ mod tests {
                 node: 3,
                 id: 9,
                 key: ContentKey([1, 2, 3, u64::MAX]),
-                bytes: Some(vec![0xDE, 0xAD, 0xBE, 0xEF]),
+                bytes: Some(vec![0xDE, 0xAD, 0xBE, 0xEF].into()),
                 byte_len: 4,
                 serialize_cost: 0.5,
                 restore_cost: 0.75,
@@ -1211,6 +1225,29 @@ mod tests {
         let mut garbled = buf.clone();
         crate::util::fault::garble(&mut garbled);
         assert_eq!(dec_replicate_resp(&garbled), None, "garbled batch must not decode");
+    }
+
+    #[test]
+    fn bare_op_codec_roundtrips_and_survives_truncation() {
+        // The WAL frames put_op bytes directly (no seal — its CRC32
+        // framing guards integrity): the bare codec must roundtrip every
+        // variant and fail cleanly on every truncation.
+        for op in sample_ops() {
+            let mut buf = Vec::new();
+            put_op(&mut buf, &op);
+            let mut r = Reader::raw(&buf);
+            assert_eq!(read_op(&mut r), Some(op.clone()));
+            assert!(r.done(), "strict consumption for {op:?}");
+            for cut in 0..buf.len() {
+                let mut r = Reader::raw(&buf[..cut]);
+                if let Some(got) = read_op(&mut r) {
+                    // A prefix that still decodes must be a complete
+                    // shorter frame — impossible here because every field
+                    // is length-prefixed, so flag it if it ever happens.
+                    assert_eq!(got, op, "prefix decoded to a different op at {cut}");
+                }
+            }
+        }
     }
 
     #[test]

@@ -774,6 +774,7 @@ fn chaos_run_rewards_match_cacheless_for_seed() {
             background: true,
             session_sweep_tick: Duration::from_millis(25),
             replicate_window: Some(1 << 16),
+            wal_dir: Some(dir.join("wal")),
             ..Default::default()
         },
         Arc::new(TaskCache::with_defaults),
@@ -817,6 +818,9 @@ fn chaos_run_rewards_match_cacheless_for_seed() {
         p_worker_stall: 0.2,
         worker_stall: Duration::from_millis(10),
         p_replicate_fail: 0.2,
+        p_wal_write_fail: 0.2,
+        p_wal_torn_tail: 0.2,
+        p_wal_garble: 0.2,
         ..fault::FaultPlan::quiet(seed)
     };
     let t0 = std::time::Instant::now();
@@ -858,5 +862,153 @@ fn chaos_run_rewards_match_cacheless_for_seed() {
     let probe = RemoteBinding::connect_with(f_server.addr(), fast_cfg());
     await_remote_hit(&probe, "chaos-sentinel", &bash("sentinel"));
     drop(f_svc);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ──────────────────── durable op-log crash recovery ─────────────────────────
+
+/// A two-shard service with a small-segment WAL (512 bytes forces rotation
+/// under even a short op stream, so recovery always spans segments).
+fn wal_svc(dir: &std::path::Path) -> ShardedCacheService {
+    ShardedCacheService::with_config(
+        ServiceConfig {
+            shards: 2,
+            wal_dir: Some(dir.to_path_buf()),
+            wal_segment_bytes: 512,
+            ..Default::default()
+        },
+        Arc::new(TaskCache::with_defaults),
+    )
+    .unwrap()
+}
+
+/// Kill-and-restart, the acceptance bar for this PR: a WAL-enabled primary
+/// dies with a half-written record on disk (file surgery on the newest
+/// segment reproduces exactly what a kill mid-`write` leaves behind). The
+/// restart recovers bit-identical state up to the last intact record — the
+/// rebuilt TCG matches a never-crashed run of the surviving prefix node for
+/// node — the torn record is truncated, never replayed as garbage, and new
+/// writes resume densely at the recovered sequence.
+#[test]
+fn killed_wal_primary_recovers_to_the_last_intact_record() {
+    let _scope = fault::install(fault::FaultPlan::quiet(31)); // serialize I/O tests
+    let dir = tmpdir("wal-kill");
+    let snap_id;
+    {
+        let svc = wal_svc(&dir);
+        for i in 0..12 {
+            svc.insert("wk", &traj(&["boot", &format!("step{i}")])).expect("insert");
+        }
+        let node = svc.insert("wk", &traj(&["boot", "snapme"])).expect("insert");
+        snap_id = svc.store_snapshot("wk", node, snap(9, 64));
+        assert!(snap_id > 0, "snapshot must attach");
+        svc.set_warm_fork("wk", node, true);
+        // Drop is graceful and syncs everything; the surgery below un-syncs
+        // the tail again, which is what a real kill leaves.
+    }
+    let mut segs: Vec<_> = std::fs::read_dir(&dir)
+        .unwrap()
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .filter(|p| p.extension().is_some_and(|x| x == "seg"))
+        .collect();
+    segs.sort();
+    assert!(segs.len() > 1, "512-byte segments must have rotated");
+    let tail = segs.last().unwrap();
+    let mut bytes = std::fs::read(tail).unwrap();
+    let n = bytes.len();
+    assert!(n > 6, "tail segment must hold at least one record");
+    for b in &mut bytes[n - 6..] {
+        *b ^= 0x5A;
+    }
+    std::fs::write(tail, &bytes).unwrap();
+
+    // A never-crashed reference over the surviving prefix: every op except
+    // the warm-fork mark, whose record the surgery tore.
+    let refdir = tmpdir("wal-kill-ref");
+    let reference = wal_svc(&refdir);
+    for i in 0..12 {
+        reference.insert("wk", &traj(&["boot", &format!("step{i}")])).expect("insert");
+    }
+    let rnode = reference.insert("wk", &traj(&["boot", "snapme"])).expect("insert");
+    assert_eq!(reference.store_snapshot("wk", rnode, snap(9, 64)), snap_id);
+
+    let svc = wal_svc(&dir);
+    assert_eq!(
+        svc.task("wk").viz_json().to_string(),
+        reference.task("wk").viz_json().to_string(),
+        "recovered TCG differs from the never-crashed run"
+    );
+    assert_eq!(svc.service_stats().recoveries, 1);
+    assert!(!svc.has_warm_fork("wk", rnode), "the torn record must not replay");
+    for i in 0..12 {
+        assert!(
+            svc.lookup("wk", &[bash("boot"), bash(&format!("step{i}"))]).is_hit(),
+            "durable insert {i} lost in recovery"
+        );
+    }
+    let back = svc.fetch_snapshot("wk", snap_id).expect("snapshot survives recovery");
+    assert_eq!(back.bytes, vec![9u8; 64]);
+    let log = svc.oplog().expect("a WAL service keeps an op-log");
+    let resumed_at = log.next_seq();
+    assert_eq!(resumed_at, 14, "13 inserts + 1 attach survive; the torn mark does not");
+    svc.insert("wk", &traj(&["boot", "after"])).expect("insert");
+    assert_eq!(log.next_seq(), resumed_at + 1, "writes resume densely after recovery");
+    drop(svc);
+    let _ = std::fs::remove_dir_all(&dir);
+    let _ = std::fs::remove_dir_all(&refdir);
+}
+
+/// An injected WAL write failure trips the durable tier into sticky
+/// degraded mode — availability over durability, same ladder as the spill
+/// tier. The service keeps serving every request; only the post-fault ops
+/// stop being durable, so a later restart recovers exactly the pre-fault
+/// prefix.
+#[test]
+fn wal_write_fault_degrades_durability_not_the_service() {
+    let dir = tmpdir("wal-fault");
+    {
+        let svc = wal_svc(&dir);
+        svc.insert("wf", &traj(&["a"])).expect("insert");
+        svc.insert("wf", &traj(&["a", "b"])).expect("insert");
+        {
+            let mut plan = fault::FaultPlan::quiet(32);
+            plan.p_wal_write_fail = 1.0;
+            let _scope = fault::install(plan);
+            svc.insert("wf", &traj(&["a", "b", "c"])).expect("a degraded WAL still serves");
+        }
+        assert!(svc.lookup("wf", &[bash("a"), bash("b"), bash("c")]).is_hit());
+        assert!(svc.oplog().unwrap().wal().unwrap().degraded());
+        let stats = svc.service_stats();
+        assert_eq!(stats.oplog_appended, 3, "the op-log itself never degrades");
+        assert!(stats.wal_appended_bytes > 0, "pre-fault appends reached disk");
+    }
+    let svc = wal_svc(&dir);
+    assert!(svc.lookup("wf", &[bash("a"), bash("b")]).is_hit());
+    assert!(
+        !svc.lookup("wf", &[bash("a"), bash("b"), bash("c")]).is_hit(),
+        "the post-fault insert was never durable and must not resurrect"
+    );
+    drop(svc);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Kill-and-restart over HTTP: a WAL-backed server dies, a fresh process
+/// (new service, same WAL dir) comes up on a new port and serves the same
+/// state to clients — without `/persist` ever having run.
+#[test]
+fn http_server_restart_serves_recovered_state() {
+    let _scope = fault::install(fault::FaultPlan::quiet(33)); // serialize I/O tests
+    let dir = tmpdir("wal-http");
+    let (server, svc) = serve_service("127.0.0.1:0", 2, wal_svc(&dir)).unwrap();
+    let binding = RemoteBinding::connect_with(server.addr(), fast_cfg());
+    binding.insert("hr", &traj(&["make", "test"])).expect("insert over http");
+    drop(binding);
+    drop(server);
+    drop(svc);
+
+    let (server, _svc) = serve_service("127.0.0.1:0", 2, wal_svc(&dir)).unwrap();
+    let binding = RemoteBinding::connect_with(server.addr(), fast_cfg());
+    assert!(binding.lookup("hr", &[bash("make"), bash("test")]).is_hit());
+    assert_eq!(binding.service_stats().recoveries, 1, "/stats must carry the recovery count");
     let _ = std::fs::remove_dir_all(&dir);
 }
