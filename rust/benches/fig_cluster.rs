@@ -1,0 +1,291 @@
+//! Cluster figure (extension): consistent-hash routing scales the cache
+//! out without taxing the hot path or the hit rate.
+//!
+//! The PR 10 cluster layer puts a seeded consistent-hash ring and one
+//! `RemoteBinding` per replication group between the executors and the
+//! fleet. This bench pins down what that layer costs and what it keeps:
+//!
+//! 1. **Routing overhead**: warm depth-32 lookups through a 3-group
+//!    [`ClusterRouter`] vs a direct [`RemoteBinding`] to the same node.
+//!    The router adds one FNV-1a hash + ring binary-search per call;
+//!    asserted ≤ 10% over direct (best-of-3 per-op means).
+//! 2. **Aggregate hit rate**: the same concurrent DES workload run once
+//!    against a single node and once split across 3 groups. Placement
+//!    must not cost hits — asserted within 5 points.
+//! 3. **Kill-primary retention**: one group's primary dies between
+//!    epochs; the victim group fails over to its own follower. Asserted:
+//!    rewards bit-identical, exactly one failover (zero on the other
+//!    groups), and ≥ 80% of the no-fault hit count retained.
+//!
+//! Results are appended as one JSON line to `BENCH_10.json` (override
+//! with `TVCACHE_BENCH_OUT`).
+
+use std::io::Write as _;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use tvcache::bench::print_table;
+use tvcache::cache::{
+    CacheBackend, ServiceConfig, SessionBackend, ShardedCacheService, TaskCache, ToolCall,
+    ToolResult,
+};
+use tvcache::client::{BindingConfig, RemoteBinding};
+use tvcache::cluster::{ClusterMap, ClusterRouter, GroupSpec};
+use tvcache::metrics::CsvWriter;
+use tvcache::server::{serve_follower, serve_service};
+use tvcache::train::{run_concurrent_on, ConcurrentOptions};
+use tvcache::util::http::Server;
+use tvcache::workloads::{Workload, WorkloadConfig};
+
+fn replicated_svc() -> ShardedCacheService {
+    ShardedCacheService::with_config(
+        ServiceConfig { shards: 2, replicate_window: Some(1 << 16), ..Default::default() },
+        Arc::new(TaskCache::with_defaults),
+    )
+    .unwrap()
+}
+
+fn binding_cfg() -> BindingConfig {
+    BindingConfig {
+        connect_timeout: Duration::from_millis(500),
+        read_timeout: Duration::from_secs(2),
+        retries: 0,
+        backoff_base: Duration::from_millis(1),
+        backoff_max: Duration::from_millis(4),
+        // Above the thread count, so stale in-flight dials against a dead
+        // endpoint cannot re-trip the breaker post-failover.
+        breaker_threshold: 6,
+        breaker_cooldown: Duration::from_millis(200),
+        seed: 0xAEED,
+        probe_cooldown: Duration::ZERO,
+        endpoints: Vec::new(),
+    }
+}
+
+/// Spawn `n` primary-only groups and the map over them.
+fn plain_cluster(n: usize, seed: u64) -> (Vec<Server>, ClusterMap) {
+    let mut servers = Vec::with_capacity(n);
+    let mut groups = Vec::with_capacity(n);
+    for i in 0..n {
+        let (server, _svc) = serve_service("127.0.0.1:0", 4, replicated_svc()).unwrap();
+        groups.push(GroupSpec { name: format!("g{i}"), primary: server.addr(), follower: None });
+        servers.push(server);
+    }
+    let map = ClusterMap::new(seed, 32, groups).unwrap();
+    (servers, map)
+}
+
+/// Best-of-`reps` mean seconds per lookup.
+fn best_per_op(reps: usize, n: usize, mut op: impl FnMut()) -> f64 {
+    let mut best = f64::INFINITY;
+    for _ in 0..reps {
+        let t = Instant::now();
+        for _ in 0..n {
+            op();
+        }
+        best = best.min(t.elapsed().as_secs_f64() / n as f64);
+    }
+    best
+}
+
+fn main() {
+    let smoke = std::env::var("TVCACHE_BENCH_SMOKE").is_ok();
+    let n_ops: usize = if smoke { 300 } else { 2000 };
+    let n_tasks: usize = if smoke { 6 } else { 16 };
+
+    // ── 1. Routing overhead: depth-32 warm lookups, router vs direct ────
+    let (oh_servers, oh_map) = plain_cluster(3, 0xC1A5);
+    let router = ClusterRouter::connect(oh_map.clone(), binding_cfg());
+    let task = "overhead-task";
+    let traj: Vec<(ToolCall, ToolResult)> = (0..32)
+        .map(|i| {
+            (
+                ToolCall::with_flag("bash", format!("step-{i}"), true),
+                ToolResult::new(format!("out-{i}"), 1.0),
+            )
+        })
+        .collect();
+    let calls: Vec<ToolCall> = traj.iter().map(|(c, _)| c.clone()).collect();
+    router.insert(task, &traj).expect("warm insert through the router");
+    // The direct binding dials the very node the ring placed the task on:
+    // the two measured paths differ only by the routing layer.
+    let direct = RemoteBinding::connect_with(
+        oh_map.groups()[oh_map.group_for(task)].primary,
+        binding_cfg(),
+    );
+    assert!(direct.lookup(task, &calls).is_hit(), "warm entry must hit directly");
+    assert!(router.lookup(task, &calls).is_hit(), "warm entry must hit via the router");
+    // Alternate reps so drift (allocator warm-up, CPU clocks) hits both.
+    let mut direct_best = f64::INFINITY;
+    let mut router_best = f64::INFINITY;
+    for _ in 0..3 {
+        direct_best = direct_best.min(best_per_op(1, n_ops, || {
+            assert!(direct.lookup(task, &calls).is_hit());
+        }));
+        router_best = router_best.min(best_per_op(1, n_ops, || {
+            assert!(router.lookup(task, &calls).is_hit());
+        }));
+    }
+    let overhead = router_best / direct_best;
+    drop(router);
+    drop(direct);
+    drop(oh_servers);
+
+    // ── 2. Aggregate hit rate: 3 groups vs one node, same DES workload ──
+    let cfg = WorkloadConfig::config_for(Workload::TerminalEasy);
+    let mut opts = ConcurrentOptions::from_config(&cfg, n_tasks);
+    opts.epochs = 2;
+    opts.threads = 4;
+
+    let (single_server, _single_svc) = serve_service("127.0.0.1:0", 4, replicated_svc()).unwrap();
+    let single = Arc::new(RemoteBinding::connect_with(single_server.addr(), binding_cfg()));
+    let single_run = run_concurrent_on(&cfg, &opts, Arc::clone(&single) as Arc<dyn SessionBackend>);
+    drop(single_server);
+
+    let (hr_servers, hr_map) = plain_cluster(3, 0xC1A5);
+    let cluster = Arc::new(ClusterRouter::connect(hr_map, binding_cfg()));
+    let cluster_run =
+        run_concurrent_on(&cfg, &opts, Arc::clone(&cluster) as Arc<dyn SessionBackend>);
+    drop(hr_servers);
+
+    assert_eq!(cluster_run.rewards, single_run.rewards, "placement changed rewards");
+    let single_hr = single_run.overall_hit_rate();
+    let cluster_hr = cluster_run.overall_hit_rate();
+    let hr_delta = (single_hr - cluster_hr).abs();
+
+    // ── 3. Kill one primary: the victim group fails over alone ──────────
+    let mut primaries = Vec::new();
+    let mut followers = Vec::new();
+    let mut groups = Vec::new();
+    for i in 0..3 {
+        let (p_server, _p_svc) = serve_service("127.0.0.1:0", 4, replicated_svc()).unwrap();
+        let (f_server, f_svc) =
+            serve_follower("127.0.0.1:0", 4, replicated_svc(), p_server.addr()).unwrap();
+        groups.push(GroupSpec {
+            name: format!("g{i}"),
+            primary: p_server.addr(),
+            follower: Some(f_server.addr()),
+        });
+        primaries.push(Some(p_server));
+        followers.push((f_server, f_svc));
+    }
+    let map = ClusterMap::new(0xC1A5, 32, groups).unwrap();
+    let mut opts = ConcurrentOptions::from_config(&cfg, n_tasks);
+    opts.epochs = 1;
+    opts.threads = 4;
+    // Kill the busiest group, so the failover happens under real traffic.
+    let mut placed = vec![0usize; 3];
+    for t in 0..opts.n_tasks {
+        placed[map.group_for(&format!("task-{t}"))] += 1;
+    }
+    let victim = (0..3).max_by_key(|&g| placed[g]).unwrap();
+
+    let router = Arc::new(ClusterRouter::connect(map.clone(), binding_cfg()));
+    let _warm = run_concurrent_on(&cfg, &opts, Arc::clone(&router) as Arc<dyn SessionBackend>);
+    let nofault = run_concurrent_on(&cfg, &opts, Arc::clone(&router) as Arc<dyn SessionBackend>);
+    assert!(nofault.hits > 0, "no-fault cluster epoch must run warm");
+
+    // Sentinel: the newest op on the victim group — once its follower
+    // serves it, everything the warm epochs wrote there is replicated.
+    let sentinel =
+        (0..).map(|k| format!("sentinel-{k}")).find(|t| map.group_for(t) == victim).unwrap();
+    let probe_call = ToolCall::with_flag("bash", "sentinel", true);
+    router
+        .insert(&sentinel, &[(probe_call.clone(), ToolResult::new("ok", 1.0))])
+        .expect("sentinel insert on the victim group");
+    let probe = RemoteBinding::connect_with(followers[victim].0.addr(), binding_cfg());
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while !probe.lookup(&sentinel, std::slice::from_ref(&probe_call)).is_hit() {
+        assert!(Instant::now() < deadline, "victim follower never caught up");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+
+    primaries[victim] = None;
+    let t_run = Instant::now();
+    let failed_over =
+        run_concurrent_on(&cfg, &opts, Arc::clone(&router) as Arc<dyn SessionBackend>);
+    let failover_run_ms = t_run.elapsed().as_secs_f64() * 1e3;
+
+    assert_eq!(failed_over.rewards, nofault.rewards, "cluster failover changed rewards");
+    for g in 0..3 {
+        assert_eq!(
+            router.binding(g).failovers(),
+            u64::from(g == victim),
+            "failover must stay on the victim group"
+        );
+    }
+    assert!(!followers[victim].1.is_follower(), "victim follower must be promoted");
+    let retention = failed_over.hits as f64 / nofault.hits as f64;
+
+    // ── Report ──────────────────────────────────────────────────────────
+    let rows = vec![
+        vec!["direct lookup (µs/op)".into(), format!("{:.1}", direct_best * 1e6)],
+        vec!["routed lookup (µs/op)".into(), format!("{:.1}", router_best * 1e6)],
+        vec!["routing overhead".into(), format!("{overhead:.3}x")],
+        vec!["single-node hit rate".into(), format!("{:.3}", single_hr)],
+        vec!["3-group hit rate".into(), format!("{:.3}", cluster_hr)],
+        vec!["hit-rate delta".into(), format!("{hr_delta:.3}")],
+        vec!["no-fault hits".into(), format!("{}", nofault.hits)],
+        vec!["post-failover hits".into(), format!("{}", failed_over.hits)],
+        vec!["hit retention".into(), format!("{retention:.3}")],
+        vec!["failed-over epoch wall (ms)".into(), format!("{failover_run_ms:.1}")],
+    ];
+    print_table(
+        "Cluster (ext): routing overhead, placement hit parity, group-local failover",
+        &["metric", "value"],
+        &rows,
+    );
+    let mut csv = CsvWriter::new(&["metric", "value"]);
+    for r in &rows {
+        csv.rowf(&[&r[0], &r[1]]);
+    }
+    csv.write("results/fig_cluster.csv").unwrap();
+    println!("series -> results/fig_cluster.csv");
+
+    // Machine-readable perf trajectory for future PRs.
+    let out = std::env::var("TVCACHE_BENCH_OUT").unwrap_or_else(|_| "../BENCH_10.json".into());
+    let line = format!(
+        "{{\"bench\":\"fig_cluster\",\"mode\":\"{}\",\
+         \"direct_us\":{:.2},\"router_us\":{:.2},\"overhead_ratio\":{overhead:.4},\
+         \"single_hit_rate\":{single_hr:.4},\"cluster_hit_rate\":{cluster_hr:.4},\
+         \"hit_rate_delta\":{hr_delta:.4},\
+         \"nofault_hits\":{},\"failover_hits\":{},\"hit_retention\":{retention:.4},\
+         \"failovers\":1,\"failover_run_ms\":{failover_run_ms:.1}}}",
+        if smoke { "smoke" } else { "full" },
+        direct_best * 1e6,
+        router_best * 1e6,
+        nofault.hits,
+        failed_over.hits,
+    );
+    match std::fs::OpenOptions::new().create(true).append(true).open(&out) {
+        Ok(mut f) => {
+            let _ = writeln!(f, "{line}");
+            println!("appended -> {out}");
+        }
+        Err(e) => println!("could not append to {out}: {e}"),
+    }
+
+    // Acceptance: the routing layer is ≤ 10% of a warm lookup, placement
+    // costs < 5 hit-rate points, and a primary outage stays group-local
+    // with ≥ 80% of the hit count retained.
+    assert!(
+        overhead <= 1.10,
+        "router overhead must stay <= 10% over direct: {overhead:.3}x \
+         ({:.1}µs vs {:.1}µs)",
+        router_best * 1e6,
+        direct_best * 1e6
+    );
+    assert!(
+        hr_delta <= 0.05,
+        "3-group hit rate must match single-node within 5 points: \
+         {cluster_hr:.3} vs {single_hr:.3}"
+    );
+    assert!(
+        retention >= 0.8,
+        "post-failover hit count must hold >= 80% of no-fault: {retention:.3}"
+    );
+    println!(
+        "fig_cluster OK: routing {overhead:.3}x, hit-rate delta {hr_delta:.3}, \
+         retention {retention:.3} with one group-local failover"
+    );
+}

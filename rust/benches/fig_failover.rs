@@ -59,6 +59,7 @@ fn binding_cfg(follower: Option<std::net::SocketAddr>) -> BindingConfig {
         breaker_threshold: 6,
         breaker_cooldown: Duration::from_millis(200),
         seed: 0x8EED,
+        probe_cooldown: Duration::ZERO,
         endpoints: follower.into_iter().collect(),
     }
 }
@@ -74,7 +75,8 @@ fn main() {
     let (ref_server, _ref_svc) = serve_service("127.0.0.1:0", 4, replicated_svc()).unwrap();
     let ref_binding = Arc::new(RemoteBinding::connect_with(ref_server.addr(), binding_cfg(None)));
     let _warm = run_concurrent_on(&cfg, &opts, Arc::clone(&ref_binding) as Arc<dyn SessionBackend>);
-    let nofault = run_concurrent_on(&cfg, &opts, Arc::clone(&ref_binding) as Arc<dyn SessionBackend>);
+    let nofault =
+        run_concurrent_on(&cfg, &opts, Arc::clone(&ref_binding) as Arc<dyn SessionBackend>);
     assert!(nofault.hits > 0, "reference run must be warm");
     drop(ref_server);
 

@@ -65,6 +65,7 @@ fn probe_cfg() -> BindingConfig {
         breaker_threshold: 1000,
         breaker_cooldown: Duration::from_secs(60),
         seed: 0x9EED,
+        probe_cooldown: Duration::ZERO,
         endpoints: Vec::new(),
     }
 }

@@ -401,6 +401,14 @@ pub trait CacheBackend: Send + Sync {
     fn degraded(&self) -> bool {
         false
     }
+
+    /// Per-task view of [`CacheBackend::degraded`]. A cluster router is
+    /// degraded for the tasks placed on a broken group while every other
+    /// group keeps serving; single-node backends have one answer for all
+    /// tasks, so the default just forwards.
+    fn degraded_for(&self, _task: &str) -> bool {
+        self.degraded()
+    }
 }
 
 /// The session extension of [`CacheBackend`]: rollout-scoped state the
@@ -433,6 +441,20 @@ pub trait SessionBackend: CacheBackend {
     /// that can't change identity mid-run keep the default 0.
     fn backend_generation(&self) -> u64 {
         0
+    }
+
+    /// Per-task view of [`SessionBackend::capabilities`]. A cluster router
+    /// answers with the capabilities of the group the ring places `task`
+    /// on; single-node backends forward to the binding-wide answer.
+    fn capabilities_for(&self, _task: &str) -> Capabilities {
+        self.capabilities()
+    }
+
+    /// Per-task view of [`SessionBackend::backend_generation`]. A cluster
+    /// router bumps only the failed group's generation on failover, so
+    /// sessions sticky to healthy groups never drop their cursors.
+    fn generation_for(&self, _task: &str) -> u64 {
+        self.backend_generation()
     }
 
     // ---- stateful lookup cursors (the O(1)-per-call hot path) ----

@@ -96,6 +96,14 @@ pub struct BindingConfig {
     pub breaker_cooldown: Duration,
     /// Seed for backoff jitter (deterministic tests).
     pub seed: u64,
+    /// Minimum gap between `/promote` probes to the *same* candidate
+    /// endpoint. A flapping group re-opens its breaker every cooldown, and
+    /// without this gate each re-open re-probes every candidate — a
+    /// follower that just rejected a promotion (or answered with a fenced
+    /// epoch) would be hammered with promote requests it will keep
+    /// refusing. Candidates inside their cooldown are skipped, not waited
+    /// for; `Duration::ZERO` disables the gate (tests).
+    pub probe_cooldown: Duration,
     /// Additional endpoints (warm followers) beyond the primary address the
     /// binding was connected to. When the breaker opens, the binding tries
     /// to promote-and-fail-over to one of these before giving up on the
@@ -114,6 +122,7 @@ impl Default for BindingConfig {
             breaker_threshold: 5,
             breaker_cooldown: Duration::from_secs(2),
             seed: 0x7C1E,
+            probe_cooldown: Duration::from_secs(1),
             endpoints: Vec::new(),
         }
     }
@@ -157,6 +166,9 @@ pub struct RemoteBinding {
     opened_at: Mutex<Instant>,
     /// Jitter source for retry backoff.
     jitter: Mutex<Rng>,
+    /// Per-endpoint timestamp of the last `/promote` probe (indexed like
+    /// `endpoints`); gates re-probing a candidate that just refused.
+    probe_stamps: Mutex<Vec<Option<Instant>>>,
     /// Highest fencing epoch observed in any sealed reply or promotion
     /// answer. Replies (and promotion offers) below it are rejected.
     max_epoch: AtomicU64,
@@ -182,6 +194,7 @@ impl RemoteBinding {
         let jitter = Rng::new(cfg.seed ^ 0xB1D1_76AD);
         let mut endpoints = vec![addr];
         endpoints.extend(cfg.endpoints.iter().copied().filter(|e| *e != addr));
+        let probe_stamps = Mutex::new(vec![None; endpoints.len()]);
         RemoteBinding {
             endpoints,
             active: AtomicUsize::new(0),
@@ -192,6 +205,7 @@ impl RemoteBinding {
             consecutive_failures: AtomicU32::new(0),
             opened_at: Mutex::new(Instant::now()),
             jitter: Mutex::new(jitter),
+            probe_stamps,
             max_epoch: AtomicU64::new(0),
             generation: AtomicU64::new(0),
             retries_counter: AtomicU64::new(0),
@@ -407,6 +421,11 @@ impl RemoteBinding {
     /// counter bumps so sessions re-seed on the new server. When every
     /// candidate fails, the breaker stays open: only then is the cache
     /// actually bypassed.
+    ///
+    /// Each candidate is probed at most once per
+    /// [`BindingConfig::probe_cooldown`]: a flapping server re-opens the
+    /// breaker every `breaker_cooldown`, and without the gate each
+    /// re-open would re-spam `/promote` at candidates that just refused.
     fn try_failover(&self) {
         if self.endpoints.len() < 2 {
             return;
@@ -414,6 +433,9 @@ impl RemoteBinding {
         let active = self.active.load(Ordering::Acquire);
         for off in 1..self.endpoints.len() {
             let idx = (active + off) % self.endpoints.len();
+            if !self.probe_allowed(idx) {
+                continue;
+            }
             let mut probe = HttpClient::with_deadlines(
                 self.endpoints[idx],
                 self.cfg.connect_timeout,
@@ -441,6 +463,20 @@ impl RemoteBinding {
             self.note_success();
             return;
         }
+    }
+
+    /// May candidate `idx` be promote-probed right now? Stamps the probe
+    /// time on `true`, so concurrent breaker-open paths racing through
+    /// here still send at most one probe per candidate per cooldown.
+    fn probe_allowed(&self, idx: usize) -> bool {
+        let mut stamps = self.probe_stamps.lock().unwrap();
+        if let Some(at) = stamps[idx] {
+            if at.elapsed() < self.cfg.probe_cooldown {
+                return false;
+            }
+        }
+        stamps[idx] = Some(Instant::now());
+        true
     }
 
     fn post(&self, path: &str, body: String) -> Option<Json> {
@@ -825,6 +861,9 @@ mod tests {
             // recovery path is covered by the fault-injection suite).
             breaker_cooldown: Duration::from_secs(60),
             seed: 1,
+            // Probe gating is exercised by its own test below; everything
+            // else wants the pre-gate behavior.
+            probe_cooldown: Duration::ZERO,
             endpoints: Vec::new(),
         }
     }
@@ -868,6 +907,55 @@ mod tests {
         assert_eq!(b.capabilities(), Capabilities::LEGACY);
         // Not cached: a later probe (server now reachable) may upgrade.
         assert!(b.caps.lock().unwrap().is_none());
+    }
+
+    #[test]
+    fn promote_probe_cooldown_bounds_flapping() {
+        use std::sync::Arc;
+        // A candidate follower that refuses every promotion: without the
+        // probe cooldown, each breaker re-open would hit it with another
+        // `/promote`.
+        let promotes = Arc::new(AtomicU64::new(0));
+        let seen = promotes.clone();
+        let candidate = crate::util::http::Server::bind(
+            "127.0.0.1:0",
+            2,
+            Arc::new(move |req: &crate::util::http::Request| {
+                if req.path == "/promote" {
+                    seen.fetch_add(1, Ordering::Relaxed);
+                    crate::util::http::Response::text_static(503, "not promotable")
+                } else {
+                    crate::util::http::Response::not_found()
+                }
+            }),
+        )
+        .unwrap();
+        let cfg = BindingConfig {
+            breaker_threshold: 1,
+            // Flap fast: each degraded() poll past this re-opens and
+            // re-enters try_failover.
+            breaker_cooldown: Duration::from_millis(5),
+            probe_cooldown: Duration::from_secs(60),
+            endpoints: vec![candidate.addr()],
+            ..fast_cfg()
+        };
+        let b = RemoteBinding::connect_with(dead_addr(), cfg);
+        // First failure trips the breaker and spends the one allowed probe.
+        assert!(b.insert("t", &[]).is_none());
+        assert_eq!(promotes.load(Ordering::Relaxed), 1);
+        // Every later flap (half-open /ping probe fails against the dead
+        // primary → re-open → try_failover) finds the candidate inside its
+        // probe cooldown and skips it.
+        for _ in 0..5 {
+            std::thread::sleep(Duration::from_millis(6));
+            assert!(b.degraded());
+        }
+        assert_eq!(
+            promotes.load(Ordering::Relaxed),
+            1,
+            "cooldown must bound promote probes under flapping"
+        );
+        assert_eq!(b.failovers(), 0);
     }
 
     #[test]

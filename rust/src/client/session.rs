@@ -60,10 +60,13 @@ pub fn open_session(
     task: impl Into<String>,
     cfg: SessionConfig,
 ) -> RolloutSession {
-    let generation = backend.backend_generation();
+    let task = task.into();
+    // Per-task generation: on a cluster router, only the group this task
+    // is placed on can invalidate the session's cursor.
+    let generation = backend.generation_for(&task);
     RolloutSession {
         backend,
-        task: task.into(),
+        task,
         cfg,
         caps: None,
         cursor: 0,
@@ -135,8 +138,11 @@ impl RolloutSession {
     }
 
     /// Negotiated capabilities (resolves the handshake on first call).
+    /// Per-task: on a cluster router this is the answer from the group the
+    /// ring places this task on, not a cluster-wide intersection.
     pub fn capabilities(&mut self) -> Capabilities {
-        *self.caps.get_or_insert_with(|| self.backend.capabilities())
+        let (caps, backend, task) = (&mut self.caps, &self.backend, &self.task);
+        *caps.get_or_insert_with(|| backend.capabilities_for(task))
     }
 
     /// Queue speculative stateless probes for the next turn frame.
@@ -197,7 +203,7 @@ impl RolloutSession {
     /// could hijack a stranger. The rollout continues on full-prefix
     /// lookups (new rollouts open fresh cursors on the new server).
     fn check_generation(&mut self) {
-        let g = self.backend.backend_generation();
+        let g = self.backend.generation_for(&self.task);
         if g != self.generation {
             self.generation = g;
             self.cursor = 0;
@@ -381,9 +387,10 @@ impl RolloutSession {
 
     /// Whether the backend is currently degraded (circuit breaker open on
     /// a remote binding): the executor short-circuits cache traffic to
-    /// plain execution while this holds.
+    /// plain execution while this holds. Per-task: a cluster router with
+    /// one broken group is degraded only for the tasks placed there.
     pub fn degraded(&self) -> bool {
-        self.backend.degraded()
+        self.backend.degraded_for(&self.task)
     }
 
     /// Re-seat the cursor after a fallback re-established the position.

@@ -1,0 +1,36 @@
+//! The cluster layer: consistent-hash task placement across several
+//! replicated TVCACHE processes.
+//!
+//! A single process caps how many concurrent tasks one cache can serve;
+//! at fleet scale hundreds of rollout workers hammer the cache at once.
+//! This module scales the existing single-group machinery *out* without
+//! changing any of it:
+//!
+//! * [`ring`] — a static-membership cluster map ([`ClusterMap`], parsed
+//!   from `cluster.json`) built on a seeded consistent-hash ring with
+//!   virtual nodes. It places every `task_id` on exactly one
+//!   **replication group**: one primary plus an optional warm follower,
+//!   each launched with today's `tvcache serve` / `--follow` and wired
+//!   together by the PR 8/9 op-log, `/promote`, and `/bootstrap`
+//!   machinery — the cluster layer reuses all of it verbatim.
+//! * [`router`] — the client side: [`ClusterRouter`] implements
+//!   [`crate::cache::CacheBackend`] / [`crate::cache::SessionBackend`] by
+//!   owning one [`crate::client::RemoteBinding`] per group and routing
+//!   every call by its task. Sessions are sticky to their group; a
+//!   breaker-open failover promotes *that group's* follower without
+//!   disturbing the others; epoch fencing stays per-group.
+//!
+//! Placement is enforced at both ends: the router only sends a task where
+//! the ring points, and a map-armed server
+//! ([`crate::server::CacheService::set_cluster_guard`]) answers
+//! `421 Misdirected Request` to any task the ring places elsewhere, so a
+//! stale or misconfigured router can never silently populate the wrong
+//! node's cache. The extended `/capabilities` hello carries the node
+//! identity ([`crate::wire::enc_hello_ext`]) so the router can also assert
+//! it reached the node the ring chose.
+
+pub mod ring;
+pub mod router;
+
+pub use ring::{ClusterMap, GroupSpec, DEFAULT_VNODES};
+pub use router::{ClusterRouter, ClusterStats, GroupStatus};

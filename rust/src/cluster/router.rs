@@ -1,0 +1,469 @@
+//! The client-side cluster router: one [`RemoteBinding`] per replication
+//! group, every call routed by its task through the consistent-hash ring.
+//!
+//! [`ClusterRouter`] implements the same [`CacheBackend`] /
+//! [`SessionBackend`] traits as a single binding, so executors, sessions,
+//! and the training drivers are agnostic to whether they talk to one
+//! process or a fleet. The cluster properties all fall out of *which*
+//! binding a call lands on:
+//!
+//! * **Sticky sessions** — a task's every call hashes to the same group,
+//!   so its cursors, resume pins, and snapshots live on exactly one
+//!   primary (and its warm follower).
+//! * **Independent failover** — each group's binding owns its own breaker,
+//!   endpoints, and epoch fence. A dead primary fails over to *its*
+//!   follower ([`crate::client::BindingConfig::endpoints`]); the other
+//!   groups never notice. The per-task trait methods
+//!   ([`SessionBackend::generation_for`], [`CacheBackend::degraded_for`])
+//!   keep the blast radius per-group: only sessions placed on the failed
+//!   group re-seed or bypass.
+//! * **Per-group epoch fencing** — epochs are a property of one group's
+//!   promotion history; the router never compares epochs across groups.
+//!
+//! The router can also *assert* placement: [`ClusterRouter::check_identity`]
+//! runs the extended `/capabilities` hello against every group's active
+//! endpoint and verifies the node reports the identity the map derives
+//! ([`GroupSpec::primary_id`] / `follower_id`), and
+//! [`ClusterRouter::cluster_stats`] fans `GET /stats` in from every group
+//! into one merged + per-group view (the `/cluster_stats` surface).
+
+use std::net::SocketAddr;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::cache::{
+    BackendStats, CacheBackend, CacheStats, Capabilities, CursorStep, Lookup, NodeId,
+    SessionBackend, SnapshotCosts, ToolCall, ToolResult, TurnBatch, TurnReply,
+};
+use crate::client::{BindingConfig, RemoteBinding};
+use crate::cluster::ring::{ClusterMap, GroupSpec};
+use crate::sandbox::SandboxSnapshot;
+use crate::util::http::HttpClient;
+use crate::util::json::{self, Json};
+use crate::wire;
+
+/// Client-side router over a [`ClusterMap`]: one binding per group.
+pub struct ClusterRouter {
+    map: ClusterMap,
+    /// Indexed like `map.groups()`.
+    bindings: Vec<RemoteBinding>,
+    cfg: BindingConfig,
+    /// Definitive node-identity mismatches observed by
+    /// [`ClusterRouter::check_identity`].
+    identity_mismatches: AtomicU64,
+}
+
+impl ClusterRouter {
+    /// Connect one [`RemoteBinding`] per group. `cfg` applies to every
+    /// group; each group's endpoint list is its own primary + follower
+    /// (whatever `cfg.endpoints` held is ignored — the map is
+    /// authoritative), and each binding gets a distinct jitter seed so
+    /// concurrent groups do not back off in lockstep.
+    pub fn connect(map: ClusterMap, cfg: BindingConfig) -> ClusterRouter {
+        let bindings = map
+            .groups()
+            .iter()
+            .enumerate()
+            .map(|(i, g)| {
+                let group_cfg = BindingConfig {
+                    endpoints: g.follower.into_iter().collect(),
+                    seed: cfg.seed ^ (i as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+                    ..cfg.clone()
+                };
+                RemoteBinding::connect_with(g.primary, group_cfg)
+            })
+            .collect();
+        ClusterRouter { map, bindings, cfg, identity_mismatches: AtomicU64::new(0) }
+    }
+
+    pub fn map(&self) -> &ClusterMap {
+        &self.map
+    }
+
+    /// The group index `task` is placed on (tests, diagnostics).
+    pub fn group_of(&self, task: &str) -> usize {
+        self.map.group_for(task)
+    }
+
+    /// White-box access to one group's binding (tests, diagnostics).
+    pub fn binding(&self, group: usize) -> &RemoteBinding {
+        &self.bindings[group]
+    }
+
+    /// Definitive identity mismatches seen so far.
+    pub fn identity_mismatches(&self) -> u64 {
+        self.identity_mismatches.load(Ordering::Relaxed)
+    }
+
+    fn route(&self, task: &str) -> &RemoteBinding {
+        &self.bindings[self.map.group_for(task)]
+    }
+
+    /// The node identity the map expects at `addr` within group `g`.
+    fn expected_id(g: &GroupSpec, addr: SocketAddr) -> String {
+        if g.follower == Some(addr) {
+            g.follower_id()
+        } else {
+            g.primary_id()
+        }
+    }
+
+    /// Assert every group's *active* endpoint is the node the map says it
+    /// is, via the extended `/capabilities` hello. Returns `false` — and
+    /// counts an identity mismatch — on any definitive mismatch: the node
+    /// reported a different identity, or answered
+    /// `421 Misdirected Request` to the expectation. Nodes that answer
+    /// with the plain frame, report no identity, 404 the endpoint, or are
+    /// unreachable cannot be *dis*proven and pass — identity checking is
+    /// a misconfiguration tripwire, not a liveness probe.
+    pub fn check_identity(&self) -> bool {
+        let mut ok = true;
+        for (g, binding) in self.map.groups().iter().zip(&self.bindings) {
+            let addr = binding.active_endpoint();
+            let expect = Self::expected_id(g, addr);
+            let mut buf = Vec::with_capacity(32);
+            wire::enc_hello_ext(&mut buf, Capabilities::PROTO_V2, &expect);
+            let mut probe =
+                HttpClient::with_deadlines(addr, self.cfg.connect_timeout, self.cfg.read_timeout);
+            match probe.post("/capabilities", &buf) {
+                Ok((200, body)) => {
+                    if let Some((_, _, Some(actual))) = wire::dec_caps_resp_ext(&body) {
+                        if !actual.is_empty() && actual != expect {
+                            self.identity_mismatches.fetch_add(1, Ordering::Relaxed);
+                            ok = false;
+                        }
+                    }
+                }
+                Ok((421, _)) => {
+                    self.identity_mismatches.fetch_add(1, Ordering::Relaxed);
+                    ok = false;
+                }
+                Ok(_) | Err(_) => {}
+            }
+        }
+        ok
+    }
+
+    /// Fan `GET /stats` in from every group: the `/cluster_stats` surface.
+    /// The merged half sums counters across groups (and ORs the sticky
+    /// degradation flags); the per-group half carries what cannot be
+    /// meaningfully merged — role, epoch, and lag are properties of one
+    /// group's replication line.
+    pub fn cluster_stats(&self) -> ClusterStats {
+        let mut groups = Vec::with_capacity(self.bindings.len());
+        for (g, binding) in self.map.groups().iter().zip(&self.bindings) {
+            let addr = binding.active_endpoint();
+            let mut probe =
+                HttpClient::with_deadlines(addr, self.cfg.connect_timeout, self.cfg.read_timeout);
+            let doc = match probe.get("/stats") {
+                Ok((200, body)) => {
+                    std::str::from_utf8(&body).ok().and_then(|s| json::parse(s).ok())
+                }
+                _ => None,
+            };
+            let stats = doc
+                .as_ref()
+                .and_then(BackendStats::from_json)
+                .unwrap_or_default();
+            let str_field = |key: &str| {
+                doc.as_ref()
+                    .and_then(|d| d.get(key).and_then(|v| v.as_str()).map(str::to_string))
+            };
+            groups.push(GroupStatus {
+                name: g.name.clone(),
+                endpoint: addr,
+                reachable: doc.is_some(),
+                role: str_field("role").unwrap_or_else(|| "unreachable".into()),
+                node_id: str_field("node_id").unwrap_or_default(),
+                epoch: stats.epoch,
+                replica_lag_ops: stats.replica_lag_ops,
+                failovers: binding.failovers(),
+                breaker: binding.breaker_state(),
+            });
+        }
+        ClusterStats { merged: self.service_stats(), groups }
+    }
+}
+
+/// Per-group status in a [`ClusterStats`] report.
+#[derive(Debug, Clone)]
+pub struct GroupStatus {
+    pub name: String,
+    /// The endpoint the group's binding currently routes to (the follower
+    /// after a failover).
+    pub endpoint: SocketAddr,
+    /// Whether `GET /stats` answered; the fields below are zeros/empty
+    /// when it did not.
+    pub reachable: bool,
+    /// `"primary"` / `"follower"` as the node reports it, or
+    /// `"unreachable"`.
+    pub role: String,
+    /// The node's configured identity (empty when it has none).
+    pub node_id: String,
+    /// The group's fencing epoch.
+    pub epoch: u64,
+    /// The group's replication lag in ops.
+    pub replica_lag_ops: u64,
+    /// Failovers this router's binding performed within the group.
+    pub failovers: u64,
+    /// The group binding's breaker state.
+    pub breaker: &'static str,
+}
+
+/// The `/cluster_stats` fan-in: merged service stats plus one
+/// [`GroupStatus`] per group.
+#[derive(Debug, Clone)]
+pub struct ClusterStats {
+    pub merged: BackendStats,
+    pub groups: Vec<GroupStatus>,
+}
+
+impl ClusterStats {
+    pub fn to_json(&self) -> Json {
+        let groups = self
+            .groups
+            .iter()
+            .map(|g| {
+                Json::obj(vec![
+                    ("name", Json::str(&g.name)),
+                    ("endpoint", Json::str(g.endpoint.to_string())),
+                    ("reachable", Json::Bool(g.reachable)),
+                    ("role", Json::str(&g.role)),
+                    ("node_id", Json::str(&g.node_id)),
+                    ("epoch", Json::num(g.epoch as f64)),
+                    ("replica_lag_ops", Json::num(g.replica_lag_ops as f64)),
+                    ("failovers", Json::num(g.failovers as f64)),
+                    ("breaker", Json::str(g.breaker)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("merged", self.merged.to_json()),
+            ("groups", Json::Arr(groups)),
+        ])
+    }
+}
+
+/// Sum `b` into `a` field-by-field. Counters add; sticky degradation
+/// flags OR; `epoch` takes the max (epochs are per-group and incomparable
+/// across groups — the max is "the deepest promotion history anywhere").
+fn merge_stats(a: &mut BackendStats, b: &BackendStats) {
+    a.shards += b.shards;
+    a.tasks += b.tasks;
+    a.lookups += b.lookups;
+    a.hits += b.hits;
+    a.snapshots += b.snapshots;
+    a.snapshot_bytes += b.snapshot_bytes;
+    a.spilled_snapshots += b.spilled_snapshots;
+    a.spilled_bytes += b.spilled_bytes;
+    a.spills += b.spills;
+    a.spill_faults += b.spill_faults;
+    a.bg_evictions += b.bg_evictions;
+    a.dedup_hits += b.dedup_hits;
+    a.dedup_resident_bytes_saved += b.dedup_resident_bytes_saved;
+    a.fault_cache_hits += b.fault_cache_hits;
+    a.fault_cache_misses += b.fault_cache_misses;
+    a.fault_cache_evictions += b.fault_cache_evictions;
+    a.remote_retries += b.remote_retries;
+    a.breaker_opens += b.breaker_opens;
+    a.breaker_half_opens += b.breaker_half_opens;
+    a.breaker_closes += b.breaker_closes;
+    a.spill_degraded |= b.spill_degraded;
+    a.injected_faults += b.injected_faults;
+    a.failovers += b.failovers;
+    a.epoch_rejects += b.epoch_rejects;
+    a.replica_lag_ops += b.replica_lag_ops;
+    a.epoch = a.epoch.max(b.epoch);
+    a.oplog_appended += b.oplog_appended;
+    a.replicate_bytes_shipped += b.replicate_bytes_shipped;
+    a.wal_segments += b.wal_segments;
+    a.wal_fsyncs += b.wal_fsyncs;
+    a.wal_appended_bytes += b.wal_appended_bytes;
+    a.wal_degraded |= b.wal_degraded;
+    a.recoveries += b.recoveries;
+}
+
+impl CacheBackend for ClusterRouter {
+    fn lookup(&self, task: &str, q: &[ToolCall]) -> Lookup {
+        self.route(task).lookup(task, q)
+    }
+
+    fn insert(&self, task: &str, traj: &[(ToolCall, ToolResult)]) -> Option<NodeId> {
+        self.route(task).insert(task, traj)
+    }
+
+    fn release(&self, task: &str, node: NodeId) {
+        self.route(task).release(task, node)
+    }
+
+    fn should_snapshot(&self, task: &str, costs: SnapshotCosts) -> bool {
+        self.route(task).should_snapshot(task, costs)
+    }
+
+    fn store_snapshot(&self, task: &str, node: NodeId, snap: SandboxSnapshot) -> u64 {
+        self.route(task).store_snapshot(task, node, snap)
+    }
+
+    fn fetch_snapshot(&self, task: &str, id: u64) -> Option<SandboxSnapshot> {
+        self.route(task).fetch_snapshot(task, id)
+    }
+
+    fn set_warm_fork(&self, task: &str, node: NodeId, warm: bool) {
+        self.route(task).set_warm_fork(task, node, warm)
+    }
+
+    fn has_warm_fork(&self, task: &str, node: NodeId) -> bool {
+        self.route(task).has_warm_fork(task, node)
+    }
+
+    fn stats(&self, task: &str) -> CacheStats {
+        self.route(task).stats(task)
+    }
+
+    fn service_stats(&self) -> BackendStats {
+        let mut merged = BackendStats::default();
+        for b in &self.bindings {
+            merge_stats(&mut merged, &b.service_stats());
+        }
+        merged
+    }
+
+    /// Persist fans out: each group persists to its own `{dir}/{name}`
+    /// subdirectory (server-local paths — with in-process groups sharing
+    /// one filesystem, a shared `dir` would collide). `true` only when
+    /// every group persisted.
+    fn persist(&self, dir: &str) -> bool {
+        self.map
+            .groups()
+            .iter()
+            .zip(&self.bindings)
+            .all(|(g, b)| b.persist(&format!("{dir}/{}", g.name)))
+    }
+
+    fn warm_start(&self, dir: &str) -> bool {
+        self.map
+            .groups()
+            .iter()
+            .zip(&self.bindings)
+            .all(|(g, b)| b.warm_start(&format!("{dir}/{}", g.name)))
+    }
+
+    /// The whole router is degraded only when *every* group is — per-task
+    /// callers use [`CacheBackend::degraded_for`], which answers for the
+    /// one group the task lives on.
+    fn degraded(&self) -> bool {
+        self.bindings.iter().all(|b| b.degraded())
+    }
+
+    fn degraded_for(&self, task: &str) -> bool {
+        self.route(task).degraded()
+    }
+}
+
+impl SessionBackend for ClusterRouter {
+    /// The cluster-wide *intersection*: a capability is advertised only
+    /// when every group speaks it (callers that cannot route by task must
+    /// be safe on every group). Per-task callers use
+    /// [`SessionBackend::capabilities_for`].
+    fn capabilities(&self) -> Capabilities {
+        let mut all = Capabilities::V2;
+        for b in &self.bindings {
+            let c = b.capabilities();
+            all.binary &= c.binary;
+            all.cursors &= c.cursors;
+            all.turn_batch &= c.turn_batch;
+            all.payload_dedup &= c.payload_dedup;
+        }
+        all
+    }
+
+    fn capabilities_for(&self, task: &str) -> Capabilities {
+        self.route(task).capabilities()
+    }
+
+    /// The sum of every group's generation: bumps whenever *any* group
+    /// fails over. Sessions use [`SessionBackend::generation_for`], which
+    /// only moves when the task's own group does.
+    fn backend_generation(&self) -> u64 {
+        self.bindings.iter().map(|b| b.backend_generation()).sum()
+    }
+
+    fn generation_for(&self, task: &str) -> u64 {
+        self.route(task).backend_generation()
+    }
+
+    fn cursor_open(&self, task: &str) -> u64 {
+        self.route(task).cursor_open(task)
+    }
+
+    fn cursor_step(&self, task: &str, cursor: u64, call: &ToolCall) -> CursorStep {
+        self.route(task).cursor_step(task, cursor, call)
+    }
+
+    fn cursor_record(
+        &self,
+        task: &str,
+        cursor: u64,
+        call: &ToolCall,
+        result: &ToolResult,
+    ) -> Option<NodeId> {
+        self.route(task).cursor_record(task, cursor, call, result)
+    }
+
+    fn cursor_seek(&self, task: &str, cursor: u64, node: NodeId, steps: usize) -> bool {
+        self.route(task).cursor_seek(task, cursor, node, steps)
+    }
+
+    fn cursor_close(&self, task: &str, cursor: u64) {
+        self.route(task).cursor_close(task, cursor)
+    }
+
+    fn session_release(&self, task: &str, cursor: u64, node: NodeId) {
+        self.route(task).session_release(task, cursor, node)
+    }
+
+    fn session_turn(&self, task: &str, cursor: u64, batch: &TurnBatch) -> TurnReply {
+        self.route(task).session_turn(task, cursor, batch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn routing_is_sticky_and_total() {
+        let groups = (0..3)
+            .map(|i| GroupSpec {
+                name: format!("g{i}"),
+                primary: format!("127.0.0.1:{}", 9200 + i).parse().unwrap(),
+                follower: None,
+            })
+            .collect();
+        let map = ClusterMap::new(3, 16, groups).unwrap();
+        let router = ClusterRouter::connect(map, BindingConfig::default());
+        for t in 0..200 {
+            let task = format!("task-{t}");
+            let g = router.group_of(&task);
+            assert!(g < 3);
+            assert_eq!(g, router.group_of(&task));
+            assert_eq!(
+                router.binding(g).active_endpoint(),
+                router.map().groups()[g].primary
+            );
+        }
+    }
+
+    #[test]
+    fn expected_identity_follows_the_active_endpoint() {
+        let g = GroupSpec {
+            name: "g0".into(),
+            primary: "127.0.0.1:9300".parse().unwrap(),
+            follower: Some("127.0.0.1:9301".parse().unwrap()),
+        };
+        assert_eq!(ClusterRouter::expected_id(&g, g.primary), "g0/primary");
+        assert_eq!(
+            ClusterRouter::expected_id(&g, g.follower.unwrap()),
+            "g0/follower"
+        );
+    }
+}

@@ -24,6 +24,7 @@ pub mod wire;
 pub mod sandbox;
 pub mod server;
 pub mod client;
+pub mod cluster;
 pub mod agent;
 pub mod workloads;
 pub mod train;

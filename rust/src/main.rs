@@ -8,8 +8,12 @@
 //!                  [--wal-dir PATH]                # durable op-log + crash recovery
 //!                  [--wal-segment-bytes N]         # WAL segment rotation size
 //!                  [--wal-fsync-every N]           # group-fsync record threshold
+//!                  [--node-id ID]                  # cluster identity (e.g. g0/primary)
+//!                  [--cluster-map cluster.json]    # arm the placement guard
 //! tvcache workload --name terminal-easy|terminal-medium|sql|ego
 //!                  [--tasks N] [--epochs N] [--shards N] [--no-cache]
+//! tvcache cluster  --map cluster.json              # parse/validate/print the map
+//!                  [--serve HOST:PORT]             # fan-in /cluster_stats status server
 //! ```
 
 use std::sync::Arc;
@@ -18,9 +22,12 @@ use tvcache::bench::print_table;
 use tvcache::cache::{
     ServiceConfig, ShardedCacheService, TaskCache, DEFAULT_FSYNC_EVERY, DEFAULT_SEGMENT_BYTES,
 };
+use tvcache::client::BindingConfig;
+use tvcache::cluster::{ClusterMap, ClusterRouter};
 use tvcache::server::{serve_follower_with_tick, serve_service, DEFAULT_SHARDS};
 use tvcache::train::{run_workload, SimOptions};
 use tvcache::util::cli::Args;
+use tvcache::util::http::{Handler, Request, Response, Server};
 use tvcache::workloads::{Workload, WorkloadConfig};
 
 fn main() -> Result<(), Box<dyn std::error::Error>> {
@@ -57,6 +64,21 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
                 }
                 None => serve_service(&addr, workers, sharded)?,
             };
+            if let Some(id) = args.get("node-id") {
+                svc.set_node_id(id);
+            }
+            if let Some(path) = args.get("cluster-map") {
+                let map = ClusterMap::parse(&std::fs::read_to_string(path)?)?;
+                let Some(id) = svc.node_id() else {
+                    return Err("--cluster-map requires --node-id".into());
+                };
+                let Some((group, _)) = map.locate(id) else {
+                    return Err(format!("node id {id:?} is not in {path}").into());
+                };
+                let name = map.groups()[group].name.clone();
+                svc.set_cluster_guard(map, group);
+                println!("cluster guard armed: node {id} serves group {name}");
+            }
             println!(
                 "tvcache {} listening on {} ({} shards, epoch {})",
                 if svc.is_follower() { "follower" } else { "server" },
@@ -109,8 +131,69 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
             );
             Ok(())
         }
+        Some("cluster") => {
+            let Some(path) = args.get("map") else {
+                return Err("cluster: missing --map cluster.json".into());
+            };
+            let map = ClusterMap::parse(&std::fs::read_to_string(path)?)?;
+            // Arc-share sample: place a synthetic task population and
+            // report each group's slice, so an imbalanced map is visible
+            // before any node is launched.
+            const SAMPLE: usize = 10_000;
+            let mut counts = vec![0usize; map.groups().len()];
+            for t in 0..SAMPLE {
+                counts[map.group_for(&format!("task-{t}"))] += 1;
+            }
+            let rows: Vec<Vec<String>> = map
+                .groups()
+                .iter()
+                .zip(&counts)
+                .map(|(g, &n)| {
+                    vec![
+                        g.name.clone(),
+                        g.primary.to_string(),
+                        g.follower.map(|f| f.to_string()).unwrap_or_else(|| "-".into()),
+                        g.primary_id(),
+                        format!("{:.1}%", 100.0 * n as f64 / SAMPLE as f64),
+                    ]
+                })
+                .collect();
+            print_table(
+                &format!(
+                    "{path}: {} groups, {} vnodes, seed {}",
+                    map.groups().len(),
+                    map.vnodes(),
+                    map.seed()
+                ),
+                &["group", "primary", "follower", "node id", "share"],
+                &rows,
+            );
+            println!(
+                "\nlaunch each node with `tvcache serve --node-id <group>/primary|follower \
+                 --cluster-map {path}` (followers add --follow <primary>)"
+            );
+            if let Some(status_addr) = args.get("serve") {
+                let router =
+                    Arc::new(ClusterRouter::connect(map, BindingConfig::default()));
+                let handler: Handler = Arc::new(move |req: &Request| {
+                    match (req.method.as_str(), req.path.as_str()) {
+                        ("GET", "/ping") => Response::text_static(200, "pong"),
+                        ("GET", "/cluster_stats") => {
+                            Response::json(router.cluster_stats().to_json().to_string())
+                        }
+                        _ => Response::not_found(),
+                    }
+                });
+                let server = Server::bind(status_addr, 2, handler)?;
+                println!("cluster status server on {} (GET /cluster_stats)", server.addr());
+                loop {
+                    std::thread::sleep(std::time::Duration::from_secs(3600));
+                }
+            }
+            Ok(())
+        }
         _ => {
-            println!("usage: tvcache <serve|workload> [flags]   (see README)");
+            println!("usage: tvcache <serve|workload|cluster> [flags]   (see README)");
             Ok(())
         }
     }

@@ -130,6 +130,25 @@ pub struct CacheService {
     skipped_ops: AtomicU64,
     tail_stop: Arc<AtomicBool>,
     tail_thread: Mutex<Option<std::thread::JoinHandle<()>>>,
+    /// Stable node identity (cluster mode, `--node-id`): echoed in the
+    /// extended `/capabilities` handshake and the debug surfaces so a
+    /// router can assert it reached the node its ring chose. Set once at
+    /// startup, before traffic.
+    node_id: std::sync::OnceLock<String>,
+    /// Cluster placement guard (cluster mode, `--cluster-map`): the shared
+    /// ring plus this node's group index. While set, task-bearing requests
+    /// whose task the ring places on *another* group answer
+    /// `421 Misdirected Request` instead of silently caching here.
+    guard: std::sync::OnceLock<ClusterGuard>,
+    /// Requests rejected by the placement guard.
+    misroutes: AtomicU64,
+}
+
+/// The server half of cluster placement: which group of `map` this node
+/// belongs to.
+struct ClusterGuard {
+    map: crate::cluster::ClusterMap,
+    group: usize,
 }
 
 impl CacheService {
@@ -162,7 +181,33 @@ impl CacheService {
             skipped_ops: AtomicU64::new(0),
             tail_stop: Arc::new(AtomicBool::new(false)),
             tail_thread: Mutex::new(None),
+            node_id: std::sync::OnceLock::new(),
+            guard: std::sync::OnceLock::new(),
+            misroutes: AtomicU64::new(0),
         })
+    }
+
+    /// Configure this node's stable cluster identity (first write wins;
+    /// call before serving traffic).
+    pub fn set_node_id(&self, id: impl Into<String>) {
+        let _ = self.node_id.set(id.into());
+    }
+
+    /// This node's configured cluster identity, if any.
+    pub fn node_id(&self) -> Option<&str> {
+        self.node_id.get().map(|s| s.as_str())
+    }
+
+    /// Arm the cluster placement guard: reject task-bearing requests the
+    /// ring places on a group other than `group` (first write wins; call
+    /// before serving traffic).
+    pub fn set_cluster_guard(&self, map: crate::cluster::ClusterMap, group: usize) {
+        let _ = self.guard.set(ClusterGuard { map, group });
+    }
+
+    /// Requests rejected by the placement guard so far.
+    pub fn misroutes(&self) -> u64 {
+        self.misroutes.load(Ordering::Relaxed)
     }
 
     /// The current fencing epoch.
@@ -266,6 +311,9 @@ impl CacheService {
                 return Response::text_static(503, "follower (read-only until promoted)");
             }
         }
+        if let Some(rejection) = self.reject_misrouted(req) {
+            return rejection;
+        }
         match (req.method.as_str(), req.path.as_str()) {
             ("GET", "/ping") => Response::text_static(200, "pong"),
             ("GET", "/replicate") => self.replicate(req),
@@ -299,6 +347,56 @@ impl CacheService {
             ("GET", "/viz") => self.viz(req),
             _ => Response::not_found(),
         }
+    }
+
+    /// Cluster placement guard: a task-bearing request whose task the ring
+    /// places on another group is answered `421 Misdirected Request` — a
+    /// misconfigured or stale router must never silently populate the
+    /// wrong node's cache (its inserts would be invisible to every
+    /// correctly-routed lookup, and its lookups would miss forever while
+    /// looking healthy). Inert unless [`CacheService::set_cluster_guard`]
+    /// armed it. Requests whose task cannot be peeked fall through to the
+    /// endpoint's own decoder, which rejects them with the usual 400.
+    fn reject_misrouted(&self, req: &Request) -> Option<Response> {
+        let g = self.guard.get()?;
+        // Only the task-bearing cache surface is guarded; admin and
+        // replication endpoints are node-scoped by design (a follower
+        // pulls `/replicate` regardless of task placement).
+        let guarded = matches!(
+            req.path.as_str(),
+            "/get"
+                | "/prefix_match"
+                | "/put"
+                | "/release"
+                | "/cursor_open"
+                | "/cursor_step"
+                | "/cursor_record"
+                | "/cursor_seek"
+                | "/cursor_close"
+                | "/session_turn"
+                | "/session_release"
+                | "/snapshot"
+                | "/warm"
+        );
+        if !guarded {
+            return None;
+        }
+        // Every binary request frame leads with the task string; JSON
+        // bodies carry a "task" field; the GET forms take `?task=`.
+        let task: Option<String> = if wire::is_binary(&req.body) {
+            wire::Reader::request(&req.body).and_then(|mut r| r.str().map(str::to_string))
+        } else if req.method == "GET" {
+            req.query.get("task").cloned()
+        } else {
+            json::parse(req.body_str())
+                .ok()
+                .and_then(|v| v.get("task").and_then(|t| t.as_str()).map(str::to_string))
+        };
+        if g.map.group_for(task.as_deref()?) == g.group {
+            return None;
+        }
+        self.misroutes.fetch_add(1, Ordering::Relaxed);
+        Some(Response::text_static(421, "misrouted task: the cluster map places it elsewhere"))
     }
 
     // ---- replication & failover ------------------------------------------
@@ -608,12 +706,35 @@ impl CacheService {
     /// per binding, replacing per-request magic-byte guessing for v2
     /// clients; old clients never call this and keep being sniffed.
     fn capabilities(&self, req: &Request) -> Response {
-        let Some(client_proto) = wire::dec_hello(&req.body) else {
+        let Some((client_proto, expect_node)) = wire::dec_hello_any(&req.body) else {
             return Response::bad_request_static("bad hello frame");
         };
+        // Node-identity assertion (cluster mode): a client that names the
+        // node it expects — and reaches a node configured with a different
+        // identity — is misrouted. Caught here, at the handshake, before
+        // any cache traffic lands on the wrong group.
+        if let (Some(expect), Some(actual)) = (expect_node, self.node_id()) {
+            if !expect.is_empty() && expect != actual {
+                self.misroutes.fetch_add(1, Ordering::Relaxed);
+                return Response::text_static(421, "node identity mismatch");
+            }
+        }
         let proto = client_proto.min(Capabilities::PROTO_V2);
         let mut buf = Vec::with_capacity(16);
-        wire::enc_caps_resp(&mut buf, proto, &self.session_backend().capabilities(), self.epoch());
+        let caps = self.session_backend().capabilities();
+        if expect_node.is_some() {
+            // Extended hello → extended reply (a plain client keeps the
+            // strictly-decoded plain frame it has always gotten).
+            wire::enc_caps_resp_ext(
+                &mut buf,
+                proto,
+                &caps,
+                self.node_id().unwrap_or(""),
+                self.epoch(),
+            );
+        } else {
+            wire::enc_caps_resp(&mut buf, proto, &caps, self.epoch());
+        }
         Response::binary(buf)
     }
 
@@ -639,6 +760,8 @@ impl CacheService {
                     "role",
                     Json::str(if self.is_follower() { "follower" } else { "primary" }),
                 ),
+                ("node_id", Json::str(self.node_id().unwrap_or(""))),
+                ("misroutes", Json::num(self.misroutes() as f64)),
             ])
             .to_string(),
         )
@@ -914,23 +1037,31 @@ impl CacheService {
                 let mut v = s.to_json();
                 if let Json::Obj(fields) = &mut v {
                     let role = if self.is_follower() { "follower" } else { "primary" };
-                    fields.push(("role".to_string(), Json::str(role)));
-                    fields.push((
+                    fields.insert("role".to_string(), Json::str(role));
+                    fields.insert(
                         "replica_frozen".to_string(),
                         Json::Bool(self.frozen.load(Ordering::Acquire)),
-                    ));
-                    fields.push((
+                    );
+                    fields.insert(
                         "replica_bootstraps".to_string(),
                         Json::num(self.bootstraps.load(Ordering::Relaxed) as f64),
-                    ));
-                    fields.push((
+                    );
+                    fields.insert(
                         "replica_skipped_ops".to_string(),
                         Json::num(self.skipped_ops() as f64),
-                    ));
-                    fields.push((
+                    );
+                    fields.insert(
                         "draining".to_string(),
                         Json::Bool(self.draining.load(Ordering::Acquire)),
-                    ));
+                    );
+                    fields.insert(
+                        "node_id".to_string(),
+                        Json::str(self.node_id().unwrap_or("")),
+                    );
+                    fields.insert(
+                        "misroutes".to_string(),
+                        Json::num(self.misroutes() as f64),
+                    );
                 }
                 Response::json(v.to_string())
             }

@@ -390,6 +390,12 @@ pub struct ConcurrentOptions {
     pub use_cursor: bool,
     /// Turn-level batching (see [`SimOptions::batch_turns`]).
     pub batch_turns: bool,
+    /// Path to a `cluster.json`: run against a [`ClusterRouter`] over the
+    /// mapped replication groups (which must already be serving) instead
+    /// of building an in-process backend. `shards`/budget/spill options
+    /// describe the in-process backend and are ignored in cluster mode;
+    /// warm-start/persist fan out per group through the router.
+    pub cluster_map: Option<String>,
 }
 
 impl ConcurrentOptions {
@@ -410,6 +416,7 @@ impl ConcurrentOptions {
             persist_to: None,
             use_cursor: true,
             batch_turns: true,
+            cluster_map: None,
         }
     }
 }
@@ -458,6 +465,32 @@ impl ConcurrentReport {
 /// rollout interleaving is whatever the scheduler does, exactly as on real
 /// training infrastructure.
 pub fn run_concurrent(cfg: &WorkloadConfig, opts: &ConcurrentOptions) -> ConcurrentReport {
+    if let Some(path) = &opts.cluster_map {
+        // Cluster mode: route by task across already-serving replication
+        // groups instead of building an in-process backend.
+        let text = std::fs::read_to_string(path)
+            .unwrap_or_else(|e| panic!("cluster map {path} unreadable: {e}"));
+        let map = crate::cluster::ClusterMap::parse(&text)
+            .unwrap_or_else(|e| panic!("cluster map {path}: {e}"));
+        let router = Arc::new(crate::cluster::ClusterRouter::connect(
+            map,
+            crate::client::BindingConfig::default(),
+        ));
+        if let Some(dir) = &opts.warm_start_from {
+            assert!(
+                router.warm_start(dir),
+                "warm-start requested but {dir} did not load on every group"
+            );
+        }
+        let report = run_concurrent_on(cfg, opts, Arc::clone(&router) as Arc<dyn SessionBackend>);
+        if let Some(dir) = &opts.persist_to {
+            assert!(
+                router.persist(dir),
+                "persist requested but {dir} was not writable on every group"
+            );
+        }
+        return report;
+    }
     let backend = sharded_backend_with(
         cfg,
         opts.lpm,

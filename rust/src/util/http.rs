@@ -112,6 +112,7 @@ impl Response {
             400 => "400 Bad Request",
             404 => "404 Not Found",
             409 => "409 Conflict",
+            421 => "421 Misdirected Request",
             500 => "500 Internal Server Error",
             503 => "503 Service Unavailable",
             _ => "200 OK",

@@ -381,6 +381,71 @@ pub fn dec_caps_resp(body: &[u8]) -> Option<(u64, Capabilities)> {
     r.done().then_some((proto, caps))
 }
 
+/// Extended `/capabilities` hello (PR 10): `proto, expect_node`. The
+/// trailing string names the node the client's cluster ring *expects* to
+/// be talking to, so a misrouted connection is rejected at the handshake
+/// instead of silently caching on the wrong group. A separate frame — not
+/// a tolerant [`dec_hello`] — because the plain decoders are strict on
+/// trailing bytes by design (a truncation/garble must never half-decode),
+/// and the server only replies with the extended caps frame when the
+/// client sent the extended hello, so legacy peers never see it.
+pub fn enc_hello_ext(buf: &mut Vec<u8>, proto: u64, expect_node: &str) {
+    buf.push(MAGIC);
+    put_varint(buf, proto);
+    put_str(buf, expect_node);
+}
+
+/// Server side of the hello, accepting both forms. Returns the protocol
+/// generation and, for the extended frame, the node id the client expects.
+pub fn dec_hello_any(body: &[u8]) -> Option<(u64, Option<&str>)> {
+    let mut r = Reader::request(body)?;
+    let proto = r.varint()?;
+    if r.done() {
+        return Some((proto, None));
+    }
+    let expect = r.str()?;
+    r.done().then_some((proto, Some(expect)))
+}
+
+/// Extended `/capabilities` response: `proto, flags, node_id` (sealed).
+/// Sent only in answer to [`enc_hello_ext`]; the plain frame stays the
+/// wire default so pre-cluster clients keep strict decoding.
+pub fn enc_caps_resp_ext(
+    buf: &mut Vec<u8>,
+    proto: u64,
+    caps: &Capabilities,
+    node_id: &str,
+    epoch: u64,
+) {
+    put_varint(buf, proto);
+    let flags = (caps.binary as u8)
+        | ((caps.cursors as u8) << 1)
+        | ((caps.turn_batch as u8) << 2)
+        | ((caps.payload_dedup as u8) << 3);
+    buf.push(flags);
+    put_str(buf, node_id);
+    seal_resp(buf, epoch);
+}
+
+/// Client side of the caps response, accepting both forms. `node_id` is
+/// `None` when the server answered with the plain (pre-cluster) frame.
+pub fn dec_caps_resp_ext(body: &[u8]) -> Option<(u64, Capabilities, Option<String>)> {
+    let mut r = Reader::response(body)?;
+    let proto = r.varint()?;
+    let flags = r.u8()?;
+    let caps = Capabilities {
+        binary: flags & 1 != 0,
+        cursors: flags & 2 != 0,
+        turn_batch: flags & 4 != 0,
+        payload_dedup: flags & 8 != 0,
+    };
+    if r.done() {
+        return Some((proto, caps, None));
+    }
+    let node = r.str()?.to_string();
+    r.done().then_some((proto, caps, Some(node)))
+}
+
 /// `/session_turn` — one reasoning turn's batched ops: `task, cursor
 /// (0 = open a session first), n_probes, n × call, op_tag, [call,
 /// [result]]`. The steady-state turn frame replaces N per-call round
@@ -1072,6 +1137,74 @@ mod tests {
             Some((2, Capabilities::V2)),
             "unknown capability bits must be ignored"
         );
+    }
+
+    #[test]
+    fn node_identity_hello_frames_roundtrip_and_interop() {
+        // Extended hello round-trips through the tolerant decoder...
+        let mut buf = Vec::new();
+        enc_hello_ext(&mut buf, Capabilities::PROTO_V2, "g1/primary");
+        assert!(is_binary(&buf));
+        assert_eq!(dec_hello_any(&buf), Some((Capabilities::PROTO_V2, Some("g1/primary"))));
+        // ...and the strict plain decoder rejects it (old servers must not
+        // half-decode a frame they do not understand).
+        assert_eq!(dec_hello(&buf), None);
+        // The plain hello decodes through both.
+        let mut plain = Vec::new();
+        enc_hello(&mut plain, Capabilities::PROTO_V2);
+        assert_eq!(dec_hello_any(&plain), Some((Capabilities::PROTO_V2, None)));
+        assert_eq!(dec_hello(&plain), Some(Capabilities::PROTO_V2));
+        // An empty expectation is a valid frame, distinct from no frame.
+        let mut empty = Vec::new();
+        enc_hello_ext(&mut empty, Capabilities::PROTO_V2, "");
+        assert_eq!(dec_hello_any(&empty), Some((Capabilities::PROTO_V2, Some(""))));
+
+        // Extended caps response round-trips with the node id...
+        for caps in [Capabilities::V2, Capabilities::LEGACY, Capabilities::CORE] {
+            let mut resp = Vec::new();
+            enc_caps_resp_ext(&mut resp, Capabilities::PROTO_V2, &caps, "g1/primary", 7);
+            assert_eq!(
+                dec_caps_resp_ext(&resp),
+                Some((Capabilities::PROTO_V2, caps, Some("g1/primary".to_string())))
+            );
+            // ...the strict plain decoder rejects the trailing id...
+            assert_eq!(dec_caps_resp(&resp), None);
+            // ...and the tolerant decoder accepts a plain response.
+            let mut plain = Vec::new();
+            enc_caps_resp(&mut plain, Capabilities::PROTO_V2, &caps, 7);
+            assert_eq!(dec_caps_resp_ext(&plain), Some((Capabilities::PROTO_V2, caps, None)));
+        }
+    }
+
+    #[test]
+    fn node_identity_hello_frames_survive_truncation_and_garble_fuzz() {
+        // Every strict prefix of the extended hello either fails to decode
+        // or (the flags-only prefix) decodes as a plain hello — it must
+        // never panic or half-read the node id.
+        let mut hello = Vec::new();
+        enc_hello_ext(&mut hello, Capabilities::PROTO_V2, "group-a/follower");
+        for cut in 0..hello.len() {
+            let got = dec_hello_any(&hello[..cut]);
+            assert!(
+                got.is_none() || got == Some((Capabilities::PROTO_V2, None)),
+                "truncated ext hello at {cut}: {got:?}"
+            );
+        }
+        // The sealed extended caps frame rejects every truncation outright
+        // (the seal covers the id bytes) and never survives a garble.
+        let mut resp = Vec::new();
+        enc_caps_resp_ext(&mut resp, Capabilities::PROTO_V2, &Capabilities::V2, "g0/primary", 7);
+        for cut in 0..resp.len() {
+            assert_eq!(dec_caps_resp_ext(&resp[..cut]), None, "truncated ext caps at {cut}");
+        }
+        let mut garbled = resp.clone();
+        crate::util::fault::garble(&mut garbled);
+        assert_eq!(dec_caps_resp_ext(&garbled), None, "garbled ext caps must not decode");
+        for i in 0..resp.len() {
+            let mut flipped = resp.clone();
+            flipped[i] ^= 0xA5;
+            assert_eq!(dec_caps_resp_ext(&flipped), None, "flipped byte {i} must not decode");
+        }
     }
 
     #[test]

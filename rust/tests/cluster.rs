@@ -1,0 +1,305 @@
+//! Cluster-layer integration suite: consistent-hash routing over several
+//! in-process replication groups.
+//!
+//! The acceptance scenario mirrors `tests/faults.rs::kill_primary_scenario`
+//! one level up: three primary+follower groups serve 64 tasks through a
+//! [`ClusterRouter`], one group's primary dies mid-run, and the failover
+//! must stay *inside* that group — rewards bit-identical to a cacheless
+//! run, exactly one promote-and-switch on the victim binding, zero on the
+//! others, and the `/cluster_stats` fan-in reflecting the new epoch. The
+//! suite also covers the server-side placement guard (421 on misrouted
+//! tasks) and the extended-hello identity tripwire.
+//!
+//! Every test installs a [`fault::FaultScope`] — even a quiet one —
+//! because installation holds a process-global lock: I/O tests serialize
+//! instead of arming each other's seams.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use tvcache::cache::{
+    CacheBackend, Capabilities, ServiceConfig, SessionBackend, ShardedCacheService, TaskCache,
+    ToolCall, ToolResult,
+};
+use tvcache::client::{BindingConfig, RemoteBinding};
+use tvcache::cluster::{ClusterMap, ClusterRouter, GroupSpec};
+use tvcache::server::{serve_follower, serve_service, CacheService};
+use tvcache::train::{run_concurrent, run_concurrent_on, ConcurrentOptions};
+use tvcache::util::fault;
+use tvcache::util::http::Server;
+use tvcache::workloads::{Workload, WorkloadConfig};
+
+fn bash(cmd: &str) -> ToolCall {
+    ToolCall::with_flag("bash", cmd, true)
+}
+
+fn traj(cmds: &[&str]) -> Vec<(ToolCall, ToolResult)> {
+    cmds.iter().map(|c| (bash(c), ToolResult::new(format!("out-{c}"), 3.0))).collect()
+}
+
+/// Short deadlines, a breaker that cannot half-open mid-test, and no
+/// promote-probe gating (failover paths here want every pass to probe).
+fn fast_cfg() -> BindingConfig {
+    BindingConfig {
+        connect_timeout: Duration::from_millis(500),
+        read_timeout: Duration::from_secs(2),
+        retries: 1,
+        backoff_base: Duration::from_millis(1),
+        backoff_max: Duration::from_millis(4),
+        breaker_threshold: 1000,
+        breaker_cooldown: Duration::from_secs(60),
+        seed: 0xC1EED,
+        probe_cooldown: Duration::ZERO,
+        endpoints: Vec::new(),
+    }
+}
+
+/// A 2-shard service with an op-log window, the building block of every
+/// replication group here.
+fn replicated_svc() -> ShardedCacheService {
+    ShardedCacheService::with_config(
+        ServiceConfig { shards: 2, replicate_window: Some(1 << 16), ..Default::default() },
+        Arc::new(TaskCache::with_defaults),
+    )
+    .unwrap()
+}
+
+/// One in-process replication group: primary + tailing follower.
+/// `primary` is an `Option` so a test can kill it while the follower (and
+/// the group's slot in the vector) lives on.
+struct GroupNodes {
+    primary: Option<Server>,
+    follower: Server,
+    follower_svc: Arc<CacheService>,
+}
+
+fn spawn_group() -> GroupNodes {
+    let (p_server, _p_svc) = serve_service("127.0.0.1:0", 4, replicated_svc()).unwrap();
+    let (f_server, f_svc) =
+        serve_follower("127.0.0.1:0", 4, replicated_svc(), p_server.addr()).unwrap();
+    assert!(f_svc.is_follower());
+    GroupNodes { primary: Some(p_server), follower: f_server, follower_svc: f_svc }
+}
+
+/// Poll a remote lookup until it hits (followers tail on a millisecond
+/// tick, so convergence is quick). HTTP on purpose: resume offers over
+/// the wire are unpinned server-side, so polling cannot leak pins.
+fn await_remote_hit(probe: &RemoteBinding, task: &str, call: &ToolCall) {
+    let deadline = std::time::Instant::now() + Duration::from_secs(5);
+    while !probe.lookup(task, std::slice::from_ref(call)).is_hit() {
+        assert!(
+            std::time::Instant::now() < deadline,
+            "follower never served {task:?} — replication stalled"
+        );
+        std::thread::sleep(Duration::from_millis(5));
+    }
+}
+
+/// The acceptance bar for the cluster layer: 64 tasks over three
+/// replicated groups, one primary killed between epochs. The victim
+/// group fails over to its own follower; the others never notice; the
+/// rewards are bit-identical to running with no cache at all.
+#[test]
+fn kill_one_primary_fails_over_only_that_group() {
+    let _scope = fault::install(fault::FaultPlan::quiet(31)); // serialize I/O tests
+    let cfg = WorkloadConfig::config_for(Workload::TerminalEasy);
+    let mut opts = ConcurrentOptions::from_config(&cfg, 64);
+    opts.epochs = 1;
+    opts.threads = 4;
+    let mut base_opts = opts.clone();
+    base_opts.cached = false;
+    let baseline = run_concurrent(&cfg, &base_opts);
+
+    // Three primary+follower groups, mapped on a 32-vnode ring.
+    let mut nodes: Vec<GroupNodes> = (0..3).map(|_| spawn_group()).collect();
+    let groups: Vec<GroupSpec> = nodes
+        .iter()
+        .enumerate()
+        .map(|(i, n)| GroupSpec {
+            name: format!("g{i}"),
+            primary: n.primary.as_ref().unwrap().addr(),
+            follower: Some(n.follower.addr()),
+        })
+        .collect();
+    let map = ClusterMap::new(0xC1A5, 32, groups).unwrap();
+
+    // The driver names its tasks `task-{i}`: the ring must spread these
+    // 64 across all three groups or the isolation claim is vacuous.
+    let mut placed = vec![0usize; 3];
+    for t in 0..opts.n_tasks {
+        placed[map.group_for(&format!("task-{t}"))] += 1;
+    }
+    assert!(placed.iter().all(|&n| n > 0), "ring left a group idle: {placed:?}");
+    // Kill the busiest group's primary: the failover must happen under
+    // real traffic, not on an idle corner of the ring.
+    let victim = (0..3).max_by_key(|&g| placed[g]).unwrap();
+
+    // Threshold 6 > the 4 worker threads (stale in-flight dials against
+    // the dead endpoint can never re-trip the breaker post-failover),
+    // retries 0 so the trip happens within the first rollouts.
+    let router = Arc::new(ClusterRouter::connect(
+        map.clone(),
+        BindingConfig {
+            retries: 0,
+            breaker_threshold: 6,
+            breaker_cooldown: Duration::from_millis(200),
+            ..fast_cfg()
+        },
+    ));
+    assert!(router.check_identity(), "unarmed nodes must pass the identity tripwire");
+
+    // Warm epoch across the whole cluster.
+    let warm = run_concurrent_on(&cfg, &opts, Arc::clone(&router) as Arc<dyn SessionBackend>);
+    assert_eq!(warm.rewards, baseline.rewards, "a cold cluster cache changed rewards");
+    assert!(warm.rollouts_run > 0);
+    for g in 0..3 {
+        assert!(
+            router.binding(g).service_stats().lookups > 0,
+            "group {g} saw no traffic during the warm epoch"
+        );
+    }
+
+    // The op-log is ordered: once this sentinel — the newest entry on the
+    // victim group — is served by its follower, everything the warm epoch
+    // wrote there is too.
+    let sentinel = (0..)
+        .map(|k| format!("sentinel-{k}"))
+        .find(|t| map.group_for(t) == victim)
+        .unwrap();
+    router.insert(&sentinel, &traj(&["sentinel"])).expect("sentinel insert on the victim group");
+    let probe = RemoteBinding::connect_with(nodes[victim].follower.addr(), fast_cfg());
+    await_remote_hit(&probe, &sentinel, &bash("sentinel"));
+    assert_eq!(nodes[victim].follower_svc.replica_lag_ops(), 0);
+
+    // Kill the victim primary. The next epoch starts with one group dead:
+    // its breaker trips within the first rollouts, the binding promotes
+    // the follower mid-run, and only that group's sessions re-seed.
+    nodes[victim].primary = None;
+    let t0 = std::time::Instant::now();
+    let failed_over =
+        run_concurrent_on(&cfg, &opts, Arc::clone(&router) as Arc<dyn SessionBackend>);
+
+    assert_eq!(
+        failed_over.rollouts_run, baseline.rollouts_run,
+        "every rollout must finish through the failover"
+    );
+    assert_eq!(failed_over.rewards, baseline.rewards, "cluster failover changed rewards");
+    for g in 0..3 {
+        let expect = u64::from(g == victim);
+        assert_eq!(
+            router.binding(g).failovers(),
+            expect,
+            "group {g}: failover blast radius must stay on the victim"
+        );
+    }
+    assert!(!nodes[victim].follower_svc.is_follower(), "victim follower must be promoted");
+    assert!(nodes[victim].follower_svc.epoch() >= 2, "promotion must bump the fencing epoch");
+
+    // The `/cluster_stats` fan-in reflects the event: the victim group
+    // now routes to its follower at a bumped epoch, the others still sit
+    // on their epoch-1 primaries.
+    let cs = router.cluster_stats();
+    assert_eq!(cs.groups.len(), 3);
+    for (g, status) in cs.groups.iter().enumerate() {
+        assert!(status.reachable, "group {g} must answer /stats");
+        assert_eq!(status.role, "primary", "group {g} active node must serve as primary");
+        assert_eq!(status.replica_lag_ops, 0);
+        if g == victim {
+            assert_eq!(status.endpoint, nodes[g].follower.addr());
+            assert_eq!(status.failovers, 1);
+            assert!(status.epoch >= 2, "victim epoch must reflect the promotion");
+        } else {
+            assert_eq!(status.failovers, 0);
+            assert_eq!(status.epoch, 1);
+        }
+    }
+    assert!(cs.merged.lookups > 0);
+    assert!(cs.merged.epoch >= 2, "merged epoch is the max across groups");
+    assert!(
+        t0.elapsed() < Duration::from_secs(60),
+        "failed-over cluster run must stay deadline-bounded"
+    );
+}
+
+/// The server-side half of placement enforcement: a map-armed node
+/// answers `421 Misdirected Request` to any task the ring places
+/// elsewhere, so a stale router cannot silently populate the wrong cache.
+#[test]
+fn armed_server_rejects_misrouted_tasks() {
+    let _scope = fault::install(fault::FaultPlan::quiet(32)); // serialize I/O tests
+    let (server, svc) = serve_service("127.0.0.1:0", 2, replicated_svc()).unwrap();
+    // g1's endpoint is never contacted — it only exists so the ring has
+    // somewhere else to place tasks.
+    let map = ClusterMap::new(
+        7,
+        32,
+        vec![
+            GroupSpec { name: "g0".into(), primary: server.addr(), follower: None },
+            GroupSpec {
+                name: "g1".into(),
+                primary: "127.0.0.1:1".parse().unwrap(),
+                follower: None,
+            },
+        ],
+    )
+    .unwrap();
+    svc.set_node_id("g0/primary");
+    svc.set_cluster_guard(map.clone(), 0);
+
+    let local = (0..).map(|k| format!("mine-{k}")).find(|t| map.group_for(t) == 0).unwrap();
+    let foreign = (0..).map(|k| format!("theirs-{k}")).find(|t| map.group_for(t) == 1).unwrap();
+
+    let binding = RemoteBinding::connect_with(server.addr(), fast_cfg());
+    // The task the map places here flows normally…
+    binding.insert(&local, &traj(&["make"])).expect("placed task must be served");
+    assert!(binding.lookup(&local, &[bash("make")]).is_hit());
+    assert_eq!(svc.misroutes(), 0);
+
+    // …the misplaced one degrades like any other backend failure: insert
+    // to the `None` sentinel, lookup to a full miss, and the rejection is
+    // visible in the server's misroute counter.
+    assert_eq!(binding.insert(&foreign, &traj(&["make"])), None);
+    assert!(!binding.lookup(&foreign, &[bash("make")]).is_hit());
+    assert!(svc.misroutes() >= 2, "both misrouted ops must be counted");
+
+    // The guard never poisoned the placed task's path.
+    assert!(binding.insert(&local, &traj(&["make", "two"])).is_some());
+}
+
+/// The identity tripwire: the extended `/capabilities` hello carries the
+/// node identity, and [`ClusterRouter::check_identity`] compares it with
+/// what the map expects at that endpoint.
+#[test]
+fn identity_check_flags_a_swapped_node() {
+    let _scope = fault::install(fault::FaultPlan::quiet(33)); // serialize I/O tests
+    let (server, svc) = serve_service("127.0.0.1:0", 2, replicated_svc()).unwrap();
+    let single = |name: &str| {
+        ClusterMap::new(
+            1,
+            8,
+            vec![GroupSpec { name: name.into(), primary: server.addr(), follower: None }],
+        )
+        .unwrap()
+    };
+
+    // No identity configured: nothing to disprove, the check passes (the
+    // tripwire must not fail a fleet that simply predates --node-id).
+    let router = ClusterRouter::connect(single("g0"), fast_cfg());
+    assert!(router.check_identity());
+    assert_eq!(router.identity_mismatches(), 0);
+
+    // The right identity passes, and the plain-hello path still works —
+    // the extended frame is an upgrade, not a break.
+    svc.set_node_id("g0/primary");
+    assert!(router.check_identity());
+    assert_eq!(router.identity_mismatches(), 0);
+    assert_eq!(router.binding(0).capabilities(), Capabilities::V2);
+
+    // A map that believes this endpoint is group "gx" is a wiring error:
+    // the node answers the mismatched expectation with 421 and the check
+    // flags it.
+    let wrong = ClusterRouter::connect(single("gx"), fast_cfg());
+    assert!(!wrong.check_identity());
+    assert_eq!(wrong.identity_mismatches(), 1);
+    assert!(svc.misroutes() >= 1, "the node counts the identity rejection");
+}

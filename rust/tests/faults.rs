@@ -20,6 +20,7 @@ use tvcache::cache::{
     ToolResult, TurnBatch, TurnReply,
 };
 use tvcache::client::{BindingConfig, RemoteBinding};
+use tvcache::cluster::{ClusterMap, ClusterRouter, GroupSpec};
 use tvcache::sandbox::SandboxSnapshot;
 use tvcache::server::{serve, serve_follower, serve_service};
 use tvcache::train::{
@@ -54,6 +55,8 @@ fn fast_cfg() -> BindingConfig {
         breaker_threshold: 1000,
         breaker_cooldown: Duration::from_secs(60),
         seed: 0x5EED,
+        // Failover tests want every try_failover pass to actually probe.
+        probe_cooldown: Duration::ZERO,
         endpoints: Vec::new(),
     }
 }
@@ -798,6 +801,7 @@ fn chaos_run_rewards_match_cacheless_for_seed() {
             breaker_threshold: 4,
             breaker_cooldown: Duration::from_millis(50),
             seed,
+            probe_cooldown: Duration::ZERO,
             endpoints: vec![f_server.addr()],
         },
     ));
@@ -863,6 +867,113 @@ fn chaos_run_rewards_match_cacheless_for_seed() {
     await_remote_hit(&probe, "chaos-sentinel", &bash("sentinel"));
     drop(f_svc);
     let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The cluster flavor of the chaos entry point: two replicated groups
+/// behind a [`ClusterRouter`], transport + replication seams armed with
+/// moderate probabilities, seed from `TVCACHE_FAULT_SEED`. Mid-chaos
+/// breaker trips may legitimately promote a group's follower — the
+/// invariant is reward-neutrality and a deadline-bounded run, not a
+/// particular topology.
+#[test]
+fn cluster_chaos_run_rewards_match_cacheless_for_seed() {
+    let seed: u64 = std::env::var("TVCACHE_FAULT_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1);
+    let cfg = WorkloadConfig::config_for(Workload::TerminalEasy);
+    let mut opts = ConcurrentOptions::from_config(&cfg, 8);
+    opts.epochs = 1;
+    opts.threads = 4;
+    let mut base_opts = opts.clone();
+    base_opts.cached = false;
+    let baseline = run_concurrent(&cfg, &base_opts);
+
+    // Two primary+follower groups; each follower's pull loop runs under
+    // the same armed seams as the client traffic.
+    let mut groups = Vec::new();
+    let mut primaries = Vec::new();
+    let mut followers = Vec::new();
+    for i in 0..2 {
+        let (p_server, _p_svc) = serve_service(
+            "127.0.0.1:0",
+            4,
+            replicated_svc(&format!("cchaos-{seed}-p{i}"), false),
+        )
+        .unwrap();
+        let (f_server, f_svc) =
+            serve_follower("127.0.0.1:0", 2, ShardedCacheService::new(2), p_server.addr()).unwrap();
+        groups.push(GroupSpec {
+            name: format!("g{i}"),
+            primary: p_server.addr(),
+            follower: Some(f_server.addr()),
+        });
+        primaries.push(p_server);
+        followers.push((f_server, f_svc));
+    }
+    let map = ClusterMap::new(seed, 32, groups).unwrap();
+    let router = Arc::new(ClusterRouter::connect(
+        map,
+        BindingConfig {
+            retries: 2,
+            backoff_max: Duration::from_millis(8),
+            breaker_threshold: 4,
+            breaker_cooldown: Duration::from_millis(50),
+            seed,
+            ..fast_cfg()
+        },
+    ));
+
+    let plan = fault::FaultPlan {
+        p_connect_fail: 0.05,
+        p_send_drop: 0.05,
+        p_recv_drop: 0.05,
+        p_recv_garble: 0.05,
+        p_server_drop: 0.05,
+        p_server_partial: 0.03,
+        p_server_500: 0.05,
+        p_server_garble: 0.05,
+        p_server_stall: 0.02,
+        server_stall: Duration::from_millis(50),
+        p_replicate_fail: 0.2,
+        ..fault::FaultPlan::quiet(seed)
+    };
+    let t0 = std::time::Instant::now();
+    let report = {
+        let _scope = fault::install(plan);
+        run_concurrent_on(&cfg, &opts, Arc::clone(&router) as Arc<dyn SessionBackend>)
+    };
+    let wall = t0.elapsed();
+
+    assert_eq!(
+        report.rollouts_run, baseline.rollouts_run,
+        "a rollout died under cluster chaos (TVCACHE_FAULT_SEED={seed})"
+    );
+    assert_eq!(
+        report.rewards, baseline.rewards,
+        "cluster chaos changed rollout rewards (TVCACHE_FAULT_SEED={seed})"
+    );
+    assert!(
+        wall < Duration::from_secs(60),
+        "cluster chaos run not deadline-bounded: {wall:?} (TVCACHE_FAULT_SEED={seed})"
+    );
+    assert!(fault::injected_total() > 0, "cluster chaos plan injected nothing (seed {seed})");
+
+    // Chaos cleared: the router recovers. A sentinel routed through it
+    // lands on its group (the original primary, or a mid-run-promoted
+    // follower) and that group's replication tail converges.
+    let deadline = std::time::Instant::now() + Duration::from_secs(10);
+    while router.insert("cluster-chaos-sentinel", &traj(&["sentinel"])).is_none() {
+        assert!(
+            std::time::Instant::now() < deadline,
+            "router never recovered after cluster chaos (TVCACHE_FAULT_SEED={seed})"
+        );
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    let g = router.group_of("cluster-chaos-sentinel");
+    let probe = RemoteBinding::connect_with(followers[g].0.addr(), fast_cfg());
+    await_remote_hit(&probe, "cluster-chaos-sentinel", &bash("sentinel"));
+    drop(primaries);
 }
 
 // ──────────────────── durable op-log crash recovery ─────────────────────────
